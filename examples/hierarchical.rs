@@ -1,0 +1,72 @@
+//! Hierarchical masters (§III-A): several group masters, each serving a
+//! worker pool and reporting to a super-master. Compares flat 1-master
+//! topology vs 2 and 4 groups on identical data.
+//!
+//!     cargo run --release --example hierarchical
+
+use mpi_learn::coordinator::{train, Algo, Data, HierarchySpec,
+                             ModelBuilder, TrainConfig, Transport};
+use mpi_learn::data::GeneratorConfig;
+use mpi_learn::util::bench::print_table;
+use mpi_learn::util::cli::Args;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env();
+    let epochs = args.usize("epochs", 3)? as u32;
+    args.finish()?;
+
+    let session = mpi_learn::runtime::Session::open_default()?;
+    let data = Data::Synthetic {
+        gen: GeneratorConfig { separation: 0.12, noise: 2.0,
+                               ..Default::default() },
+        samples_per_worker: 1000,
+        val_samples: 1000,
+    };
+    let algo = Algo {
+        batch_size: 100,
+        epochs,
+        max_val_batches: 10,
+        ..Algo::default()
+    };
+
+    // all topologies train 4 workers on the same divided dataset
+    let topologies: Vec<(String, Option<HierarchySpec>)> = vec![
+        ("flat: 1 master x 4 workers".into(), None),
+        ("2 groups x 2 workers, sync_every=5".into(),
+         Some(HierarchySpec { n_groups: 2, workers_per_group: 2,
+                              sync_every: 5 })),
+        ("4 groups x 1 worker, sync_every=5".into(),
+         Some(HierarchySpec { n_groups: 4, workers_per_group: 1,
+                              sync_every: 5 })),
+    ];
+
+    let mut rows = Vec::new();
+    for (name, hierarchy) in topologies {
+        let cfg = TrainConfig {
+            builder: ModelBuilder::new("lstm", algo.batch_size),
+            algo: algo.clone(),
+            n_workers: 4,
+            seed: 2017,
+            transport: Transport::Inproc,
+            hierarchy,
+        };
+        let r = train(&session, &cfg, &data)?;
+        let v = r.history.validations.last().cloned().unwrap();
+        rows.push(vec![
+            name,
+            format!("{:.2}", r.wallclock_s),
+            format!("{}", r.history.master_updates),
+            format!("{:.4}", v.val_acc),
+        ]);
+    }
+    print_table(
+        "Flat vs hierarchical topology — 4 workers",
+        &["topology", "wall_s", "top-master updates", "val_acc"],
+        &rows,
+    );
+    println!("\nIn the hierarchical runs the top master only sees one \
+              aggregated delta\nper group sync, so its update count \
+              drops by ~sync_every x group size —\nthe mechanism that \
+              relieves the single-master bottleneck at cluster scale.");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Cluster-scale what-if explorer: the calibrated protocol simulator as a
+//! user tool. Measures this host's real per-batch gradient cost and
+//! master update cost, then projects speedup curves for arbitrary worker
+//! counts, batch sizes, and validation cadences on the paper's two
+//! testbed presets.
+//!
+//!     cargo run --release --example scaling_simulation
+//!     cargo run --release --example scaling_simulation -- \
+//!         --workers 1,4,16,64,256 --preset shared
+
+use std::time::Instant;
+
+use mpi_learn::simulator::{speedup_curve, CostModel, SimConfig};
+use mpi_learn::tensor::ParamSet;
+use mpi_learn::util::bench::print_table;
+use mpi_learn::util::cli::Args;
+use mpi_learn::util::rng::Rng;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env();
+    let worker_counts =
+        args.usize_list("workers", &[1, 2, 4, 8, 16, 30, 45, 60])?;
+    let preset = args.str("preset", "cluster");
+    let batch = args.usize("batch", 100)?;
+    args.finish()?;
+
+    // --- calibration: measure the real runtime ---
+    let session = mpi_learn::runtime::Session::open_default()?;
+    let exes = session.executables_for("lstm", batch)?;
+    let meta = &exes.meta;
+    let mut rng = Rng::new(0);
+    let params = exes.init_params(&mut rng);
+    let x: Vec<f32> = (0..meta.x_len()).map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let y: Vec<i32> = (0..meta.batch).map(|_| rng.usize_below(3) as i32)
+        .collect();
+    exes.grad_step(&params, &x, &y)?; // warm
+    let t0 = Instant::now();
+    let reps = 20;
+    for _ in 0..reps {
+        exes.grad_step(&params, &x, &y)?;
+    }
+    let t_grad = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let mut opt = mpi_learn::optim::OptimizerConfig::default_momentum()
+        .build(meta.param_count);
+    let mut w = ParamSet::zeros(&meta.params);
+    let g = vec![1e-3f32; meta.param_count];
+    let t0 = Instant::now();
+    for _ in 0..1000 {
+        opt.update(w.flat_mut(), &g);
+    }
+    let t_update = t0.elapsed().as_secs_f64() / 1000.0;
+
+    println!("calibrated on this host: t_grad(batch {})={:.2}ms, \
+              t_update={:.1}us, {} params",
+             batch, t_grad * 1e3, t_update * 1e6, meta.param_count);
+
+    let mut cost = match preset.as_str() {
+        "shared" => CostModel::shared_memory(meta.param_count),
+        _ => CostModel::cluster(meta.param_count),
+    };
+    cost.t_grad_fixed = 0.0;
+    cost.t_grad_per_sample = t_grad / batch as f64;
+    cost.t_update = t_update;
+
+    let base = SimConfig {
+        n_workers: 1,
+        total_samples: 950_000, // paper: 100 files x 9500
+        batch,
+        epochs: 10,
+        validate_every: 0,
+        sync: false,
+    };
+
+    let curve = speedup_curve(&cost, &base, &worker_counts, 2017);
+    let rows: Vec<Vec<String>> = curve
+        .iter()
+        .map(|(w, s)| {
+            vec![format!("{w}"), format!("{s:.2}"),
+                 format!("{:.1}%", 100.0 * s / *w as f64)]
+        })
+        .collect();
+    print_table(
+        &format!("projected speedup — preset '{preset}', batch {batch}, \
+                  paper-sized dataset"),
+        &["workers", "speedup", "efficiency"],
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT compiler: lower the model zoo to HLO text + a manifest for Rust.
+
+Interchange format is HLO *text*, not serialized HloModuleProto — jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published `xla` 0.1.6 crate links) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Emits, per (model, batch):
+    artifacts/{key}_grad.hlo.txt     (*params, x, y) -> (loss, *grads)
+    artifacts/{key}_eval.hlo.txt     (*params, x, y) -> (loss, ncorrect)
+    artifacts/{key}_predict.hlo.txt  (*params, x)    -> (logits,)
+plus one artifacts/meta.json manifest describing every artifact's
+parameter names/shapes and input shapes, in the exact positional order the
+Rust runtime must feed.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Default artifact set. Table I of the paper sweeps batch size
+# {10, 100, 500, 1000} at 20 workers; Figs 2-4 use batch 100.
+DEFAULT_SPECS = [
+    ("lstm", M.PAPER_LSTM, [10, 100, 500, 1000]),
+    ("mlp", M.QUICKSTART_MLP, [100]),
+    ("transformer", M.TRANSFORMER, [16]),
+]
+QUICK_SPECS = [
+    ("lstm", M.PAPER_LSTM, [10, 100]),
+    ("mlp", M.QUICKSTART_MLP, [100]),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: M.ModelConfig, batch: int, out_dir: str, key: str):
+    names = M.param_names(cfg)
+    params = M.init_params(cfg)
+    param_specs = [
+        jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names
+    ]
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, cfg.seq_len, cfg.features), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+    entries = {}
+    for kind, fn, specs in [
+        ("grad", M.make_grad_fn(cfg), param_specs + [x_spec, y_spec]),
+        ("eval", M.make_eval_fn(cfg), param_specs + [x_spec, y_spec]),
+        ("predict", M.make_predict_fn(cfg), param_specs + [x_spec]),
+    ]:
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{key}_{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"  {fname}: {len(text)/1e6:.2f} MB in {time.time()-t0:.1f}s")
+        entries[kind] = fname
+
+    return {
+        "model": cfg.name,
+        "batch": batch,
+        "seq_len": cfg.seq_len,
+        "features": cfg.features,
+        "classes": cfg.classes,
+        "hidden": cfg.hidden,
+        "params": [
+            {"name": n, "shape": list(params[n].shape)} for n in names
+        ],
+        "param_count": int(sum(p.size for p in params.values())),
+        "inputs": {
+            "x": [batch, cfg.seq_len, cfg.features],
+            "y": [batch],
+        },
+        "artifacts": entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the artifacts needed for tests")
+    ap.add_argument("--models", default=None,
+                    help="comma list filter, e.g. lstm,mlp")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = QUICK_SPECS if args.quick else DEFAULT_SPECS
+    if args.models:
+        allow = set(args.models.split(","))
+        specs = [s for s in specs if s[0] in allow]
+
+    manifest = {"format_version": 1, "models": {}}
+    for name, cfg, batches in specs:
+        for batch in batches:
+            key = f"{name}_b{batch}"
+            print(f"[aot] lowering {key} ...")
+            manifest["models"][key] = lower_model(cfg, batch, args.out_dir,
+                                                  key)
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {os.path.join(args.out_dir, 'meta.json')} "
+          f"({len(manifest['models'])} model variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the compute hot-spots (+ pure-jnp oracle in ref.py).
+from .dense import dense
+from .lstm import lstm_cell
+from .xent import softmax_xent
+
+__all__ = ["dense", "lstm_cell", "softmax_xent"]

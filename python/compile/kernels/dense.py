@@ -1,0 +1,121 @@
+"""Pallas dense (matmul + bias) kernel with a custom VJP.
+
+This is the MXU workhorse shared by every model in the zoo: the LSTM output
+projection, every MLP layer, and the transformer's QKV/out/MLP projections
+all lower through `dense()`.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the weight block [I, O]
+is held VMEM-resident while batch tiles of `x` stream HBM→VMEM; the matmul
+itself targets the 128x128 MXU systolic array. On this session's CPU-PJRT
+substrate the kernel runs under `interpret=True`, which lowers the same
+block program to plain HLO — numerics identical, scheduling simulated.
+
+The backward pass is itself a pair of Pallas kernels (dx and (dw, db)),
+so the whole fwd+bwd graph is kernel-composed rather than falling back to
+XLA autodiff through the forward.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot execute Mosaic custom-calls.
+
+# Batch tile: on a real TPU this bounds the activation VMEM slab; full
+# I/O (feature) extents stay resident. Perf pass (EXPERIMENTS.md §Perf):
+# 128 -> 512 -> 1024 cut the b1000 grad step 76 -> 60 -> 53 ms on the
+# CPU-interpret substrate (fewer grid iterations); at 1024 rows the
+# worst-case activation slab (transformer qkv: 1024 x 3*128 x 4 B ~
+# 1.5 MB) still sits well inside a 16 MB VMEM budget, and the batch
+# dimension streams through the 128x128 MXU in row-groups regardless of
+# tile height, so the TPU mapping is unaffected.
+BATCH_TILE = 1024
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, o_ref):
+    # One batch tile: [tb, I] @ [I, O] + [O]
+    o_ref[...] = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+
+
+def _dx_kernel(g_ref, w_ref, dx_ref):
+    # dx = g @ w^T : [tb, O] @ [O, I]
+    dx_ref[...] = jnp.dot(
+        g_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _dw_db_kernel(x_ref, g_ref, dw_ref, db_ref):
+    # Weight grads reduce over the *whole* batch — run un-gridded so the
+    # reduction stays inside one kernel invocation (no cross-tile accum).
+    dw_ref[...] = jnp.dot(
+        x_ref[...].T, g_ref[...], preferred_element_type=jnp.float32
+    )
+    db_ref[...] = jnp.sum(g_ref[...], axis=0)
+
+
+def _tile(b):
+    return min(b, BATCH_TILE)
+
+
+def _dense_fwd_impl(x, w, b):
+    bsz, _ = x.shape
+    osz = w.shape[1]
+    tb = _tile(bsz)
+    grid = (pl.cdiv(bsz, tb),)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, x.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((w.shape[0], osz), lambda i: (0, 0)),
+            pl.BlockSpec((osz,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, osz), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, osz), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, b)
+
+
+@jax.custom_vjp
+def dense(x, w, b):
+    """y = x @ w + b with Pallas fwd and bwd. x:[B,I] w:[I,O] b:[O]."""
+    return _dense_fwd_impl(x, w, b)
+
+
+def _dense_fwd(x, w, b):
+    return _dense_fwd_impl(x, w, b), (x, w)
+
+
+def _dense_bwd(res, g):
+    x, w = res
+    bsz, isz = x.shape
+    osz = w.shape[1]
+    tb = _tile(bsz)
+    dx = pl.pallas_call(
+        _dx_kernel,
+        grid=(pl.cdiv(bsz, tb),),
+        in_specs=[
+            pl.BlockSpec((tb, osz), lambda i: (i, 0)),
+            pl.BlockSpec((isz, osz), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, isz), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, isz), jnp.float32),
+        interpret=INTERPRET,
+    )(g, w)
+    dw, db = pl.pallas_call(
+        _dw_db_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((isz, osz), jnp.float32),
+            jax.ShapeDtypeStruct((osz,), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, g)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

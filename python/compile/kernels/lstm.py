@@ -1,0 +1,185 @@
+"""Fused Pallas LSTM cell — the benchmark model's compute hot-spot.
+
+The paper's benchmark is a Keras LSTM(20) classifying LHC collision-event
+sequences; on GPU that work lands in cuDNN's fused LSTM kernel. The TPU
+re-think (DESIGN.md §Hardware-Adaptation): fuse the four gate projections
+into ONE [F+H, 4H] matmul so a single MXU pass produces all gate
+pre-activations, then apply the gate nonlinearities on the VPU while the
+tile is still VMEM-resident, writing back only h' and c'.
+
+Weights (wx ⊕ wh as conceptually one [F+H, 4H] operand — kept as two refs
+to avoid a concat copy) stay VMEM-resident across the whole sequence scan;
+per-step activations stream. At the paper's size (F=16, H=20) the weight
+slab is ~12 KB — VMEM-trivial; the same BlockSpec scales to H≈1024 before
+VMEM pressure forces gate-dimension tiling.
+
+Backward is a fused Pallas kernel too: it recomputes the cheap pointwise
+path from saved gate pre-activations (rematerialization: saving post-
+nonlinearity gates would cost 4 extra [B,4H] HBM writes per step) and
+emits dgates, dc in one pass; the matmul grads reuse kernel-level dots.
+
+Gate order follows Keras: i, f, g (cell candidate), o, with the Keras
+`unit_forget_bias` +1.0 applied to the forget gate pre-activation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FORGET_BIAS
+
+INTERPRET = True
+# See dense.py for the tile-size derivation (perf pass iter 3/4).
+BATCH_TILE = 1024
+
+
+def _sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def _cell_fwd_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                     hn_ref, cn_ref, gates_ref):
+    """One fused cell step for one batch tile.
+
+    Emits h', c' and the raw gate pre-activations (saved for bwd).
+    """
+    hsz = h_ref.shape[-1]
+    # Single fused MXU pass: [tb, F]@[F,4H] + [tb,H]@[H,4H] + [4H]
+    gates = (
+        jnp.dot(x_ref[...], wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h_ref[...], wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+    gates_ref[...] = gates
+    i = _sigmoid(gates[:, 0 * hsz : 1 * hsz])
+    f = _sigmoid(gates[:, 1 * hsz : 2 * hsz] + FORGET_BIAS)
+    g = jnp.tanh(gates[:, 2 * hsz : 3 * hsz])
+    o = _sigmoid(gates[:, 3 * hsz : 4 * hsz])
+    c_new = f * c_ref[...] + i * g
+    hn_ref[...] = o * jnp.tanh(c_new)
+    cn_ref[...] = c_new
+
+
+def _cell_bwd_pointwise_kernel(gates_ref, c_ref, cn_ref, dh_ref, dc_ref,
+                               dg_ref, dcp_ref):
+    """Pointwise half of the cell backward: dgates and dc_prev.
+
+    Recomputes gate activations from saved pre-activations (remat), then
+    the standard LSTM chain rule. The matmul half (dx, dh_prev, dwx, dwh,
+    db) is done with shared dense-style dots outside.
+    """
+    hsz = c_ref.shape[-1]
+    gates = gates_ref[...]
+    i = _sigmoid(gates[:, 0 * hsz : 1 * hsz])
+    f = _sigmoid(gates[:, 1 * hsz : 2 * hsz] + FORGET_BIAS)
+    g = jnp.tanh(gates[:, 2 * hsz : 3 * hsz])
+    o = _sigmoid(gates[:, 3 * hsz : 4 * hsz])
+    tanh_cn = jnp.tanh(cn_ref[...])
+    dh = dh_ref[...]
+    # total dc: incoming dc' plus dh' through h' = o * tanh(c')
+    dct = dc_ref[...] + dh * o * (1.0 - tanh_cn * tanh_cn)
+    di = dct * g * i * (1.0 - i)
+    df = dct * c_ref[...] * f * (1.0 - f)
+    dg = dct * i * (1.0 - g * g)
+    do = dh * tanh_cn * o * (1.0 - o)
+    dg_ref[...] = jnp.concatenate([di, df, dg, do], axis=-1)
+    dcp_ref[...] = dct * f
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def _pallas_matmul(a, b):
+    """[M,K]@[K,N] as an un-gridded Pallas dot (interpret mode)."""
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _cell_fwd_impl(x, h, c, wx, wh, b):
+    bsz = x.shape[0]
+    fsz = x.shape[1]
+    hsz = h.shape[1]
+    tb = min(bsz, BATCH_TILE)
+    grid = (pl.cdiv(bsz, tb),)
+    hn, cn, gates = pl.pallas_call(
+        _cell_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, fsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, hsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, hsz), lambda i: (i, 0)),
+            pl.BlockSpec((fsz, 4 * hsz), lambda i: (0, 0)),  # VMEM-resident
+            pl.BlockSpec((hsz, 4 * hsz), lambda i: (0, 0)),  # VMEM-resident
+            pl.BlockSpec((4 * hsz,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, hsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, hsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 4 * hsz), lambda i: (i, 0)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, hsz), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hsz), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, 4 * hsz), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, h, c, wx, wh, b)
+    return hn, cn, gates
+
+
+@jax.custom_vjp
+def lstm_cell(x, h, c, wx, wh, b):
+    """Fused LSTM cell step. Returns (h_new, c_new).
+
+    x: [B,F]; h,c: [B,H]; wx: [F,4H]; wh: [H,4H]; b: [4H].
+    """
+    hn, cn, _ = _cell_fwd_impl(x, h, c, wx, wh, b)
+    return hn, cn
+
+
+def _lstm_cell_fwd(x, h, c, wx, wh, b):
+    hn, cn, gates = _cell_fwd_impl(x, h, c, wx, wh, b)
+    return (hn, cn), (x, h, c, cn, gates, wx, wh)
+
+
+def _lstm_cell_bwd(res, grads):
+    dh, dc = grads
+    x, h, c, cn, gates, wx, wh = res
+    bsz = x.shape[0]
+    hsz = h.shape[1]
+    tb = min(bsz, BATCH_TILE)
+    grid = (pl.cdiv(bsz, tb),)
+    dgates, dc_prev = pl.pallas_call(
+        _cell_bwd_pointwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, 4 * hsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, hsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, hsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, hsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, hsz), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, 4 * hsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, hsz), lambda i: (i, 0)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, 4 * hsz), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hsz), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(gates, c, cn, dh, dc)
+    dx = _pallas_matmul(dgates, wx.T)
+    dh_prev = _pallas_matmul(dgates, wh.T)
+    dwx = _pallas_matmul(x.T, dgates)
+    dwh = _pallas_matmul(h.T, dgates)
+    db = jnp.sum(dgates, axis=0)
+    return dx, dh_prev, dc_prev, dwx, dwh, db
+
+
+lstm_cell.defvjp(_lstm_cell_fwd, _lstm_cell_bwd)

@@ -1,0 +1,77 @@
+"""Pallas softmax cross-entropy kernel with custom VJP.
+
+Forward emits the mean NLL *and* the softmax probabilities in one pass
+(the probs are exactly the residual the backward needs, so nothing is
+recomputed). Backward is the classic (p - onehot)/B, fused in Pallas.
+
+Labels travel as int32 [B]; onehot comparison is done with broadcasted
+iota inside the kernel so no onehot matrix ever hits HBM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _fwd_kernel(logits_ref, labels_ref, loss_ref, probs_ref):
+    logits = logits_ref[...]
+    bsz, csz = logits.shape
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / denom
+    probs_ref[...] = probs
+    classes = jax.lax.broadcasted_iota(jnp.int32, (bsz, csz), 1)
+    onehot = (classes == labels_ref[...][:, None]).astype(jnp.float32)
+    ll = jnp.sum(z * onehot, axis=-1)
+    logz = jnp.log(denom[:, 0])
+    loss_ref[0] = jnp.mean(logz - ll)
+
+
+def _bwd_kernel(probs_ref, labels_ref, g_ref, dlogits_ref):
+    probs = probs_ref[...]
+    bsz, csz = probs.shape
+    classes = jax.lax.broadcasted_iota(jnp.int32, (bsz, csz), 1)
+    onehot = (classes == labels_ref[...][:, None]).astype(jnp.float32)
+    dlogits_ref[...] = g_ref[0] * (probs - onehot) / bsz
+
+
+def _xent_fwd_impl(logits, labels):
+    bsz, csz = logits.shape
+    loss, probs = pl.pallas_call(
+        _fwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, csz), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(logits, labels)
+    return loss[0], probs
+
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy. logits [B,C] f32, labels [B] i32."""
+    loss, _ = _xent_fwd_impl(logits, labels)
+    return loss
+
+
+def _xent_vjp_fwd(logits, labels):
+    loss, probs = _xent_fwd_impl(logits, labels)
+    return loss, (probs, labels)
+
+
+def _xent_vjp_bwd(res, g):
+    probs, labels = res
+    bsz, csz = probs.shape
+    dlogits = pl.pallas_call(
+        _bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((bsz, csz), jnp.float32),
+        interpret=INTERPRET,
+    )(probs, labels, jnp.reshape(g, (1,)))
+    return dlogits, None
+
+
+softmax_xent.defvjp(_xent_vjp_fwd, _xent_vjp_bwd)

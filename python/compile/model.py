@@ -1,0 +1,258 @@
+"""L2 — model zoo in JAX, built on the L1 Pallas kernels.
+
+The paper's benchmark model is an LSTM(20) + softmax(3) classifying
+sequences of simulated LHC collision-event features; `lstm` below is that
+model. `mlp` is the quickstart model, and `transformer` is a larger
+encoder-style classifier over the same (x: f32[B,T,F], y: i32[B])
+interface, included to show the stack handles non-trivial models.
+
+Every model exposes:
+  init(rng)            -> params dict (name -> f32 array)
+  apply(params, x)     -> logits [B, C]
+and the module-level helpers build the AOT entry points:
+  grad_fn:  (*param_leaves, x, y) -> (loss, *grad_leaves)
+  eval_fn:  (*param_leaves, x, y) -> (loss, ncorrect)
+  predict_fn: (*param_leaves, x)  -> (logits,)
+
+Parameter leaves are ordered by sorted name — the same order `meta.json`
+records and the Rust runtime feeds.
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense, lstm_cell, softmax_xent
+
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (mirrors the paper's ModelBuilder)."""
+
+    name: str
+    seq_len: int = 30
+    features: int = 16
+    classes: int = 3
+    hidden: int = 20          # LSTM hidden units (paper: 20)
+    mlp_widths: Tuple[int, ...] = (64, 32)
+    d_model: int = 128        # transformer width
+    n_layers: int = 4
+    n_heads: int = 4
+
+
+PAPER_LSTM = ModelConfig(name="lstm")
+QUICKSTART_MLP = ModelConfig(name="mlp")
+TRANSFORMER = ModelConfig(name="transformer")
+TRANSFORMER_BIG = ModelConfig(
+    name="transformer", d_model=256, n_layers=6, n_heads=8
+)
+
+
+def _glorot(rng, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(rng, shape, jnp.float32, -lim, lim)
+
+
+# ---------------------------------------------------------------------------
+# LSTM classifier (the paper's benchmark)
+# ---------------------------------------------------------------------------
+
+def lstm_init(cfg: ModelConfig, rng) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(rng, 4)
+    h4 = 4 * cfg.hidden
+    return {
+        "lstm_wx": _glorot(ks[0], (cfg.features, h4)),
+        "lstm_wh": _glorot(ks[1], (cfg.hidden, h4)),
+        "lstm_b": jnp.zeros((h4,), jnp.float32),
+        "out_w": _glorot(ks[2], (cfg.hidden, cfg.classes)),
+        "out_b": jnp.zeros((cfg.classes,), jnp.float32),
+    }
+
+
+def lstm_apply(cfg: ModelConfig, params, x):
+    """x: [B, T, F] -> logits [B, C]. Scans the fused Pallas cell over T."""
+    bsz = x.shape[0]
+    h0 = jnp.zeros((bsz, cfg.hidden), jnp.float32)
+    c0 = jnp.zeros((bsz, cfg.hidden), jnp.float32)
+    xs = jnp.transpose(x, (1, 0, 2))  # [T, B, F] for scan
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell(x_t, h, c, params["lstm_wx"], params["lstm_wh"],
+                         params["lstm_b"])
+        return (h, c), None
+
+    (h, _), _ = jax.lax.scan(step, (h0, c0), xs)
+    return dense(h, params["out_w"], params["out_b"])
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier (quickstart)
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg: ModelConfig, rng) -> Dict[str, jnp.ndarray]:
+    widths = (cfg.seq_len * cfg.features,) + tuple(cfg.mlp_widths) + (
+        cfg.classes,)
+    ks = jax.random.split(rng, len(widths))
+    params = {}
+    for li in range(len(widths) - 1):
+        params[f"fc{li}_w"] = _glorot(ks[li], (widths[li], widths[li + 1]))
+        params[f"fc{li}_b"] = jnp.zeros((widths[li + 1],), jnp.float32)
+    return params
+
+
+def mlp_apply(cfg: ModelConfig, params, x):
+    bsz = x.shape[0]
+    h = jnp.reshape(x, (bsz, -1))
+    n_layers = len(cfg.mlp_widths) + 1
+    for li in range(n_layers):
+        h = dense(h, params[f"fc{li}_w"], params[f"fc{li}_b"])
+        if li < n_layers - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Transformer encoder classifier
+# ---------------------------------------------------------------------------
+
+def transformer_init(cfg: ModelConfig, rng) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 2 + 6 * cfg.n_layers)
+    params = {
+        "embed_w": _glorot(ks[0], (cfg.features, d)),
+        "embed_b": jnp.zeros((d,), jnp.float32),
+        "pos": 0.02 * jax.random.normal(ks[1], (cfg.seq_len, d)),
+        "cls_w": _glorot(ks[-1], (d, cfg.classes)),
+        "cls_b": jnp.zeros((cfg.classes,), jnp.float32),
+    }
+    for li in range(cfg.n_layers):
+        k = ks[2 + 6 * li : 2 + 6 * (li + 1)]
+        params[f"l{li}_qkv_w"] = _glorot(k[0], (d, 3 * d))
+        params[f"l{li}_qkv_b"] = jnp.zeros((3 * d,), jnp.float32)
+        params[f"l{li}_proj_w"] = _glorot(k[1], (d, d))
+        params[f"l{li}_proj_b"] = jnp.zeros((d,), jnp.float32)
+        params[f"l{li}_mlp1_w"] = _glorot(k[2], (d, 4 * d))
+        params[f"l{li}_mlp1_b"] = jnp.zeros((4 * d,), jnp.float32)
+        params[f"l{li}_mlp2_w"] = _glorot(k[3], (4 * d, d))
+        params[f"l{li}_mlp2_b"] = jnp.zeros((d,), jnp.float32)
+        params[f"l{li}_ln1_g"] = jnp.ones((d,), jnp.float32)
+        params[f"l{li}_ln2_g"] = jnp.ones((d,), jnp.float32)
+    return params
+
+
+def _layernorm(x, gain):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gain * (x - mu) / jnp.sqrt(var + 1e-5)
+
+
+def _dense_seq(x, w, b):
+    """dense() over a [B,T,D] tensor by folding T into the batch tile."""
+    bsz, t, d = x.shape
+    y = dense(jnp.reshape(x, (bsz * t, d)), w, b)
+    return jnp.reshape(y, (bsz, t, -1))
+
+
+def transformer_apply(cfg: ModelConfig, params, x):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    bsz, t, _ = x.shape
+    h = _dense_seq(x, params["embed_w"], params["embed_b"]) + params["pos"]
+    for li in range(cfg.n_layers):
+        z = _layernorm(h, params[f"l{li}_ln1_g"])
+        qkv = _dense_seq(z, params[f"l{li}_qkv_w"], params[f"l{li}_qkv_b"])
+        qkv = jnp.reshape(qkv, (bsz, t, 3, nh, hd))
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # [B,T,nh,hd]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v)
+        o = jnp.reshape(o, (bsz, t, d))
+        h = h + _dense_seq(o, params[f"l{li}_proj_w"], params[f"l{li}_proj_b"])
+        z = _layernorm(h, params[f"l{li}_ln2_g"])
+        z = _dense_seq(z, params[f"l{li}_mlp1_w"], params[f"l{li}_mlp1_b"])
+        z = jax.nn.gelu(z)
+        h = h + _dense_seq(z, params[f"l{li}_mlp2_w"], params[f"l{li}_mlp2_b"])
+    pooled = jnp.mean(h, axis=1)
+    return dense(pooled, params["cls_w"], params["cls_b"])
+
+
+# ---------------------------------------------------------------------------
+# Registry + AOT entry points
+# ---------------------------------------------------------------------------
+
+MODELS: Dict[str, Tuple[Callable, Callable]] = {
+    "lstm": (lstm_init, lstm_apply),
+    "mlp": (mlp_init, mlp_apply),
+    "transformer": (transformer_init, transformer_apply),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    init, _ = MODELS[cfg.name]
+    return init(cfg, jax.random.PRNGKey(seed))
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    return sorted(init_params(cfg).keys())
+
+
+def loss_and_logits(cfg: ModelConfig, params, x, y):
+    _, apply = MODELS[cfg.name]
+    logits = apply(cfg, params, x)
+    return softmax_xent(logits, y), logits
+
+
+def make_grad_fn(cfg: ModelConfig):
+    """(*param_leaves, x, y) -> (loss, *grad_leaves); leaf order = sorted names."""
+    names = param_names(cfg)
+
+    def fn(*args):
+        leaves, x, y = args[:-2], args[-2], args[-1]
+        params = dict(zip(names, leaves))
+
+        def loss_fn(p):
+            loss, _ = loss_and_logits(cfg, p, x, y)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss,) + tuple(grads[n] for n in names)
+
+    return fn
+
+
+def make_eval_fn(cfg: ModelConfig):
+    """(*param_leaves, x, y) -> (loss, ncorrect f32)."""
+    names = param_names(cfg)
+
+    def fn(*args):
+        leaves, x, y = args[:-2], args[-2], args[-1]
+        params = dict(zip(names, leaves))
+        loss, logits = loss_and_logits(cfg, params, x, y)
+        ncorrect = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, ncorrect
+
+    return fn
+
+
+def make_predict_fn(cfg: ModelConfig):
+    """(*param_leaves, x) -> (logits,)."""
+    names = param_names(cfg)
+
+    def fn(*args):
+        leaves, x = args[:-1], args[-1]
+        params = dict(zip(names, leaves))
+        _, apply = MODELS[cfg.name]
+        return (apply(cfg, params, x),)
+
+    return fn

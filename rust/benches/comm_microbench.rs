@@ -1,0 +1,78 @@
+//! Communication-substrate microbench: latency and throughput of the two
+//! transports for protocol-sized messages (weight/gradient payloads).
+//!
+//!     cargo bench --bench comm_microbench
+
+use mpi_learn::mpi::{self, Payload, Tag};
+use mpi_learn::util::bench::{fmt_secs, print_table, write_csv};
+use mpi_learn::util::stats;
+
+fn pingpong(make: impl Fn() -> Vec<mpi::Comm>, floats: usize,
+            reps: usize) -> (f64, f64) {
+    let mut world = make();
+    let c1 = world.pop().unwrap();
+    let c0 = world.pop().unwrap();
+    let data = vec![0.5f32; floats];
+    let echo = std::thread::spawn(move || {
+        for _ in 0..reps {
+            let env = c1.recv().unwrap();
+            c1.send(0, Tag::Weights, env.payload).unwrap();
+        }
+    });
+    // warm
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        c0.send(1, Tag::Gradients, Payload::floats(0, data.clone()))
+            .unwrap();
+        let _ = c0.recv().unwrap();
+        samples.push(t0.elapsed().as_secs_f64() / 2.0); // one-way
+    }
+    echo.join().unwrap();
+    (stats::percentile(&samples, 50.0), stats::percentile(&samples, 95.0))
+}
+
+fn main() {
+    // paper-relevant sizes: LSTM benchmark (3k params), MLP (33k),
+    // transformer (800k)
+    let sizes = [(3_023usize, "lstm"), (32_963, "mlp"),
+                 (798_467, "transformer")];
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut port = 48100u16;
+    for (floats, tag) in sizes {
+        let reps = if floats > 100_000 { 50 } else { 200 };
+        let (inp_p50, inp_p95) =
+            pingpong(|| mpi::inproc_world(2), floats, reps);
+        let (tcp_p50, tcp_p95) = pingpong(
+            || mpi::tcp_world(2, port).unwrap(), floats, reps);
+        port += 10;
+        let bytes = (floats * 4 + 28) as f64;
+        rows.push(vec![
+            format!("{tag} ({floats} f32)"),
+            fmt_secs(inp_p50),
+            fmt_secs(inp_p95),
+            fmt_secs(tcp_p50),
+            fmt_secs(tcp_p95),
+            format!("{:.2}", bytes / tcp_p50 / 1e9),
+        ]);
+        csv.push(vec![
+            tag.to_string(),
+            format!("{floats}"),
+            format!("{inp_p50:.3e}"),
+            format!("{tcp_p50:.3e}"),
+        ]);
+    }
+    print_table(
+        "one-way message time (weight/gradient payloads)",
+        &["payload", "inproc p50", "inproc p95", "tcp p50", "tcp p95",
+          "tcp GB/s"],
+        &rows,
+    );
+    write_csv("runs/bench/comm_microbench.csv",
+              &["payload", "floats", "inproc_p50_s", "tcp_p50_s"],
+              &csv).unwrap();
+    println!("\ninproc ≈ the paper's shared-memory server; tcp ≈ its \
+              cluster interconnect path.\nThese feed \
+              CostModel::{{latency, bandwidth}}.");
+}

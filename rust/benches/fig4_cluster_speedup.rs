@@ -1,0 +1,114 @@
+//! Figure 4: training speedup on the ALCF Cooley cluster (1 GPU/node,
+//! FDR Infiniband) up to 60 workers — paper observes ~30x at 60 with
+//! batch 100, the deviation "driven by the time needed for the master
+//! process to update the weights ... and transmit them back".
+//!
+//! Regenerated with the protocol simulator (cluster preset, live-
+//! calibrated compute costs; see fig3 for why simulation — 1-core host).
+//! Also sweeps validation frequency to reproduce the §V claim that more
+//! validation breaks linearity earlier.
+//!
+//!     cargo bench --bench fig4_cluster_speedup
+
+use mpi_learn::simulator::{measure_costs, simulate, CostModel, SimConfig};
+use mpi_learn::util::bench::{print_table, write_csv};
+use mpi_learn::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let worker_counts = args
+        .usize_list("workers", &[1, 2, 4, 8, 15, 22, 30, 40, 50, 60])
+        .unwrap();
+    args.finish().unwrap();
+
+    let session = match mpi_learn::runtime::Session::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP fig4: {e}");
+            return;
+        }
+    };
+    let exes = session.executables("lstm_b100").unwrap();
+    let opt = mpi_learn::optim::OptimizerConfig::default_momentum();
+    let cal = measure_costs(&exes, &opt, 15);
+    let mut cost = CostModel::cluster(exes.meta.param_count);
+    if let Ok(e10) = session.executables("lstm_b10") {
+        let cal10 = measure_costs(&e10, &opt, 15);
+        cal.apply_with_small_batch(&cal10, &mut cost);
+    } else {
+        cal.apply(&mut cost);
+    }
+
+    // paper-sized dataset: 100 files x 9500 samples, 10 epochs, batch 100
+    let base = SimConfig {
+        n_workers: 1,
+        total_samples: 950_000,
+        batch: 100,
+        epochs: 10,
+        validate_every: 0,
+        sync: false,
+    };
+
+    // The paper's testbed had GPU workers and a Python/Keras master,
+    // whose per-gradient service cost (~3.6 ms, derived from the paper's
+    // own 30x@60 saturation) dominates the curve shape. Our Rust master
+    // measures ~3 orders of magnitude cheaper, so we report BOTH:
+    //   paper-scale — CostModel::paper_gpu, reproduces Fig 4's shape;
+    //   this-stack  — live-calibrated costs, shows where OUR system
+    //                 would saturate.
+    let paper_cost = CostModel::paper_gpu(exes.meta.param_count);
+
+    // validation-frequency series on the paper-scale model (§V claim).
+    // t_val: a 20-batch validation round at paper per-batch eval cost
+    // (~half a training step).
+    let t_val_paper = 20.0 * 0.5 * paper_cost.grad_time_nominal(100);
+    let series: [(&str, &CostModel, u64, f64); 4] = [
+        ("paper-scale", &paper_cost, 0, 0.0),
+        ("paper+light-val", &paper_cost, 500, t_val_paper),
+        ("paper+heavy-val", &paper_cost, 100, t_val_paper),
+        ("this-stack", &cost, 0, 0.0),
+    ];
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for &w in &worker_counts {
+        let mut row = vec![format!("{w}")];
+        let mut csv_row = vec![format!("{w}")];
+        for (_, model, every, t_val) in &series {
+            let mut c = (*model).clone();
+            c.t_val = *t_val;
+            let t1 = simulate(&c, &SimConfig { validate_every: *every,
+                                               ..base.clone() }, 2017)
+                .total_time_s;
+            let r = simulate(&c, &SimConfig { n_workers: w,
+                                              validate_every: *every,
+                                              ..base.clone() },
+                             2017 ^ w as u64);
+            let s = t1 / r.total_time_s;
+            row.push(format!("{s:.1}"));
+            csv_row.push(format!("{s:.4}"));
+        }
+        rows.push(row);
+        csv.push(csv_row);
+        println!("workers={w}: done");
+    }
+    print_table(
+        "Fig 4 — cluster speedup vs workers (batch 100)",
+        &["workers", "paper-scale", "paper+light-val", "paper+heavy-val",
+          "this-stack (rust master)"],
+        &rows,
+    );
+    write_csv("runs/bench/fig4_cluster_speedup.csv",
+              &["workers", "paper_scale", "paper_light_val",
+                "paper_heavy_val", "this_stack"],
+              &csv).unwrap();
+
+    let last = rows.last().unwrap();
+    println!("\npaper: ~30x at 60 workers — paper-scale series here: \
+              {}x at {} workers.\nMore validation -> earlier break from \
+              linearity (§V). The 'this-stack' series\nshows the same \
+              protocol with the measured Rust master (~{:.0}ns/update \
+              +\n~µs messaging): the master bottleneck moves out by \
+              ~3 orders of magnitude.",
+             last[1], last[0], cost.t_update * 1e9);
+}

@@ -1,0 +1,91 @@
+//! §V overhead claim: "The time needed to train the model with mpi_learn
+//! and a single worker process is also compared to the training time
+//! obtained using Keras alone. The times are similar, indicating that the
+//! training overhead from the mpi_learn framework itself is small."
+//!
+//! REAL measurement (single worker needs no parallel hardware): identical
+//! workload through (a) the full framework — master thread, worker
+//! thread, tagged messages, weight round-trips — and (b) the bare compute
+//! loop (`train_direct`). Also via the TCP transport for the worst case.
+//!
+//!     cargo bench --bench overhead_single_worker
+
+use mpi_learn::coordinator::{train, train_direct, Algo, Data,
+                             ModelBuilder, TrainConfig, Transport};
+use mpi_learn::data::GeneratorConfig;
+use mpi_learn::util::bench::{print_table, write_csv};
+use mpi_learn::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let samples = args.usize("samples", 3000).unwrap();
+    let epochs = args.usize("epochs", 3).unwrap() as u32;
+    let reps = args.usize("reps", 3).unwrap();
+    args.finish().unwrap();
+
+    let session = match mpi_learn::runtime::Session::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP overhead bench: {e}");
+            return;
+        }
+    };
+    let data = Data::Synthetic {
+        gen: GeneratorConfig::default(),
+        samples_per_worker: samples,
+        val_samples: 200,
+    };
+    let cfg = TrainConfig {
+        builder: ModelBuilder::new("lstm", 100),
+        algo: Algo {
+            batch_size: 100,
+            epochs,
+            validate_every: 0,
+            max_val_batches: 1,
+            ..Algo::default()
+        },
+        n_workers: 1,
+        seed: 3,
+        transport: Transport::Inproc,
+        hierarchy: None,
+    };
+
+    let mut t_direct = Vec::new();
+    let mut t_inproc = Vec::new();
+    let mut t_tcp = Vec::new();
+    for rep in 0..reps {
+        t_direct.push(train_direct(&session, &cfg, &data).unwrap()
+            .wallclock_s);
+        t_inproc.push(train(&session, &cfg, &data).unwrap().wallclock_s);
+        let tcp_cfg = TrainConfig {
+            transport: Transport::Tcp { base_port: 48400
+                + rep as u16 * 4 },
+            ..cfg.clone()
+        };
+        t_tcp.push(train(&session, &tcp_cfg, &data).unwrap().wallclock_s);
+    }
+    let med = |v: &[f64]| mpi_learn::util::stats::percentile(v, 50.0);
+    let (d, i, t) = (med(&t_direct), med(&t_inproc), med(&t_tcp));
+
+    let rows = vec![
+        vec!["direct loop (\"Keras alone\")".into(), format!("{d:.3}"),
+             "1.000".into()],
+        vec!["mpi-learn, 1 worker, inproc".into(), format!("{i:.3}"),
+             format!("{:.3}", i / d)],
+        vec!["mpi-learn, 1 worker, tcp".into(), format!("{t:.3}"),
+             format!("{:.3}", t / d)],
+    ];
+    print_table(
+        &format!("framework overhead — {samples} samples x {epochs} \
+                  epochs, batch 100 (median of {reps})"),
+        &["configuration", "wallclock s", "ratio vs direct"],
+        &rows,
+    );
+    write_csv("runs/bench/overhead_single_worker.csv",
+              &["config", "seconds"],
+              &[vec!["direct".into(), format!("{d:.4}")],
+                vec!["inproc".into(), format!("{i:.4}")],
+                vec!["tcp".into(), format!("{t:.4}")]]).unwrap();
+    println!("\npaper: \"the times are similar\" — target ratio ≲ 1.05 \
+              for inproc.");
+}

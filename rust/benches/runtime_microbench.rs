@@ -1,0 +1,112 @@
+//! Runtime microbench: PJRT gradient/eval step latency per batch size,
+//! plus the master-side optimizer update cost.
+//!
+//! These numbers calibrate the protocol simulator (Figs 3/4, Table I) and
+//! feed EXPERIMENTS.md §Calibration. Run with:
+//!
+//!     cargo bench --bench runtime_microbench
+
+use mpi_learn::optim::OptimizerConfig;
+use mpi_learn::runtime::Session;
+use mpi_learn::tensor::ParamSet;
+use mpi_learn::util::bench::{fmt_secs, measure, print_table, write_csv};
+use mpi_learn::util::rng::Rng;
+
+fn main() {
+    let session = match Session::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP runtime_microbench: {e} (run `make \
+                       artifacts`)");
+            return;
+        }
+    };
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for key in ["lstm_b10", "lstm_b100", "lstm_b500", "lstm_b1000",
+                "mlp_b100", "transformer_b16"] {
+        let exes = match session.executables(key) {
+            Ok(e) => e,
+            Err(_) => continue, // quick artifact sets lack some variants
+        };
+        let meta = exes.meta.clone();
+        let mut rng = Rng::new(1);
+        let params = exes.init_params(&mut rng);
+        let x: Vec<f32> = (0..meta.x_len())
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let y: Vec<i32> = (0..meta.batch)
+            .map(|_| rng.usize_below(meta.classes) as i32)
+            .collect();
+
+        let iters = if meta.batch >= 500 { 8 } else { 20 };
+        let g = measure("grad", 2, iters,
+                        || { exes.grad_step(&params, &x, &y).unwrap(); });
+        let e = measure("eval", 2, iters,
+                        || { exes.eval_step(&params, &x, &y).unwrap(); });
+        // price input marshalling separately (perf pass, EXPERIMENTS
+        // §Perf): literal creation + reshape for params + x + y
+        let m = measure("marshal", 2, iters, || {
+            exes.marshal_inputs(&params, &x, &y).unwrap();
+        });
+        let per_sample_us = g.mean_s / meta.batch as f64 * 1e6;
+        rows.push(vec![
+            key.to_string(),
+            format!("{}", meta.param_count),
+            fmt_secs(g.mean_s),
+            fmt_secs(g.p95_s),
+            fmt_secs(e.mean_s),
+            fmt_secs(m.mean_s),
+            format!("{:.1}%", 100.0 * m.mean_s / g.mean_s),
+            format!("{per_sample_us:.1}"),
+        ]);
+        csv.push(vec![
+            key.to_string(),
+            format!("{}", meta.batch),
+            format!("{}", meta.param_count),
+            format!("{:.6e}", g.mean_s),
+            format!("{:.6e}", e.mean_s),
+        ]);
+    }
+    print_table(
+        "PJRT step latency (grad = fwd+bwd+literal marshalling)",
+        &["artifact", "params", "grad mean", "grad p95", "eval mean",
+          "marshal", "marshal %", "grad µs/sample"],
+        &rows,
+    );
+    write_csv("runs/bench/runtime_microbench.csv",
+              &["artifact", "batch", "params", "grad_s", "eval_s"],
+              &csv).unwrap();
+
+    // ---- optimizer update cost (the master's serial work) ----
+    let mut rows = Vec::new();
+    for (name, opt_cfg) in [
+        ("sgd", OptimizerConfig::Sgd { lr: 0.05 }),
+        ("momentum", OptimizerConfig::default_momentum()),
+        ("adam", OptimizerConfig::Adam { lr: 1e-3, beta1: 0.9,
+                                         beta2: 0.999, eps: 1e-8 }),
+    ] {
+        for n in [3_023usize, 32_963, 798_467] {
+            let mut opt = opt_cfg.build(n);
+            let mut w = ParamSet::zeros(&[("w".into(), vec![n])]);
+            let g = vec![1e-3f32; n];
+            let m = measure("opt", 10, 200,
+                            || opt.update(w.flat_mut(), &g));
+            rows.push(vec![
+                name.to_string(),
+                format!("{n}"),
+                fmt_secs(m.mean_s),
+                format!("{:.1}", n as f64 / m.mean_s / 1e6),
+            ]);
+        }
+    }
+    print_table(
+        "master optimizer update cost (per incoming gradient)",
+        &["optimizer", "params", "mean", "Mparams/s"],
+        &rows,
+    );
+
+    println!("\nThese means parameterize CostModel::{{t_grad_*, t_update}} \
+              for the Fig 3/4/Table I sweeps.");
+}

@@ -1,0 +1,127 @@
+//! Table I: speedup vs batch size with 20 workers, relative to batch 100.
+//!
+//!   paper:  batch 10 -> 0.1x, 100 -> 1.0x, 500 -> 3.0x, 1000 -> 4.1x
+//!
+//! Mechanism: "the frequency of weight updates is inversely proportional
+//! to the batch size", so larger batches relieve the master bottleneck.
+//! Every batch size's gradient cost is measured on its REAL compiled
+//! artifact (lstm_b10/100/500/1000), then the 20-worker protocol is
+//! simulated with those measured costs.
+//!
+//!     cargo bench --bench table1_batchsize
+
+use mpi_learn::simulator::{measure_costs, simulate, CostModel, SimConfig};
+use mpi_learn::util::bench::{print_table, write_csv};
+use mpi_learn::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let workers = args.usize("workers", 20).unwrap();
+    args.finish().unwrap();
+
+    let session = match mpi_learn::runtime::Session::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP table1: {e}");
+            return;
+        }
+    };
+
+    let opt = mpi_learn::optim::OptimizerConfig::default_momentum();
+    let batches = [10usize, 100, 500, 1000];
+    let paper = [0.1, 1.0, 3.0, 4.1];
+
+    // measure every artifact's real cost
+    let mut measured = Vec::new();
+    for &b in &batches {
+        let exes = match session.executables_for("lstm", b) {
+            Ok(e) => e,
+            Err(_) => {
+                eprintln!("SKIP table1: artifact lstm_b{b} missing \
+                           (quick build?)");
+                return;
+            }
+        };
+        let reps = if b >= 500 { 6 } else { 15 };
+        let cal = measure_costs(&exes, &opt, reps);
+        println!("measured lstm_b{b}: grad {:.2}ms ({:.1}µs/sample)",
+                 cal.t_grad * 1e3, cal.t_grad / b as f64 * 1e6);
+        measured.push((b, cal));
+    }
+
+    let n_params = session.manifest.variant("lstm", 100).unwrap()
+        .param_count;
+    let total_samples = 950_000u64;
+
+    // Two series (see fig4 for rationale):
+    //   paper-scale: GPU workers (launch-bound, so t_grad barely grows
+    //     with batch) + Python master (3.6 ms/update) — the regime the
+    //     paper's 0.1/1.0/3.0/4.1 comes from;
+    //   this-stack: every batch size's gradient cost measured on its
+    //     real compiled artifact + measured Rust master cost.
+    let run = |mk_cost: &dyn Fn(usize, f64, f64) -> CostModel|
+        -> Vec<(usize, f64, f64)> {
+        measured
+            .iter()
+            .map(|(b, cal)| {
+                let cost = mk_cost(*b, cal.t_grad, cal.t_update);
+                let cfg = SimConfig {
+                    n_workers: workers,
+                    total_samples,
+                    batch: *b,
+                    epochs: 10,
+                    validate_every: 0,
+                    sync: false,
+                };
+                let r = simulate(&cost, &cfg, 2017 ^ *b as u64);
+                (*b, r.total_time_s, r.master_utilization)
+            })
+            .collect()
+    };
+
+    let paper_scale = run(&|_b, _tg, _tu| CostModel::paper_gpu(n_params));
+    let this_stack = run(&|b, t_grad, t_update| {
+        let mut cost = CostModel::cluster(n_params);
+        // exact per-batch cost: fixed = 0, per-sample = measured/batch
+        cost.t_grad_fixed = 0.0;
+        cost.t_grad_per_sample = t_grad / b as f64;
+        cost.t_update = t_update;
+        cost
+    });
+
+    let t100_p = paper_scale.iter().find(|(b, _, _)| *b == 100)
+        .unwrap().1;
+    let t100_s = this_stack.iter().find(|(b, _, _)| *b == 100)
+        .unwrap().1;
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for (i, ((b, tp, util_p), (_, ts, _))) in
+        paper_scale.iter().zip(&this_stack).enumerate() {
+        let sp = t100_p / tp;
+        let ss = t100_s / ts;
+        rows.push(vec![
+            format!("{b}"),
+            format!("{}", paper[i]),
+            format!("{sp:.1}"),
+            format!("{ss:.1}"),
+            format!("{:.0}%", util_p * 100.0),
+        ]);
+        csv.push(vec![format!("{b}"), format!("{}", paper[i]),
+                      format!("{sp:.4}"), format!("{ss:.4}")]);
+    }
+    print_table(
+        &format!("Table I — speedup vs batch size ({workers} workers, \
+                  relative to batch 100)"),
+        &["batch", "paper", "paper-scale sim", "this-stack sim",
+          "master util (paper-scale)"],
+        &rows,
+    );
+    write_csv("runs/bench/table1_batchsize.csv",
+              &["batch", "paper", "paper_scale", "this_stack"], &csv)
+        .unwrap();
+    println!("\nshape check: monotone in batch size with small batches \
+              master-bound, matching\nthe paper's 0.1/1.0/3.0/4.1. The \
+              this-stack column is flatter because CPU grad\ncost grows \
+              ~linearly with batch (no GPU launch-bound regime) and the \
+              Rust\nmaster is far from saturation at 20 workers.");
+}

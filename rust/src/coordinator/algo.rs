@@ -1,0 +1,199 @@
+//! `Algo` — the paper's training-procedure descriptor (§III-B).
+//!
+//! Stores "the batch size, choice of optimization algorithm, loss
+//! function, and any tunable training parameters", plus which distributed
+//! algorithm runs (Downpour SGD default, Elastic Averaging SGD optional)
+//! and whether gradient exchange is asynchronous (default) or synchronous.
+
+use crate::optim::OptimizerConfig;
+use crate::util::json::Json;
+
+/// Distributed training algorithm selection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Mode {
+    /// Workers send gradients; the master owns weights and the optimizer.
+    Downpour {
+        /// true: the master applies one averaged update per round after
+        /// hearing from every active worker (barrier). false (paper
+        /// default): updates apply one-by-one as gradients arrive.
+        sync: bool,
+    },
+    /// Workers train locally; an elastic force pulls worker weights and
+    /// the master's center variable together every `tau` batches.
+    Easgd {
+        /// Exchange period in batches (the paper's "periodically pulls").
+        tau: u32,
+        /// Elastic force coefficient alpha.
+        alpha: f32,
+        /// The worker-local optimizer.
+        worker_optimizer: OptimizerConfig,
+    },
+}
+
+/// Full training-procedure configuration.
+#[derive(Clone, Debug)]
+pub struct Algo {
+    pub mode: Mode,
+    /// Master-side optimizer (Downpour) — paper default: momentum SGD,
+    /// the stale-gradient mitigation of ref [9].
+    pub optimizer: OptimizerConfig,
+    pub batch_size: usize,
+    pub epochs: u32,
+    /// Run master-side validation every N master updates (0 = only at the
+    /// end). The paper: "the frequency of validation can be adjusted as
+    /// needed to minimize its impact on the total training time".
+    pub validate_every: u64,
+    /// Cap on validation batches per round (0 = whole held-out set).
+    pub max_val_batches: usize,
+    /// Clip gradients to this global L2 norm (0 = off).
+    pub grad_clip: f32,
+    /// LR step decay: multiply by `lr_decay` every `lr_decay_every`
+    /// master updates (0 = off).
+    pub lr_decay: f32,
+    pub lr_decay_every: u64,
+}
+
+impl Default for Algo {
+    fn default() -> Self {
+        Algo {
+            mode: Mode::Downpour { sync: false },
+            optimizer: OptimizerConfig::default_momentum(),
+            batch_size: 100, // the paper's benchmark batch size
+            epochs: 10,      // the paper trains for 10 epochs
+            validate_every: 0,
+            max_val_batches: 0,
+            grad_clip: 0.0,
+            lr_decay: 0.0,
+            lr_decay_every: 0,
+        }
+    }
+}
+
+impl Algo {
+    pub fn downpour_async() -> Self {
+        Algo::default()
+    }
+
+    pub fn downpour_sync() -> Self {
+        Algo { mode: Mode::Downpour { sync: true }, ..Algo::default() }
+    }
+
+    pub fn easgd(tau: u32, alpha: f32) -> Self {
+        Algo {
+            mode: Mode::Easgd {
+                tau,
+                alpha,
+                worker_optimizer: OptimizerConfig::Sgd { lr: 0.05 },
+            },
+            ..Algo::default()
+        }
+    }
+
+    /// Parse from a config-file JSON object. Unknown `mode` errors.
+    pub fn from_json(j: &Json) -> Result<Algo, String> {
+        let mut algo = Algo::default();
+        if let Some(opt) = j.get("optimizer") {
+            algo.optimizer = OptimizerConfig::from_json(opt)
+                .ok_or("bad optimizer config")?;
+        }
+        if let Some(b) = j.get("batch_size").and_then(|v| v.as_usize()) {
+            algo.batch_size = b;
+        }
+        if let Some(e) = j.get("epochs").and_then(|v| v.as_usize()) {
+            algo.epochs = e as u32;
+        }
+        if let Some(v) = j.get("validate_every").and_then(|v| v.as_usize()) {
+            algo.validate_every = v as u64;
+        }
+        if let Some(v) = j.get("max_val_batches").and_then(|v| v.as_usize())
+        {
+            algo.max_val_batches = v;
+        }
+        if let Some(c) = j.get("grad_clip").and_then(|v| v.as_f64()) {
+            algo.grad_clip = c as f32;
+        }
+        match j.get("mode").and_then(|v| v.as_str()).unwrap_or("downpour") {
+            "downpour" => {
+                let sync = j.get("sync").and_then(|v| v.as_bool())
+                    .unwrap_or(false);
+                algo.mode = Mode::Downpour { sync };
+            }
+            "easgd" => {
+                let tau = j.get("tau").and_then(|v| v.as_usize())
+                    .unwrap_or(10) as u32;
+                let alpha = j.get("alpha").and_then(|v| v.as_f64())
+                    .unwrap_or(0.5) as f32;
+                let worker_optimizer = j
+                    .get("worker_optimizer")
+                    .and_then(OptimizerConfig::from_json)
+                    .unwrap_or(OptimizerConfig::Sgd { lr: 0.05 });
+                algo.mode = Mode::Easgd { tau, alpha, worker_optimizer };
+            }
+            other => return Err(format!("unknown mode '{other}'")),
+        }
+        Ok(algo)
+    }
+
+    /// Build the master optimizer (with optional clipping) for `n` params.
+    pub fn build_master_optimizer(&self, n: usize)
+        -> Box<dyn crate::optim::Optimizer> {
+        let base = self.optimizer.build(n);
+        if self.grad_clip > 0.0 {
+            Box::new(crate::optim::GradClip::new(base, self.grad_clip))
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let a = Algo::default();
+        assert_eq!(a.batch_size, 100);
+        assert_eq!(a.epochs, 10);
+        assert_eq!(a.mode, Mode::Downpour { sync: false });
+    }
+
+    #[test]
+    fn json_roundtrip_downpour_sync() {
+        let j = Json::parse(
+            r#"{"mode": "downpour", "sync": true, "batch_size": 500,
+                "optimizer": {"kind": "sgd", "lr": 0.1}}"#).unwrap();
+        let a = Algo::from_json(&j).unwrap();
+        assert_eq!(a.mode, Mode::Downpour { sync: true });
+        assert_eq!(a.batch_size, 500);
+        assert_eq!(a.optimizer,
+                   crate::optim::OptimizerConfig::Sgd { lr: 0.1 });
+    }
+
+    #[test]
+    fn json_easgd() {
+        let j = Json::parse(
+            r#"{"mode": "easgd", "tau": 5, "alpha": 0.25}"#).unwrap();
+        let a = Algo::from_json(&j).unwrap();
+        match a.mode {
+            Mode::Easgd { tau, alpha, .. } => {
+                assert_eq!(tau, 5);
+                assert!((alpha - 0.25).abs() < 1e-6);
+            }
+            m => panic!("{m:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_mode_rejected() {
+        let j = Json::parse(r#"{"mode": "hogwild"}"#).unwrap();
+        assert!(Algo::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn clip_wraps_optimizer() {
+        let a = Algo { grad_clip: 1.0, ..Algo::default() };
+        let opt = a.build_master_optimizer(4);
+        assert_eq!(opt.name(), "grad-clip");
+    }
+}

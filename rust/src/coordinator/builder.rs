@@ -1,0 +1,121 @@
+//! The paper's user-interface classes (§III-B): `ModelBuilder` and `Data`.
+//!
+//! - `ModelBuilder` selects the model architecture. In `mpi_learn` it
+//!   builds a Keras model from JSON or code; here it names an AOT-compiled
+//!   artifact variant (model family + batch size) from the manifest.
+//! - `Data` provides the training input. The user "may provide a list of
+//!   input file paths, which are divided evenly among all worker
+//!   processes" — that is [`Data::Files`]; [`Data::Synthetic`] generates
+//!   the benchmark dataset in memory (tests/benches).
+
+use std::path::PathBuf;
+
+use crate::data::{divide_files, generator, DataSet, GeneratorConfig};
+use crate::util::rng::Rng;
+
+/// Selects which compiled model variant to train.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelBuilder {
+    /// Model family: "lstm" (paper benchmark), "mlp", "transformer".
+    pub model: String,
+    /// Batch size — must match an AOT artifact (`{model}_b{batch}`).
+    pub batch: usize,
+}
+
+impl ModelBuilder {
+    pub fn new(model: &str, batch: usize) -> Self {
+        Self { model: model.to_string(), batch }
+    }
+
+    pub fn variant_key(&self) -> String {
+        format!("{}_b{}", self.model, self.batch)
+    }
+}
+
+/// Training + validation data source.
+#[derive(Clone, Debug)]
+pub enum Data {
+    /// Shard files on disk, divided evenly among workers (paper §III-B).
+    Files { train: Vec<PathBuf>, val: PathBuf },
+    /// In-memory synthetic benchmark data: each worker generates its own
+    /// shard-equivalent from a forked deterministic stream.
+    Synthetic {
+        gen: GeneratorConfig,
+        samples_per_worker: usize,
+        val_samples: usize,
+    },
+}
+
+impl Data {
+    /// Materialize worker `w`-of-`n`'s training set.
+    pub fn worker_dataset(&self, w: usize, n: usize)
+        -> Result<DataSet, crate::data::ShardError> {
+        match self {
+            Data::Files { train, .. } => {
+                let mine = divide_files(train, w, n);
+                DataSet::from_files(&mine)
+            }
+            Data::Synthetic { gen, samples_per_worker, .. } => {
+                let mut rng = Rng::new(gen.seed).fork(w as u64 + 1);
+                Ok(DataSet::from_shard(generator::generate_shard(
+                    gen, *samples_per_worker, &mut rng)))
+            }
+        }
+    }
+
+    /// Materialize the held-out validation set.
+    pub fn validation_dataset(&self)
+        -> Result<DataSet, crate::data::ShardError> {
+        match self {
+            Data::Files { val, .. } => {
+                DataSet::from_files(std::slice::from_ref(val))
+            }
+            Data::Synthetic { gen, val_samples, .. } => {
+                let mut rng = Rng::new(gen.seed).fork(0xA11_DA7A);
+                Ok(DataSet::from_shard(generator::generate_shard(
+                    gen, *val_samples, &mut rng)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_key_format() {
+        assert_eq!(ModelBuilder::new("lstm", 100).variant_key(),
+                   "lstm_b100");
+    }
+
+    #[test]
+    fn synthetic_workers_get_distinct_data() {
+        let data = Data::Synthetic {
+            gen: GeneratorConfig { seq_len: 4, features: 3,
+                                   ..Default::default() },
+            samples_per_worker: 50,
+            val_samples: 20,
+        };
+        let a = data.worker_dataset(0, 2).unwrap();
+        let b = data.worker_dataset(1, 2).unwrap();
+        assert_eq!(a.n_samples(), 50);
+        assert_eq!(b.n_samples(), 50);
+        assert_ne!(a.labels(), b.labels());
+        let val = data.validation_dataset().unwrap();
+        assert_eq!(val.n_samples(), 20);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let data = Data::Synthetic {
+            gen: GeneratorConfig { seq_len: 4, features: 3, seed: 7,
+                                   ..Default::default() },
+            samples_per_worker: 30,
+            val_samples: 10,
+        };
+        let a = data.worker_dataset(1, 4).unwrap();
+        let b = data.worker_dataset(1, 4).unwrap();
+        assert_eq!(a.labels(), b.labels());
+    }
+}

@@ -1,0 +1,248 @@
+//! Config-file driven training: the full [`TrainConfig`] (+ data source)
+//! from a JSON document, so cluster jobs are launched from versioned
+//! config files rather than flag soup — `mpi-learn train --config
+//! configs/hep_lstm.json`.
+//!
+//! Schema (all keys optional unless marked):
+//! ```json
+//! {
+//!   "model": "lstm",            // REQUIRED artifact family
+//!   "batch": 100,
+//!   "workers": 4,
+//!   "seed": 2017,
+//!   "transport": "inproc" | {"tcp": {"base_port": 47000}},
+//!   "hierarchy": {"groups": 2, "workers_per_group": 2,
+//!                 "sync_every": 5},
+//!   "algo": { ... see Algo::from_json ... },
+//!   "data": {"dir": "data/hep"}                    // file-sharded
+//!         | {"synthetic": {"samples_per_worker": 2000,
+//!                          "val_samples": 1000,
+//!                          "separation": 0.6, "noise": 1.0,
+//!                          "seed": 2017}}
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::algo::Algo;
+use crate::coordinator::builder::{Data, ModelBuilder};
+use crate::coordinator::driver::{TrainConfig, Transport};
+use crate::coordinator::hierarchy::HierarchySpec;
+use crate::data::{list_train_files, GeneratorConfig};
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io reading {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("parse: {0}")]
+    Parse(String),
+    #[error("config: {0}")]
+    Invalid(String),
+}
+
+/// A fully-resolved training job description.
+pub struct JobConfig {
+    pub train: TrainConfig,
+    pub data: Data,
+}
+
+impl JobConfig {
+    pub fn from_file(path: &Path) -> Result<JobConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Io(path.to_path_buf(), e))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<JobConfig, ConfigError> {
+        let j = Json::parse(text)
+            .map_err(|e| ConfigError::Parse(e.to_string()))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobConfig, ConfigError> {
+        let invalid = |m: String| ConfigError::Invalid(m);
+
+        let model = j
+            .get("model")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| invalid("'model' is required".into()))?
+            .to_string();
+        let batch = j.get("batch").and_then(|v| v.as_usize())
+            .unwrap_or(100);
+        let workers = j.get("workers").and_then(|v| v.as_usize())
+            .unwrap_or(1);
+        let seed = j.get("seed").and_then(|v| v.as_i64()).unwrap_or(2017)
+            as u64;
+
+        let mut algo = match j.get("algo") {
+            Some(a) => Algo::from_json(a).map_err(
+                |e| invalid(format!("algo: {e}")))?,
+            None => Algo::default(),
+        };
+        // batch lives at top level (it selects the artifact); keep the
+        // algo consistent
+        algo.batch_size = batch;
+
+        let transport = match j.get("transport") {
+            None => Transport::Inproc,
+            Some(t) if t.as_str() == Some("inproc") => Transport::Inproc,
+            Some(t) => match t.get("tcp") {
+                Some(tcp) => Transport::Tcp {
+                    base_port: tcp
+                        .get("base_port")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(47000) as u16,
+                },
+                None => {
+                    return Err(invalid(format!(
+                        "unknown transport {t}")))
+                }
+            },
+        };
+
+        let hierarchy = match j.get("hierarchy") {
+            None => None,
+            Some(h) => {
+                let groups = h.get("groups").and_then(|v| v.as_usize())
+                    .ok_or_else(|| invalid(
+                        "hierarchy.groups required".into()))?;
+                let wpg = h
+                    .get("workers_per_group")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or_else(|| workers / groups.max(1));
+                Some(HierarchySpec {
+                    n_groups: groups,
+                    workers_per_group: wpg,
+                    sync_every: h.get("sync_every")
+                        .and_then(|v| v.as_usize()).unwrap_or(10) as u64,
+                })
+            }
+        };
+
+        let data = match j.get("data") {
+            None => Data::Synthetic {
+                gen: GeneratorConfig::default(),
+                samples_per_worker: 2000,
+                val_samples: 1000,
+            },
+            Some(d) => {
+                if let Some(dir) = d.get("dir").and_then(|v| v.as_str()) {
+                    let dir = PathBuf::from(dir);
+                    let train = list_train_files(&dir).map_err(
+                        |e| ConfigError::Io(dir.clone(), e))?;
+                    if train.is_empty() {
+                        return Err(invalid(format!(
+                            "no train_*.mpil shards in {}",
+                            dir.display())));
+                    }
+                    Data::Files { train, val: dir.join("val.mpil") }
+                } else if let Some(s) = d.get("synthetic") {
+                    let f32_of = |key: &str, dflt: f32| {
+                        s.get(key).and_then(|v| v.as_f64())
+                            .map(|v| v as f32).unwrap_or(dflt)
+                    };
+                    Data::Synthetic {
+                        gen: GeneratorConfig {
+                            separation: f32_of("separation", 0.6),
+                            noise: f32_of("noise", 1.0),
+                            seed: s.get("seed").and_then(|v| v.as_i64())
+                                .unwrap_or(2017) as u64,
+                            ..Default::default()
+                        },
+                        samples_per_worker: s
+                            .get("samples_per_worker")
+                            .and_then(|v| v.as_usize())
+                            .unwrap_or(2000),
+                        val_samples: s.get("val_samples")
+                            .and_then(|v| v.as_usize()).unwrap_or(1000),
+                    }
+                } else {
+                    return Err(invalid(
+                        "data needs 'dir' or 'synthetic'".into()));
+                }
+            }
+        };
+
+        Ok(JobConfig {
+            train: TrainConfig {
+                builder: ModelBuilder::new(&model, batch),
+                algo,
+                n_workers: workers,
+                seed,
+                transport,
+                hierarchy,
+            },
+            data,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::algo::Mode;
+
+    #[test]
+    fn minimal_config() {
+        let job = JobConfig::from_json_text(r#"{"model": "lstm"}"#)
+            .unwrap();
+        assert_eq!(job.train.builder.variant_key(), "lstm_b100");
+        assert_eq!(job.train.n_workers, 1);
+        assert_eq!(job.train.transport, Transport::Inproc);
+        assert!(matches!(job.data, Data::Synthetic { .. }));
+    }
+
+    #[test]
+    fn full_config() {
+        let text = r#"{
+            "model": "lstm", "batch": 500, "workers": 6, "seed": 9,
+            "transport": {"tcp": {"base_port": 48123}},
+            "hierarchy": {"groups": 2, "sync_every": 7},
+            "algo": {"mode": "easgd", "tau": 4, "alpha": 0.25,
+                     "epochs": 3,
+                     "optimizer": {"kind": "adam", "lr": 0.002}},
+            "data": {"synthetic": {"samples_per_worker": 500,
+                                   "val_samples": 100,
+                                   "separation": 0.3}}
+        }"#;
+        let job = JobConfig::from_json_text(text).unwrap();
+        assert_eq!(job.train.builder.variant_key(), "lstm_b500");
+        assert_eq!(job.train.algo.batch_size, 500);
+        assert_eq!(job.train.algo.epochs, 3);
+        assert!(matches!(job.train.algo.mode,
+                         Mode::Easgd { tau: 4, .. }));
+        assert_eq!(job.train.transport,
+                   Transport::Tcp { base_port: 48123 });
+        let h = job.train.hierarchy.unwrap();
+        assert_eq!(h.n_groups, 2);
+        assert_eq!(h.workers_per_group, 3);
+        assert_eq!(h.sync_every, 7);
+        match job.data {
+            Data::Synthetic { gen, samples_per_worker, val_samples } => {
+                assert_eq!(samples_per_worker, 500);
+                assert_eq!(val_samples, 100);
+                assert!((gen.separation - 0.3).abs() < 1e-6);
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_model_rejected() {
+        assert!(JobConfig::from_json_text(r#"{"batch": 10}"#).is_err());
+    }
+
+    #[test]
+    fn bad_transport_rejected() {
+        let text = r#"{"model": "lstm", "transport": {"carrier": 1}}"#;
+        assert!(JobConfig::from_json_text(text).is_err());
+    }
+
+    #[test]
+    fn files_data_requires_shards() {
+        let text = r#"{"model": "lstm",
+                       "data": {"dir": "/nonexistent_xyz"}}"#;
+        assert!(JobConfig::from_json_text(text).is_err());
+    }
+}

@@ -1,0 +1,440 @@
+//! The launcher: maps ranks to roles, spawns the world, runs training.
+//!
+//! This is `mpi_learn`'s `MPIManager` + `train.py` equivalent: given an
+//! [`Algo`], a [`ModelBuilder`] and a [`Data`] source, it brings up a
+//! master + N workers (optionally a two-level hierarchy), trains, and
+//! returns the merged [`History`].
+//!
+//! Also provides [`train_direct`] — the "Keras alone" baseline of §V: the
+//! identical compute loop with no distribution framework at all, used to
+//! measure the framework's own overhead.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::algo::Algo;
+use crate::coordinator::builder::{Data, ModelBuilder};
+use crate::coordinator::hierarchy::{GroupMaster, HierarchySpec, Role};
+use crate::coordinator::master::{Master, MasterContext};
+use crate::coordinator::worker::Worker;
+use crate::data::DataSet;
+use crate::metrics::History;
+use crate::mpi;
+use crate::runtime::{ModelExecutables, Session};
+use crate::tensor::ParamSet;
+use crate::util::rng::Rng;
+
+#[derive(Debug, thiserror::Error)]
+pub enum TrainError {
+    #[error("session: {0}")]
+    Session(#[from] crate::runtime::SessionError),
+    #[error("data: {0}")]
+    Data(#[from] crate::data::ShardError),
+    #[error("comm: {0}")]
+    Comm(#[from] mpi::CommError),
+    #[error("worker {rank}: {msg}")]
+    Worker { rank: usize, msg: String },
+    #[error("thread panicked: {0}")]
+    Panic(String),
+}
+
+/// Which transport carries the training protocol.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Transport {
+    /// Threads + channels (paper's shared-memory single-node case).
+    Inproc,
+    /// Localhost TCP mesh (cluster-style framing and copies).
+    Tcp { base_port: u16 },
+}
+
+/// Full training-session configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub builder: ModelBuilder,
+    pub algo: Algo,
+    pub n_workers: usize,
+    pub seed: u64,
+    pub transport: Transport,
+    /// Two-level topology; when set, `n_workers` is ignored in favor of
+    /// `hierarchy.n_groups * hierarchy.workers_per_group`.
+    pub hierarchy: Option<HierarchySpec>,
+}
+
+impl TrainConfig {
+    pub fn new(model: &str, batch: usize, n_workers: usize) -> Self {
+        TrainConfig {
+            builder: ModelBuilder::new(model, batch),
+            algo: Algo { batch_size: batch, ..Algo::default() },
+            n_workers,
+            seed: 2017,
+            transport: Transport::Inproc,
+            hierarchy: None,
+        }
+    }
+
+    fn total_workers(&self) -> usize {
+        match &self.hierarchy {
+            Some(h) => h.n_groups * h.workers_per_group,
+            None => self.n_workers,
+        }
+    }
+}
+
+/// Outcome of a training session.
+pub struct TrainResult {
+    pub history: History,
+    pub weights: ParamSet,
+    pub wallclock_s: f64,
+}
+
+/// Run a full distributed training session.
+pub fn train(session: &Session, cfg: &TrainConfig, data: &Data)
+    -> Result<TrainResult, TrainError> {
+    crate::util::logging::init();
+    let exes = session.executables(&cfg.builder.variant_key())?;
+    let n_workers = cfg.total_workers();
+    assert!(n_workers >= 1, "need at least one worker");
+
+    // materialize data up front (outside the timed region, like the
+    // paper's setup phase)
+    let mut worker_data = Vec::with_capacity(n_workers);
+    for w in 0..n_workers {
+        worker_data.push(data.worker_dataset(w, n_workers)?);
+    }
+    let val = data.validation_dataset()?;
+
+    let mut rng = Rng::new(cfg.seed);
+    let init = ParamSet::glorot_init(&exes.meta.params, &mut rng);
+
+    match &cfg.hierarchy {
+        None => train_flat(cfg, &exes, init, worker_data, val),
+        Some(spec) => train_hierarchical(cfg, *spec, &exes, init,
+                                         worker_data, val),
+    }
+}
+
+fn make_world(transport: Transport, size: usize)
+    -> Result<Vec<mpi::Comm>, TrainError> {
+    Ok(match transport {
+        Transport::Inproc => mpi::inproc_world(size),
+        Transport::Tcp { base_port } => mpi::tcp_world(size, base_port)?,
+    })
+}
+
+fn train_flat(cfg: &TrainConfig, exes: &Arc<ModelExecutables>,
+              init: ParamSet, worker_data: Vec<DataSet>, val: DataSet)
+    -> Result<TrainResult, TrainError> {
+    let n_workers = worker_data.len();
+    let mut world = make_world(cfg.transport, n_workers + 1)?;
+    let master_comm = world.remove(0);
+    let t0 = Instant::now();
+
+    let outcome = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (wi, (comm, ds)) in
+            world.into_iter().zip(worker_data.iter()).enumerate() {
+            let algo = &cfg.algo;
+            let exes = exes.clone();
+            let seed = cfg.seed ^ (wi as u64 + 1).wrapping_mul(0x9E37);
+            handles.push(s.spawn(move || {
+                crate::util::logging::set_rank_tag(
+                    &format!("worker-{}", wi + 1));
+                Worker::new(&comm, 0, algo, &exes, ds, seed).run()
+            }));
+        }
+
+        crate::util::logging::set_rank_tag("master");
+        let ctx = MasterContext {
+            algo: &cfg.algo,
+            children: (1..=n_workers).collect(),
+            eval: Some((exes.as_ref(), &val)),
+        };
+        let outcome = Master::new(&master_comm, ctx, init).run();
+
+        for (wi, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(_report)) => {}
+                Ok(Err(e)) => {
+                    return Err(TrainError::Worker { rank: wi + 1,
+                                                    msg: e.to_string() })
+                }
+                Err(_) => {
+                    return Err(TrainError::Panic(format!(
+                        "worker {}", wi + 1)))
+                }
+            }
+        }
+        Ok(outcome)
+    })?;
+
+    let wallclock_s = t0.elapsed().as_secs_f64();
+    let mut history = outcome.history;
+    history.wallclock_s = wallclock_s;
+    Ok(TrainResult { history, weights: outcome.weights, wallclock_s })
+}
+
+fn train_hierarchical(cfg: &TrainConfig, spec: HierarchySpec,
+                      exes: &Arc<ModelExecutables>, init: ParamSet,
+                      worker_data: Vec<DataSet>, val: DataSet)
+    -> Result<TrainResult, TrainError> {
+    let size = spec.world_size();
+    let mut world = make_world(cfg.transport, size)?;
+    // index worker ranks -> contiguous data shard index
+    let mut worker_index = std::collections::BTreeMap::new();
+    let mut next = 0usize;
+    for rank in 1..size {
+        if let Role::Worker { .. } = spec.role_of(rank) {
+            worker_index.insert(rank, next);
+            next += 1;
+        }
+    }
+    let t0 = Instant::now();
+
+    // The super-master integrates group deltas verbatim: identity SGD.
+    let super_algo = Algo {
+        optimizer: crate::optim::OptimizerConfig::Sgd { lr: 1.0 },
+        ..cfg.algo.clone()
+    };
+
+    let outcome = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        // ranks come off the world vector highest-first
+        while let Some(comm) = world.pop() {
+            let rank = comm.rank();
+            if rank == 0 {
+                world.push(comm);
+                break;
+            }
+            match spec.role_of(rank) {
+                Role::GroupMaster { group } => {
+                    let algo = &cfg.algo;
+                    let exes = exes.clone();
+                    handles.push(s.spawn(move || {
+                        crate::util::logging::set_rank_tag(
+                            &format!("gmaster-{group}"));
+                        GroupMaster::new(&comm, algo, spec, group, &exes)
+                            .run()
+                            .map(|_| ())
+                            .map_err(|e| e.to_string())
+                    }));
+                }
+                Role::Worker { master, .. } => {
+                    let algo = &cfg.algo;
+                    let exes = exes.clone();
+                    let wi = worker_index[&rank];
+                    let ds = &worker_data[wi];
+                    let seed = cfg.seed ^ (wi as u64 + 1)
+                        .wrapping_mul(0x9E37);
+                    handles.push(s.spawn(move || {
+                        crate::util::logging::set_rank_tag(
+                            &format!("worker-{rank}"));
+                        Worker::new(&comm, master, algo, &exes, ds, seed)
+                            .run()
+                            .map(|_| ())
+                            .map_err(|e| e.to_string())
+                    }));
+                }
+                Role::SuperMaster => unreachable!(),
+            }
+        }
+
+        let master_comm = world.remove(0);
+        crate::util::logging::set_rank_tag("super-master");
+        let ctx = MasterContext {
+            algo: &super_algo,
+            children: spec.group_masters(),
+            eval: Some((exes.as_ref(), &val)),
+        };
+        let outcome = Master::new(&master_comm, ctx, init).run();
+
+        for (i, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => {
+                    return Err(TrainError::Worker { rank: i, msg })
+                }
+                Err(_) => return Err(TrainError::Panic(format!(
+                    "rank-thread {i}"))),
+            }
+        }
+        Ok(outcome)
+    })?;
+
+    let wallclock_s = t0.elapsed().as_secs_f64();
+    let mut history = outcome.history;
+    history.wallclock_s = wallclock_s;
+    Ok(TrainResult { history, weights: outcome.weights, wallclock_s })
+}
+
+/// SPMD entry point: run THIS process's single rank over a TCP mesh —
+/// the true multi-process cluster deployment (each rank its own OS
+/// process, like `mpirun -np N`). All ranks must be started with the
+/// same `cfg`/`base_port`; rank 0 is the (super-)master and returns the
+/// `TrainResult`, other ranks return `Ok(None)` when their role
+/// completes.
+pub fn run_rank(session: &Session, cfg: &TrainConfig, data: &Data,
+                rank: usize, base_port: u16)
+    -> Result<Option<TrainResult>, TrainError> {
+    crate::util::logging::init();
+    let exes = session.executables(&cfg.builder.variant_key())?;
+    let n_workers = cfg.total_workers();
+    let t0 = Instant::now();
+
+    match &cfg.hierarchy {
+        None => {
+            let size = n_workers + 1;
+            let comm = crate::mpi::transport::tcp::endpoint(
+                rank, size, base_port)?;
+            if rank == 0 {
+                crate::util::logging::set_rank_tag("master");
+                let val = data.validation_dataset()?;
+                let mut rng = Rng::new(cfg.seed);
+                let init = ParamSet::glorot_init(&exes.meta.params,
+                                                 &mut rng);
+                let ctx = MasterContext {
+                    algo: &cfg.algo,
+                    children: (1..=n_workers).collect(),
+                    eval: Some((exes.as_ref(), &val)),
+                };
+                let outcome = Master::new(&comm, ctx, init).run();
+                let wallclock_s = t0.elapsed().as_secs_f64();
+                let mut history = outcome.history;
+                history.wallclock_s = wallclock_s;
+                Ok(Some(TrainResult { history,
+                                      weights: outcome.weights,
+                                      wallclock_s }))
+            } else {
+                crate::util::logging::set_rank_tag(
+                    &format!("worker-{rank}"));
+                let ds = data.worker_dataset(rank - 1, n_workers)?;
+                let seed = cfg.seed ^ (rank as u64)
+                    .wrapping_mul(0x9E37);
+                Worker::new(&comm, 0, &cfg.algo, &exes, &ds, seed)
+                    .run()
+                    .map_err(|e| TrainError::Worker {
+                        rank, msg: e.to_string() })?;
+                Ok(None)
+            }
+        }
+        Some(spec) => {
+            let size = spec.world_size();
+            let comm = crate::mpi::transport::tcp::endpoint(
+                rank, size, base_port)?;
+            match spec.role_of(rank) {
+                Role::SuperMaster => {
+                    crate::util::logging::set_rank_tag("super-master");
+                    let val = data.validation_dataset()?;
+                    let mut rng = Rng::new(cfg.seed);
+                    let init = ParamSet::glorot_init(&exes.meta.params,
+                                                     &mut rng);
+                    let super_algo = Algo {
+                        optimizer: crate::optim::OptimizerConfig::Sgd {
+                            lr: 1.0 },
+                        ..cfg.algo.clone()
+                    };
+                    let ctx = MasterContext {
+                        algo: &super_algo,
+                        children: spec.group_masters(),
+                        eval: Some((exes.as_ref(), &val)),
+                    };
+                    let outcome = Master::new(&comm, ctx, init).run();
+                    let wallclock_s = t0.elapsed().as_secs_f64();
+                    let mut history = outcome.history;
+                    history.wallclock_s = wallclock_s;
+                    Ok(Some(TrainResult { history,
+                                          weights: outcome.weights,
+                                          wallclock_s }))
+                }
+                Role::GroupMaster { group } => {
+                    crate::util::logging::set_rank_tag(
+                        &format!("gmaster-{group}"));
+                    GroupMaster::new(&comm, &cfg.algo, *spec, group,
+                                     &exes)
+                        .run()?;
+                    Ok(None)
+                }
+                Role::Worker { master, group } => {
+                    crate::util::logging::set_rank_tag(
+                        &format!("worker-{rank}"));
+                    // contiguous worker index for data division
+                    let wi = group * spec.workers_per_group
+                        + (rank - master - 1);
+                    let ds = data.worker_dataset(wi, n_workers)?;
+                    let seed = cfg.seed ^ (wi as u64 + 1)
+                        .wrapping_mul(0x9E37);
+                    Worker::new(&comm, master, &cfg.algo, &exes, &ds,
+                                seed)
+                        .run()
+                        .map_err(|e| TrainError::Worker {
+                            rank, msg: e.to_string() })?;
+                    Ok(None)
+                }
+            }
+        }
+    }
+}
+
+/// The "Keras alone" baseline (§V): identical compute, no framework.
+/// One process runs batch -> gradient -> local optimizer update.
+pub fn train_direct(session: &Session, cfg: &TrainConfig, data: &Data)
+    -> Result<TrainResult, TrainError> {
+    crate::util::logging::init();
+    let exes = session.executables(&cfg.builder.variant_key())?;
+    let ds = data.worker_dataset(0, 1)?;
+    let val = data.validation_dataset()?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut params = ParamSet::glorot_init(&exes.meta.params, &mut rng);
+    let mut opt = cfg.algo.build_master_optimizer(params.num_params());
+    let batch = cfg.algo.batch_size;
+
+    let t0 = Instant::now();
+    let mut history = History::default();
+    let mut batches = 0u64;
+    let mut last_loss = 0.0f32;
+    for epoch in 0..cfg.algo.epochs {
+        let mut erng = rng.fork(epoch as u64);
+        let mut failure: Option<crate::runtime::RuntimeError> = None;
+        let p = &mut params;
+        let o = &mut opt;
+        ds.for_each_batch(batch, &mut erng, |x, y| {
+            if failure.is_some() {
+                return;
+            }
+            match exes.grad_step(p, x, y) {
+                Ok(out) => {
+                    o.update(p.flat_mut(), &out.grads);
+                    batches += 1;
+                    last_loss = out.loss;
+                    if batches % 16 == 0 || batches == 1 {
+                        history.train_losses.push((batches, out.loss));
+                    }
+                }
+                Err(e) => failure = Some(e),
+            }
+        });
+        if let Some(e) = failure {
+            return Err(TrainError::Worker { rank: 0, msg: e.to_string() });
+        }
+    }
+    if let Ok((loss, acc)) = crate::coordinator::validation::run_validation(
+        &exes, &params, &val, cfg.algo.max_val_batches) {
+        history.validations.push(crate::metrics::ValRecord {
+            t_s: t0.elapsed().as_secs_f64(),
+            update: batches,
+            val_loss: loss,
+            val_acc: acc,
+        });
+    }
+    let wallclock_s = t0.elapsed().as_secs_f64();
+    history.master_updates = batches;
+    history.wallclock_s = wallclock_s;
+    history.workers.push(crate::metrics::WorkerReport {
+        rank: 0,
+        epochs: cfg.algo.epochs,
+        batches,
+        samples: batches * batch as u64,
+        last_train_loss: last_loss,
+        ..Default::default()
+    });
+    Ok(TrainResult { history, weights: params, wallclock_s })
+}

@@ -1,0 +1,285 @@
+//! Hierarchical masters (paper §III-A: "several master processes, each
+//! coordinating a group of workers and reporting to a higher-level
+//! master").
+//!
+//! A *group master* runs the ordinary Downpour master loop over its
+//! workers, but every `sync_every` local updates it reports upward: it
+//! sends the (negated) weight delta accumulated since its last sync as an
+//! `AggGradients` payload, and adopts the global weights the super-master
+//! returns. With the super-master running identity SGD (lr = 1), the
+//! global model integrates group deltas — momentum or a smaller lr at the
+//! top level damps cross-group oscillation.
+//!
+//! Rank layout (see [`HierarchySpec`]): rank 0 is the super-master; group
+//! `g` occupies a contiguous block starting at `1 + g * (workers_per_group
+//! + 1)` with its master first.
+
+use std::collections::BTreeSet;
+
+use crate::coordinator::algo::{Algo, Mode};
+use crate::metrics::{History, Stopwatch, ValRecord, WorkerReport};
+use crate::mpi::{Comm, Envelope, Payload, Rank, Tag};
+use crate::runtime::ModelExecutables;
+use crate::tensor::ParamSet;
+
+/// Static description of the two-level topology.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HierarchySpec {
+    pub n_groups: usize,
+    pub workers_per_group: usize,
+    /// Group master syncs upward every this many local updates.
+    pub sync_every: u64,
+}
+
+impl HierarchySpec {
+    pub fn world_size(&self) -> usize {
+        1 + self.n_groups * (self.workers_per_group + 1)
+    }
+
+    pub fn super_master(&self) -> Rank {
+        0
+    }
+
+    pub fn group_master(&self, group: usize) -> Rank {
+        1 + group * (self.workers_per_group + 1)
+    }
+
+    pub fn group_workers(&self, group: usize) -> Vec<Rank> {
+        let gm = self.group_master(group);
+        (gm + 1..=gm + self.workers_per_group).collect()
+    }
+
+    pub fn group_masters(&self) -> Vec<Rank> {
+        (0..self.n_groups).map(|g| self.group_master(g)).collect()
+    }
+
+    /// Which role does `rank` play?
+    pub fn role_of(&self, rank: Rank) -> Role {
+        if rank == 0 {
+            return Role::SuperMaster;
+        }
+        let idx = rank - 1;
+        let block = self.workers_per_group + 1;
+        let group = idx / block;
+        if idx % block == 0 {
+            Role::GroupMaster { group }
+        } else {
+            Role::Worker { group, master: self.group_master(group) }
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Role {
+    SuperMaster,
+    GroupMaster { group: usize },
+    Worker { group: usize, master: Rank },
+}
+
+/// Group master: Downpour master below, Downpour "worker" above.
+pub struct GroupMaster<'a> {
+    comm: &'a Comm,
+    algo: &'a Algo,
+    spec: HierarchySpec,
+    group: usize,
+    exes: &'a ModelExecutables,
+}
+
+pub struct GroupOutcome {
+    pub history: History,
+    pub weights: ParamSet,
+}
+
+impl<'a> GroupMaster<'a> {
+    pub fn new(comm: &'a Comm, algo: &'a Algo, spec: HierarchySpec,
+               group: usize, exes: &'a ModelExecutables) -> Self {
+        Self { comm, algo, spec, group, exes }
+    }
+
+    pub fn run(self) -> Result<GroupOutcome, crate::mpi::CommError> {
+        assert!(matches!(self.algo.mode, Mode::Downpour { .. }),
+                "hierarchical mode requires Downpour");
+        let workers: BTreeSet<Rank> =
+            self.spec.group_workers(self.group).into_iter().collect();
+        let super_rank = self.spec.super_master();
+
+        // handshake upward: get the global weights. Our own workers may
+        // race their Ready messages in first — stash anything that is not
+        // the super-master's reply.
+        let mut early: Vec<Envelope> = Vec::new();
+        self.comm.send(super_rank, Tag::Ready, Payload::Empty)?;
+        let mut weights = ParamSet::zeros(&self.exes.meta.params);
+        let mut synced = loop {
+            let env = self.comm.recv()?;
+            if env.src == super_rank {
+                match env {
+                    Envelope { tag: Tag::Weights,
+                               payload: Payload::Floats { data, .. },
+                               .. } => {
+                        weights.set_flat(&data);
+                        break data;
+                    }
+                    env => panic!("group master: bad handshake {:?}",
+                                  env.tag),
+                }
+            }
+            early.push(env);
+        };
+
+        let mut optimizer =
+            self.algo.build_master_optimizer(weights.num_params());
+        let mut done: BTreeSet<Rank> = BTreeSet::new();
+        let mut updates_since_sync = 0u64;
+        let mut update_count = 0u64;
+        let mut history = History::default();
+        let mut update_timer = Stopwatch::new();
+        let mut loss_accum = 0.0f32;
+        let started = std::time::Instant::now();
+        // Worker messages that arrive while we block on the super-master
+        // are stashed here and replayed — dropping them would deadlock
+        // the senders (they block awaiting weight replies).
+        let mut stash: std::collections::VecDeque<Envelope> =
+            early.into_iter().collect();
+
+        while done.len() < workers.len() {
+            let env = match stash.pop_front() {
+                Some(env) => env,
+                None => self.comm.recv()?,
+            };
+            match (env.tag, env.payload) {
+                (Tag::Ready, _) => {
+                    self.comm.send(env.src, Tag::Weights,
+                                   Payload::floats(update_count,
+                                                   weights.flat()
+                                                       .to_vec()))?;
+                }
+                (Tag::Gradients, Payload::Grad { loss, data, .. }) => {
+                    update_timer.start();
+                    optimizer.update(weights.flat_mut(), &data);
+                    update_timer.stop();
+                    update_count += 1;
+                    updates_since_sync += 1;
+                    loss_accum = loss;
+                    if updates_since_sync >= self.spec.sync_every {
+                        updates_since_sync = 0;
+                        // report upward: negated delta as a "gradient"
+                        let delta_neg: Vec<f32> = synced
+                            .iter()
+                            .zip(weights.flat())
+                            .map(|(old, new)| old - new)
+                            .collect();
+                        self.comm.send(
+                            super_rank,
+                            Tag::AggGradients,
+                            Payload::grad(update_count, loss_accum,
+                                          delta_neg),
+                        )?;
+                        // block for the super-master's reply, stashing
+                        // any concurrent worker traffic
+                        loop {
+                            let env = self.comm.recv()?;
+                            if env.src == super_rank {
+                                if let Payload::Floats { data, .. } =
+                                    env.payload {
+                                    weights.set_flat(&data);
+                                    synced = data;
+                                } else {
+                                    log::warn!(
+                                        "group master: unexpected \
+                                         {:?} during sync", env.tag);
+                                }
+                                break;
+                            }
+                            stash.push_back(env);
+                        }
+                    }
+                    self.comm.send(env.src, Tag::Weights,
+                                   Payload::floats(update_count,
+                                                   weights.flat()
+                                                       .to_vec()))?;
+                }
+                (Tag::TrainStats, Payload::Stats(s)) => {
+                    history.workers.push(WorkerReport {
+                        rank: env.src,
+                        epochs: s.epoch,
+                        batches: s.batches_done,
+                        samples: s.samples_done,
+                        last_train_loss: s.train_loss,
+                        grad_time_s: s.grad_time_s,
+                        comm_wait_s: s.comm_wait_s,
+                    });
+                    // forward upward so the global History sees every
+                    // worker's totals
+                    self.comm.send(super_rank, Tag::TrainStats,
+                                   Payload::Stats(s))?;
+                }
+                (Tag::Exit, _) => {
+                    done.insert(env.src);
+                }
+                (tag, payload) => log::warn!(
+                    "group master: unexpected {tag:?} ({payload:?})"),
+            }
+        }
+        // final upstream sync + exit
+        let delta_neg: Vec<f32> = synced
+            .iter()
+            .zip(weights.flat())
+            .map(|(old, new)| old - new)
+            .collect();
+        self.comm.send(super_rank, Tag::AggGradients,
+                       Payload::grad(update_count, loss_accum,
+                                     delta_neg))?;
+        if let Ok(Envelope { tag: Tag::Weights,
+                             payload: Payload::Floats { data, .. }, .. }) =
+            self.comm.recv() {
+            weights.set_flat(&data);
+        }
+        self.comm.send(super_rank, Tag::Exit, Payload::Empty)?;
+        history.master_updates = update_count;
+        history.master_update_time_s = update_timer.total_s();
+        history.wallclock_s = started.elapsed().as_secs_f64();
+        // group-level validation record is synthesized by the super-master
+        let _ = ValRecord { t_s: 0.0, update: 0, val_loss: 0.0,
+                            val_acc: 0.0 };
+        Ok(GroupOutcome { history, weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_rank_layout() {
+        let spec = HierarchySpec { n_groups: 2, workers_per_group: 3,
+                                   sync_every: 5 };
+        assert_eq!(spec.world_size(), 9);
+        assert_eq!(spec.group_master(0), 1);
+        assert_eq!(spec.group_master(1), 5);
+        assert_eq!(spec.group_workers(0), vec![2, 3, 4]);
+        assert_eq!(spec.group_workers(1), vec![6, 7, 8]);
+        assert_eq!(spec.group_masters(), vec![1, 5]);
+    }
+
+    #[test]
+    fn roles_cover_world() {
+        let spec = HierarchySpec { n_groups: 3, workers_per_group: 2,
+                                   sync_every: 1 };
+        assert_eq!(spec.role_of(0), Role::SuperMaster);
+        let mut masters = 0;
+        let mut workers = 0;
+        for r in 1..spec.world_size() {
+            match spec.role_of(r) {
+                Role::GroupMaster { .. } => masters += 1,
+                Role::Worker { master, .. } => {
+                    workers += 1;
+                    assert!(matches!(spec.role_of(master),
+                                     Role::GroupMaster { .. }));
+                }
+                Role::SuperMaster => panic!("only rank 0"),
+            }
+        }
+        assert_eq!(masters, 3);
+        assert_eq!(workers, 6);
+    }
+}

@@ -1,0 +1,308 @@
+//! The master process: owns the weights, applies updates, serves workers.
+//!
+//! Downpour (paper §III-A): each incoming worker gradient is applied to
+//! the master's weights by the optimizer, and the updated weights are sent
+//! back to that worker — asynchronously one-by-one (default) or behind a
+//! full barrier (synchronous mode). EASGD: the master owns the center
+//! variable and answers worker exchange requests with the elastic update.
+//!
+//! The same state machine also serves as the *super-master* in the
+//! hierarchical configuration: group masters send `AggGradients` which
+//! take the ordinary gradient path (the group master pre-negates its
+//! weight delta so an identity-SGD super-optimizer means "adopt delta").
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use crate::coordinator::algo::{Algo, Mode};
+use crate::coordinator::validation::{run_validation, ValidationSchedule};
+use crate::data::DataSet;
+use crate::metrics::{History, Stopwatch, ValRecord, WorkerReport};
+use crate::mpi::{Comm, Envelope, Payload, Rank, Tag};
+use crate::optim::Optimizer;
+use crate::runtime::ModelExecutables;
+use crate::tensor::ParamSet;
+
+/// Everything the master needs beyond its communicator.
+pub struct MasterContext<'a> {
+    pub algo: &'a Algo,
+    /// Child ranks this master serves (workers, or group masters).
+    pub children: Vec<Rank>,
+    /// Validation executables + held-out set (None = no validation).
+    pub eval: Option<(&'a ModelExecutables, &'a DataSet)>,
+}
+
+/// Result of a master run.
+pub struct MasterOutcome {
+    pub weights: ParamSet,
+    pub history: History,
+}
+
+/// Staleness accounting (Fig 2's mechanism: workers training on outdated
+/// weights).
+#[derive(Debug, Default, Clone)]
+pub struct StalenessStats {
+    pub total: u64,
+    pub count: u64,
+    pub max: u64,
+}
+
+impl StalenessStats {
+    fn record(&mut self, staleness: u64) {
+        self.total += staleness;
+        self.count += 1;
+        self.max = self.max.max(staleness);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total as f64 / self.count as f64
+        }
+    }
+}
+
+pub struct Master<'a> {
+    comm: &'a Comm,
+    ctx: MasterContext<'a>,
+    weights: ParamSet,
+    optimizer: Box<dyn Optimizer>,
+    update_count: u64,
+    schedule: ValidationSchedule,
+    lr_schedule: Option<crate::optim::StepDecay>,
+    done: BTreeSet<Rank>,
+    /// Synchronous-mode barrier stash: rank -> (loss, grads).
+    pending: BTreeMap<Rank, (f32, Vec<f32>)>,
+    pub staleness: StalenessStats,
+    history: History,
+    update_timer: Stopwatch,
+    idle_timer: Stopwatch,
+    started: Instant,
+}
+
+impl<'a> Master<'a> {
+    pub fn new(comm: &'a Comm, ctx: MasterContext<'a>, init: ParamSet)
+        -> Self {
+        let n = init.num_params();
+        let optimizer = ctx.algo.build_master_optimizer(n);
+        let schedule = ValidationSchedule::new(ctx.algo.validate_every);
+        let lr_schedule = if ctx.algo.lr_decay > 0.0
+            && ctx.algo.lr_decay_every > 0 {
+            Some(crate::optim::StepDecay::new(ctx.algo.lr_decay,
+                                              ctx.algo.lr_decay_every))
+        } else {
+            None
+        };
+        Self {
+            comm,
+            ctx,
+            weights: init,
+            optimizer,
+            update_count: 0,
+            schedule,
+            lr_schedule,
+            done: BTreeSet::new(),
+            pending: BTreeMap::new(),
+            staleness: StalenessStats::default(),
+            history: History::default(),
+            update_timer: Stopwatch::new(),
+            idle_timer: Stopwatch::new(),
+            started: Instant::now(),
+        }
+    }
+
+    fn active_children(&self) -> usize {
+        self.ctx.children.len() - self.done.len()
+    }
+
+    fn send_weights(&self, to: Rank) {
+        let payload = Payload::floats(self.update_count,
+                                      self.weights.flat().to_vec());
+        if let Err(e) = self.comm.send(to, Tag::Weights, payload) {
+            log::warn!("master: weight send to {to} failed: {e}");
+        }
+    }
+
+    /// Snapshot once, fan out to many recipients (sync barrier) — the
+    /// Arc payload keeps the broadcast a single allocation.
+    fn broadcast_weights(&self, to: impl Iterator<Item = Rank>) {
+        let snapshot =
+            std::sync::Arc::new(self.weights.flat().to_vec());
+        for rank in to {
+            let payload = Payload::floats_shared(self.update_count,
+                                                 snapshot.clone());
+            if let Err(e) = self.comm.send(rank, Tag::Weights, payload) {
+                log::warn!("master: weight send to {rank} failed: {e}");
+            }
+        }
+    }
+
+    fn maybe_validate(&mut self, force: bool) {
+        let due = force || self.schedule.due(self.update_count);
+        if !due {
+            return;
+        }
+        if let Some((exes, val)) = self.ctx.eval {
+            match run_validation(exes, &self.weights, val,
+                                 self.ctx.algo.max_val_batches) {
+                Ok((loss, acc)) => {
+                    log::info!(
+                        "validation @ update {}: loss={loss:.4} \
+                         acc={acc:.4}",
+                        self.update_count
+                    );
+                    self.history.validations.push(ValRecord {
+                        t_s: self.started.elapsed().as_secs_f64(),
+                        update: self.update_count,
+                        val_loss: loss,
+                        val_acc: acc,
+                    });
+                }
+                Err(e) => log::error!("validation failed: {e}"),
+            }
+        }
+    }
+
+    fn apply_gradient(&mut self, loss: f32, grads: &[f32]) {
+        if let Some(sched) = &mut self.lr_schedule {
+            let scale = sched.tick();
+            self.optimizer.set_lr_scale(scale);
+        }
+        self.update_timer.start();
+        self.optimizer.update(self.weights.flat_mut(), grads);
+        self.update_timer.stop();
+        self.update_count += 1;
+        if self.update_count % 16 == 0 || self.update_count == 1 {
+            self.history.train_losses.push((self.update_count, loss));
+        }
+        self.maybe_validate(false);
+    }
+
+    fn handle_grad(&mut self, src: Rank, step: u64, loss: f32,
+                   grads: Vec<f32>, sync: bool) {
+        self.staleness.record(self.update_count.saturating_sub(step));
+        if !sync {
+            self.apply_gradient(loss, &grads);
+            self.send_weights(src);
+            return;
+        }
+        self.pending.insert(src, (loss, grads));
+        self.try_sync_round();
+    }
+
+    /// In synchronous mode, fire the barrier when every active child has
+    /// contributed.
+    fn try_sync_round(&mut self) {
+        if self.pending.is_empty()
+            || self.pending.len() < self.active_children() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.pending);
+        let n = pending.len() as f32;
+        let dim = self.weights.num_params();
+        let mut avg = vec![0.0f32; dim];
+        let mut avg_loss = 0.0f32;
+        for (_, (loss, g)) in &pending {
+            avg_loss += loss / n;
+            for (a, gi) in avg.iter_mut().zip(g) {
+                *a += gi / n;
+            }
+        }
+        self.apply_gradient(avg_loss, &avg);
+        self.broadcast_weights(pending.into_keys());
+    }
+
+    /// EASGD center update: reply with the current center, then move the
+    /// center toward the worker's weights by alpha.
+    fn handle_exchange(&mut self, src: Rank,
+                       worker_w: std::sync::Arc<Vec<f32>>, alpha: f32) {
+        let reply = Payload::floats(self.update_count,
+                                    self.weights.flat().to_vec());
+        if let Err(e) = self.comm.send(src, Tag::Center, reply) {
+            log::warn!("master: center send to {src} failed: {e}");
+        }
+        self.update_timer.start();
+        let center = self.weights.flat_mut();
+        for (c, w) in center.iter_mut().zip(worker_w.iter()) {
+            *c += alpha * (*w - *c);
+        }
+        self.update_timer.stop();
+        self.update_count += 1;
+        self.maybe_validate(false);
+    }
+
+    fn handle_stats(&mut self, src: Rank,
+                    s: crate::mpi::WorkerStats) {
+        self.history.workers.push(WorkerReport {
+            rank: src,
+            epochs: s.epoch,
+            batches: s.batches_done,
+            samples: s.samples_done,
+            last_train_loss: s.train_loss,
+            grad_time_s: s.grad_time_s,
+            comm_wait_s: s.comm_wait_s,
+        });
+    }
+
+    /// Run the serve loop until every child has exited.
+    pub fn run(mut self) -> MasterOutcome {
+        let easgd_alpha = match self.ctx.algo.mode {
+            Mode::Easgd { alpha, .. } => Some(alpha),
+            _ => None,
+        };
+        let sync = matches!(self.ctx.algo.mode,
+                            Mode::Downpour { sync: true });
+        while !self.ctx.children.is_empty()
+            && self.done.len() < self.ctx.children.len() {
+            self.idle_timer.start();
+            let env = match self.comm.recv() {
+                Ok(env) => env,
+                Err(e) => {
+                    log::error!("master recv failed: {e}");
+                    break;
+                }
+            };
+            self.idle_timer.stop();
+            let Envelope { src, tag, payload } = env;
+            match (tag, payload) {
+                (Tag::Ready, _) => self.send_weights(src),
+                (Tag::Gradients, Payload::Grad { step, loss, data })
+                | (Tag::AggGradients, Payload::Grad { step, loss, data }) =>
+                {
+                    self.handle_grad(src, step, loss, data, sync);
+                }
+                (Tag::ExchangeWeights, Payload::Floats { data, .. }) => {
+                    let alpha = easgd_alpha.unwrap_or(0.5);
+                    self.handle_exchange(src, data, alpha);
+                }
+                (Tag::TrainStats, Payload::Stats(s)) => {
+                    self.handle_stats(src, s)
+                }
+                (Tag::Exit, _) => {
+                    self.done.insert(src);
+                    log::debug!("master: child {src} done \
+                                 ({}/{})", self.done.len(),
+                                self.ctx.children.len());
+                    if sync {
+                        // a departing child shrinks the barrier
+                        self.try_sync_round();
+                    }
+                }
+                (tag, payload) => {
+                    log::warn!("master: unexpected {tag:?} from {src} \
+                                ({payload:?})");
+                }
+            }
+        }
+        // final validation so every run ends with a measurement
+        self.maybe_validate(true);
+        self.history.staleness_mean = self.staleness.mean();
+        self.history.staleness_max = self.staleness.max;
+        self.history.master_updates = self.update_count;
+        self.history.master_update_time_s = self.update_timer.total_s();
+        self.history.master_idle_time_s = self.idle_timer.total_s();
+        self.history.wallclock_s = self.started.elapsed().as_secs_f64();
+        MasterOutcome { weights: self.weights, history: self.history }
+    }
+}

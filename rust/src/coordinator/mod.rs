@@ -1,0 +1,26 @@
+//! The paper's system contribution: MPI-style distributed training of the
+//! AOT-compiled model zoo.
+//!
+//! - [`algo`] — the `Algo` training-procedure descriptor (Downpour / EASGD,
+//!   sync/async, optimizer, validation frequency).
+//! - [`builder`] — the `ModelBuilder` and `Data` user-interface classes.
+//! - [`master`] / [`worker`] — the two process roles.
+//! - [`hierarchy`] — two-level master topology.
+//! - [`validation`] — master-side held-out evaluation.
+//! - [`driver`] — the launcher (`train`, `train_direct`).
+
+pub mod algo;
+pub mod builder;
+pub mod config;
+pub mod driver;
+pub mod hierarchy;
+pub mod master;
+pub mod validation;
+pub mod worker;
+
+pub use algo::{Algo, Mode};
+pub use builder::{Data, ModelBuilder};
+pub use config::JobConfig;
+pub use driver::{run_rank, train, train_direct, TrainConfig, TrainError,
+                 TrainResult, Transport};
+pub use hierarchy::HierarchySpec;

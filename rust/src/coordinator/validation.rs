@@ -1,0 +1,97 @@
+//! Master-side validation (§V): serial, so its cost directly eats into
+//! scaling — exactly the bottleneck the paper discusses. The frequency is
+//! controlled by `Algo::validate_every` and each round's size by
+//! `Algo::max_val_batches`.
+
+use crate::data::DataSet;
+use crate::runtime::ModelExecutables;
+use crate::tensor::ParamSet;
+
+/// One validation sweep over (a prefix of) the held-out set.
+///
+/// Returns (mean loss, accuracy). Uses fixed-order batches so successive
+/// rounds are comparable.
+pub fn run_validation(exes: &ModelExecutables, params: &ParamSet,
+                      val: &DataSet, max_batches: usize)
+    -> Result<(f32, f32), crate::runtime::RuntimeError> {
+    let batch = exes.meta.batch;
+    let mut total_loss = 0.0f64;
+    let mut total_correct = 0.0f64;
+    let mut batches = 0usize;
+    let mut err: Option<crate::runtime::RuntimeError> = None;
+    val.for_each_batch_ordered(batch, |x, y| {
+        if err.is_some() || (max_batches > 0 && batches >= max_batches) {
+            return;
+        }
+        match exes.eval_step(params, x, y) {
+            Ok((loss, ncorrect)) => {
+                total_loss += loss as f64;
+                total_correct += ncorrect as f64;
+                batches += 1;
+            }
+            Err(e) => err = Some(e),
+        }
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+    if batches == 0 {
+        return Ok((f32::NAN, 0.0));
+    }
+    let n = (batches * batch) as f64;
+    Ok(((total_loss / batches as f64) as f32,
+        (total_correct / n) as f32))
+}
+
+/// Validation scheduling policy: run every `every` master updates.
+#[derive(Clone, Debug)]
+pub struct ValidationSchedule {
+    every: u64,
+    last_run_at: u64,
+}
+
+impl ValidationSchedule {
+    pub fn new(every: u64) -> Self {
+        Self { every, last_run_at: 0 }
+    }
+
+    /// Should validation run after master update number `update`?
+    pub fn due(&mut self, update: u64) -> bool {
+        if self.every == 0 {
+            return false;
+        }
+        if update >= self.last_run_at + self.every {
+            self.last_run_at = update;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_fires_on_period() {
+        let mut s = ValidationSchedule::new(10);
+        assert!(!s.due(5));
+        assert!(s.due(10));
+        assert!(!s.due(11));
+        assert!(!s.due(19));
+        assert!(s.due(20));
+        // skipping far ahead still fires once, then re-arms
+        assert!(s.due(45));
+        assert!(!s.due(46));
+        assert!(s.due(55));
+    }
+
+    #[test]
+    fn zero_period_never_fires() {
+        let mut s = ValidationSchedule::new(0);
+        for u in 0..100 {
+            assert!(!s.due(u));
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! The worker process: read a batch, compute the gradient, trade it for
+//! fresh weights (Downpour), or train locally and exchange elastically
+//! (EASGD). Paper §III-A.
+
+use crate::coordinator::algo::{Algo, Mode};
+use crate::data::DataSet;
+use crate::metrics::{Stopwatch, WorkerReport};
+use crate::mpi::{Comm, Payload, Rank, Tag, WorkerStats};
+use crate::runtime::ModelExecutables;
+use crate::tensor::ParamSet;
+use crate::util::rng::Rng;
+
+/// Worker configuration + state.
+pub struct Worker<'a> {
+    comm: &'a Comm,
+    master: Rank,
+    algo: &'a Algo,
+    exes: &'a ModelExecutables,
+    data: &'a DataSet,
+    rng: Rng,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum WorkerError {
+    #[error("runtime: {0}")]
+    Runtime(#[from] crate::runtime::RuntimeError),
+    #[error("comm: {0}")]
+    Comm(#[from] crate::mpi::CommError),
+    #[error("master sent unexpected tag {0:?}")]
+    Protocol(Tag),
+    #[error("master told us to exit early")]
+    EarlyExit,
+}
+
+impl<'a> Worker<'a> {
+    pub fn new(comm: &'a Comm, master: Rank, algo: &'a Algo,
+               exes: &'a ModelExecutables, data: &'a DataSet, seed: u64)
+        -> Self {
+        Self { comm, master, algo, exes, data, rng: Rng::new(seed) }
+    }
+
+    /// Announce readiness and receive the initial weights.
+    fn handshake(&mut self, params: &mut ParamSet)
+        -> Result<u64, WorkerError> {
+        self.comm.send(self.master, Tag::Ready, Payload::Empty)?;
+        let env = self.comm.recv()?;
+        match (env.tag, env.payload) {
+            (Tag::Weights, Payload::Floats { step, data }) => {
+                params.set_flat(&data);
+                Ok(step)
+            }
+            (Tag::Exit, _) => Err(WorkerError::EarlyExit),
+            (tag, _) => Err(WorkerError::Protocol(tag)),
+        }
+    }
+
+    /// Run the configured number of epochs; returns the final report.
+    pub fn run(mut self) -> Result<WorkerReport, WorkerError> {
+        let mut params = ParamSet::zeros(&self.exes.meta.params);
+        let step0 = self.handshake(&mut params)?;
+        match self.algo.mode.clone() {
+            Mode::Downpour { .. } => self.run_downpour(params, step0),
+            Mode::Easgd { tau, alpha, worker_optimizer } => {
+                self.run_easgd(params, tau, alpha, &worker_optimizer)
+            }
+        }
+    }
+
+    fn finish(&self, report: &WorkerReport) -> Result<(), WorkerError> {
+        self.comm.send(
+            self.master,
+            Tag::TrainStats,
+            Payload::Stats(WorkerStats {
+                epoch: report.epochs,
+                batches_done: report.batches,
+                samples_done: report.samples,
+                train_loss: report.last_train_loss,
+                grad_time_s: report.grad_time_s,
+                comm_wait_s: report.comm_wait_s,
+            }),
+        )?;
+        self.comm.send(self.master, Tag::Exit, Payload::Empty)?;
+        Ok(())
+    }
+
+    fn run_downpour(&mut self, mut params: ParamSet, step0: u64)
+        -> Result<WorkerReport, WorkerError> {
+        let batch = self.algo.batch_size;
+        let mut report = WorkerReport {
+            rank: self.comm.rank(),
+            ..Default::default()
+        };
+        let mut grad_timer = Stopwatch::new();
+        let mut comm_timer = Stopwatch::new();
+        let mut model_step = step0;
+        for epoch in 0..self.algo.epochs {
+            let mut rng = self.rng.fork(epoch as u64);
+            let mut failure: Option<WorkerError> = None;
+            // buffers move through the closure; results come back via refs
+            let params_ref = &mut params;
+            let step_ref = &mut model_step;
+            let report_ref = &mut report;
+            let gt = &mut grad_timer;
+            let ct = &mut comm_timer;
+            self.data.for_each_batch(batch, &mut rng, |x, y| {
+                if failure.is_some() {
+                    return;
+                }
+                let out = match gt.time(|| self.exes.grad_step(
+                    params_ref, x, y)) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        failure = Some(e.into());
+                        return;
+                    }
+                };
+                report_ref.last_train_loss = out.loss;
+                let send_recv = || -> Result<(), WorkerError> {
+                    self.comm.send(
+                        self.master,
+                        Tag::Gradients,
+                        Payload::grad(*step_ref, out.loss, out.grads),
+                    )?;
+                    let env = self.comm.recv()?;
+                    match (env.tag, env.payload) {
+                        (Tag::Weights, Payload::Floats { step, data }) => {
+                            params_ref.set_flat(&data);
+                            *step_ref = step;
+                            Ok(())
+                        }
+                        (Tag::Exit, _) => Err(WorkerError::EarlyExit),
+                        (tag, _) => Err(WorkerError::Protocol(tag)),
+                    }
+                };
+                if let Err(e) = ct.time(send_recv) {
+                    failure = Some(e);
+                    return;
+                }
+                report_ref.batches += 1;
+                report_ref.samples += batch as u64;
+            });
+            match failure {
+                Some(WorkerError::EarlyExit) => break,
+                Some(e) => return Err(e),
+                None => {}
+            }
+            report.epochs = epoch + 1;
+            log::debug!("epoch {} done, loss={:.4}", epoch + 1,
+                        report.last_train_loss);
+        }
+        report.grad_time_s = grad_timer.total_s();
+        report.comm_wait_s = comm_timer.total_s();
+        self.finish(&report)?;
+        Ok(report)
+    }
+
+    fn run_easgd(&mut self, mut params: ParamSet, tau: u32, alpha: f32,
+                 worker_opt: &crate::optim::OptimizerConfig)
+        -> Result<WorkerReport, WorkerError> {
+        let batch = self.algo.batch_size;
+        let mut opt = worker_opt.build(params.num_params());
+        let mut report = WorkerReport {
+            rank: self.comm.rank(),
+            ..Default::default()
+        };
+        let mut grad_timer = Stopwatch::new();
+        let mut comm_timer = Stopwatch::new();
+        let mut since_exchange = 0u32;
+        for epoch in 0..self.algo.epochs {
+            let mut rng = self.rng.fork(epoch as u64);
+            let mut failure: Option<WorkerError> = None;
+            let params_ref = &mut params;
+            let report_ref = &mut report;
+            let opt_ref = &mut opt;
+            let since_ref = &mut since_exchange;
+            let gt = &mut grad_timer;
+            let ct = &mut comm_timer;
+            self.data.for_each_batch(batch, &mut rng, |x, y| {
+                if failure.is_some() {
+                    return;
+                }
+                let out = match gt.time(|| self.exes.grad_step(
+                    params_ref, x, y)) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        failure = Some(e.into());
+                        return;
+                    }
+                };
+                report_ref.last_train_loss = out.loss;
+                // local update — workers explore independently
+                opt_ref.update(params_ref.flat_mut(), &out.grads);
+                report_ref.batches += 1;
+                report_ref.samples += batch as u64;
+                *since_ref += 1;
+                if *since_ref >= tau {
+                    *since_ref = 0;
+                    let exchange = || -> Result<(), WorkerError> {
+                        self.comm.send(
+                            self.master,
+                            Tag::ExchangeWeights,
+                            Payload::floats(report_ref.batches,
+                                            params_ref.flat().to_vec()),
+                        )?;
+                        let env = self.comm.recv()?;
+                        match (env.tag, env.payload) {
+                            (Tag::Center,
+                             Payload::Floats { data: center, .. }) => {
+                                // elastic pull toward the center
+                                let w = params_ref.flat_mut();
+                                for (wi, ci) in w.iter_mut().zip(center.iter()) {
+                                    *wi -= alpha * (*wi - ci);
+                                }
+                                Ok(())
+                            }
+                            (Tag::Exit, _) => Err(WorkerError::EarlyExit),
+                            (tag, _) => Err(WorkerError::Protocol(tag)),
+                        }
+                    };
+                    if let Err(e) = ct.time(exchange) {
+                        failure = Some(e);
+                    }
+                }
+            });
+            match failure {
+                Some(WorkerError::EarlyExit) => break,
+                Some(e) => return Err(e),
+                None => {}
+            }
+            report.epochs = epoch + 1;
+        }
+        report.grad_time_s = grad_timer.total_s();
+        report.comm_wait_s = comm_timer.total_s();
+        self.finish(&report)?;
+        Ok(report)
+    }
+}

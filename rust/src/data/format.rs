@@ -1,0 +1,216 @@
+//! Binary shard file format (the 100-file Delphes dataset substitute).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   "MPIL"            4 bytes
+//! version u32               = 1
+//! n       u32  samples
+//! t       u32  seq_len
+//! f       u32  features
+//! c       u32  classes
+//! labels  i32[n]
+//! x       f32[n * t * f]    (sample-major, row-major [t, f] per sample)
+//! crc     u32               CRC-32 of everything after the magic
+//! ```
+//! CRC guards against torn writes — a worker failing mid-epoch because its
+//! shard was corrupt is a failure mode the paper's file-division scheme
+//! has to survive.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crc32fast::Hasher;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ShardError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("not a shard file (bad magic)")]
+    BadMagic,
+    #[error("unsupported shard version {0}")]
+    BadVersion(u32),
+    #[error("checksum mismatch: file is corrupt")]
+    BadChecksum,
+    #[error("shard truncated")]
+    Truncated,
+    #[error("label {label} out of range for {classes} classes")]
+    BadLabel { label: i32, classes: u32 },
+}
+
+/// One file's worth of samples, fully in memory (shards are sized so that
+/// a worker's whole division fits comfortably, as in the paper's setup).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shard {
+    pub seq_len: u32,
+    pub features: u32,
+    pub classes: u32,
+    pub labels: Vec<i32>,
+    /// [n * seq_len * features], sample-major.
+    pub x: Vec<f32>,
+}
+
+impl Shard {
+    pub fn n_samples(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn sample_len(&self) -> usize {
+        (self.seq_len * self.features) as usize
+    }
+
+    /// Slice of sample i's flattened [t, f] features.
+    pub fn sample(&self, i: usize) -> &[f32] {
+        let sl = self.sample_len();
+        &self.x[i * sl..(i + 1) * sl]
+    }
+
+    pub fn write(&self, path: &Path) -> Result<(), ShardError> {
+        let mut body = Vec::with_capacity(
+            20 + self.labels.len() * 4 + self.x.len() * 4);
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&(self.labels.len() as u32).to_le_bytes());
+        body.extend_from_slice(&self.seq_len.to_le_bytes());
+        body.extend_from_slice(&self.features.to_le_bytes());
+        body.extend_from_slice(&self.classes.to_le_bytes());
+        for l in &self.labels {
+            body.extend_from_slice(&l.to_le_bytes());
+        }
+        let xbytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.x.as_ptr() as *const u8,
+                                       self.x.len() * 4)
+        };
+        body.extend_from_slice(xbytes);
+        let mut h = Hasher::new();
+        h.update(&body);
+        let crc = h.finalize();
+
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"MPIL")?;
+        f.write_all(&body)?;
+        f.write_all(&crc.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn read(path: &Path) -> Result<Shard, ShardError> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        if buf.len() < 8 || &buf[..4] != b"MPIL" {
+            return Err(ShardError::BadMagic);
+        }
+        let body = &buf[4..buf.len() - 4];
+        let crc_stored = u32::from_le_bytes(
+            buf[buf.len() - 4..].try_into().unwrap());
+        let mut h = Hasher::new();
+        h.update(body);
+        if h.finalize() != crc_stored {
+            return Err(ShardError::BadChecksum);
+        }
+        if body.len() < 20 {
+            return Err(ShardError::Truncated);
+        }
+        let rd = |off: usize| u32::from_le_bytes(
+            body[off..off + 4].try_into().unwrap());
+        let version = rd(0);
+        if version != 1 {
+            return Err(ShardError::BadVersion(version));
+        }
+        let n = rd(4) as usize;
+        let seq_len = rd(8);
+        let features = rd(12);
+        let classes = rd(16);
+        let labels_bytes = n * 4;
+        let x_len = n * (seq_len as usize) * (features as usize);
+        if body.len() != 20 + labels_bytes + x_len * 4 {
+            return Err(ShardError::Truncated);
+        }
+        let mut labels = Vec::with_capacity(n);
+        for chunk in body[20..20 + labels_bytes].chunks_exact(4) {
+            let l = i32::from_le_bytes(chunk.try_into().unwrap());
+            if l < 0 || l as u32 >= classes {
+                return Err(ShardError::BadLabel { label: l, classes });
+            }
+            labels.push(l);
+        }
+        let mut x = Vec::with_capacity(x_len);
+        for chunk in body[20 + labels_bytes..].chunks_exact(4) {
+            x.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(Shard { seq_len, features, classes, labels, x })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_shard() -> Shard {
+        Shard {
+            seq_len: 3,
+            features: 2,
+            classes: 3,
+            labels: vec![0, 1, 2, 1],
+            x: (0..24).map(|i| i as f32).collect(),
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mpi_learn_shard_{name}.bin"))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = sample_shard();
+        let p = tmp("rt");
+        s.write(&p).unwrap();
+        assert_eq!(Shard::read(&p).unwrap(), s);
+    }
+
+    #[test]
+    fn sample_slicing() {
+        let s = sample_shard();
+        assert_eq!(s.sample(1), &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(s.n_samples(), 4);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let s = sample_shard();
+        let p = tmp("corrupt");
+        s.write(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(Shard::read(&p), Err(ShardError::BadChecksum)));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let s = sample_shard();
+        let p = tmp("trunc");
+        s.write(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(Shard::read(&p).is_err());
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOPEnope").unwrap();
+        assert!(matches!(Shard::read(&p), Err(ShardError::BadMagic)));
+    }
+
+    #[test]
+    fn label_range_validated() {
+        let mut s = sample_shard();
+        s.labels[0] = 7; // out of range for 3 classes
+        let p = tmp("label");
+        s.write(&p).unwrap();
+        assert!(matches!(Shard::read(&p),
+                         Err(ShardError::BadLabel { .. })));
+    }
+}

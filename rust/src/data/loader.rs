@@ -1,0 +1,273 @@
+//! Batching data loader over shard files — the paper's `Data` class.
+//!
+//! A worker's division of the file list is loaded into memory (shards are
+//! small relative to the original 50 GB / 100 files because the benchmark
+//! scales down proportionally) and iterated as shuffled fixed-size batches,
+//! one epoch at a time. Partial trailing batches are dropped, matching the
+//! fixed-shape HLO artifacts (and Keras `steps_per_epoch` semantics).
+
+use std::path::{Path, PathBuf};
+
+use crate::data::format::{Shard, ShardError};
+use crate::util::rng::Rng;
+
+/// In-memory dataset with batch iteration.
+#[derive(Clone, Debug)]
+pub struct DataSet {
+    pub seq_len: usize,
+    pub features: usize,
+    pub classes: usize,
+    labels: Vec<i32>,
+    x: Vec<f32>, // sample-major
+}
+
+impl DataSet {
+    pub fn from_files(paths: &[PathBuf]) -> Result<DataSet, ShardError> {
+        assert!(!paths.is_empty(), "DataSet needs at least one file");
+        let mut out: Option<DataSet> = None;
+        for p in paths {
+            let shard = Shard::read(p)?;
+            match &mut out {
+                None => {
+                    out = Some(DataSet {
+                        seq_len: shard.seq_len as usize,
+                        features: shard.features as usize,
+                        classes: shard.classes as usize,
+                        labels: shard.labels,
+                        x: shard.x,
+                    })
+                }
+                Some(ds) => {
+                    assert_eq!(ds.seq_len, shard.seq_len as usize,
+                               "mixed seq_len across shards");
+                    assert_eq!(ds.features, shard.features as usize,
+                               "mixed features across shards");
+                    ds.labels.extend_from_slice(&shard.labels);
+                    ds.x.extend_from_slice(&shard.x);
+                }
+            }
+        }
+        Ok(out.unwrap())
+    }
+
+    pub fn from_shard(shard: Shard) -> DataSet {
+        DataSet {
+            seq_len: shard.seq_len as usize,
+            features: shard.features as usize,
+            classes: shard.classes as usize,
+            labels: shard.labels,
+            x: shard.x,
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn labels(&self) -> &[i32] {
+        &self.labels
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn sample_len(&self) -> usize {
+        self.seq_len * self.features
+    }
+
+    /// Copy sample `i` into `(x_out, label)` buffers.
+    fn fill(&self, i: usize, x_out: &mut [f32]) -> i32 {
+        let sl = self.sample_len();
+        x_out.copy_from_slice(&self.x[i * sl..(i + 1) * sl]);
+        self.labels[i]
+    }
+
+    /// Number of full batches per epoch.
+    pub fn batches_per_epoch(&self, batch: usize) -> usize {
+        self.n_samples() / batch
+    }
+
+    /// Iterate one epoch of shuffled full batches, invoking `f(x, y)`.
+    /// Buffers are reused across calls — the hot path allocates nothing.
+    pub fn for_each_batch<F>(&self, batch: usize, rng: &mut Rng, mut f: F)
+    where
+        F: FnMut(&[f32], &[i32]),
+    {
+        let n = self.n_samples();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut order);
+        let sl = self.sample_len();
+        let mut xb = vec![0.0f32; batch * sl];
+        let mut yb = vec![0i32; batch];
+        for chunk in order.chunks_exact(batch) {
+            for (j, &idx) in chunk.iter().enumerate() {
+                yb[j] = self.fill(idx as usize,
+                                  &mut xb[j * sl..(j + 1) * sl]);
+            }
+            f(&xb, &yb);
+        }
+    }
+
+    /// Fixed (unshuffled) batches — used for validation.
+    pub fn for_each_batch_ordered<F>(&self, batch: usize, mut f: F)
+    where
+        F: FnMut(&[f32], &[i32]),
+    {
+        let sl = self.sample_len();
+        let mut xb = vec![0.0f32; batch * sl];
+        let mut yb = vec![0i32; batch];
+        let nb = self.batches_per_epoch(batch);
+        for b in 0..nb {
+            for j in 0..batch {
+                let idx = b * batch + j;
+                yb[j] = self.fill(idx, &mut xb[j * sl..(j + 1) * sl]);
+            }
+            f(&xb, &yb);
+        }
+    }
+}
+
+/// Divide the file list evenly among `n_workers` (paper §III-B: "input
+/// file paths ... divided evenly among all worker processes"). Worker `w`
+/// (0-based) gets every file `i` with `i % n_workers == w` — round-robin,
+/// so uneven counts differ by at most one file.
+pub fn divide_files(paths: &[PathBuf], worker: usize, n_workers: usize)
+    -> Vec<PathBuf> {
+    assert!(worker < n_workers);
+    paths
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % n_workers == worker)
+        .map(|(_, p)| p.clone())
+        .collect()
+}
+
+/// Check a proposed division covers all files exactly once.
+pub fn division_is_partition(paths: &[PathBuf], n_workers: usize) -> bool {
+    let mut seen = std::collections::BTreeSet::new();
+    for w in 0..n_workers {
+        for p in divide_files(paths, w, n_workers) {
+            if !seen.insert(p) {
+                return false;
+            }
+        }
+    }
+    seen.len() == paths.len()
+}
+
+/// Helper shared by tests/benches: list shard files in a directory.
+pub fn list_train_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("train_") && n.ends_with(".mpil"))
+                .unwrap_or(false)
+        })
+        .collect();
+    files.sort();
+    Ok(files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate_shard, GeneratorConfig};
+
+    fn small_ds(n: usize, seed: u64) -> DataSet {
+        let cfg = GeneratorConfig { seq_len: 4, features: 3,
+                                    ..Default::default() };
+        let mut rng = Rng::new(seed);
+        DataSet::from_shard(generate_shard(&cfg, n, &mut rng))
+    }
+
+    #[test]
+    fn batches_cover_epoch_once() {
+        let ds = small_ds(100, 1);
+        let mut rng = Rng::new(2);
+        let mut seen = 0usize;
+        ds.for_each_batch(10, &mut rng, |x, y| {
+            assert_eq!(x.len(), 10 * 12);
+            assert_eq!(y.len(), 10);
+            seen += 10;
+        });
+        assert_eq!(seen, 100);
+    }
+
+    #[test]
+    fn partial_batch_dropped() {
+        let ds = small_ds(105, 1);
+        assert_eq!(ds.batches_per_epoch(10), 10);
+        let mut rng = Rng::new(2);
+        let mut batches = 0;
+        ds.for_each_batch(10, &mut rng, |_, _| batches += 1);
+        assert_eq!(batches, 10);
+    }
+
+    #[test]
+    fn shuffling_changes_order_not_content() {
+        let ds = small_ds(60, 3);
+        let collect = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut ys = Vec::new();
+            ds.for_each_batch(60, &mut rng, |_, y| ys.extend_from_slice(y));
+            ys
+        };
+        let a = collect(1);
+        let b = collect(2);
+        assert_ne!(a, b, "different seeds should shuffle differently");
+        let mut a2 = a.clone();
+        let mut b2 = b.clone();
+        a2.sort_unstable();
+        b2.sort_unstable();
+        assert_eq!(a2, b2, "same multiset of labels");
+    }
+
+    #[test]
+    fn ordered_batches_are_stable() {
+        let ds = small_ds(30, 4);
+        let mut first = Vec::new();
+        ds.for_each_batch_ordered(10, |_, y| first.extend_from_slice(y));
+        let mut second = Vec::new();
+        ds.for_each_batch_ordered(10, |_, y| second.extend_from_slice(y));
+        assert_eq!(first, second);
+        assert_eq!(first, ds.labels[..30].to_vec());
+    }
+
+    #[test]
+    fn division_even_and_complete() {
+        let paths: Vec<PathBuf> =
+            (0..10).map(|i| PathBuf::from(format!("f{i}"))).collect();
+        for n in 1..=10 {
+            assert!(division_is_partition(&paths, n), "n={n}");
+            let sizes: Vec<usize> = (0..n)
+                .map(|w| divide_files(&paths, w, n).len())
+                .collect();
+            let min = sizes.iter().min().unwrap();
+            let max = sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "uneven division for n={n}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn concat_multiple_files() {
+        let cfg = GeneratorConfig { seq_len: 4, features: 3,
+                                    ..Default::default() };
+        let dir = std::env::temp_dir().join("mpi_learn_loader_test");
+        let mut rng = Rng::new(9);
+        let mut paths = Vec::new();
+        for i in 0..3 {
+            let shard = generate_shard(&cfg, 20, &mut rng);
+            let p = dir.join(format!("train_{i:04}.mpil"));
+            shard.write(&p).unwrap();
+            paths.push(p);
+        }
+        let ds = DataSet::from_files(&paths).unwrap();
+        assert_eq!(ds.n_samples(), 60);
+        let listed = list_train_files(&dir).unwrap();
+        assert_eq!(listed, paths);
+    }
+}

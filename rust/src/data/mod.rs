@@ -1,0 +1,10 @@
+//! Data substrate: shard file format, synthetic HEP-like generator, and
+//! the batching loader with the paper's even file-division scheme.
+
+pub mod format;
+pub mod generator;
+pub mod loader;
+
+pub use format::{Shard, ShardError};
+pub use generator::{generate_dataset, generate_shard, GeneratorConfig};
+pub use loader::{divide_files, list_train_files, DataSet};

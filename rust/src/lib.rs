@@ -1,0 +1,37 @@
+//! # mpi-learn
+//!
+//! A Rust + JAX + Pallas reproduction of *"An MPI-Based Python Framework
+//! for Distributed Training with Keras"* (Anderson, Vlimant, Spiropulu —
+//! Caltech, 2017; the `mpi_learn` package).
+//!
+//! The paper's contribution is a lightweight coordination layer that
+//! distributes Keras model training over MPI ranks with Downpour SGD
+//! (async gradients to a master that owns the weights) or Elastic
+//! Averaging SGD. This crate reproduces that layer in Rust, with the model
+//! compute (the paper's Keras/cuDNN layer) AOT-compiled from JAX + Pallas
+//! kernels into HLO artifacts executed through PJRT — Python never runs at
+//! training time.
+//!
+//! Architecture (DESIGN.md has the full inventory):
+//! - [`mpi`] — MPI-style tagged point-to-point substrate (threads+channels
+//!   or TCP mesh).
+//! - [`runtime`] — PJRT client, artifact manifest, compiled executables.
+//! - [`data`] — shard file format, synthetic HEP dataset, batching loader,
+//!   even file division.
+//! - [`optim`] — master-side optimizers (momentum is the paper's
+//!   stale-gradient mitigation).
+//! - [`coordinator`] — the paper's system: master/worker processes,
+//!   Downpour + EASGD, sync/async, hierarchical masters, validation.
+//! - [`simulator`] — discrete-event protocol simulator for cluster-scale
+//!   sweeps (Figs 3/4, Table I).
+//! - [`tensor`], [`metrics`], [`util`] — support substrates.
+
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod mpi;
+pub mod optim;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,403 @@
+//! `mpi-learn` CLI — the launcher binary.
+//!
+//! Subcommands:
+//!   gen-data   generate the synthetic HEP benchmark dataset shards
+//!   train      run a distributed training session (Downpour / EASGD)
+//!   simulate   run the cluster-scale protocol simulator
+//!   info       list AOT artifacts and their interfaces
+//!
+//! Examples:
+//!   mpi-learn gen-data --dir data/hep --files 16 --samples 2000
+//!   mpi-learn train --model lstm --batch 100 --workers 4 --epochs 10 \
+//!       --data data/hep --validate-every 50
+//!   mpi-learn train --mode easgd --tau 10 --alpha 0.5 --workers 4 \
+//!       --data data/hep
+//!   mpi-learn simulate --workers 1,2,4,8,16,30,45,60 --preset cluster
+//!   mpi-learn info
+
+use std::path::PathBuf;
+
+use mpi_learn::coordinator::{self, Algo, Data, HierarchySpec, Mode,
+                             ModelBuilder, TrainConfig, Transport};
+use mpi_learn::data::{generate_dataset, list_train_files,
+                      GeneratorConfig};
+use mpi_learn::optim::OptimizerConfig;
+use mpi_learn::runtime::Session;
+use mpi_learn::simulator::{self, CostModel, SimConfig};
+use mpi_learn::util::cli::Args;
+
+fn main() {
+    mpi_learn::util::logging::init();
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("info") => cmd_info(&args),
+        Some("rank") => cmd_rank(&args),
+        Some("launch") => cmd_launch(&args),
+        _ => {
+            eprintln!("usage: mpi-learn \
+                       <gen-data|train|simulate|info|rank|launch> \
+                       [flags]  (see --help in source header)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn open_session(artifacts: Option<String>)
+    -> Result<Session, mpi_learn::runtime::SessionError> {
+    match artifacts {
+        Some(dir) => Session::open(&PathBuf::from(dir)),
+        None => Session::open_default(),
+    }
+}
+
+fn print_result(r: &mpi_learn::coordinator::TrainResult) {
+    let h = &r.history;
+    println!("trained in {:.2}s: {} master updates, {:.0} samples/s",
+             r.wallclock_s, h.master_updates,
+             h.throughput_samples_per_s());
+    if let Some(v) = h.validations.last() {
+        println!("final validation: loss={:.4} acc={:.4}", v.val_loss,
+                 v.val_acc);
+    }
+    print!("{}", h.validations_csv());
+}
+
+/// SPMD: run one rank of a TCP-mesh job (`mpirun`-style, one process per
+/// rank). All ranks must share the same --config and --base-port.
+fn cmd_rank(args: &Args) -> i32 {
+    let rank = match args.usize("rank", usize::MAX) {
+        Ok(r) if r != usize::MAX => r,
+        _ => return fail("rank requires --rank <i>"),
+    };
+    let base_port = args.u64("base-port", 47500).unwrap_or(47500) as u16;
+    let config = args.str_opt("config");
+    let artifacts = args.str_opt("artifacts");
+    if let Err(e) = args.finish() {
+        return fail(e);
+    }
+    let Some(config) = config else {
+        return fail("rank requires --config <job.json>");
+    };
+    let job = match mpi_learn::coordinator::JobConfig::from_file(
+        &PathBuf::from(config)) {
+        Ok(j) => j,
+        Err(e) => return fail(e),
+    };
+    let session = match open_session(artifacts) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    match mpi_learn::coordinator::run_rank(&session, &job.train,
+                                           &job.data, rank, base_port) {
+        Ok(Some(result)) => {
+            print_result(&result);
+            0
+        }
+        Ok(None) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+/// Launcher: spawn one OS process per rank (this binary, `rank`
+/// subcommand) and wait — the `mpirun` of this framework.
+fn cmd_launch(args: &Args) -> i32 {
+    let base_port = args.u64("base-port", 47500).unwrap_or(47500) as u16;
+    let config = args.str_opt("config");
+    let artifacts = args.str_opt("artifacts");
+    if let Err(e) = args.finish() {
+        return fail(e);
+    }
+    let Some(config) = config else {
+        return fail("launch requires --config <job.json>");
+    };
+    let job = match mpi_learn::coordinator::JobConfig::from_file(
+        &PathBuf::from(&config)) {
+        Ok(j) => j,
+        Err(e) => return fail(e),
+    };
+    let size = match &job.train.hierarchy {
+        Some(h) => h.world_size(),
+        None => job.train.n_workers + 1,
+    };
+    let exe = match std::env::current_exe() {
+        Ok(e) => e,
+        Err(e) => return fail(e),
+    };
+    println!("launching {size} rank processes (base port {base_port})");
+    let mut children = Vec::new();
+    for rank in 0..size {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("rank")
+            .arg("--rank").arg(rank.to_string())
+            .arg("--base-port").arg(base_port.to_string())
+            .arg("--config").arg(&config);
+        if let Some(a) = &artifacts {
+            cmd.arg("--artifacts").arg(a);
+        }
+        match cmd.spawn() {
+            Ok(child) => children.push((rank, child)),
+            Err(e) => return fail(format!("spawn rank {rank}: {e}")),
+        }
+    }
+    let mut code = 0;
+    for (rank, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                eprintln!("rank {rank} exited with {status}");
+                code = 1;
+            }
+            Err(e) => {
+                eprintln!("rank {rank} wait failed: {e}");
+                code = 1;
+            }
+        }
+    }
+    code
+}
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {e}");
+    1
+}
+
+fn cmd_gen_data(args: &Args) -> i32 {
+    let dir = PathBuf::from(args.str("dir", "data/hep"));
+    let files = args.usize("files", 16).unwrap_or(16);
+    let samples = args.usize("samples", 2000).unwrap_or(2000);
+    let val_samples = args.usize("val-samples", 2000).unwrap_or(2000);
+    let cfg = GeneratorConfig {
+        seed: args.u64("seed", 2017).unwrap_or(2017),
+        separation: args.f64("separation", 0.6).unwrap_or(0.6) as f32,
+        ..Default::default()
+    };
+    if let Err(e) = args.finish() {
+        return fail(e);
+    }
+    match generate_dataset(&cfg, &dir, files, samples, val_samples) {
+        Ok((train, val)) => {
+            println!("wrote {} train shards + {} to {}", train.len(),
+                     val.display(), dir.display());
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn parse_algo(args: &Args) -> Result<Algo, String> {
+    let mut algo = Algo {
+        batch_size: args.usize("batch", 100).map_err(|e| e.to_string())?,
+        epochs: args.usize("epochs", 10).map_err(|e| e.to_string())?
+            as u32,
+        validate_every: args.usize("validate-every", 0)
+            .map_err(|e| e.to_string())? as u64,
+        max_val_batches: args.usize("max-val-batches", 0)
+            .map_err(|e| e.to_string())?,
+        ..Algo::default()
+    };
+    let lr = args.f64("lr", 0.05).map_err(|e| e.to_string())? as f32;
+    let momentum = args.f64("momentum", 0.9).map_err(|e| e.to_string())?
+        as f32;
+    algo.optimizer = match args.str("optimizer", "momentum").as_str() {
+        "sgd" => OptimizerConfig::Sgd { lr },
+        "momentum" => OptimizerConfig::Momentum { lr, momentum,
+                                                  nesterov: false },
+        "adam" => OptimizerConfig::Adam { lr, beta1: 0.9, beta2: 0.999,
+                                          eps: 1e-8 },
+        "rmsprop" => OptimizerConfig::RmsProp { lr, rho: 0.9, eps: 1e-7 },
+        "adadelta" => OptimizerConfig::AdaDelta { rho: 0.95, eps: 1e-6 },
+        other => return Err(format!("unknown optimizer '{other}'")),
+    };
+    algo.mode = match args.str("mode", "downpour").as_str() {
+        "downpour" => Mode::Downpour { sync: args.bool("sync") },
+        "easgd" => Mode::Easgd {
+            tau: args.usize("tau", 10).map_err(|e| e.to_string())? as u32,
+            alpha: args.f64("alpha", 0.5).map_err(|e| e.to_string())?
+                as f32,
+            worker_optimizer: OptimizerConfig::Sgd { lr },
+        },
+        other => return Err(format!("unknown mode '{other}'")),
+    };
+    Ok(algo)
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    // config-file driven path: `train --config job.json`
+    if let Some(config) = args.str_opt("config") {
+        let direct = args.bool("direct");
+        let artifacts = args.str_opt("artifacts");
+        if let Err(e) = args.finish() {
+            return fail(e);
+        }
+        let job = match mpi_learn::coordinator::JobConfig::from_file(
+            &PathBuf::from(config)) {
+            Ok(j) => j,
+            Err(e) => return fail(e),
+        };
+        let session = match open_session(artifacts) {
+            Ok(s) => s,
+            Err(e) => return fail(e),
+        };
+        let result = if direct {
+            coordinator::train_direct(&session, &job.train, &job.data)
+        } else {
+            coordinator::train(&session, &job.train, &job.data)
+        };
+        return match result {
+            Ok(r) => {
+                print_result(&r);
+                0
+            }
+            Err(e) => fail(e),
+        };
+    }
+
+    let model = args.str("model", "lstm");
+    let workers = args.usize("workers", 4).unwrap_or(4);
+    let algo = match parse_algo(args) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    let data_dir = args.str_opt("data");
+    let direct = args.bool("direct");
+    let tcp = args.bool("tcp");
+    let groups = args.usize("groups", 0).unwrap_or(0);
+    let sync_every = args.usize("sync-every", 10).unwrap_or(10) as u64;
+    let seed = args.u64("seed", 2017).unwrap_or(2017);
+    let artifacts = args.str_opt("artifacts");
+    if let Err(e) = args.finish() {
+        return fail(e);
+    }
+
+    let data = match data_dir {
+        Some(dir) => {
+            let dir = PathBuf::from(dir);
+            let train = match list_train_files(&dir) {
+                Ok(t) if !t.is_empty() => t,
+                Ok(_) => return fail(format!(
+                    "no train_*.mpil shards in {} (run gen-data)",
+                    dir.display())),
+                Err(e) => return fail(e),
+            };
+            Data::Files { train, val: dir.join("val.mpil") }
+        }
+        None => Data::Synthetic {
+            gen: GeneratorConfig::default(),
+            samples_per_worker: 2000,
+            val_samples: 1000,
+        },
+    };
+
+    let mut cfg = TrainConfig {
+        builder: ModelBuilder::new(&model, algo.batch_size),
+        algo,
+        n_workers: workers,
+        seed,
+        transport: if tcp { Transport::Tcp { base_port: 47000 } }
+                   else { Transport::Inproc },
+        hierarchy: None,
+    };
+    if groups > 0 {
+        cfg.hierarchy = Some(HierarchySpec {
+            n_groups: groups,
+            workers_per_group: workers / groups.max(1),
+            sync_every,
+        });
+    }
+
+    let session = match artifacts {
+        Some(dir) => Session::open(&PathBuf::from(dir)),
+        None => Session::open_default(),
+    };
+    let session = match session {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+
+    let result = if direct {
+        coordinator::train_direct(&session, &cfg, &data)
+    } else {
+        coordinator::train(&session, &cfg, &data)
+    };
+    match result {
+        Ok(r) => {
+            let h = &r.history;
+            println!("trained in {:.2}s: {} master updates, \
+                      {:.0} samples/s",
+                     r.wallclock_s, h.master_updates,
+                     h.throughput_samples_per_s());
+            if let Some(v) = h.validations.last() {
+                println!("final validation: loss={:.4} acc={:.4}",
+                         v.val_loss, v.val_acc);
+            }
+            print!("{}", h.validations_csv());
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let worker_counts = args
+        .usize_list("workers", &[1, 2, 4, 8, 16, 30, 45, 60])
+        .unwrap_or_default();
+    let preset = args.str("preset", "cluster");
+    let batch = args.usize("batch", 100).unwrap_or(100);
+    let total = args.u64("total-samples", 950_000).unwrap_or(950_000);
+    let epochs = args.usize("epochs", 10).unwrap_or(10) as u32;
+    let validate_every = args.usize("validate-every", 0).unwrap_or(0)
+        as u64;
+    let n_params = args.usize("params", 3023).unwrap_or(3023);
+    if let Err(e) = args.finish() {
+        return fail(e);
+    }
+    let cost = match preset.as_str() {
+        "shared" => CostModel::shared_memory(n_params),
+        "cluster" => CostModel::cluster(n_params),
+        other => return fail(format!("unknown preset '{other}'")),
+    };
+    let base = SimConfig {
+        n_workers: 1,
+        total_samples: total,
+        batch,
+        epochs,
+        validate_every,
+        sync: false,
+    };
+    println!("workers,speedup");
+    for (w, s) in simulator::speedup_curve(&cost, &base, &worker_counts,
+                                           2017) {
+        println!("{w},{s:.2}");
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let artifacts = args.str_opt("artifacts");
+    if let Err(e) = args.finish() {
+        return fail(e);
+    }
+    let session = match artifacts {
+        Some(dir) => Session::open(&PathBuf::from(dir)),
+        None => Session::open_default(),
+    };
+    match session {
+        Ok(s) => {
+            println!("platform: {}", s.client.platform());
+            for m in &s.manifest.models {
+                println!(
+                    "{:20} model={:12} batch={:5} params={:8} \
+                     x=[{},{},{}]",
+                    m.key, m.model, m.batch, m.param_count, m.batch,
+                    m.seq_len, m.features
+                );
+            }
+            0
+        }
+        Err(e) => fail(e),
+    }
+}

@@ -1,0 +1,171 @@
+//! Training metrics: history records, timers, throughput accounting.
+
+use std::time::Instant;
+
+/// One validation round's results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ValRecord {
+    /// Seconds since training start.
+    pub t_s: f64,
+    /// Master update count when validation ran.
+    pub update: u64,
+    pub val_loss: f32,
+    pub val_acc: f32,
+}
+
+/// One worker's final report.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerReport {
+    pub rank: usize,
+    pub epochs: u32,
+    pub batches: u64,
+    pub samples: u64,
+    pub last_train_loss: f32,
+    pub grad_time_s: f64,
+    pub comm_wait_s: f64,
+}
+
+/// Full history of one training run — what benches/examples serialize.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub validations: Vec<ValRecord>,
+    pub workers: Vec<WorkerReport>,
+    pub master_updates: u64,
+    pub master_update_time_s: f64,
+    pub master_idle_time_s: f64,
+    pub wallclock_s: f64,
+    pub train_losses: Vec<(u64, f32)>,
+    /// Mean gradient staleness in master updates (the Fig 2 mechanism:
+    /// ~W-1 for W async workers).
+    pub staleness_mean: f64,
+    pub staleness_max: u64,
+}
+
+impl History {
+    pub fn final_val_acc(&self) -> Option<f32> {
+        self.validations.last().map(|v| v.val_acc)
+    }
+
+    pub fn best_val_acc(&self) -> Option<f32> {
+        self.validations
+            .iter()
+            .map(|v| v.val_acc)
+            .max_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    pub fn total_samples(&self) -> u64 {
+        self.workers.iter().map(|w| w.samples).sum()
+    }
+
+    pub fn throughput_samples_per_s(&self) -> f64 {
+        if self.wallclock_s > 0.0 {
+            self.total_samples() as f64 / self.wallclock_s
+        } else {
+            0.0
+        }
+    }
+
+    /// CSV of the validation curve (plots for Fig 2-style output).
+    pub fn validations_csv(&self) -> String {
+        let mut out = String::from("t_s,update,val_loss,val_acc\n");
+        for v in &self.validations {
+            out.push_str(&format!("{:.3},{},{:.5},{:.4}\n", v.t_s,
+                                  v.update, v.val_loss, v.val_acc));
+        }
+        out
+    }
+
+    /// CSV of the training-loss curve (end-to-end driver logging).
+    pub fn train_loss_csv(&self) -> String {
+        let mut out = String::from("update,train_loss\n");
+        for (u, l) in &self.train_losses {
+            out.push_str(&format!("{u},{l:.5}\n"));
+        }
+        out
+    }
+}
+
+/// Accumulating stopwatch for hot-path segments.
+#[derive(Debug)]
+pub struct Stopwatch {
+    total: f64,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { total: 0.0, started: None }
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.total
+    }
+
+    /// Time one closure and accumulate.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_accessors() {
+        let mut h = History::default();
+        assert_eq!(h.final_val_acc(), None);
+        h.validations.push(ValRecord { t_s: 1.0, update: 10,
+                                       val_loss: 1.0, val_acc: 0.5 });
+        h.validations.push(ValRecord { t_s: 2.0, update: 20,
+                                       val_loss: 0.8, val_acc: 0.7 });
+        h.validations.push(ValRecord { t_s: 3.0, update: 30,
+                                       val_loss: 0.9, val_acc: 0.6 });
+        assert_eq!(h.final_val_acc(), Some(0.6));
+        assert_eq!(h.best_val_acc(), Some(0.7));
+        let csv = h.validations_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("t_s,"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut h = History::default();
+        h.workers.push(WorkerReport { samples: 500, ..Default::default() });
+        h.workers.push(WorkerReport { samples: 300, ..Default::default() });
+        h.wallclock_s = 4.0;
+        assert_eq!(h.total_samples(), 800);
+        assert!((h.throughput_samples_per_s() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(
+            std::time::Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(
+            std::time::Duration::from_millis(5)));
+        assert!(sw.total_s() >= 0.009, "{}", sw.total_s());
+        // stop without start is a no-op
+        sw.stop();
+    }
+}

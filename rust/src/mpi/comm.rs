@@ -1,0 +1,154 @@
+//! Communicator: the MPI-world abstraction over pluggable transports.
+//!
+//! Semantics mirror what `mpi_learn` uses from mpi4py:
+//! - a world of `size` ranks,
+//! - tagged point-to-point `send` (non-blocking, buffered — MPI_Isend
+//!   flavor),
+//! - blocking `recv` from ANY_SOURCE, plus `try_recv` / `recv_timeout`,
+//! - in-order delivery per (sender, receiver) pair.
+//!
+//! Two transports implement the same interface: [`super::transport::inproc`]
+//! (threads + channels: the shared-memory single-node case of the paper's
+//! Supermicro server) and [`super::transport::tcp`] (socket mesh: the
+//! Cooley-cluster case).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::Duration;
+
+use super::message::{Envelope, Payload, Rank, Tag};
+
+#[derive(Debug, thiserror::Error)]
+pub enum CommError {
+    #[error("send to rank {0} failed: peer disconnected")]
+    SendFailed(Rank),
+    #[error("recv failed: all peers disconnected")]
+    Disconnected,
+    #[error("recv timed out after {0:?}")]
+    Timeout(Duration),
+    #[error("invalid rank {rank} (world size {size})")]
+    InvalidRank { rank: Rank, size: usize },
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Sending half — transport-specific.
+pub(super) enum Sender {
+    Inproc(Vec<Option<std::sync::mpsc::Sender<Envelope>>>),
+    Tcp(super::transport::tcp::TcpSenders),
+}
+
+/// One rank's endpoint in the world.
+pub struct Comm {
+    rank: Rank,
+    size: usize,
+    pub(super) tx: Sender,
+    pub(super) rx: Receiver<Envelope>,
+    /// Bytes sent/received — exposed for the comm microbench + simulator
+    /// calibration.
+    pub(super) bytes_sent: std::cell::Cell<u64>,
+    pub(super) bytes_recv: std::cell::Cell<u64>,
+}
+
+impl Comm {
+    pub(super) fn new(rank: Rank, size: usize, tx: Sender,
+                      rx: Receiver<Envelope>) -> Self {
+        Self {
+            rank,
+            size,
+            tx,
+            rx,
+            bytes_sent: std::cell::Cell::new(0),
+            bytes_recv: std::cell::Cell::new(0),
+        }
+    }
+
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.get()
+    }
+
+    pub fn bytes_recv(&self) -> u64 {
+        self.bytes_recv.get()
+    }
+
+    /// Buffered non-blocking send (MPI_Isend flavor).
+    pub fn send(&self, to: Rank, tag: Tag, payload: Payload)
+        -> Result<(), CommError> {
+        if to >= self.size {
+            return Err(CommError::InvalidRank { rank: to, size: self.size });
+        }
+        self.bytes_sent.set(self.bytes_sent.get() + payload.nbytes() as u64);
+        match &self.tx {
+            Sender::Inproc(peers) => {
+                let ch = peers[to]
+                    .as_ref()
+                    .expect("send to self not supported");
+                ch.send(Envelope { src: self.rank, tag, payload })
+                    .map_err(|_| CommError::SendFailed(to))
+            }
+            Sender::Tcp(senders) => senders.send(self.rank, to, tag,
+                                                 &payload),
+        }
+    }
+
+    /// Blocking receive from ANY_SOURCE.
+    pub fn recv(&self) -> Result<Envelope, CommError> {
+        let env = self.rx.recv().map_err(|_| CommError::Disconnected)?;
+        self.bytes_recv
+            .set(self.bytes_recv.get() + env.payload.nbytes() as u64);
+        Ok(env)
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Result<Option<Envelope>, CommError> {
+        match self.rx.try_recv() {
+            Ok(env) => {
+                self.bytes_recv
+                    .set(self.bytes_recv.get() + env.payload.nbytes() as u64);
+                Ok(Some(env))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(CommError::Disconnected),
+        }
+    }
+
+    pub fn recv_timeout(&self, dur: Duration) -> Result<Envelope, CommError> {
+        match self.rx.recv_timeout(dur) {
+            Ok(env) => {
+                self.bytes_recv
+                    .set(self.bytes_recv.get() + env.payload.nbytes() as u64);
+                Ok(env)
+            }
+            Err(RecvTimeoutError::Timeout) => Err(CommError::Timeout(dur)),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(CommError::Disconnected)
+            }
+        }
+    }
+
+    /// Blocking receive of a specific tag; other tags are delivered later
+    /// (simple out-of-band queue, like MPI tag matching).
+    ///
+    /// NOTE: only used in tests/benches — the training protocol is designed
+    /// so each role's state machine consumes every tag it can receive.
+    pub fn recv_tag(&self, want: Tag, stash: &mut Vec<Envelope>)
+        -> Result<Envelope, CommError> {
+        if let Some(i) = stash.iter().position(|e| e.tag == want) {
+            return Ok(stash.remove(i));
+        }
+        loop {
+            let env = self.recv()?;
+            if env.tag == want {
+                return Ok(env);
+            }
+            stash.push(env);
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! Message types and wire encoding for the MPI-style substrate.
+//!
+//! `mpi_learn` drives its whole protocol with tagged point-to-point
+//! messages (mpi4py tags like `gradients`, `weights`, `train`, `exit`).
+//! We mirror that: an [`Envelope`] is (source rank, [`Tag`], [`Payload`]).
+//!
+//! Payloads have a compact binary wire format (used verbatim by the TCP
+//! transport; the in-process transport passes the enum directly):
+//!
+//! ```text
+//! [u32 tag] [u32 kind] [u64 nbytes] [payload bytes...]
+//! ```
+//! Float payloads are little-endian f32; the `Stats` payload is a small
+//! fixed struct. CRC is delegated to TCP's checksum; the frame length is
+//! validated on decode.
+
+pub type Rank = usize;
+
+/// Protocol tags (superset of mpi_learn's).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u32)]
+pub enum Tag {
+    /// worker -> master: ready to train, send me initial weights
+    Ready = 0,
+    /// worker -> master: gradient payload (Downpour)
+    Gradients = 1,
+    /// master -> worker: full weight payload
+    Weights = 2,
+    /// worker -> master: EASGD weight exchange request (payload = worker weights)
+    ExchangeWeights = 3,
+    /// master -> worker: EASGD center variable
+    Center = 4,
+    /// master -> worker: stop training
+    Exit = 5,
+    /// worker -> master: per-epoch timing/progress stats
+    TrainStats = 6,
+    /// master -> parent master: hierarchical aggregated gradient
+    AggGradients = 7,
+    /// any -> any: liveness probe (comm microbench)
+    Ping = 8,
+}
+
+impl Tag {
+    pub fn from_u32(v: u32) -> Option<Tag> {
+        Some(match v {
+            0 => Tag::Ready,
+            1 => Tag::Gradients,
+            2 => Tag::Weights,
+            3 => Tag::ExchangeWeights,
+            4 => Tag::Center,
+            5 => Tag::Exit,
+            6 => Tag::TrainStats,
+            7 => Tag::AggGradients,
+            8 => Tag::Ping,
+            _ => return None,
+        })
+    }
+}
+
+/// Worker progress statistics piggybacked to the master.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkerStats {
+    pub epoch: u32,
+    pub batches_done: u64,
+    pub samples_done: u64,
+    pub train_loss: f32,
+    pub grad_time_s: f64,
+    pub comm_wait_s: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    Empty,
+    /// Flat f32 buffer (weights or center) + the sender's model step.
+    /// `Arc` so the master can snapshot once and fan out to many workers
+    /// (sync barrier, handshakes) without re-copying megabyte payloads —
+    /// the in-process transport then moves only the refcount
+    /// (perf pass iter 2, EXPERIMENTS.md §Perf).
+    Floats { step: u64, data: std::sync::Arc<Vec<f32>> },
+    Stats(WorkerStats),
+    /// A gradient: the worker's base weight step (for staleness
+    /// accounting) + the batch training loss + the flat gradient.
+    Grad { step: u64, loss: f32, data: Vec<f32> },
+}
+
+impl Payload {
+    pub fn floats(step: u64, data: Vec<f32>) -> Self {
+        Payload::Floats { step, data: std::sync::Arc::new(data) }
+    }
+
+    /// Fan-out constructor: share an existing snapshot.
+    pub fn floats_shared(step: u64, data: std::sync::Arc<Vec<f32>>)
+        -> Self {
+        Payload::Floats { step, data }
+    }
+
+    pub fn grad(step: u64, loss: f32, data: Vec<f32>) -> Self {
+        Payload::Grad { step, loss, data }
+    }
+
+    fn kind(&self) -> u32 {
+        match self {
+            Payload::Empty => 0,
+            Payload::Floats { .. } => 1,
+            Payload::Stats(_) => 2,
+            Payload::Grad { .. } => 3,
+        }
+    }
+
+    /// Approximate wire size (used by the simulator's cost model and the
+    /// comm microbench).
+    pub fn nbytes(&self) -> usize {
+        16 + match self {
+            Payload::Empty => 0,
+            Payload::Floats { data, .. } => 8 + data.len() * 4,
+            Payload::Stats(_) => 40,
+            Payload::Grad { data, .. } => 12 + data.len() * 4,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    pub src: Rank,
+    pub tag: Tag,
+    pub payload: Payload,
+}
+
+// ---------------------------------------------------------------------------
+// wire encoding
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("frame truncated: need {need} bytes, have {have}")]
+    Truncated { need: usize, have: usize },
+    #[error("unknown tag {0}")]
+    UnknownTag(u32),
+    #[error("unknown payload kind {0}")]
+    UnknownKind(u32),
+}
+
+/// Encode (tag, payload) into a frame body (the TCP transport adds the
+/// outer [u32 src][u64 len] header).
+pub fn encode(tag: Tag, payload: &Payload) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.nbytes());
+    out.extend_from_slice(&(tag as u32).to_le_bytes());
+    out.extend_from_slice(&payload.kind().to_le_bytes());
+    match payload {
+        Payload::Empty => {
+            out.extend_from_slice(&0u64.to_le_bytes());
+        }
+        Payload::Floats { step, data } => {
+            out.extend_from_slice(&((8 + data.len() * 4) as u64)
+                .to_le_bytes());
+            out.extend_from_slice(&step.to_le_bytes());
+            // bulk little-endian f32 copy
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    data.as_ptr() as *const u8, data.len() * 4)
+            };
+            out.extend_from_slice(bytes);
+        }
+        Payload::Stats(s) => {
+            out.extend_from_slice(&40u64.to_le_bytes());
+            out.extend_from_slice(&s.epoch.to_le_bytes());
+            out.extend_from_slice(&s.train_loss.to_le_bytes());
+            out.extend_from_slice(&s.batches_done.to_le_bytes());
+            out.extend_from_slice(&s.samples_done.to_le_bytes());
+            out.extend_from_slice(&s.grad_time_s.to_le_bytes());
+            out.extend_from_slice(&s.comm_wait_s.to_le_bytes());
+        }
+        Payload::Grad { step, loss, data } => {
+            out.extend_from_slice(&((12 + data.len() * 4) as u64)
+                .to_le_bytes());
+            out.extend_from_slice(&step.to_le_bytes());
+            out.extend_from_slice(&loss.to_le_bytes());
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    data.as_ptr() as *const u8, data.len() * 4)
+            };
+            out.extend_from_slice(bytes);
+        }
+    }
+    out
+}
+
+pub fn decode(buf: &[u8]) -> Result<(Tag, Payload), WireError> {
+    let need = 16usize;
+    if buf.len() < need {
+        return Err(WireError::Truncated { need, have: buf.len() });
+    }
+    let tag_v = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    let kind = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let nbytes = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    if buf.len() < 16 + nbytes {
+        return Err(WireError::Truncated { need: 16 + nbytes,
+                                          have: buf.len() });
+    }
+    let tag = Tag::from_u32(tag_v).ok_or(WireError::UnknownTag(tag_v))?;
+    let body = &buf[16..16 + nbytes];
+    let payload = match kind {
+        0 => Payload::Empty,
+        1 => {
+            if body.len() < 8 {
+                return Err(WireError::Truncated { need: 8,
+                                                  have: body.len() });
+            }
+            let step = u64::from_le_bytes(body[0..8].try_into().unwrap());
+            let data: Vec<f32> = body[8..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Payload::Floats { step, data: std::sync::Arc::new(data) }
+        }
+        2 => {
+            if body.len() < 40 {
+                return Err(WireError::Truncated { need: 40,
+                                                  have: body.len() });
+            }
+            Payload::Stats(WorkerStats {
+                epoch: u32::from_le_bytes(body[0..4].try_into().unwrap()),
+                train_loss: f32::from_le_bytes(body[4..8].try_into()
+                    .unwrap()),
+                batches_done: u64::from_le_bytes(body[8..16].try_into()
+                    .unwrap()),
+                samples_done: u64::from_le_bytes(body[16..24].try_into()
+                    .unwrap()),
+                grad_time_s: f64::from_le_bytes(body[24..32].try_into()
+                    .unwrap()),
+                comm_wait_s: f64::from_le_bytes(body[32..40].try_into()
+                    .unwrap()),
+            })
+        }
+        3 => {
+            if body.len() < 12 {
+                return Err(WireError::Truncated { need: 12,
+                                                  have: body.len() });
+            }
+            let step = u64::from_le_bytes(body[0..8].try_into().unwrap());
+            let loss = f32::from_le_bytes(body[8..12].try_into().unwrap());
+            let data = body[12..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Payload::Grad { step, loss, data }
+        }
+        k => return Err(WireError::UnknownKind(k)),
+    };
+    Ok((tag, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_empty() {
+        let buf = encode(Tag::Exit, &Payload::Empty);
+        let (tag, p) = decode(&buf).unwrap();
+        assert_eq!(tag, Tag::Exit);
+        assert_eq!(p, Payload::Empty);
+    }
+
+    #[test]
+    fn roundtrip_floats() {
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        let p = Payload::floats(42, data.clone());
+        let buf = encode(Tag::Gradients, &p);
+        let (tag, q) = decode(&buf).unwrap();
+        assert_eq!(tag, Tag::Gradients);
+        assert_eq!(q, p);
+        assert_eq!(buf.len(), 16 + 8 + 4000);
+    }
+
+    #[test]
+    fn roundtrip_stats() {
+        let s = WorkerStats {
+            epoch: 3,
+            batches_done: 950,
+            samples_done: 95_000,
+            train_loss: 0.72,
+            grad_time_s: 12.5,
+            comm_wait_s: 1.25,
+        };
+        let buf = encode(Tag::TrainStats, &Payload::Stats(s));
+        let (tag, q) = decode(&buf).unwrap();
+        assert_eq!(tag, Tag::TrainStats);
+        assert_eq!(q, Payload::Stats(s));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let buf = encode(Tag::Gradients, &Payload::floats(0, vec![1.0; 8]));
+        for cut in [0, 8, 15, 20, buf.len() - 1] {
+            assert!(decode(&buf[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        let mut buf = encode(Tag::Ping, &Payload::Empty);
+        buf[0] = 0xFF;
+        assert!(matches!(decode(&buf), Err(WireError::UnknownTag(_))));
+    }
+
+    #[test]
+    fn nbytes_matches_encoding() {
+        for p in [
+            Payload::Empty,
+            Payload::floats(1, vec![0.5; 123]),
+            Payload::Stats(WorkerStats::default()),
+            Payload::grad(2, 0.5, vec![1.0; 17]),
+        ] {
+            assert_eq!(encode(Tag::Ping, &p).len(), p.nbytes());
+        }
+    }
+
+    #[test]
+    fn roundtrip_grad() {
+        let p = Payload::grad(99, 1.25, vec![0.5, -0.5, 2.0]);
+        let buf = encode(Tag::Gradients, &p);
+        let (tag, q) = decode(&buf).unwrap();
+        assert_eq!(tag, Tag::Gradients);
+        assert_eq!(q, p);
+    }
+}

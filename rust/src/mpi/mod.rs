@@ -1,0 +1,31 @@
+//! MPI-style message-passing substrate (the paper's OpenMPI/mpi4py
+//! substitute).
+//!
+//! `mpi_learn` drives training entirely with tagged point-to-point
+//! messages between a master rank and worker ranks. This module provides
+//! the same primitives over two transports:
+//!
+//! - [`transport::inproc`] — threads + channels, the paper's shared-memory
+//!   single-node case;
+//! - [`transport::tcp`] — localhost socket mesh with the same framing a
+//!   multi-node deployment would use.
+//!
+//! See DESIGN.md §Substitutions for the fidelity argument.
+
+pub mod comm;
+pub mod message;
+pub mod transport;
+
+pub use comm::{Comm, CommError};
+pub use message::{Envelope, Payload, Rank, Tag, WorkerStats};
+
+/// Build an in-process world of `n` ranks (rank 0 first).
+pub fn inproc_world(n: usize) -> Vec<Comm> {
+    transport::inproc::world(n)
+}
+
+/// Build a localhost TCP world of `n` ranks.
+pub fn tcp_world(n: usize, base_port: u16)
+    -> Result<Vec<Comm>, CommError> {
+    transport::tcp::world(n, base_port)
+}

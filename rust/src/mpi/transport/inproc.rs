@@ -1,0 +1,137 @@
+//! In-process transport: one OS thread per rank, mpsc channels as links.
+//!
+//! This is the shared-memory case of the paper's evaluation (the 8-GPU
+//! Supermicro server, where "communication between processes is
+//! accomplished via shared memory"). A `World::inproc(n)` hands back `n`
+//! [`Comm`] endpoints to move into rank threads.
+
+use std::sync::mpsc;
+
+use crate::mpi::comm::{Comm, Sender};
+use crate::mpi::message::Envelope;
+
+/// Build an `n`-rank world; element `i` is rank `i`'s endpoint.
+pub fn world(n: usize) -> Vec<Comm> {
+    assert!(n >= 1, "world needs at least one rank");
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| {
+            // rank i gets senders to every peer except itself
+            let peers: Vec<Option<mpsc::Sender<Envelope>>> = txs
+                .iter()
+                .enumerate()
+                .map(|(j, tx)| if j == rank { None } else {
+                    Some(tx.clone())
+                })
+                .collect();
+            Comm::new(rank, n, Sender::Inproc(peers), rx)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::message::{Payload, Tag};
+    use std::time::Duration;
+
+    #[test]
+    fn two_rank_roundtrip() {
+        let mut w = world(2);
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        c0.send(1, Tag::Ping, Payload::floats(7, vec![1.0, 2.0])).unwrap();
+        let env = c1.recv().unwrap();
+        assert_eq!(env.src, 0);
+        assert_eq!(env.tag, Tag::Ping);
+        assert_eq!(env.payload, Payload::floats(7, vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn per_pair_ordering_preserved() {
+        let mut w = world(2);
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        for i in 0..100u64 {
+            c0.send(1, Tag::Gradients, Payload::floats(i, vec![]))
+                .unwrap();
+        }
+        for i in 0..100u64 {
+            match c1.recv().unwrap().payload {
+                Payload::Floats { step, .. } => assert_eq!(step, i),
+                p => panic!("unexpected {p:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn any_source_recv_across_threads() {
+        let mut w = world(4);
+        let master = w.remove(0);
+        let handles: Vec<_> = w
+            .into_iter()
+            .map(|c| {
+                std::thread::spawn(move || {
+                    c.send(0, Tag::Ready, Payload::Empty).unwrap();
+                })
+            })
+            .collect();
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..3 {
+            seen.insert(master.recv().unwrap().src);
+        }
+        assert_eq!(seen, [1, 2, 3].into_iter().collect());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn try_recv_empty_then_delivered() {
+        let mut w = world(2);
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        assert!(c1.try_recv().unwrap().is_none());
+        c0.send(1, Tag::Exit, Payload::Empty).unwrap();
+        // channel delivery is immediate for inproc
+        assert!(c1.try_recv().unwrap().is_some());
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let mut w = world(2);
+        let c1 = w.pop().unwrap();
+        let _c0 = w.pop().unwrap();
+        let err = c1.recv_timeout(Duration::from_millis(20));
+        assert!(matches!(err,
+            Err(crate::mpi::comm::CommError::Timeout(_))));
+    }
+
+    #[test]
+    fn invalid_rank_rejected() {
+        let mut w = world(2);
+        let _c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        assert!(c0.send(5, Tag::Ping, Payload::Empty).is_err());
+    }
+
+    #[test]
+    fn byte_counters_track_payload() {
+        let mut w = world(2);
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        let p = Payload::floats(0, vec![0.0; 100]);
+        let n = p.nbytes() as u64;
+        c0.send(1, Tag::Weights, p).unwrap();
+        c1.recv().unwrap();
+        assert_eq!(c0.bytes_sent(), n);
+        assert_eq!(c1.bytes_recv(), n);
+    }
+}

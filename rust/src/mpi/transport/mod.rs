@@ -1,0 +1,4 @@
+//! Pluggable transports for the MPI-style substrate.
+
+pub mod inproc;
+pub mod tcp;

@@ -1,0 +1,208 @@
+//! TCP transport: a full socket mesh, the cluster analogue.
+//!
+//! Frame format on each stream: `[u32 src][u64 body_len][body]` where the
+//! body is `message::encode(tag, payload)`. A background reader thread per
+//! incoming connection decodes frames into the rank's mpsc queue, giving
+//! the exact same `Comm` semantics as the in-process transport.
+//!
+//! Mesh bring-up: every rank listens on `base_port + rank` and dials every
+//! higher rank once (lower rank dials, higher accepts), so each unordered
+//! pair shares one duplex stream.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::mpi::comm::{Comm, CommError, Sender};
+use crate::mpi::message::{self, Envelope, Payload, Rank, Tag};
+
+/// Writer half of the mesh: rank -> shared stream.
+pub struct TcpSenders {
+    streams: BTreeMap<Rank, Arc<Mutex<TcpStream>>>,
+}
+
+impl TcpSenders {
+    pub(crate) fn send(&self, src: Rank, to: Rank, tag: Tag,
+                       payload: &Payload) -> Result<(), CommError> {
+        let stream = self
+            .streams
+            .get(&to)
+            .ok_or(CommError::SendFailed(to))?;
+        let body = message::encode(tag, payload);
+        let mut guard = stream.lock().expect("tcp stream poisoned");
+        let mut frame = Vec::with_capacity(12 + body.len());
+        frame.extend_from_slice(&(src as u32).to_le_bytes());
+        frame.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        frame.extend_from_slice(&body);
+        guard
+            .write_all(&frame)
+            .map_err(|_| CommError::SendFailed(to))?;
+        Ok(())
+    }
+}
+
+fn spawn_reader(stream: TcpStream, queue: mpsc::Sender<Envelope>) {
+    std::thread::spawn(move || {
+        let mut stream = stream;
+        let mut header = [0u8; 12];
+        loop {
+            if stream.read_exact(&mut header).is_err() {
+                return; // peer closed
+            }
+            let src = u32::from_le_bytes(header[0..4].try_into().unwrap())
+                as Rank;
+            let len = u64::from_le_bytes(header[4..12].try_into().unwrap())
+                as usize;
+            let mut body = vec![0u8; len];
+            if stream.read_exact(&mut body).is_err() {
+                return;
+            }
+            match message::decode(&body) {
+                Ok((tag, payload)) => {
+                    if queue.send(Envelope { src, tag, payload }).is_err() {
+                        return; // local endpoint dropped
+                    }
+                }
+                Err(e) => {
+                    log::error!("tcp reader: bad frame from {src}: {e}");
+                    return;
+                }
+            }
+        }
+    });
+}
+
+/// Bring up rank `rank` of an `n`-rank mesh on localhost.
+///
+/// All ranks must call this concurrently (threads or processes).
+pub fn endpoint(rank: Rank, n: usize, base_port: u16)
+    -> Result<Comm, CommError> {
+    let listener = TcpListener::bind(("127.0.0.1", base_port + rank as u16))?;
+    let (queue_tx, queue_rx) = mpsc::channel::<Envelope>();
+    let mut streams: BTreeMap<Rank, Arc<Mutex<TcpStream>>> = BTreeMap::new();
+
+    // Lower ranks dial higher ranks; a rank accepts `rank` connections
+    // (from every lower rank) and dials `n - rank - 1` (to every higher).
+    let accept_count = rank;
+    let accepter = std::thread::spawn(move || -> std::io::Result<
+        Vec<TcpStream>> {
+        let mut accepted = Vec::new();
+        for _ in 0..accept_count {
+            let (stream, _) = listener.accept()?;
+            stream.set_nodelay(true)?;
+            accepted.push(stream);
+        }
+        Ok(accepted)
+    });
+
+    for peer in (rank + 1)..n {
+        let addr = ("127.0.0.1", base_port + peer as u16);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) if Instant::now() < deadline => {
+                    // peer's listener may not be up yet
+                    let _ = e;
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(CommError::Io(e)),
+            }
+        };
+        stream.set_nodelay(true)?;
+        // identify ourselves so the acceptor can map stream -> rank
+        let mut s = stream.try_clone()?;
+        s.write_all(&(rank as u32).to_le_bytes())?;
+        spawn_reader(stream.try_clone()?, queue_tx.clone());
+        streams.insert(peer, Arc::new(Mutex::new(stream)));
+    }
+
+    for stream in accepter.join().expect("accepter panicked")? {
+        let mut id = [0u8; 4];
+        let mut s = stream.try_clone()?;
+        s.read_exact(&mut id)?;
+        let peer = u32::from_le_bytes(id) as Rank;
+        spawn_reader(stream.try_clone()?, queue_tx.clone());
+        streams.insert(peer, Arc::new(Mutex::new(stream)));
+    }
+
+    Ok(Comm::new(rank, n, Sender::Tcp(TcpSenders { streams }), queue_rx))
+}
+
+/// Convenience: bring up all `n` endpoints on threads and return them
+/// (used by tests/benches; real cluster deployments call `endpoint` from
+/// separate processes).
+pub fn world(n: usize, base_port: u16) -> Result<Vec<Comm>, CommError> {
+    let handles: Vec<_> = (0..n)
+        .map(|rank| {
+            std::thread::spawn(move || endpoint(rank, n, base_port))
+        })
+        .collect();
+    let mut comms = Vec::with_capacity(n);
+    for h in handles {
+        comms.push(h.join().expect("endpoint thread panicked")?);
+    }
+    comms.sort_by_key(|c| c.rank());
+    Ok(comms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Port allocation: keep test meshes on distinct ranges.
+    const PORT_A: u16 = 46100;
+    const PORT_B: u16 = 46140;
+    const PORT_C: u16 = 46180;
+
+    #[test]
+    fn mesh_roundtrip_three_ranks() {
+        let mut w = world(3, PORT_A).unwrap();
+        let c2 = w.pop().unwrap();
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        c0.send(2, Tag::Weights, Payload::floats(5, vec![1.5; 64]))
+            .unwrap();
+        c1.send(2, Tag::Gradients, Payload::floats(6, vec![2.5; 32]))
+            .unwrap();
+        let mut srcs = Vec::new();
+        for _ in 0..2 {
+            let env = c2.recv().unwrap();
+            srcs.push((env.src, env.tag));
+        }
+        srcs.sort();
+        assert_eq!(srcs, vec![(0, Tag::Weights), (1, Tag::Gradients)]);
+    }
+
+    #[test]
+    fn large_payload_survives_framing() {
+        let mut w = world(2, PORT_B).unwrap();
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        let data: Vec<f32> = (0..200_000).map(|i| (i % 97) as f32).collect();
+        c0.send(1, Tag::Weights, Payload::floats(1, data.clone())).unwrap();
+        match c1.recv().unwrap().payload {
+            Payload::Floats { step, data: got } => {
+                assert_eq!(step, 1);
+                assert_eq!(*got, data);
+            }
+            p => panic!("unexpected {p:?}"),
+        }
+    }
+
+    #[test]
+    fn duplex_same_stream() {
+        let mut w = world(2, PORT_C).unwrap();
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        c0.send(1, Tag::Ping, Payload::Empty).unwrap();
+        let e = c1.recv().unwrap();
+        assert_eq!(e.src, 0);
+        c1.send(0, Tag::Ping, Payload::Empty).unwrap();
+        let e = c0.recv().unwrap();
+        assert_eq!(e.src, 1);
+    }
+}

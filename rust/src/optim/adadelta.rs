@@ -1,0 +1,60 @@
+//! AdaDelta (Zeiler) — no global learning rate.
+
+use super::Optimizer;
+
+pub struct AdaDelta {
+    rho: f32,
+    eps: f32,
+    scale: f32,
+    acc_g: Vec<f32>,
+    acc_dx: Vec<f32>,
+}
+
+impl AdaDelta {
+    pub fn new(rho: f32, eps: f32, n: usize) -> Self {
+        Self { rho, eps, scale: 1.0, acc_g: vec![0.0; n],
+               acc_dx: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for AdaDelta {
+    fn update(&mut self, weights: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(weights.len(), grads.len());
+        let rho = self.rho;
+        let eps = self.eps;
+        for i in 0..weights.len() {
+            let g = grads[i];
+            self.acc_g[i] = rho * self.acc_g[i] + (1.0 - rho) * g * g;
+            let dx = -((self.acc_dx[i] + eps).sqrt()
+                / (self.acc_g[i] + eps).sqrt())
+                * g
+                * self.scale;
+            self.acc_dx[i] = rho * self.acc_dx[i] + (1.0 - rho) * dx * dx;
+            weights[i] += dx;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adadelta"
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.scale = scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_sizes_self_tune() {
+        let mut opt = AdaDelta::new(0.95, 1e-6, 1);
+        let mut w = vec![10.0f32];
+        for _ in 0..2000 {
+            let g = 2.0 * w[0]; // descend x^2
+            opt.update(&mut w, &[g]);
+        }
+        assert!(w[0].abs() < 1.0, "{w:?}");
+    }
+}

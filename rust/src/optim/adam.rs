@@ -1,0 +1,84 @@
+//! Adam (Kingma & Ba) with bias correction.
+
+use super::Optimizer;
+
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    scale: f32,
+    t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(lr: f32, beta1: f32, beta2: f32, eps: f32, n: usize) -> Self {
+        Self {
+            lr,
+            beta1,
+            beta2,
+            eps,
+            scale: 1.0,
+            t: 0,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn update(&mut self, weights: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(weights.len(), grads.len());
+        self.t += 1;
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let lr = self.lr * self.scale * bc2.sqrt() / bc1;
+        for i in 0..weights.len() {
+            let g = grads[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            weights[i] -= lr * self.m[i] / (self.v[i].sqrt() + self.eps);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.scale = scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // With bias correction, step 1 ≈ lr * sign(g).
+        let mut opt = Adam::new(0.1, 0.9, 0.999, 1e-8, 2);
+        let mut w = vec![0.0f32, 0.0];
+        opt.update(&mut w, &[3.0, -7.0]);
+        assert!((w[0] + 0.1).abs() < 1e-3, "{w:?}");
+        assert!((w[1] - 0.1).abs() < 1e-3, "{w:?}");
+    }
+
+    #[test]
+    fn adapts_per_coordinate() {
+        let mut opt = Adam::new(0.01, 0.9, 0.999, 1e-8, 2);
+        let mut w = vec![0.0f32, 0.0];
+        // coordinate 0 sees huge gradients, coordinate 1 tiny ones;
+        // Adam normalizes so displacement magnitudes stay comparable.
+        for _ in 0..50 {
+            opt.update(&mut w, &[100.0, 0.01]);
+        }
+        assert!(w[0] < 0.0 && w[1] < 0.0);
+        let ratio = w[0] / w[1];
+        assert!(ratio < 2.0, "ratio={ratio}, w={w:?}");
+    }
+}

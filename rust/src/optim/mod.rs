@@ -1,0 +1,230 @@
+//! Master-side optimizers.
+//!
+//! In Downpour SGD the master owns the weights and applies every incoming
+//! worker gradient with its optimizer — exactly `mpi_learn`'s `Algo`
+//! optimizers. All of them operate on the flat parameter buffer. Momentum
+//! is the paper's recommended mitigation for stale gradients [Omnivore,
+//! ref 9], so it is the benchmark default.
+
+mod adadelta;
+mod adam;
+mod rmsprop;
+mod sgd;
+
+pub use adadelta::AdaDelta;
+pub use adam::Adam;
+pub use rmsprop::RmsProp;
+pub use sgd::{Momentum, Sgd};
+
+/// A stateful first-order optimizer over a flat f32 parameter vector.
+pub trait Optimizer: Send {
+    /// In-place update of `weights` given `grads` (same length).
+    fn update(&mut self, weights: &mut [f32], grads: &[f32]);
+
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &'static str;
+
+    /// Scale the base learning rate (LR schedules / EASGD force tuning).
+    fn set_lr_scale(&mut self, scale: f32);
+}
+
+/// Optimizer hyper-parameter bundle: what the paper's `Algo` class stores.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptimizerConfig {
+    Sgd { lr: f32 },
+    Momentum { lr: f32, momentum: f32, nesterov: bool },
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+    RmsProp { lr: f32, rho: f32, eps: f32 },
+    AdaDelta { rho: f32, eps: f32 },
+}
+
+impl OptimizerConfig {
+    /// Paper benchmark default: momentum SGD (stale-gradient mitigation).
+    pub fn default_momentum() -> Self {
+        OptimizerConfig::Momentum { lr: 0.05, momentum: 0.9,
+                                    nesterov: false }
+    }
+
+    pub fn build(&self, n: usize) -> Box<dyn Optimizer> {
+        match *self {
+            OptimizerConfig::Sgd { lr } => Box::new(Sgd::new(lr)),
+            OptimizerConfig::Momentum { lr, momentum, nesterov } => {
+                Box::new(Momentum::new(lr, momentum, nesterov, n))
+            }
+            OptimizerConfig::Adam { lr, beta1, beta2, eps } => {
+                Box::new(Adam::new(lr, beta1, beta2, eps, n))
+            }
+            OptimizerConfig::RmsProp { lr, rho, eps } => {
+                Box::new(RmsProp::new(lr, rho, eps, n))
+            }
+            OptimizerConfig::AdaDelta { rho, eps } => {
+                Box::new(AdaDelta::new(rho, eps, n))
+            }
+        }
+    }
+
+    /// Parse from a config JSON object: `{"kind": "momentum", "lr": 0.05}`.
+    pub fn from_json(j: &crate::util::json::Json) -> Option<Self> {
+        let kind = j.get("kind")?.as_str()?;
+        let f = |key: &str, default: f32| {
+            j.get(key).and_then(|v| v.as_f64()).map(|v| v as f32)
+                .unwrap_or(default)
+        };
+        Some(match kind {
+            "sgd" => OptimizerConfig::Sgd { lr: f("lr", 0.05) },
+            "momentum" => OptimizerConfig::Momentum {
+                lr: f("lr", 0.05),
+                momentum: f("momentum", 0.9),
+                nesterov: j.get("nesterov").and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+            },
+            "adam" => OptimizerConfig::Adam {
+                lr: f("lr", 0.001),
+                beta1: f("beta1", 0.9),
+                beta2: f("beta2", 0.999),
+                eps: f("eps", 1e-8),
+            },
+            "rmsprop" => OptimizerConfig::RmsProp {
+                lr: f("lr", 0.001),
+                rho: f("rho", 0.9),
+                eps: f("eps", 1e-7),
+            },
+            "adadelta" => OptimizerConfig::AdaDelta {
+                rho: f("rho", 0.95),
+                eps: f("eps", 1e-6),
+            },
+            _ => return None,
+        })
+    }
+}
+
+/// Gradient clipping by global L2 norm — wraps any optimizer.
+pub struct GradClip {
+    inner: Box<dyn Optimizer>,
+    max_norm: f32,
+    scratch: Vec<f32>,
+}
+
+impl GradClip {
+    pub fn new(inner: Box<dyn Optimizer>, max_norm: f32) -> Self {
+        Self { inner, max_norm, scratch: Vec::new() }
+    }
+}
+
+impl Optimizer for GradClip {
+    fn update(&mut self, weights: &mut [f32], grads: &[f32]) {
+        let norm = grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+        if norm > self.max_norm {
+            let scale = self.max_norm / norm;
+            self.scratch.clear();
+            self.scratch.extend(grads.iter().map(|g| g * scale));
+            self.inner.update(weights, &self.scratch);
+        } else {
+            self.inner.update(weights, grads);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "grad-clip"
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.inner.set_lr_scale(scale);
+    }
+}
+
+/// Step-decay learning-rate schedule: lr *= gamma every `every` updates.
+#[derive(Clone, Debug)]
+pub struct StepDecay {
+    pub gamma: f32,
+    pub every: u64,
+    steps: u64,
+    scale: f32,
+}
+
+impl StepDecay {
+    pub fn new(gamma: f32, every: u64) -> Self {
+        Self { gamma, every, steps: 0, scale: 1.0 }
+    }
+
+    /// Advance one update; returns the current scale to apply.
+    pub fn tick(&mut self) -> f32 {
+        self.steps += 1;
+        if self.every > 0 && self.steps % self.every == 0 {
+            self.scale *= self.gamma;
+        }
+        self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// Quadratic bowl: every optimizer must descend f(w) = |w - 3|^2.
+    fn descend(opt: &mut dyn Optimizer, steps: usize) -> f32 {
+        let mut w = vec![0.0f32; 8];
+        for _ in 0..steps {
+            let g: Vec<f32> = w.iter().map(|wi| 2.0 * (wi - 3.0)).collect();
+            opt.update(&mut w, &g);
+        }
+        w.iter().map(|wi| (wi - 3.0).powi(2)).sum()
+    }
+
+    #[test]
+    fn all_optimizers_descend_quadratic() {
+        let configs = [
+            (OptimizerConfig::Sgd { lr: 0.1 }, 300, 0.1),
+            (OptimizerConfig::Momentum { lr: 0.05, momentum: 0.9,
+                                         nesterov: false }, 300, 0.1),
+            (OptimizerConfig::Momentum { lr: 0.05, momentum: 0.9,
+                                         nesterov: true }, 300, 0.1),
+            (OptimizerConfig::Adam { lr: 0.3, beta1: 0.9, beta2: 0.999,
+                                     eps: 1e-8 }, 300, 0.1),
+            (OptimizerConfig::RmsProp { lr: 0.1, rho: 0.9, eps: 1e-7 },
+             300, 0.1),
+            // AdaDelta self-tunes its effective lr from zero — slow off
+            // the mark by construction, so give it a longer horizon.
+            (OptimizerConfig::AdaDelta { rho: 0.95, eps: 1e-6 }, 8000,
+             1.0),
+        ];
+        for (cfg, steps, tol) in configs {
+            let mut opt = cfg.build(8);
+            let end = descend(opt.as_mut(), steps);
+            assert!(end < tol, "{} ended at {end}", opt.name());
+        }
+    }
+
+    #[test]
+    fn grad_clip_limits_step() {
+        let mut clipped = GradClip::new(
+            OptimizerConfig::Sgd { lr: 1.0 }.build(4), 1.0);
+        let mut w = vec![0.0f32; 4];
+        clipped.update(&mut w, &[100.0, 0.0, 0.0, 0.0]);
+        // clipped gradient has norm 1 -> step length exactly lr * 1
+        let norm: f32 = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5, "{w:?}");
+    }
+
+    #[test]
+    fn step_decay_halves() {
+        let mut sched = StepDecay::new(0.5, 2);
+        assert_eq!(sched.tick(), 1.0);
+        assert_eq!(sched.tick(), 0.5);
+        assert_eq!(sched.tick(), 0.5);
+        assert_eq!(sched.tick(), 0.25);
+    }
+
+    #[test]
+    fn config_from_json() {
+        let j = Json::parse(
+            r#"{"kind": "momentum", "lr": 0.1, "momentum": 0.8}"#).unwrap();
+        assert_eq!(
+            OptimizerConfig::from_json(&j).unwrap(),
+            OptimizerConfig::Momentum { lr: 0.1, momentum: 0.8,
+                                        nesterov: false });
+        let j = Json::parse(r#"{"kind": "bogus"}"#).unwrap();
+        assert!(OptimizerConfig::from_json(&j).is_none());
+    }
+}

@@ -1,0 +1,58 @@
+//! RMSProp (Tieleman & Hinton) — Keras-style.
+
+use super::Optimizer;
+
+pub struct RmsProp {
+    lr: f32,
+    rho: f32,
+    eps: f32,
+    scale: f32,
+    ms: Vec<f32>,
+}
+
+impl RmsProp {
+    pub fn new(lr: f32, rho: f32, eps: f32, n: usize) -> Self {
+        Self { lr, rho, eps, scale: 1.0, ms: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for RmsProp {
+    fn update(&mut self, weights: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(weights.len(), grads.len());
+        let lr = self.lr * self.scale;
+        let rho = self.rho;
+        for i in 0..weights.len() {
+            let g = grads[i];
+            self.ms[i] = rho * self.ms[i] + (1.0 - rho) * g * g;
+            weights[i] -= lr * g / (self.ms[i].sqrt() + self.eps);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "rmsprop"
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.scale = scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_gradient_scale() {
+        let mut big = RmsProp::new(0.01, 0.9, 1e-7, 1);
+        let mut small = RmsProp::new(0.01, 0.9, 1e-7, 1);
+        let mut wb = vec![0.0f32];
+        let mut ws = vec![0.0f32];
+        for _ in 0..100 {
+            big.update(&mut wb, &[1000.0]);
+            small.update(&mut ws, &[0.001]);
+        }
+        // steady-state step is ~lr regardless of gradient magnitude
+        assert!((wb[0] - ws[0]).abs() / wb[0].abs() < 0.01,
+                "wb={wb:?} ws={ws:?}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Plain SGD and (Nesterov) momentum SGD.
+
+use super::Optimizer;
+
+/// w -= lr * g
+pub struct Sgd {
+    lr: f32,
+    scale: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Self { lr, scale: 1.0 }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn update(&mut self, weights: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(weights.len(), grads.len());
+        let lr = self.lr * self.scale;
+        for (w, g) in weights.iter_mut().zip(grads) {
+            *w -= lr * g;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.scale = scale;
+    }
+}
+
+/// Momentum SGD: v = mu*v - lr*g; w += v  (Nesterov optional).
+///
+/// The paper's recommended mitigation for Downpour's stale-gradient
+/// degradation (ref [9], Omnivore) — benchmark default.
+pub struct Momentum {
+    lr: f32,
+    mu: f32,
+    nesterov: bool,
+    scale: f32,
+    velocity: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(lr: f32, mu: f32, nesterov: bool, n: usize) -> Self {
+        Self { lr, mu, nesterov, scale: 1.0, velocity: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn update(&mut self, weights: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(weights.len(), grads.len());
+        debug_assert_eq!(weights.len(), self.velocity.len());
+        let lr = self.lr * self.scale;
+        let mu = self.mu;
+        if self.nesterov {
+            for ((w, g), v) in weights.iter_mut().zip(grads)
+                .zip(self.velocity.iter_mut()) {
+                *v = mu * *v - lr * g;
+                *w += mu * *v - lr * g;
+            }
+        } else {
+            for ((w, g), v) in weights.iter_mut().zip(grads)
+                .zip(self.velocity.iter_mut()) {
+                *v = mu * *v - lr * g;
+                *w += *v;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.scale = scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_single_step_exact() {
+        let mut opt = Sgd::new(0.1);
+        let mut w = vec![1.0f32, 2.0];
+        opt.update(&mut w, &[10.0, -10.0]);
+        assert_eq!(w, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = Momentum::new(0.1, 0.9, false, 1);
+        let mut w = vec![0.0f32];
+        opt.update(&mut w, &[1.0]); // v=-0.1, w=-0.1
+        opt.update(&mut w, &[1.0]); // v=-0.19, w=-0.29
+        assert!((w[0] + 0.29).abs() < 1e-6, "{w:?}");
+    }
+
+    #[test]
+    fn lr_scale_applies() {
+        let mut opt = Sgd::new(0.1);
+        opt.set_lr_scale(0.5);
+        let mut w = vec![0.0f32];
+        opt.update(&mut w, &[1.0]);
+        assert!((w[0] + 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn nesterov_differs_from_plain() {
+        let mut plain = Momentum::new(0.1, 0.9, false, 1);
+        let mut nest = Momentum::new(0.1, 0.9, true, 1);
+        let mut w1 = vec![0.0f32];
+        let mut w2 = vec![0.0f32];
+        for _ in 0..3 {
+            plain.update(&mut w1, &[1.0]);
+            nest.update(&mut w2, &[1.0]);
+        }
+        assert_ne!(w1, w2);
+    }
+}

@@ -1,0 +1,240 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted.
+//!
+//! `artifacts/meta.json` describes every AOT-compiled model variant: the
+//! parameter names/shapes (in the positional order the HLO entry expects),
+//! the input shapes, and the grad/eval/predict HLO file names. This module
+//! parses it (with the from-scratch JSON substrate) into typed structs.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("io reading {path}: {err}")]
+    Io { path: PathBuf, err: std::io::Error },
+    #[error("manifest parse: {0}")]
+    Parse(String),
+    #[error("manifest missing model variant '{0}'")]
+    UnknownVariant(String),
+    #[error("artifact file missing: {0}")]
+    MissingFile(PathBuf),
+}
+
+/// One (model, batch) variant from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub key: String,
+    pub model: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub features: usize,
+    pub classes: usize,
+    pub hidden: usize,
+    /// (name, shape) in the artifact's positional parameter order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub param_count: usize,
+    pub grad_file: PathBuf,
+    pub eval_file: PathBuf,
+    pub predict_file: PathBuf,
+}
+
+impl ModelMeta {
+    /// Floats per full training example batch: batch * seq_len * features.
+    pub fn x_len(&self) -> usize {
+        self.batch * self.seq_len * self.features
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ArtifactError> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .map_err(|err| ArtifactError::Io { path: meta_path.clone(),
+                                               err })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ArtifactError> {
+        let j = Json::parse(text)
+            .map_err(|e| ArtifactError::Parse(e.to_string()))?;
+        let models_j = j
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| ArtifactError::Parse("no 'models' object"
+                .into()))?;
+        let mut models = Vec::with_capacity(models_j.len());
+        for (key, entry) in models_j {
+            models.push(Self::parse_entry(dir, key, entry)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    fn parse_entry(dir: &Path, key: &str, entry: &Json)
+        -> Result<ModelMeta, ArtifactError> {
+        let perr = |m: &str| ArtifactError::Parse(format!("{key}: {m}"));
+        let usize_field = |name: &str| -> Result<usize, ArtifactError> {
+            entry
+                .get(name)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| perr(&format!("missing usize '{name}'")))
+        };
+        let params_j = entry
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| perr("missing params"))?;
+        let mut params = Vec::with_capacity(params_j.len());
+        for p in params_j {
+            let name = p
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| perr("param missing name"))?;
+            let shape: Option<Vec<usize>> = p
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|d| d.as_usize()).collect());
+            let shape = shape.ok_or_else(|| perr("param missing shape"))?;
+            params.push((name.to_string(), shape));
+        }
+        let arts = entry
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| perr("missing artifacts"))?;
+        let file = |kind: &str| -> Result<PathBuf, ArtifactError> {
+            let name = arts
+                .get(kind)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| perr(&format!("missing artifact '{kind}'")))?;
+            Ok(dir.join(name))
+        };
+        Ok(ModelMeta {
+            key: key.to_string(),
+            model: entry
+                .get("model")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| perr("missing model"))?
+                .to_string(),
+            batch: usize_field("batch")?,
+            seq_len: usize_field("seq_len")?,
+            features: usize_field("features")?,
+            classes: usize_field("classes")?,
+            hidden: usize_field("hidden")?,
+            params,
+            param_count: usize_field("param_count")?,
+            grad_file: file("grad")?,
+            eval_file: file("eval")?,
+            predict_file: file("predict")?,
+        })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&ModelMeta, ArtifactError> {
+        self.models
+            .iter()
+            .find(|m| m.key == key)
+            .ok_or_else(|| ArtifactError::UnknownVariant(key.to_string()))
+    }
+
+    /// Variant for (model, batch), e.g. ("lstm", 100) -> lstm_b100.
+    pub fn variant(&self, model: &str, batch: usize)
+        -> Result<&ModelMeta, ArtifactError> {
+        self.get(&format!("{model}_b{batch}"))
+    }
+
+    /// Verify every referenced HLO file exists.
+    pub fn check_files(&self) -> Result<(), ArtifactError> {
+        for m in &self.models {
+            for f in [&m.grad_file, &m.eval_file, &m.predict_file] {
+                if !f.exists() {
+                    return Err(ArtifactError::MissingFile(f.clone()));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default artifact dir: $MPI_LEARN_ARTIFACTS or ./artifacts.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("MPI_LEARN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format_version": 1,
+      "models": {
+        "lstm_b100": {
+          "model": "lstm", "batch": 100, "seq_len": 30, "features": 16,
+          "classes": 3, "hidden": 20,
+          "params": [
+            {"name": "lstm_b", "shape": [80]},
+            {"name": "lstm_wh", "shape": [20, 80]},
+            {"name": "lstm_wx", "shape": [16, 80]},
+            {"name": "out_b", "shape": [3]},
+            {"name": "out_w", "shape": [20, 3]}
+          ],
+          "param_count": 3023,
+          "inputs": {"x": [100, 30, 16], "y": [100]},
+          "artifacts": {"grad": "lstm_b100_grad.hlo.txt",
+                        "eval": "lstm_b100_eval.hlo.txt",
+                        "predict": "lstm_b100_predict.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let v = m.variant("lstm", 100).unwrap();
+        assert_eq!(v.batch, 100);
+        assert_eq!(v.params.len(), 5);
+        assert_eq!(v.params[1], ("lstm_wh".to_string(), vec![20, 80]));
+        assert_eq!(v.x_len(), 100 * 30 * 16);
+        assert_eq!(v.grad_file,
+                   Path::new("/tmp/arts/lstm_b100_grad.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert!(matches!(m.variant("lstm", 999),
+                         Err(ArtifactError::UnknownVariant(_))));
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let bad = r#"{"models": {"x_b1": {"model": "x"}}}"#;
+        assert!(Manifest::parse(Path::new("."), bad).is_err());
+    }
+
+    #[test]
+    fn check_files_detects_missing() {
+        let m = Manifest::parse(Path::new("/nonexistent_dir_xyz"),
+                                SAMPLE).unwrap();
+        assert!(matches!(m.check_files(),
+                         Err(ArtifactError::MissingFile(_))));
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        // Integration-style: only runs when `make artifacts` has run.
+        let dir = default_artifact_dir();
+        if dir.join("meta.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.variant("lstm", 100).is_ok());
+            m.check_files().unwrap();
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! PJRT execution: load HLO text, compile once, run from the hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client). Interchange is HLO
+//! *text* — see `python/compile/aot.py` for why.
+//!
+//! ### Thread safety
+//! The training world runs master + workers on OS threads sharing one
+//! `PjRtClient` and per-variant compiled executables. The `xla` crate's
+//! wrappers are raw-pointer newtypes without `Send`/`Sync`, but the
+//! underlying PJRT CPU client is documented thread-safe for `Compile` and
+//! `Execute`, and each call here builds its own `Literal` inputs and
+//! consumes its own outputs. We therefore wrap the client + executable in
+//! newtypes with `unsafe impl Send + Sync`, and the integration suite
+//! hammers concurrent `execute` calls to back the claim empirically.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::runtime::artifact::ModelMeta;
+use crate::tensor::ParamSet;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("artifact {0} failed to load: {1}")]
+    Load(String, String),
+    #[error("input size mismatch: expected {expect} got {got} for {what}")]
+    BadInput { what: &'static str, expect: usize, got: usize },
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// Shared PJRT CPU client (safety: see module docs).
+pub struct Client {
+    inner: xla::PjRtClient,
+}
+
+unsafe impl Send for Client {}
+unsafe impl Sync for Client {}
+
+impl Client {
+    pub fn cpu() -> Result<Arc<Client>, RuntimeError> {
+        Ok(Arc::new(Client { inner: xla::PjRtClient::cpu()? }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    /// Compile HLO text from `path`.
+    pub fn compile_file(&self, path: &Path)
+        -> Result<Executable, RuntimeError> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("non-utf8 artifact path"))
+            .map_err(|e| RuntimeError::Load(path.display().to_string(),
+                                            e.to_string()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.inner.compile(&comp)?;
+        Ok(Executable { inner: exe })
+    }
+}
+
+/// A compiled HLO module (safety: see module docs).
+pub struct Executable {
+    inner: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal])
+        -> Result<Vec<xla::Literal>, RuntimeError> {
+        let result = self.inner.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal,
+    RuntimeError> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal,
+    RuntimeError> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// The three per-variant executables, typed to the artifact interface.
+pub struct ModelExecutables {
+    pub meta: ModelMeta,
+    grad: Executable,
+    eval: Executable,
+    predict: Option<Executable>,
+}
+
+/// Output of one gradient step.
+#[derive(Clone, Debug)]
+pub struct GradOutput {
+    pub loss: f32,
+    /// Flat gradient in the ParamSet/manifest parameter order.
+    pub grads: Vec<f32>,
+}
+
+impl ModelExecutables {
+    /// Compile grad+eval (+ predict if wanted) for one variant.
+    pub fn load(client: &Client, meta: &ModelMeta, with_predict: bool)
+        -> Result<ModelExecutables, RuntimeError> {
+        Ok(ModelExecutables {
+            meta: meta.clone(),
+            grad: client.compile_file(&meta.grad_file)?,
+            eval: client.compile_file(&meta.eval_file)?,
+            predict: if with_predict {
+                Some(client.compile_file(&meta.predict_file)?)
+            } else {
+                None
+            },
+        })
+    }
+
+    fn check_xy(&self, x: &[f32], y: &[i32]) -> Result<(), RuntimeError> {
+        if x.len() != self.meta.x_len() {
+            return Err(RuntimeError::BadInput {
+                what: "x", expect: self.meta.x_len(), got: x.len() });
+        }
+        if y.len() != self.meta.batch {
+            return Err(RuntimeError::BadInput {
+                what: "y", expect: self.meta.batch, got: y.len() });
+        }
+        Ok(())
+    }
+
+    fn param_literals(&self, params: &ParamSet)
+        -> Result<Vec<xla::Literal>, RuntimeError> {
+        if params.num_params() != self.meta.param_count {
+            return Err(RuntimeError::BadInput {
+                what: "params",
+                expect: self.meta.param_count,
+                got: params.num_params(),
+            });
+        }
+        let mut lits = Vec::with_capacity(self.meta.params.len() + 2);
+        for (i, (_, shape)) in self.meta.params.iter().enumerate() {
+            lits.push(literal_f32(params.slice(i), shape)?);
+        }
+        Ok(lits)
+    }
+
+    /// Build the positional input literals for a (params, x, y) call.
+    /// Public so the microbench can price marshalling separately from
+    /// execution (EXPERIMENTS.md §Perf).
+    pub fn marshal_inputs(&self, params: &ParamSet, x: &[f32], y: &[i32])
+        -> Result<Vec<xla::Literal>, RuntimeError> {
+        self.check_xy(x, y)?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_f32(
+            x, &[self.meta.batch, self.meta.seq_len, self.meta.features])?);
+        inputs.push(literal_i32(y, &[self.meta.batch])?);
+        Ok(inputs)
+    }
+
+    /// One gradient step: (params, x, y) -> (loss, flat grads).
+    pub fn grad_step(&self, params: &ParamSet, x: &[f32], y: &[i32])
+        -> Result<GradOutput, RuntimeError> {
+        let inputs = self.marshal_inputs(params, x, y)?;
+        let outputs = self.grad.run(&inputs)?;
+        debug_assert_eq!(outputs.len(), 1 + self.meta.params.len());
+        let loss = outputs[0].get_first_element::<f32>()?;
+        // single exact-size allocation; copy_raw_to avoids the per-output
+        // Vec each to_vec() would allocate (perf pass iter 1)
+        let mut grads = vec![0.0f32; self.meta.param_count];
+        let mut off = 0usize;
+        for (lit, (_, shape)) in
+            outputs[1..].iter().zip(&self.meta.params) {
+            let len: usize = shape.iter().product();
+            lit.copy_raw_to(&mut grads[off..off + len])?;
+            off += len;
+        }
+        debug_assert_eq!(off, self.meta.param_count);
+        Ok(GradOutput { loss, grads })
+    }
+
+    /// Evaluation: (params, x, y) -> (mean loss, n correct).
+    pub fn eval_step(&self, params: &ParamSet, x: &[f32], y: &[i32])
+        -> Result<(f32, f32), RuntimeError> {
+        self.check_xy(x, y)?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_f32(
+            x, &[self.meta.batch, self.meta.seq_len, self.meta.features])?);
+        inputs.push(literal_i32(y, &[self.meta.batch])?);
+        let outputs = self.eval.run(&inputs)?;
+        let loss = outputs[0].to_vec::<f32>()?[0];
+        let ncorrect = outputs[1].to_vec::<f32>()?[0];
+        Ok((loss, ncorrect))
+    }
+
+    /// Inference: (params, x) -> logits [batch * classes].
+    pub fn predict(&self, params: &ParamSet, x: &[f32])
+        -> Result<Vec<f32>, RuntimeError> {
+        let pred = self.predict.as_ref().expect(
+            "ModelExecutables loaded without predict");
+        if x.len() != self.meta.x_len() {
+            return Err(RuntimeError::BadInput {
+                what: "x", expect: self.meta.x_len(), got: x.len() });
+        }
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_f32(
+            x, &[self.meta.batch, self.meta.seq_len, self.meta.features])?);
+        let outputs = pred.run(&inputs)?;
+        Ok(outputs[0].to_vec::<f32>()?)
+    }
+
+    /// Fresh Glorot-initialized parameters matching this variant.
+    pub fn init_params(&self, rng: &mut crate::util::rng::Rng) -> ParamSet {
+        ParamSet::glorot_init(&self.meta.params, rng)
+    }
+}

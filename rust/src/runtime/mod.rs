@@ -1,0 +1,77 @@
+//! PJRT runtime: artifact manifest + compiled executables.
+//!
+//! `Session` is the convenience entry point used by the coordinator,
+//! examples, and benches: open the artifact dir, pick a model variant,
+//! get shared (`Arc`) executables for the training world's threads.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{default_artifact_dir, ArtifactError, Manifest,
+                   ModelMeta};
+pub use executor::{Client, Executable, GradOutput, ModelExecutables,
+                   RuntimeError};
+
+use std::path::Path;
+use std::sync::Arc;
+
+#[derive(Debug, thiserror::Error)]
+pub enum SessionError {
+    #[error(transparent)]
+    Artifact(#[from] ArtifactError),
+    #[error(transparent)]
+    Runtime(#[from] RuntimeError),
+}
+
+/// Artifact dir + PJRT client + compile cache.
+pub struct Session {
+    pub manifest: Manifest,
+    pub client: Arc<Client>,
+    cache: std::sync::Mutex<
+        std::collections::BTreeMap<String, Arc<ModelExecutables>>>,
+}
+
+impl Session {
+    pub fn open(artifact_dir: &Path) -> Result<Session, SessionError> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = Client::cpu()?;
+        Ok(Session {
+            manifest,
+            client,
+            cache: std::sync::Mutex::new(Default::default()),
+        })
+    }
+
+    /// Open the default artifact dir (`$MPI_LEARN_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn open_default() -> Result<Session, SessionError> {
+        Self::open(&default_artifact_dir())
+    }
+
+    /// Compile (or fetch cached) executables for a manifest key like
+    /// `lstm_b100`.
+    pub fn executables(&self, key: &str)
+        -> Result<Arc<ModelExecutables>, SessionError> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exes) = cache.get(key) {
+                return Ok(exes.clone());
+            }
+        }
+        let meta = self.manifest.get(key)?.clone();
+        let exes = Arc::new(ModelExecutables::load(&self.client, &meta,
+                                                   true)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), exes.clone());
+        Ok(exes)
+    }
+
+    /// Variant lookup by (model, batch).
+    pub fn executables_for(&self, model: &str, batch: usize)
+        -> Result<Arc<ModelExecutables>, SessionError> {
+        let key = self.manifest.variant(model, batch)?.key.clone();
+        self.executables(&key)
+    }
+}

@@ -1,0 +1,92 @@
+//! Live calibration: measure this host's real protocol costs and inject
+//! them into a [`CostModel`]. Used by the Fig 3/4 and Table I benches so
+//! simulated sweeps rest on measured numbers (DESIGN.md §Substitutions).
+
+use std::time::Instant;
+
+use crate::optim::OptimizerConfig;
+use crate::runtime::ModelExecutables;
+use crate::simulator::CostModel;
+use crate::tensor::ParamSet;
+use crate::util::rng::Rng;
+
+/// Measured per-operation costs.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// Mean gradient-step time at the measured batch size, seconds.
+    pub t_grad: f64,
+    /// The batch size it was measured at.
+    pub batch: usize,
+    /// Mean master optimizer update, seconds.
+    pub t_update: f64,
+    /// Mean validation-batch eval time, seconds.
+    pub t_eval_batch: f64,
+}
+
+/// Measure gradient, update, and eval costs for one artifact variant.
+pub fn measure_costs(exes: &ModelExecutables, opt: &OptimizerConfig,
+                     reps: usize) -> Calibration {
+    let meta = &exes.meta;
+    let mut rng = Rng::new(0xCA11B);
+    let params = exes.init_params(&mut rng);
+    let x: Vec<f32> = (0..meta.x_len())
+        .map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let y: Vec<i32> = (0..meta.batch)
+        .map(|_| rng.usize_below(meta.classes) as i32)
+        .collect();
+
+    exes.grad_step(&params, &x, &y).expect("calibration grad"); // warm
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        exes.grad_step(&params, &x, &y).expect("calibration grad");
+    }
+    let t_grad = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        exes.eval_step(&params, &x, &y).expect("calibration eval");
+    }
+    let t_eval_batch = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let mut optimizer = opt.build(meta.param_count);
+    let mut w = ParamSet::zeros(&meta.params);
+    let g = vec![1e-3f32; meta.param_count];
+    let t0 = Instant::now();
+    let ureps = 1000;
+    for _ in 0..ureps {
+        optimizer.update(w.flat_mut(), &g);
+    }
+    let t_update = t0.elapsed().as_secs_f64() / ureps as f64;
+
+    Calibration { t_grad, batch: meta.batch, t_update, t_eval_batch }
+}
+
+impl Calibration {
+    /// Project the gradient time to another batch size, splitting the
+    /// measured cost into a fixed dispatch part and a per-sample part.
+    /// The fixed fraction is itself measured when a batch-10 artifact is
+    /// available (see `apply_with_small_batch`); this fallback assumes
+    /// 15% fixed, which matches the measured LSTM dispatch share.
+    pub fn apply(&self, cost: &mut CostModel) {
+        let fixed = 0.15 * self.t_grad;
+        cost.t_grad_fixed = fixed;
+        cost.t_grad_per_sample = (self.t_grad - fixed)
+            / self.batch as f64;
+        cost.t_update = self.t_update;
+        cost.t_val = 0.0;
+    }
+
+    /// Two-point calibration from a second, smaller-batch measurement:
+    /// solves t(b) = fixed + b * per_sample exactly.
+    pub fn apply_with_small_batch(&self, small: &Calibration,
+                                  cost: &mut CostModel) {
+        let db = (self.batch - small.batch) as f64;
+        let per_sample = ((self.t_grad - small.t_grad) / db).max(1e-9);
+        let fixed = (small.t_grad
+            - small.batch as f64 * per_sample).max(0.0);
+        cost.t_grad_fixed = fixed;
+        cost.t_grad_per_sample = per_sample;
+        cost.t_update = self.t_update;
+    }
+}

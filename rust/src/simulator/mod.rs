@@ -1,0 +1,285 @@
+//! Discrete-event simulator of the Downpour protocol — the cluster-scale
+//! substitute (DESIGN.md §Substitutions).
+//!
+//! Figures 3/4 and Table I of the paper measure *protocol-level* time: how
+//! long until every worker has processed its division of the data E times,
+//! given that the master serializes weight updates (and validation). That
+//! is exactly what this simulator computes, using *measured* per-batch
+//! gradient cost, per-update master cost, and per-byte transfer cost from
+//! the real runtime (see `benches/fig4_cluster_speedup.rs` for the
+//! calibration pass). It reproduces the linear regime, the master-bound
+//! saturation (~30x at 60 workers), and the batch-size trade-off of
+//! Table I without 60 physical GPUs.
+
+pub mod calibrate;
+pub mod model;
+
+pub use calibrate::{measure_costs, Calibration};
+pub use model::{CostModel, SimConfig, SimResult};
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::rng::Rng;
+
+/// One pending gradient arrival at the master.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Arrival {
+    time: f64,
+    worker: usize,
+}
+
+impl Eq for Arrival {}
+
+impl Ord for Arrival {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by time (BinaryHeap is a max-heap)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.worker.cmp(&self.worker))
+    }
+}
+
+impl PartialOrd for Arrival {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Simulate one asynchronous Downpour run; see [`CostModel`] for the cost
+/// parameters and [`SimConfig`] for the workload shape.
+pub fn simulate_async(cost: &CostModel, cfg: &SimConfig, seed: u64)
+    -> SimResult {
+    let batches_per_worker = cfg.batches_per_worker();
+    let mut remaining: Vec<u64> =
+        vec![batches_per_worker; cfg.n_workers];
+    let mut rng = Rng::new(seed);
+    let mut heap = BinaryHeap::new();
+    let xfer = cost.transfer_time();
+
+    for w in 0..cfg.n_workers {
+        if remaining[w] > 0 {
+            let t = cost.grad_time(cfg.batch, &mut rng) + xfer;
+            heap.push(Arrival { time: t, worker: w });
+        }
+    }
+
+    let mut master_free = 0.0f64;
+    let mut master_busy = 0.0f64;
+    let mut updates = 0u64;
+    let mut validations = 0u64;
+    let mut finish = 0.0f64;
+
+    while let Some(Arrival { time, worker }) = heap.pop() {
+        let start = master_free.max(time);
+        let done = start + cost.t_update;
+        master_busy += cost.t_update;
+        master_free = done;
+        updates += 1;
+        if cfg.validate_every > 0 && updates % cfg.validate_every == 0 {
+            master_free += cost.t_val;
+            master_busy += cost.t_val;
+            validations += 1;
+        }
+        // weights travel back; worker either starts its next batch or is
+        // finished once it has its final weights in hand
+        let back_at = done + xfer;
+        remaining[worker] -= 1;
+        if remaining[worker] > 0 {
+            let next = back_at + cost.grad_time(cfg.batch, &mut rng)
+                + xfer;
+            heap.push(Arrival { time: next, worker });
+        } else {
+            finish = finish.max(back_at);
+        }
+    }
+
+    // the run ends when the last worker holds its final weights AND the
+    // master has drained any trailing validation work
+    let total = finish.max(master_free);
+    SimResult {
+        total_time_s: total,
+        master_busy_s: master_busy,
+        master_utilization: if total > 0.0 { master_busy / total }
+                            else { 0.0 },
+        updates,
+        validations,
+    }
+}
+
+/// Simulate one synchronous run (barrier per round).
+pub fn simulate_sync(cost: &CostModel, cfg: &SimConfig, seed: u64)
+    -> SimResult {
+    let rounds = cfg.batches_per_worker();
+    let mut rng = Rng::new(seed);
+    let xfer = cost.transfer_time();
+    let mut t = 0.0f64;
+    let mut master_busy = 0.0f64;
+    let mut validations = 0u64;
+    for round in 0..rounds {
+        // slowest worker gates the barrier
+        let slowest = (0..cfg.n_workers)
+            .map(|_| cost.grad_time(cfg.batch, &mut rng))
+            .fold(0.0f64, f64::max);
+        t += slowest + xfer + cost.t_update + xfer;
+        master_busy += cost.t_update;
+        if cfg.validate_every > 0
+            && (round + 1) % cfg.validate_every == 0 {
+            t += cost.t_val;
+            master_busy += cost.t_val;
+            validations += 1;
+        }
+    }
+    SimResult {
+        total_time_s: t,
+        master_busy_s: master_busy,
+        master_utilization: if t > 0.0 { master_busy / t } else { 0.0 },
+        updates: rounds,
+        validations,
+    }
+}
+
+pub fn simulate(cost: &CostModel, cfg: &SimConfig, seed: u64)
+    -> SimResult {
+    if cfg.sync {
+        simulate_sync(cost, cfg, seed)
+    } else {
+        simulate_async(cost, cfg, seed)
+    }
+}
+
+/// Speedup-vs-workers series: fixed total dataset divided evenly (the
+/// paper's Figs 3/4 protocol), speedup relative to one worker.
+pub fn speedup_curve(cost: &CostModel, base: &SimConfig,
+                     worker_counts: &[usize], seed: u64)
+    -> Vec<(usize, f64)> {
+    let t1 = simulate(cost,
+                      &SimConfig { n_workers: 1, ..base.clone() },
+                      seed)
+        .total_time_s;
+    worker_counts
+        .iter()
+        .map(|&w| {
+            let cfg = SimConfig {
+                n_workers: w,
+                total_samples: base.total_samples,
+                ..base.clone()
+            };
+            let t = simulate(cost, &cfg, seed ^ w as u64).total_time_s;
+            (w, t1 / t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> CostModel {
+        CostModel {
+            t_grad_fixed: 2e-3,
+            t_grad_per_sample: 1e-4,
+            t_update: 5e-4,
+            t_val: 0.0,
+            latency: 1e-5,
+            bandwidth_bytes_per_s: 5e9,
+            msg_bytes: 13_000.0,
+            jitter: 0.0,
+        }
+    }
+
+    fn cfg(workers: usize) -> SimConfig {
+        SimConfig {
+            n_workers: workers,
+            total_samples: 100_000,
+            batch: 100,
+            epochs: 1,
+            validate_every: 0,
+            sync: false,
+        }
+    }
+
+    #[test]
+    fn single_worker_time_is_serial_sum() {
+        let c = cost();
+        let r = simulate_async(&c, &cfg(1), 0);
+        // 1000 batches, each: grad + xfer + update + xfer
+        let per = c.grad_time_nominal(100) + 2.0 * c.transfer_time()
+            + c.t_update;
+        assert!((r.total_time_s - 1000.0 * per).abs() / r.total_time_s
+                < 1e-9);
+        assert_eq!(r.updates, 1000);
+    }
+
+    #[test]
+    fn low_worker_counts_scale_linearly() {
+        let c = cost();
+        let curve = speedup_curve(&c, &cfg(1), &[2, 4, 8], 0);
+        for (w, s) in curve {
+            assert!(s > 0.85 * w as f64,
+                    "speedup {s:.2} at {w} workers too low");
+            assert!(s <= w as f64 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn saturation_bounded_by_master_service_rate() {
+        let c = cost();
+        // with many workers the throughput cap is 1/t_update updates/s
+        let r = simulate_async(&c, &cfg(200), 0);
+        let cap = r.updates as f64 * c.t_update;
+        assert!(r.total_time_s > 0.95 * cap);
+        assert!(r.master_utilization > 0.9);
+    }
+
+    #[test]
+    fn validation_adds_serial_time() {
+        let c_no = cost();
+        let mut c_val = cost();
+        c_val.t_val = 0.05;
+        let mut k = cfg(8);
+        k.validate_every = 50;
+        let t_no = simulate_async(&c_no, &k, 0).total_time_s;
+        let r = simulate_async(&c_val, &k, 0);
+        assert!(r.validations > 0);
+        assert!(r.total_time_s > t_no + 0.8 * r.validations as f64 * 0.05);
+    }
+
+    #[test]
+    fn bigger_batches_speed_up_fixed_dataset() {
+        // Table I mechanism: fewer updates per epoch -> less master
+        // serialization at high worker counts.
+        let c = cost();
+        let mut k = cfg(20);
+        k.total_samples = 200_000;
+        let t_small = simulate_async(&c, &SimConfig { batch: 10,
+            ..k.clone() }, 0).total_time_s;
+        let t_mid = simulate_async(&c, &SimConfig { batch: 100,
+            ..k.clone() }, 0).total_time_s;
+        let t_big = simulate_async(&c, &SimConfig { batch: 1000,
+            ..k.clone() }, 0).total_time_s;
+        assert!(t_small > t_mid && t_mid > t_big,
+                "{t_small} {t_mid} {t_big}");
+    }
+
+    #[test]
+    fn sync_slower_than_async_with_jitter() {
+        let mut c = cost();
+        c.jitter = 0.3;
+        let k = cfg(16);
+        let a = simulate_async(&c, &k, 1).total_time_s;
+        let s = simulate_sync(&c, &k, 1).total_time_s;
+        assert!(s > a, "sync {s} should exceed async {a} under jitter");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut c = cost();
+        c.jitter = 0.2;
+        let k = cfg(8);
+        assert_eq!(simulate_async(&c, &k, 7).total_time_s,
+                   simulate_async(&c, &k, 7).total_time_s);
+    }
+}

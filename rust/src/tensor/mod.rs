@@ -1,0 +1,317 @@
+//! Host-side tensors and flat parameter sets.
+//!
+//! The coordinator keeps model state as a [`ParamSet`]: one contiguous
+//! `Vec<f32>` with a named-view table. A single flat buffer makes the
+//! Downpour hot path cheap — gradients travel as one message, the
+//! optimizer update is one fused loop, and PJRT literals are sliced views.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with {} elements",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+/// Name + shape + offset of one parameter inside the flat buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamView {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Named set of parameters in one contiguous buffer.
+///
+/// Iteration/views follow the order the views were declared in — the
+/// AOT manifest's sorted-name order, which is also the positional order
+/// the HLO artifacts expect.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    views: Vec<ParamView>,
+    data: Vec<f32>,
+}
+
+impl ParamSet {
+    /// Build a zero-initialized set from (name, shape) pairs.
+    pub fn zeros(specs: &[(String, Vec<usize>)]) -> Self {
+        let mut views = Vec::with_capacity(specs.len());
+        let mut offset = 0usize;
+        for (name, shape) in specs {
+            let len = shape.iter().product();
+            views.push(ParamView {
+                name: name.clone(),
+                shape: shape.clone(),
+                offset,
+                len,
+            });
+            offset += len;
+        }
+        Self { views, data: vec![0.0; offset] }
+    }
+
+    /// Glorot-uniform init for >=2-D params, zeros for 1-D (biases) — the
+    /// same scheme `model.py` uses, so Rust- and Python-initialized models
+    /// start from the same distribution family.
+    pub fn glorot_init(specs: &[(String, Vec<usize>)],
+                       rng: &mut crate::util::rng::Rng) -> Self {
+        let mut set = Self::zeros(specs);
+        for vi in 0..set.views.len() {
+            let view = set.views[vi].clone();
+            if view.shape.len() >= 2 {
+                let fan_in = view.shape[0] as f32;
+                let fan_out = *view.shape.last().unwrap() as f32;
+                let lim = (6.0 / (fan_in + fan_out)).sqrt();
+                for x in set.view_mut(&view.name).unwrap() {
+                    *x = rng.uniform_f32(-lim, lim);
+                }
+            }
+        }
+        set
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.views.len()
+    }
+
+    pub fn views(&self) -> &[ParamView] {
+        &self.views
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Replace the whole buffer (weights received from the master).
+    pub fn set_flat(&mut self, values: &[f32]) {
+        assert_eq!(values.len(), self.data.len(), "flat size mismatch");
+        self.data.copy_from_slice(values);
+    }
+
+    pub fn view(&self, name: &str) -> Option<&[f32]> {
+        self.views
+            .iter()
+            .find(|v| v.name == name)
+            .map(|v| &self.data[v.offset..v.offset + v.len])
+    }
+
+    pub fn view_mut(&mut self, name: &str) -> Option<&mut [f32]> {
+        let v = self.views.iter().find(|v| v.name == name)?.clone();
+        Some(&mut self.data[v.offset..v.offset + v.len])
+    }
+
+    /// Slice for the i-th parameter in declaration order.
+    pub fn slice(&self, i: usize) -> &[f32] {
+        let v = &self.views[i];
+        &self.data[v.offset..v.offset + v.len]
+    }
+
+    /// `self += alpha * other` over the flat buffer.
+    pub fn axpy(&mut self, alpha: f32, other: &[f32]) {
+        assert_eq!(other.len(), self.data.len());
+        for (w, g) in self.data.iter_mut().zip(other) {
+            *w += alpha * g;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Checkpoint serialization: name/shape table + raw f32 payload.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"MPLW")?; // magic
+        f.write_all(&(1u32).to_le_bytes())?; // version
+        f.write_all(&(self.views.len() as u32).to_le_bytes())?;
+        for v in &self.views {
+            let name = v.name.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&(v.shape.len() as u32).to_le_bytes())?;
+            for d in &v.shape {
+                f.write_all(&(*d as u64).to_le_bytes())?;
+            }
+        }
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        };
+        f.write_all(bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Self> {
+        use std::io::Read;
+        let mut f = std::fs::File::open(path)?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        let bad = |m: &str| std::io::Error::new(
+            std::io::ErrorKind::InvalidData, m.to_string());
+        if buf.len() < 12 || &buf[..4] != b"MPLW" {
+            return Err(bad("not a ParamSet checkpoint"));
+        }
+        let mut pos = 4usize;
+        let rd_u32 = |buf: &[u8], pos: &mut usize| -> u32 {
+            let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into()
+                .unwrap());
+            *pos += 4;
+            v
+        };
+        let version = rd_u32(&buf, &mut pos);
+        if version != 1 {
+            return Err(bad("unsupported checkpoint version"));
+        }
+        let nviews = rd_u32(&buf, &mut pos) as usize;
+        let mut specs = Vec::with_capacity(nviews);
+        for _ in 0..nviews {
+            let nlen = rd_u32(&buf, &mut pos) as usize;
+            let name = String::from_utf8(buf[pos..pos + nlen].to_vec())
+                .map_err(|_| bad("bad name"))?;
+            pos += nlen;
+            let ndim = rd_u32(&buf, &mut pos) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let d = u64::from_le_bytes(buf[pos..pos + 8].try_into()
+                    .unwrap());
+                pos += 8;
+                shape.push(d as usize);
+            }
+            specs.push((name, shape));
+        }
+        let mut set = Self::zeros(&specs);
+        let want = set.data.len() * 4;
+        if buf.len() - pos != want {
+            return Err(bad("payload size mismatch"));
+        }
+        for (i, chunk) in buf[pos..].chunks_exact(4).enumerate() {
+            set.data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(set)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn specs() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("lstm_b".into(), vec![80]),
+            ("lstm_wh".into(), vec![20, 80]),
+            ("lstm_wx".into(), vec![16, 80]),
+            ("out_b".into(), vec![3]),
+            ("out_w".into(), vec![20, 3]),
+        ]
+    }
+
+    #[test]
+    fn layout_is_contiguous_and_ordered() {
+        let ps = ParamSet::zeros(&specs());
+        assert_eq!(ps.num_params(), 80 + 1600 + 1280 + 3 + 60);
+        let mut expect_offset = 0;
+        for v in ps.views() {
+            assert_eq!(v.offset, expect_offset);
+            expect_offset += v.len;
+        }
+    }
+
+    #[test]
+    fn views_alias_flat_buffer() {
+        let mut ps = ParamSet::zeros(&specs());
+        ps.view_mut("out_b").unwrap().copy_from_slice(&[1.0, 2.0, 3.0]);
+        let off = ps.views().iter().find(|v| v.name == "out_b").unwrap()
+            .offset;
+        assert_eq!(&ps.flat()[off..off + 3], &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn glorot_bounds_and_bias_zero() {
+        let mut rng = Rng::new(0);
+        let ps = ParamSet::glorot_init(&specs(), &mut rng);
+        let lim = (6.0f32 / (16.0 + 80.0)).sqrt();
+        for &x in ps.view("lstm_wx").unwrap() {
+            assert!(x.abs() <= lim);
+        }
+        assert!(ps.view("lstm_b").unwrap().iter().all(|&x| x == 0.0));
+        // matrices must actually be non-zero
+        assert!(ps.view("lstm_wx").unwrap().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn axpy_updates_everything() {
+        let mut ps = ParamSet::zeros(&specs());
+        let g = vec![2.0f32; ps.num_params()];
+        ps.axpy(-0.5, &g);
+        assert!(ps.flat().iter().all(|&x| x == -1.0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut rng = Rng::new(7);
+        let ps = ParamSet::glorot_init(&specs(), &mut rng);
+        let path = std::env::temp_dir().join("mpi_learn_ckpt_test.bin");
+        ps.save(&path).unwrap();
+        let loaded = ParamSet::load(&path).unwrap();
+        assert_eq!(ps, loaded);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("mpi_learn_ckpt_bad.bin");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(ParamSet::load(&path).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "flat size mismatch")]
+    fn set_flat_size_checked() {
+        let mut ps = ParamSet::zeros(&specs());
+        ps.set_flat(&[0.0; 3]);
+    }
+}

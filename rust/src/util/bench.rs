@@ -1,0 +1,146 @@
+//! Criterion-style measurement harness (offline environment: no criterion).
+//!
+//! Used by every file in `rust/benches/`: warmup, timed iterations,
+//! mean/p50/p95 reporting, and a tabular writer so each bench prints the
+//! same rows/series as the paper's corresponding table or figure.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one measured case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Measure `f` after `warmup` calls, timing `iters` calls individually.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                           mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
+        p95_s: stats::percentile(&samples, 95.0),
+        std_s: stats::std_dev(&samples),
+    }
+}
+
+/// Time a single long-running closure (end-to-end training runs).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Pretty table printer: pass header + rows; pads columns.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    println!("{}", fmt_row(&head));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w))
+        .collect::<Vec<_>>().join("  "));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Write rows as CSV next to the bench output (for plotting).
+pub fn write_csv(path: &str, header: &[&str], rows: &[Vec<String>])
+    -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut n = 0usize;
+        let m = measure("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(m.iters, 10);
+        assert!(m.mean_s >= 0.0);
+        assert!(m.p95_s >= m.p50_s);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.0e-9).ends_with("ns"));
+        assert!(fmt_secs(2.0e-5).ends_with("µs"));
+        assert!(fmt_secs(2.0e-2).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn csv_writer_works() {
+        let path = std::env::temp_dir().join("mpi_learn_bench_test.csv");
+        write_csv(path.to_str().unwrap(), &["a", "b"],
+                  &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

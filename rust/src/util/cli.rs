@@ -1,0 +1,182 @@
+//! Tiny CLI argument substrate (offline environment: no clap).
+//!
+//! Grammar: `binary [subcommand] [--key value | --flag] [positional...]`.
+//! Typed getters with defaults; unknown-flag detection so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("flag --{0}: cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+    #[error("unknown flags: {0:?} (did you misspell one?)")]
+    UnknownFlags(Vec<String>),
+}
+
+impl Args {
+    /// Parse `std::env::args()` minus the binary name. Drops the bare
+    /// `--bench` flag that `cargo bench` appends for libtest harnesses.
+    pub fn from_env() -> Self {
+        Self::parse(
+            std::env::args().skip(1).filter(|a| a != "--bench").collect())
+    }
+
+    pub fn parse(raw: Vec<String>) -> Self {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        // first non-flag token is the subcommand
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let is_flag_next = it
+                    .peek()
+                    .map(|n| n.starts_with("--"))
+                    .unwrap_or(true);
+                if is_flag_next {
+                    // boolean flag
+                    args.flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().insert(name.to_string());
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(
+                |_| CliError::BadValue(name.into(), v, "usize")),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(
+                |_| CliError::BadValue(name.into(), v, "u64")),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(
+                |_| CliError::BadValue(name.into(), v, "f64")),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.str_opt(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Comma-separated list, e.g. `--workers 1,2,4,8`.
+    pub fn usize_list(&self, name: &str, default: &[usize])
+        -> Result<Vec<usize>, CliError> {
+        match self.str_opt(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|tok| tok.trim().parse().map_err(
+                    |_| CliError::BadValue(name.into(), tok.into(), "usize")))
+                .collect(),
+        }
+    }
+
+    /// Call after all getters: errors if any flag was never consumed.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.contains(*k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::UnknownFlags(unknown))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--workers", "4", "--sync", "--lr", "0.01"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize("workers", 1).unwrap(), 4);
+        assert!(a.bool("sync"));
+        assert!((a.f64("lr", 0.0).unwrap() - 0.01).abs() < 1e-12);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["train"]);
+        assert_eq!(a.usize("workers", 3).unwrap(), 3);
+        assert!(!a.bool("sync"));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse(&["train", "--worker", "4"]);
+        let _ = a.usize("workers", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["bench", "--counts", "1,2,4, 8"]);
+        assert_eq!(a.usize_list("counts", &[]).unwrap(), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse(&["train", "--workers", "four"]);
+        assert!(a.usize("workers", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse(&["train", "--verbose"]);
+        assert!(a.bool("verbose"));
+    }
+}

@@ -1,0 +1,98 @@
+//! Leveled logger backing the `log` facade (offline: no env_logger).
+//!
+//! Level comes from `MPI_LEARN_LOG` (error|warn|info|debug|trace; default
+//! info). Lines carry elapsed-seconds timestamps and the rank tag that the
+//! coordinator threads set via [`set_rank_tag`] — so interleaved
+//! master/worker logs read like an MPI job's output.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+static INIT: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    static RANK_TAG: std::cell::RefCell<String> =
+        const { std::cell::RefCell::new(String::new()) };
+}
+
+/// Tag this thread's log lines (e.g. "master", "worker-3").
+pub fn set_rank_tag(tag: &str) {
+    RANK_TAG.with(|t| *t.borrow_mut() = tag.to_string());
+}
+
+struct Logger {
+    start: Instant,
+}
+
+impl Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = RANK_TAG.with(|t| t.borrow().clone());
+        let tag = if tag.is_empty() { String::new() } else {
+            format!("[{tag}] ")
+        };
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:9.3}s] {lvl} {tag}{}",
+            self.start.elapsed().as_secs_f64(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops.
+pub fn init() {
+    if INIT.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("MPI_LEARN_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::leak(Box::new(Logger { start: Instant::now() }));
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logging smoke line");
+    }
+
+    #[test]
+    fn rank_tag_is_thread_local() {
+        init();
+        set_rank_tag("worker-1");
+        let handle = std::thread::spawn(|| {
+            set_rank_tag("worker-2");
+            RANK_TAG.with(|t| t.borrow().clone())
+        });
+        assert_eq!(handle.join().unwrap(), "worker-2");
+        assert_eq!(RANK_TAG.with(|t| t.borrow().clone()), "worker-1");
+    }
+}

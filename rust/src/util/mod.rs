@@ -1,0 +1,12 @@
+//! Support substrates built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, logging, statistics, a bench harness, and a
+//! property-test driver. Everything above this module depends only on
+//! `std`, the `xla` crate, and these utilities.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,107 @@
+//! Property-testing substrate (offline environment: no proptest).
+//!
+//! `check` runs a property over `n` random cases drawn from a
+//! seed-deterministic RNG. On failure it retries from the same case seed to
+//! confirm, then panics with the *case seed* so the exact failing input can
+//! be replayed with `replay`. No shrinking — cases are generated small to
+//! mid-sized by construction.
+
+use crate::util::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` on `cfg.cases` random cases. `prop` gets a per-case RNG and
+/// returns `Err(msg)` to signal a violation.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(seed: u64, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    prop(&mut Rng::new(seed))
+}
+
+/// Helpers for common generators.
+pub mod gen {
+    use super::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.usize_below(hi - lo + 1)
+    }
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(0.0, scale)).collect()
+    }
+
+    pub fn labels(rng: &mut Rng, len: usize, classes: usize) -> Vec<i32> {
+        (0..len).map(|_| rng.usize_below(classes) as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("sum-commutes", PropConfig::default(), |rng| {
+            let a = rng.uniform();
+            let b = rng.uniform();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", PropConfig { cases: 5, seed: 1 }, |_| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case() {
+        let mut first: Option<f64> = None;
+        replay(99, |rng| {
+            first = Some(rng.uniform());
+            Ok(())
+        })
+        .unwrap();
+        let mut second: Option<f64> = None;
+        replay(99, |rng| {
+            second = Some(rng.uniform());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,211 @@
+//! Failure-injection tests: corrupt inputs, protocol violations, peer
+//! disconnects, early termination. The framework must fail loudly on bad
+//! data and degrade gracefully on bad peers — the failure modes a
+//! supercomputing batch job actually hits.
+
+use std::time::Duration;
+
+use mpi_learn::data::{DataSet, GeneratorConfig, Shard};
+use mpi_learn::mpi::{self, Payload, Tag};
+use mpi_learn::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("mpi_learn_failure_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+// ---------------------------------------------------------------------------
+// data corruption
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dataset_load_fails_on_corrupt_member() {
+    let cfg = GeneratorConfig { seq_len: 4, features: 2,
+                                ..Default::default() };
+    let mut rng = Rng::new(1);
+    let good = mpi_learn::data::generate_shard(&cfg, 10, &mut rng);
+    let p_good = tmp("good.mpil");
+    let p_bad = tmp("bad.mpil");
+    good.write(&p_good).unwrap();
+    good.write(&p_bad).unwrap();
+    // flip one payload byte in the second file
+    let mut bytes = std::fs::read(&p_bad).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&p_bad, &bytes).unwrap();
+    let err = DataSet::from_files(&[p_good, p_bad]);
+    assert!(err.is_err(), "corruption must not load silently");
+}
+
+#[test]
+#[should_panic(expected = "mixed seq_len")]
+fn dataset_load_panics_on_mixed_schemas() {
+    let mut rng = Rng::new(2);
+    let a = mpi_learn::data::generate_shard(
+        &GeneratorConfig { seq_len: 4, features: 2,
+                           ..Default::default() }, 5, &mut rng);
+    let b = mpi_learn::data::generate_shard(
+        &GeneratorConfig { seq_len: 6, features: 2,
+                           ..Default::default() }, 5, &mut rng);
+    let pa = tmp("schema_a.mpil");
+    let pb = tmp("schema_b.mpil");
+    a.write(&pa).unwrap();
+    b.write(&pb).unwrap();
+    let _ = DataSet::from_files(&[pa, pb]);
+}
+
+#[test]
+fn shard_zero_samples_roundtrips() {
+    // degenerate but legal: empty shard
+    let shard = Shard { seq_len: 3, features: 2, classes: 3,
+                        labels: vec![], x: vec![] };
+    let p = tmp("empty.mpil");
+    shard.write(&p).unwrap();
+    let back = Shard::read(&p).unwrap();
+    assert_eq!(back.n_samples(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// protocol violations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn master_like_loop_survives_junk_tags() {
+    // A rogue peer sends nonsense; a serving loop keyed on tags must be
+    // able to skip it and keep handling real traffic.
+    let mut world = mpi::inproc_world(3);
+    let c2 = world.pop().unwrap();
+    let c1 = world.pop().unwrap();
+    let c0 = world.pop().unwrap();
+
+    let rogue = std::thread::spawn(move || {
+        for _ in 0..5 {
+            c1.send(0, Tag::Ping, Payload::Empty).unwrap();
+        }
+        c1.send(0, Tag::Gradients, Payload::Empty).unwrap(); // wrong body
+    });
+    let honest = std::thread::spawn(move || {
+        c2.send(0, Tag::Gradients,
+                Payload::grad(0, 1.0, vec![0.5; 16])).unwrap();
+    });
+
+    let mut real_grads = 0;
+    let mut junk = 0;
+    for _ in 0..7 {
+        let env = c0.recv().unwrap();
+        match (env.tag, &env.payload) {
+            (Tag::Gradients, Payload::Grad { .. }) => real_grads += 1,
+            _ => junk += 1,
+        }
+    }
+    assert_eq!(real_grads, 1);
+    assert_eq!(junk, 6);
+    rogue.join().unwrap();
+    honest.join().unwrap();
+}
+
+#[test]
+fn recv_after_all_senders_dropped_errors() {
+    let mut world = mpi::inproc_world(2);
+    let c1 = world.pop().unwrap();
+    let c0 = world.pop().unwrap();
+    drop(c0);
+    // all senders to rank 1 are gone -> disconnect, not hang
+    match c1.recv() {
+        Err(mpi::CommError::Disconnected) => {}
+        other => panic!("expected Disconnected, got {other:?}"),
+    }
+}
+
+#[test]
+fn tcp_send_to_closed_peer_fails_gracefully() {
+    let base_port = 46900;
+    let mut world = mpi::tcp_world(2, base_port).unwrap();
+    let c1 = world.pop().unwrap();
+    let c0 = world.pop().unwrap();
+    drop(c1);
+    // allow the OS to tear down the sockets
+    std::thread::sleep(Duration::from_millis(50));
+    // the first send may land in a kernel buffer; repeated sends must
+    // eventually error rather than panic
+    let mut failed = false;
+    for _ in 0..200 {
+        if c0
+            .send(1, Tag::Weights, Payload::floats(0, vec![0.0; 65_536]))
+            .is_err()
+        {
+            failed = true;
+            break;
+        }
+    }
+    assert!(failed, "sends to a dead TCP peer should eventually fail");
+}
+
+#[test]
+fn wire_decode_never_panics_on_fuzz() {
+    let mut rng = Rng::new(99);
+    for _ in 0..2000 {
+        let len = rng.usize_below(256);
+        let buf: Vec<u8> =
+            (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = mpi_learn::mpi::message::decode(&buf); // must not panic
+    }
+}
+
+// ---------------------------------------------------------------------------
+// early termination
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worker_stops_cleanly_on_exit_message() {
+    // A fake master: handshake, then answer the first gradient with Exit.
+    // The worker must wind down and still deliver its stats + Exit.
+    let dir = mpi_learn::runtime::default_artifact_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let session = mpi_learn::runtime::Session::open(&dir).unwrap();
+    let exes = session.executables("lstm_b10").unwrap();
+
+    let mut world = mpi::inproc_world(2);
+    let wcomm = world.pop().unwrap();
+    let mcomm = world.pop().unwrap();
+
+    let algo = mpi_learn::coordinator::Algo {
+        batch_size: 10,
+        epochs: 50, // would run long if Exit were ignored
+        ..Default::default()
+    };
+    let gen = GeneratorConfig::default();
+    let mut rng = Rng::new(3);
+    let ds = DataSet::from_shard(mpi_learn::data::generate_shard(
+        &gen, 100, &mut rng));
+
+    let exes2 = exes.clone();
+    let algo2 = algo.clone();
+    let worker = std::thread::spawn(move || {
+        mpi_learn::coordinator::worker::Worker::new(
+            &wcomm, 0, &algo2, &exes2, &ds, 1).run()
+    });
+
+    // fake master
+    let n = exes.meta.param_count;
+    let env = mcomm.recv().unwrap();
+    assert_eq!(env.tag, Tag::Ready);
+    mcomm.send(1, Tag::Weights, Payload::floats(0, vec![0.0; n]))
+        .unwrap();
+    let env = mcomm.recv().unwrap();
+    assert_eq!(env.tag, Tag::Gradients);
+    mcomm.send(1, Tag::Exit, Payload::Empty).unwrap();
+
+    // worker should wrap up: TrainStats then Exit
+    let mut tags = Vec::new();
+    for _ in 0..2 {
+        tags.push(mcomm.recv().unwrap().tag);
+    }
+    assert_eq!(tags, vec![Tag::TrainStats, Tag::Exit]);
+    let report = worker.join().unwrap().unwrap();
+    assert!(report.batches <= 1);
+}

@@ -1,0 +1,405 @@
+//! Integration tests over the full stack: PJRT runtime + coordinator.
+//!
+//! These require `make artifacts` to have produced `artifacts/meta.json`;
+//! they are skipped (not failed) otherwise so `cargo test` stays green on
+//! a fresh checkout.
+
+use std::sync::{Arc, OnceLock};
+
+use mpi_learn::coordinator::{train, train_direct, Algo, Data,
+                             HierarchySpec, Mode, ModelBuilder,
+                             TrainConfig, Transport};
+use mpi_learn::data::GeneratorConfig;
+use mpi_learn::optim::OptimizerConfig;
+use mpi_learn::runtime::Session;
+use mpi_learn::tensor::ParamSet;
+use mpi_learn::util::rng::Rng;
+
+fn session() -> Option<&'static Session> {
+    static SESSION: OnceLock<Option<Session>> = OnceLock::new();
+    SESSION
+        .get_or_init(|| {
+            let dir = mpi_learn::runtime::default_artifact_dir();
+            if dir.join("meta.json").exists() {
+                Some(Session::open(&dir).expect("artifacts exist but \
+                                                 failed to open"))
+            } else {
+                eprintln!("SKIP: no artifacts (run `make artifacts`)");
+                None
+            }
+        })
+        .as_ref()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match session() {
+            Some(s) => s,
+            None => return,
+        }
+    };
+}
+
+fn small_synthetic(samples_per_worker: usize) -> Data {
+    Data::Synthetic {
+        gen: GeneratorConfig { seed: 7, ..Default::default() },
+        samples_per_worker,
+        val_samples: 200,
+    }
+}
+
+fn tiny_cfg(workers: usize) -> TrainConfig {
+    TrainConfig {
+        builder: ModelBuilder::new("lstm", 10),
+        algo: Algo {
+            batch_size: 10,
+            epochs: 1,
+            validate_every: 0,
+            max_val_batches: 3,
+            ..Algo::default()
+        },
+        n_workers: workers,
+        seed: 1,
+        transport: Transport::Inproc,
+        hierarchy: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// runtime
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grad_step_runs_and_shapes_match() {
+    let s = require_artifacts!();
+    let exes = s.executables("lstm_b10").unwrap();
+    let mut rng = Rng::new(0);
+    let params = exes.init_params(&mut rng);
+    let x = vec![0.1f32; exes.meta.x_len()];
+    let y = vec![1i32; exes.meta.batch];
+    let out = exes.grad_step(&params, &x, &y).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    assert_eq!(out.grads.len(), exes.meta.param_count);
+    assert!(out.grads.iter().any(|&g| g != 0.0));
+}
+
+#[test]
+fn grad_matches_finite_difference() {
+    // Directional finite-difference check of the whole compiled fwd/bwd:
+    // f(w + eps*d) - f(w - eps*d) ≈ 2 eps <grad, d>.
+    let s = require_artifacts!();
+    let exes = s.executables("lstm_b10").unwrap();
+    let mut rng = Rng::new(3);
+    let params = exes.init_params(&mut rng);
+    let x: Vec<f32> = (0..exes.meta.x_len())
+        .map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let y: Vec<i32> = (0..exes.meta.batch)
+        .map(|_| rng.usize_below(3) as i32)
+        .collect();
+    let out = exes.grad_step(&params, &x, &y).unwrap();
+    let dir: Vec<f32> = (0..params.num_params())
+        .map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let eps = 1e-3f32;
+    let mut plus = params.clone();
+    plus.axpy(eps, &dir);
+    let mut minus = params.clone();
+    minus.axpy(-eps, &dir);
+    let (lp, _) = exes.eval_step(&plus, &x, &y).unwrap();
+    let (lm, _) = exes.eval_step(&minus, &x, &y).unwrap();
+    let fd = (lp - lm) / (2.0 * eps);
+    let analytic: f32 = out
+        .grads
+        .iter()
+        .zip(&dir)
+        .map(|(g, d)| g * d)
+        .sum();
+    let denom = fd.abs().max(analytic.abs()).max(1e-3);
+    assert!(
+        (fd - analytic).abs() / denom < 0.05,
+        "fd={fd} analytic={analytic}"
+    );
+}
+
+#[test]
+fn eval_accuracy_in_range() {
+    let s = require_artifacts!();
+    let exes = s.executables("lstm_b10").unwrap();
+    let mut rng = Rng::new(1);
+    let params = exes.init_params(&mut rng);
+    let x = vec![0.0f32; exes.meta.x_len()];
+    let y = vec![0i32; exes.meta.batch];
+    let (loss, ncorrect) = exes.eval_step(&params, &x, &y).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=exes.meta.batch as f32).contains(&ncorrect));
+}
+
+#[test]
+fn predict_logits_shape() {
+    let s = require_artifacts!();
+    let exes = s.executables("lstm_b10").unwrap();
+    let mut rng = Rng::new(2);
+    let params = exes.init_params(&mut rng);
+    let x = vec![0.5f32; exes.meta.x_len()];
+    let logits = exes.predict(&params, &x).unwrap();
+    assert_eq!(logits.len(), exes.meta.batch * exes.meta.classes);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn bad_input_sizes_rejected() {
+    let s = require_artifacts!();
+    let exes = s.executables("lstm_b10").unwrap();
+    let mut rng = Rng::new(0);
+    let params = exes.init_params(&mut rng);
+    let x = vec![0.0f32; 7]; // wrong
+    let y = vec![0i32; exes.meta.batch];
+    assert!(exes.grad_step(&params, &x, &y).is_err());
+    let x = vec![0.0f32; exes.meta.x_len()];
+    let y = vec![0i32; 3]; // wrong
+    assert!(exes.grad_step(&params, &x, &y).is_err());
+}
+
+#[test]
+fn concurrent_grad_steps_are_safe_and_deterministic() {
+    // Backs the `unsafe impl Sync` on Executable: hammer one compiled
+    // executable from many threads and require identical results for
+    // identical inputs.
+    let s = require_artifacts!();
+    let exes = s.executables("lstm_b10").unwrap();
+    let mut rng = Rng::new(5);
+    let params = Arc::new(exes.init_params(&mut rng));
+    let x: Arc<Vec<f32>> = Arc::new(
+        (0..exes.meta.x_len()).map(|_| rng.normal_f32(0.0, 1.0))
+            .collect());
+    let y: Arc<Vec<i32>> = Arc::new(
+        (0..exes.meta.batch).map(|_| rng.usize_below(3) as i32)
+            .collect());
+    let reference = exes.grad_step(&params, &x, &y).unwrap();
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let exes = exes.clone();
+            let params = params.clone();
+            let x = x.clone();
+            let y = y.clone();
+            let ref_loss = reference.loss;
+            let ref_grads = reference.grads.clone();
+            scope.spawn(move || {
+                for _ in 0..16 {
+                    let out = exes.grad_step(&params, &x, &y).unwrap();
+                    assert_eq!(out.loss, ref_loss);
+                    assert_eq!(out.grads, ref_grads);
+                }
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// training sessions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn async_downpour_trains_to_high_accuracy() {
+    let s = require_artifacts!();
+    let mut cfg = tiny_cfg(2);
+    cfg.algo.epochs = 2;
+    let result = train(s, &cfg, &small_synthetic(300)).unwrap();
+    let acc = result.history.final_val_acc().unwrap();
+    assert!(acc > 0.9, "final val acc {acc}");
+    assert!(result.history.master_updates >= 2 * 2 * 30);
+}
+
+#[test]
+fn sync_downpour_round_counting() {
+    let s = require_artifacts!();
+    let mut cfg = tiny_cfg(3);
+    cfg.algo.mode = Mode::Downpour { sync: true };
+    let result = train(s, &cfg, &small_synthetic(100)).unwrap();
+    // 3 workers x 10 batches each, barrier of 3 -> exactly 10 rounds
+    assert_eq!(result.history.master_updates, 10);
+}
+
+#[test]
+fn easgd_trains() {
+    let s = require_artifacts!();
+    let mut cfg = tiny_cfg(2);
+    cfg.algo.epochs = 3;
+    cfg.algo.mode = Mode::Easgd {
+        tau: 5,
+        alpha: 0.5,
+        worker_optimizer: OptimizerConfig::Momentum {
+            lr: 0.05, momentum: 0.9, nesterov: false },
+    };
+    let result = train(s, &cfg, &small_synthetic(300)).unwrap();
+    let acc = result.history.final_val_acc().unwrap();
+    assert!(acc > 0.8, "easgd final val acc {acc}");
+}
+
+#[test]
+fn hierarchical_two_groups() {
+    let s = require_artifacts!();
+    let mut cfg = tiny_cfg(4);
+    cfg.hierarchy = Some(HierarchySpec {
+        n_groups: 2,
+        workers_per_group: 2,
+        sync_every: 5,
+    });
+    cfg.algo.epochs = 2;
+    let result = train(s, &cfg, &small_synthetic(200)).unwrap();
+    let acc = result.history.final_val_acc().unwrap();
+    assert!(acc > 0.8, "hierarchical final val acc {acc}");
+    // super-master sees one AggGradients per group sync
+    assert!(result.history.master_updates > 0);
+}
+
+#[test]
+fn tcp_transport_trains() {
+    let s = require_artifacts!();
+    let mut cfg = tiny_cfg(2);
+    cfg.transport = Transport::Tcp { base_port: 47300 };
+    let result = train(s, &cfg, &small_synthetic(100)).unwrap();
+    assert!(result.history.master_updates >= 20);
+}
+
+#[test]
+fn direct_baseline_trains() {
+    let s = require_artifacts!();
+    let mut cfg = tiny_cfg(1);
+    cfg.algo.epochs = 2;
+    let result = train_direct(s, &cfg, &small_synthetic(300)).unwrap();
+    let acc = result.history.final_val_acc().unwrap();
+    assert!(acc > 0.9, "direct final val acc {acc}");
+}
+
+#[test]
+fn single_worker_matches_direct_loss_trajectory() {
+    // mpi_learn-with-1-worker vs Keras-alone (§V): same data, same seeds
+    // -> statistically indistinguishable training. We check both reach
+    // high accuracy and similar final loss.
+    let s = require_artifacts!();
+    let mut cfg = tiny_cfg(1);
+    cfg.algo.epochs = 2;
+    let data = small_synthetic(300);
+    let dist = train(s, &cfg, &data).unwrap();
+    let direct = train_direct(s, &cfg, &data).unwrap();
+    let a = dist.history.validations.last().unwrap();
+    let b = direct.history.validations.last().unwrap();
+    assert!((a.val_acc - b.val_acc).abs() < 0.1,
+            "dist {} vs direct {}", a.val_acc, b.val_acc);
+}
+
+#[test]
+fn validation_schedule_produces_records() {
+    let s = require_artifacts!();
+    let mut cfg = tiny_cfg(2);
+    cfg.algo.validate_every = 10;
+    cfg.algo.epochs = 1;
+    let result = train(s, &cfg, &small_synthetic(200)).unwrap();
+    // 2 workers x 20 batches = 40 updates -> ~4 scheduled + 1 final
+    assert!(result.history.validations.len() >= 4,
+            "got {}", result.history.validations.len());
+}
+
+#[test]
+fn training_is_deterministic_for_sync_single_worker() {
+    // Full determinism holds when there's no async interleaving:
+    // one worker, fixed seeds -> identical final weights.
+    let s = require_artifacts!();
+    let cfg = tiny_cfg(1);
+    let data = small_synthetic(100);
+    let r1 = train(s, &cfg, &data).unwrap();
+    let r2 = train(s, &cfg, &data).unwrap();
+    assert_eq!(r1.weights, r2.weights);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_training() {
+    let s = require_artifacts!();
+    let cfg = tiny_cfg(1);
+    let result = train(s, &cfg, &small_synthetic(100)).unwrap();
+    let path = std::env::temp_dir().join("mpi_learn_integration_ckpt.bin");
+    result.weights.save(&path).unwrap();
+    let loaded = ParamSet::load(&path).unwrap();
+    assert_eq!(loaded, result.weights);
+}
+
+#[test]
+fn staleness_tracks_worker_count() {
+    // The Fig 2 mechanism: with W async workers interleaving, mean
+    // gradient staleness approaches W-1 (each gradient is based on
+    // weights from ~W-1 updates ago).
+    let s = require_artifacts!();
+    let data = small_synthetic(200);
+    let mut cfg = tiny_cfg(4);
+    cfg.algo.epochs = 2;
+    let r = train(s, &cfg, &data).unwrap();
+    assert!(r.history.staleness_mean > 1.0,
+            "4 workers should produce staleness >1, got {}",
+            r.history.staleness_mean);
+    let r1 = train(s, &tiny_cfg(1), &data).unwrap();
+    assert_eq!(r1.history.staleness_mean, 0.0,
+               "single worker is never stale");
+}
+
+#[test]
+fn spmd_run_rank_over_tcp_mesh() {
+    // The mpirun-style deployment path: every rank its own endpoint
+    // (threads here; `mpi-learn launch` runs the same code in separate
+    // OS processes).
+    let s = require_artifacts!();
+    let mut cfg = tiny_cfg(2);
+    cfg.algo.epochs = 1;
+    let data = small_synthetic(100);
+    let result = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for rank in 1..=2 {
+            let cfg = &cfg;
+            let data = &data;
+            handles.push(scope.spawn(move || {
+                mpi_learn::coordinator::run_rank(s, cfg, data, rank,
+                                                 47800)
+            }));
+        }
+        let master = mpi_learn::coordinator::run_rank(s, &cfg, &data, 0,
+                                                      47800);
+        for h in handles {
+            assert!(h.join().unwrap().unwrap().is_none());
+        }
+        master
+    })
+    .unwrap()
+    .expect("rank 0 returns the result");
+    assert_eq!(result.history.master_updates, 20);
+}
+
+#[test]
+fn job_config_end_to_end() {
+    // config-file driven training: JSON -> JobConfig -> train
+    let s = require_artifacts!();
+    let job = mpi_learn::coordinator::JobConfig::from_json_text(
+        r#"{
+            "model": "lstm", "batch": 10, "workers": 2,
+            "algo": {"epochs": 1, "max_val_batches": 2,
+                     "optimizer": {"kind": "sgd", "lr": 0.05}},
+            "data": {"synthetic": {"samples_per_worker": 100,
+                                   "val_samples": 100}}
+        }"#)
+        .unwrap();
+    let r = train(s, &job.train, &job.data).unwrap();
+    assert_eq!(r.history.master_updates, 20);
+    assert!(r.history.final_val_acc().is_some());
+}
+
+#[test]
+fn more_workers_do_more_updates_per_wallclock() {
+    // Weak-scaling sanity: with per-worker data fixed, total master
+    // updates scale with worker count.
+    let s = require_artifacts!();
+    let data = small_synthetic(100); // 10 batches per worker
+    let r1 = train(s, &tiny_cfg(1), &data).unwrap();
+    let r4 = train(s, &tiny_cfg(4), &data).unwrap();
+    assert_eq!(r1.history.master_updates, 10);
+    assert_eq!(r4.history.master_updates, 40);
+}

@@ -1,0 +1,303 @@
+//! Property-based tests over coordinator/substrate invariants (custom
+//! `util::prop` driver — no proptest crate offline).
+//!
+//! Focus: routing (file division), batching, wire encoding, parameter
+//! state, and simulator conservation laws — the invariants the training
+//! protocol's correctness rests on.
+
+use std::path::PathBuf;
+
+use mpi_learn::data::loader::{divide_files, division_is_partition};
+use mpi_learn::data::{generate_shard, DataSet, GeneratorConfig};
+use mpi_learn::mpi::message::{decode, encode, Payload, Tag, WorkerStats};
+use mpi_learn::simulator::{simulate_async, simulate_sync, CostModel,
+                           SimConfig};
+use mpi_learn::tensor::ParamSet;
+use mpi_learn::util::json::Json;
+use mpi_learn::util::prop::{check, gen, PropConfig};
+use mpi_learn::util::rng::Rng;
+
+fn cases(n: usize) -> PropConfig {
+    PropConfig { cases: n, seed: 0xD15C0 }
+}
+
+#[test]
+fn prop_file_division_is_balanced_partition() {
+    check("file-division", cases(200), |rng| {
+        let n_files = gen::usize_in(rng, 1, 200);
+        let n_workers = gen::usize_in(rng, 1, 64);
+        let paths: Vec<PathBuf> = (0..n_files)
+            .map(|i| PathBuf::from(format!("shard_{i}")))
+            .collect();
+        if !division_is_partition(&paths, n_workers) {
+            return Err(format!(
+                "not a partition: {n_files} files, {n_workers} workers"));
+        }
+        let sizes: Vec<usize> = (0..n_workers)
+            .map(|w| divide_files(&paths, w, n_workers).len())
+            .collect();
+        let (min, max) = (sizes.iter().min().unwrap(),
+                          sizes.iter().max().unwrap());
+        if max - min > 1 {
+            return Err(format!("unbalanced: {sizes:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_random_payloads() {
+    check("wire-roundtrip", cases(300), |rng| {
+        let tag = match rng.usize_below(5) {
+            0 => Tag::Ready,
+            1 => Tag::Gradients,
+            2 => Tag::Weights,
+            3 => Tag::ExchangeWeights,
+            _ => Tag::TrainStats,
+        };
+        let payload = match rng.usize_below(4) {
+            0 => Payload::Empty,
+            1 => {
+                let step = rng.next_u64();
+                let len = gen::usize_in(rng, 0, 5000);
+                let data = gen::f32_vec(rng, len, 10.0);
+                Payload::floats(step, data)
+            }
+            2 => {
+                let step = rng.next_u64();
+                let loss = rng.normal_f32(0.0, 5.0);
+                let len = gen::usize_in(rng, 0, 5000);
+                let data = gen::f32_vec(rng, len, 1.0);
+                Payload::grad(step, loss, data)
+            }
+            _ => Payload::Stats(WorkerStats {
+                epoch: rng.next_u64() as u32,
+                batches_done: rng.next_u64() >> 8,
+                samples_done: rng.next_u64() >> 8,
+                train_loss: rng.normal_f32(1.0, 2.0),
+                grad_time_s: rng.uniform() * 100.0,
+                comm_wait_s: rng.uniform() * 10.0,
+            }),
+        };
+        let buf = encode(tag, &payload);
+        if buf.len() != payload.nbytes() {
+            return Err("nbytes mismatch".into());
+        }
+        let (t2, p2) = decode(&buf).map_err(|e| e.to_string())?;
+        if t2 != tag || p2 != payload {
+            return Err("roundtrip mismatch".into());
+        }
+        // truncation must never panic, only error
+        let cut = rng.usize_below(buf.len().max(1));
+        let _ = decode(&buf[..cut]);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_paramset_checkpoint_roundtrip() {
+    let dir = std::env::temp_dir().join("mpi_learn_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut case_id = 0u64;
+    check("paramset-roundtrip", cases(40), |rng| {
+        case_id += 1;
+        let n_tensors = gen::usize_in(rng, 1, 8);
+        let specs: Vec<(String, Vec<usize>)> = (0..n_tensors)
+            .map(|i| {
+                let ndim = gen::usize_in(rng, 1, 3);
+                let shape: Vec<usize> =
+                    (0..ndim).map(|_| gen::usize_in(rng, 1, 24)).collect();
+                (format!("p{i}"), shape)
+            })
+            .collect();
+        let mut ps = ParamSet::glorot_init(&specs, rng);
+        // randomize biases too
+        for v in ps.flat_mut() {
+            *v += rng.normal_f32(0.0, 0.1);
+        }
+        let path = dir.join(format!("ckpt_{case_id}.bin"));
+        ps.save(&path).map_err(|e| e.to_string())?;
+        let loaded = ParamSet::load(&path).map_err(|e| e.to_string())?;
+        if loaded != ps {
+            return Err("checkpoint roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batching_covers_every_sample_at_most_once() {
+    check("batching", cases(60), |rng| {
+        let n = gen::usize_in(rng, 10, 400);
+        let batch = gen::usize_in(rng, 1, n);
+        let gen_cfg = GeneratorConfig {
+            seq_len: gen::usize_in(rng, 1, 6),
+            features: gen::usize_in(rng, 1, 5),
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let mut grng = Rng::new(gen_cfg.seed);
+        let ds = DataSet::from_shard(generate_shard(&gen_cfg, n,
+                                                    &mut grng));
+        let mut seen = 0usize;
+        let mut brng = rng.fork(1);
+        ds.for_each_batch(batch, &mut brng, |x, y| {
+            if x.len() != batch * gen_cfg.seq_len * gen_cfg.features {
+                panic!("bad x len");
+            }
+            seen += y.len();
+        });
+        let expect = (n / batch) * batch;
+        if seen != expect {
+            return Err(format!("saw {seen}, expected {expect}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_conservation_laws() {
+    check("simulator-laws", cases(80), |rng| {
+        let n_params = gen::usize_in(rng, 100, 100_000);
+        let mut cost = CostModel::cluster(n_params);
+        cost.jitter = rng.uniform() * 0.3;
+        cost.t_val = rng.uniform() * 0.01;
+        let cfg = SimConfig {
+            n_workers: gen::usize_in(rng, 1, 64),
+            total_samples: gen::usize_in(rng, 1000, 100_000) as u64,
+            batch: [10, 100, 500][rng.usize_below(3)],
+            epochs: gen::usize_in(rng, 1, 4) as u32,
+            validate_every: [0, 10, 100][rng.usize_below(3)] as u64,
+            sync: false,
+        };
+        let seed = rng.next_u64();
+        let r = simulate_async(&cost, &cfg, seed);
+        let expected_updates =
+            cfg.batches_per_worker() * cfg.n_workers as u64;
+        if r.updates != expected_updates {
+            return Err(format!("updates {} != {expected_updates}",
+                               r.updates));
+        }
+        if r.master_busy_s > r.total_time_s + 1e-9 {
+            return Err("master busier than wallclock".into());
+        }
+        if !(0.0..=1.0 + 1e-9).contains(&r.master_utilization) {
+            return Err(format!("utilization {}", r.master_utilization));
+        }
+        // master can't beat its own service rate
+        let floor = r.updates as f64 * cost.t_update;
+        if r.total_time_s < floor - 1e-9 {
+            return Err("faster than master service floor".into());
+        }
+        let rs = simulate_sync(&cost, &cfg, seed);
+        if rs.updates != cfg.batches_per_worker() {
+            return Err("sync round count wrong".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_speedup_bounded_by_workers() {
+    check("speedup-bound", cases(30), |rng| {
+        let mut cost = CostModel::shared_memory(3023);
+        cost.jitter = 0.0; // deterministic for a strict bound
+        let w = gen::usize_in(rng, 1, 32);
+        // keep total work identical across worker counts (no remainder
+        // batches dropped), else the bound is confounded
+        let base = SimConfig {
+            n_workers: 1,
+            total_samples: (w * 100 * gen::usize_in(rng, 5, 40)) as u64,
+            batch: 100,
+            epochs: 1,
+            validate_every: 0,
+            sync: false,
+        };
+        let t1 = simulate_async(&cost, &base, 0).total_time_s;
+        let tw = simulate_async(
+            &cost, &SimConfig { n_workers: w, ..base.clone() }, 0)
+            .total_time_s;
+        let speedup = t1 / tw;
+        if speedup > w as f64 + 1e-6 {
+            return Err(format!("superlinear: {speedup} at {w}"));
+        }
+        if speedup < 0.9 {
+            return Err(format!("sublinear below 1: {speedup}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.usize_below(4) }
+              else { rng.usize_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => {
+                let len = rng.usize_below(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.usize_below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            '\\'
+                        }
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.usize_below(5))
+                .map(|_| random_json(rng, depth - 1))
+                .collect()),
+            _ => Json::Obj((0..rng.usize_below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect()),
+        }
+    }
+    check("json-roundtrip", cases(200), |rng| {
+        let j = random_json(rng, 3);
+        for text in [j.to_string_compact(), j.to_string_pretty()] {
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            if parsed != j {
+                return Err(format!("roundtrip mismatch: {text}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimizer_state_dimensions_stable() {
+    use mpi_learn::optim::OptimizerConfig;
+    check("optimizer-dims", cases(50), |rng| {
+        let n = gen::usize_in(rng, 1, 4096);
+        let cfgs = [
+            OptimizerConfig::Sgd { lr: 0.01 },
+            OptimizerConfig::Momentum { lr: 0.01, momentum: 0.9,
+                                        nesterov: false },
+            OptimizerConfig::Adam { lr: 0.01, beta1: 0.9, beta2: 0.999,
+                                    eps: 1e-8 },
+        ];
+        let mut w = gen::f32_vec(rng, n, 1.0);
+        let g = gen::f32_vec(rng, n, 1.0);
+        for cfg in cfgs {
+            let mut opt = cfg.build(n);
+            let before = w.clone();
+            opt.update(&mut w, &g);
+            if w.len() != n {
+                return Err("dimension changed".into());
+            }
+            if w == before && g.iter().any(|&x| x != 0.0) {
+                return Err(format!("{} made no progress", opt.name()));
+            }
+            if w.iter().any(|x| !x.is_finite()) {
+                return Err(format!("{} produced non-finite", opt.name()));
+            }
+        }
+        Ok(())
+    });
+}
