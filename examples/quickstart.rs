@@ -6,8 +6,10 @@
 //!     cargo run --release --example quickstart -- --model transformer \
 //!         --batch 16 --workers 2 --epochs 1
 //!     cargo run --release --example quickstart -- --direct   # no framework
+//!     cargo run --release --example quickstart -- --allreduce \
+//!         --workers 4                       # masterless ring all-reduce
 
-use mpi_learn::coordinator::{train, train_direct, Algo, Data,
+use mpi_learn::coordinator::{train, train_direct, Algo, Data, Mode,
                              ModelBuilder, TrainConfig, Transport};
 use mpi_learn::data::GeneratorConfig;
 use mpi_learn::util::cli::Args;
@@ -19,13 +21,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let workers = args.usize("workers", 2)?;
     let epochs = args.usize("epochs", 3)? as u32;
     let direct = args.bool("direct");
+    let allreduce = args.bool("allreduce");
     args.finish()?;
 
-    // 1. the model: an AOT-compiled artifact variant
+    // 1. the model: an artifact variant (AOT-compiled, or the built-in
+    //    native backend when no artifacts are present)
     let builder = ModelBuilder::new(&model, batch);
 
-    // 2. the training procedure: async Downpour with momentum SGD
+    // 2. the training procedure: async Downpour with momentum SGD, or
+    //    the masterless synchronous ring all-reduce
     let algo = Algo {
+        mode: if allreduce { Mode::AllReduce }
+              else { Algo::default().mode },
         batch_size: batch,
         epochs,
         validate_every: 20,
@@ -54,7 +61,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         println!("running the no-framework baseline (\"Keras alone\")...");
         train_direct(&session, &cfg, &data)?
     } else {
-        println!("running async Downpour with {workers} workers...");
+        if allreduce {
+            println!("running masterless ring all-reduce with {workers} \
+                      ranks...");
+        } else {
+            println!("running async Downpour with {workers} workers...");
+        }
         train(&session, &cfg, &data)?
     };
 

@@ -28,6 +28,12 @@ pub enum Mode {
         /// The worker-local optimizer.
         worker_optimizer: OptimizerConfig,
     },
+    /// Masterless synchronous data-parallel: every rank computes a
+    /// gradient, the world averages them with a chunked ring all-reduce,
+    /// and every rank applies an identical optimizer step — no
+    /// parameter-server bottleneck (Vishnu et al., HyPar-Flow). Uses
+    /// `Algo::optimizer` as the replicated per-rank optimizer.
+    AllReduce,
 }
 
 /// Full training-procedure configuration.
@@ -89,6 +95,10 @@ impl Algo {
         }
     }
 
+    pub fn allreduce() -> Self {
+        Algo { mode: Mode::AllReduce, ..Algo::default() }
+    }
+
     /// Parse from a config-file JSON object. Unknown `mode` errors.
     pub fn from_json(j: &Json) -> Result<Algo, String> {
         let mut algo = Algo::default();
@@ -129,6 +139,7 @@ impl Algo {
                     .unwrap_or(OptimizerConfig::Sgd { lr: 0.05 });
                 algo.mode = Mode::Easgd { tau, alpha, worker_optimizer };
             }
+            "allreduce" => algo.mode = Mode::AllReduce,
             other => return Err(format!("unknown mode '{other}'")),
         }
         Ok(algo)
@@ -188,6 +199,18 @@ mod tests {
     fn bad_mode_rejected() {
         let j = Json::parse(r#"{"mode": "hogwild"}"#).unwrap();
         assert!(Algo::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn json_allreduce() {
+        let j = Json::parse(
+            r#"{"mode": "allreduce",
+                "optimizer": {"kind": "sgd", "lr": 0.02}}"#).unwrap();
+        let a = Algo::from_json(&j).unwrap();
+        assert_eq!(a.mode, Mode::AllReduce);
+        assert_eq!(a.optimizer,
+                   crate::optim::OptimizerConfig::Sgd { lr: 0.02 });
+        assert_eq!(Algo::allreduce().mode, Mode::AllReduce);
     }
 
     #[test]

@@ -33,6 +33,12 @@ impl ModelBuilder {
 }
 
 /// Training + validation data source.
+///
+/// The same even division serves every training mode: Downpour/EASGD
+/// workers each load their share, and in `Mode::AllReduce` every rank of
+/// the masterless world is a "worker" (rank r takes division r of n).
+/// Uneven divisions are safe in all modes — the all-reduce loop agrees
+/// on the minimum per-epoch batch count up front.
 #[derive(Clone, Debug)]
 pub enum Data {
     /// Shard files on disk, divided evenly among workers (paper §III-B).

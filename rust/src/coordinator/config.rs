@@ -13,7 +13,8 @@
 //!   "transport": "inproc" | {"tcp": {"base_port": 47000}},
 //!   "hierarchy": {"groups": 2, "workers_per_group": 2,
 //!                 "sync_every": 5},
-//!   "algo": { ... see Algo::from_json ... },
+//!   "algo": { ... see Algo::from_json; "mode" may be "downpour",
+//!             "easgd", or "allreduce" (masterless ring) ... },
 //!   "data": {"dir": "data/hep"}                    // file-sharded
 //!         | {"synthetic": {"samples_per_worker": 2000,
 //!                          "val_samples": 1000,
@@ -31,15 +32,26 @@ use crate::coordinator::hierarchy::HierarchySpec;
 use crate::data::{list_train_files, GeneratorConfig};
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io reading {0}: {1}")]
     Io(PathBuf, std::io::Error),
-    #[error("parse: {0}")]
     Parse(String),
-    #[error("config: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(path, err) => {
+                write!(f, "io reading {}: {err}", path.display())
+            }
+            ConfigError::Parse(msg) => write!(f, "parse: {msg}"),
+            ConfigError::Invalid(msg) => write!(f, "config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// A fully-resolved training job description.
 pub struct JobConfig {
@@ -226,6 +238,15 @@ mod tests {
             }
             d => panic!("{d:?}"),
         }
+    }
+
+    #[test]
+    fn allreduce_mode_config() {
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 4,
+                "algo": {"mode": "allreduce"}}"#).unwrap();
+        assert_eq!(job.train.algo.mode, Mode::AllReduce);
+        assert_eq!(job.train.n_workers, 4);
     }
 
     #[test]

@@ -12,11 +12,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::algo::Algo;
+use crate::coordinator::algo::{Algo, Mode};
 use crate::coordinator::builder::{Data, ModelBuilder};
 use crate::coordinator::hierarchy::{GroupMaster, HierarchySpec, Role};
 use crate::coordinator::master::{Master, MasterContext};
-use crate::coordinator::worker::Worker;
+use crate::coordinator::worker::{RingWorker, Worker};
 use crate::data::DataSet;
 use crate::metrics::History;
 use crate::mpi;
@@ -24,18 +24,49 @@ use crate::runtime::{ModelExecutables, Session};
 use crate::tensor::ParamSet;
 use crate::util::rng::Rng;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TrainError {
-    #[error("session: {0}")]
-    Session(#[from] crate::runtime::SessionError),
-    #[error("data: {0}")]
-    Data(#[from] crate::data::ShardError),
-    #[error("comm: {0}")]
-    Comm(#[from] mpi::CommError),
-    #[error("worker {rank}: {msg}")]
+    Session(crate::runtime::SessionError),
+    Data(crate::data::ShardError),
+    Comm(mpi::CommError),
     Worker { rank: usize, msg: String },
-    #[error("thread panicked: {0}")]
     Panic(String),
+    Config(String),
+}
+
+impl std::fmt::Display for TrainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrainError::Session(e) => write!(f, "session: {e}"),
+            TrainError::Data(e) => write!(f, "data: {e}"),
+            TrainError::Comm(e) => write!(f, "comm: {e}"),
+            TrainError::Worker { rank, msg } => {
+                write!(f, "worker {rank}: {msg}")
+            }
+            TrainError::Panic(what) => write!(f, "thread panicked: {what}"),
+            TrainError::Config(msg) => write!(f, "config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TrainError {}
+
+impl From<crate::runtime::SessionError> for TrainError {
+    fn from(e: crate::runtime::SessionError) -> Self {
+        TrainError::Session(e)
+    }
+}
+
+impl From<crate::data::ShardError> for TrainError {
+    fn from(e: crate::data::ShardError) -> Self {
+        TrainError::Data(e)
+    }
+}
+
+impl From<mpi::CommError> for TrainError {
+    fn from(e: mpi::CommError) -> Self {
+        TrainError::Comm(e)
+    }
 }
 
 /// Which transport carries the training protocol.
@@ -106,6 +137,17 @@ pub fn train(session: &Session, cfg: &TrainConfig, data: &Data)
     let mut rng = Rng::new(cfg.seed);
     let init = ParamSet::glorot_init(&exes.meta.params, &mut rng);
 
+    if matches!(cfg.algo.mode, Mode::AllReduce) {
+        if cfg.hierarchy.is_some() {
+            return Err(TrainError::Config(
+                "allreduce mode is flat by construction; drop the \
+                 hierarchy spec"
+                    .into(),
+            ));
+        }
+        return train_allreduce(cfg, &exes, init, worker_data, val);
+    }
+
     match &cfg.hierarchy {
         None => train_flat(cfg, &exes, init, worker_data, val),
         Some(spec) => train_hierarchical(cfg, *spec, &exes, init,
@@ -161,6 +203,66 @@ fn train_flat(cfg: &TrainConfig, exes: &Arc<ModelExecutables>,
                 Err(_) => {
                     return Err(TrainError::Panic(format!(
                         "worker {}", wi + 1)))
+                }
+            }
+        }
+        Ok(outcome)
+    })?;
+
+    let wallclock_s = t0.elapsed().as_secs_f64();
+    let mut history = outcome.history;
+    history.wallclock_s = wallclock_s;
+    Ok(TrainResult { history, weights: outcome.weights, wallclock_s })
+}
+
+/// Masterless all-reduce session: the world is exactly the worker set —
+/// no master rank at all. Rank 0 runs on the calling thread, owns the
+/// validation schedule, and returns the merged history; every rank ends
+/// the run with bitwise-identical weights.
+fn train_allreduce(cfg: &TrainConfig, exes: &Arc<ModelExecutables>,
+                   init: ParamSet, worker_data: Vec<DataSet>, val: DataSet)
+    -> Result<TrainResult, TrainError> {
+    let n = worker_data.len();
+    let mut world = make_world(cfg.transport, n)?;
+    let t0 = Instant::now();
+
+    let outcome = std::thread::scope(|s| {
+        let rank0_comm = world.remove(0);
+        let mut handles = Vec::new();
+        for comm in world {
+            let rank = comm.rank();
+            let ds = &worker_data[rank];
+            let algo = &cfg.algo;
+            let exes = exes.clone();
+            let seed = cfg.seed ^ (rank as u64 + 1).wrapping_mul(0x9E37);
+            handles.push((rank, s.spawn(move || {
+                crate::util::logging::set_rank_tag(
+                    &format!("rank-{rank}"));
+                RingWorker::new(&comm, algo, &exes, ds, seed, None)
+                    .run(None)
+                    .map(|_| ())
+                    .map_err(|e| e.to_string())
+            })));
+        }
+
+        crate::util::logging::set_rank_tag("rank-0");
+        let seed0 = cfg.seed ^ 1u64.wrapping_mul(0x9E37);
+        let outcome = RingWorker::new(&rank0_comm, &cfg.algo,
+                                      exes.as_ref(), &worker_data[0],
+                                      seed0,
+                                      Some((exes.as_ref(), &val)))
+            .run(Some(init))
+            .map_err(|e| TrainError::Worker { rank: 0,
+                                              msg: e.to_string() })?;
+
+        for (rank, h) in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => {
+                    return Err(TrainError::Worker { rank, msg })
+                }
+                Err(_) => {
+                    return Err(TrainError::Panic(format!("rank {rank}")))
                 }
             }
         }
@@ -279,6 +381,45 @@ pub fn run_rank(session: &Session, cfg: &TrainConfig, data: &Data,
     let exes = session.executables(&cfg.builder.variant_key())?;
     let n_workers = cfg.total_workers();
     let t0 = Instant::now();
+
+    if matches!(cfg.algo.mode, Mode::AllReduce) {
+        if cfg.hierarchy.is_some() {
+            return Err(TrainError::Config(
+                "allreduce mode is flat by construction; drop the \
+                 hierarchy spec"
+                    .into(),
+            ));
+        }
+        // Masterless: the world is exactly the worker set.
+        let size = n_workers;
+        let comm = crate::mpi::transport::tcp::endpoint(rank, size,
+                                                        base_port)?;
+        crate::util::logging::set_rank_tag(&format!("rank-{rank}"));
+        let ds = data.worker_dataset(rank, size)?;
+        let seed = cfg.seed ^ (rank as u64 + 1).wrapping_mul(0x9E37);
+        if rank == 0 {
+            let val = data.validation_dataset()?;
+            let mut rng = Rng::new(cfg.seed);
+            let init = ParamSet::glorot_init(&exes.meta.params, &mut rng);
+            let outcome = RingWorker::new(&comm, &cfg.algo,
+                                          exes.as_ref(), &ds, seed,
+                                          Some((exes.as_ref(), &val)))
+                .run(Some(init))
+                .map_err(|e| TrainError::Worker { rank,
+                                                  msg: e.to_string() })?;
+            let wallclock_s = t0.elapsed().as_secs_f64();
+            let mut history = outcome.history;
+            history.wallclock_s = wallclock_s;
+            return Ok(Some(TrainResult { history,
+                                         weights: outcome.weights,
+                                         wallclock_s }));
+        }
+        RingWorker::new(&comm, &cfg.algo, exes.as_ref(), &ds, seed, None)
+            .run(None)
+            .map_err(|e| TrainError::Worker { rank,
+                                              msg: e.to_string() })?;
+        return Ok(None);
+    }
 
     match &cfg.hierarchy {
         None => {

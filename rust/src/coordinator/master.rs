@@ -181,6 +181,14 @@ impl<'a> Master<'a> {
 
     fn handle_grad(&mut self, src: Rank, step: u64, loss: f32,
                    grads: Vec<f32>, sync: bool) {
+        // A rogue/buggy child could keep sending gradients after its
+        // Exit: applying them would move weights on behalf of a dead
+        // rank (and, in sync mode, let its stale gradient stand in for
+        // an active child's barrier contribution).
+        if self.done.contains(&src) {
+            log::warn!("master: dropping gradient from departed {src}");
+            return;
+        }
         self.staleness.record(self.update_count.saturating_sub(step));
         if !sync {
             self.apply_gradient(loss, &grads);
@@ -192,7 +200,9 @@ impl<'a> Master<'a> {
     }
 
     /// In synchronous mode, fire the barrier when every active child has
-    /// contributed.
+    /// contributed. (The `Tag::Exit` handler removes a departed child's
+    /// pending gradient before re-checking the barrier, so `pending`
+    /// only ever holds active ranks here.)
     fn try_sync_round(&mut self) {
         if self.pending.is_empty()
             || self.pending.len() < self.active_children() {
@@ -281,6 +291,8 @@ impl<'a> Master<'a> {
                 }
                 (Tag::Exit, _) => {
                     self.done.insert(src);
+                    // drop any gradient the departed child left behind
+                    self.pending.remove(&src);
                     log::debug!("master: child {src} done \
                                  ({}/{})", self.done.len(),
                                 self.ctx.children.len());
@@ -304,5 +316,111 @@ impl<'a> Master<'a> {
         self.history.master_idle_time_s = self.idle_timer.total_s();
         self.history.wallclock_s = self.started.elapsed().as_secs_f64();
         MasterOutcome { weights: self.weights, history: self.history }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sync_algo() -> Algo {
+        Algo {
+            mode: Mode::Downpour { sync: true },
+            optimizer: crate::optim::OptimizerConfig::Sgd { lr: 1.0 },
+            ..Algo::default()
+        }
+    }
+
+    fn small_init() -> ParamSet {
+        ParamSet::zeros(&[("w".into(), vec![4])])
+    }
+
+    /// Regression for the sync-barrier edge: a child that contributed a
+    /// pending gradient and then exited (crash-style, without awaiting
+    /// its weight reply) must be dropped from the barrier — its stale
+    /// gradient must neither fire a round in place of an active child's
+    /// contribution nor be applied to the weights.
+    #[test]
+    fn departed_child_is_dropped_from_sync_barrier() {
+        let mut world = crate::mpi::inproc_world(3);
+        let c2 = world.pop().unwrap();
+        let c1 = world.pop().unwrap();
+        let mcomm = world.pop().unwrap();
+        let algo = sync_algo();
+
+        std::thread::scope(|s| {
+            let master = s.spawn(|| {
+                let ctx = MasterContext {
+                    algo: &algo,
+                    children: vec![1, 2],
+                    eval: None,
+                };
+                Master::new(&mcomm, ctx, small_init()).run()
+            });
+
+            // child 1: gradient, then immediate exit (no reply awaited)
+            c1.send(0, Tag::Gradients,
+                    Payload::grad(0, 1.0, vec![1.0; 4])).unwrap();
+            c1.send(0, Tag::Exit, Payload::Empty).unwrap();
+            // child 2: gradient — the barrier is now just {2}
+            c2.send(0, Tag::Gradients,
+                    Payload::grad(0, 2.0, vec![3.0; 4])).unwrap();
+            // child 2 must get weights reflecting ONLY its own gradient
+            let env = c2.recv().unwrap();
+            match env.payload {
+                Payload::Floats { data, .. } => {
+                    assert_eq!(*data, vec![-3.0; 4],
+                               "round must exclude the departed \
+                                child's gradient");
+                }
+                p => panic!("unexpected {p:?}"),
+            }
+            c2.send(0, Tag::Exit, Payload::Empty).unwrap();
+
+            let outcome = master.join().unwrap();
+            assert_eq!(outcome.history.master_updates, 1,
+                       "exactly one round: the departed child's \
+                        gradient is dropped");
+            assert!(outcome.weights.flat().iter().all(|&w| w == -3.0));
+        });
+    }
+
+    /// The barrier still shrinks correctly when the exit arrives after a
+    /// full round: remaining children keep making progress.
+    #[test]
+    fn barrier_shrinks_after_clean_exit() {
+        let mut world = crate::mpi::inproc_world(3);
+        let c2 = world.pop().unwrap();
+        let c1 = world.pop().unwrap();
+        let mcomm = world.pop().unwrap();
+        let algo = sync_algo();
+
+        std::thread::scope(|s| {
+            let master = s.spawn(|| {
+                let ctx = MasterContext {
+                    algo: &algo,
+                    children: vec![1, 2],
+                    eval: None,
+                };
+                Master::new(&mcomm, ctx, small_init()).run()
+            });
+
+            // round 1: both contribute, both get the broadcast
+            c1.send(0, Tag::Gradients,
+                    Payload::grad(0, 1.0, vec![1.0; 4])).unwrap();
+            c2.send(0, Tag::Gradients,
+                    Payload::grad(0, 1.0, vec![1.0; 4])).unwrap();
+            assert_eq!(c1.recv().unwrap().tag, Tag::Weights);
+            assert_eq!(c2.recv().unwrap().tag, Tag::Weights);
+            // child 1 leaves cleanly; child 2 trains one more round alone
+            c1.send(0, Tag::Exit, Payload::Empty).unwrap();
+            c2.send(0, Tag::Gradients,
+                    Payload::grad(1, 1.0, vec![1.0; 4])).unwrap();
+            assert_eq!(c2.recv().unwrap().tag, Tag::Weights);
+            c2.send(0, Tag::Exit, Payload::Empty).unwrap();
+
+            let outcome = master.join().unwrap();
+            assert_eq!(outcome.history.master_updates, 2);
+        });
     }
 }

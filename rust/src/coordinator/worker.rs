@@ -1,10 +1,19 @@
 //! The worker process: read a batch, compute the gradient, trade it for
 //! fresh weights (Downpour), or train locally and exchange elastically
 //! (EASGD). Paper §III-A.
+//!
+//! Also home to [`RingWorker`], the masterless peer of `Mode::AllReduce`:
+//! every rank trains, the world averages gradients with a chunked ring
+//! all-reduce, and each rank applies an identical replicated optimizer
+//! step — so all ranks hold bitwise-identical weights at every round.
+
+use std::time::Instant;
 
 use crate::coordinator::algo::{Algo, Mode};
+use crate::coordinator::validation::{run_validation, ValidationSchedule};
 use crate::data::DataSet;
-use crate::metrics::{Stopwatch, WorkerReport};
+use crate::metrics::{History, Stopwatch, ValRecord, WorkerReport};
+use crate::mpi::collective::{Collective, ReduceOp};
 use crate::mpi::{Comm, Payload, Rank, Tag, WorkerStats};
 use crate::runtime::ModelExecutables;
 use crate::tensor::ParamSet;
@@ -20,16 +29,45 @@ pub struct Worker<'a> {
     rng: Rng,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WorkerError {
-    #[error("runtime: {0}")]
-    Runtime(#[from] crate::runtime::RuntimeError),
-    #[error("comm: {0}")]
-    Comm(#[from] crate::mpi::CommError),
-    #[error("master sent unexpected tag {0:?}")]
+    Runtime(crate::runtime::RuntimeError),
+    Comm(crate::mpi::CommError),
     Protocol(Tag),
-    #[error("master told us to exit early")]
     EarlyExit,
+    Unsupported(&'static str),
+}
+
+impl std::fmt::Display for WorkerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkerError::Runtime(e) => write!(f, "runtime: {e}"),
+            WorkerError::Comm(e) => write!(f, "comm: {e}"),
+            WorkerError::Protocol(tag) => {
+                write!(f, "master sent unexpected tag {tag:?}")
+            }
+            WorkerError::EarlyExit => {
+                write!(f, "master told us to exit early")
+            }
+            WorkerError::Unsupported(msg) => {
+                write!(f, "unsupported: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WorkerError {}
+
+impl From<crate::runtime::RuntimeError> for WorkerError {
+    fn from(e: crate::runtime::RuntimeError) -> Self {
+        WorkerError::Runtime(e)
+    }
+}
+
+impl From<crate::mpi::CommError> for WorkerError {
+    fn from(e: crate::mpi::CommError) -> Self {
+        WorkerError::Comm(e)
+    }
 }
 
 impl<'a> Worker<'a> {
@@ -63,6 +101,10 @@ impl<'a> Worker<'a> {
             Mode::Easgd { tau, alpha, worker_optimizer } => {
                 self.run_easgd(params, tau, alpha, &worker_optimizer)
             }
+            Mode::AllReduce => Err(WorkerError::Unsupported(
+                "Mode::AllReduce has no master/worker roles; the driver \
+                 runs RingWorker on every rank instead",
+            )),
         }
     }
 
@@ -233,5 +275,238 @@ impl<'a> Worker<'a> {
         report.comm_wait_s = comm_timer.total_s();
         self.finish(&report)?;
         Ok(report)
+    }
+}
+
+/// Result of one rank's all-reduce training run. All ranks finish with
+/// bitwise-identical `weights`; `history` is populated on rank 0.
+pub struct RingOutcome {
+    pub report: WorkerReport,
+    pub weights: ParamSet,
+    pub history: History,
+}
+
+/// One rank of the masterless `Mode::AllReduce` world (every rank runs
+/// this — there is no master). Per round: local gradient, ring
+/// all-reduce to average gradients (the batch loss piggybacks as one
+/// extra element, so a round costs exactly one collective), then an
+/// identical replicated optimizer step. Rank 0 additionally runs the
+/// validation schedule and owns the returned [`History`].
+pub struct RingWorker<'a> {
+    comm: &'a Comm,
+    algo: &'a Algo,
+    exes: &'a ModelExecutables,
+    data: &'a DataSet,
+    rng: Rng,
+    /// Rank 0 only: validation executables + held-out set.
+    eval: Option<(&'a ModelExecutables, &'a DataSet)>,
+}
+
+impl<'a> RingWorker<'a> {
+    pub fn new(comm: &'a Comm, algo: &'a Algo,
+               exes: &'a ModelExecutables, data: &'a DataSet, seed: u64,
+               eval: Option<(&'a ModelExecutables, &'a DataSet)>) -> Self {
+        Self { comm, algo, exes, data, rng: Rng::new(seed), eval }
+    }
+
+    /// Train to completion. `init` is consumed on rank 0 and broadcast
+    /// to the world; other ranks pass `None`.
+    pub fn run(mut self, init: Option<ParamSet>)
+        -> Result<RingOutcome, WorkerError> {
+        let n = self.comm.size();
+        let rank = self.comm.rank();
+        let batch = self.algo.batch_size;
+        let started = Instant::now();
+        let mut col = Collective::new(self.comm);
+
+        // Identical start everywhere: rank 0's init circulates the ring.
+        let mut params = match init {
+            Some(p) if rank == 0 => p,
+            _ => ParamSet::zeros(&self.exes.meta.params),
+        };
+        let mut weights_buf = params.flat().to_vec();
+        col.broadcast(0, &mut weights_buf)?;
+        if rank != 0 {
+            params.set_flat(&weights_buf);
+        }
+        drop(weights_buf);
+
+        // Agree on the common per-epoch round count: the minimum of the
+        // ranks' local batch counts. Uneven data divisions would
+        // otherwise leave the lockstep collectives waiting forever on a
+        // rank that ran out of batches.
+        let local_batches = self.data.batches_per_epoch(batch);
+        let rounds = col
+            .allreduce_scalar(local_batches as f32, ReduceOp::Min)?
+            as u64;
+        if (rounds as usize) < local_batches {
+            log::debug!(
+                "allreduce rank {rank}: trimming epoch to {rounds} \
+                 common rounds (local {local_batches})"
+            );
+        }
+
+        let n_params = params.num_params();
+        let mut opt = self.algo.build_master_optimizer(n_params);
+        let mut lr_schedule = if self.algo.lr_decay > 0.0
+            && self.algo.lr_decay_every > 0 {
+            Some(crate::optim::StepDecay::new(self.algo.lr_decay,
+                                              self.algo.lr_decay_every))
+        } else {
+            None
+        };
+        let mut schedule =
+            ValidationSchedule::new(self.algo.validate_every);
+        let mut history = History::default();
+        let mut grad_timer = Stopwatch::new();
+        let mut comm_timer = Stopwatch::new();
+        let mut update_timer = Stopwatch::new();
+        let mut update_count = 0u64;
+        let mut last_loss = 0.0f32;
+        let inv_n = 1.0 / n as f32;
+        let mut epochs_done = 0u32;
+
+        let data = self.data;
+        let exes = self.exes;
+        let eval = self.eval;
+        let algo = self.algo;
+
+        for epoch in 0..algo.epochs {
+            let mut erng = self.rng.fork(epoch as u64);
+            let mut done_rounds = 0u64;
+            let mut failure: Option<WorkerError> = None;
+            data.for_each_batch(batch, &mut erng, |x, y| {
+                if failure.is_some() || done_rounds >= rounds {
+                    return;
+                }
+                let out = match grad_timer
+                    .time(|| exes.grad_step(&params, x, y)) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        failure = Some(e.into());
+                        return;
+                    }
+                };
+                last_loss = out.loss;
+                // average gradients world-wide; the local loss rides
+                // along as one extra element (grad_step allocates the
+                // buffer with one spare slot, so this push never
+                // reallocates the gradient on the hot path)
+                let mut reduced = out.grads;
+                reduced.push(out.loss);
+                if let Err(e) = comm_timer
+                    .time(|| col.allreduce(&mut reduced, ReduceOp::Sum)) {
+                    failure = Some(e.into());
+                    return;
+                }
+                for v in reduced.iter_mut() {
+                    *v *= inv_n;
+                }
+                let mean_loss = reduced[n_params];
+                if let Some(sched) = lr_schedule.as_mut() {
+                    opt.set_lr_scale(sched.tick());
+                }
+                update_timer.start();
+                opt.update(params.flat_mut(), &reduced[..n_params]);
+                update_timer.stop();
+                update_count += 1;
+                done_rounds += 1;
+                if rank == 0 {
+                    if update_count % 16 == 0 || update_count == 1 {
+                        history.train_losses.push((update_count,
+                                                   mean_loss));
+                    }
+                    if schedule.due(update_count) {
+                        if let Some((vexes, vset)) = eval {
+                            match run_validation(vexes, &params, vset,
+                                                 algo.max_val_batches) {
+                                Ok((loss, acc)) => {
+                                    history.validations.push(ValRecord {
+                                        t_s: started.elapsed()
+                                            .as_secs_f64(),
+                                        update: update_count,
+                                        val_loss: loss,
+                                        val_acc: acc,
+                                    });
+                                }
+                                Err(e) => log::error!(
+                                    "validation failed: {e}"),
+                            }
+                        }
+                    }
+                }
+            });
+            if let Some(e) = failure {
+                return Err(e);
+            }
+            epochs_done = epoch + 1;
+        }
+
+        let report = WorkerReport {
+            rank,
+            epochs: epochs_done,
+            batches: update_count,
+            samples: update_count * batch as u64,
+            last_train_loss: last_loss,
+            grad_time_s: grad_timer.total_s(),
+            comm_wait_s: comm_timer.total_s(),
+        };
+
+        if rank != 0 {
+            self.comm.send(
+                0,
+                Tag::TrainStats,
+                Payload::Stats(WorkerStats {
+                    epoch: report.epochs,
+                    batches_done: report.batches,
+                    samples_done: report.samples,
+                    train_loss: report.last_train_loss,
+                    grad_time_s: report.grad_time_s,
+                    comm_wait_s: report.comm_wait_s,
+                }),
+            )?;
+            return Ok(RingOutcome {
+                report,
+                weights: params,
+                history: History::default(),
+            });
+        }
+
+        // Rank 0 wind-down: collect every peer's stats. Some may have
+        // been stashed by the final collectives (a faster rank finishes
+        // its last all-gather — and reports — before rank 0 does).
+        let mut stash = col.into_stash();
+        history.workers.push(report.clone());
+        for _ in 1..n {
+            let env = self.comm.recv_tag(Tag::TrainStats, &mut stash)?;
+            if let Payload::Stats(s) = env.payload {
+                history.workers.push(WorkerReport {
+                    rank: env.src,
+                    epochs: s.epoch,
+                    batches: s.batches_done,
+                    samples: s.samples_done,
+                    last_train_loss: s.train_loss,
+                    grad_time_s: s.grad_time_s,
+                    comm_wait_s: s.comm_wait_s,
+                });
+            }
+        }
+        // final validation so every run ends with a measurement
+        if let Some((vexes, vset)) = eval {
+            match run_validation(vexes, &params, vset,
+                                 algo.max_val_batches) {
+                Ok((loss, acc)) => history.validations.push(ValRecord {
+                    t_s: started.elapsed().as_secs_f64(),
+                    update: update_count,
+                    val_loss: loss,
+                    val_acc: acc,
+                }),
+                Err(e) => log::error!("final validation failed: {e}"),
+            }
+        }
+        history.master_updates = update_count;
+        history.master_update_time_s = update_timer.total_s();
+        history.wallclock_s = started.elapsed().as_secs_f64();
+        Ok(RingOutcome { report, weights: params, history })
     }
 }

@@ -21,20 +21,43 @@ use std::path::Path;
 
 use crc32fast::Hasher;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ShardError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("not a shard file (bad magic)")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("unsupported shard version {0}")]
     BadVersion(u32),
-    #[error("checksum mismatch: file is corrupt")]
     BadChecksum,
-    #[error("shard truncated")]
     Truncated,
-    #[error("label {label} out of range for {classes} classes")]
     BadLabel { label: i32, classes: u32 },
+}
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::Io(e) => write!(f, "io: {e}"),
+            ShardError::BadMagic => {
+                write!(f, "not a shard file (bad magic)")
+            }
+            ShardError::BadVersion(v) => {
+                write!(f, "unsupported shard version {v}")
+            }
+            ShardError::BadChecksum => {
+                write!(f, "checksum mismatch: file is corrupt")
+            }
+            ShardError::Truncated => write!(f, "shard truncated"),
+            ShardError::BadLabel { label, classes } => {
+                write!(f, "label {label} out of range for {classes} classes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+impl From<std::io::Error> for ShardError {
+    fn from(e: std::io::Error) -> Self {
+        ShardError::Io(e)
+    }
 }
 
 /// One file's worth of samples, fully in memory (shards are sized so that

@@ -10,20 +10,48 @@
 //! Averaging SGD. This crate reproduces that layer in Rust, with the model
 //! compute (the paper's Keras/cuDNN layer) AOT-compiled from JAX + Pallas
 //! kernels into HLO artifacts executed through PJRT — Python never runs at
-//! training time.
+//! training time. Offline builds (the default) execute the same model
+//! math through the built-in native CPU backend instead, so a fresh
+//! checkout trains with zero setup; the `pjrt` cargo feature restores
+//! the artifact path.
+//!
+//! # Training modes
+//!
+//! - **Downpour SGD** (`Mode::Downpour`, paper default): workers stream
+//!   gradients to a master that owns the weights; async one-by-one or
+//!   behind a synchronous barrier. Scales until the master's per-gradient
+//!   service time saturates (the paper's Figs 3/4 knee, ~30x at 60
+//!   workers).
+//! - **EASGD** (`Mode::Easgd`): workers train locally and exchange
+//!   elastically with the master's center variable every `tau` batches.
+//! - **Ring all-reduce** (`Mode::AllReduce`, flag `--mode allreduce`):
+//!   masterless synchronous data-parallel. Every rank computes a
+//!   gradient; the world averages them with a chunked ring all-reduce
+//!   ([`mpi::collective`]) costing `2(n-1)/n` payload volumes per rank;
+//!   each rank applies an identical replicated optimizer step, so all
+//!   ranks hold bitwise-identical weights at every round. Prefer it over
+//!   Downpour/EASGD when worker count (or gradient size) is large enough
+//!   to saturate a master — there is no per-gradient serial bottleneck,
+//!   at the price of per-round latency `2(n-1)·lat` and lockstep
+//!   synchronicity (no stale-gradient tolerance). `mpi-learn simulate
+//!   --algo allreduce` projects the crossover for a given cost model.
 //!
 //! Architecture (DESIGN.md has the full inventory):
 //! - [`mpi`] — MPI-style tagged point-to-point substrate (threads+channels
-//!   or TCP mesh).
-//! - [`runtime`] — PJRT client, artifact manifest, compiled executables.
+//!   or TCP mesh) plus the [`mpi::collective`] ring
+//!   all-reduce/broadcast layer built on it.
+//! - [`runtime`] — artifact manifest + execution backends (native CPU
+//!   engine by default; PJRT behind the `pjrt` feature).
 //! - [`data`] — shard file format, synthetic HEP dataset, batching loader,
 //!   even file division.
 //! - [`optim`] — master-side optimizers (momentum is the paper's
-//!   stale-gradient mitigation).
+//!   stale-gradient mitigation); replicated per-rank in all-reduce mode.
 //! - [`coordinator`] — the paper's system: master/worker processes,
-//!   Downpour + EASGD, sync/async, hierarchical masters, validation.
+//!   Downpour + EASGD + masterless all-reduce, sync/async, hierarchical
+//!   masters, validation.
 //! - [`simulator`] — discrete-event protocol simulator for cluster-scale
-//!   sweeps (Figs 3/4, Table I).
+//!   sweeps (Figs 3/4, Table I) with both parameter-server and ring
+//!   cost models.
 //! - [`tensor`], [`metrics`], [`util`] — support substrates.
 
 pub mod coordinator;

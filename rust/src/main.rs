@@ -12,7 +12,10 @@
 //!       --data data/hep --validate-every 50
 //!   mpi-learn train --mode easgd --tau 10 --alpha 0.5 --workers 4 \
 //!       --data data/hep
+//!   mpi-learn train --mode allreduce --model mlp --workers 8 \
+//!       --epochs 3                      # masterless ring all-reduce
 //!   mpi-learn simulate --workers 1,2,4,8,16,30,45,60 --preset cluster
+//!   mpi-learn simulate --algo allreduce --preset cluster
 //!   mpi-learn info
 
 use std::path::PathBuf;
@@ -121,6 +124,10 @@ fn cmd_launch(args: &Args) -> i32 {
     };
     let size = match &job.train.hierarchy {
         Some(h) => h.world_size(),
+        // allreduce is masterless: the world is exactly the worker set
+        None if job.train.algo.mode == Mode::AllReduce => {
+            job.train.n_workers
+        }
         None => job.train.n_workers + 1,
     };
     let exe = match std::env::current_exe() {
@@ -220,6 +227,7 @@ fn parse_algo(args: &Args) -> Result<Algo, String> {
                 as f32,
             worker_optimizer: OptimizerConfig::Sgd { lr },
         },
+        "allreduce" => Mode::AllReduce,
         other => return Err(format!("unknown mode '{other}'")),
     };
     Ok(algo)
@@ -352,6 +360,7 @@ fn cmd_simulate(args: &Args) -> i32 {
     let validate_every = args.usize("validate-every", 0).unwrap_or(0)
         as u64;
     let n_params = args.usize("params", 3023).unwrap_or(3023);
+    let algo = args.str("algo", "downpour");
     if let Err(e) = args.finish() {
         return fail(e);
     }
@@ -368,9 +377,16 @@ fn cmd_simulate(args: &Args) -> i32 {
         validate_every,
         sync: false,
     };
+    let curve = match algo.as_str() {
+        "downpour" => simulator::speedup_curve(&cost, &base,
+                                               &worker_counts, 2017),
+        "allreduce" => simulator::speedup_curve_allreduce(
+            &cost, &base, &worker_counts, 2017),
+        other => return fail(format!(
+            "unknown simulate algo '{other}' (downpour|allreduce)")),
+    };
     println!("workers,speedup");
-    for (w, s) in simulator::speedup_curve(&cost, &base, &worker_counts,
-                                           2017) {
+    for (w, s) in curve {
         println!("{w},{s:.2}");
     }
     0

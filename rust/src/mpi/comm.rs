@@ -17,18 +17,43 @@ use std::time::Duration;
 
 use super::message::{Envelope, Payload, Rank, Tag};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CommError {
-    #[error("send to rank {0} failed: peer disconnected")]
     SendFailed(Rank),
-    #[error("recv failed: all peers disconnected")]
     Disconnected,
-    #[error("recv timed out after {0:?}")]
     Timeout(Duration),
-    #[error("invalid rank {rank} (world size {size})")]
     InvalidRank { rank: Rank, size: usize },
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    /// Peer violated a protocol invariant (e.g. a collective received a
+    /// chunk from a non-neighbor rank or with the wrong length).
+    Protocol(String),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::SendFailed(r) => {
+                write!(f, "send to rank {r} failed: peer disconnected")
+            }
+            CommError::Disconnected => {
+                write!(f, "recv failed: all peers disconnected")
+            }
+            CommError::Timeout(d) => write!(f, "recv timed out after {d:?}"),
+            CommError::InvalidRank { rank, size } => {
+                write!(f, "invalid rank {rank} (world size {size})")
+            }
+            CommError::Protocol(msg) => write!(f, "protocol: {msg}"),
+            CommError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+impl From<std::io::Error> for CommError {
+    fn from(e: std::io::Error) -> Self {
+        CommError::Io(e)
+    }
 }
 
 /// Sending half — transport-specific.
@@ -79,20 +104,26 @@ impl Comm {
     }
 
     /// Buffered non-blocking send (MPI_Isend flavor).
+    ///
+    /// Sending to your own rank is reported as `InvalidRank` rather than
+    /// panicking: ring collectives make self-adjacent worlds (size 1–2)
+    /// easy to construct, and their algorithms degrade to zero steps
+    /// instead of self-sends — so a self-send is always a caller bug,
+    /// surfaced as an error the caller can attribute.
     pub fn send(&self, to: Rank, tag: Tag, payload: Payload)
         -> Result<(), CommError> {
-        if to >= self.size {
+        if to >= self.size || to == self.rank {
             return Err(CommError::InvalidRank { rank: to, size: self.size });
         }
         self.bytes_sent.set(self.bytes_sent.get() + payload.nbytes() as u64);
         match &self.tx {
-            Sender::Inproc(peers) => {
-                let ch = peers[to]
-                    .as_ref()
-                    .expect("send to self not supported");
-                ch.send(Envelope { src: self.rank, tag, payload })
-                    .map_err(|_| CommError::SendFailed(to))
-            }
+            Sender::Inproc(peers) => match peers[to].as_ref() {
+                Some(ch) => ch
+                    .send(Envelope { src: self.rank, tag, payload })
+                    .map_err(|_| CommError::SendFailed(to)),
+                None => Err(CommError::InvalidRank { rank: to,
+                                                     size: self.size }),
+            },
             Sender::Tcp(senders) => senders.send(self.rank, to, tag,
                                                  &payload),
         }
@@ -133,11 +164,15 @@ impl Comm {
         }
     }
 
-    /// Blocking receive of a specific tag; other tags are delivered later
-    /// (simple out-of-band queue, like MPI tag matching).
+    /// Blocking receive of a specific tag; other tags are stashed and
+    /// delivered later (simple out-of-band queue, like MPI tag
+    /// matching). Same-tag messages keep their arrival order: the stash
+    /// is scanned front-to-back, so per-(sender, tag) FIFO survives a
+    /// detour through it.
     ///
-    /// NOTE: only used in tests/benches — the training protocol is designed
-    /// so each role's state machine consumes every tag it can receive.
+    /// Used by the all-reduce wind-down (rank 0 collects `TrainStats`
+    /// that may have been stashed during the final collectives) and by
+    /// tests/benches.
     pub fn recv_tag(&self, want: Tag, stash: &mut Vec<Envelope>)
         -> Result<Envelope, CommError> {
         if let Some(i) = stash.iter().position(|e| e.tag == want) {

@@ -38,6 +38,10 @@ pub enum Tag {
     AggGradients = 7,
     /// any -> any: liveness probe (comm microbench)
     Ping = 8,
+    /// neighbor -> neighbor: ring all-reduce chunk (collective layer)
+    RingChunk = 9,
+    /// neighbor -> neighbor: ring broadcast payload (collective layer)
+    Bcast = 10,
 }
 
 impl Tag {
@@ -52,6 +56,8 @@ impl Tag {
             6 => Tag::TrainStats,
             7 => Tag::AggGradients,
             8 => Tag::Ping,
+            9 => Tag::RingChunk,
+            10 => Tag::Bcast,
             _ => return None,
         })
     }
@@ -130,15 +136,28 @@ pub struct Envelope {
 // wire encoding
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WireError {
-    #[error("frame truncated: need {need} bytes, have {have}")]
     Truncated { need: usize, have: usize },
-    #[error("unknown tag {0}")]
     UnknownTag(u32),
-    #[error("unknown payload kind {0}")]
     UnknownKind(u32),
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "frame truncated: need {need} bytes, have {have}")
+            }
+            WireError::UnknownTag(t) => write!(f, "unknown tag {t}"),
+            WireError::UnknownKind(k) => {
+                write!(f, "unknown payload kind {k}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// Encode (tag, payload) into a frame body (the TCP transport adds the
 /// outer [u32 src][u64 len] header).
@@ -302,6 +321,17 @@ mod tests {
         let mut buf = encode(Tag::Ping, &Payload::Empty);
         buf[0] = 0xFF;
         assert!(matches!(decode(&buf), Err(WireError::UnknownTag(_))));
+    }
+
+    #[test]
+    fn collective_tags_roundtrip() {
+        for tag in [Tag::RingChunk, Tag::Bcast] {
+            let p = Payload::floats(3, vec![0.5, 1.5]);
+            let (t2, p2) = decode(&encode(tag, &p)).unwrap();
+            assert_eq!(t2, tag);
+            assert_eq!(p2, p);
+            assert_eq!(Tag::from_u32(tag as u32), Some(tag));
+        }
     }
 
     #[test]

@@ -12,10 +12,12 @@
 //!
 //! See DESIGN.md §Substitutions for the fidelity argument.
 
+pub mod collective;
 pub mod comm;
 pub mod message;
 pub mod transport;
 
+pub use collective::{Collective, ReduceOp};
 pub use comm::{Comm, CommError};
 pub use message::{Envelope, Payload, Rank, Tag, WorkerStats};
 

@@ -123,6 +123,51 @@ mod tests {
     }
 
     #[test]
+    fn send_to_self_errors_instead_of_panicking() {
+        let mut w = world(2);
+        let _c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        match c0.send(0, Tag::Ping, Payload::Empty) {
+            Err(crate::mpi::comm::CommError::InvalidRank { rank, size }) => {
+                assert_eq!(rank, 0);
+                assert_eq!(size, 2);
+            }
+            other => panic!("expected InvalidRank, got {other:?}"),
+        }
+        // failed self-sends must not count as traffic
+        assert_eq!(c0.bytes_sent(), 0);
+    }
+
+    #[test]
+    fn recv_tag_preserves_fifo_within_and_across_tags() {
+        let mut w = world(2);
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        c0.send(1, Tag::Gradients, Payload::floats(1, vec![])).unwrap();
+        c0.send(1, Tag::Weights, Payload::floats(2, vec![])).unwrap();
+        c0.send(1, Tag::Gradients, Payload::floats(3, vec![])).unwrap();
+        c0.send(1, Tag::Ping, Payload::Empty).unwrap();
+
+        let step_of = |env: crate::mpi::Envelope| match env.payload {
+            Payload::Floats { step, .. } => step,
+            p => panic!("unexpected {p:?}"),
+        };
+        let mut stash = Vec::new();
+        // pull the last tag first: the earlier three detour via the stash
+        let env = c1.recv_tag(Tag::Ping, &mut stash).unwrap();
+        assert_eq!(env.tag, Tag::Ping);
+        assert_eq!(stash.len(), 3);
+        // same-tag messages must come back in send order
+        assert_eq!(step_of(c1.recv_tag(Tag::Gradients, &mut stash)
+                       .unwrap()), 1);
+        assert_eq!(step_of(c1.recv_tag(Tag::Gradients, &mut stash)
+                       .unwrap()), 3);
+        assert_eq!(step_of(c1.recv_tag(Tag::Weights, &mut stash)
+                       .unwrap()), 2);
+        assert!(stash.is_empty());
+    }
+
+    #[test]
     fn byte_counters_track_payload() {
         let mut w = world(2);
         let c1 = w.pop().unwrap();

@@ -9,17 +9,32 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("io reading {path}: {err}")]
     Io { path: PathBuf, err: std::io::Error },
-    #[error("manifest parse: {0}")]
     Parse(String),
-    #[error("manifest missing model variant '{0}'")]
     UnknownVariant(String),
-    #[error("artifact file missing: {0}")]
     MissingFile(PathBuf),
 }
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io { path, err } => {
+                write!(f, "io reading {}: {err}", path.display())
+            }
+            ArtifactError::Parse(msg) => write!(f, "manifest parse: {msg}"),
+            ArtifactError::UnknownVariant(key) => {
+                write!(f, "manifest missing model variant '{key}'")
+            }
+            ArtifactError::MissingFile(path) => {
+                write!(f, "artifact file missing: {}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
 
 /// One (model, batch) variant from the manifest.
 #[derive(Clone, Debug, PartialEq)]

@@ -1,58 +1,103 @@
-//! PJRT execution: load HLO text, compile once, run from the hot path.
+//! Model execution: backend dispatch between the built-in native CPU
+//! engine and (feature-gated) PJRT.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU client). Interchange is HLO
-//! *text* — see `python/compile/aot.py` for why.
+//! The default offline build executes models with
+//! [`super::native`] — pure Rust, zero dependencies, same math as the
+//! AOT artifacts. Enabling the `pjrt` cargo feature restores the
+//! original path: load HLO text, compile once through the `xla` crate's
+//! PJRT CPU client, run from the hot path. (The `xla` crate lives on the
+//! registry and must be re-added to `Cargo.toml` alongside the feature;
+//! the offline tree intentionally carries no reference to it otherwise.)
 //!
-//! ### Thread safety
+//! ### Thread safety (pjrt)
 //! The training world runs master + workers on OS threads sharing one
 //! `PjRtClient` and per-variant compiled executables. The `xla` crate's
 //! wrappers are raw-pointer newtypes without `Send`/`Sync`, but the
-//! underlying PJRT CPU client is documented thread-safe for `Compile` and
-//! `Execute`, and each call here builds its own `Literal` inputs and
-//! consumes its own outputs. We therefore wrap the client + executable in
-//! newtypes with `unsafe impl Send + Sync`, and the integration suite
-//! hammers concurrent `execute` calls to back the claim empirically.
+//! underlying PJRT CPU client is documented thread-safe for `Compile`
+//! and `Execute`, and each call here builds its own `Literal` inputs and
+//! consumes its own outputs — hence the `unsafe impl`s below. The native
+//! backend is plain data and trivially `Send + Sync`.
 
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 use std::sync::Arc;
 
 use crate::runtime::artifact::ModelMeta;
+use crate::runtime::native::NativeModel;
 use crate::tensor::ParamSet;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("artifact {0} failed to load: {1}")]
     Load(String, String),
-    #[error("input size mismatch: expected {expect} got {got} for {what}")]
     BadInput { what: &'static str, expect: usize, got: usize },
+    /// The requested model/backend combination is not available in this
+    /// build (e.g. transformer without the `pjrt` feature).
+    Unsupported(String),
 }
 
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(msg) => write!(f, "xla: {msg}"),
+            RuntimeError::Load(what, err) => {
+                write!(f, "artifact {what} failed to load: {err}")
+            }
+            RuntimeError::BadInput { what, expect, got } => write!(
+                f,
+                "input size mismatch: expected {expect} got {got} for {what}"
+            ),
+            RuntimeError::Unsupported(msg) => {
+                write!(f, "unsupported: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {
         RuntimeError::Xla(e.to_string())
     }
 }
 
-/// Shared PJRT CPU client (safety: see module docs).
+/// Execution client. With the `pjrt` feature this wraps the shared PJRT
+/// CPU client; the native backend needs no client state.
 pub struct Client {
+    #[cfg(feature = "pjrt")]
     inner: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Client {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Client {}
 
 impl Client {
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Arc<Client>, RuntimeError> {
         Ok(Arc::new(Client { inner: xla::PjRtClient::cpu()? }))
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Arc<Client>, RuntimeError> {
+        Ok(Arc::new(Client {}))
+    }
+
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.inner.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
     /// Compile HLO text from `path`.
+    #[cfg(feature = "pjrt")]
     pub fn compile_file(&self, path: &Path)
         -> Result<Executable, RuntimeError> {
         let proto = xla::HloModuleProto::from_text_file(
@@ -65,14 +110,18 @@ impl Client {
     }
 }
 
-/// A compiled HLO module (safety: see module docs).
+/// A compiled HLO module (pjrt builds only; safety: see module docs).
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     inner: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Executable {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Executable {}
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with literal inputs; returns the flattened output tuple.
     pub fn run(&self, inputs: &[xla::Literal])
@@ -83,24 +132,34 @@ impl Executable {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal,
     RuntimeError> {
     let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
     Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal,
     RuntimeError> {
     let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
     Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
 }
 
-/// The three per-variant executables, typed to the artifact interface.
+enum Backend {
+    Native(NativeModel),
+    #[cfg(feature = "pjrt")]
+    Pjrt {
+        grad: Executable,
+        eval: Executable,
+        predict: Option<Executable>,
+    },
+}
+
+/// The per-variant executable bundle, typed to the artifact interface.
 pub struct ModelExecutables {
     pub meta: ModelMeta,
-    grad: Executable,
-    eval: Executable,
-    predict: Option<Executable>,
+    backend: Backend,
 }
 
 /// Output of one gradient step.
@@ -112,19 +171,40 @@ pub struct GradOutput {
 }
 
 impl ModelExecutables {
-    /// Compile grad+eval (+ predict if wanted) for one variant.
+    /// Compile grad+eval (+ predict if wanted) for one variant via PJRT.
+    #[cfg(feature = "pjrt")]
     pub fn load(client: &Client, meta: &ModelMeta, with_predict: bool)
         -> Result<ModelExecutables, RuntimeError> {
         Ok(ModelExecutables {
             meta: meta.clone(),
-            grad: client.compile_file(&meta.grad_file)?,
-            eval: client.compile_file(&meta.eval_file)?,
-            predict: if with_predict {
-                Some(client.compile_file(&meta.predict_file)?)
-            } else {
-                None
+            backend: Backend::Pjrt {
+                grad: client.compile_file(&meta.grad_file)?,
+                eval: client.compile_file(&meta.eval_file)?,
+                predict: if with_predict {
+                    Some(client.compile_file(&meta.predict_file)?)
+                } else {
+                    None
+                },
             },
         })
+    }
+
+    /// Build the native CPU engine for a variant.
+    pub fn native(meta: &ModelMeta)
+        -> Result<ModelExecutables, RuntimeError> {
+        Ok(ModelExecutables {
+            meta: meta.clone(),
+            backend: Backend::Native(NativeModel::from_meta(meta)?),
+        })
+    }
+
+    /// Which backend executes this variant (for logs/benches).
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Native(_) => "native",
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { .. } => "pjrt",
+        }
     }
 
     fn check_xy(&self, x: &[f32], y: &[i32]) -> Result<(), RuntimeError> {
@@ -139,8 +219,7 @@ impl ModelExecutables {
         Ok(())
     }
 
-    fn param_literals(&self, params: &ParamSet)
-        -> Result<Vec<xla::Literal>, RuntimeError> {
+    fn check_params(&self, params: &ParamSet) -> Result<(), RuntimeError> {
         if params.num_params() != self.meta.param_count {
             return Err(RuntimeError::BadInput {
                 what: "params",
@@ -148,6 +227,13 @@ impl ModelExecutables {
                 got: params.num_params(),
             });
         }
+        Ok(())
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn param_literals(&self, params: &ParamSet)
+        -> Result<Vec<xla::Literal>, RuntimeError> {
+        self.check_params(params)?;
         let mut lits = Vec::with_capacity(self.meta.params.len() + 2);
         for (i, (_, shape)) in self.meta.params.iter().enumerate() {
             lits.push(literal_f32(params.slice(i), shape)?);
@@ -155,12 +241,9 @@ impl ModelExecutables {
         Ok(lits)
     }
 
-    /// Build the positional input literals for a (params, x, y) call.
-    /// Public so the microbench can price marshalling separately from
-    /// execution (EXPERIMENTS.md §Perf).
-    pub fn marshal_inputs(&self, params: &ParamSet, x: &[f32], y: &[i32])
+    #[cfg(feature = "pjrt")]
+    fn pjrt_inputs(&self, params: &ParamSet, x: &[f32], y: &[i32])
         -> Result<Vec<xla::Literal>, RuntimeError> {
-        self.check_xy(x, y)?;
         let mut inputs = self.param_literals(params)?;
         inputs.push(literal_f32(
             x, &[self.meta.batch, self.meta.seq_len, self.meta.features])?);
@@ -168,55 +251,105 @@ impl ModelExecutables {
         Ok(inputs)
     }
 
+    /// Validate and stage the positional inputs for a (params, x, y)
+    /// call, returning how many input buffers a step passes to the
+    /// backend. Public so the microbench can price marshalling
+    /// separately from execution (EXPERIMENTS.md §Perf).
+    pub fn marshal_inputs(&self, params: &ParamSet, x: &[f32], y: &[i32])
+        -> Result<usize, RuntimeError> {
+        self.check_xy(x, y)?;
+        match &self.backend {
+            Backend::Native(_) => {
+                self.check_params(params)?;
+                Ok(self.meta.params.len() + 2)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { .. } => {
+                Ok(self.pjrt_inputs(params, x, y)?.len())
+            }
+        }
+    }
+
     /// One gradient step: (params, x, y) -> (loss, flat grads).
     pub fn grad_step(&self, params: &ParamSet, x: &[f32], y: &[i32])
         -> Result<GradOutput, RuntimeError> {
-        let inputs = self.marshal_inputs(params, x, y)?;
-        let outputs = self.grad.run(&inputs)?;
-        debug_assert_eq!(outputs.len(), 1 + self.meta.params.len());
-        let loss = outputs[0].get_first_element::<f32>()?;
-        // single exact-size allocation; copy_raw_to avoids the per-output
-        // Vec each to_vec() would allocate (perf pass iter 1)
-        let mut grads = vec![0.0f32; self.meta.param_count];
-        let mut off = 0usize;
-        for (lit, (_, shape)) in
-            outputs[1..].iter().zip(&self.meta.params) {
-            let len: usize = shape.iter().product();
-            lit.copy_raw_to(&mut grads[off..off + len])?;
-            off += len;
+        self.check_xy(x, y)?;
+        match &self.backend {
+            Backend::Native(model) => {
+                self.check_params(params)?;
+                model.grad_step(params, x, y)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { grad, .. } => {
+                let inputs = self.pjrt_inputs(params, x, y)?;
+                let outputs = grad.run(&inputs)?;
+                debug_assert_eq!(outputs.len(),
+                                 1 + self.meta.params.len());
+                let loss = outputs[0].get_first_element::<f32>()?;
+                // single allocation (plus the loss-piggyback spare
+                // slot); copy_raw_to avoids the per-output Vec each
+                // to_vec() would allocate
+                let mut grads =
+                    crate::runtime::native::grad_buffer(
+                        self.meta.param_count);
+                let mut off = 0usize;
+                for (lit, (_, shape)) in
+                    outputs[1..].iter().zip(&self.meta.params) {
+                    let len: usize = shape.iter().product();
+                    lit.copy_raw_to(&mut grads[off..off + len])?;
+                    off += len;
+                }
+                debug_assert_eq!(off, self.meta.param_count);
+                Ok(GradOutput { loss, grads })
+            }
         }
-        debug_assert_eq!(off, self.meta.param_count);
-        Ok(GradOutput { loss, grads })
     }
 
     /// Evaluation: (params, x, y) -> (mean loss, n correct).
     pub fn eval_step(&self, params: &ParamSet, x: &[f32], y: &[i32])
         -> Result<(f32, f32), RuntimeError> {
         self.check_xy(x, y)?;
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(literal_f32(
-            x, &[self.meta.batch, self.meta.seq_len, self.meta.features])?);
-        inputs.push(literal_i32(y, &[self.meta.batch])?);
-        let outputs = self.eval.run(&inputs)?;
-        let loss = outputs[0].to_vec::<f32>()?[0];
-        let ncorrect = outputs[1].to_vec::<f32>()?[0];
-        Ok((loss, ncorrect))
+        match &self.backend {
+            Backend::Native(model) => {
+                self.check_params(params)?;
+                model.eval_step(params, x, y)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { eval, .. } => {
+                let inputs = self.pjrt_inputs(params, x, y)?;
+                let outputs = eval.run(&inputs)?;
+                let loss = outputs[0].to_vec::<f32>()?[0];
+                let ncorrect = outputs[1].to_vec::<f32>()?[0];
+                Ok((loss, ncorrect))
+            }
+        }
     }
 
     /// Inference: (params, x) -> logits [batch * classes].
     pub fn predict(&self, params: &ParamSet, x: &[f32])
         -> Result<Vec<f32>, RuntimeError> {
-        let pred = self.predict.as_ref().expect(
-            "ModelExecutables loaded without predict");
         if x.len() != self.meta.x_len() {
             return Err(RuntimeError::BadInput {
                 what: "x", expect: self.meta.x_len(), got: x.len() });
         }
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(literal_f32(
-            x, &[self.meta.batch, self.meta.seq_len, self.meta.features])?);
-        let outputs = pred.run(&inputs)?;
-        Ok(outputs[0].to_vec::<f32>()?)
+        match &self.backend {
+            Backend::Native(model) => {
+                self.check_params(params)?;
+                model.predict(params, x)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { predict, .. } => {
+                let pred = predict.as_ref().expect(
+                    "ModelExecutables loaded without predict");
+                let mut inputs = self.param_literals(params)?;
+                inputs.push(literal_f32(
+                    x,
+                    &[self.meta.batch, self.meta.seq_len,
+                      self.meta.features])?);
+                let outputs = pred.run(&inputs)?;
+                Ok(outputs[0].to_vec::<f32>()?)
+            }
+        }
     }
 
     /// Fresh Glorot-initialized parameters matching this variant.
@@ -224,3 +357,14 @@ impl ModelExecutables {
         ParamSet::glorot_init(&self.meta.params, rng)
     }
 }
+
+// Arc sharing across worker threads requires Send + Sync; the native
+// backend derives it structurally, the pjrt backend from the unsafe
+// impls above.
+const _: () = {
+    fn assert_send_sync<T: Send + Sync>() {}
+    #[allow(dead_code)]
+    fn check() {
+        assert_send_sync::<Arc<ModelExecutables>>();
+    }
+};

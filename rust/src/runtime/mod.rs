@@ -1,55 +1,125 @@
-//! PJRT runtime: artifact manifest + compiled executables.
+//! Model runtime: artifact manifest + executable backends.
 //!
 //! `Session` is the convenience entry point used by the coordinator,
-//! examples, and benches: open the artifact dir, pick a model variant,
-//! get shared (`Arc`) executables for the training world's threads.
+//! examples, and benches: open the artifact dir (or fall back to the
+//! built-in native backend), pick a model variant, get shared (`Arc`)
+//! executables for the training world's threads.
+//!
+//! Backend selection:
+//! - artifacts on disk + `pjrt` feature → compiled HLO through PJRT;
+//! - artifacts on disk, default build → the native engine re-executes
+//!   the manifest's models (same math, see [`native`]);
+//! - no artifacts at all → [`Session::native`] synthesizes the
+//!   quickstart/paper variants (`mlp_b*`, `lstm_b*`) on demand, so a
+//!   fresh checkout trains end-to-end with zero setup.
 
 pub mod artifact;
 pub mod executor;
+pub(crate) mod native;
 
 pub use artifact::{default_artifact_dir, ArtifactError, Manifest,
                    ModelMeta};
-pub use executor::{Client, Executable, GradOutput, ModelExecutables,
-                   RuntimeError};
+pub use executor::{Client, GradOutput, ModelExecutables, RuntimeError};
+#[cfg(feature = "pjrt")]
+pub use executor::Executable;
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SessionError {
-    #[error(transparent)]
-    Artifact(#[from] ArtifactError),
-    #[error(transparent)]
-    Runtime(#[from] RuntimeError),
+    Artifact(ArtifactError),
+    Runtime(RuntimeError),
 }
 
-/// Artifact dir + PJRT client + compile cache.
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Artifact(e) => e.fmt(f),
+            SessionError::Runtime(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+impl From<ArtifactError> for SessionError {
+    fn from(e: ArtifactError) -> Self {
+        SessionError::Artifact(e)
+    }
+}
+
+impl From<RuntimeError> for SessionError {
+    fn from(e: RuntimeError) -> Self {
+        SessionError::Runtime(e)
+    }
+}
+
+/// Artifact dir + execution client + compile cache.
 pub struct Session {
     pub manifest: Manifest,
     pub client: Arc<Client>,
+    /// Synthesize native variants for keys the manifest lacks.
+    native_fallback: bool,
     cache: std::sync::Mutex<
         std::collections::BTreeMap<String, Arc<ModelExecutables>>>,
 }
 
 impl Session {
+    /// Open an on-disk artifact directory (`meta.json` + HLO files).
     pub fn open(artifact_dir: &Path) -> Result<Session, SessionError> {
         let manifest = Manifest::load(artifact_dir)?;
         let client = Client::cpu()?;
         Ok(Session {
             manifest,
             client,
+            native_fallback: false,
+            cache: std::sync::Mutex::new(Default::default()),
+        })
+    }
+
+    /// A session with no artifacts: every variant is synthesized and
+    /// executed by the native backend.
+    pub fn native() -> Result<Session, SessionError> {
+        Ok(Session {
+            manifest: Manifest {
+                dir: PathBuf::from("native"),
+                models: Vec::new(),
+            },
+            client: Client::cpu()?,
+            native_fallback: true,
             cache: std::sync::Mutex::new(Default::default()),
         })
     }
 
     /// Open the default artifact dir (`$MPI_LEARN_ARTIFACTS` or
-    /// `./artifacts`).
+    /// `./artifacts`), falling back to the native session when no
+    /// manifest exists there.
     pub fn open_default() -> Result<Session, SessionError> {
-        Self::open(&default_artifact_dir())
+        let dir = default_artifact_dir();
+        if dir.join("meta.json").exists() {
+            Self::open(&dir)
+        } else {
+            Self::native()
+        }
     }
 
-    /// Compile (or fetch cached) executables for a manifest key like
-    /// `lstm_b100`.
+    #[cfg(feature = "pjrt")]
+    fn build(&self, meta: &ModelMeta)
+        -> Result<ModelExecutables, SessionError> {
+        Ok(ModelExecutables::load(&self.client, meta, true)?)
+    }
+
+    /// No PJRT in this build: the native engine executes the manifest's
+    /// model (families it knows) instead.
+    #[cfg(not(feature = "pjrt"))]
+    fn build(&self, meta: &ModelMeta)
+        -> Result<ModelExecutables, SessionError> {
+        Ok(ModelExecutables::native(meta)?)
+    }
+
+    /// Executables for a manifest key like `lstm_b100` (compiled once,
+    /// then cached).
     pub fn executables(&self, key: &str)
         -> Result<Arc<ModelExecutables>, SessionError> {
         {
@@ -58,9 +128,19 @@ impl Session {
                 return Ok(exes.clone());
             }
         }
-        let meta = self.manifest.get(key)?.clone();
-        let exes = Arc::new(ModelExecutables::load(&self.client, &meta,
-                                                   true)?);
+        let exes = match self.manifest.get(key) {
+            Ok(meta) => {
+                let meta = meta.clone();
+                Arc::new(self.build(&meta)?)
+            }
+            Err(ArtifactError::UnknownVariant(_)) if self.native_fallback => {
+                let meta = native::meta_for_key(key).ok_or_else(|| {
+                    ArtifactError::UnknownVariant(key.to_string())
+                })?;
+                Arc::new(ModelExecutables::native(&meta)?)
+            }
+            Err(e) => return Err(e.into()),
+        };
         self.cache
             .lock()
             .unwrap()
@@ -71,7 +151,32 @@ impl Session {
     /// Variant lookup by (model, batch).
     pub fn executables_for(&self, model: &str, batch: usize)
         -> Result<Arc<ModelExecutables>, SessionError> {
-        let key = self.manifest.variant(model, batch)?.key.clone();
-        self.executables(&key)
+        self.executables(&format!("{model}_b{batch}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_session_serves_quickstart_variants() {
+        let s = Session::native().unwrap();
+        let exes = s.executables("mlp_b10").unwrap();
+        assert_eq!(exes.meta.batch, 10);
+        assert_eq!(exes.backend_name(), "native");
+        // cached: same Arc comes back
+        let again = s.executables("mlp_b10").unwrap();
+        assert!(Arc::ptr_eq(&exes, &again));
+        // lookup by (model, batch) uses the same key space
+        let by_pair = s.executables_for("lstm", 10).unwrap();
+        assert_eq!(by_pair.meta.param_count, 3_023);
+    }
+
+    #[test]
+    fn native_session_rejects_unknown_variants() {
+        let s = Session::native().unwrap();
+        assert!(s.executables("transformer_b16").is_err());
+        assert!(s.executables("nonsense").is_err());
     }
 }

@@ -1,0 +1,672 @@
+//! Native CPU execution backend: pure-Rust forward/backward for the
+//! model zoo, used when no AOT artifacts (or PJRT support) are present.
+//!
+//! The offline build cannot reach the `xla` registry crate, and a fresh
+//! checkout has no compiled HLO artifacts — yet the coordinator, the
+//! all-reduce trainer, and the quickstart example all need a real
+//! gradient engine. This module implements the same mathematical
+//! specification as `python/compile/kernels/ref.py` (Keras LSTM gate
+//! order i,f,g,o with `unit_forget_bias`, tanh MLP, mean softmax
+//! cross-entropy) so `mpi-learn` trains end-to-end with zero external
+//! dependencies. Parameter flattening follows the manifest convention:
+//! sorted parameter names, row-major tensors.
+//!
+//! Supported families: `mlp` (the quickstart model) and `lstm` (the
+//! paper benchmark). `transformer` still requires the PJRT path.
+
+use crate::runtime::artifact::ModelMeta;
+use crate::runtime::executor::{GradOutput, RuntimeError};
+use crate::tensor::ParamSet;
+
+/// A natively-executable model variant.
+pub(crate) enum NativeModel {
+    Mlp(MlpNet),
+    Lstm(LstmNet),
+}
+
+/// Tanh MLP over flattened input: dims[0] -> … -> dims.last().
+pub(crate) struct MlpNet {
+    batch: usize,
+    /// Layer widths including input and output: [d_in, h0, …, classes].
+    dims: Vec<usize>,
+}
+
+/// Single-layer LSTM + linear head (the paper's LSTM(20) benchmark).
+pub(crate) struct LstmNet {
+    batch: usize,
+    seq_len: usize,
+    features: usize,
+    hidden: usize,
+    classes: usize,
+}
+
+/// Keras `unit_forget_bias=True` analogue (see kernels/ref.py).
+const FORGET_BIAS: f32 = 1.0;
+
+// ---------------------------------------------------------------------------
+// dense math helpers (row-major)
+// ---------------------------------------------------------------------------
+
+/// C[rows, cols] += A[rows, inner] @ B[inner, cols]
+fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], rows: usize,
+              inner: usize, cols: usize) {
+    debug_assert_eq!(a.len(), rows * inner);
+    debug_assert_eq!(b.len(), inner * cols);
+    debug_assert_eq!(c.len(), rows * cols);
+    for i in 0..rows {
+        let arow = &a[i * inner..(i + 1) * inner];
+        let crow = &mut c[i * cols..(i + 1) * cols];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * cols..(p + 1) * cols];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[rows, cols] += A[inner, rows]^T @ B[inner, cols]
+fn matmul_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], rows: usize,
+                 inner: usize, cols: usize) {
+    debug_assert_eq!(a.len(), inner * rows);
+    debug_assert_eq!(b.len(), inner * cols);
+    debug_assert_eq!(c.len(), rows * cols);
+    for p in 0..inner {
+        let arow = &a[p * rows..(p + 1) * rows];
+        let brow = &b[p * cols..(p + 1) * cols];
+        for (i, &av) in arow.iter().enumerate() {
+            let crow = &mut c[i * cols..(i + 1) * cols];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[rows, cols] += A[rows, inner] @ B[cols, inner]^T
+fn matmul_nt_acc(a: &[f32], b: &[f32], c: &mut [f32], rows: usize,
+                 inner: usize, cols: usize) {
+    debug_assert_eq!(a.len(), rows * inner);
+    debug_assert_eq!(b.len(), cols * inner);
+    debug_assert_eq!(c.len(), rows * cols);
+    for i in 0..rows {
+        let arow = &a[i * inner..(i + 1) * inner];
+        for j in 0..cols {
+            let brow = &b[j * inner..(j + 1) * inner];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            c[i * cols + j] += acc;
+        }
+    }
+}
+
+fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// Zeroed flat-gradient buffer with one spare capacity slot: the
+/// all-reduce trainer piggybacks the batch loss with a `push`, which
+/// must not reallocate (and memcpy) the whole gradient every round.
+pub(crate) fn grad_buffer(n: usize) -> Vec<f32> {
+    let mut buf = Vec::with_capacity(n + 1);
+    buf.resize(n, 0.0);
+    buf
+}
+
+/// Mean softmax cross-entropy over `[batch, classes]` logits, plus the
+/// gradient d(loss)/d(logits) (already scaled by 1/batch).
+fn softmax_xent_grad(logits: &[f32], y: &[i32], batch: usize,
+                     classes: usize) -> (f32, Vec<f32>) {
+    let mut loss = 0.0f64;
+    let mut dz = vec![0.0f32; batch * classes];
+    let inv_b = 1.0 / batch as f32;
+    for row in 0..batch {
+        let z = &logits[row * classes..(row + 1) * classes];
+        let zmax = z.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &v in z {
+            sum += (v - zmax).exp();
+        }
+        let label = y[row] as usize;
+        loss += (sum.ln() - (z[label] - zmax)) as f64;
+        let d = &mut dz[row * classes..(row + 1) * classes];
+        for (j, &v) in z.iter().enumerate() {
+            let p = (v - zmax).exp() / sum;
+            d[j] = (p - if j == label { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    ((loss / batch as f64) as f32, dz)
+}
+
+fn argmax_correct(logits: &[f32], y: &[i32], batch: usize,
+                  classes: usize) -> f32 {
+    let mut correct = 0usize;
+    for row in 0..batch {
+        let z = &logits[row * classes..(row + 1) * classes];
+        let mut best = 0usize;
+        for (j, &v) in z.iter().enumerate() {
+            if v > z[best] {
+                best = j;
+            }
+        }
+        if best == y[row] as usize {
+            correct += 1;
+        }
+    }
+    correct as f32
+}
+
+// ---------------------------------------------------------------------------
+// model construction
+// ---------------------------------------------------------------------------
+
+impl NativeModel {
+    /// Build from a manifest entry, validating that the parameter table
+    /// matches what this backend can execute.
+    pub(crate) fn from_meta(meta: &ModelMeta)
+        -> Result<NativeModel, RuntimeError> {
+        match meta.model.as_str() {
+            "mlp" => MlpNet::from_meta(meta).map(NativeModel::Mlp),
+            "lstm" => LstmNet::from_meta(meta).map(NativeModel::Lstm),
+            other => Err(RuntimeError::Unsupported(format!(
+                "model family '{other}' needs the PJRT backend \
+                 (native backend supports mlp and lstm)"
+            ))),
+        }
+    }
+
+    pub(crate) fn grad_step(&self, params: &ParamSet, x: &[f32],
+                            y: &[i32]) -> Result<GradOutput, RuntimeError> {
+        match self {
+            NativeModel::Mlp(m) => Ok(m.grad(params, x, y)),
+            NativeModel::Lstm(m) => Ok(m.grad(params, x, y)),
+        }
+    }
+
+    pub(crate) fn eval_step(&self, params: &ParamSet, x: &[f32],
+                            y: &[i32]) -> Result<(f32, f32), RuntimeError> {
+        let logits = self.logits(params, x);
+        let (batch, classes) = self.out_shape();
+        let (loss, _) = softmax_xent_grad(&logits, y, batch, classes);
+        Ok((loss, argmax_correct(&logits, y, batch, classes)))
+    }
+
+    pub(crate) fn predict(&self, params: &ParamSet, x: &[f32])
+        -> Result<Vec<f32>, RuntimeError> {
+        Ok(self.logits(params, x))
+    }
+
+    fn logits(&self, params: &ParamSet, x: &[f32]) -> Vec<f32> {
+        match self {
+            NativeModel::Mlp(m) => m.forward(params, x).pop().unwrap(),
+            NativeModel::Lstm(m) => m.forward(params, x).logits,
+        }
+    }
+
+    fn out_shape(&self) -> (usize, usize) {
+        match self {
+            NativeModel::Mlp(m) => (m.batch, *m.dims.last().unwrap()),
+            NativeModel::Lstm(m) => (m.batch, m.classes),
+        }
+    }
+}
+
+/// Synthesize the manifest entry for a natively-supported variant key
+/// (`mlp_b100`, `lstm_b10`, …) using the quickstart/paper architecture
+/// constants from `python/compile/model.py`. Returns `None` for keys the
+/// native backend cannot serve.
+pub(crate) fn meta_for_key(key: &str) -> Option<ModelMeta> {
+    let (family, batch_s) = key.rsplit_once("_b")?;
+    let batch: usize = batch_s.parse().ok()?;
+    if batch == 0 {
+        return None;
+    }
+    let (seq_len, features, classes, hidden) = (30usize, 16usize, 3usize,
+                                                20usize);
+    let params: Vec<(String, Vec<usize>)> = match family {
+        "mlp" => {
+            let dims = [seq_len * features, 64, 32, classes];
+            let mut p = Vec::new();
+            for li in 0..dims.len() - 1 {
+                p.push((format!("fc{li}_b"), vec![dims[li + 1]]));
+                p.push((format!("fc{li}_w"), vec![dims[li], dims[li + 1]]));
+            }
+            p
+        }
+        "lstm" => vec![
+            ("lstm_b".into(), vec![4 * hidden]),
+            ("lstm_wh".into(), vec![hidden, 4 * hidden]),
+            ("lstm_wx".into(), vec![features, 4 * hidden]),
+            ("out_b".into(), vec![classes]),
+            ("out_w".into(), vec![hidden, classes]),
+        ],
+        _ => return None,
+    };
+    let param_count = params
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    Some(ModelMeta {
+        key: key.to_string(),
+        model: family.to_string(),
+        batch,
+        seq_len,
+        features,
+        classes,
+        hidden,
+        params,
+        param_count,
+        grad_file: std::path::PathBuf::from("native"),
+        eval_file: std::path::PathBuf::from("native"),
+        predict_file: std::path::PathBuf::from("native"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// MLP
+// ---------------------------------------------------------------------------
+
+impl MlpNet {
+    fn from_meta(meta: &ModelMeta) -> Result<MlpNet, RuntimeError> {
+        let bad = |msg: String| RuntimeError::Unsupported(msg);
+        if meta.params.len() < 2 || meta.params.len() % 2 != 0 {
+            return Err(bad(format!(
+                "mlp '{}': expected fc{{i}}_b/fc{{i}}_w parameter pairs",
+                meta.key
+            )));
+        }
+        let n_layers = meta.params.len() / 2;
+        let mut dims = vec![meta.seq_len * meta.features];
+        for li in 0..n_layers {
+            let (bname, bshape) = &meta.params[2 * li];
+            let (wname, wshape) = &meta.params[2 * li + 1];
+            if bname != &format!("fc{li}_b") || wname != &format!("fc{li}_w")
+                || wshape.len() != 2 || bshape.len() != 1
+                || wshape[0] != dims[li] || wshape[1] != bshape[0]
+            {
+                return Err(bad(format!(
+                    "mlp '{}': unexpected parameter table at layer {li}",
+                    meta.key
+                )));
+            }
+            dims.push(wshape[1]);
+        }
+        if *dims.last().unwrap() != meta.classes {
+            return Err(bad(format!(
+                "mlp '{}': output width != classes", meta.key
+            )));
+        }
+        Ok(MlpNet { batch: meta.batch, dims })
+    }
+
+    /// Forward pass; returns activations per layer (acts[0] = flat x,
+    /// acts.last() = logits; hidden activations are post-tanh).
+    fn forward(&self, params: &ParamSet, x: &[f32]) -> Vec<Vec<f32>> {
+        let b = self.batch;
+        let n_layers = self.dims.len() - 1;
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers + 1);
+        acts.push(x.to_vec());
+        for li in 0..n_layers {
+            let bias = params.slice(2 * li);
+            let w = params.slice(2 * li + 1);
+            let (m, n) = (self.dims[li], self.dims[li + 1]);
+            let mut z = vec![0.0f32; b * n];
+            for row in 0..b {
+                z[row * n..(row + 1) * n].copy_from_slice(bias);
+            }
+            matmul_acc(&acts[li], w, &mut z, b, m, n);
+            if li < n_layers - 1 {
+                for v in &mut z {
+                    *v = v.tanh();
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    fn grad(&self, params: &ParamSet, x: &[f32], y: &[i32]) -> GradOutput {
+        let b = self.batch;
+        let n_layers = self.dims.len() - 1;
+        let classes = *self.dims.last().unwrap();
+        let acts = self.forward(params, x);
+        let (loss, mut dz) = softmax_xent_grad(acts.last().unwrap(), y, b,
+                                               classes);
+        let mut grads = grad_buffer(params.num_params());
+        let views = params.views();
+        for li in (0..n_layers).rev() {
+            let (m, n) = (self.dims[li], self.dims[li + 1]);
+            let bv = &views[2 * li];
+            let wv = &views[2 * li + 1];
+            matmul_tn_acc(&acts[li], &dz,
+                          &mut grads[wv.offset..wv.offset + wv.len],
+                          m, b, n);
+            let db = &mut grads[bv.offset..bv.offset + bv.len];
+            for row in 0..b {
+                for (j, dbj) in db.iter_mut().enumerate() {
+                    *dbj += dz[row * n + j];
+                }
+            }
+            if li > 0 {
+                let w = params.slice(2 * li + 1);
+                let mut dh = vec![0.0f32; b * m];
+                matmul_nt_acc(&dz, w, &mut dh, b, n, m);
+                for (d, &h) in dh.iter_mut().zip(&acts[li]) {
+                    *d *= 1.0 - h * h;
+                }
+                dz = dh;
+            }
+        }
+        GradOutput { loss, grads }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LSTM
+// ---------------------------------------------------------------------------
+
+/// Forward-pass state kept for backprop-through-time.
+struct LstmForward {
+    logits: Vec<f32>,
+    /// h[t] for t = 0..=T (h[0] is the zero initial state), each [B, H].
+    hs: Vec<Vec<f32>>,
+    /// c[t] for t = 0..=T, each [B, H].
+    cs: Vec<Vec<f32>>,
+    /// Per-step activated gates (i, f, g, o), each [B, H].
+    gates: Vec<[Vec<f32>; 4]>,
+}
+
+impl LstmNet {
+    fn from_meta(meta: &ModelMeta) -> Result<LstmNet, RuntimeError> {
+        let h = meta.hidden;
+        let expect: Vec<(String, Vec<usize>)> = vec![
+            ("lstm_b".into(), vec![4 * h]),
+            ("lstm_wh".into(), vec![h, 4 * h]),
+            ("lstm_wx".into(), vec![meta.features, 4 * h]),
+            ("out_b".into(), vec![meta.classes]),
+            ("out_w".into(), vec![h, meta.classes]),
+        ];
+        if meta.params != expect {
+            return Err(RuntimeError::Unsupported(format!(
+                "lstm '{}': parameter table does not match the \
+                 single-layer LSTM this backend implements",
+                meta.key
+            )));
+        }
+        Ok(LstmNet {
+            batch: meta.batch,
+            seq_len: meta.seq_len,
+            features: meta.features,
+            hidden: h,
+            classes: meta.classes,
+        })
+    }
+
+    /// Copy time-step `t` of `[B, T, F]` input into a `[B, F]` buffer.
+    fn step_input(&self, x: &[f32], t: usize, out: &mut [f32]) {
+        let (tt, ff) = (self.seq_len, self.features);
+        for bi in 0..self.batch {
+            let src = bi * tt * ff + t * ff;
+            out[bi * ff..(bi + 1) * ff]
+                .copy_from_slice(&x[src..src + ff]);
+        }
+    }
+
+    fn forward(&self, params: &ParamSet, x: &[f32]) -> LstmForward {
+        let (b, h, ff) = (self.batch, self.hidden, self.features);
+        let bias = params.slice(0);
+        let wh = params.slice(1);
+        let wx = params.slice(2);
+        let out_b = params.slice(3);
+        let out_w = params.slice(4);
+
+        let mut hs = vec![vec![0.0f32; b * h]];
+        let mut cs = vec![vec![0.0f32; b * h]];
+        let mut gates = Vec::with_capacity(self.seq_len);
+        let mut xt = vec![0.0f32; b * ff];
+        for t in 0..self.seq_len {
+            self.step_input(x, t, &mut xt);
+            let mut z = vec![0.0f32; b * 4 * h];
+            for row in 0..b {
+                z[row * 4 * h..(row + 1) * 4 * h].copy_from_slice(bias);
+            }
+            matmul_acc(&xt, wx, &mut z, b, ff, 4 * h);
+            matmul_acc(&hs[t], wh, &mut z, b, h, 4 * h);
+
+            let mut gi = vec![0.0f32; b * h];
+            let mut gf = vec![0.0f32; b * h];
+            let mut gg = vec![0.0f32; b * h];
+            let mut go = vec![0.0f32; b * h];
+            let mut c_new = vec![0.0f32; b * h];
+            let mut h_new = vec![0.0f32; b * h];
+            let c_prev = &cs[t];
+            for row in 0..b {
+                for j in 0..h {
+                    let zrow = &z[row * 4 * h..(row + 1) * 4 * h];
+                    let k = row * h + j;
+                    let i = sigmoid(zrow[j]);
+                    let f = sigmoid(zrow[h + j] + FORGET_BIAS);
+                    let g = zrow[2 * h + j].tanh();
+                    let o = sigmoid(zrow[3 * h + j]);
+                    let c = f * c_prev[k] + i * g;
+                    gi[k] = i;
+                    gf[k] = f;
+                    gg[k] = g;
+                    go[k] = o;
+                    c_new[k] = c;
+                    h_new[k] = o * c.tanh();
+                }
+            }
+            gates.push([gi, gf, gg, go]);
+            hs.push(h_new);
+            cs.push(c_new);
+        }
+
+        let mut logits = vec![0.0f32; b * self.classes];
+        for row in 0..b {
+            logits[row * self.classes..(row + 1) * self.classes]
+                .copy_from_slice(out_b);
+        }
+        matmul_acc(hs.last().unwrap(), out_w, &mut logits, b, h,
+                   self.classes);
+        LstmForward { logits, hs, cs, gates }
+    }
+
+    fn grad(&self, params: &ParamSet, x: &[f32], y: &[i32]) -> GradOutput {
+        let (b, h, ff, c_out) = (self.batch, self.hidden, self.features,
+                                 self.classes);
+        let fwd = self.forward(params, x);
+        let (loss, dlogits) = softmax_xent_grad(&fwd.logits, y, b, c_out);
+
+        let views = params.views();
+        let mut grads = grad_buffer(params.num_params());
+        let wh = params.slice(1);
+        let out_w = params.slice(4);
+
+        // head: out_w [H, C], out_b [C]
+        {
+            let wv = &views[4];
+            matmul_tn_acc(fwd.hs.last().unwrap(), &dlogits,
+                          &mut grads[wv.offset..wv.offset + wv.len],
+                          h, b, c_out);
+            let bv = &views[3];
+            let db = &mut grads[bv.offset..bv.offset + bv.len];
+            for row in 0..b {
+                for (j, dbj) in db.iter_mut().enumerate() {
+                    *dbj += dlogits[row * c_out + j];
+                }
+            }
+        }
+
+        // dh flowing into the last hidden state
+        let mut dh = vec![0.0f32; b * h];
+        matmul_nt_acc(&dlogits, out_w, &mut dh, b, c_out, h);
+        let mut dc = vec![0.0f32; b * h];
+
+        let mut xt = vec![0.0f32; b * ff];
+        let mut dz = vec![0.0f32; b * 4 * h];
+        for t in (0..self.seq_len).rev() {
+            let [gi, gf, gg, go] = &fwd.gates[t];
+            let c_new = &fwd.cs[t + 1];
+            let c_prev = &fwd.cs[t];
+            for k in 0..b * h {
+                let tc = c_new[k].tanh();
+                let dck = dc[k] + dh[k] * go[k] * (1.0 - tc * tc);
+                let dok = dh[k] * tc;
+                let row = k / h;
+                let j = k % h;
+                let zrow = &mut dz[row * 4 * h..(row + 1) * 4 * h];
+                zrow[j] = dck * gg[k] * gi[k] * (1.0 - gi[k]);
+                zrow[h + j] = dck * c_prev[k] * gf[k] * (1.0 - gf[k]);
+                zrow[2 * h + j] = dck * gi[k] * (1.0 - gg[k] * gg[k]);
+                zrow[3 * h + j] = dok * go[k] * (1.0 - go[k]);
+                // carry to c_{t-1}; dh_{t-1} is recomputed below
+                dc[k] = dck * gf[k];
+            }
+            self.step_input(x, t, &mut xt);
+            // lstm_wx [F, 4H] at view 2, lstm_wh [H, 4H] at view 1,
+            // lstm_b [4H] at view 0
+            {
+                let wv = &views[2];
+                matmul_tn_acc(&xt, &dz,
+                              &mut grads[wv.offset..wv.offset + wv.len],
+                              ff, b, 4 * h);
+            }
+            {
+                let wv = &views[1];
+                matmul_tn_acc(&fwd.hs[t], &dz,
+                              &mut grads[wv.offset..wv.offset + wv.len],
+                              h, b, 4 * h);
+            }
+            {
+                let bv = &views[0];
+                let db = &mut grads[bv.offset..bv.offset + bv.len];
+                for row in 0..b {
+                    for (j, dbj) in db.iter_mut().enumerate() {
+                        *dbj += dz[row * 4 * h + j];
+                    }
+                }
+            }
+            for v in dh.iter_mut() {
+                *v = 0.0;
+            }
+            matmul_nt_acc(&dz, wh, &mut dh, b, 4 * h, h);
+        }
+        GradOutput { loss, grads }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fd_check(meta: &ModelMeta, model: &NativeModel, probes: usize) {
+        // Directional finite difference in f32: the whole-gradient
+        // projection is much more stable than per-coordinate probes.
+        let mut rng = Rng::new(42);
+        let params = ParamSet::glorot_init(&meta.params, &mut rng);
+        let x: Vec<f32> = (0..meta.batch * meta.seq_len * meta.features)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let y: Vec<i32> = (0..meta.batch)
+            .map(|_| rng.usize_below(meta.classes) as i32)
+            .collect();
+        let out = model.grad_step(&params, &x, &y).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        assert_eq!(out.grads.len(), meta.param_count);
+        for _ in 0..probes {
+            let dir: Vec<f32> = (0..params.num_params())
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let eps = 1e-3f32;
+            let mut plus = params.clone();
+            plus.axpy(eps, &dir);
+            let mut minus = params.clone();
+            minus.axpy(-eps, &dir);
+            let (lp, _) = model.eval_step(&plus, &x, &y).unwrap();
+            let (lm, _) = model.eval_step(&minus, &x, &y).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            let analytic: f32 =
+                out.grads.iter().zip(&dir).map(|(g, d)| g * d).sum();
+            let denom = fd.abs().max(analytic.abs()).max(1e-3);
+            assert!(
+                (fd - analytic).abs() / denom < 0.05,
+                "fd={fd} analytic={analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn meta_for_key_matches_known_param_counts() {
+        let mlp = meta_for_key("mlp_b100").unwrap();
+        assert_eq!(mlp.param_count, 32_963);
+        assert_eq!(mlp.batch, 100);
+        let lstm = meta_for_key("lstm_b10").unwrap();
+        assert_eq!(lstm.param_count, 3_023);
+        assert!(meta_for_key("transformer_b16").is_none());
+        assert!(meta_for_key("garbage").is_none());
+        assert!(meta_for_key("mlp_b0").is_none());
+    }
+
+    #[test]
+    fn mlp_gradient_matches_finite_difference() {
+        let meta = meta_for_key("mlp_b10").unwrap();
+        let model = NativeModel::from_meta(&meta).unwrap();
+        fd_check(&meta, &model, 3);
+    }
+
+    #[test]
+    fn lstm_gradient_matches_finite_difference() {
+        let meta = meta_for_key("lstm_b10").unwrap();
+        let model = NativeModel::from_meta(&meta).unwrap();
+        fd_check(&meta, &model, 3);
+    }
+
+    #[test]
+    fn eval_counts_correct_predictions() {
+        let meta = meta_for_key("mlp_b10").unwrap();
+        let model = NativeModel::from_meta(&meta).unwrap();
+        let mut rng = Rng::new(1);
+        let params = ParamSet::glorot_init(&meta.params, &mut rng);
+        let x = vec![0.1f32; meta.batch * meta.seq_len * meta.features];
+        let y = vec![0i32; meta.batch];
+        let (loss, ncorrect) = model.eval_step(&params, &x, &y).unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=meta.batch as f32).contains(&ncorrect));
+        let logits = model.predict(&params, &x).unwrap();
+        assert_eq!(logits.len(), meta.batch * meta.classes);
+    }
+
+    #[test]
+    fn gradient_descent_reduces_loss() {
+        // A few plain-SGD steps on one fixed batch must reduce the loss
+        // for both families — end-to-end backprop sanity.
+        for key in ["mlp_b10", "lstm_b10"] {
+            let meta = meta_for_key(key).unwrap();
+            let model = NativeModel::from_meta(&meta).unwrap();
+            let mut rng = Rng::new(7);
+            let mut params = ParamSet::glorot_init(&meta.params, &mut rng);
+            let x: Vec<f32> = (0..meta.batch * meta.seq_len * meta.features)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let y: Vec<i32> = (0..meta.batch)
+                .map(|_| rng.usize_below(meta.classes) as i32)
+                .collect();
+            let first = model.grad_step(&params, &x, &y).unwrap();
+            let mut last = first.loss;
+            for _ in 0..50 {
+                let out = model.grad_step(&params, &x, &y).unwrap();
+                params.axpy(-0.1, &out.grads);
+                last = out.loss;
+            }
+            assert!(
+                last < first.loss * 0.6,
+                "{key}: loss {} -> {last} did not drop",
+                first.loss
+            );
+        }
+    }
+}

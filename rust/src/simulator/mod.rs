@@ -150,6 +150,62 @@ pub fn simulate(cost: &CostModel, cfg: &SimConfig, seed: u64)
     }
 }
 
+/// Simulate one masterless ring-all-reduce run (`Mode::AllReduce`): per
+/// round, the slowest rank's gradient gates the lockstep collective,
+/// then every rank applies the identical update in parallel. Rank 0's
+/// validation still serializes the world (it is a barrier participant),
+/// but there is no per-gradient master service time — the quantity whose
+/// saturation caps the parameter-server curves of Figs 3/4.
+pub fn simulate_allreduce(cost: &CostModel, cfg: &SimConfig, seed: u64)
+    -> SimResult {
+    let rounds = cfg.batches_per_worker();
+    let mut rng = Rng::new(seed);
+    let ring = cost.ring_allreduce_time(cfg.n_workers);
+    let mut t = 0.0f64;
+    let mut rank0_busy = 0.0f64;
+    let mut validations = 0u64;
+    for round in 0..rounds {
+        let slowest = (0..cfg.n_workers)
+            .map(|_| cost.grad_time(cfg.batch, &mut rng))
+            .fold(0.0f64, f64::max);
+        t += slowest + ring + cost.t_update;
+        rank0_busy += cost.t_update;
+        if cfg.validate_every > 0
+            && (round + 1) % cfg.validate_every == 0 {
+            t += cost.t_val;
+            rank0_busy += cost.t_val;
+            validations += 1;
+        }
+    }
+    SimResult {
+        total_time_s: t,
+        master_busy_s: rank0_busy,
+        master_utilization: if t > 0.0 { rank0_busy / t } else { 0.0 },
+        updates: rounds,
+        validations,
+    }
+}
+
+/// Speedup-vs-workers series for the all-reduce mode (fixed total
+/// dataset divided evenly, relative to one worker) — the masterless
+/// counterpart of [`speedup_curve`] for Fig-3/4-style comparisons.
+pub fn speedup_curve_allreduce(cost: &CostModel, base: &SimConfig,
+                               worker_counts: &[usize], seed: u64)
+    -> Vec<(usize, f64)> {
+    let t1 = simulate_allreduce(
+        cost, &SimConfig { n_workers: 1, ..base.clone() }, seed)
+        .total_time_s;
+    worker_counts
+        .iter()
+        .map(|&w| {
+            let cfg = SimConfig { n_workers: w, ..base.clone() };
+            let t = simulate_allreduce(cost, &cfg, seed ^ w as u64)
+                .total_time_s;
+            (w, t1 / t)
+        })
+        .collect()
+}
+
 /// Speedup-vs-workers series: fixed total dataset divided evenly (the
 /// paper's Figs 3/4 protocol), speedup relative to one worker.
 pub fn speedup_curve(cost: &CostModel, base: &SimConfig,
@@ -281,5 +337,47 @@ mod tests {
         let k = cfg(8);
         assert_eq!(simulate_async(&c, &k, 7).total_time_s,
                    simulate_async(&c, &k, 7).total_time_s);
+    }
+
+    #[test]
+    fn allreduce_round_count_matches_protocol() {
+        let c = cost();
+        let k = cfg(8);
+        let r = simulate_allreduce(&c, &k, 0);
+        assert_eq!(r.updates, k.batches_per_worker());
+        assert!(r.total_time_s > 0.0);
+        assert!(r.master_busy_s <= r.total_time_s);
+    }
+
+    #[test]
+    fn allreduce_escapes_master_saturation() {
+        // The Fig-3/4 mechanism in reverse: with a costly master update
+        // (the paper's Python/Keras master, ~3.6 ms/gradient), async
+        // Downpour saturates at t_update per gradient while the ring
+        // pays it once per ROUND — so at high worker counts the
+        // masterless mode must win by a wide margin.
+        let mut c = cost();
+        c.t_update = 3.6e-3;
+        c.jitter = 0.0;
+        let k = SimConfig { total_samples: 600_000, ..cfg(60) };
+        let ps = simulate_async(&c, &k, 1).total_time_s;
+        let ring = simulate_allreduce(&c, &k, 1).total_time_s;
+        assert!(
+            ring < ps / 2.0,
+            "ring {ring:.2}s should beat saturated PS {ps:.2}s"
+        );
+    }
+
+    #[test]
+    fn allreduce_scales_near_linearly_at_low_latency() {
+        let mut c = cost();
+        c.jitter = 0.0;
+        let base = SimConfig { total_samples: 240_000, ..cfg(1) };
+        let curve = speedup_curve_allreduce(&c, &base, &[2, 4, 8], 0);
+        for (w, s) in curve {
+            assert!(s > 0.8 * w as f64,
+                    "allreduce speedup {s:.2} at {w} workers too low");
+            assert!(s <= w as f64 + 1e-6);
+        }
     }
 }

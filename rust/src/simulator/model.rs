@@ -105,6 +105,20 @@ impl CostModel {
     pub fn transfer_time(&self) -> f64 {
         self.latency + self.msg_bytes / self.bandwidth_bytes_per_s
     }
+
+    /// Wall time of one chunked ring all-reduce over `n` ranks: the
+    /// classic 2(n-1) lockstep steps, each moving a 1/n-size chunk —
+    /// per-rank payload volume `2(n-1)/n * msg_bytes`, independent of
+    /// the world size in the large-n limit, at the price of a latency
+    /// term that grows linearly with n.
+    pub fn ring_allreduce_time(&self, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let steps = 2.0 * (n as f64 - 1.0);
+        let chunk_bytes = self.msg_bytes / n as f64;
+        steps * (self.latency + chunk_bytes / self.bandwidth_bytes_per_s)
+    }
 }
 
 /// Workload shape: the paper's protocol (fixed dataset divided evenly,
@@ -185,6 +199,22 @@ mod tests {
         for _ in 0..10_000 {
             assert!(c.grad_time(100, &mut rng) > 0.0);
         }
+    }
+
+    #[test]
+    fn ring_time_zero_for_singleton_and_grows_with_latency() {
+        let c = CostModel::cluster(3_023);
+        assert_eq!(c.ring_allreduce_time(1), 0.0);
+        let t2 = c.ring_allreduce_time(2);
+        let t8 = c.ring_allreduce_time(8);
+        assert!(t2 > 0.0);
+        // more ranks -> more lockstep latency terms
+        assert!(t8 > t2);
+        // but the per-rank payload volume stays bounded: the bandwidth
+        // component approaches 2 * msg_bytes / bw
+        let bw_only = CostModel { latency: 0.0, ..c };
+        let cap = 2.0 * bw_only.msg_bytes / bw_only.bandwidth_bytes_per_s;
+        assert!(bw_only.ring_allreduce_time(64) < cap + 1e-12);
     }
 
     #[test]

@@ -175,13 +175,14 @@ impl ParamSet {
                 f.write_all(&(*d as u64).to_le_bytes())?;
             }
         }
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(
-                self.data.as_ptr() as *const u8,
-                self.data.len() * 4,
-            )
-        };
-        f.write_all(bytes)?;
+        // Explicit little-endian bytes: `load` decodes f32::from_le_bytes,
+        // so a native-endian raw dump would corrupt checkpoints on
+        // big-endian hosts (and the unsafe reinterpret was never needed).
+        let mut bytes = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&bytes)?;
         Ok(())
     }
 
@@ -299,6 +300,23 @@ mod tests {
         ps.save(&path).unwrap();
         let loaded = ParamSet::load(&path).unwrap();
         assert_eq!(ps, loaded);
+    }
+
+    #[test]
+    fn checkpoint_payload_is_little_endian_bytes() {
+        // Byte-level check independent of `load`: the payload tail must
+        // be the explicit to_le_bytes encoding of the flat buffer, on
+        // every host endianness.
+        let mut ps = ParamSet::zeros(&[("w".into(), vec![2])]);
+        ps.flat_mut().copy_from_slice(&[1.0, -2.5]);
+        let path = std::env::temp_dir().join("mpi_learn_ckpt_le_test.bin");
+        ps.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let tail = &bytes[bytes.len() - 8..];
+        let mut expect = Vec::new();
+        expect.extend_from_slice(&1.0f32.to_le_bytes());
+        expect.extend_from_slice(&(-2.5f32).to_le_bytes());
+        assert_eq!(tail, &expect[..]);
     }
 
     #[test]

@@ -13,15 +13,30 @@ pub struct Args {
     consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
-    #[error("flag --{0}: cannot parse '{1}' as {2}")]
     BadValue(String, String, &'static str),
-    #[error("unknown flags: {0:?} (did you misspell one?)")]
     UnknownFlags(Vec<String>),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(flag) => {
+                write!(f, "flag --{flag} expects a value")
+            }
+            CliError::BadValue(flag, value, ty) => {
+                write!(f, "flag --{flag}: cannot parse '{value}' as {ty}")
+            }
+            CliError::UnknownFlags(flags) => {
+                write!(f, "unknown flags: {flags:?} (did you misspell one?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `std::env::args()` minus the binary name. Drops the bare

@@ -1,0 +1,221 @@
+//! End-to-end tests of the masterless all-reduce training mode, running
+//! on the native CPU backend — no artifacts needed, so unlike the PJRT
+//! integration suite these always run.
+
+use mpi_learn::coordinator::worker::RingWorker;
+use mpi_learn::coordinator::{train, Algo, Data, HierarchySpec, Mode,
+                             ModelBuilder, TrainConfig, Transport};
+use mpi_learn::data::{generate_shard, DataSet, GeneratorConfig};
+use mpi_learn::runtime::Session;
+use mpi_learn::util::rng::Rng;
+
+fn allreduce_cfg(workers: usize, batch: usize, epochs: u32)
+    -> TrainConfig {
+    TrainConfig {
+        builder: ModelBuilder::new("mlp", batch),
+        algo: Algo {
+            mode: Mode::AllReduce,
+            batch_size: batch,
+            epochs,
+            validate_every: 0,
+            max_val_batches: 4,
+            ..Algo::default()
+        },
+        n_workers: workers,
+        seed: 11,
+        transport: Transport::Inproc,
+        hierarchy: None,
+    }
+}
+
+fn synthetic(samples_per_worker: usize) -> Data {
+    Data::Synthetic {
+        gen: GeneratorConfig { seed: 5, ..Default::default() },
+        samples_per_worker,
+        val_samples: 250,
+    }
+}
+
+#[test]
+fn allreduce_trains_quickstart_model_end_to_end() {
+    // Acceptance: Mode::AllReduce trains the quickstart model (mlp) on
+    // the inproc transport with >= 4 ranks.
+    let session = Session::native().unwrap();
+    let cfg = allreduce_cfg(4, 25, 2);
+    let result = train(&session, &cfg, &synthetic(250)).unwrap();
+    // 250 samples / batch 25 = 10 rounds per epoch, 2 epochs
+    assert_eq!(result.history.master_updates, 20);
+    // every rank reported its stats to rank 0
+    assert_eq!(result.history.workers.len(), 4);
+    for w in &result.history.workers {
+        assert_eq!(w.batches, 20);
+        assert_eq!(w.epochs, 2);
+    }
+    let acc = result.history.final_val_acc().expect("final validation");
+    assert!(acc > 0.6, "final val acc {acc}");
+    assert!(result.history.staleness_mean == 0.0,
+            "synchronous mode is never stale");
+}
+
+#[test]
+fn allreduce_ranks_end_bitwise_identical() {
+    // The replicated-optimizer invariant: every rank finishes with the
+    // exact same bytes in its ParamSet.
+    let session = Session::native().unwrap();
+    let exes = session.executables("mlp_b10").unwrap();
+    let n = 4;
+    let algo = Algo {
+        mode: Mode::AllReduce,
+        batch_size: 10,
+        epochs: 2,
+        ..Algo::default()
+    };
+    let gen = GeneratorConfig { seed: 21, ..Default::default() };
+    let mut rng = Rng::new(3);
+    let datasets: Vec<DataSet> = (0..n)
+        .map(|_| DataSet::from_shard(generate_shard(&gen, 80, &mut rng)))
+        .collect();
+    let init = exes.init_params(&mut Rng::new(7));
+
+    let world = mpi_learn::mpi::inproc_world(n);
+    let outcomes: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                let ds = &datasets[rank];
+                let algo = &algo;
+                let exes = exes.clone();
+                let init = if rank == 0 { Some(init.clone()) }
+                           else { None };
+                s.spawn(move || {
+                    RingWorker::new(&comm, algo, &exes, ds,
+                                    100 + rank as u64, None)
+                        .run(init)
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let reference = &outcomes[0].weights;
+    assert_ne!(reference, &init, "training must have moved the weights");
+    for (rank, outcome) in outcomes.iter().enumerate().skip(1) {
+        assert_eq!(&outcome.weights, reference,
+                   "rank {rank} diverged from rank 0");
+    }
+    // 80 samples / batch 10 = 8 rounds per epoch, 2 epochs
+    for outcome in &outcomes {
+        assert_eq!(outcome.report.batches, 16);
+    }
+}
+
+#[test]
+fn allreduce_uneven_data_agrees_on_common_rounds() {
+    // Ranks with different local dataset sizes must agree on the
+    // minimum round count instead of deadlocking the lockstep ring.
+    let session = Session::native().unwrap();
+    let exes = session.executables("mlp_b10").unwrap();
+    let algo = Algo {
+        mode: Mode::AllReduce,
+        batch_size: 10,
+        epochs: 1,
+        ..Algo::default()
+    };
+    let gen = GeneratorConfig { seed: 31, ..Default::default() };
+    let mut rng = Rng::new(4);
+    // 100 samples -> 10 local batches vs 37 samples -> 3 local batches
+    let sizes = [100usize, 37];
+    let datasets: Vec<DataSet> = sizes
+        .iter()
+        .map(|&s| DataSet::from_shard(generate_shard(&gen, s, &mut rng)))
+        .collect();
+    let init = exes.init_params(&mut Rng::new(8));
+
+    let world = mpi_learn::mpi::inproc_world(2);
+    let outcomes: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                let ds = &datasets[rank];
+                let algo = &algo;
+                let exes = exes.clone();
+                let init = if rank == 0 { Some(init.clone()) }
+                           else { None };
+                s.spawn(move || {
+                    RingWorker::new(&comm, algo, &exes, ds,
+                                    200 + rank as u64, None)
+                        .run(init)
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for outcome in &outcomes {
+        assert_eq!(outcome.report.batches, 3,
+                   "both ranks run min(10, 3) common rounds");
+    }
+    assert_eq!(outcomes[0].weights, outcomes[1].weights);
+}
+
+#[test]
+fn allreduce_training_is_deterministic() {
+    let session = Session::native().unwrap();
+    let cfg = allreduce_cfg(3, 20, 1);
+    let data = synthetic(200);
+    let r1 = train(&session, &cfg, &data).unwrap();
+    let r2 = train(&session, &cfg, &data).unwrap();
+    assert_eq!(r1.weights, r2.weights,
+               "lockstep all-reduce is schedule-independent");
+    assert_eq!(r1.history.master_updates, r2.history.master_updates);
+}
+
+#[test]
+fn allreduce_works_over_tcp() {
+    let session = Session::native().unwrap();
+    let mut cfg = allreduce_cfg(3, 20, 1);
+    cfg.transport = Transport::Tcp { base_port: 46550 };
+    let result = train(&session, &cfg, &synthetic(100)).unwrap();
+    assert_eq!(result.history.master_updates, 5);
+    assert_eq!(result.history.workers.len(), 3);
+}
+
+#[test]
+fn allreduce_rejects_hierarchy() {
+    let session = Session::native().unwrap();
+    let mut cfg = allreduce_cfg(4, 20, 1);
+    cfg.hierarchy = Some(HierarchySpec {
+        n_groups: 2,
+        workers_per_group: 2,
+        sync_every: 5,
+    });
+    let err = train(&session, &cfg, &synthetic(100));
+    assert!(err.is_err(), "hierarchy + allreduce must be rejected");
+}
+
+#[test]
+fn downpour_still_trains_on_native_backend() {
+    // The pre-existing parameter-server path also runs end-to-end on
+    // the native backend (previously it needed AOT artifacts).
+    let session = Session::native().unwrap();
+    let cfg = TrainConfig {
+        builder: ModelBuilder::new("mlp", 20),
+        algo: Algo {
+            batch_size: 20,
+            epochs: 2,
+            max_val_batches: 4,
+            ..Algo::default()
+        },
+        n_workers: 2,
+        seed: 13,
+        transport: Transport::Inproc,
+        hierarchy: None,
+    };
+    let result = train(&session, &cfg, &synthetic(200)).unwrap();
+    assert_eq!(result.history.master_updates, 2 * 2 * 10);
+    let acc = result.history.final_val_acc().expect("final validation");
+    assert!(acc > 0.6, "downpour-on-native final val acc {acc}");
+}

@@ -1,0 +1,182 @@
+//! Property tests for the collective-communication subsystem: the ring
+//! all-reduce must equal a serial reduction — bitwise, because each
+//! element is reduced exactly once in ring order — for random world
+//! sizes (2–8) and lengths that exercise non-divisible and
+//! smaller-than-world chunk splits, on both transports.
+
+use mpi_learn::mpi::collective::{Collective, ReduceOp};
+use mpi_learn::mpi::{self, Comm};
+use mpi_learn::util::prop::{check, gen, PropConfig};
+
+/// Serial reference matching the ring's deterministic reduction order:
+/// chunk `c` starts from rank `c`'s contribution and accumulates ranks
+/// c+1, …, c+n-1 (mod n).
+fn ring_order_reference(inputs: &[Vec<f32>], op: ReduceOp) -> Vec<f32> {
+    let n = inputs.len();
+    let len = inputs[0].len();
+    let mut out = vec![0.0f32; len];
+    for c in 0..n {
+        let (lo, hi) = Collective::chunk_bounds(len, n, c);
+        for j in lo..hi {
+            let mut acc = inputs[c][j];
+            for k in 1..n {
+                let v = inputs[(c + k) % n][j];
+                match op {
+                    ReduceOp::Sum => acc += v,
+                    ReduceOp::Min => acc = acc.min(v),
+                    ReduceOp::Max => acc = acc.max(v),
+                }
+            }
+            out[j] = acc;
+        }
+    }
+    out
+}
+
+fn run_world(world: Vec<Comm>, inputs: &[Vec<f32>], op: ReduceOp)
+    -> Vec<Vec<f32>> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .zip(inputs.iter())
+            .map(|(comm, input)| {
+                let mut buf = input.clone();
+                s.spawn(move || {
+                    let mut col = Collective::new(&comm);
+                    col.allreduce(&mut buf, op).unwrap();
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn prop_ring_allreduce_equals_serial_reduction() {
+    check("ring-allreduce", PropConfig { cases: 60, seed: 0x51C6 },
+          |rng| {
+        let n = gen::usize_in(rng, 2, 8);
+        // lengths around (and below) the world size force empty and
+        // uneven chunks; larger ones exercise the bulk path
+        let len = match rng.usize_below(4) {
+            0 => gen::usize_in(rng, 0, n),           // <= world size
+            1 => gen::usize_in(rng, n + 1, 3 * n),   // non-divisible
+            2 => gen::usize_in(rng, 1, 50),
+            _ => gen::usize_in(rng, 100, 2000),
+        };
+        let op = match rng.usize_below(3) {
+            0 => ReduceOp::Sum,
+            1 => ReduceOp::Min,
+            _ => ReduceOp::Max,
+        };
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| gen::f32_vec(rng, len, 3.0))
+            .collect();
+        let reference = ring_order_reference(&inputs, op);
+        let results = run_world(mpi::inproc_world(n), &inputs, op);
+        for (rank, got) in results.iter().enumerate() {
+            if got != &reference {
+                return Err(format!(
+                    "rank {rank} diverged (n={n}, len={len}, op={op:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ring_allreduce_over_tcp_transport() {
+    // The same lockstep schedule must hold over the socket mesh.
+    let n = 3;
+    let len = 257; // non-divisible by 3
+    let mut rng = mpi_learn::util::rng::Rng::new(9);
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let reference = ring_order_reference(&inputs, ReduceOp::Sum);
+    let world = mpi::tcp_world(n, 46500).unwrap();
+    let results = run_world(world, &inputs, ReduceOp::Sum);
+    for got in &results {
+        assert_eq!(got, &reference);
+    }
+}
+
+#[test]
+fn prop_broadcast_replicates_root() {
+    check("ring-broadcast", PropConfig { cases: 30, seed: 0xB04D },
+          |rng| {
+        let n = gen::usize_in(rng, 2, 8);
+        let root = rng.usize_below(n);
+        let len = gen::usize_in(rng, 0, 300);
+        let payload = gen::f32_vec(rng, len, 5.0);
+        let world = mpi::inproc_world(n);
+        let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = world
+                .into_iter()
+                .enumerate()
+                .map(|(rank, comm)| {
+                    let mut buf = if rank == root {
+                        payload.clone()
+                    } else {
+                        Vec::new()
+                    };
+                    s.spawn(move || {
+                        let mut col = Collective::new(&comm);
+                        col.broadcast(root, &mut buf).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, got) in results.iter().enumerate() {
+            if got != &payload {
+                return Err(format!(
+                    "rank {rank} missed broadcast (n={n}, root={root}, \
+                     len={len})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn repeated_collectives_stay_in_lockstep() {
+    // Back-to-back all-reduces must not bleed chunks into each other:
+    // per-pair FIFO plus the lockstep schedule keeps rounds separated.
+    let n = 4;
+    let rounds = 25usize;
+    let world = mpi::inproc_world(n);
+    let finals: Vec<f32> = std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                s.spawn(move || {
+                    let mut col = Collective::new(&comm);
+                    let mut acc = 0.0f32;
+                    for round in 0..rounds {
+                        let mut buf =
+                            vec![(rank + round) as f32; 7];
+                        col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                        acc += buf[0];
+                    }
+                    acc
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // sum over ranks of (rank + round) accumulated across rounds
+    let expect: f32 = (0..rounds)
+        .map(|round| {
+            (0..n).map(|rank| (rank + round) as f32).sum::<f32>()
+        })
+        .sum();
+    for got in finals {
+        assert_eq!(got, expect);
+    }
+}

@@ -1,0 +1,99 @@
+//! Minimal vendored IEEE CRC-32 (reflected, polynomial 0xEDB88320) with
+//! the `crc32fast::Hasher` API surface used by the shard file format.
+//! Table-driven single-byte implementation — plenty for shard-sized
+//! payloads; drop-in replaceable by the upstream SIMD crate.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// Streaming CRC-32 hasher.
+#[derive(Clone, Debug)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher { state: 0xFFFF_FFFF }
+    }
+
+    /// Resume from a previously finalized checksum.
+    pub fn new_with_initial(init: u32) -> Hasher {
+        Hasher { state: init ^ 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, buf: &[u8]) {
+        let mut s = self.state;
+        for &b in buf {
+            s = TABLE[((s ^ b as u32) & 0xFF) as usize] ^ (s >> 8);
+        }
+        self.state = s;
+    }
+
+    pub fn finalize(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+
+    pub fn reset(&mut self) {
+        self.state = 0xFFFF_FFFF;
+    }
+}
+
+/// One-shot convenience (upstream `crc32fast::hash`).
+pub fn hash(buf: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(buf);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical CRC-32 check value.
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data: Vec<u8> = (0u16..1024).map(|i| (i % 251) as u8).collect();
+        let mut h = Hasher::new();
+        for chunk in data.chunks(37) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finalize(), hash(&data));
+    }
+
+    #[test]
+    fn corruption_changes_checksum() {
+        let mut data = vec![7u8; 64];
+        let base = hash(&data);
+        data[40] ^= 0x01;
+        assert_ne!(hash(&data), base);
+    }
+}

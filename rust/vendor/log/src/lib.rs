@@ -1,0 +1,280 @@
+//! Minimal vendored implementation of the `log` crate facade.
+//!
+//! Implements exactly the API surface this repository uses (see
+//! `vendor/README.md`): the five level macros, `Level`/`LevelFilter`,
+//! the `Log` trait with `Metadata`/`Record`, and the global
+//! `set_logger`/`set_max_level`/`max_level` plumbing. Drop-in
+//! replaceable by the upstream crate.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a single log record.
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Global maximum-verbosity filter.
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter)
+        -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata about a log record (level + target module path).
+#[derive(Clone, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the pre-formatted message arguments.
+#[derive(Clone, Debug)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging sink. Implementors must be thread-safe: records arrive from
+/// any thread.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        false
+    }
+
+    fn log(&self, _: &Record) {}
+
+    fn flush(&self) {}
+}
+
+static NOP: NopLogger = NopLogger;
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Returned by [`set_logger`] if a logger was already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("attempted to set a logger after one was already set")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// The installed logger, or a no-op sink if none was set.
+pub fn logger() -> &'static dyn Log {
+    match LOGGER.get() {
+        Some(l) => *l,
+        None => &NOP,
+    }
+}
+
+/// Set the global maximum level filter.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// The current global maximum level filter.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro/dispatch backend — not part of the public facade.
+#[doc(hidden)]
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments) {
+    let record = Record {
+        metadata: Metadata { level, target },
+        args,
+    };
+    logger().log(&record);
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {{
+        let lvl = $lvl;
+        if lvl <= $crate::max_level() {
+            $crate::__private_log(lvl, module_path!(),
+                                  format_args!($($arg)+));
+        }
+    }};
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Error, $($arg)+))
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Warn, $($arg)+))
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Info, $($arg)+))
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Debug, $($arg)+))
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Trace, $($arg)+))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    struct Counter {
+        hits: AtomicUsize,
+    }
+
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= max_level()
+        }
+
+        fn log(&self, record: &Record) {
+            if self.enabled(record.metadata()) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                let _ = format!("{}", record.args());
+            }
+        }
+
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn levels_compare_against_filters() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(Level::Trace > LevelFilter::Off);
+    }
+
+    // One shared logger for every test in this binary: the global
+    // LOGGER is process-wide and first-set-wins.
+    static COUNTER: Counter = Counter { hits: AtomicUsize::new(0) };
+
+    #[test]
+    fn filter_gates_macro_dispatch() {
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Info);
+        let before = COUNTER.hits.load(Ordering::Relaxed);
+        info!("visible {}", 1);
+        debug!("invisible {}", 2);
+        let after = COUNTER.hits.load(Ordering::Relaxed);
+        assert_eq!(after - before, 1);
+    }
+
+    #[test]
+    fn second_set_logger_errors() {
+        let _ = set_logger(&COUNTER);
+        assert!(set_logger(&COUNTER).is_err());
+    }
+}
