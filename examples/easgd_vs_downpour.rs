@@ -1,11 +1,10 @@
 //! Compare the paper's two distributed algorithms on the same workload:
 //! asynchronous Downpour SGD vs Elastic Averaging SGD at several exchange
-//! periods tau (§III-A).
+//! periods tau (§III-A) — each variant one `Experiment` chain.
 //!
 //!     cargo run --release --example easgd_vs_downpour
 
-use mpi_learn::coordinator::{train, Algo, Data, Mode, ModelBuilder,
-                             TrainConfig, Transport};
+use mpi_learn::coordinator::{Algo, Data, Experiment, Mode};
 use mpi_learn::data::GeneratorConfig;
 use mpi_learn::optim::OptimizerConfig;
 use mpi_learn::util::bench::print_table;
@@ -44,15 +43,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     let mut rows = Vec::new();
     for (name, algo) in variants {
-        let cfg = TrainConfig {
-            builder: ModelBuilder::new("lstm", algo.batch_size),
-            algo,
-            n_workers: workers,
-            seed: 2017,
-            transport: Transport::Inproc,
-            hierarchy: None,
-        };
-        let r = train(&session, &cfg, &data)?;
+        let r = Experiment::new("lstm")
+            .batch(algo.batch_size)
+            .workers(workers)
+            .algo(algo)
+            .data(data.clone())
+            .run(&session)?;
         let v = r.history.validations.last().cloned().unwrap();
         rows.push(vec![
             name,

@@ -4,8 +4,9 @@
 //! synthetic HEP dataset (the Delphes substitute — N shard files divided
 //! evenly among workers, exactly the paper's `Data` flow), train the
 //! LSTM(20)+softmax(3) with asynchronous Downpour SGD + momentum for the
-//! configured epochs, validate on the master at a fixed cadence, and dump
-//! the loss/accuracy curves as CSV for EXPERIMENTS.md.
+//! configured epochs — with the full callback stack attached: best-val
+//! checkpointing, early stopping, and streaming JSONL metrics — then
+//! dump the loss/accuracy curves as CSV for EXPERIMENTS.md.
 //!
 //!     cargo run --release --example hep_lstm
 //!     cargo run --release --example hep_lstm -- --files 32 \
@@ -13,8 +14,7 @@
 
 use std::path::PathBuf;
 
-use mpi_learn::coordinator::{train, Algo, Data, ModelBuilder,
-                             TrainConfig, Transport};
+use mpi_learn::coordinator::{Data, Experiment};
 use mpi_learn::data::{generate_dataset, GeneratorConfig};
 use mpi_learn::util::cli::Args;
 
@@ -27,6 +27,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let workers = args.usize("workers", 4)?;
     let epochs = args.usize("epochs", 10)? as u32;
     let batch = args.usize("batch", 100)?;
+    let patience = args.usize("early-stopping", 0)?;
     let out_dir = PathBuf::from(args.str("out", "runs/hep_lstm"));
     args.finish()?;
 
@@ -44,22 +45,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("[2/3] training lstm_b{batch} with {workers} async Downpour \
               workers for {epochs} epochs");
     let session = mpi_learn::runtime::Session::open_default()?;
-    let cfg = TrainConfig {
-        builder: ModelBuilder::new("lstm", batch),
-        algo: Algo {
-            batch_size: batch,
-            epochs,
-            validate_every: 25,
-            max_val_batches: 10,
-            ..Algo::default()
-        },
-        n_workers: workers,
-        seed: 2017,
-        transport: Transport::Inproc,
-        hierarchy: None,
-    };
-    let data = Data::Files { train: train_files, val: val_file };
-    let result = train(&session, &cfg, &data)?;
+    let mut exp = Experiment::new("lstm")
+        .batch(batch)
+        .workers(workers)
+        .epochs(epochs)
+        .validate_every(25)
+        .max_val_batches(10)
+        .data(Data::Files { train: train_files, val: val_file })
+        .checkpoint(out_dir.join("ckpt"))
+        .jsonl_log(out_dir.join("metrics.jsonl"));
+    if patience > 0 {
+        exp = exp.early_stopping(patience as u32);
+    }
+    let result = exp.run(&session)?;
     let h = &result.history;
 
     println!("[3/3] writing curves to {}", out_dir.display());
@@ -87,6 +85,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
              h.throughput_samples_per_s());
     println!("  final validation acc {:.4}",
              h.final_val_acc().unwrap_or(f32::NAN));
+    println!("  best val loss        {:.4} (checkpointed to {})",
+             h.best_val_loss().unwrap_or(f32::NAN),
+             out_dir.join("ckpt/best.mplw").display());
     for w in &h.workers {
         println!(
             "  worker {:>2}: {} batches, grad {:.2}s, comm-wait {:.2}s",

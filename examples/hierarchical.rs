@@ -1,11 +1,12 @@
 //! Hierarchical masters (§III-A): several group masters, each serving a
 //! worker pool and reporting to a super-master. Compares flat 1-master
-//! topology vs 2 and 4 groups on identical data.
+//! topology vs 2 and 4 groups on identical data — one `Experiment`
+//! chain per topology (`.hierarchy(groups, workers_per_group,
+//! sync_every)` is the only difference).
 //!
 //!     cargo run --release --example hierarchical
 
-use mpi_learn::coordinator::{train, Algo, Data, HierarchySpec,
-                             ModelBuilder, TrainConfig, Transport};
+use mpi_learn::coordinator::{Data, Experiment};
 use mpi_learn::data::GeneratorConfig;
 use mpi_learn::util::bench::print_table;
 use mpi_learn::util::cli::Args;
@@ -22,35 +23,27 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         samples_per_worker: 1000,
         val_samples: 1000,
     };
-    let algo = Algo {
-        batch_size: 100,
-        epochs,
-        max_val_batches: 10,
-        ..Algo::default()
-    };
 
-    // all topologies train 4 workers on the same divided dataset
-    let topologies: Vec<(String, Option<HierarchySpec>)> = vec![
+    // all topologies train 4 workers on the same divided dataset:
+    // (name, Some((groups, workers_per_group, sync_every)))
+    let topologies: Vec<(String, Option<(usize, usize, u64)>)> = vec![
         ("flat: 1 master x 4 workers".into(), None),
-        ("2 groups x 2 workers, sync_every=5".into(),
-         Some(HierarchySpec { n_groups: 2, workers_per_group: 2,
-                              sync_every: 5 })),
-        ("4 groups x 1 worker, sync_every=5".into(),
-         Some(HierarchySpec { n_groups: 4, workers_per_group: 1,
-                              sync_every: 5 })),
+        ("2 groups x 2 workers, sync_every=5".into(), Some((2, 2, 5))),
+        ("4 groups x 1 worker, sync_every=5".into(), Some((4, 1, 5))),
     ];
 
     let mut rows = Vec::new();
     for (name, hierarchy) in topologies {
-        let cfg = TrainConfig {
-            builder: ModelBuilder::new("lstm", algo.batch_size),
-            algo: algo.clone(),
-            n_workers: 4,
-            seed: 2017,
-            transport: Transport::Inproc,
-            hierarchy,
-        };
-        let r = train(&session, &cfg, &data)?;
+        let mut exp = Experiment::new("lstm")
+            .batch(100)
+            .workers(4)
+            .epochs(epochs)
+            .max_val_batches(10)
+            .data(data.clone());
+        if let Some((groups, wpg, sync_every)) = hierarchy {
+            exp = exp.hierarchy(groups, wpg, sync_every);
+        }
+        let r = exp.run(&session)?;
         let v = r.history.validations.last().cloned().unwrap();
         rows.push(vec![
             name,

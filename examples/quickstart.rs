@@ -1,6 +1,6 @@
-//! Quickstart: the paper's three-class user API in ~30 lines of client
-//! code — pick a model (`ModelBuilder`), a training procedure (`Algo`),
-//! and a data source (`Data`), then `train`.
+//! Quickstart: the framework's one-call user API — pick a model, chain
+//! the training procedure and the usual Keras-style conveniences onto
+//! an [`Experiment`], and `run`.
 //!
 //!     cargo run --release --example quickstart
 //!     cargo run --release --example quickstart -- --model transformer \
@@ -8,10 +8,10 @@
 //!     cargo run --release --example quickstart -- --direct   # no framework
 //!     cargo run --release --example quickstart -- --allreduce \
 //!         --workers 4                       # masterless ring all-reduce
+//!     cargo run --release --example quickstart -- --early-stopping 3 \
+//!         --checkpoint runs/quickstart      # callbacks
 
-use mpi_learn::coordinator::{train, train_direct, Algo, Data, Mode,
-                             ModelBuilder, TrainConfig, Transport};
-use mpi_learn::data::GeneratorConfig;
+use mpi_learn::coordinator::Experiment;
 use mpi_learn::util::cli::Args;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -22,53 +22,41 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let epochs = args.usize("epochs", 3)? as u32;
     let direct = args.bool("direct");
     let allreduce = args.bool("allreduce");
+    let patience = args.usize("early-stopping", 0)?;
+    let checkpoint = args.str_opt("checkpoint");
     args.finish()?;
 
-    // 1. the model: an artifact variant (AOT-compiled, or the built-in
-    //    native backend when no artifacts are present)
-    let builder = ModelBuilder::new(&model, batch);
-
-    // 2. the training procedure: async Downpour with momentum SGD, or
-    //    the masterless synchronous ring all-reduce
-    let algo = Algo {
-        mode: if allreduce { Mode::AllReduce }
-              else { Algo::default().mode },
-        batch_size: batch,
-        epochs,
-        validate_every: 20,
-        max_val_batches: 5,
-        ..Algo::default()
-    };
-
-    // 3. the data: synthetic HEP-like benchmark task
-    let data = Data::Synthetic {
-        gen: GeneratorConfig::default(),
-        samples_per_worker: 2000,
-        val_samples: 1000,
-    };
-
+    // 1. a session: AOT artifacts if present, else the built-in
+    //    zero-setup native CPU backend
     let session = mpi_learn::runtime::Session::open_default()?;
-    let cfg = TrainConfig {
-        builder,
-        algo,
-        n_workers: workers,
-        seed: 2017,
-        transport: Transport::Inproc,
-        hierarchy: None,
-    };
 
-    let result = if direct {
+    // 2. the experiment: model + data + training procedure + callbacks
+    //    in one chain (synthetic HEP-like benchmark data by default)
+    let mut exp = Experiment::new(&model)
+        .batch(batch)
+        .workers(workers)
+        .epochs(epochs)
+        .validate_every(20)
+        .max_val_batches(5);
+    if allreduce {
+        println!("running masterless ring all-reduce with {workers} \
+                  ranks...");
+        exp = exp.allreduce();
+    } else if direct {
         println!("running the no-framework baseline (\"Keras alone\")...");
-        train_direct(&session, &cfg, &data)?
+        exp = exp.direct();
     } else {
-        if allreduce {
-            println!("running masterless ring all-reduce with {workers} \
-                      ranks...");
-        } else {
-            println!("running async Downpour with {workers} workers...");
-        }
-        train(&session, &cfg, &data)?
-    };
+        println!("running async Downpour with {workers} workers...");
+    }
+    if patience > 0 {
+        exp = exp.early_stopping(patience as u32);
+    }
+    if let Some(dir) = checkpoint {
+        exp = exp.checkpoint(dir);
+    }
+
+    // 3. run
+    let result = exp.run(&session)?;
 
     let h = &result.history;
     println!("\n{:>8} {:>10} {:>10}", "update", "val_loss", "val_acc");

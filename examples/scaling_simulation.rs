@@ -2,7 +2,8 @@
 //! user tool. Measures this host's real per-batch gradient cost and
 //! master update cost, then projects speedup curves for arbitrary worker
 //! counts, batch sizes, and validation cadences on the paper's two
-//! testbed presets.
+//! testbed presets. (This one projects instead of training — for real
+//! runs use the `Experiment` facade, see `examples/quickstart.rs`.)
 //!
 //!     cargo run --release --example scaling_simulation
 //!     cargo run --release --example scaling_simulation -- \

@@ -71,6 +71,7 @@ fn main() {
                 seed: seed as u64,
                 transport: Transport::Inproc,
                 hierarchy: None,
+                callbacks: Vec::new(),
             };
             let r = train(&session, &cfg, &data).unwrap();
             let acc = r.history.final_val_acc().unwrap();
@@ -123,6 +124,7 @@ fn main() {
         seed: 1,
         transport: Transport::Inproc,
         hierarchy: None,
+        callbacks: Vec::new(),
     };
     cfg.algo.validate_every = 0;
     let r = train(&session, &cfg, &data).unwrap();

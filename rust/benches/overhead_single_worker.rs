@@ -48,6 +48,7 @@ fn main() {
         seed: 3,
         transport: Transport::Inproc,
         hierarchy: None,
+        callbacks: Vec::new(),
     };
 
     let mut t_direct = Vec::new();

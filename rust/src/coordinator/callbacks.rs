@@ -1,0 +1,835 @@
+//! Keras-style training callbacks (HyPar-Flow's adoption argument: the
+//! usual conveniences — checkpointing, early stopping, LR schedules,
+//! metric streaming — attach to a one-call training API).
+//!
+//! Two layers:
+//!
+//! - [`Callback`] — the observer trait (`on_train_begin` / `on_round` /
+//!   `on_validation` / `on_train_end`) with a [`Control`] surface for
+//!   stop requests and LR rescaling. Implement it for custom behavior
+//!   and attach via `Experiment::callback` or
+//!   `driver::train_with_callbacks`.
+//! - [`CallbackSpec`] — the declarative, cloneable description that
+//!   lives in `TrainConfig`, the JSON config (`"callbacks": [...]`),
+//!   and CLI flags. Specs `build()` into boxed callbacks at launch.
+//!
+//! Callbacks run on the *observer* rank only (the master, or ring rank
+//! 0 — see `WorldPlan::observer`). A stop request propagates through
+//! the existing Exit protocol: the master answers subsequent traffic
+//! with `Tag::Exit` (workers wind down and report), and the ring
+//! piggybacks a stop flag on the next collective so every rank breaks
+//! in lockstep with bitwise-identical weights.
+//!
+//! [`Observer`] bundles eval data + validation schedule + callbacks for
+//! the observing role — replacing the `Option<(&ModelExecutables,
+//! &DataSet)>` threading that every role constructor used to carry.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use crate::coordinator::algo::Algo;
+use crate::coordinator::validation::{run_validation, ValidationSchedule};
+use crate::data::DataSet;
+use crate::metrics::{History, ValRecord};
+use crate::runtime::ModelExecutables;
+use crate::tensor::ParamSet;
+use crate::util::json::Json;
+
+/// Mutable control surface a callback writes its requests into.
+#[derive(Debug, Default)]
+pub struct Control {
+    stop: bool,
+    lr_scale: Option<f32>,
+}
+
+impl Control {
+    /// Request a clean end of training (propagated via Exit / the ring
+    /// stop flag).
+    pub fn stop(&mut self) {
+        self.stop = true;
+    }
+
+    /// Rescale the base learning rate from the next update on.
+    pub fn set_lr_scale(&mut self, scale: f32) {
+        self.lr_scale = Some(scale);
+    }
+}
+
+/// What a callback sees after each master/replicated update.
+pub struct RoundInfo<'a> {
+    /// Master update count (1-based; the update just applied).
+    pub update: u64,
+    /// Training loss of the gradient(s) behind this update (NaN when
+    /// the mode has no per-update loss, e.g. EASGD exchanges).
+    pub train_loss: f32,
+    pub weights: &'a ParamSet,
+    /// Seconds since training start.
+    pub t_s: f64,
+}
+
+/// What a callback sees after each validation sweep.
+pub struct ValInfo<'a> {
+    pub update: u64,
+    pub val_loss: f32,
+    pub val_acc: f32,
+    pub weights: &'a ParamSet,
+    pub t_s: f64,
+}
+
+/// Training observer, Keras-callback shaped. All methods default to
+/// no-ops so implementations override only what they need.
+pub trait Callback: Send {
+    fn on_train_begin(&mut self, _n_params: usize) {}
+    fn on_round(&mut self, _info: &RoundInfo<'_>, _ctl: &mut Control) {}
+    fn on_validation(&mut self, _info: &ValInfo<'_>,
+                     _ctl: &mut Control) {}
+    fn on_train_end(&mut self, _history: &History) {}
+}
+
+/// Declarative LR schedule (pure function of the update count, so the
+/// all-reduce mode can replicate it bitwise on every rank).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrScheduleSpec {
+    /// Multiply the base LR by `gamma` every `every` updates.
+    Step { gamma: f32, every: u64 },
+    /// Multiply the base LR by `gamma` per update (gamma^(u-1)).
+    Exponential { gamma: f32 },
+}
+
+impl LrScheduleSpec {
+    /// Scale to apply to the optimizer for (1-based) update `u`.
+    pub fn scale_for_update(&self, u: u64) -> f32 {
+        match *self {
+            LrScheduleSpec::Step { gamma, every } => {
+                if every == 0 {
+                    1.0
+                } else {
+                    gamma.powi((u / every).min(i32::MAX as u64) as i32)
+                }
+            }
+            LrScheduleSpec::Exponential { gamma } => {
+                gamma.powf(u.saturating_sub(1) as f32)
+            }
+        }
+    }
+}
+
+/// Cloneable callback description — what `TrainConfig`, the JSON config
+/// schema, and CLI flags store. See module docs for the JSON shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CallbackSpec {
+    /// Stop when val loss hasn't improved by > `min_delta` for
+    /// `patience` consecutive validations.
+    EarlyStopping { patience: u32, min_delta: f32 },
+    /// Write LE `ParamSet` checkpoints: `best.mplw` on every val-loss
+    /// improvement, plus (unless `best_only`) `checkpoint-{u}.mplw`
+    /// every `every` updates.
+    ModelCheckpoint { dir: PathBuf, every: u64, best_only: bool },
+    LrSchedule(LrScheduleSpec),
+    /// Stream one JSON object per round/validation to a `.jsonl` file.
+    JsonlLogger { path: PathBuf },
+}
+
+impl CallbackSpec {
+    pub fn build(&self) -> Box<dyn Callback> {
+        match self {
+            CallbackSpec::EarlyStopping { patience, min_delta } => {
+                Box::new(EarlyStopping::new(*patience, *min_delta))
+            }
+            CallbackSpec::ModelCheckpoint { dir, every, best_only } => {
+                Box::new(ModelCheckpoint::new(dir.clone(), *every,
+                                              *best_only))
+            }
+            CallbackSpec::LrSchedule(spec) => {
+                Box::new(LrSchedule { spec: *spec })
+            }
+            CallbackSpec::JsonlLogger { path } => {
+                Box::new(JsonlLogger::new(path.clone()))
+            }
+        }
+    }
+
+    /// Parse one spec from a config object:
+    /// `{"kind": "early_stopping", "patience": 3, "min_delta": 0.0}`,
+    /// `{"kind": "checkpoint", "dir": "...", "every": 100,
+    ///   "best_only": true}`,
+    /// `{"kind": "lr_schedule", "schedule": "step"|"exponential",
+    ///   "gamma": 0.5, "every": 200}`,
+    /// `{"kind": "jsonl", "path": "metrics.jsonl"}`.
+    pub fn from_json(j: &Json) -> Result<CallbackSpec, String> {
+        let kind = j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or("callback needs a 'kind'")?;
+        // A present-but-mistyped value is a config bug the user must
+        // hear about, not a silent fallback to the default.
+        let f32_of = |key: &str, dflt: f32| -> Result<f32, String> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => {
+                    v.as_f64().map(|v| v as f32).ok_or_else(|| format!(
+                        "callback '{kind}': '{key}' must be a number"))
+                }
+            }
+        };
+        let u64_of = |key: &str, dflt: u64| -> Result<u64, String> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => {
+                    v.as_usize().map(|v| v as u64).ok_or_else(|| {
+                        format!("callback '{kind}': '{key}' must be a \
+                                 non-negative integer")
+                    })
+                }
+            }
+        };
+        let bool_of = |key: &str, dflt: bool| -> Result<bool, String> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => v.as_bool().ok_or_else(|| format!(
+                    "callback '{kind}': '{key}' must be a boolean")),
+            }
+        };
+        Ok(match kind {
+            "early_stopping" => CallbackSpec::EarlyStopping {
+                patience: u64_of("patience", 3)? as u32,
+                min_delta: f32_of("min_delta", 0.0)?,
+            },
+            "checkpoint" => CallbackSpec::ModelCheckpoint {
+                dir: PathBuf::from(
+                    j.get("dir").and_then(|v| v.as_str())
+                        .ok_or("checkpoint callback needs 'dir'")?),
+                every: u64_of("every", 0)?,
+                best_only: bool_of("best_only", true)?,
+            },
+            "lr_schedule" => {
+                let gamma = f32_of("gamma", 0.5)?;
+                match j.get("schedule").and_then(|v| v.as_str())
+                    .unwrap_or("step") {
+                    "step" => CallbackSpec::LrSchedule(
+                        LrScheduleSpec::Step {
+                            gamma,
+                            every: u64_of("every", 100)?,
+                        }),
+                    "exponential" => CallbackSpec::LrSchedule(
+                        LrScheduleSpec::Exponential { gamma }),
+                    other => {
+                        return Err(format!(
+                            "unknown lr schedule '{other}' \
+                             (step|exponential)"))
+                    }
+                }
+            }
+            "jsonl" => CallbackSpec::JsonlLogger {
+                path: PathBuf::from(
+                    j.get("path").and_then(|v| v.as_str())
+                        .ok_or("jsonl callback needs 'path'")?),
+            },
+            other => {
+                return Err(format!("unknown callback kind '{other}'"))
+            }
+        })
+    }
+
+    /// Parse the config's `"callbacks"` array.
+    pub fn parse_list(j: &Json) -> Result<Vec<CallbackSpec>, String> {
+        match j {
+            Json::Arr(items) => items.iter().map(Self::from_json)
+                .collect(),
+            _ => Err("'callbacks' must be an array".into()),
+        }
+    }
+}
+
+/// The LR schedule every rank must agree on: an explicit
+/// `CallbackSpec::LrSchedule` wins; otherwise the legacy
+/// `Algo::lr_decay`/`lr_decay_every` fields translate to a step
+/// schedule. Pure in the update count, so the all-reduce mode applies
+/// it identically on every rank without any callback traffic.
+pub fn effective_lr_schedule(algo: &Algo, specs: &[CallbackSpec])
+    -> Option<LrScheduleSpec> {
+    for spec in specs {
+        if let CallbackSpec::LrSchedule(s) = spec {
+            return Some(*s);
+        }
+    }
+    if algo.lr_decay > 0.0 && algo.lr_decay_every > 0 {
+        return Some(LrScheduleSpec::Step {
+            gamma: algo.lr_decay,
+            every: algo.lr_decay_every,
+        });
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// built-ins
+// ---------------------------------------------------------------------
+
+/// Stop training when validation loss stops improving.
+pub struct EarlyStopping {
+    patience: u32,
+    min_delta: f32,
+    best: f32,
+    bad: u32,
+}
+
+impl EarlyStopping {
+    pub fn new(patience: u32, min_delta: f32) -> Self {
+        Self { patience, min_delta, best: f32::INFINITY, bad: 0 }
+    }
+}
+
+impl Callback for EarlyStopping {
+    fn on_train_begin(&mut self, _n_params: usize) {
+        self.best = f32::INFINITY;
+        self.bad = 0;
+    }
+
+    fn on_validation(&mut self, info: &ValInfo<'_>, ctl: &mut Control) {
+        // NaN never counts as an improvement
+        if info.val_loss < self.best - self.min_delta {
+            self.best = info.val_loss;
+            self.bad = 0;
+        } else {
+            self.bad += 1;
+            if self.bad >= self.patience {
+                log::info!(
+                    "early stopping: no val-loss improvement in {} \
+                     validation(s) (best {:.4}) — stopping at update {}",
+                    self.bad, self.best, info.update);
+                ctl.stop();
+            }
+        }
+    }
+}
+
+/// Write `ParamSet` checkpoints (the LE `save` format, reloadable with
+/// `ParamSet::load`). `best.mplw` tracks the best validation loss;
+/// periodic `checkpoint-{update}.mplw` files are written unless
+/// `best_only`.
+pub struct ModelCheckpoint {
+    dir: PathBuf,
+    every: u64,
+    best_only: bool,
+    best: f32,
+}
+
+impl ModelCheckpoint {
+    pub fn new(dir: PathBuf, every: u64, best_only: bool) -> Self {
+        Self { dir, every, best_only, best: f32::INFINITY }
+    }
+
+    fn save(&self, name: &str, weights: &ParamSet) {
+        let path = self.dir.join(name);
+        if let Err(e) = weights.save(&path) {
+            log::error!("checkpoint write {} failed: {e}",
+                        path.display());
+        }
+    }
+}
+
+impl Callback for ModelCheckpoint {
+    fn on_train_begin(&mut self, _n_params: usize) {
+        self.best = f32::INFINITY;
+        if let Err(e) = std::fs::create_dir_all(&self.dir) {
+            log::error!("checkpoint dir {} failed: {e}",
+                        self.dir.display());
+        }
+    }
+
+    fn on_round(&mut self, info: &RoundInfo<'_>, _ctl: &mut Control) {
+        if !self.best_only && self.every > 0
+            && info.update % self.every == 0 {
+            self.save(&format!("checkpoint-{}.mplw", info.update),
+                      info.weights);
+        }
+    }
+
+    fn on_validation(&mut self, info: &ValInfo<'_>, _ctl: &mut Control) {
+        if info.val_loss < self.best {
+            self.best = info.val_loss;
+            self.save("best.mplw", info.weights);
+        }
+    }
+}
+
+/// Declarative LR decay on the master/replicated optimizer.
+pub struct LrSchedule {
+    spec: LrScheduleSpec,
+}
+
+impl Callback for LrSchedule {
+    fn on_round(&mut self, info: &RoundInfo<'_>, ctl: &mut Control) {
+        // sets the scale for the NEXT update (info.update + 1)
+        ctl.set_lr_scale(self.spec.scale_for_update(info.update + 1));
+    }
+}
+
+/// Stream metrics as JSON lines (one object per round / validation).
+pub struct JsonlLogger {
+    path: PathBuf,
+    out: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl JsonlLogger {
+    pub fn new(path: PathBuf) -> Self {
+        Self { path, out: None }
+    }
+
+    fn write_line(&mut self, line: String) {
+        if let Some(out) = self.out.as_mut() {
+            if let Err(e) = writeln!(out, "{line}") {
+                log::error!("jsonl write failed: {e}");
+                self.out = None;
+            }
+        }
+    }
+}
+
+/// JSON number or `null` for non-finite values (NaN is not JSON).
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+impl Callback for JsonlLogger {
+    fn on_train_begin(&mut self, n_params: usize) {
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+        }
+        match std::fs::File::create(&self.path) {
+            Ok(f) => {
+                self.out = Some(std::io::BufWriter::new(f));
+                self.write_line(format!(
+                    "{{\"event\":\"begin\",\"n_params\":{n_params}}}"));
+            }
+            Err(e) => log::error!("jsonl open {} failed: {e}",
+                                  self.path.display()),
+        }
+    }
+
+    fn on_round(&mut self, info: &RoundInfo<'_>, _ctl: &mut Control) {
+        self.write_line(format!(
+            "{{\"event\":\"round\",\"update\":{},\"train_loss\":{},\
+             \"t_s\":{}}}",
+            info.update, jnum(info.train_loss as f64), jnum(info.t_s)));
+    }
+
+    fn on_validation(&mut self, info: &ValInfo<'_>, _ctl: &mut Control) {
+        self.write_line(format!(
+            "{{\"event\":\"validation\",\"update\":{},\"val_loss\":{},\
+             \"val_acc\":{},\"t_s\":{}}}",
+            info.update, jnum(info.val_loss as f64),
+            jnum(info.val_acc as f64), jnum(info.t_s)));
+        if let Some(out) = self.out.as_mut() {
+            let _ = out.flush();
+        }
+    }
+
+    fn on_train_end(&mut self, history: &History) {
+        self.write_line(format!(
+            "{{\"event\":\"end\",\"master_updates\":{},\
+             \"wallclock_s\":{},\"best_val_loss\":{}}}",
+            history.master_updates, jnum(history.wallclock_s),
+            jnum(history.best_val_loss().unwrap_or(f32::NAN) as f64)));
+        if let Some(out) = self.out.as_mut() {
+            let _ = out.flush();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the host side
+// ---------------------------------------------------------------------
+
+/// An ordered set of callbacks plus the merged control state.
+#[derive(Default)]
+pub struct CallbackSet {
+    cbs: Vec<Box<dyn Callback>>,
+    stopped: bool,
+    lr_scale: Option<f32>,
+}
+
+impl CallbackSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build the launch-time set: every spec, plus the legacy
+    /// `Algo::lr_decay` fields as a step schedule when no explicit
+    /// schedule spec is present.
+    pub fn from_config(algo: &Algo, specs: &[CallbackSpec]) -> Self {
+        let mut set = CallbackSet::new();
+        let mut have_lr = false;
+        for spec in specs {
+            if matches!(spec, CallbackSpec::LrSchedule(_)) {
+                have_lr = true;
+            }
+            set.push(spec.build());
+        }
+        if !have_lr {
+            if let Some(lr) = effective_lr_schedule(algo, &[]) {
+                set.push(Box::new(LrSchedule { spec: lr }));
+            }
+        }
+        set
+    }
+
+    pub fn push(&mut self, cb: Box<dyn Callback>) {
+        self.cbs.push(cb);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cbs.is_empty()
+    }
+
+    pub fn on_train_begin(&mut self, n_params: usize) {
+        for cb in &mut self.cbs {
+            cb.on_train_begin(n_params);
+        }
+    }
+
+    pub fn on_round(&mut self, info: &RoundInfo<'_>) {
+        let mut ctl = Control::default();
+        for cb in &mut self.cbs {
+            cb.on_round(info, &mut ctl);
+        }
+        self.merge(ctl);
+    }
+
+    pub fn on_validation(&mut self, info: &ValInfo<'_>) {
+        let mut ctl = Control::default();
+        for cb in &mut self.cbs {
+            cb.on_validation(info, &mut ctl);
+        }
+        self.merge(ctl);
+    }
+
+    pub fn on_train_end(&mut self, history: &History) {
+        for cb in &mut self.cbs {
+            cb.on_train_end(history);
+        }
+    }
+
+    fn merge(&mut self, ctl: Control) {
+        self.stopped |= ctl.stop;
+        if ctl.lr_scale.is_some() {
+            self.lr_scale = ctl.lr_scale;
+        }
+    }
+
+    pub fn should_stop(&self) -> bool {
+        self.stopped
+    }
+
+    /// The latest requested LR scale, if it changed since last taken.
+    pub fn take_lr_scale(&mut self) -> Option<f32> {
+        self.lr_scale.take()
+    }
+}
+
+/// Everything the *observer* role (master / ring rank 0 /
+/// `train_direct`) needs beyond its training loop: held-out eval data,
+/// the validation schedule, and the callback set. Replaces the old
+/// `eval: Option<(&ModelExecutables, &DataSet)>` constructor threading.
+pub struct Observer<'a> {
+    eval: Option<(&'a ModelExecutables, &'a DataSet)>,
+    schedule: ValidationSchedule,
+    max_val_batches: usize,
+    callbacks: CallbackSet,
+}
+
+impl<'a> Observer<'a> {
+    pub fn new(algo: &Algo,
+               eval: Option<(&'a ModelExecutables, &'a DataSet)>,
+               callbacks: CallbackSet) -> Self {
+        Self {
+            eval,
+            schedule: ValidationSchedule::new(algo.validate_every),
+            max_val_batches: algo.max_val_batches,
+            callbacks,
+        }
+    }
+
+    /// A no-op observer for non-observing ranks and unit tests.
+    pub fn disabled() -> Observer<'static> {
+        Observer {
+            eval: None,
+            schedule: ValidationSchedule::new(0),
+            max_val_batches: 0,
+            callbacks: CallbackSet::new(),
+        }
+    }
+
+    pub fn begin(&mut self, n_params: usize) {
+        self.callbacks.on_train_begin(n_params);
+    }
+
+    /// Hook called after master/replicated update number `update`:
+    /// samples the train-loss curve, fires `on_round`, and runs any due
+    /// validation (recording it and firing `on_validation`).
+    pub fn after_update(&mut self, update: u64, train_loss: f32,
+                        weights: &ParamSet, t_s: f64,
+                        history: &mut History) {
+        if train_loss.is_finite() && (update % 16 == 0 || update == 1) {
+            history.train_losses.push((update, train_loss));
+        }
+        self.callbacks.on_round(&RoundInfo {
+            update,
+            train_loss,
+            weights,
+            t_s,
+        });
+        if self.schedule.due(update) {
+            self.validate(update, weights, t_s, history);
+        }
+    }
+
+    fn validate(&mut self, update: u64, weights: &ParamSet, t_s: f64,
+                history: &mut History) {
+        let Some((exes, val)) = self.eval else { return };
+        match run_validation(exes, weights, val, self.max_val_batches) {
+            Ok((loss, acc)) => {
+                log::info!(
+                    "validation @ update {update}: loss={loss:.4} \
+                     acc={acc:.4}");
+                history.validations.push(ValRecord {
+                    t_s,
+                    update,
+                    val_loss: loss,
+                    val_acc: acc,
+                });
+                self.callbacks.on_validation(&ValInfo {
+                    update,
+                    val_loss: loss,
+                    val_acc: acc,
+                    weights,
+                    t_s,
+                });
+            }
+            Err(e) => log::error!("validation failed: {e}"),
+        }
+    }
+
+    /// Wind-down: force a final validation (so every run ends with a
+    /// measurement) and fire `on_train_end` with the finished history.
+    pub fn finish(&mut self, update: u64, weights: &ParamSet, t_s: f64,
+                  history: &mut History) {
+        self.validate(update, weights, t_s, history);
+        self.callbacks.on_train_end(history);
+    }
+
+    pub fn should_stop(&self) -> bool {
+        self.callbacks.should_stop()
+    }
+
+    pub fn take_lr_scale(&mut self) -> Option<f32> {
+        self.callbacks.take_lr_scale()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn val_info(update: u64, loss: f32, w: &ParamSet) -> ValInfo<'_> {
+        ValInfo { update, val_loss: loss, val_acc: 0.5, weights: w,
+                  t_s: 0.0 }
+    }
+
+    #[test]
+    fn early_stopping_counts_patience() {
+        let w = ParamSet::zeros(&[("w".into(), vec![2])]);
+        let mut es = EarlyStopping::new(2, 0.0);
+        es.on_train_begin(2);
+        let mut ctl = Control::default();
+        es.on_validation(&val_info(5, 1.0, &w), &mut ctl); // improves
+        es.on_validation(&val_info(10, 1.0, &w), &mut ctl); // bad 1
+        assert!(!ctl.stop);
+        es.on_validation(&val_info(15, 1.2, &w), &mut ctl); // bad 2
+        assert!(ctl.stop, "patience 2 exhausted");
+        // an improvement resets the counter
+        let mut es = EarlyStopping::new(2, 0.0);
+        let mut ctl = Control::default();
+        es.on_validation(&val_info(5, 1.0, &w), &mut ctl);
+        es.on_validation(&val_info(10, 1.1, &w), &mut ctl); // bad 1
+        es.on_validation(&val_info(15, 0.5, &w), &mut ctl); // improves
+        es.on_validation(&val_info(20, 0.6, &w), &mut ctl); // bad 1
+        assert!(!ctl.stop);
+    }
+
+    #[test]
+    fn early_stopping_min_delta_and_nan() {
+        let w = ParamSet::zeros(&[("w".into(), vec![2])]);
+        let mut es = EarlyStopping::new(1, 0.5);
+        let mut ctl = Control::default();
+        es.on_validation(&val_info(1, 2.0, &w), &mut ctl);
+        // 1.8 is better but not by > 0.5 -> no improvement
+        es.on_validation(&val_info(2, 1.8, &w), &mut ctl);
+        assert!(ctl.stop);
+        let mut es = EarlyStopping::new(1, 0.0);
+        let mut ctl = Control::default();
+        es.on_validation(&val_info(1, f32::NAN, &w), &mut ctl);
+        assert!(ctl.stop, "NaN is never an improvement");
+    }
+
+    #[test]
+    fn model_checkpoint_writes_loadable_best() {
+        let dir = std::env::temp_dir().join("mpi_learn_cb_ckpt_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut ps = ParamSet::zeros(&[("w".into(), vec![3])]);
+        let mut cb = ModelCheckpoint::new(dir.clone(), 0, true);
+        cb.on_train_begin(3);
+        let mut ctl = Control::default();
+        ps.flat_mut()[0] = 1.5;
+        cb.on_validation(&val_info(10, 0.9, &ps), &mut ctl);
+        let best = ParamSet::load(&dir.join("best.mplw")).unwrap();
+        assert_eq!(best, ps);
+        // a worse validation must NOT overwrite best
+        ps.flat_mut()[0] = -7.0;
+        cb.on_validation(&val_info(20, 1.4, &ps), &mut ctl);
+        let best = ParamSet::load(&dir.join("best.mplw")).unwrap();
+        assert_eq!(best.flat()[0], 1.5);
+    }
+
+    #[test]
+    fn model_checkpoint_periodic_files() {
+        let dir = std::env::temp_dir().join("mpi_learn_cb_ckpt_periodic");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ps = ParamSet::zeros(&[("w".into(), vec![3])]);
+        let mut cb = ModelCheckpoint::new(dir.clone(), 2, false);
+        cb.on_train_begin(3);
+        let mut ctl = Control::default();
+        for u in 1..=4u64 {
+            cb.on_round(&RoundInfo { update: u, train_loss: 1.0,
+                                     weights: &ps, t_s: 0.0 },
+                        &mut ctl);
+        }
+        assert!(dir.join("checkpoint-2.mplw").exists());
+        assert!(dir.join("checkpoint-4.mplw").exists());
+        assert!(!dir.join("checkpoint-3.mplw").exists());
+        ParamSet::load(&dir.join("checkpoint-4.mplw")).unwrap();
+    }
+
+    #[test]
+    fn lr_schedule_scales() {
+        let step = LrScheduleSpec::Step { gamma: 0.5, every: 2 };
+        // matches the legacy StepDecay: scale gamma^(u/every) at update u
+        assert_eq!(step.scale_for_update(1), 1.0);
+        assert_eq!(step.scale_for_update(2), 0.5);
+        assert_eq!(step.scale_for_update(3), 0.5);
+        assert_eq!(step.scale_for_update(4), 0.25);
+        let exp = LrScheduleSpec::Exponential { gamma: 0.5 };
+        assert_eq!(exp.scale_for_update(1), 1.0);
+        assert_eq!(exp.scale_for_update(3), 0.25);
+    }
+
+    #[test]
+    fn spec_json_parsing() {
+        let j = Json::parse(
+            r#"[{"kind": "early_stopping", "patience": 4},
+                {"kind": "checkpoint", "dir": "/tmp/x", "every": 10,
+                 "best_only": false},
+                {"kind": "lr_schedule", "schedule": "step",
+                 "gamma": 0.9, "every": 50},
+                {"kind": "jsonl", "path": "m.jsonl"}]"#).unwrap();
+        let specs = CallbackSpec::parse_list(&j).unwrap();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0], CallbackSpec::EarlyStopping {
+            patience: 4, min_delta: 0.0 });
+        assert_eq!(specs[1], CallbackSpec::ModelCheckpoint {
+            dir: PathBuf::from("/tmp/x"), every: 10, best_only: false });
+        match specs[2] {
+            CallbackSpec::LrSchedule(LrScheduleSpec::Step {
+                gamma, every }) => {
+                assert!((gamma - 0.9).abs() < 1e-6);
+                assert_eq!(every, 50);
+            }
+            ref s => panic!("{s:?}"),
+        }
+        assert!(CallbackSpec::from_json(
+            &Json::parse(r#"{"kind": "bogus"}"#).unwrap()).is_err());
+        assert!(CallbackSpec::from_json(
+            &Json::parse(r#"{"kind": "checkpoint"}"#).unwrap()).is_err());
+    }
+
+    /// Mistyped values must be rejected, not silently defaulted.
+    #[test]
+    fn spec_json_rejects_wrong_types() {
+        for bad in [
+            r#"{"kind": "early_stopping", "patience": "5"}"#,
+            r#"{"kind": "checkpoint", "dir": "d", "every": "100"}"#,
+            r#"{"kind": "checkpoint", "dir": "d", "best_only": 1}"#,
+            r#"{"kind": "lr_schedule", "gamma": "0.5"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(CallbackSpec::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn effective_lr_schedule_precedence() {
+        let mut algo = Algo::default();
+        assert_eq!(effective_lr_schedule(&algo, &[]), None);
+        algo.lr_decay = 0.5;
+        algo.lr_decay_every = 10;
+        assert_eq!(effective_lr_schedule(&algo, &[]),
+                   Some(LrScheduleSpec::Step { gamma: 0.5, every: 10 }));
+        let explicit = [CallbackSpec::LrSchedule(
+            LrScheduleSpec::Exponential { gamma: 0.99 })];
+        assert_eq!(effective_lr_schedule(&algo, &explicit),
+                   Some(LrScheduleSpec::Exponential { gamma: 0.99 }));
+    }
+
+    #[test]
+    fn jsonl_logger_emits_valid_json_lines() {
+        let path = std::env::temp_dir()
+            .join("mpi_learn_cb_jsonl_unit/metrics.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let ps = ParamSet::zeros(&[("w".into(), vec![2])]);
+        let mut cb = JsonlLogger::new(path.clone());
+        cb.on_train_begin(2);
+        let mut ctl = Control::default();
+        cb.on_round(&RoundInfo { update: 1, train_loss: 0.5,
+                                 weights: &ps, t_s: 0.1 }, &mut ctl);
+        cb.on_round(&RoundInfo { update: 2, train_loss: f32::NAN,
+                                 weights: &ps, t_s: 0.2 }, &mut ctl);
+        cb.on_validation(&val_info(2, 0.4, &ps), &mut ctl);
+        cb.on_train_end(&History::default());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        for line in &lines {
+            Json::parse(line).unwrap_or_else(
+                |e| panic!("invalid json line {line}: {e}"));
+        }
+        assert!(lines[2].contains("\"train_loss\":null"));
+    }
+
+    #[test]
+    fn callback_set_merges_control() {
+        struct Stopper;
+        impl Callback for Stopper {
+            fn on_round(&mut self, _i: &RoundInfo<'_>,
+                        ctl: &mut Control) {
+                ctl.stop();
+                ctl.set_lr_scale(0.25);
+            }
+        }
+        let ps = ParamSet::zeros(&[("w".into(), vec![2])]);
+        let mut set = CallbackSet::new();
+        set.push(Box::new(Stopper));
+        assert!(!set.should_stop());
+        set.on_round(&RoundInfo { update: 1, train_loss: 1.0,
+                                  weights: &ps, t_s: 0.0 });
+        assert!(set.should_stop());
+        assert_eq!(set.take_lr_scale(), Some(0.25));
+        assert_eq!(set.take_lr_scale(), None);
+    }
+}

@@ -15,6 +15,14 @@
 //!                 "sync_every": 5},
 //!   "algo": { ... see Algo::from_json; "mode" may be "downpour",
 //!             "easgd", or "allreduce" (masterless ring) ... },
+//!   "callbacks": [              // observer-side training callbacks
+//!     {"kind": "early_stopping", "patience": 3, "min_delta": 0.0},
+//!     {"kind": "checkpoint", "dir": "runs/ckpt", "every": 100,
+//!      "best_only": true},
+//!     {"kind": "lr_schedule", "schedule": "step"|"exponential",
+//!      "gamma": 0.5, "every": 200},
+//!     {"kind": "jsonl", "path": "runs/metrics.jsonl"}
+//!   ],
 //!   "data": {"dir": "data/hep"}                    // file-sharded
 //!         | {"synthetic": {"samples_per_worker": 2000,
 //!                          "val_samples": 1000,
@@ -22,13 +30,21 @@
 //!                          "seed": 2017}}
 //! }
 //! ```
+//!
+//! Contradictory configurations (e.g. `"mode": "allreduce"` together
+//! with `"hierarchy"`) are rejected here, at parse time, with a
+//! `ConfigError::Invalid` — not deep inside `train()` after data
+//! materialization. The checks are `WorldPlan`'s, so programmatic
+//! `TrainConfig` users get the identical validation.
 
 use std::path::{Path, PathBuf};
 
 use crate::coordinator::algo::Algo;
 use crate::coordinator::builder::{Data, ModelBuilder};
+use crate::coordinator::callbacks::CallbackSpec;
 use crate::coordinator::driver::{TrainConfig, Transport};
 use crate::coordinator::hierarchy::HierarchySpec;
+use crate::coordinator::topology::WorldPlan;
 use crate::data::{list_train_files, GeneratorConfig};
 use crate::util::json::Json;
 
@@ -132,6 +148,17 @@ impl JobConfig {
             }
         };
 
+        // reject contradictory topology/mode combinations NOW, with
+        // the same checks the driver's WorldPlan applies
+        WorldPlan::from_parts(&algo.mode, hierarchy, workers, seed)
+            .map_err(invalid)?;
+
+        let callbacks = match j.get("callbacks") {
+            None => Vec::new(),
+            Some(c) => CallbackSpec::parse_list(c)
+                .map_err(|e| invalid(format!("callbacks: {e}")))?,
+        };
+
         let data = match j.get("data") {
             None => Data::Synthetic {
                 gen: GeneratorConfig::default(),
@@ -184,6 +211,7 @@ impl JobConfig {
                 seed,
                 transport,
                 hierarchy,
+                callbacks,
             },
             data,
         })
@@ -211,9 +239,10 @@ mod tests {
             "model": "lstm", "batch": 500, "workers": 6, "seed": 9,
             "transport": {"tcp": {"base_port": 48123}},
             "hierarchy": {"groups": 2, "sync_every": 7},
-            "algo": {"mode": "easgd", "tau": 4, "alpha": 0.25,
-                     "epochs": 3,
+            "algo": {"mode": "downpour", "sync": true, "epochs": 3,
                      "optimizer": {"kind": "adam", "lr": 0.002}},
+            "callbacks": [{"kind": "early_stopping", "patience": 2},
+                          {"kind": "jsonl", "path": "m.jsonl"}],
             "data": {"synthetic": {"samples_per_worker": 500,
                                    "val_samples": 100,
                                    "separation": 0.3}}
@@ -222,14 +251,18 @@ mod tests {
         assert_eq!(job.train.builder.variant_key(), "lstm_b500");
         assert_eq!(job.train.algo.batch_size, 500);
         assert_eq!(job.train.algo.epochs, 3);
-        assert!(matches!(job.train.algo.mode,
-                         Mode::Easgd { tau: 4, .. }));
+        assert_eq!(job.train.algo.mode, Mode::Downpour { sync: true });
         assert_eq!(job.train.transport,
                    Transport::Tcp { base_port: 48123 });
         let h = job.train.hierarchy.unwrap();
         assert_eq!(h.n_groups, 2);
         assert_eq!(h.workers_per_group, 3);
         assert_eq!(h.sync_every, 7);
+        assert_eq!(job.train.callbacks.len(), 2);
+        assert!(matches!(
+            job.train.callbacks[0],
+            crate::coordinator::callbacks::CallbackSpec::EarlyStopping {
+                patience: 2, .. }));
         match job.data {
             Data::Synthetic { gen, samples_per_worker, val_samples } => {
                 assert_eq!(samples_per_worker, 500);
@@ -238,6 +271,56 @@ mod tests {
             }
             d => panic!("{d:?}"),
         }
+    }
+
+    #[test]
+    fn easgd_config() {
+        let job = JobConfig::from_json_text(
+            r#"{"model": "lstm", "workers": 4,
+                "algo": {"mode": "easgd", "tau": 4, "alpha": 0.25}}"#)
+            .unwrap();
+        assert!(matches!(job.train.algo.mode,
+                         Mode::Easgd { tau: 4, .. }));
+    }
+
+    /// Satellite (ISSUE 2): contradictory mode+topology must fail at
+    /// parse time with ConfigError::Invalid, not deep inside train().
+    #[test]
+    fn allreduce_with_hierarchy_rejected_at_parse_time() {
+        let text = r#"{
+            "model": "mlp", "workers": 4,
+            "algo": {"mode": "allreduce"},
+            "hierarchy": {"groups": 2, "workers_per_group": 2}
+        }"#;
+        match JobConfig::from_json_text(text) {
+            Err(super::ConfigError::Invalid(msg)) => {
+                assert!(msg.contains("allreduce"), "{msg}");
+            }
+            Ok(_) => panic!("allreduce + hierarchy must be rejected"),
+            Err(e) => panic!("wrong error kind: {e}"),
+        }
+    }
+
+    #[test]
+    fn easgd_with_hierarchy_rejected_at_parse_time() {
+        // the group-master loop only speaks Downpour; reject early
+        let text = r#"{
+            "model": "mlp",
+            "algo": {"mode": "easgd"},
+            "hierarchy": {"groups": 2, "workers_per_group": 2}
+        }"#;
+        assert!(matches!(JobConfig::from_json_text(text),
+                         Err(super::ConfigError::Invalid(_))));
+    }
+
+    #[test]
+    fn bad_callbacks_rejected() {
+        let text = r#"{"model": "mlp",
+                       "callbacks": [{"kind": "bogus"}]}"#;
+        assert!(JobConfig::from_json_text(text).is_err());
+        let text = r#"{"model": "mlp", "callbacks": {"kind": "jsonl"}}"#;
+        assert!(JobConfig::from_json_text(text).is_err(),
+                "callbacks must be an array");
     }
 
     #[test]

@@ -1,25 +1,31 @@
-//! The launcher: maps ranks to roles, spawns the world, runs training.
+//! The launcher: one role-execution path for every deployment.
 //!
-//! This is `mpi_learn`'s `MPIManager` + `train.py` equivalent: given an
-//! [`Algo`], a [`ModelBuilder`] and a [`Data`] source, it brings up a
-//! master + N workers (optionally a two-level hierarchy), trains, and
-//! returns the merged [`History`].
+//! A [`WorldPlan`](crate::coordinator::topology::WorldPlan) maps the
+//! config to world size + per-rank roles; [`run_role`] executes one
+//! rank's role over a communicator. `train()` spawns a thread per rank
+//! and runs each through `run_role` (the paper's shared-memory
+//! single-node case); the SPMD [`run_rank`] opens one TCP endpoint and
+//! runs the *same* `run_role` (the `mpirun`-style cluster case). New
+//! topologies are a new `RankRole` case, not a new launcher.
 //!
-//! Also provides [`train_direct`] — the "Keras alone" baseline of §V: the
-//! identical compute loop with no distribution framework at all, used to
-//! measure the framework's own overhead.
+//! Also provides [`train_direct`] — the "Keras alone" baseline of §V:
+//! the identical compute loop with no distribution framework at all,
+//! used to measure the framework's own overhead.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::algo::{Algo, Mode};
+use crate::coordinator::algo::Algo;
 use crate::coordinator::builder::{Data, ModelBuilder};
-use crate::coordinator::hierarchy::{GroupMaster, HierarchySpec, Role};
+use crate::coordinator::callbacks::{effective_lr_schedule, Callback,
+                                    CallbackSet, CallbackSpec, Observer};
+use crate::coordinator::hierarchy::{GroupMaster, HierarchySpec};
 use crate::coordinator::master::{Master, MasterContext};
+use crate::coordinator::topology::{RankRole, WorldPlan};
 use crate::coordinator::worker::{RingWorker, Worker};
 use crate::data::DataSet;
 use crate::metrics::History;
-use crate::mpi;
+use crate::mpi::{self, Payload, Tag};
 use crate::runtime::{ModelExecutables, Session};
 use crate::tensor::ParamSet;
 use crate::util::rng::Rng;
@@ -89,6 +95,9 @@ pub struct TrainConfig {
     /// Two-level topology; when set, `n_workers` is ignored in favor of
     /// `hierarchy.n_groups * hierarchy.workers_per_group`.
     pub hierarchy: Option<HierarchySpec>,
+    /// Declarative training callbacks, observed on the master / ring
+    /// rank 0 (checkpointing, early stopping, LR schedule, logging).
+    pub callbacks: Vec<CallbackSpec>,
 }
 
 impl TrainConfig {
@@ -100,13 +109,7 @@ impl TrainConfig {
             seed: 2017,
             transport: Transport::Inproc,
             hierarchy: None,
-        }
-    }
-
-    fn total_workers(&self) -> usize {
-        match &self.hierarchy {
-            Some(h) => h.n_groups * h.workers_per_group,
-            None => self.n_workers,
+            callbacks: Vec::new(),
         }
     }
 }
@@ -118,40 +121,165 @@ pub struct TrainResult {
     pub wallclock_s: f64,
 }
 
-/// Run a full distributed training session.
-pub fn train(session: &Session, cfg: &TrainConfig, data: &Data)
-    -> Result<TrainResult, TrainError> {
-    crate::util::logging::init();
-    let exes = session.executables(&cfg.builder.variant_key())?;
-    let n_workers = cfg.total_workers();
-    assert!(n_workers >= 1, "need at least one worker");
+/// What an observer role hands back to the launcher.
+type RoleOutcome = Option<(History, ParamSet)>;
 
-    // materialize data up front (outside the timed region, like the
-    // paper's setup phase)
-    let mut worker_data = Vec::with_capacity(n_workers);
-    for w in 0..n_workers {
-        worker_data.push(data.worker_dataset(w, n_workers)?);
-    }
-    let val = data.validation_dataset()?;
-
-    let mut rng = Rng::new(cfg.seed);
-    let init = ParamSet::glorot_init(&exes.meta.params, &mut rng);
-
-    if matches!(cfg.algo.mode, Mode::AllReduce) {
-        if cfg.hierarchy.is_some() {
-            return Err(TrainError::Config(
-                "allreduce mode is flat by construction; drop the \
-                 hierarchy spec"
-                    .into(),
-            ));
+/// Cheap pre-launch sanity check so configuration errors surface
+/// before a world is spawned (a missing shard file discovered inside a
+/// lockstep collective would hang the ring instead of erroring).
+fn preflight(data: &Data) -> Result<(), TrainError> {
+    if let Data::Files { train, val } = data {
+        for p in train.iter().chain(std::iter::once(val)) {
+            if !p.exists() {
+                return Err(TrainError::Config(format!(
+                    "data file missing: {}", p.display())));
+            }
         }
-        return train_allreduce(cfg, &exes, init, worker_data, val);
     }
+    Ok(())
+}
 
-    match &cfg.hierarchy {
-        None => train_flat(cfg, &exes, init, worker_data, val),
-        Some(spec) => train_hierarchical(cfg, *spec, &exes, init,
-                                         worker_data, val),
+/// Ring worlds run lockstep collectives from the first broadcast, so a
+/// rank that dies materializing its data would stall every peer
+/// forever (peers' receivers stay connected while ANY rank lives).
+/// Materialize-check every input up front instead — PS modes skip
+/// this: they degrade cleanly through the Exit protocol.
+fn preflight_ring(plan: &WorldPlan, data: &Data)
+    -> Result<(), TrainError> {
+    if plan.is_ring() {
+        for w in 0..plan.n_shards() {
+            data.worker_dataset(w, plan.n_shards())?;
+        }
+        data.validation_dataset()?;
+    }
+    Ok(())
+}
+
+/// Observer wiring for the rank that owns validation + callbacks: the
+/// spec-built set from the config, plus any caller-supplied trait
+/// objects.
+fn build_observer<'a>(cfg: &'a TrainConfig,
+                      exes: &'a ModelExecutables, val: &'a DataSet,
+                      extra: Vec<Box<dyn Callback>>, n_params: usize)
+    -> Observer<'a> {
+    let mut callbacks =
+        CallbackSet::from_config(&cfg.algo, &cfg.callbacks);
+    for cb in extra {
+        callbacks.push(cb);
+    }
+    let mut observer =
+        Observer::new(&cfg.algo, Some((exes, val)), callbacks);
+    observer.begin(n_params);
+    observer
+}
+
+/// Execute rank `rank`'s role of `plan` over `comm`.
+///
+/// THE single orchestration path: `train()` runs it on one thread per
+/// rank, `run_rank()` runs it on one process per rank. Returns
+/// `Some((history, weights))` on the observer rank (always rank 0),
+/// `None` elsewhere. `extra` callbacks (non-cloneable trait objects,
+/// e.g. from `Experiment::callback`) join the spec-built set on the
+/// observer.
+fn run_role(plan: &WorldPlan, cfg: &TrainConfig,
+            exes: &Arc<ModelExecutables>, data: &Data,
+            comm: &mpi::Comm, extra: Vec<Box<dyn Callback>>)
+    -> Result<RoleOutcome, TrainError> {
+    let rank = comm.rank();
+    crate::util::logging::set_rank_tag(&plan.rank_tag(rank));
+    match plan.role_of(rank) {
+        RankRole::Master => {
+            let val = match data.validation_dataset() {
+                Ok(v) => v,
+                Err(e) => {
+                    // unblock handshaking children before erroring
+                    for child in plan.master_children() {
+                        let _ = comm.send(child, Tag::Exit,
+                                          Payload::Empty);
+                    }
+                    return Err(TrainError::Data(e));
+                }
+            };
+            let mut rng = Rng::new(cfg.seed);
+            let init = ParamSet::glorot_init(&exes.meta.params, &mut rng);
+            let observer = build_observer(cfg, exes.as_ref(), &val,
+                                          extra, init.num_params());
+            // The super-master integrates group deltas verbatim:
+            // identity SGD (the group master pre-negates its delta).
+            let super_algo;
+            let algo = if plan.is_hierarchical() {
+                super_algo = Algo {
+                    optimizer: crate::optim::OptimizerConfig::Sgd {
+                        lr: 1.0 },
+                    ..cfg.algo.clone()
+                };
+                &super_algo
+            } else {
+                &cfg.algo
+            };
+            let ctx = MasterContext {
+                algo,
+                children: plan.master_children(),
+                observer,
+            };
+            let outcome = Master::new(comm, ctx, init).run();
+            Ok(Some((outcome.history, outcome.weights)))
+        }
+        RankRole::GroupMaster { group } => {
+            let spec = *plan.hierarchy().expect("group master implies \
+                                                 hierarchy");
+            GroupMaster::new(comm, &cfg.algo, spec, group, exes)
+                .run()
+                .map_err(TrainError::Comm)?;
+            Ok(None)
+        }
+        RankRole::Worker { master, shard } => {
+            let ds = match data.worker_dataset(shard, plan.n_shards()) {
+                Ok(ds) => ds,
+                Err(e) => {
+                    // a silent death would hang the master's Exit count
+                    let _ = comm.send(master, Tag::Exit, Payload::Empty);
+                    return Err(TrainError::Data(e));
+                }
+            };
+            if let Err(e) = Worker::new(comm, master, &cfg.algo, exes,
+                                        &ds, plan.seed_of(rank))
+                .run() {
+                let _ = comm.send(master, Tag::Exit, Payload::Empty);
+                return Err(TrainError::Worker { rank,
+                                                msg: e.to_string() });
+            }
+            Ok(None)
+        }
+        RankRole::RingRank { shard } => {
+            let ds = data.worker_dataset(shard, plan.n_shards())?;
+            let lr = effective_lr_schedule(&cfg.algo, &cfg.callbacks);
+            let seed = plan.seed_of(rank);
+            if rank == plan.observer() {
+                let val = data.validation_dataset()?;
+                let mut rng = Rng::new(cfg.seed);
+                let init = ParamSet::glorot_init(&exes.meta.params,
+                                                 &mut rng);
+                let mut observer = build_observer(cfg, exes.as_ref(),
+                                                  &val, extra,
+                                                  init.num_params());
+                let outcome = RingWorker::new(comm, &cfg.algo,
+                                              exes.as_ref(), &ds, seed,
+                                              lr)
+                    .run(Some(init), &mut observer)
+                    .map_err(|e| TrainError::Worker {
+                        rank, msg: e.to_string() })?;
+                Ok(Some((outcome.history, outcome.weights)))
+            } else {
+                let mut observer = Observer::disabled();
+                RingWorker::new(comm, &cfg.algo, exes.as_ref(), &ds,
+                                seed, lr)
+                    .run(None, &mut observer)
+                    .map_err(|e| TrainError::Worker {
+                        rank, msg: e.to_string() })?;
+                Ok(None)
+            }
+        }
     }
 }
 
@@ -163,391 +291,149 @@ fn make_world(transport: Transport, size: usize)
     })
 }
 
-fn train_flat(cfg: &TrainConfig, exes: &Arc<ModelExecutables>,
-              init: ParamSet, worker_data: Vec<DataSet>, val: DataSet)
-    -> Result<TrainResult, TrainError> {
-    let n_workers = worker_data.len();
-    let mut world = make_world(cfg.transport, n_workers + 1)?;
-    let master_comm = world.remove(0);
-    let t0 = Instant::now();
-
-    let outcome = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for (wi, (comm, ds)) in
-            world.into_iter().zip(worker_data.iter()).enumerate() {
-            let algo = &cfg.algo;
-            let exes = exes.clone();
-            let seed = cfg.seed ^ (wi as u64 + 1).wrapping_mul(0x9E37);
-            handles.push(s.spawn(move || {
-                crate::util::logging::set_rank_tag(
-                    &format!("worker-{}", wi + 1));
-                Worker::new(&comm, 0, algo, &exes, ds, seed).run()
-            }));
-        }
-
-        crate::util::logging::set_rank_tag("master");
-        let ctx = MasterContext {
-            algo: &cfg.algo,
-            children: (1..=n_workers).collect(),
-            eval: Some((exes.as_ref(), &val)),
-        };
-        let outcome = Master::new(&master_comm, ctx, init).run();
-
-        for (wi, h) in handles.into_iter().enumerate() {
-            match h.join() {
-                Ok(Ok(_report)) => {}
-                Ok(Err(e)) => {
-                    return Err(TrainError::Worker { rank: wi + 1,
-                                                    msg: e.to_string() })
-                }
-                Err(_) => {
-                    return Err(TrainError::Panic(format!(
-                        "worker {}", wi + 1)))
-                }
+/// Join per-rank threads, attributing a failure to the thread's REAL
+/// rank. (Regression guard: the old hierarchical launcher reported the
+/// spawn-handle index as the rank.)
+fn join_ranks(
+    handles: Vec<(usize,
+                  std::thread::ScopedJoinHandle<'_, Result<(), String>>)>,
+) -> Result<(), TrainError> {
+    for (rank, h) in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => {
+                return Err(TrainError::Worker { rank, msg })
+            }
+            Err(_) => {
+                return Err(TrainError::Panic(format!("rank {rank}")))
             }
         }
-        Ok(outcome)
-    })?;
-
-    let wallclock_s = t0.elapsed().as_secs_f64();
-    let mut history = outcome.history;
-    history.wallclock_s = wallclock_s;
-    Ok(TrainResult { history, weights: outcome.weights, wallclock_s })
+    }
+    Ok(())
 }
 
-/// Masterless all-reduce session: the world is exactly the worker set —
-/// no master rank at all. Rank 0 runs on the calling thread, owns the
-/// validation schedule, and returns the merged history; every rank ends
-/// the run with bitwise-identical weights.
-fn train_allreduce(cfg: &TrainConfig, exes: &Arc<ModelExecutables>,
-                   init: ParamSet, worker_data: Vec<DataSet>, val: DataSet)
+/// Run a full distributed training session in-process: one thread per
+/// rank of the plan, every thread through [`run_role`].
+pub fn train(session: &Session, cfg: &TrainConfig, data: &Data)
     -> Result<TrainResult, TrainError> {
-    let n = worker_data.len();
-    let mut world = make_world(cfg.transport, n)?;
+    train_with_callbacks(session, cfg, data, Vec::new())
+}
+
+/// [`train`] with additional non-declarative callbacks (custom
+/// [`Callback`] impls) attached to the observer rank.
+pub fn train_with_callbacks(session: &Session, cfg: &TrainConfig,
+                            data: &Data,
+                            extra: Vec<Box<dyn Callback>>)
+    -> Result<TrainResult, TrainError> {
+    crate::util::logging::init();
+    let plan = WorldPlan::new(cfg).map_err(TrainError::Config)?;
+    let exes = session.executables(&cfg.builder.variant_key())?;
+    preflight(data)?;
+    preflight_ring(&plan, data)?;
+    let mut world = make_world(cfg.transport, plan.world_size())?;
+    let comm0 = world.remove(0);
     let t0 = Instant::now();
 
+    let plan_ref = &plan;
     let outcome = std::thread::scope(|s| {
-        let rank0_comm = world.remove(0);
         let mut handles = Vec::new();
         for comm in world {
             let rank = comm.rank();
-            let ds = &worker_data[rank];
-            let algo = &cfg.algo;
             let exes = exes.clone();
-            let seed = cfg.seed ^ (rank as u64 + 1).wrapping_mul(0x9E37);
             handles.push((rank, s.spawn(move || {
-                crate::util::logging::set_rank_tag(
-                    &format!("rank-{rank}"));
-                RingWorker::new(&comm, algo, &exes, ds, seed, None)
-                    .run(None)
+                run_role(plan_ref, cfg, &exes, data, &comm, Vec::new())
                     .map(|_| ())
                     .map_err(|e| e.to_string())
             })));
         }
-
-        crate::util::logging::set_rank_tag("rank-0");
-        let seed0 = cfg.seed ^ 1u64.wrapping_mul(0x9E37);
-        let outcome = RingWorker::new(&rank0_comm, &cfg.algo,
-                                      exes.as_ref(), &worker_data[0],
-                                      seed0,
-                                      Some((exes.as_ref(), &val)))
-            .run(Some(init))
-            .map_err(|e| TrainError::Worker { rank: 0,
-                                              msg: e.to_string() })?;
-
-        for (rank, h) in handles {
-            match h.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(msg)) => {
-                    return Err(TrainError::Worker { rank, msg })
-                }
-                Err(_) => {
-                    return Err(TrainError::Panic(format!("rank {rank}")))
-                }
-            }
-        }
-        Ok(outcome)
+        let result = run_role(plan_ref, cfg, &exes, data, &comm0, extra);
+        let joined = join_ranks(handles);
+        let outcome = result?;
+        joined?;
+        Ok(outcome.expect("rank 0 is the observer role"))
     })?;
 
     let wallclock_s = t0.elapsed().as_secs_f64();
-    let mut history = outcome.history;
+    let (mut history, weights) = outcome;
     history.wallclock_s = wallclock_s;
-    Ok(TrainResult { history, weights: outcome.weights, wallclock_s })
-}
-
-fn train_hierarchical(cfg: &TrainConfig, spec: HierarchySpec,
-                      exes: &Arc<ModelExecutables>, init: ParamSet,
-                      worker_data: Vec<DataSet>, val: DataSet)
-    -> Result<TrainResult, TrainError> {
-    let size = spec.world_size();
-    let mut world = make_world(cfg.transport, size)?;
-    // index worker ranks -> contiguous data shard index
-    let mut worker_index = std::collections::BTreeMap::new();
-    let mut next = 0usize;
-    for rank in 1..size {
-        if let Role::Worker { .. } = spec.role_of(rank) {
-            worker_index.insert(rank, next);
-            next += 1;
-        }
-    }
-    let t0 = Instant::now();
-
-    // The super-master integrates group deltas verbatim: identity SGD.
-    let super_algo = Algo {
-        optimizer: crate::optim::OptimizerConfig::Sgd { lr: 1.0 },
-        ..cfg.algo.clone()
-    };
-
-    let outcome = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        // ranks come off the world vector highest-first
-        while let Some(comm) = world.pop() {
-            let rank = comm.rank();
-            if rank == 0 {
-                world.push(comm);
-                break;
-            }
-            match spec.role_of(rank) {
-                Role::GroupMaster { group } => {
-                    let algo = &cfg.algo;
-                    let exes = exes.clone();
-                    handles.push(s.spawn(move || {
-                        crate::util::logging::set_rank_tag(
-                            &format!("gmaster-{group}"));
-                        GroupMaster::new(&comm, algo, spec, group, &exes)
-                            .run()
-                            .map(|_| ())
-                            .map_err(|e| e.to_string())
-                    }));
-                }
-                Role::Worker { master, .. } => {
-                    let algo = &cfg.algo;
-                    let exes = exes.clone();
-                    let wi = worker_index[&rank];
-                    let ds = &worker_data[wi];
-                    let seed = cfg.seed ^ (wi as u64 + 1)
-                        .wrapping_mul(0x9E37);
-                    handles.push(s.spawn(move || {
-                        crate::util::logging::set_rank_tag(
-                            &format!("worker-{rank}"));
-                        Worker::new(&comm, master, algo, &exes, ds, seed)
-                            .run()
-                            .map(|_| ())
-                            .map_err(|e| e.to_string())
-                    }));
-                }
-                Role::SuperMaster => unreachable!(),
-            }
-        }
-
-        let master_comm = world.remove(0);
-        crate::util::logging::set_rank_tag("super-master");
-        let ctx = MasterContext {
-            algo: &super_algo,
-            children: spec.group_masters(),
-            eval: Some((exes.as_ref(), &val)),
-        };
-        let outcome = Master::new(&master_comm, ctx, init).run();
-
-        for (i, h) in handles.into_iter().enumerate() {
-            match h.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(msg)) => {
-                    return Err(TrainError::Worker { rank: i, msg })
-                }
-                Err(_) => return Err(TrainError::Panic(format!(
-                    "rank-thread {i}"))),
-            }
-        }
-        Ok(outcome)
-    })?;
-
-    let wallclock_s = t0.elapsed().as_secs_f64();
-    let mut history = outcome.history;
-    history.wallclock_s = wallclock_s;
-    Ok(TrainResult { history, weights: outcome.weights, wallclock_s })
+    Ok(TrainResult { history, weights, wallclock_s })
 }
 
 /// SPMD entry point: run THIS process's single rank over a TCP mesh —
 /// the true multi-process cluster deployment (each rank its own OS
 /// process, like `mpirun -np N`). All ranks must be started with the
-/// same `cfg`/`base_port`; rank 0 is the (super-)master and returns the
+/// same `cfg`/`base_port`; rank 0 is the observer and returns the
 /// `TrainResult`, other ranks return `Ok(None)` when their role
-/// completes.
+/// completes. Identical role execution to [`train`] — both call
+/// [`run_role`].
 pub fn run_rank(session: &Session, cfg: &TrainConfig, data: &Data,
                 rank: usize, base_port: u16)
     -> Result<Option<TrainResult>, TrainError> {
     crate::util::logging::init();
+    let plan = WorldPlan::new(cfg).map_err(TrainError::Config)?;
     let exes = session.executables(&cfg.builder.variant_key())?;
-    let n_workers = cfg.total_workers();
+    preflight(data)?;
     let t0 = Instant::now();
-
-    if matches!(cfg.algo.mode, Mode::AllReduce) {
-        if cfg.hierarchy.is_some() {
-            return Err(TrainError::Config(
-                "allreduce mode is flat by construction; drop the \
-                 hierarchy spec"
-                    .into(),
-            ));
-        }
-        // Masterless: the world is exactly the worker set.
-        let size = n_workers;
-        let comm = crate::mpi::transport::tcp::endpoint(rank, size,
-                                                        base_port)?;
-        crate::util::logging::set_rank_tag(&format!("rank-{rank}"));
-        let ds = data.worker_dataset(rank, size)?;
-        let seed = cfg.seed ^ (rank as u64 + 1).wrapping_mul(0x9E37);
-        if rank == 0 {
-            let val = data.validation_dataset()?;
-            let mut rng = Rng::new(cfg.seed);
-            let init = ParamSet::glorot_init(&exes.meta.params, &mut rng);
-            let outcome = RingWorker::new(&comm, &cfg.algo,
-                                          exes.as_ref(), &ds, seed,
-                                          Some((exes.as_ref(), &val)))
-                .run(Some(init))
-                .map_err(|e| TrainError::Worker { rank,
-                                                  msg: e.to_string() })?;
+    let comm = crate::mpi::transport::tcp::endpoint(
+        rank, plan.world_size(), base_port)?;
+    match run_role(&plan, cfg, &exes, data, &comm, Vec::new())? {
+        Some((mut history, weights)) => {
             let wallclock_s = t0.elapsed().as_secs_f64();
-            let mut history = outcome.history;
             history.wallclock_s = wallclock_s;
-            return Ok(Some(TrainResult { history,
-                                         weights: outcome.weights,
-                                         wallclock_s }));
+            Ok(Some(TrainResult { history, weights, wallclock_s }))
         }
-        RingWorker::new(&comm, &cfg.algo, exes.as_ref(), &ds, seed, None)
-            .run(None)
-            .map_err(|e| TrainError::Worker { rank,
-                                              msg: e.to_string() })?;
-        return Ok(None);
-    }
-
-    match &cfg.hierarchy {
-        None => {
-            let size = n_workers + 1;
-            let comm = crate::mpi::transport::tcp::endpoint(
-                rank, size, base_port)?;
-            if rank == 0 {
-                crate::util::logging::set_rank_tag("master");
-                let val = data.validation_dataset()?;
-                let mut rng = Rng::new(cfg.seed);
-                let init = ParamSet::glorot_init(&exes.meta.params,
-                                                 &mut rng);
-                let ctx = MasterContext {
-                    algo: &cfg.algo,
-                    children: (1..=n_workers).collect(),
-                    eval: Some((exes.as_ref(), &val)),
-                };
-                let outcome = Master::new(&comm, ctx, init).run();
-                let wallclock_s = t0.elapsed().as_secs_f64();
-                let mut history = outcome.history;
-                history.wallclock_s = wallclock_s;
-                Ok(Some(TrainResult { history,
-                                      weights: outcome.weights,
-                                      wallclock_s }))
-            } else {
-                crate::util::logging::set_rank_tag(
-                    &format!("worker-{rank}"));
-                let ds = data.worker_dataset(rank - 1, n_workers)?;
-                let seed = cfg.seed ^ (rank as u64)
-                    .wrapping_mul(0x9E37);
-                Worker::new(&comm, 0, &cfg.algo, &exes, &ds, seed)
-                    .run()
-                    .map_err(|e| TrainError::Worker {
-                        rank, msg: e.to_string() })?;
-                Ok(None)
-            }
-        }
-        Some(spec) => {
-            let size = spec.world_size();
-            let comm = crate::mpi::transport::tcp::endpoint(
-                rank, size, base_port)?;
-            match spec.role_of(rank) {
-                Role::SuperMaster => {
-                    crate::util::logging::set_rank_tag("super-master");
-                    let val = data.validation_dataset()?;
-                    let mut rng = Rng::new(cfg.seed);
-                    let init = ParamSet::glorot_init(&exes.meta.params,
-                                                     &mut rng);
-                    let super_algo = Algo {
-                        optimizer: crate::optim::OptimizerConfig::Sgd {
-                            lr: 1.0 },
-                        ..cfg.algo.clone()
-                    };
-                    let ctx = MasterContext {
-                        algo: &super_algo,
-                        children: spec.group_masters(),
-                        eval: Some((exes.as_ref(), &val)),
-                    };
-                    let outcome = Master::new(&comm, ctx, init).run();
-                    let wallclock_s = t0.elapsed().as_secs_f64();
-                    let mut history = outcome.history;
-                    history.wallclock_s = wallclock_s;
-                    Ok(Some(TrainResult { history,
-                                          weights: outcome.weights,
-                                          wallclock_s }))
-                }
-                Role::GroupMaster { group } => {
-                    crate::util::logging::set_rank_tag(
-                        &format!("gmaster-{group}"));
-                    GroupMaster::new(&comm, &cfg.algo, *spec, group,
-                                     &exes)
-                        .run()?;
-                    Ok(None)
-                }
-                Role::Worker { master, group } => {
-                    crate::util::logging::set_rank_tag(
-                        &format!("worker-{rank}"));
-                    // contiguous worker index for data division
-                    let wi = group * spec.workers_per_group
-                        + (rank - master - 1);
-                    let ds = data.worker_dataset(wi, n_workers)?;
-                    let seed = cfg.seed ^ (wi as u64 + 1)
-                        .wrapping_mul(0x9E37);
-                    Worker::new(&comm, master, &cfg.algo, &exes, &ds,
-                                seed)
-                        .run()
-                        .map_err(|e| TrainError::Worker {
-                            rank, msg: e.to_string() })?;
-                    Ok(None)
-                }
-            }
-        }
+        None => Ok(None),
     }
 }
 
 /// The "Keras alone" baseline (§V): identical compute, no framework.
-/// One process runs batch -> gradient -> local optimizer update.
+/// One process runs batch -> gradient -> local optimizer update. The
+/// same [`Observer`] drives validation and callbacks, so early
+/// stopping / checkpointing behave identically to the distributed
+/// modes.
 pub fn train_direct(session: &Session, cfg: &TrainConfig, data: &Data)
     -> Result<TrainResult, TrainError> {
     crate::util::logging::init();
     let exes = session.executables(&cfg.builder.variant_key())?;
+    preflight(data)?;
     let ds = data.worker_dataset(0, 1)?;
     let val = data.validation_dataset()?;
     let mut rng = Rng::new(cfg.seed);
     let mut params = ParamSet::glorot_init(&exes.meta.params, &mut rng);
     let mut opt = cfg.algo.build_master_optimizer(params.num_params());
     let batch = cfg.algo.batch_size;
+    let mut observer = build_observer(cfg, exes.as_ref(), &val,
+                                      Vec::new(), params.num_params());
 
     let t0 = Instant::now();
     let mut history = History::default();
     let mut batches = 0u64;
     let mut last_loss = 0.0f32;
+    let mut stopped = false;
     for epoch in 0..cfg.algo.epochs {
         let mut erng = rng.fork(epoch as u64);
         let mut failure: Option<crate::runtime::RuntimeError> = None;
         let p = &mut params;
         let o = &mut opt;
+        let obs = &mut observer;
+        let hist = &mut history;
+        let stop = &mut stopped;
         ds.for_each_batch(batch, &mut erng, |x, y| {
-            if failure.is_some() {
+            if failure.is_some() || *stop {
                 return;
             }
             match exes.grad_step(p, x, y) {
                 Ok(out) => {
+                    if let Some(scale) = obs.take_lr_scale() {
+                        o.set_lr_scale(scale);
+                    }
                     o.update(p.flat_mut(), &out.grads);
                     batches += 1;
                     last_loss = out.loss;
-                    if batches % 16 == 0 || batches == 1 {
-                        history.train_losses.push((batches, out.loss));
+                    obs.after_update(batches, out.loss, p,
+                                     t0.elapsed().as_secs_f64(), hist);
+                    if obs.should_stop() {
+                        *stop = true;
                     }
                 }
                 Err(e) => failure = Some(e),
@@ -556,15 +442,9 @@ pub fn train_direct(session: &Session, cfg: &TrainConfig, data: &Data)
         if let Some(e) = failure {
             return Err(TrainError::Worker { rank: 0, msg: e.to_string() });
         }
-    }
-    if let Ok((loss, acc)) = crate::coordinator::validation::run_validation(
-        &exes, &params, &val, cfg.algo.max_val_batches) {
-        history.validations.push(crate::metrics::ValRecord {
-            t_s: t0.elapsed().as_secs_f64(),
-            update: batches,
-            val_loss: loss,
-            val_acc: acc,
-        });
+        if stopped {
+            break;
+        }
     }
     let wallclock_s = t0.elapsed().as_secs_f64();
     history.master_updates = batches;
@@ -577,5 +457,45 @@ pub fn train_direct(session: &Session, cfg: &TrainConfig, data: &Data)
         last_train_loss: last_loss,
         ..Default::default()
     });
+    observer.finish(batches, &params, t0.elapsed().as_secs_f64(),
+                    &mut history);
     Ok(TrainResult { history, weights: params, wallclock_s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression (ISSUE 2 satellite): a failing rank thread must be
+    /// reported by its REAL rank, not its position in the spawn list —
+    /// the old `train_hierarchical` used the handle index.
+    #[test]
+    fn join_ranks_reports_real_rank_not_handle_index() {
+        std::thread::scope(|s| {
+            let handles = vec![
+                (7usize, s.spawn(|| Ok::<(), String>(()))),
+                (3usize, s.spawn(|| Err("boom".to_string()))),
+                (5usize, s.spawn(|| Ok::<(), String>(()))),
+            ];
+            match join_ranks(handles) {
+                Err(TrainError::Worker { rank, msg }) => {
+                    assert_eq!(rank, 3, "must report the rank label");
+                    assert_eq!(msg, "boom");
+                }
+                other => panic!("expected Worker error, got {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn preflight_catches_missing_files() {
+        let data = Data::Files {
+            train: vec![std::path::PathBuf::from(
+                "/nonexistent_mpi_learn/shard_0.mpil")],
+            val: std::path::PathBuf::from(
+                "/nonexistent_mpi_learn/val.mpil"),
+        };
+        assert!(matches!(preflight(&data),
+                         Err(TrainError::Config(_))));
+    }
 }

@@ -1,0 +1,345 @@
+//! `Experiment` — the documented front door of the framework.
+//!
+//! The paper's pitch is a Keras-sized user API: pick a model, point at
+//! data, attach the usual training conveniences, call one method. The
+//! fluent builder collapses `TrainConfig` + `Data` + callback wiring
+//! into a single chain:
+//!
+//! ```no_run
+//! use mpi_learn::coordinator::Experiment;
+//!
+//! let session = mpi_learn::runtime::Session::open_default()?;
+//! let result = Experiment::new("lstm")
+//!     .batch(100)
+//!     .workers(8)
+//!     .allreduce()
+//!     .early_stopping(3)
+//!     .checkpoint("runs/ckpt")
+//!     .run(&session)?;
+//! println!("best val acc: {:?}", result.history.best_val_acc());
+//! # Ok::<(), Box<dyn std::error::Error>>(())
+//! ```
+//!
+//! Every knob maps 1:1 onto the JSON config schema (see `config` and
+//! DESIGN.md), so a chain is equally expressible as a versioned config
+//! file run with `mpi-learn train --config job.json`.
+
+use std::path::Path;
+
+use crate::coordinator::algo::{Algo, Mode};
+use crate::coordinator::builder::{Data, ModelBuilder};
+use crate::coordinator::callbacks::{Callback, CallbackSpec,
+                                    LrScheduleSpec};
+use crate::coordinator::driver::{train_direct, train_with_callbacks,
+                                 TrainConfig, TrainError, TrainResult,
+                                 Transport};
+use crate::coordinator::hierarchy::HierarchySpec;
+use crate::data::GeneratorConfig;
+use crate::optim::OptimizerConfig;
+use crate::runtime::Session;
+
+/// Fluent one-call training API. See the module docs for the shape.
+pub struct Experiment {
+    cfg: TrainConfig,
+    data: Data,
+    extra: Vec<Box<dyn Callback>>,
+    direct: bool,
+}
+
+impl Experiment {
+    /// Start an experiment on model family `model` ("mlp", "lstm",
+    /// "transformer"). Defaults: batch 100, 1 worker, async Downpour,
+    /// in-process transport, synthetic benchmark data.
+    pub fn new(model: &str) -> Self {
+        Self {
+            cfg: TrainConfig::new(model, 100, 1),
+            data: Data::Synthetic {
+                gen: GeneratorConfig::default(),
+                samples_per_worker: 2000,
+                val_samples: 1000,
+            },
+            extra: Vec::new(),
+            direct: false,
+        }
+    }
+
+    /// Batch size (must match an AOT artifact / native variant).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.cfg.builder = ModelBuilder::new(&self.cfg.builder.model,
+                                             batch);
+        self.cfg.algo.batch_size = batch;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.n_workers = n;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: u32) -> Self {
+        self.cfg.algo.epochs = epochs;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn optimizer(mut self, opt: OptimizerConfig) -> Self {
+        self.cfg.algo.optimizer = opt;
+        self
+    }
+
+    /// Validate on the observer every `every` updates (0 = only at the
+    /// end), capped at `max_batches` batches per sweep (0 = all).
+    pub fn validate_every(mut self, every: u64) -> Self {
+        self.cfg.algo.validate_every = every;
+        self
+    }
+
+    pub fn max_val_batches(mut self, max_batches: usize) -> Self {
+        self.cfg.algo.max_val_batches = max_batches;
+        self
+    }
+
+    pub fn grad_clip(mut self, max_norm: f32) -> Self {
+        self.cfg.algo.grad_clip = max_norm;
+        self
+    }
+
+    // --- distributed algorithm -----------------------------------
+
+    /// Full [`Algo`] override — the escape hatch for variants the
+    /// named setters don't cover (e.g. a custom EASGD worker
+    /// optimizer). The batch size set via [`Experiment::batch`] is
+    /// kept.
+    pub fn algo(mut self, algo: Algo) -> Self {
+        let batch = self.cfg.algo.batch_size;
+        self.cfg.algo = algo;
+        self.cfg.algo.batch_size = batch;
+        self
+    }
+
+    /// Asynchronous Downpour SGD (the paper default).
+    pub fn downpour(mut self) -> Self {
+        self.cfg.algo.mode = Mode::Downpour { sync: false };
+        self
+    }
+
+    /// Downpour behind a synchronous barrier.
+    pub fn downpour_sync(mut self) -> Self {
+        self.cfg.algo.mode = Mode::Downpour { sync: true };
+        self
+    }
+
+    /// Elastic Averaging SGD: exchange every `tau` batches with force
+    /// `alpha`.
+    pub fn easgd(mut self, tau: u32, alpha: f32) -> Self {
+        self.cfg.algo.mode = Mode::Easgd {
+            tau,
+            alpha,
+            worker_optimizer: OptimizerConfig::Sgd { lr: 0.05 },
+        };
+        self
+    }
+
+    /// Masterless synchronous ring all-reduce.
+    pub fn allreduce(mut self) -> Self {
+        self.cfg.algo.mode = Mode::AllReduce;
+        self
+    }
+
+    /// Two-level master hierarchy (Downpour only).
+    pub fn hierarchy(mut self, groups: usize, workers_per_group: usize,
+                     sync_every: u64) -> Self {
+        self.cfg.hierarchy = Some(HierarchySpec {
+            n_groups: groups,
+            workers_per_group,
+            sync_every,
+        });
+        self
+    }
+
+    /// Carry the protocol over a localhost TCP mesh instead of
+    /// in-process channels.
+    pub fn tcp(mut self, base_port: u16) -> Self {
+        self.cfg.transport = Transport::Tcp { base_port };
+        self
+    }
+
+    // --- data ----------------------------------------------------
+
+    /// Explicit data source (shard files or synthetic).
+    pub fn data(mut self, data: Data) -> Self {
+        self.data = data;
+        self
+    }
+
+    /// Synthetic benchmark data with the given per-worker/validation
+    /// sample counts.
+    pub fn synthetic(mut self, samples_per_worker: usize,
+                     val_samples: usize) -> Self {
+        self.data = Data::Synthetic {
+            gen: GeneratorConfig::default(),
+            samples_per_worker,
+            val_samples,
+        };
+        self
+    }
+
+    // --- callbacks -----------------------------------------------
+
+    /// Stop when val loss hasn't improved for `patience` validations.
+    pub fn early_stopping(mut self, patience: u32) -> Self {
+        self.cfg.callbacks.push(CallbackSpec::EarlyStopping {
+            patience,
+            min_delta: 0.0,
+        });
+        self
+    }
+
+    /// Best-validation-loss checkpointing into `dir/best.mplw`.
+    pub fn checkpoint(mut self, dir: impl AsRef<Path>) -> Self {
+        self.cfg.callbacks.push(CallbackSpec::ModelCheckpoint {
+            dir: dir.as_ref().to_path_buf(),
+            every: 0,
+            best_only: true,
+        });
+        self
+    }
+
+    /// Best checkpoint plus periodic `checkpoint-{update}.mplw` files.
+    pub fn checkpoint_every(mut self, dir: impl AsRef<Path>,
+                            every: u64) -> Self {
+        self.cfg.callbacks.push(CallbackSpec::ModelCheckpoint {
+            dir: dir.as_ref().to_path_buf(),
+            every,
+            best_only: false,
+        });
+        self
+    }
+
+    /// Step LR decay: multiply by `gamma` every `every` updates.
+    pub fn lr_step(mut self, gamma: f32, every: u64) -> Self {
+        self.cfg.callbacks.push(CallbackSpec::LrSchedule(
+            LrScheduleSpec::Step { gamma, every }));
+        self
+    }
+
+    /// Exponential LR decay: multiply by `gamma` per update.
+    pub fn lr_exponential(mut self, gamma: f32) -> Self {
+        self.cfg.callbacks.push(CallbackSpec::LrSchedule(
+            LrScheduleSpec::Exponential { gamma }));
+        self
+    }
+
+    /// Stream per-round/validation metrics as JSON lines.
+    pub fn jsonl_log(mut self, path: impl AsRef<Path>) -> Self {
+        self.cfg.callbacks.push(CallbackSpec::JsonlLogger {
+            path: path.as_ref().to_path_buf(),
+        });
+        self
+    }
+
+    /// Attach a custom [`Callback`] implementation.
+    pub fn callback(mut self, cb: Box<dyn Callback>) -> Self {
+        self.extra.push(cb);
+        self
+    }
+
+    /// Run the "Keras alone" single-process baseline instead of the
+    /// distributed framework (§V overhead measurements).
+    pub fn direct(mut self) -> Self {
+        self.direct = true;
+        self
+    }
+
+    // --- launch --------------------------------------------------
+
+    /// The resolved `TrainConfig` (inspection / tests / config export).
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Launch the experiment on `session` and block until done.
+    pub fn run(self, session: &Session)
+        -> Result<TrainResult, TrainError> {
+        if self.direct {
+            train_direct(session, &self.cfg, &self.data)
+        } else {
+            train_with_callbacks(session, &self.cfg, &self.data,
+                                 self.extra)
+        }
+    }
+}
+
+/// Convenience: build an `Experiment` from a parsed config file.
+impl From<crate::coordinator::config::JobConfig> for Experiment {
+    fn from(job: crate::coordinator::config::JobConfig) -> Self {
+        Experiment {
+            cfg: job.train,
+            data: job.data,
+            extra: Vec::new(),
+            direct: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_builds_expected_config() {
+        let exp = Experiment::new("lstm")
+            .batch(50)
+            .workers(8)
+            .allreduce()
+            .epochs(2)
+            .seed(7)
+            .early_stopping(3)
+            .checkpoint("/tmp/mpi_learn_exp_ckpt")
+            .lr_step(0.5, 100);
+        let cfg = exp.config();
+        assert_eq!(cfg.builder.variant_key(), "lstm_b50");
+        assert_eq!(cfg.algo.batch_size, 50);
+        assert_eq!(cfg.n_workers, 8);
+        assert_eq!(cfg.algo.mode, Mode::AllReduce);
+        assert_eq!(cfg.algo.epochs, 2);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.callbacks.len(), 3);
+        assert!(matches!(cfg.callbacks[0],
+                         CallbackSpec::EarlyStopping { patience: 3, .. }));
+        assert!(matches!(cfg.callbacks[1],
+                         CallbackSpec::ModelCheckpoint {
+                             best_only: true, every: 0, .. }));
+        assert!(matches!(cfg.callbacks[2],
+                         CallbackSpec::LrSchedule(
+                             LrScheduleSpec::Step { every: 100, .. })));
+    }
+
+    #[test]
+    fn hierarchy_and_transport_knobs() {
+        let exp = Experiment::new("mlp")
+            .workers(4)
+            .hierarchy(2, 2, 5)
+            .tcp(47123)
+            .downpour_sync();
+        let cfg = exp.config();
+        assert_eq!(cfg.hierarchy.unwrap().n_groups, 2);
+        assert_eq!(cfg.transport, Transport::Tcp { base_port: 47123 });
+        assert_eq!(cfg.algo.mode, Mode::Downpour { sync: true });
+    }
+
+    #[test]
+    fn from_job_config() {
+        let job = crate::coordinator::config::JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 2,
+                "callbacks": [{"kind": "early_stopping"}]}"#)
+            .unwrap();
+        let exp = Experiment::from(job);
+        assert_eq!(exp.config().n_workers, 2);
+        assert_eq!(exp.config().callbacks.len(), 1);
+    }
+}

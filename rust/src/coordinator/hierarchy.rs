@@ -10,6 +10,13 @@
 //! global model integrates group deltas — momentum or a smaller lr at the
 //! top level damps cross-group oscillation.
 //!
+//! Early stopping: when the super-master's callbacks request a stop it
+//! answers the group master's next sync (or handshake) with `Tag::Exit`.
+//! The group master then drains its own workers the same way — every
+//! request is answered with Exit — forwards their final stats upward,
+//! and exits, so the whole tree winds down through the ordinary Exit
+//! protocol.
+//!
 //! Rank layout (see [`HierarchySpec`]): rank 0 is the super-master; group
 //! `g` occupies a contiguous block starting at `1 + g * (workers_per_group
 //! + 1)` with its master first.
@@ -17,7 +24,7 @@
 use std::collections::BTreeSet;
 
 use crate::coordinator::algo::{Algo, Mode};
-use crate::metrics::{History, Stopwatch, ValRecord, WorkerReport};
+use crate::metrics::{History, Stopwatch, WorkerReport};
 use crate::mpi::{Comm, Envelope, Payload, Rank, Tag};
 use crate::runtime::ModelExecutables;
 use crate::tensor::ParamSet;
@@ -103,6 +110,10 @@ impl<'a> GroupMaster<'a> {
             self.spec.group_workers(self.group).into_iter().collect();
         let super_rank = self.spec.super_master();
 
+        // Early-stop wind-down: once set, every worker request is
+        // answered with Exit and no further updates apply.
+        let mut stopping = false;
+
         // handshake upward: get the global weights. Our own workers may
         // race their Ready messages in first — stash anything that is not
         // the super-master's reply.
@@ -112,15 +123,19 @@ impl<'a> GroupMaster<'a> {
         let mut synced = loop {
             let env = self.comm.recv()?;
             if env.src == super_rank {
-                match env {
-                    Envelope { tag: Tag::Weights,
-                               payload: Payload::Floats { data, .. },
-                               .. } => {
+                match (env.tag, env.payload) {
+                    (Tag::Weights, Payload::Floats { data, .. }) => {
                         weights.set_flat(&data);
                         break data;
                     }
-                    env => panic!("group master: bad handshake {:?}",
-                                  env.tag),
+                    (Tag::Exit, _) => {
+                        // the run is already over (early stop before we
+                        // ever trained): drain our workers and leave
+                        stopping = true;
+                        break std::sync::Arc::new(Vec::new());
+                    }
+                    (tag, _) => panic!(
+                        "group master: bad handshake {tag:?}"),
                 }
             }
             early.push(env);
@@ -146,14 +161,35 @@ impl<'a> GroupMaster<'a> {
                 Some(env) => env,
                 None => self.comm.recv()?,
             };
+            if env.src == super_rank {
+                // outside a sync we expect nothing from above except an
+                // early-stop order
+                if env.tag == Tag::Exit {
+                    stopping = true;
+                } else {
+                    log::warn!("group master: unexpected {:?} from \
+                                super-master", env.tag);
+                }
+                continue;
+            }
             match (env.tag, env.payload) {
                 (Tag::Ready, _) => {
-                    self.comm.send(env.src, Tag::Weights,
-                                   Payload::floats(update_count,
-                                                   weights.flat()
-                                                       .to_vec()))?;
+                    if stopping {
+                        self.comm.send(env.src, Tag::Exit,
+                                       Payload::Empty)?;
+                    } else {
+                        self.comm.send(env.src, Tag::Weights,
+                                       Payload::floats(update_count,
+                                                       weights.flat()
+                                                           .to_vec()))?;
+                    }
                 }
                 (Tag::Gradients, Payload::Grad { loss, data, .. }) => {
+                    if stopping {
+                        self.comm.send(env.src, Tag::Exit,
+                                       Payload::Empty)?;
+                        continue;
+                    }
                     update_timer.start();
                     optimizer.update(weights.flat_mut(), &data);
                     update_timer.stop();
@@ -179,24 +215,34 @@ impl<'a> GroupMaster<'a> {
                         loop {
                             let env = self.comm.recv()?;
                             if env.src == super_rank {
-                                if let Payload::Floats { data, .. } =
-                                    env.payload {
-                                    weights.set_flat(&data);
-                                    synced = data;
-                                } else {
-                                    log::warn!(
+                                match (env.tag, env.payload) {
+                                    (Tag::Weights,
+                                     Payload::Floats { data, .. }) => {
+                                        weights.set_flat(&data);
+                                        synced = data;
+                                    }
+                                    (Tag::Exit, _) => {
+                                        // early stop ordered from above
+                                        stopping = true;
+                                    }
+                                    (tag, _) => log::warn!(
                                         "group master: unexpected \
-                                         {:?} during sync", env.tag);
+                                         {tag:?} during sync"),
                                 }
                                 break;
                             }
                             stash.push_back(env);
                         }
                     }
-                    self.comm.send(env.src, Tag::Weights,
-                                   Payload::floats(update_count,
-                                                   weights.flat()
-                                                       .to_vec()))?;
+                    if stopping {
+                        self.comm.send(env.src, Tag::Exit,
+                                       Payload::Empty)?;
+                    } else {
+                        self.comm.send(env.src, Tag::Weights,
+                                       Payload::floats(update_count,
+                                                       weights.flat()
+                                                           .to_vec()))?;
+                    }
                 }
                 (Tag::TrainStats, Payload::Stats(s)) => {
                     history.workers.push(WorkerReport {
@@ -220,27 +266,29 @@ impl<'a> GroupMaster<'a> {
                     "group master: unexpected {tag:?} ({payload:?})"),
             }
         }
-        // final upstream sync + exit
-        let delta_neg: Vec<f32> = synced
-            .iter()
-            .zip(weights.flat())
-            .map(|(old, new)| old - new)
-            .collect();
-        self.comm.send(super_rank, Tag::AggGradients,
-                       Payload::grad(update_count, loss_accum,
-                                     delta_neg))?;
-        if let Ok(Envelope { tag: Tag::Weights,
-                             payload: Payload::Floats { data, .. }, .. }) =
-            self.comm.recv() {
-            weights.set_flat(&data);
+        // final upstream sync + exit (skipped when the super-master
+        // already ordered the stop — it only wants our Exit now)
+        if !stopping {
+            let delta_neg: Vec<f32> = synced
+                .iter()
+                .zip(weights.flat())
+                .map(|(old, new)| old - new)
+                .collect();
+            self.comm.send(super_rank, Tag::AggGradients,
+                           Payload::grad(update_count, loss_accum,
+                                         delta_neg))?;
+            // the reply may be Weights (normal) or Exit (the stop
+            // raced our final sync) — only Weights changes state
+            if let Ok(Envelope { tag: Tag::Weights,
+                                 payload: Payload::Floats { data, .. },
+                                 .. }) = self.comm.recv() {
+                weights.set_flat(&data);
+            }
         }
         self.comm.send(super_rank, Tag::Exit, Payload::Empty)?;
         history.master_updates = update_count;
         history.master_update_time_s = update_timer.total_s();
         history.wallclock_s = started.elapsed().as_secs_f64();
-        // group-level validation record is synthesized by the super-master
-        let _ = ValRecord { t_s: 0.0, update: 0, val_loss: 0.0,
-                            val_acc: 0.0 };
         Ok(GroupOutcome { history, weights })
     }
 }

@@ -10,17 +10,23 @@
 //! hierarchical configuration: group masters send `AggGradients` which
 //! take the ordinary gradient path (the group master pre-negates its
 //! weight delta so an identity-SGD super-optimizer means "adopt delta").
+//!
+//! The master is the *observer* role: its [`Observer`] runs the
+//! validation schedule and the callback set after every update. When a
+//! callback requests a stop (early stopping), the master switches to
+//! wind-down: every subsequent child request is answered with
+//! `Tag::Exit`, which the existing worker protocol already treats as
+//! "finish up and report" — so the stop propagates with no new message
+//! types.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
 use crate::coordinator::algo::{Algo, Mode};
-use crate::coordinator::validation::{run_validation, ValidationSchedule};
-use crate::data::DataSet;
-use crate::metrics::{History, Stopwatch, ValRecord, WorkerReport};
+use crate::coordinator::callbacks::Observer;
+use crate::metrics::{History, Stopwatch, WorkerReport};
 use crate::mpi::{Comm, Envelope, Payload, Rank, Tag};
 use crate::optim::Optimizer;
-use crate::runtime::ModelExecutables;
 use crate::tensor::ParamSet;
 
 /// Everything the master needs beyond its communicator.
@@ -28,8 +34,8 @@ pub struct MasterContext<'a> {
     pub algo: &'a Algo,
     /// Child ranks this master serves (workers, or group masters).
     pub children: Vec<Rank>,
-    /// Validation executables + held-out set (None = no validation).
-    pub eval: Option<(&'a ModelExecutables, &'a DataSet)>,
+    /// Validation + callbacks host (see `callbacks::Observer`).
+    pub observer: Observer<'a>,
 }
 
 /// Result of a master run.
@@ -69,11 +75,11 @@ pub struct Master<'a> {
     weights: ParamSet,
     optimizer: Box<dyn Optimizer>,
     update_count: u64,
-    schedule: ValidationSchedule,
-    lr_schedule: Option<crate::optim::StepDecay>,
     done: BTreeSet<Rank>,
     /// Synchronous-mode barrier stash: rank -> (loss, grads).
     pending: BTreeMap<Rank, (f32, Vec<f32>)>,
+    /// Early-stop wind-down: answer everything with Exit.
+    stopping: bool,
     pub staleness: StalenessStats,
     history: History,
     update_timer: Stopwatch,
@@ -86,24 +92,15 @@ impl<'a> Master<'a> {
         -> Self {
         let n = init.num_params();
         let optimizer = ctx.algo.build_master_optimizer(n);
-        let schedule = ValidationSchedule::new(ctx.algo.validate_every);
-        let lr_schedule = if ctx.algo.lr_decay > 0.0
-            && ctx.algo.lr_decay_every > 0 {
-            Some(crate::optim::StepDecay::new(ctx.algo.lr_decay,
-                                              ctx.algo.lr_decay_every))
-        } else {
-            None
-        };
         Self {
             comm,
             ctx,
             weights: init,
             optimizer,
             update_count: 0,
-            schedule,
-            lr_schedule,
             done: BTreeSet::new(),
             pending: BTreeMap::new(),
+            stopping: false,
             staleness: StalenessStats::default(),
             history: History::default(),
             update_timer: Stopwatch::new(),
@@ -124,6 +121,12 @@ impl<'a> Master<'a> {
         }
     }
 
+    fn send_exit(&self, to: Rank) {
+        if let Err(e) = self.comm.send(to, Tag::Exit, Payload::Empty) {
+            log::warn!("master: exit send to {to} failed: {e}");
+        }
+    }
+
     /// Snapshot once, fan out to many recipients (sync barrier) — the
     /// Arc payload keeps the broadcast a single allocation.
     fn broadcast_weights(&self, to: impl Iterator<Item = Rank>) {
@@ -138,45 +141,24 @@ impl<'a> Master<'a> {
         }
     }
 
-    fn maybe_validate(&mut self, force: bool) {
-        let due = force || self.schedule.due(self.update_count);
-        if !due {
-            return;
-        }
-        if let Some((exes, val)) = self.ctx.eval {
-            match run_validation(exes, &self.weights, val,
-                                 self.ctx.algo.max_val_batches) {
-                Ok((loss, acc)) => {
-                    log::info!(
-                        "validation @ update {}: loss={loss:.4} \
-                         acc={acc:.4}",
-                        self.update_count
-                    );
-                    self.history.validations.push(ValRecord {
-                        t_s: self.started.elapsed().as_secs_f64(),
-                        update: self.update_count,
-                        val_loss: loss,
-                        val_acc: acc,
-                    });
-                }
-                Err(e) => log::error!("validation failed: {e}"),
-            }
-        }
-    }
-
+    /// One optimizer step + the observer hook (train-loss sampling, due
+    /// validation, callbacks). May flip `stopping`.
     fn apply_gradient(&mut self, loss: f32, grads: &[f32]) {
-        if let Some(sched) = &mut self.lr_schedule {
-            let scale = sched.tick();
+        if let Some(scale) = self.ctx.observer.take_lr_scale() {
             self.optimizer.set_lr_scale(scale);
         }
         self.update_timer.start();
         self.optimizer.update(self.weights.flat_mut(), grads);
         self.update_timer.stop();
         self.update_count += 1;
-        if self.update_count % 16 == 0 || self.update_count == 1 {
-            self.history.train_losses.push((self.update_count, loss));
+        self.ctx.observer.after_update(
+            self.update_count, loss, &self.weights,
+            self.started.elapsed().as_secs_f64(), &mut self.history);
+        if self.ctx.observer.should_stop() && !self.stopping {
+            self.stopping = true;
+            log::info!("master: callbacks requested stop after \
+                        update {}", self.update_count);
         }
-        self.maybe_validate(false);
     }
 
     fn handle_grad(&mut self, src: Rank, step: u64, loss: f32,
@@ -189,10 +171,18 @@ impl<'a> Master<'a> {
             log::warn!("master: dropping gradient from departed {src}");
             return;
         }
+        if self.stopping {
+            self.send_exit(src);
+            return;
+        }
         self.staleness.record(self.update_count.saturating_sub(step));
         if !sync {
             self.apply_gradient(loss, &grads);
-            self.send_weights(src);
+            if self.stopping {
+                self.send_exit(src);
+            } else {
+                self.send_weights(src);
+            }
             return;
         }
         self.pending.insert(src, (loss, grads));
@@ -220,18 +210,27 @@ impl<'a> Master<'a> {
             }
         }
         self.apply_gradient(avg_loss, &avg);
-        self.broadcast_weights(pending.into_keys());
+        if self.stopping {
+            for rank in pending.into_keys() {
+                self.send_exit(rank);
+            }
+        } else {
+            self.broadcast_weights(pending.into_keys());
+        }
     }
 
     /// EASGD center update: reply with the current center, then move the
     /// center toward the worker's weights by alpha.
     fn handle_exchange(&mut self, src: Rank,
                        worker_w: std::sync::Arc<Vec<f32>>, alpha: f32) {
+        if self.stopping {
+            self.send_exit(src);
+            return;
+        }
+        // the reply carries the pre-update center (the worker pulls
+        // toward where the center was when it asked)
         let reply = Payload::floats(self.update_count,
                                     self.weights.flat().to_vec());
-        if let Err(e) = self.comm.send(src, Tag::Center, reply) {
-            log::warn!("master: center send to {src} failed: {e}");
-        }
         self.update_timer.start();
         let center = self.weights.flat_mut();
         for (c, w) in center.iter_mut().zip(worker_w.iter()) {
@@ -239,7 +238,18 @@ impl<'a> Master<'a> {
         }
         self.update_timer.stop();
         self.update_count += 1;
-        self.maybe_validate(false);
+        // EASGD exchanges carry no gradient loss: NaN marks "no sample"
+        self.ctx.observer.after_update(
+            self.update_count, f32::NAN, &self.weights,
+            self.started.elapsed().as_secs_f64(), &mut self.history);
+        if self.ctx.observer.should_stop() {
+            self.stopping = true;
+            self.send_exit(src);
+            return;
+        }
+        if let Err(e) = self.comm.send(src, Tag::Center, reply) {
+            log::warn!("master: center send to {src} failed: {e}");
+        }
     }
 
     fn handle_stats(&mut self, src: Rank,
@@ -276,7 +286,13 @@ impl<'a> Master<'a> {
             self.idle_timer.stop();
             let Envelope { src, tag, payload } = env;
             match (tag, payload) {
-                (Tag::Ready, _) => self.send_weights(src),
+                (Tag::Ready, _) => {
+                    if self.stopping {
+                        self.send_exit(src);
+                    } else {
+                        self.send_weights(src);
+                    }
+                }
                 (Tag::Gradients, Payload::Grad { step, loss, data })
                 | (Tag::AggGradients, Payload::Grad { step, loss, data }) =>
                 {
@@ -307,14 +323,17 @@ impl<'a> Master<'a> {
                 }
             }
         }
-        // final validation so every run ends with a measurement
-        self.maybe_validate(true);
         self.history.staleness_mean = self.staleness.mean();
         self.history.staleness_max = self.staleness.max;
         self.history.master_updates = self.update_count;
         self.history.master_update_time_s = self.update_timer.total_s();
         self.history.master_idle_time_s = self.idle_timer.total_s();
         self.history.wallclock_s = self.started.elapsed().as_secs_f64();
+        // final validation (every run ends with a measurement) + the
+        // callbacks' on_train_end
+        self.ctx.observer.finish(self.update_count, &self.weights,
+                                 self.started.elapsed().as_secs_f64(),
+                                 &mut self.history);
         MasterOutcome { weights: self.weights, history: self.history }
     }
 }
@@ -353,7 +372,7 @@ mod tests {
                 let ctx = MasterContext {
                     algo: &algo,
                     children: vec![1, 2],
-                    eval: None,
+                    observer: Observer::disabled(),
                 };
                 Master::new(&mcomm, ctx, small_init()).run()
             });
@@ -400,7 +419,7 @@ mod tests {
                 let ctx = MasterContext {
                     algo: &algo,
                     children: vec![1, 2],
-                    eval: None,
+                    observer: Observer::disabled(),
                 };
                 Master::new(&mcomm, ctx, small_init()).run()
             });
@@ -421,6 +440,61 @@ mod tests {
 
             let outcome = master.join().unwrap();
             assert_eq!(outcome.history.master_updates, 2);
+        });
+    }
+
+    /// Early-stop propagation: a callback that requests stop makes the
+    /// master answer the NEXT child request with Exit instead of
+    /// weights, and the run winds down cleanly.
+    #[test]
+    fn stop_request_propagates_as_exit_replies() {
+        struct StopAfter(u64);
+        impl crate::coordinator::callbacks::Callback for StopAfter {
+            fn on_round(
+                &mut self,
+                info: &crate::coordinator::callbacks::RoundInfo<'_>,
+                ctl: &mut crate::coordinator::callbacks::Control) {
+                if info.update >= self.0 {
+                    ctl.stop();
+                }
+            }
+        }
+        let mut world = crate::mpi::inproc_world(2);
+        let c1 = world.pop().unwrap();
+        let mcomm = world.pop().unwrap();
+        let algo = Algo {
+            optimizer: crate::optim::OptimizerConfig::Sgd { lr: 1.0 },
+            ..Algo::default()
+        };
+
+        std::thread::scope(|s| {
+            let master = s.spawn(|| {
+                let mut callbacks =
+                    crate::coordinator::callbacks::CallbackSet::new();
+                callbacks.push(Box::new(StopAfter(2)));
+                let ctx = MasterContext {
+                    algo: &algo,
+                    children: vec![1],
+                    observer: Observer::new(&algo, None, callbacks),
+                };
+                Master::new(&mcomm, ctx, small_init()).run()
+            });
+
+            c1.send(0, Tag::Gradients,
+                    Payload::grad(0, 1.0, vec![1.0; 4])).unwrap();
+            assert_eq!(c1.recv().unwrap().tag, Tag::Weights);
+            c1.send(0, Tag::Gradients,
+                    Payload::grad(1, 1.0, vec![1.0; 4])).unwrap();
+            // update 2 trips the callback: the reply is Exit
+            assert_eq!(c1.recv().unwrap().tag, Tag::Exit);
+            // worker wind-down: stats + exit
+            c1.send(0, Tag::TrainStats, Payload::Stats(
+                crate::mpi::WorkerStats::default())).unwrap();
+            c1.send(0, Tag::Exit, Payload::Empty).unwrap();
+
+            let outcome = master.join().unwrap();
+            assert_eq!(outcome.history.master_updates, 2,
+                       "no updates after the stop");
         });
     }
 }

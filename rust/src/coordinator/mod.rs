@@ -1,26 +1,44 @@
 //! The paper's system contribution: MPI-style distributed training of the
 //! AOT-compiled model zoo.
 //!
-//! - [`algo`] — the `Algo` training-procedure descriptor (Downpour / EASGD,
-//!   sync/async, optimizer, validation frequency).
+//! - [`experiment`] — the `Experiment` facade: the one-call, fluent
+//!   front door (`Experiment::new("lstm").workers(8).allreduce()
+//!   .early_stopping(3).run(&session)`).
+//! - [`topology`] — `WorldPlan`: (mode, hierarchy, workers) -> world
+//!   size + per-rank roles/shards/seeds. One source of truth for every
+//!   deployment.
+//! - [`callbacks`] — Keras-style `Callback` trait + built-ins
+//!   (`ModelCheckpoint`, `EarlyStopping`, `LrSchedule`, `JsonlLogger`).
+//! - [`algo`] — the `Algo` training-procedure descriptor (Downpour /
+//!   EASGD / AllReduce, sync/async, optimizer, validation frequency).
 //! - [`builder`] — the `ModelBuilder` and `Data` user-interface classes.
-//! - [`master`] / [`worker`] — the two process roles.
+//! - [`master`] / [`worker`] — the process roles (incl. `RingWorker`).
 //! - [`hierarchy`] — two-level master topology.
-//! - [`validation`] — master-side held-out evaluation.
-//! - [`driver`] — the launcher (`train`, `train_direct`).
+//! - [`validation`] — held-out evaluation + schedule.
+//! - [`driver`] — the launcher: `train` / `run_rank` both execute roles
+//!   through one `run_role` path; `train_direct` is the no-framework
+//!   baseline.
 
 pub mod algo;
 pub mod builder;
+pub mod callbacks;
 pub mod config;
 pub mod driver;
+pub mod experiment;
 pub mod hierarchy;
 pub mod master;
+pub mod topology;
 pub mod validation;
 pub mod worker;
 
 pub use algo::{Algo, Mode};
 pub use builder::{Data, ModelBuilder};
+pub use callbacks::{Callback, CallbackSpec, Control, EarlyStopping,
+                    JsonlLogger, LrScheduleSpec, ModelCheckpoint,
+                    RoundInfo, ValInfo};
 pub use config::JobConfig;
-pub use driver::{run_rank, train, train_direct, TrainConfig, TrainError,
-                 TrainResult, Transport};
+pub use driver::{run_rank, train, train_direct, train_with_callbacks,
+                 TrainConfig, TrainError, TrainResult, Transport};
+pub use experiment::Experiment;
 pub use hierarchy::HierarchySpec;
+pub use topology::{RankRole, WorldPlan};

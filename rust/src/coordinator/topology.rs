@@ -1,0 +1,293 @@
+//! `WorldPlan` — the single source of truth for world layout.
+//!
+//! Every training deployment, in-process threads or an `mpirun`-style
+//! TCP mesh, is described by one plan: `(mode, hierarchy, n_workers)`
+//! determines the world size and, for every rank, its [`RankRole`], its
+//! data-shard index, and its derived RNG seed. The driver then has
+//! exactly one orchestration job — "run `rank`'s role of the plan over a
+//! communicator" — instead of one hand-rolled launch path per topology
+//! (Theano-MPI's launcher/algorithm split; HyPar-Flow's one-call API).
+//!
+//! Invariants (property-tested in `tests/callbacks_e2e.rs`):
+//! - rank 0 is always the *observer*: the role that owns validation,
+//!   callbacks, and the returned `History` (Master, or ring rank 0);
+//! - roles partition the world: every rank has exactly one role;
+//! - shard indices of the gradient-computing ranks are a permutation of
+//!   `0..n_shards()` (each shard trained exactly once);
+//! - the plan is transport-independent: inproc and TCP deployments of
+//!   the same config get the identical plan.
+
+use crate::coordinator::algo::Mode;
+use crate::coordinator::driver::TrainConfig;
+use crate::coordinator::hierarchy::{HierarchySpec, Role};
+use crate::mpi::Rank;
+
+/// What one rank does in the world.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankRole {
+    /// Parameter-server master: flat Downpour/EASGD master, or the
+    /// super-master of a two-level hierarchy. Owns the weights,
+    /// validation, and callbacks.
+    Master,
+    /// Mid-tier master serving group `group` (hierarchy only).
+    GroupMaster { group: usize },
+    /// Gradient-computing worker reporting to `master`, training data
+    /// shard `shard`.
+    Worker { master: Rank, shard: usize },
+    /// One peer of the masterless all-reduce ring, training data shard
+    /// `shard`. Rank 0's ring peer doubles as the observer.
+    RingRank { shard: usize },
+}
+
+/// Static description of a training world: size, per-rank roles, shard
+/// assignment, and seed derivation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorldPlan {
+    ring: bool,
+    hierarchy: Option<HierarchySpec>,
+    n_shards: usize,
+    seed: u64,
+}
+
+impl WorldPlan {
+    /// Plan the world for a [`TrainConfig`]. Fails on contradictory
+    /// configurations (the same checks `JobConfig` applies at parse
+    /// time, so programmatic callers get them too).
+    pub fn new(cfg: &TrainConfig) -> Result<WorldPlan, String> {
+        Self::from_parts(&cfg.algo.mode, cfg.hierarchy, cfg.n_workers,
+                         cfg.seed)
+    }
+
+    /// Plan from raw parts (used by config parsing before a full
+    /// `TrainConfig` exists).
+    pub fn from_parts(mode: &Mode, hierarchy: Option<HierarchySpec>,
+                      n_workers: usize, seed: u64)
+        -> Result<WorldPlan, String> {
+        let ring = matches!(mode, Mode::AllReduce);
+        if ring && hierarchy.is_some() {
+            return Err("allreduce mode is flat by construction; drop \
+                        the hierarchy spec"
+                .into());
+        }
+        if let Some(h) = &hierarchy {
+            if h.n_groups == 0 || h.workers_per_group == 0 {
+                return Err(format!(
+                    "hierarchy needs at least one group and one worker \
+                     per group (got {} x {})",
+                    h.n_groups, h.workers_per_group));
+            }
+            if !matches!(mode, Mode::Downpour { .. }) {
+                return Err("hierarchical topology requires Downpour \
+                            mode"
+                    .into());
+            }
+        }
+        let n_shards = match &hierarchy {
+            Some(h) => h.n_groups * h.workers_per_group,
+            None => n_workers,
+        };
+        if n_shards == 0 {
+            return Err("need at least one worker".into());
+        }
+        Ok(WorldPlan { ring, hierarchy, n_shards, seed })
+    }
+
+    /// Total ranks in the world.
+    pub fn world_size(&self) -> usize {
+        if self.ring {
+            self.n_shards // masterless: the world IS the worker set
+        } else {
+            match &self.hierarchy {
+                Some(h) => h.world_size(),
+                None => self.n_shards + 1,
+            }
+        }
+    }
+
+    /// Number of data shards == number of gradient-computing ranks.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The rank that owns validation/callbacks and returns the
+    /// `History`: always rank 0 (Master, or the ring's rank 0).
+    pub fn observer(&self) -> Rank {
+        0
+    }
+
+    pub fn is_hierarchical(&self) -> bool {
+        self.hierarchy.is_some()
+    }
+
+    /// Masterless all-reduce world (lockstep collectives)?
+    pub fn is_ring(&self) -> bool {
+        self.ring
+    }
+
+    pub fn hierarchy(&self) -> Option<&HierarchySpec> {
+        self.hierarchy.as_ref()
+    }
+
+    /// Which role does `rank` play?
+    pub fn role_of(&self, rank: Rank) -> RankRole {
+        debug_assert!(rank < self.world_size(),
+                      "rank {rank} outside world of {}",
+                      self.world_size());
+        if self.ring {
+            return RankRole::RingRank { shard: rank };
+        }
+        match &self.hierarchy {
+            None => {
+                if rank == 0 {
+                    RankRole::Master
+                } else {
+                    RankRole::Worker { master: 0, shard: rank - 1 }
+                }
+            }
+            Some(spec) => match spec.role_of(rank) {
+                Role::SuperMaster => RankRole::Master,
+                Role::GroupMaster { group } => {
+                    RankRole::GroupMaster { group }
+                }
+                Role::Worker { group, master } => RankRole::Worker {
+                    master,
+                    // contiguous shard index: group-major, then position
+                    // within the group's rank block
+                    shard: group * spec.workers_per_group
+                        + (rank - master - 1),
+                },
+            },
+        }
+    }
+
+    /// Child ranks the (super-)master serves: group masters under a
+    /// hierarchy, otherwise every worker.
+    pub fn master_children(&self) -> Vec<Rank> {
+        assert!(!self.ring, "ring worlds have no master");
+        match &self.hierarchy {
+            Some(spec) => spec.group_masters(),
+            None => (1..=self.n_shards).collect(),
+        }
+    }
+
+    /// Derived per-rank RNG seed. Gradient-computing ranks fork by shard
+    /// (so the same shard sees the same batch order in-process and over
+    /// TCP); master ranks use the base seed (weight init).
+    pub fn seed_of(&self, rank: Rank) -> u64 {
+        match self.role_of(rank) {
+            RankRole::Worker { shard, .. }
+            | RankRole::RingRank { shard } => {
+                self.seed ^ (shard as u64 + 1).wrapping_mul(0x9E37)
+            }
+            RankRole::Master | RankRole::GroupMaster { .. } => self.seed,
+        }
+    }
+
+    /// Log-line tag for a rank (matches the historical tags).
+    pub fn rank_tag(&self, rank: Rank) -> String {
+        match self.role_of(rank) {
+            RankRole::Master => {
+                if self.hierarchy.is_some() {
+                    "super-master".into()
+                } else {
+                    "master".into()
+                }
+            }
+            RankRole::GroupMaster { group } => format!("gmaster-{group}"),
+            RankRole::Worker { .. } => format!("worker-{rank}"),
+            RankRole::RingRank { .. } => format!("rank-{rank}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::algo::Algo;
+    use crate::coordinator::driver::Transport;
+
+    fn plan(mode: Mode, hierarchy: Option<HierarchySpec>, n: usize)
+        -> WorldPlan {
+        WorldPlan::from_parts(&mode, hierarchy, n, 2017).unwrap()
+    }
+
+    #[test]
+    fn flat_plan_layout() {
+        let p = plan(Mode::Downpour { sync: false }, None, 4);
+        assert_eq!(p.world_size(), 5);
+        assert_eq!(p.n_shards(), 4);
+        assert_eq!(p.role_of(0), RankRole::Master);
+        assert_eq!(p.role_of(3),
+                   RankRole::Worker { master: 0, shard: 2 });
+        assert_eq!(p.master_children(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_plan_is_masterless() {
+        let p = plan(Mode::AllReduce, None, 4);
+        assert_eq!(p.world_size(), 4);
+        for r in 0..4 {
+            assert_eq!(p.role_of(r), RankRole::RingRank { shard: r });
+        }
+        assert_eq!(p.rank_tag(2), "rank-2");
+    }
+
+    #[test]
+    fn hierarchical_plan_matches_spec() {
+        let spec = HierarchySpec { n_groups: 2, workers_per_group: 3,
+                                   sync_every: 5 };
+        let p = plan(Mode::Downpour { sync: false }, Some(spec), 0);
+        assert_eq!(p.world_size(), 9);
+        assert_eq!(p.n_shards(), 6);
+        assert_eq!(p.role_of(0), RankRole::Master);
+        assert_eq!(p.role_of(1), RankRole::GroupMaster { group: 0 });
+        assert_eq!(p.role_of(2),
+                   RankRole::Worker { master: 1, shard: 0 });
+        assert_eq!(p.role_of(4),
+                   RankRole::Worker { master: 1, shard: 2 });
+        assert_eq!(p.role_of(5), RankRole::GroupMaster { group: 1 });
+        assert_eq!(p.role_of(8),
+                   RankRole::Worker { master: 5, shard: 5 });
+        assert_eq!(p.master_children(), vec![1, 5]);
+        assert_eq!(p.rank_tag(0), "super-master");
+        assert_eq!(p.rank_tag(1), "gmaster-0");
+    }
+
+    #[test]
+    fn allreduce_with_hierarchy_rejected() {
+        let spec = HierarchySpec { n_groups: 2, workers_per_group: 2,
+                                   sync_every: 5 };
+        assert!(WorldPlan::from_parts(&Mode::AllReduce, Some(spec), 4, 0)
+            .is_err());
+    }
+
+    #[test]
+    fn empty_worlds_rejected() {
+        assert!(WorldPlan::from_parts(&Mode::AllReduce, None, 0, 0)
+            .is_err());
+        assert!(WorldPlan::from_parts(
+            &Mode::Downpour { sync: false },
+            Some(HierarchySpec { n_groups: 0, workers_per_group: 2,
+                                 sync_every: 1 }),
+            0, 0)
+            .is_err());
+    }
+
+    #[test]
+    fn plan_is_transport_independent() {
+        let mut cfg = TrainConfig::new("mlp", 10, 3);
+        cfg.algo = Algo::allreduce();
+        let inproc = WorldPlan::new(&cfg).unwrap();
+        cfg.transport = Transport::Tcp { base_port: 47555 };
+        let tcp = WorldPlan::new(&cfg).unwrap();
+        assert_eq!(inproc, tcp);
+    }
+
+    #[test]
+    fn seeds_match_historical_derivation() {
+        let p = plan(Mode::Downpour { sync: false }, None, 2);
+        assert_eq!(p.seed_of(0), 2017);
+        assert_eq!(p.seed_of(1), 2017 ^ 0x9E37u64);
+        assert_eq!(p.seed_of(2), 2017 ^ 2u64.wrapping_mul(0x9E37));
+    }
+}

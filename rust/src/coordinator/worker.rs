@@ -6,13 +6,16 @@
 //! every rank trains, the world averages gradients with a chunked ring
 //! all-reduce, and each rank applies an identical replicated optimizer
 //! step — so all ranks hold bitwise-identical weights at every round.
+//! Rank 0 doubles as the *observer* (validation + callbacks); an early
+//! stop piggybacks as one extra element on the next collective, so every
+//! rank breaks in lockstep with identical weights.
 
 use std::time::Instant;
 
 use crate::coordinator::algo::{Algo, Mode};
-use crate::coordinator::validation::{run_validation, ValidationSchedule};
+use crate::coordinator::callbacks::{LrScheduleSpec, Observer};
 use crate::data::DataSet;
-use crate::metrics::{History, Stopwatch, ValRecord, WorkerReport};
+use crate::metrics::{History, Stopwatch, WorkerReport};
 use crate::mpi::collective::{Collective, ReduceOp};
 use crate::mpi::{Comm, Payload, Rank, Tag, WorkerStats};
 use crate::runtime::ModelExecutables;
@@ -95,7 +98,21 @@ impl<'a> Worker<'a> {
     /// Run the configured number of epochs; returns the final report.
     pub fn run(mut self) -> Result<WorkerReport, WorkerError> {
         let mut params = ParamSet::zeros(&self.exes.meta.params);
-        let step0 = self.handshake(&mut params)?;
+        let step0 = match self.handshake(&mut params) {
+            Ok(step0) => step0,
+            Err(WorkerError::EarlyExit) => {
+                // an early-stopping master may wind the world down
+                // before we ever trained: report zero work and leave
+                // cleanly so the master's Exit count completes
+                let report = WorkerReport {
+                    rank: self.comm.rank(),
+                    ..Default::default()
+                };
+                self.finish(&report)?;
+                return Ok(report);
+            }
+            Err(e) => return Err(e),
+        };
         match self.algo.mode.clone() {
             Mode::Downpour { .. } => self.run_downpour(params, step0),
             Mode::Easgd { tau, alpha, worker_optimizer } => {
@@ -288,30 +305,38 @@ pub struct RingOutcome {
 
 /// One rank of the masterless `Mode::AllReduce` world (every rank runs
 /// this — there is no master). Per round: local gradient, ring
-/// all-reduce to average gradients (the batch loss piggybacks as one
-/// extra element, so a round costs exactly one collective), then an
-/// identical replicated optimizer step. Rank 0 additionally runs the
-/// validation schedule and owns the returned [`History`].
+/// all-reduce to average gradients (the batch loss and the stop flag
+/// piggyback as two extra elements, so a round costs exactly one
+/// collective), then an identical replicated optimizer step. Rank 0
+/// additionally drives the [`Observer`] (validation schedule +
+/// callbacks) and owns the returned [`History`]; when a callback
+/// requests a stop, rank 0 raises the flag and every rank abandons the
+/// flagged round before applying its update — lockstep, so weights stay
+/// bitwise-identical.
 pub struct RingWorker<'a> {
     comm: &'a Comm,
     algo: &'a Algo,
     exes: &'a ModelExecutables,
     data: &'a DataSet,
     rng: Rng,
-    /// Rank 0 only: validation executables + held-out set.
-    eval: Option<(&'a ModelExecutables, &'a DataSet)>,
+    /// Replicated LR schedule: a pure function of the update count,
+    /// applied identically on every rank (callbacks only run on rank 0,
+    /// so a stateful master-side schedule would diverge the replicas).
+    lr: Option<LrScheduleSpec>,
 }
 
 impl<'a> RingWorker<'a> {
     pub fn new(comm: &'a Comm, algo: &'a Algo,
                exes: &'a ModelExecutables, data: &'a DataSet, seed: u64,
-               eval: Option<(&'a ModelExecutables, &'a DataSet)>) -> Self {
-        Self { comm, algo, exes, data, rng: Rng::new(seed), eval }
+               lr: Option<LrScheduleSpec>) -> Self {
+        Self { comm, algo, exes, data, rng: Rng::new(seed), lr }
     }
 
     /// Train to completion. `init` is consumed on rank 0 and broadcast
-    /// to the world; other ranks pass `None`.
-    pub fn run(mut self, init: Option<ParamSet>)
+    /// to the world; other ranks pass `None`. `observer` is consulted
+    /// on rank 0 only (pass `Observer::disabled()` elsewhere).
+    pub fn run(mut self, init: Option<ParamSet>,
+               observer: &mut Observer<'_>)
         -> Result<RingOutcome, WorkerError> {
         let n = self.comm.size();
         let rank = self.comm.rank();
@@ -348,15 +373,7 @@ impl<'a> RingWorker<'a> {
 
         let n_params = params.num_params();
         let mut opt = self.algo.build_master_optimizer(n_params);
-        let mut lr_schedule = if self.algo.lr_decay > 0.0
-            && self.algo.lr_decay_every > 0 {
-            Some(crate::optim::StepDecay::new(self.algo.lr_decay,
-                                              self.algo.lr_decay_every))
-        } else {
-            None
-        };
-        let mut schedule =
-            ValidationSchedule::new(self.algo.validate_every);
+        let lr_spec = self.lr;
         let mut history = History::default();
         let mut grad_timer = Stopwatch::new();
         let mut comm_timer = Stopwatch::new();
@@ -365,10 +382,14 @@ impl<'a> RingWorker<'a> {
         let mut last_loss = 0.0f32;
         let inv_n = 1.0 / n as f32;
         let mut epochs_done = 0u32;
+        // Early-stop lockstep: rank 0 raises the flag after its
+        // callbacks request a stop; the flagged round is abandoned by
+        // every rank before the update, keeping weights identical.
+        let mut stop_flag = 0.0f32;
+        let mut stopped = false;
 
         let data = self.data;
         let exes = self.exes;
-        let eval = self.eval;
         let algo = self.algo;
 
         for epoch in 0..algo.epochs {
@@ -376,7 +397,8 @@ impl<'a> RingWorker<'a> {
             let mut done_rounds = 0u64;
             let mut failure: Option<WorkerError> = None;
             data.for_each_batch(batch, &mut erng, |x, y| {
-                if failure.is_some() || done_rounds >= rounds {
+                if failure.is_some() || stopped
+                    || done_rounds >= rounds {
                     return;
                 }
                 let out = match grad_timer
@@ -388,23 +410,31 @@ impl<'a> RingWorker<'a> {
                     }
                 };
                 last_loss = out.loss;
-                // average gradients world-wide; the local loss rides
-                // along as one extra element (grad_step allocates the
-                // buffer with one spare slot, so this push never
-                // reallocates the gradient on the hot path)
+                // average gradients world-wide; the local loss and the
+                // stop flag ride along as two extra elements (grad_step
+                // allocates the buffer with spare slots, so these
+                // pushes never reallocate the gradient on the hot path)
                 let mut reduced = out.grads;
                 reduced.push(out.loss);
+                reduced.push(stop_flag);
                 if let Err(e) = comm_timer
                     .time(|| col.allreduce(&mut reduced, ReduceOp::Sum)) {
                     failure = Some(e.into());
                     return;
                 }
-                for v in reduced.iter_mut() {
+                if reduced[n_params + 1] > 0.0 {
+                    // someone (rank 0) requested a stop before this
+                    // round: abandon it pre-update on every rank
+                    stopped = true;
+                    return;
+                }
+                for v in reduced.iter_mut().take(n_params + 1) {
                     *v *= inv_n;
                 }
                 let mean_loss = reduced[n_params];
-                if let Some(sched) = lr_schedule.as_mut() {
-                    opt.set_lr_scale(sched.tick());
+                if let Some(spec) = lr_spec {
+                    opt.set_lr_scale(
+                        spec.scale_for_update(update_count + 1));
                 }
                 update_timer.start();
                 opt.update(params.flat_mut(), &reduced[..n_params]);
@@ -412,32 +442,19 @@ impl<'a> RingWorker<'a> {
                 update_count += 1;
                 done_rounds += 1;
                 if rank == 0 {
-                    if update_count % 16 == 0 || update_count == 1 {
-                        history.train_losses.push((update_count,
-                                                   mean_loss));
-                    }
-                    if schedule.due(update_count) {
-                        if let Some((vexes, vset)) = eval {
-                            match run_validation(vexes, &params, vset,
-                                                 algo.max_val_batches) {
-                                Ok((loss, acc)) => {
-                                    history.validations.push(ValRecord {
-                                        t_s: started.elapsed()
-                                            .as_secs_f64(),
-                                        update: update_count,
-                                        val_loss: loss,
-                                        val_acc: acc,
-                                    });
-                                }
-                                Err(e) => log::error!(
-                                    "validation failed: {e}"),
-                            }
-                        }
+                    observer.after_update(
+                        update_count, mean_loss, &params,
+                        started.elapsed().as_secs_f64(), &mut history);
+                    if observer.should_stop() {
+                        stop_flag = 1.0;
                     }
                 }
             });
             if let Some(e) = failure {
                 return Err(e);
+            }
+            if stopped {
+                break;
             }
             epochs_done = epoch + 1;
         }
@@ -491,22 +508,13 @@ impl<'a> RingWorker<'a> {
                 });
             }
         }
-        // final validation so every run ends with a measurement
-        if let Some((vexes, vset)) = eval {
-            match run_validation(vexes, &params, vset,
-                                 algo.max_val_batches) {
-                Ok((loss, acc)) => history.validations.push(ValRecord {
-                    t_s: started.elapsed().as_secs_f64(),
-                    update: update_count,
-                    val_loss: loss,
-                    val_acc: acc,
-                }),
-                Err(e) => log::error!("final validation failed: {e}"),
-            }
-        }
         history.master_updates = update_count;
         history.master_update_time_s = update_timer.total_s();
         history.wallclock_s = started.elapsed().as_secs_f64();
+        // final validation (every run ends with a measurement) + the
+        // callbacks' on_train_end
+        observer.finish(update_count, &params,
+                        started.elapsed().as_secs_f64(), &mut history);
         Ok(RingOutcome { report, weights: params, history })
     }
 }

@@ -15,6 +15,32 @@
 //! checkout trains with zero setup; the `pjrt` cargo feature restores
 //! the artifact path.
 //!
+//! # Front door
+//!
+//! The documented user API is the fluent [`coordinator::Experiment`]
+//! facade — model, data, training procedure, and Keras-style callbacks
+//! in one chain:
+//!
+//! ```no_run
+//! use mpi_learn::coordinator::Experiment;
+//! let session = mpi_learn::runtime::Session::open_default()?;
+//! let result = Experiment::new("lstm")
+//!     .batch(100)
+//!     .workers(8)
+//!     .allreduce()
+//!     .early_stopping(3)
+//!     .checkpoint("runs/ckpt")
+//!     .run(&session)?;
+//! # Ok::<(), Box<dyn std::error::Error>>(())
+//! ```
+//!
+//! Internally a [`coordinator::WorldPlan`] maps the configuration to
+//! per-rank roles, and one `run_role` path executes them — identically
+//! for in-process thread worlds (`train`) and `mpirun`-style TCP
+//! deployments (`run_rank`). Training conveniences (checkpointing,
+//! early stopping, LR schedules, metric streaming) are
+//! [`coordinator::Callback`]s observed by the master / ring rank 0.
+//!
 //! # Training modes
 //!
 //! - **Downpour SGD** (`Mode::Downpour`, paper default): workers stream
@@ -46,9 +72,10 @@
 //!   even file division.
 //! - [`optim`] — master-side optimizers (momentum is the paper's
 //!   stale-gradient mitigation); replicated per-rank in all-reduce mode.
-//! - [`coordinator`] — the paper's system: master/worker processes,
-//!   Downpour + EASGD + masterless all-reduce, sync/async, hierarchical
-//!   masters, validation.
+//! - [`coordinator`] — the paper's system: the `Experiment` facade,
+//!   `WorldPlan` topology, the `Callback` layer, master/worker
+//!   processes, Downpour + EASGD + masterless all-reduce, sync/async,
+//!   hierarchical masters, validation.
 //! - [`simulator`] — discrete-event protocol simulator for cluster-scale
 //!   sweeps (Figs 3/4, Table I) with both parameter-server and ring
 //!   cost models.

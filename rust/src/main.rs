@@ -2,9 +2,11 @@
 //!
 //! Subcommands:
 //!   gen-data   generate the synthetic HEP benchmark dataset shards
-//!   train      run a distributed training session (Downpour / EASGD)
+//!   train      run a distributed training session (`train --help`)
 //!   simulate   run the cluster-scale protocol simulator
 //!   info       list AOT artifacts and their interfaces
+//!   rank       run ONE rank of a TCP-mesh job (SPMD deployment)
+//!   launch     spawn one `rank` process per rank and wait
 //!
 //! Examples:
 //!   mpi-learn gen-data --dir data/hep --files 16 --samples 2000
@@ -14,14 +16,17 @@
 //!       --data data/hep
 //!   mpi-learn train --mode allreduce --model mlp --workers 8 \
 //!       --epochs 3                      # masterless ring all-reduce
+//!   mpi-learn train --model mlp --workers 4 --validate-every 20 \
+//!       --early-stopping 3 --checkpoint runs/ckpt   # callbacks
 //!   mpi-learn simulate --workers 1,2,4,8,16,30,45,60 --preset cluster
 //!   mpi-learn simulate --algo allreduce --preset cluster
 //!   mpi-learn info
 
 use std::path::PathBuf;
 
-use mpi_learn::coordinator::{self, Algo, Data, HierarchySpec, Mode,
-                             ModelBuilder, TrainConfig, Transport};
+use mpi_learn::coordinator::{self, Algo, CallbackSpec, Data,
+                             HierarchySpec, Mode, ModelBuilder,
+                             TrainConfig, Transport};
 use mpi_learn::data::{generate_dataset, list_train_files,
                       GeneratorConfig};
 use mpi_learn::optim::OptimizerConfig;
@@ -42,7 +47,7 @@ fn main() {
         _ => {
             eprintln!("usage: mpi-learn \
                        <gen-data|train|simulate|info|rank|launch> \
-                       [flags]  (see --help in source header)");
+                       [flags]  (try: mpi-learn train --help)");
             2
         }
     };
@@ -172,6 +177,130 @@ fn fail(e: impl std::fmt::Display) -> i32 {
     1
 }
 
+/// One row of the `train` flag table — the single source the `--help`
+/// usage text is generated from.
+struct Flag {
+    name: &'static str,
+    /// Value placeholder; empty for boolean flags.
+    value: &'static str,
+    default: &'static str,
+    help: &'static str,
+}
+
+const TRAIN_FLAGS: &[Flag] = &[
+    Flag { name: "config", value: "<job.json>", default: "",
+           help: "load the whole job from a JSON config file" },
+    Flag { name: "model", value: "<family>", default: "lstm",
+           help: "model family: mlp | lstm | transformer" },
+    Flag { name: "batch", value: "<n>", default: "100",
+           help: "batch size (selects the compiled variant)" },
+    Flag { name: "workers", value: "<n>", default: "4",
+           help: "worker count (== ranks in allreduce mode)" },
+    Flag { name: "epochs", value: "<n>", default: "10",
+           help: "training epochs" },
+    Flag { name: "mode", value: "<m>", default: "downpour",
+           help: "algorithm: downpour | easgd | allreduce" },
+    Flag { name: "sync", value: "", default: "",
+           help: "downpour: synchronous barrier rounds" },
+    Flag { name: "tau", value: "<n>", default: "10",
+           help: "easgd: exchange period in batches" },
+    Flag { name: "alpha", value: "<f>", default: "0.5",
+           help: "easgd: elastic force coefficient" },
+    Flag { name: "optimizer", value: "<o>", default: "momentum",
+           help: "sgd | momentum | adam | rmsprop | adadelta" },
+    Flag { name: "lr", value: "<f>", default: "0.05",
+           help: "base learning rate" },
+    Flag { name: "momentum", value: "<f>", default: "0.9",
+           help: "momentum coefficient" },
+    Flag { name: "lr-decay", value: "<f>", default: "0",
+           help: "LR step decay factor (0 = off)" },
+    Flag { name: "lr-decay-every", value: "<n>", default: "0",
+           help: "apply LR decay every N master updates" },
+    Flag { name: "validate-every", value: "<n>", default: "0",
+           help: "validate every N master updates (0 = end only)" },
+    Flag { name: "max-val-batches", value: "<n>", default: "0",
+           help: "cap validation batches per sweep (0 = all)" },
+    Flag { name: "early-stopping", value: "<patience>", default: "0",
+           help: "stop after N non-improving validations (0 = off)" },
+    Flag { name: "min-delta", value: "<f>", default: "0",
+           help: "early stopping: minimum val-loss improvement" },
+    Flag { name: "checkpoint", value: "<dir>", default: "",
+           help: "write best-val checkpoint to <dir>/best.mplw" },
+    Flag { name: "checkpoint-every", value: "<n>", default: "0",
+           help: "also write checkpoint-{update}.mplw every N updates" },
+    Flag { name: "jsonl", value: "<path>", default: "",
+           help: "stream round/validation metrics as JSON lines" },
+    Flag { name: "data", value: "<dir>", default: "",
+           help: "train_*.mpil shard dir (default: synthetic data)" },
+    Flag { name: "groups", value: "<n>", default: "0",
+           help: "two-level hierarchy with N group masters (0 = flat)" },
+    Flag { name: "sync-every", value: "<n>", default: "10",
+           help: "hierarchy: group master upward sync period" },
+    Flag { name: "tcp", value: "", default: "",
+           help: "carry the protocol over a localhost TCP mesh" },
+    Flag { name: "seed", value: "<n>", default: "2017",
+           help: "RNG seed (init + batch order)" },
+    Flag { name: "direct", value: "", default: "",
+           help: "no-framework single-process baseline (paper \u{a7}V)" },
+    Flag { name: "artifacts", value: "<dir>", default: "",
+           help: "AOT artifact dir (default: native backend)" },
+    Flag { name: "help", value: "", default: "",
+           help: "print this usage text" },
+];
+
+fn train_usage() -> String {
+    let mut out = String::from(
+        "usage: mpi-learn train [--config job.json | flags]\n\nflags:\n");
+    for f in TRAIN_FLAGS {
+        let mut left = format!("--{}", f.name);
+        if !f.value.is_empty() {
+            left.push(' ');
+            left.push_str(f.value);
+        }
+        out.push_str(&format!("  {left:<28} {}", f.help));
+        if !f.default.is_empty() {
+            out.push_str(&format!(" [default: {}]", f.default));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Callback flags shared by the flag-driven `train` path.
+fn parse_callbacks(args: &Args) -> Result<Vec<CallbackSpec>, String> {
+    let mut specs = Vec::new();
+    let patience = args.usize("early-stopping", 0)
+        .map_err(|e| e.to_string())?;
+    let min_delta = args.f64("min-delta", 0.0)
+        .map_err(|e| e.to_string())? as f32;
+    if patience > 0 {
+        specs.push(CallbackSpec::EarlyStopping {
+            patience: patience as u32,
+            min_delta,
+        });
+    }
+    let every = args.usize("checkpoint-every", 0)
+        .map_err(|e| e.to_string())? as u64;
+    match args.str_opt("checkpoint") {
+        Some(dir) => specs.push(CallbackSpec::ModelCheckpoint {
+            dir: PathBuf::from(dir),
+            every,
+            best_only: every == 0,
+        }),
+        None if every > 0 => {
+            return Err("--checkpoint-every needs --checkpoint <dir>"
+                .into())
+        }
+        None => {}
+    }
+    if let Some(path) = args.str_opt("jsonl") {
+        specs.push(CallbackSpec::JsonlLogger {
+            path: PathBuf::from(path),
+        });
+    }
+    Ok(specs)
+}
+
 fn cmd_gen_data(args: &Args) -> i32 {
     let dir = PathBuf::from(args.str("dir", "data/hep"));
     let files = args.usize("files", 16).unwrap_or(16);
@@ -209,6 +338,10 @@ fn parse_algo(args: &Args) -> Result<Algo, String> {
     let lr = args.f64("lr", 0.05).map_err(|e| e.to_string())? as f32;
     let momentum = args.f64("momentum", 0.9).map_err(|e| e.to_string())?
         as f32;
+    algo.lr_decay = args.f64("lr-decay", 0.0)
+        .map_err(|e| e.to_string())? as f32;
+    algo.lr_decay_every = args.usize("lr-decay-every", 0)
+        .map_err(|e| e.to_string())? as u64;
     algo.optimizer = match args.str("optimizer", "momentum").as_str() {
         "sgd" => OptimizerConfig::Sgd { lr },
         "momentum" => OptimizerConfig::Momentum { lr, momentum,
@@ -234,6 +367,10 @@ fn parse_algo(args: &Args) -> Result<Algo, String> {
 }
 
 fn cmd_train(args: &Args) -> i32 {
+    if args.bool("help") {
+        print!("{}", train_usage());
+        return 0;
+    }
     // config-file driven path: `train --config job.json`
     if let Some(config) = args.str_opt("config") {
         let direct = args.bool("direct");
@@ -268,6 +405,10 @@ fn cmd_train(args: &Args) -> i32 {
     let workers = args.usize("workers", 4).unwrap_or(4);
     let algo = match parse_algo(args) {
         Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    let callbacks = match parse_callbacks(args) {
+        Ok(c) => c,
         Err(e) => return fail(e),
     };
     let data_dir = args.str_opt("data");
@@ -308,6 +449,7 @@ fn cmd_train(args: &Args) -> i32 {
         transport: if tcp { Transport::Tcp { base_port: 47000 } }
                    else { Transport::Inproc },
         hierarchy: None,
+        callbacks,
     };
     if groups > 0 {
         cfg.hierarchy = Some(HierarchySpec {
@@ -415,5 +557,54 @@ fn cmd_info(args: &Args) -> i32 {
             0
         }
         Err(e) => fail(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite (ISSUE 2): the `train --help` usage text is generated
+    /// from the one flag table — every row appears, no drift possible.
+    #[test]
+    fn usage_lists_every_train_flag() {
+        let usage = train_usage();
+        for f in TRAIN_FLAGS {
+            assert!(usage.contains(&format!("--{}", f.name)),
+                    "usage is missing --{}", f.name);
+            if !f.default.is_empty() {
+                assert!(usage.contains(&format!("[default: {}]",
+                                                f.default)),
+                        "usage is missing the default of --{}", f.name);
+            }
+        }
+        assert!(usage.starts_with("usage: mpi-learn train"));
+    }
+
+    #[test]
+    fn callback_flags_build_specs() {
+        let args = Args::parse(
+            ["train", "--early-stopping", "3", "--checkpoint", "/tmp/c",
+             "--checkpoint-every", "50", "--jsonl", "/tmp/m.jsonl"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect());
+        let specs = parse_callbacks(&args).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(matches!(specs[0], CallbackSpec::EarlyStopping {
+            patience: 3, .. }));
+        assert!(matches!(specs[1], CallbackSpec::ModelCheckpoint {
+            every: 50, best_only: false, .. }));
+        assert!(matches!(specs[2], CallbackSpec::JsonlLogger { .. }));
+        // no callback flags -> no specs
+        let args = Args::parse(vec!["train".to_string()]);
+        assert!(parse_callbacks(&args).unwrap().is_empty());
+        // an orphan --checkpoint-every must error, not vanish
+        let args = Args::parse(
+            ["train", "--checkpoint-every", "10"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect());
+        assert!(parse_callbacks(&args).is_err());
     }
 }

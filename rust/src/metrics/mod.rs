@@ -53,6 +53,16 @@ impl History {
             .max_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
+    /// Lowest validation loss seen (what `EarlyStopping` and the
+    /// best-only `ModelCheckpoint` track). NaN records are skipped.
+    pub fn best_val_loss(&self) -> Option<f32> {
+        self.validations
+            .iter()
+            .map(|v| v.val_loss)
+            .filter(|l| l.is_finite())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
     pub fn total_samples(&self) -> u64 {
         self.workers.iter().map(|w| w.samples).sum()
     }

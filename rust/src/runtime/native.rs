@@ -106,11 +106,12 @@ fn sigmoid(v: f32) -> f32 {
     1.0 / (1.0 + (-v).exp())
 }
 
-/// Zeroed flat-gradient buffer with one spare capacity slot: the
-/// all-reduce trainer piggybacks the batch loss with a `push`, which
-/// must not reallocate (and memcpy) the whole gradient every round.
+/// Zeroed flat-gradient buffer with two spare capacity slots: the
+/// all-reduce trainer piggybacks the batch loss and the early-stop flag
+/// with `push`es, which must not reallocate (and memcpy) the whole
+/// gradient every round.
 pub(crate) fn grad_buffer(n: usize) -> Vec<f32> {
-    let mut buf = Vec::with_capacity(n + 1);
+    let mut buf = Vec::with_capacity(n + 2);
     buf.resize(n, 0.0);
     buf
 }

@@ -17,7 +17,9 @@ pub struct Args {
 pub enum CliError {
     MissingValue(String),
     BadValue(String, String, &'static str),
-    UnknownFlags(Vec<String>),
+    /// Unconsumed flags, each with the nearest known flag (edit
+    /// distance <= 2), if any.
+    UnknownFlags(Vec<(String, Option<String>)>),
 }
 
 impl std::fmt::Display for CliError {
@@ -30,10 +32,36 @@ impl std::fmt::Display for CliError {
                 write!(f, "flag --{flag}: cannot parse '{value}' as {ty}")
             }
             CliError::UnknownFlags(flags) => {
-                write!(f, "unknown flags: {flags:?} (did you misspell one?)")
+                for (i, (flag, suggestion)) in flags.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, "; ")?;
+                    }
+                    write!(f, "unknown flag --{flag}")?;
+                    if let Some(s) = suggestion {
+                        write!(f, " (did you mean --{s}?)")?;
+                    }
+                }
+                Ok(())
             }
         }
     }
+}
+
+/// Classic dynamic-programming edit distance (typo suggestions).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 impl std::error::Error for CliError {}
@@ -128,14 +156,23 @@ impl Args {
         }
     }
 
-    /// Call after all getters: errors if any flag was never consumed.
+    /// Call after all getters: errors if any flag was never consumed,
+    /// suggesting the nearest known (consumed) flag for each typo.
     pub fn finish(&self) -> Result<(), CliError> {
         let consumed = self.consumed.borrow();
-        let unknown: Vec<String> = self
+        let unknown: Vec<(String, Option<String>)> = self
             .flags
             .keys()
             .filter(|k| !consumed.contains(*k))
-            .cloned()
+            .map(|k| {
+                let suggestion = consumed
+                    .iter()
+                    .map(|known| (levenshtein(k, known), known))
+                    .min()
+                    .filter(|(d, _)| *d <= 2)
+                    .map(|(_, known)| known.clone());
+                (k.clone(), suggestion)
+            })
             .collect();
         if unknown.is_empty() {
             Ok(())
@@ -175,6 +212,33 @@ mod tests {
         let a = parse(&["train", "--worker", "4"]);
         let _ = a.usize("workers", 1);
         assert!(a.finish().is_err());
+    }
+
+    /// Satellite (ISSUE 2): a typo'd flag suggests the nearest known
+    /// flag in the error message.
+    #[test]
+    fn typo_suggests_nearest_flag() {
+        let a = parse(&["train", "--worekrs", "4"]);
+        let _ = a.usize("workers", 1);
+        let _ = a.usize("epochs", 1);
+        let err = a.finish().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--worekrs"), "{msg}");
+        assert!(msg.contains("did you mean --workers?"), "{msg}");
+        // a flag nothing resembles gets no suggestion
+        let a = parse(&["train", "--zzqqxy", "4"]);
+        let _ = a.usize("workers", 1);
+        let msg = a.finish().unwrap_err().to_string();
+        assert!(!msg.contains("did you mean"), "{msg}");
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("worker", "workers"), 1);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! on the native CPU backend — no artifacts needed, so unlike the PJRT
 //! integration suite these always run.
 
+use mpi_learn::coordinator::callbacks::Observer;
 use mpi_learn::coordinator::worker::RingWorker;
 use mpi_learn::coordinator::{train, Algo, Data, HierarchySpec, Mode,
                              ModelBuilder, TrainConfig, Transport};
@@ -25,6 +26,7 @@ fn allreduce_cfg(workers: usize, batch: usize, epochs: u32)
         seed: 11,
         transport: Transport::Inproc,
         hierarchy: None,
+        callbacks: Vec::new(),
     }
 }
 
@@ -91,7 +93,7 @@ fn allreduce_ranks_end_bitwise_identical() {
                 s.spawn(move || {
                     RingWorker::new(&comm, algo, &exes, ds,
                                     100 + rank as u64, None)
-                        .run(init)
+                        .run(init, &mut Observer::disabled())
                         .unwrap()
                 })
             })
@@ -147,7 +149,7 @@ fn allreduce_uneven_data_agrees_on_common_rounds() {
                 s.spawn(move || {
                     RingWorker::new(&comm, algo, &exes, ds,
                                     200 + rank as u64, None)
-                        .run(init)
+                        .run(init, &mut Observer::disabled())
                         .unwrap()
                 })
             })
@@ -213,6 +215,7 @@ fn downpour_still_trains_on_native_backend() {
         seed: 13,
         transport: Transport::Inproc,
         hierarchy: None,
+        callbacks: Vec::new(),
     };
     let result = train(&session, &cfg, &synthetic(200)).unwrap();
     assert_eq!(result.history.master_updates, 2 * 2 * 10);

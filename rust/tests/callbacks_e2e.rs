@@ -1,0 +1,279 @@
+//! End-to-end tests of the callback layer (ISSUE 2): EarlyStopping
+//! fires at the right round and every rank exits cleanly in every
+//! training mode; ModelCheckpoint's best-val checkpoint reloads
+//! bitwise-identically; `WorldPlan` invariants hold for random
+//! configurations. Runs on the native CPU backend — no artifacts.
+
+use mpi_learn::coordinator::{train, Algo, CallbackSpec, Data,
+                             Experiment, HierarchySpec, Mode, RankRole,
+                             TrainConfig, Transport, WorldPlan};
+use mpi_learn::data::GeneratorConfig;
+use mpi_learn::optim::OptimizerConfig;
+use mpi_learn::runtime::Session;
+use mpi_learn::tensor::ParamSet;
+use mpi_learn::util::prop::{check, gen, PropConfig};
+
+fn synthetic(samples_per_worker: usize) -> Data {
+    Data::Synthetic {
+        gen: GeneratorConfig { seed: 5, ..Default::default() },
+        samples_per_worker,
+        val_samples: 200,
+    }
+}
+
+fn cfg(mode: Mode, workers: usize) -> TrainConfig {
+    TrainConfig {
+        algo: Algo {
+            mode,
+            batch_size: 10,
+            epochs: 5,
+            validate_every: 5,
+            max_val_batches: 2,
+            ..Algo::default()
+        },
+        ..TrainConfig::new("mlp", 10, workers)
+    }
+}
+
+/// An infinite `min_delta` makes every validation a non-improvement,
+/// so with patience P the stop fires deterministically at validation
+/// number P — i.e. at master update `validate_every * P`.
+fn never_improves(patience: u32) -> CallbackSpec {
+    CallbackSpec::EarlyStopping { patience,
+                                  min_delta: f32::INFINITY }
+}
+
+/// EarlyStopping must stop at exactly `validate_every * patience`
+/// updates and wind every rank down cleanly (train returns Ok) in
+/// every training mode. Without the stop each of these runs would do
+/// hundreds of updates.
+#[test]
+fn early_stopping_fires_at_the_right_round_in_every_mode() {
+    let session = Session::native().unwrap();
+
+    let modes: Vec<(&str, Mode, usize)> = vec![
+        ("downpour-async", Mode::Downpour { sync: false }, 2),
+        ("downpour-sync", Mode::Downpour { sync: true }, 2),
+        ("easgd", Mode::Easgd {
+            tau: 2,
+            alpha: 0.5,
+            worker_optimizer: OptimizerConfig::Sgd { lr: 0.05 },
+        }, 2),
+        ("allreduce", Mode::AllReduce, 3),
+    ];
+    for (name, mode, workers) in modes {
+        let mut c = cfg(mode, workers);
+        c.callbacks.push(never_improves(2));
+        let r = train(&session, &c, &synthetic(400)).unwrap_or_else(
+            |e| panic!("{name}: {e}"));
+        assert_eq!(r.history.master_updates, 10,
+                   "{name}: stop must land at validate_every * \
+                    patience = 10 updates");
+    }
+
+    // hierarchical: the super-master validates per sync and orders the
+    // whole tree down through the group masters
+    let mut c = cfg(Mode::Downpour { sync: false }, 2);
+    c.hierarchy = Some(HierarchySpec {
+        n_groups: 2,
+        workers_per_group: 1,
+        sync_every: 2,
+    });
+    c.algo.validate_every = 1;
+    c.callbacks.push(never_improves(2));
+    let r = train(&session, &c, &synthetic(400)).unwrap();
+    assert_eq!(r.history.master_updates, 2,
+               "hierarchical: stop at the 2nd super-master update");
+
+    // direct baseline: the same observer drives the same stop
+    let mut c = cfg(Mode::Downpour { sync: false }, 1);
+    c.callbacks.push(never_improves(2));
+    let r = mpi_learn::coordinator::train_direct(&session, &c,
+                                                 &synthetic(400))
+        .unwrap();
+    assert_eq!(r.history.master_updates, 10);
+}
+
+/// A genuinely-improving run must NOT be stopped: training converges,
+/// so val loss keeps falling and the patience counter never fills.
+#[test]
+fn early_stopping_does_not_fire_while_improving() {
+    let session = Session::native().unwrap();
+    let mut c = cfg(Mode::AllReduce, 2);
+    c.algo.epochs = 2;
+    c.callbacks.push(CallbackSpec::EarlyStopping {
+        patience: 10,
+        min_delta: 0.0,
+    });
+    let r = train(&session, &c, &synthetic(200)).unwrap();
+    // 200 samples / batch 10 = 20 rounds per epoch, 2 epochs
+    assert_eq!(r.history.master_updates, 40, "no premature stop");
+}
+
+/// Acceptance (ISSUE 2): an Experiment-driven allreduce run with
+/// EarlyStopping + ModelCheckpoint produces a best-val checkpoint that
+/// reloads bitwise-identically.
+#[test]
+fn experiment_best_checkpoint_reloads_bitwise_in_allreduce() {
+    let dir = std::env::temp_dir().join("mpi_learn_e2e_best_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let session = Session::native().unwrap();
+    let result = Experiment::new("mlp")
+        .batch(20)
+        .workers(4)
+        .allreduce()
+        .epochs(2)
+        .synthetic(200, 200)
+        .max_val_batches(4)
+        .early_stopping(5) // attached, must not fire
+        .checkpoint(&dir)
+        .run(&session)
+        .unwrap();
+    // validate_every defaults to 0 -> the final validation is the only
+    // (and best) one, so best.mplw holds the final weights exactly
+    let best = ParamSet::load(&dir.join("best.mplw")).unwrap();
+    assert_eq!(best, result.weights,
+               "best checkpoint must reload bitwise-identically");
+    assert_eq!(result.history.master_updates, 2 * 10,
+               "early stopping must not have fired");
+}
+
+/// The JSONL logger streams from inside a distributed run.
+#[test]
+fn jsonl_logger_streams_from_training() {
+    let path = std::env::temp_dir()
+        .join("mpi_learn_e2e_jsonl/metrics.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let session = Session::native().unwrap();
+    let mut c = cfg(Mode::Downpour { sync: false }, 2);
+    c.algo.epochs = 1;
+    c.callbacks.push(CallbackSpec::JsonlLogger { path: path.clone() });
+    train(&session, &c, &synthetic(100)).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.lines().count() >= 3, "begin + rounds + end");
+    assert!(text.contains("\"event\":\"validation\""));
+    for line in text.lines() {
+        mpi_learn::util::json::Json::parse(line).unwrap();
+    }
+}
+
+/// WorldPlan invariants over random configurations: rank 0 is always
+/// the observer role, roles partition the world, shard indices are a
+/// permutation of 0..n_shards, per-shard seeds are distinct, and the
+/// plan is independent of the transport.
+#[test]
+fn prop_worldplan_invariants() {
+    check("worldplan", PropConfig { cases: 300, seed: 0x70B0 }, |rng| {
+        let mode = match rng.usize_below(4) {
+            0 => Mode::Downpour { sync: false },
+            1 => Mode::Downpour { sync: true },
+            2 => Mode::Easgd {
+                tau: 4,
+                alpha: 0.5,
+                worker_optimizer: OptimizerConfig::Sgd { lr: 0.05 },
+            },
+            _ => Mode::AllReduce,
+        };
+        let hierarchy = if matches!(mode, Mode::Downpour { .. })
+            && rng.uniform() < 0.5 {
+            Some(HierarchySpec {
+                n_groups: gen::usize_in(rng, 1, 4),
+                workers_per_group: gen::usize_in(rng, 1, 4),
+                sync_every: gen::usize_in(rng, 1, 10) as u64,
+            })
+        } else {
+            None
+        };
+        let workers = gen::usize_in(rng, 1, 12);
+        let seed = rng.next_u64();
+        let plan = WorldPlan::from_parts(&mode, hierarchy, workers,
+                                         seed)
+            .map_err(|e| format!("unexpected rejection: {e}"))?;
+
+        let size = plan.world_size();
+        let ring = matches!(mode, Mode::AllReduce);
+        let mut masters = 0usize;
+        let mut shards = Vec::new();
+        let mut shard_seeds = Vec::new();
+        for r in 0..size {
+            match plan.role_of(r) {
+                RankRole::Master => {
+                    masters += 1;
+                    if r != plan.observer() {
+                        return Err(format!("master at rank {r}"));
+                    }
+                }
+                RankRole::GroupMaster { .. } => {
+                    if hierarchy.is_none() {
+                        return Err("group master without \
+                                    hierarchy".into());
+                    }
+                }
+                RankRole::Worker { master, shard } => {
+                    shards.push(shard);
+                    shard_seeds.push(plan.seed_of(r));
+                    match plan.role_of(master) {
+                        RankRole::Master
+                        | RankRole::GroupMaster { .. } => {}
+                        other => {
+                            return Err(format!(
+                                "worker {r} reports to non-master \
+                                 {other:?}"))
+                        }
+                    }
+                }
+                RankRole::RingRank { shard } => {
+                    if !ring {
+                        return Err("ring rank outside allreduce".into());
+                    }
+                    shards.push(shard);
+                    shard_seeds.push(plan.seed_of(r));
+                }
+            }
+        }
+        if ring && masters != 0 {
+            return Err("allreduce world has a master".into());
+        }
+        if !ring && masters != 1 {
+            return Err(format!("{masters} masters"));
+        }
+        // shard indices: a permutation of 0..n_shards (contiguous,
+        // each trained exactly once)
+        shards.sort_unstable();
+        let want: Vec<usize> = (0..plan.n_shards()).collect();
+        if shards != want {
+            return Err(format!("shards not contiguous: {shards:?}"));
+        }
+        // per-shard seeds distinct
+        shard_seeds.sort_unstable();
+        shard_seeds.dedup();
+        if shard_seeds.len() != plan.n_shards() {
+            return Err("duplicate shard seeds".into());
+        }
+        // transport independence: the identical plan for inproc & TCP
+        let mut c = TrainConfig::new("mlp", 10, workers);
+        c.algo.mode = mode.clone();
+        c.hierarchy = hierarchy;
+        c.seed = seed;
+        c.transport = Transport::Inproc;
+        let p1 = WorldPlan::new(&c).map_err(|e| e)?;
+        c.transport = Transport::Tcp { base_port: 47999 };
+        let p2 = WorldPlan::new(&c).map_err(|e| e)?;
+        if p1 != p2 || p1 != plan {
+            return Err("plan depends on transport".into());
+        }
+        Ok(())
+    });
+}
+
+/// Early stopping over the TCP transport: the Exit propagation must
+/// behave identically on the socket mesh.
+#[test]
+fn early_stopping_over_tcp() {
+    let session = Session::native().unwrap();
+    let mut c = cfg(Mode::Downpour { sync: false }, 2);
+    c.transport = Transport::Tcp { base_port: 46240 };
+    c.callbacks.push(never_improves(2));
+    let r = train(&session, &c, &synthetic(400)).unwrap();
+    assert_eq!(r.history.master_updates, 10);
+}

@@ -62,6 +62,7 @@ fn tiny_cfg(workers: usize) -> TrainConfig {
         seed: 1,
         transport: Transport::Inproc,
         hierarchy: None,
+        callbacks: Vec::new(),
     }
 }
 
