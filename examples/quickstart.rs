@@ -8,10 +8,13 @@
 //!     cargo run --release --example quickstart -- --direct   # no framework
 //!     cargo run --release --example quickstart -- --allreduce \
 //!         --workers 4                       # masterless ring all-reduce
+//!     cargo run --release --example quickstart -- --allreduce \
+//!         --compression fp16                # compressed wire hops
 //!     cargo run --release --example quickstart -- --early-stopping 3 \
 //!         --checkpoint runs/quickstart      # callbacks
 
 use mpi_learn::coordinator::Experiment;
+use mpi_learn::mpi::Codec;
 use mpi_learn::util::cli::Args;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -22,6 +25,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let epochs = args.usize("epochs", 3)? as u32;
     let direct = args.bool("direct");
     let allreduce = args.bool("allreduce");
+    let compression = Codec::parse(&args.str("compression", "fp32"))?;
     let patience = args.usize("early-stopping", 0)?;
     let checkpoint = args.str_opt("checkpoint");
     args.finish()?;
@@ -47,6 +51,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         exp = exp.direct();
     } else {
         println!("running async Downpour with {workers} workers...");
+    }
+    if !compression.is_identity() {
+        println!("compressing gradient exchange with {compression}...");
+        exp = exp.compression(compression);
     }
     if patience > 0 {
         exp = exp.early_stopping(patience as u32);

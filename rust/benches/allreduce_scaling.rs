@@ -1,25 +1,34 @@
 //! Ring all-reduce scaling: measured collective latency on the inproc
-//! transport, plus simulated Fig-3/4-style speedup curves comparing the
-//! parameter-server protocol against the masterless ring — the
-//! motivation for `Mode::AllReduce` (the PS master saturates; the ring
-//! does not).
+//! transport (per wire codec), plus simulated Fig-3/4-style speedup
+//! curves comparing the parameter-server protocol against the
+//! masterless ring — raw and compressed. The PS master saturates; the
+//! ring does not; compression then cuts the ring's bandwidth term.
 //!
 //!     cargo bench --bench allreduce_scaling
+//!     cargo bench --bench allreduce_scaling -- --ci --json out.json
+
+use std::collections::BTreeMap;
 
 use mpi_learn::mpi;
 use mpi_learn::mpi::collective::{Collective, ReduceOp};
+use mpi_learn::mpi::Codec;
 use mpi_learn::simulator::{simulate_allreduce, simulate_async,
                            CostModel, SimConfig};
-use mpi_learn::util::bench::{fmt_secs, print_table, write_csv};
+use mpi_learn::util::bench::{fmt_secs, print_table, write_csv,
+                             write_json};
+use mpi_learn::util::cli::Args;
+use mpi_learn::util::json::Json;
 
 /// Wall time per all-reduce for `n` ranks over `floats` elements.
-fn measure_ring(n: usize, floats: usize, reps: usize) -> f64 {
+fn measure_ring(n: usize, floats: usize, reps: usize, codec: Codec)
+    -> f64 {
     let world = mpi::inproc_world(n);
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
         for comm in world {
             s.spawn(move || {
                 let mut col = Collective::new(&comm);
+                col.set_codec(codec);
                 let mut buf = vec![1.0f32; floats];
                 // one warmup + timed reps (all ranks in lockstep, so
                 // per-rank timing equals wall timing)
@@ -34,79 +43,134 @@ fn measure_ring(n: usize, floats: usize, reps: usize) -> f64 {
 }
 
 fn main() {
-    // ---- measured: inproc ring all-reduce ----
-    let sizes = [(3_023usize, "lstm"), (32_963, "mlp"),
-                 (262_144, "1MB")];
-    let worlds = [2usize, 4, 8];
+    let args = Args::from_env();
+    let ci = args.bool("ci");
+    let json_path = args.str("json", "runs/bench/allreduce_scaling.json");
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+
+    // ---- measured: inproc ring all-reduce, per codec ----
+    let sizes: &[(usize, &str)] = if ci {
+        &[(3_023, "lstm"), (32_963, "mlp")]
+    } else {
+        &[(3_023, "lstm"), (32_963, "mlp"), (262_144, "1MB")]
+    };
+    let worlds: &[usize] = if ci { &[2, 4] } else { &[2, 4, 8] };
+    let codecs = [
+        ("fp32", Codec::Fp32),
+        ("fp16", Codec::Fp16),
+        ("topk10", Codec::TopK { k: 0.1 }),
+    ];
     let mut rows = Vec::new();
     let mut csv = Vec::new();
-    for (floats, tag) in sizes {
-        let mut row = vec![format!("{tag} ({floats} f32)")];
-        for &n in &worlds {
-            let reps = if floats > 100_000 { 30 } else { 100 };
-            let t = measure_ring(n, floats, reps);
-            // per-rank payload volume of the chunked ring
-            let bytes = 2.0 * (n as f64 - 1.0) / n as f64
-                * (floats * 4) as f64;
-            row.push(format!("{} ({:.2} GB/s)", fmt_secs(t),
-                             bytes / t / 1e9));
-            csv.push(vec![
-                tag.to_string(),
-                format!("{floats}"),
-                format!("{n}"),
-                format!("{t:.3e}"),
-            ]);
+    let mut measured: BTreeMap<String, f64> = BTreeMap::new();
+    for &(floats, tag) in sizes {
+        for (cname, codec) in codecs {
+            let mut row = vec![format!("{tag} ({floats} f32)"),
+                               cname.to_string()];
+            for &n in worlds {
+                let reps = match (ci, floats > 100_000) {
+                    (true, _) => 10,
+                    (false, true) => 30,
+                    (false, false) => 100,
+                };
+                let t = measure_ring(n, floats, reps, codec);
+                // per-rank payload volume of the chunked ring
+                let bytes = 2.0 * (n as f64 - 1.0) / n as f64
+                    * (floats * 4) as f64 * codec.wire_ratio();
+                row.push(format!("{} ({:.2} GB/s)", fmt_secs(t),
+                                 bytes / t / 1e9));
+                measured.insert(format!("{tag}/{cname}/n{n}"), t);
+                csv.push(vec![
+                    tag.to_string(),
+                    cname.to_string(),
+                    format!("{floats}"),
+                    format!("{n}"),
+                    format!("{t:.3e}"),
+                ]);
+            }
+            rows.push(row);
         }
-        rows.push(row);
     }
+    let mut header = vec!["payload", "codec"];
+    let world_labels: Vec<String> =
+        worlds.iter().map(|n| format!("n={n}")).collect();
+    header.extend(world_labels.iter().map(|s| s.as_str()));
     print_table(
         "measured inproc ring all-reduce (time + algorithm bandwidth)",
-        &["payload", "n=2", "n=4", "n=8"],
+        &header,
         &rows,
     );
     write_csv("runs/bench/allreduce_inproc.csv",
-              &["payload", "floats", "ranks", "time_s"], &csv).unwrap();
+              &["payload", "codec", "floats", "ranks", "time_s"],
+              &csv).unwrap();
 
-    // ---- simulated: PS vs ring at paper scale ----
+    // ---- simulated: PS vs ring (raw and fp16) at paper scale ----
     // paper_gpu: the testbed whose master saturates at ~30x (Fig 4).
     let cost = CostModel::paper_gpu(3_023);
+    let cost_fp16 = cost.clone().with_compression(Codec::Fp16);
     let base = SimConfig {
         n_workers: 1,
-        total_samples: 950_000,
+        total_samples: if ci { 95_000 } else { 950_000 },
         batch: 100,
-        epochs: 10,
+        epochs: if ci { 1 } else { 10 },
         validate_every: 0,
         sync: false,
     };
     let t1 = simulate_async(&cost, &base, 2017).total_time_s;
     let t1_ring = simulate_allreduce(&cost, &base, 2017).total_time_s;
+    let t1_ring16 =
+        simulate_allreduce(&cost_fp16, &base, 2017).total_time_s;
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     for w in [1usize, 2, 4, 8, 16, 30, 45, 60, 120] {
         let cfg = SimConfig { n_workers: w, ..base.clone() };
-        let ps = t1 / simulate_async(&cost, &cfg, 2017 ^ w as u64)
-            .total_time_s;
+        let seed = 2017 ^ w as u64;
+        let ps = t1 / simulate_async(&cost, &cfg, seed).total_time_s;
         let ring = t1_ring
-            / simulate_allreduce(&cost, &cfg, 2017 ^ w as u64)
-                .total_time_s;
+            / simulate_allreduce(&cost, &cfg, seed).total_time_s;
+        let ring16 = t1_ring16
+            / simulate_allreduce(&cost_fp16, &cfg, seed).total_time_s;
         rows.push(vec![
             format!("{w}"),
             format!("{ps:.2}"),
             format!("{ring:.2}"),
+            format!("{ring16:.2}"),
             format!("{:.2}", ring / ps),
         ]);
         csv.push(vec![format!("{w}"), format!("{ps:.4}"),
-                      format!("{ring:.4}")]);
+                      format!("{ring:.4}"), format!("{ring16:.4}")]);
     }
     print_table(
         "simulated speedup: parameter server vs ring all-reduce \
          (paper-GPU preset, batch 100)",
-        &["workers", "PS speedup", "ring speedup", "ring/PS"],
+        &["workers", "PS speedup", "ring speedup", "ring+fp16",
+          "ring/PS"],
         &rows,
     );
     write_csv("runs/bench/allreduce_vs_ps.csv",
-              &["workers", "ps_speedup", "ring_speedup"], &csv).unwrap();
+              &["workers", "ps_speedup", "ring_speedup",
+                "ring_fp16_speedup"],
+              &csv).unwrap();
     println!("\nThe PS curve saturates at ~1/t_update gradients/s \
               (Figs 3/4); the ring curve keeps scaling until the \
-              latency term 2(n-1)*lat catches up.");
+              latency term 2(n-1)*lat catches up — compression \
+              shrinks only the bandwidth term.");
+
+    let summary: BTreeMap<String, Json> = [
+        ("bench".to_string(),
+         Json::Str("allreduce_scaling".to_string())),
+        ("ci".to_string(), Json::Bool(ci)),
+        ("measured_s".to_string(),
+         Json::Obj(measured
+             .iter()
+             .map(|(k, v)| (k.clone(), Json::Num(*v)))
+             .collect())),
+    ]
+    .into_iter()
+    .collect();
+    write_json(&json_path, &Json::Obj(summary)).unwrap();
+    println!("wrote {json_path}");
 }

@@ -1,10 +1,24 @@
 //! Communication-substrate microbench: latency and throughput of the two
-//! transports for protocol-sized messages (weight/gradient payloads).
+//! transports for protocol-sized messages (weight/gradient payloads),
+//! plus the wire volume of one compressed ring all-reduce round per
+//! codec — the number the CI bench-smoke job gates on.
 //!
 //!     cargo bench --bench comm_microbench
+//!     cargo bench --bench comm_microbench -- --ci --json BENCH_ci.json
+//!
+//! `--ci` runs a reduced configuration (small payloads, few reps);
+//! `--json <path>` writes a machine-readable summary including
+//! `ratio_fp16` and `ratio_topk10` (compressed / raw wire bytes per
+//! all-reduce round), which CI requires to be < 0.6 and < 0.25.
 
-use mpi_learn::mpi::{self, Payload, Tag};
-use mpi_learn::util::bench::{fmt_secs, print_table, write_csv};
+use std::collections::BTreeMap;
+
+use mpi_learn::mpi::collective::{Collective, ReduceOp};
+use mpi_learn::mpi::{self, Codec, Payload, Tag};
+use mpi_learn::util::bench::{fmt_secs, print_table, write_csv,
+                             write_json};
+use mpi_learn::util::cli::Args;
+use mpi_learn::util::json::Json;
 use mpi_learn::util::stats;
 
 fn pingpong(make: impl Fn() -> Vec<mpi::Comm>, floats: usize,
@@ -32,16 +46,76 @@ fn pingpong(make: impl Fn() -> Vec<mpi::Comm>, floats: usize,
     (stats::percentile(&samples, 50.0), stats::percentile(&samples, 95.0))
 }
 
+/// One rank's wire bytes and time per all-reduce round under `codec`
+/// (inproc world; bytes use the exact encoded payload sizes). Each
+/// rank times only its measured rounds — thread spawn and the warmup
+/// round (which also allocates the error-feedback residual) are
+/// excluded; the lockstep collective makes the per-rank maximum the
+/// wall time.
+fn allreduce_wire(n: usize, floats: usize, rounds: usize, codec: Codec)
+    -> (f64, f64) {
+    let world = mpi::inproc_world(n);
+    let per_rank: Vec<(u64, f64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|comm| {
+                s.spawn(move || {
+                    let mut col = Collective::new(&comm);
+                    col.set_codec(codec);
+                    col.set_exact_tail(2);
+                    let mut buf = vec![0.001f32; floats];
+                    col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                    let before = comm.bytes_sent();
+                    let t0 = std::time::Instant::now();
+                    for i in 0..rounds {
+                        for (j, v) in buf.iter_mut().enumerate() {
+                            *v = ((i + j) % 23) as f32 * 1e-3;
+                        }
+                        col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                    }
+                    (comm.bytes_sent() - before,
+                     t0.elapsed().as_secs_f64())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let secs = per_rank
+        .iter()
+        .map(|(_, t)| *t)
+        .fold(0.0f64, f64::max)
+        / rounds as f64;
+    let bytes = per_rank.iter().map(|(b, _)| *b).sum::<u64>() as f64
+        / (rounds * n) as f64;
+    (bytes, secs)
+}
+
 fn main() {
+    let args = Args::from_env();
+    let ci = args.bool("ci");
+    let json_path = args.str("json", "runs/bench/comm_microbench.json");
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+
+    // ---- transport pingpong ----
     // paper-relevant sizes: LSTM benchmark (3k params), MLP (33k),
-    // transformer (800k)
-    let sizes = [(3_023usize, "lstm"), (32_963, "mlp"),
-                 (798_467, "transformer")];
+    // transformer (800k); CI keeps the two small ones
+    let sizes: &[(usize, &str)] = if ci {
+        &[(3_023, "lstm"), (32_963, "mlp")]
+    } else {
+        &[(3_023, "lstm"), (32_963, "mlp"), (798_467, "transformer")]
+    };
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     let mut port = 48100u16;
-    for (floats, tag) in sizes {
-        let reps = if floats > 100_000 { 50 } else { 200 };
+    for &(floats, tag) in sizes {
+        let reps = match (ci, floats > 100_000) {
+            (true, _) => 20,
+            (false, true) => 50,
+            (false, false) => 200,
+        };
         let (inp_p50, inp_p95) =
             pingpong(|| mpi::inproc_world(2), floats, reps);
         let (tcp_p50, tcp_p95) = pingpong(
@@ -72,7 +146,61 @@ fn main() {
     write_csv("runs/bench/comm_microbench.csv",
               &["payload", "floats", "inproc_p50_s", "tcp_p50_s"],
               &csv).unwrap();
-    println!("\ninproc ≈ the paper's shared-memory server; tcp ≈ its \
-              cluster interconnect path.\nThese feed \
-              CostModel::{{latency, bandwidth}}.");
+
+    // ---- compressed all-reduce wire volume ----
+    // gradient-sized buffer + the 2 piggybacked control elements the
+    // training loop actually ships
+    let (world_n, floats, rounds) = if ci {
+        (4usize, 32_963usize + 2, 10usize)
+    } else {
+        (4, 32_963 + 2, 40)
+    };
+    let codecs = [
+        ("fp32", Codec::Fp32),
+        ("fp16", Codec::Fp16),
+        ("topk10", Codec::TopK { k: 0.1 }),
+    ];
+    let mut rows = Vec::new();
+    let mut bytes_by_codec: BTreeMap<String, f64> = BTreeMap::new();
+    for (name, codec) in codecs {
+        let (bytes, secs) = allreduce_wire(world_n, floats, rounds,
+                                           codec);
+        bytes_by_codec.insert(name.to_string(), bytes);
+        rows.push(vec![
+            name.to_string(),
+            format!("{bytes:.0}"),
+            format!("{:.3}", bytes / bytes_by_codec["fp32"]),
+            fmt_secs(secs),
+        ]);
+    }
+    print_table(
+        &format!("ring all-reduce wire volume per rank per round \
+                  ({floats} f32, {world_n} ranks)"),
+        &["codec", "bytes/round", "vs fp32", "time/round"],
+        &rows,
+    );
+    let ratio_fp16 = bytes_by_codec["fp16"] / bytes_by_codec["fp32"];
+    let ratio_topk10 = bytes_by_codec["topk10"] / bytes_by_codec["fp32"];
+    println!("\nfp16 ships {:.1}% of the raw bytes, topk:0.1 ships \
+              {:.1}% — the CI gate requires < 60% and < 25%.",
+             100.0 * ratio_fp16, 100.0 * ratio_topk10);
+
+    let summary: BTreeMap<String, Json> = [
+        ("bench".to_string(),
+         Json::Str("comm_microbench".to_string())),
+        ("ci".to_string(), Json::Bool(ci)),
+        ("world".to_string(), Json::Num(world_n as f64)),
+        ("floats".to_string(), Json::Num(floats as f64)),
+        ("allreduce_bytes_per_round".to_string(),
+         Json::Obj(bytes_by_codec
+             .iter()
+             .map(|(k, v)| (k.clone(), Json::Num(*v)))
+             .collect())),
+        ("ratio_fp16".to_string(), Json::Num(ratio_fp16)),
+        ("ratio_topk10".to_string(), Json::Num(ratio_topk10)),
+    ]
+    .into_iter()
+    .collect();
+    write_json(&json_path, &Json::Obj(summary)).unwrap();
+    println!("wrote {json_path}");
 }

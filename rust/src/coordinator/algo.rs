@@ -5,6 +5,7 @@
 //! algorithm runs (Downpour SGD default, Elastic Averaging SGD optional)
 //! and whether gradient exchange is asynchronous (default) or synchronous.
 
+use crate::mpi::codec::Codec;
 use crate::optim::OptimizerConfig;
 use crate::util::json::Json;
 
@@ -57,6 +58,10 @@ pub struct Algo {
     /// master updates (0 = off).
     pub lr_decay: f32,
     pub lr_decay_every: u64,
+    /// Wire codec for gradient exchange (`Codec::Fp32` = off). Lossy
+    /// codecs compress gradient hops with error feedback; fp16 also
+    /// compresses weight replication hops. See `mpi::codec`.
+    pub compression: Codec,
 }
 
 impl Default for Algo {
@@ -71,6 +76,7 @@ impl Default for Algo {
             grad_clip: 0.0,
             lr_decay: 0.0,
             lr_decay_every: 0,
+            compression: Codec::Fp32,
         }
     }
 }
@@ -121,6 +127,10 @@ impl Algo {
         }
         if let Some(c) = j.get("grad_clip").and_then(|v| v.as_f64()) {
             algo.grad_clip = c as f32;
+        }
+        if let Some(c) = j.get("compression").and_then(|v| v.as_str()) {
+            algo.compression = Codec::parse(c)
+                .map_err(|e| format!("compression: {e}"))?;
         }
         match j.get("mode").and_then(|v| v.as_str()).unwrap_or("downpour") {
             "downpour" => {
@@ -218,5 +228,18 @@ mod tests {
         let a = Algo { grad_clip: 1.0, ..Algo::default() };
         let opt = a.build_master_optimizer(4);
         assert_eq!(opt.name(), "grad-clip");
+    }
+
+    #[test]
+    fn json_compression() {
+        assert_eq!(Algo::default().compression, Codec::Fp32);
+        let j = Json::parse(
+            r#"{"mode": "allreduce", "compression": "fp16"}"#).unwrap();
+        assert_eq!(Algo::from_json(&j).unwrap().compression, Codec::Fp16);
+        let j = Json::parse(r#"{"compression": "topk:0.05"}"#).unwrap();
+        assert_eq!(Algo::from_json(&j).unwrap().compression,
+                   Codec::TopK { k: 0.05 });
+        let j = Json::parse(r#"{"compression": "zip"}"#).unwrap();
+        assert!(Algo::from_json(&j).is_err());
     }
 }

@@ -15,6 +15,9 @@
 //!                 "sync_every": 5},
 //!   "algo": { ... see Algo::from_json; "mode" may be "downpour",
 //!             "easgd", or "allreduce" (masterless ring) ... },
+//!   "compression": "fp32" | "fp16" | "topk:<k>",  // wire codec for
+//!                               // gradient exchange (see mpi::codec;
+//!                               // also accepted inside "algo")
 //!   "callbacks": [              // observer-side training callbacks
 //!     {"kind": "early_stopping", "patience": 3, "min_delta": 0.0},
 //!     {"kind": "checkpoint", "dir": "runs/ckpt", "every": 100,
@@ -111,6 +114,13 @@ impl JobConfig {
         // batch lives at top level (it selects the artifact); keep the
         // algo consistent
         algo.batch_size = batch;
+
+        // compression may sit at top level (alongside model/workers)
+        // or inside "algo"; top level wins when both are given
+        if let Some(c) = j.get("compression").and_then(|v| v.as_str()) {
+            algo.compression = crate::mpi::codec::Codec::parse(c)
+                .map_err(|e| invalid(format!("compression: {e}")))?;
+        }
 
         let transport = match j.get("transport") {
             None => Transport::Inproc,
@@ -330,6 +340,34 @@ mod tests {
                 "algo": {"mode": "allreduce"}}"#).unwrap();
         assert_eq!(job.train.algo.mode, Mode::AllReduce);
         assert_eq!(job.train.n_workers, 4);
+    }
+
+    #[test]
+    fn compression_config() {
+        use crate::mpi::codec::Codec;
+        // top-level key
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "compression": "fp16"}"#).unwrap();
+        assert_eq!(job.train.algo.compression, Codec::Fp16);
+        // inside "algo"
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp",
+                "algo": {"mode": "allreduce",
+                         "compression": "topk:0.1"}}"#).unwrap();
+        assert_eq!(job.train.algo.compression, Codec::TopK { k: 0.1 });
+        // top level wins over "algo"
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "compression": "fp16",
+                "algo": {"compression": "topk:0.5"}}"#).unwrap();
+        assert_eq!(job.train.algo.compression, Codec::Fp16);
+        // default + bad values
+        let job = JobConfig::from_json_text(r#"{"model": "mlp"}"#)
+            .unwrap();
+        assert_eq!(job.train.algo.compression, Codec::Fp32);
+        assert!(matches!(
+            JobConfig::from_json_text(
+                r#"{"model": "mlp", "compression": "gzip"}"#),
+            Err(ConfigError::Invalid(_))));
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::coordinator::driver::{train_direct, train_with_callbacks,
                                  Transport};
 use crate::coordinator::hierarchy::HierarchySpec;
 use crate::data::GeneratorConfig;
+use crate::mpi::codec::Codec;
 use crate::optim::OptimizerConfig;
 use crate::runtime::Session;
 
@@ -147,6 +148,16 @@ impl Experiment {
     /// Masterless synchronous ring all-reduce.
     pub fn allreduce(mut self) -> Self {
         self.cfg.algo.mode = Mode::AllReduce;
+        self
+    }
+
+    /// Compress gradient exchange on the wire: [`Codec::Fp16`]
+    /// (half-precision, ~0.5x bytes) or [`Codec::TopK`] (magnitude
+    /// sparsification with error feedback, ~2k x bytes). Applies to
+    /// every mode: ring collective hops, PS gradient uplinks, and —
+    /// under fp16 — weight replication hops too.
+    pub fn compression(mut self, codec: Codec) -> Self {
+        self.cfg.algo.compression = codec;
         self
     }
 
@@ -330,6 +341,20 @@ mod tests {
         assert_eq!(cfg.hierarchy.unwrap().n_groups, 2);
         assert_eq!(cfg.transport, Transport::Tcp { base_port: 47123 });
         assert_eq!(cfg.algo.mode, Mode::Downpour { sync: true });
+    }
+
+    #[test]
+    fn compression_knob() {
+        let exp = Experiment::new("mlp").allreduce()
+            .compression(Codec::Fp16);
+        assert_eq!(exp.config().algo.compression, Codec::Fp16);
+        let exp = Experiment::new("mlp")
+            .compression(Codec::TopK { k: 0.1 });
+        assert_eq!(exp.config().algo.compression,
+                   Codec::TopK { k: 0.1 });
+        // default stays raw
+        assert_eq!(Experiment::new("mlp").config().algo.compression,
+                   Codec::Fp32);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::collections::BTreeSet;
 
 use crate::coordinator::algo::{Algo, Mode};
 use crate::metrics::{History, Stopwatch, WorkerReport};
+use crate::mpi::codec::{grad_payload, Compressor};
 use crate::mpi::{Comm, Envelope, Payload, Rank, Tag};
 use crate::runtime::ModelExecutables;
 use crate::tensor::ParamSet;
@@ -123,18 +124,24 @@ impl<'a> GroupMaster<'a> {
         let mut synced = loop {
             let env = self.comm.recv()?;
             if env.src == super_rank {
-                match (env.tag, env.payload) {
-                    (Tag::Weights, Payload::Floats { data, .. }) => {
+                match env.tag {
+                    Tag::Weights => {
+                        let data = env
+                            .payload
+                            .weights_like()
+                            .unwrap_or_else(|| panic!(
+                                "group master: bad handshake payload"))
+                            .1;
                         weights.set_flat(&data);
                         break data;
                     }
-                    (Tag::Exit, _) => {
+                    Tag::Exit => {
                         // the run is already over (early stop before we
                         // ever trained): drain our workers and leave
                         stopping = true;
                         break std::sync::Arc::new(Vec::new());
                     }
-                    (tag, _) => panic!(
+                    tag => panic!(
                         "group master: bad handshake {tag:?}"),
                 }
             }
@@ -143,6 +150,9 @@ impl<'a> GroupMaster<'a> {
 
         let mut optimizer =
             self.algo.build_master_optimizer(weights.num_params());
+        // Upward-sync codec state (AggGradients is a gradient hop:
+        // lossy codecs apply, with error feedback across syncs).
+        let mut compressor = Compressor::new(self.algo.compression);
         let mut done: BTreeSet<Rank> = BTreeSet::new();
         let mut updates_since_sync = 0u64;
         let mut update_count = 0u64;
@@ -178,13 +188,21 @@ impl<'a> GroupMaster<'a> {
                         self.comm.send(env.src, Tag::Exit,
                                        Payload::Empty)?;
                     } else {
-                        self.comm.send(env.src, Tag::Weights,
-                                       Payload::floats(update_count,
-                                                       weights.flat()
-                                                           .to_vec()))?;
+                        self.comm.send(
+                            env.src,
+                            Tag::Weights,
+                            self.algo.compression.weights_payload(
+                                update_count, weights.flat()))?;
                     }
                 }
-                (Tag::Gradients, Payload::Grad { loss, data, .. }) => {
+                (Tag::Gradients, payload) => {
+                    let Some((_, loss, data)) = payload.grad_like()
+                    else {
+                        log::warn!("group master: Gradients from {} \
+                                    without a gradient payload",
+                                   env.src);
+                        continue;
+                    };
                     if stopping {
                         self.comm.send(env.src, Tag::Exit,
                                        Payload::Empty)?;
@@ -207,25 +225,32 @@ impl<'a> GroupMaster<'a> {
                         self.comm.send(
                             super_rank,
                             Tag::AggGradients,
-                            Payload::grad(update_count, loss_accum,
-                                          delta_neg),
+                            grad_payload(&mut compressor, update_count,
+                                         loss_accum, delta_neg),
                         )?;
                         // block for the super-master's reply, stashing
                         // any concurrent worker traffic
                         loop {
                             let env = self.comm.recv()?;
                             if env.src == super_rank {
-                                match (env.tag, env.payload) {
-                                    (Tag::Weights,
-                                     Payload::Floats { data, .. }) => {
-                                        weights.set_flat(&data);
-                                        synced = data;
-                                    }
-                                    (Tag::Exit, _) => {
+                                match env.tag {
+                                    Tag::Weights => match env
+                                        .payload
+                                        .weights_like()
+                                    {
+                                        Some((_, data)) => {
+                                            weights.set_flat(&data);
+                                            synced = data;
+                                        }
+                                        None => log::warn!(
+                                            "group master: sync reply \
+                                             without weights"),
+                                    },
+                                    Tag::Exit => {
                                         // early stop ordered from above
                                         stopping = true;
                                     }
-                                    (tag, _) => log::warn!(
+                                    tag => log::warn!(
                                         "group master: unexpected \
                                          {tag:?} during sync"),
                                 }
@@ -238,10 +263,11 @@ impl<'a> GroupMaster<'a> {
                         self.comm.send(env.src, Tag::Exit,
                                        Payload::Empty)?;
                     } else {
-                        self.comm.send(env.src, Tag::Weights,
-                                       Payload::floats(update_count,
-                                                       weights.flat()
-                                                           .to_vec()))?;
+                        self.comm.send(
+                            env.src,
+                            Tag::Weights,
+                            self.algo.compression.weights_payload(
+                                update_count, weights.flat()))?;
                     }
                 }
                 (Tag::TrainStats, Payload::Stats(s)) => {
@@ -275,14 +301,16 @@ impl<'a> GroupMaster<'a> {
                 .map(|(old, new)| old - new)
                 .collect();
             self.comm.send(super_rank, Tag::AggGradients,
-                           Payload::grad(update_count, loss_accum,
-                                         delta_neg))?;
+                           grad_payload(&mut compressor, update_count,
+                                        loss_accum, delta_neg))?;
             // the reply may be Weights (normal) or Exit (the stop
             // raced our final sync) — only Weights changes state
-            if let Ok(Envelope { tag: Tag::Weights,
-                                 payload: Payload::Floats { data, .. },
-                                 .. }) = self.comm.recv() {
-                weights.set_flat(&data);
+            if let Ok(Envelope { tag: Tag::Weights, payload, .. }) =
+                self.comm.recv()
+            {
+                if let Some((_, data)) = payload.weights_like() {
+                    weights.set_flat(&data);
+                }
             }
         }
         self.comm.send(super_rank, Tag::Exit, Payload::Empty)?;

@@ -113,10 +113,19 @@ impl<'a> Master<'a> {
         self.ctx.children.len() - self.done.len()
     }
 
+    /// Current weights as a wire payload — fp16-compressed when the
+    /// configured codec is fp16 (top-k never touches weight replicas;
+    /// see `Codec::pack_replica`). Both variants hold an `Arc`, so
+    /// cloning for a fan-out re-sends one snapshot.
+    fn weights_payload(&self) -> Payload {
+        self.ctx.algo.compression
+            .weights_payload(self.update_count, self.weights.flat())
+    }
+
     fn send_weights(&self, to: Rank) {
-        let payload = Payload::floats(self.update_count,
-                                      self.weights.flat().to_vec());
-        if let Err(e) = self.comm.send(to, Tag::Weights, payload) {
+        if let Err(e) =
+            self.comm.send(to, Tag::Weights, self.weights_payload())
+        {
             log::warn!("master: weight send to {to} failed: {e}");
         }
     }
@@ -127,15 +136,15 @@ impl<'a> Master<'a> {
         }
     }
 
-    /// Snapshot once, fan out to many recipients (sync barrier) — the
-    /// Arc payload keeps the broadcast a single allocation.
+    /// Snapshot (and compress) once, fan out to many recipients (sync
+    /// barrier) — the Arc inside the payload keeps the broadcast a
+    /// single allocation.
     fn broadcast_weights(&self, to: impl Iterator<Item = Rank>) {
-        let snapshot =
-            std::sync::Arc::new(self.weights.flat().to_vec());
+        let payload = self.weights_payload();
         for rank in to {
-            let payload = Payload::floats_shared(self.update_count,
-                                                 snapshot.clone());
-            if let Err(e) = self.comm.send(rank, Tag::Weights, payload) {
+            if let Err(e) =
+                self.comm.send(rank, Tag::Weights, payload.clone())
+            {
                 log::warn!("master: weight send to {rank} failed: {e}");
             }
         }
@@ -229,8 +238,7 @@ impl<'a> Master<'a> {
         }
         // the reply carries the pre-update center (the worker pulls
         // toward where the center was when it asked)
-        let reply = Payload::floats(self.update_count,
-                                    self.weights.flat().to_vec());
+        let reply = self.weights_payload();
         self.update_timer.start();
         let center = self.weights.flat_mut();
         for (c, w) in center.iter_mut().zip(worker_w.iter()) {
@@ -293,14 +301,29 @@ impl<'a> Master<'a> {
                         self.send_weights(src);
                     }
                 }
-                (Tag::Gradients, Payload::Grad { step, loss, data })
-                | (Tag::AggGradients, Payload::Grad { step, loss, data }) =>
+                (tag @ (Tag::Gradients | Tag::AggGradients), payload) =>
                 {
-                    self.handle_grad(src, step, loss, data, sync);
+                    // raw Grad or a codec-compressed Packed gradient
+                    match payload.grad_like() {
+                        Some((step, loss, data)) => {
+                            self.handle_grad(src, step, loss, data,
+                                             sync);
+                        }
+                        None => log::warn!(
+                            "master: {tag:?} from {src} without a \
+                             gradient payload"),
+                    }
                 }
-                (Tag::ExchangeWeights, Payload::Floats { data, .. }) => {
-                    let alpha = easgd_alpha.unwrap_or(0.5);
-                    self.handle_exchange(src, data, alpha);
+                (Tag::ExchangeWeights, payload) => {
+                    match payload.weights_like() {
+                        Some((_, data)) => {
+                            let alpha = easgd_alpha.unwrap_or(0.5);
+                            self.handle_exchange(src, data, alpha);
+                        }
+                        None => log::warn!(
+                            "master: ExchangeWeights from {src} \
+                             without a weight payload"),
+                    }
                 }
                 (Tag::TrainStats, Payload::Stats(s)) => {
                     self.handle_stats(src, s)

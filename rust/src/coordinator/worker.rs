@@ -16,6 +16,7 @@ use crate::coordinator::algo::{Algo, Mode};
 use crate::coordinator::callbacks::{LrScheduleSpec, Observer};
 use crate::data::DataSet;
 use crate::metrics::{History, Stopwatch, WorkerReport};
+use crate::mpi::codec::{grad_payload, Compressor};
 use crate::mpi::collective::{Collective, ReduceOp};
 use crate::mpi::{Comm, Payload, Rank, Tag, WorkerStats};
 use crate::runtime::ModelExecutables;
@@ -80,18 +81,22 @@ impl<'a> Worker<'a> {
         Self { comm, master, algo, exes, data, rng: Rng::new(seed) }
     }
 
-    /// Announce readiness and receive the initial weights.
+    /// Announce readiness and receive the initial weights (raw or
+    /// fp16-packed, per the master's codec).
     fn handshake(&mut self, params: &mut ParamSet)
         -> Result<u64, WorkerError> {
         self.comm.send(self.master, Tag::Ready, Payload::Empty)?;
         let env = self.comm.recv()?;
-        match (env.tag, env.payload) {
-            (Tag::Weights, Payload::Floats { step, data }) => {
-                params.set_flat(&data);
-                Ok(step)
-            }
-            (Tag::Exit, _) => Err(WorkerError::EarlyExit),
-            (tag, _) => Err(WorkerError::Protocol(tag)),
+        match env.tag {
+            Tag::Weights => match env.payload.weights_like() {
+                Some((step, data)) => {
+                    params.set_flat(&data);
+                    Ok(step)
+                }
+                None => Err(WorkerError::Protocol(Tag::Weights)),
+            },
+            Tag::Exit => Err(WorkerError::EarlyExit),
+            tag => Err(WorkerError::Protocol(tag)),
         }
     }
 
@@ -152,6 +157,10 @@ impl<'a> Worker<'a> {
         let mut grad_timer = Stopwatch::new();
         let mut comm_timer = Stopwatch::new();
         let mut model_step = step0;
+        // Gradient-uplink codec state: the error-feedback residual
+        // persists across batches AND epochs (dropped mass is delayed,
+        // never lost).
+        let mut compressor = Compressor::new(self.algo.compression);
         for epoch in 0..self.algo.epochs {
             let mut rng = self.rng.fork(epoch as u64);
             let mut failure: Option<WorkerError> = None;
@@ -161,6 +170,7 @@ impl<'a> Worker<'a> {
             let report_ref = &mut report;
             let gt = &mut grad_timer;
             let ct = &mut comm_timer;
+            let comp = &mut compressor;
             self.data.for_each_batch(batch, &mut rng, |x, y| {
                 if failure.is_some() {
                     return;
@@ -178,17 +188,24 @@ impl<'a> Worker<'a> {
                     self.comm.send(
                         self.master,
                         Tag::Gradients,
-                        Payload::grad(*step_ref, out.loss, out.grads),
+                        grad_payload(comp, *step_ref, out.loss,
+                                     out.grads),
                     )?;
                     let env = self.comm.recv()?;
-                    match (env.tag, env.payload) {
-                        (Tag::Weights, Payload::Floats { step, data }) => {
-                            params_ref.set_flat(&data);
-                            *step_ref = step;
-                            Ok(())
+                    match env.tag {
+                        Tag::Weights => {
+                            match env.payload.weights_like() {
+                                Some((step, data)) => {
+                                    params_ref.set_flat(&data);
+                                    *step_ref = step;
+                                    Ok(())
+                                }
+                                None => Err(WorkerError::Protocol(
+                                    Tag::Weights)),
+                            }
                         }
-                        (Tag::Exit, _) => Err(WorkerError::EarlyExit),
-                        (tag, _) => Err(WorkerError::Protocol(tag)),
+                        Tag::Exit => Err(WorkerError::EarlyExit),
+                        tag => Err(WorkerError::Protocol(tag)),
                     }
                 };
                 if let Err(e) = ct.time(send_recv) {
@@ -255,25 +272,35 @@ impl<'a> Worker<'a> {
                 if *since_ref >= tau {
                     *since_ref = 0;
                     let exchange = || -> Result<(), WorkerError> {
+                        // weight exchange is a replication hop: fp16
+                        // compresses it, top-k never does
                         self.comm.send(
                             self.master,
                             Tag::ExchangeWeights,
-                            Payload::floats(report_ref.batches,
-                                            params_ref.flat().to_vec()),
+                            self.algo.compression.weights_payload(
+                                report_ref.batches,
+                                params_ref.flat()),
                         )?;
                         let env = self.comm.recv()?;
-                        match (env.tag, env.payload) {
-                            (Tag::Center,
-                             Payload::Floats { data: center, .. }) => {
+                        match env.tag {
+                            Tag::Center => {
+                                let center = env
+                                    .payload
+                                    .weights_like()
+                                    .ok_or(WorkerError::Protocol(
+                                        Tag::Center))?
+                                    .1;
                                 // elastic pull toward the center
                                 let w = params_ref.flat_mut();
-                                for (wi, ci) in w.iter_mut().zip(center.iter()) {
+                                for (wi, ci) in
+                                    w.iter_mut().zip(center.iter())
+                                {
                                     *wi -= alpha * (*wi - ci);
                                 }
                                 Ok(())
                             }
-                            (Tag::Exit, _) => Err(WorkerError::EarlyExit),
-                            (tag, _) => Err(WorkerError::Protocol(tag)),
+                            Tag::Exit => Err(WorkerError::EarlyExit),
+                            tag => Err(WorkerError::Protocol(tag)),
                         }
                     };
                     if let Err(e) = ct.time(exchange) {
@@ -343,6 +370,12 @@ impl<'a> RingWorker<'a> {
         let batch = self.algo.batch_size;
         let started = Instant::now();
         let mut col = Collective::new(self.comm);
+        // Wire codec for the gradient collectives. The initial weight
+        // broadcast and the round-count agreement below stay raw; the
+        // two piggybacked control elements (mean loss, stop flag) are
+        // exempt from lossy dropping.
+        col.set_codec(self.algo.compression);
+        col.set_exact_tail(2);
 
         // Identical start everywhere: rank 0's init circulates the ring.
         let mut params = match init {

@@ -62,10 +62,18 @@
 //!   synchronicity (no stale-gradient tolerance). `mpi-learn simulate
 //!   --algo allreduce` projects the crossover for a given cost model.
 //!
+//! All modes accept wire-level **gradient compression**
+//! ([`mpi::codec`], flag `--compression fp16|topk:<k>`): fp16
+//! quantization or magnitude top-k sparsification with an
+//! error-feedback residual, cutting bytes on the wire without
+//! breaking the all-reduce mode's bitwise-identical-weights guarantee
+//! (DESIGN.md §Gradient compression).
+//!
 //! Architecture (DESIGN.md has the full inventory):
 //! - [`mpi`] — MPI-style tagged point-to-point substrate (threads+channels
 //!   or TCP mesh) plus the [`mpi::collective`] ring
-//!   all-reduce/broadcast layer built on it.
+//!   all-reduce/broadcast layer and the [`mpi::codec`] wire codecs
+//!   built on it.
 //! - [`runtime`] — artifact manifest + execution backends (native CPU
 //!   engine by default; PJRT behind the `pjrt` feature).
 //! - [`data`] — shard file format, synthetic HEP dataset, batching loader,

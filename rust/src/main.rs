@@ -16,6 +16,9 @@
 //!       --data data/hep
 //!   mpi-learn train --mode allreduce --model mlp --workers 8 \
 //!       --epochs 3                      # masterless ring all-reduce
+//!   mpi-learn train --mode allreduce --workers 8 --compression fp16
+//!   mpi-learn train --workers 4 --compression topk:0.1  # sparsified
+//!       # gradient uplink with error feedback
 //!   mpi-learn train --model mlp --workers 4 --validate-every 20 \
 //!       --early-stopping 3 --checkpoint runs/ckpt   # callbacks
 //!   mpi-learn simulate --workers 1,2,4,8,16,30,45,60 --preset cluster
@@ -29,6 +32,7 @@ use mpi_learn::coordinator::{self, Algo, CallbackSpec, Data,
                              TrainConfig, Transport};
 use mpi_learn::data::{generate_dataset, list_train_files,
                       GeneratorConfig};
+use mpi_learn::mpi::Codec;
 use mpi_learn::optim::OptimizerConfig;
 use mpi_learn::runtime::Session;
 use mpi_learn::simulator::{self, CostModel, SimConfig};
@@ -206,6 +210,9 @@ const TRAIN_FLAGS: &[Flag] = &[
            help: "easgd: exchange period in batches" },
     Flag { name: "alpha", value: "<f>", default: "0.5",
            help: "easgd: elastic force coefficient" },
+    Flag { name: "compression", value: "<c>", default: "fp32",
+           help: "wire codec: fp32 | fp16 | topk:<k> (gradient \
+                  compression with error feedback)" },
     Flag { name: "optimizer", value: "<o>", default: "momentum",
            help: "sgd | momentum | adam | rmsprop | adadelta" },
     Flag { name: "lr", value: "<f>", default: "0.05",
@@ -352,6 +359,8 @@ fn parse_algo(args: &Args) -> Result<Algo, String> {
         "adadelta" => OptimizerConfig::AdaDelta { rho: 0.95, eps: 1e-6 },
         other => return Err(format!("unknown optimizer '{other}'")),
     };
+    algo.compression =
+        Codec::parse(&args.str("compression", "fp32"))?;
     algo.mode = match args.str("mode", "downpour").as_str() {
         "downpour" => Mode::Downpour { sync: args.bool("sync") },
         "easgd" => Mode::Easgd {
@@ -503,6 +512,7 @@ fn cmd_simulate(args: &Args) -> i32 {
         as u64;
     let n_params = args.usize("params", 3023).unwrap_or(3023);
     let algo = args.str("algo", "downpour");
+    let compression = args.str("compression", "fp32");
     if let Err(e) = args.finish() {
         return fail(e);
     }
@@ -510,6 +520,10 @@ fn cmd_simulate(args: &Args) -> i32 {
         "shared" => CostModel::shared_memory(n_params),
         "cluster" => CostModel::cluster(n_params),
         other => return fail(format!("unknown preset '{other}'")),
+    };
+    let cost = match Codec::parse(&compression) {
+        Ok(codec) => cost.with_compression(codec),
+        Err(e) => return fail(e),
     };
     let base = SimConfig {
         n_workers: 1,

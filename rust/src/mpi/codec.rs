@@ -1,0 +1,663 @@
+//! Wire-level gradient compression codecs.
+//!
+//! The paper's scaling measurements (Figs 3/4) show communication volume
+//! becoming the binding constraint as the world grows, and the wire
+//! format ships every gradient as raw little-endian f32. This module
+//! provides the standard ways past that wall (cf. Vishnu et al.,
+//! *Distributed TensorFlow with MPI*; Awan et al., *HyPar-Flow*):
+//!
+//! - [`Codec::Fp32`] — identity (the default; no compression),
+//! - [`Codec::Fp16`] — IEEE 754 binary16 quantization with
+//!   round-to-nearest-even (~0.5x wire bytes),
+//! - [`Codec::TopK`] — magnitude sparsification keeping a fraction `k`
+//!   of elements as (index, value) pairs (~2k x wire bytes).
+//!
+//! Lossy codecs drop mass. The [`Compressor`] keeps an **error-feedback
+//! residual** on the sender: what a round drops is added back into the
+//! next round's buffer before compressing, so dropped mass is delayed,
+//! not lost — the property that keeps top-k training convergent.
+//!
+//! Where compression sits relative to the collective's determinism
+//! guarantee is documented in DESIGN.md §Gradient compression: the
+//! reduce phase operates on *decoded* f32 and the all-gather replicates
+//! one owner-compressed payload verbatim, so `Mode::AllReduce` keeps its
+//! bitwise-identical-weights invariant under every codec.
+
+use crate::mpi::message::Payload;
+
+// ---------------------------------------------------------------------------
+// IEEE 754 binary16 conversion (round-to-nearest-even)
+// ---------------------------------------------------------------------------
+
+/// Convert an f32 to IEEE binary16 bits with round-to-nearest-even.
+/// Overflow saturates to the signed infinity; NaN becomes a quiet NaN;
+/// tiny values flush through the subnormal range to signed zero.
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let mut exp = ((x >> 23) & 0xFF) as i32;
+    let mut man = x & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf stays Inf; any NaN becomes a quiet NaN
+        return sign | if man != 0 { 0x7E00 } else { 0x7C00 };
+    }
+    exp -= 112; // re-bias 127 -> 15
+    if exp >= 0x1F {
+        return sign | 0x7C00; // overflow -> Inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflows to zero even as a subnormal
+        }
+        // subnormal: shift the (implicit-1) mantissa into place
+        man |= 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let mut half_man = (man >> shift) as u16;
+        let round_bit = 1u32 << (shift - 1);
+        let remainder = man & ((1u32 << shift) - 1);
+        if remainder > round_bit
+            || (remainder == round_bit && half_man & 1 == 1)
+        {
+            half_man += 1; // may carry into the exponent: correct
+        }
+        return sign | half_man;
+    }
+    let mut h = sign | ((exp as u16) << 10) | ((man >> 13) as u16);
+    let remainder = man & 0x1FFF;
+    if remainder > 0x1000 || (remainder == 0x1000 && h & 1 == 1) {
+        h = h.wrapping_add(1); // carry rounds up to the next binade/Inf
+    }
+    h
+}
+
+/// Convert IEEE binary16 bits to the exactly-representable f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let neg = h & 0x8000 != 0;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x3FF) as u32;
+    let v = match exp {
+        // subnormal or zero: man * 2^-24 (exact in f32)
+        0 => man as f32 * (1.0 / 16_777_216.0),
+        0x1F => {
+            if man == 0 {
+                f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        e => f32::from_bits(((e as u32 + 112) << 23) | (man << 13)),
+    };
+    if neg {
+        -v
+    } else {
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// codec selection
+// ---------------------------------------------------------------------------
+
+/// Which wire codec compresses float payloads.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Codec {
+    /// Identity: raw little-endian f32 (the default).
+    Fp32,
+    /// Half-precision quantization, round-to-nearest-even.
+    Fp16,
+    /// Magnitude top-k sparsification: keep fraction `k` in (0, 1] of
+    /// the elements (at least one) as (index, value) pairs.
+    TopK { k: f32 },
+}
+
+impl Codec {
+    /// Parse a CLI/config spelling: `fp32`/`none`, `fp16`, `topk`
+    /// (default k = 0.1) or `topk:<k>` where `<k>` is a fraction in
+    /// (0, 1] or a percentage like `10%`.
+    pub fn parse(s: &str) -> Result<Codec, String> {
+        let s = s.trim();
+        match s {
+            "fp32" | "none" | "off" => return Ok(Codec::Fp32),
+            "fp16" | "half" => return Ok(Codec::Fp16),
+            "topk" => return Ok(Codec::TopK { k: 0.1 }),
+            _ => {}
+        }
+        if let Some(arg) = s.strip_prefix("topk:") {
+            let arg = arg.trim();
+            let k = match arg.strip_suffix('%') {
+                Some(pct) => pct
+                    .trim()
+                    .parse::<f32>()
+                    .map(|p| p / 100.0)
+                    .map_err(|_| format!("bad topk percentage '{arg}'"))?,
+                None => arg
+                    .parse::<f32>()
+                    .map_err(|_| format!("bad topk fraction '{arg}'"))?,
+            };
+            if !(k > 0.0 && k <= 1.0) {
+                return Err(format!(
+                    "topk fraction must be in (0, 1], got {k}"
+                ));
+            }
+            return Ok(Codec::TopK { k });
+        }
+        Err(format!(
+            "unknown compression '{s}' (fp32 | fp16 | topk:<k>)"
+        ))
+    }
+
+    /// Canonical spelling (parses back to the same codec).
+    pub fn name(&self) -> String {
+        match self {
+            Codec::Fp32 => "fp32".into(),
+            Codec::Fp16 => "fp16".into(),
+            Codec::TopK { k } => format!("topk:{k}"),
+        }
+    }
+
+    /// True for the raw-f32 identity codec.
+    pub fn is_identity(&self) -> bool {
+        matches!(self, Codec::Fp32)
+    }
+
+    /// Approximate wire bytes per original payload byte — the
+    /// compression-aware term of the simulator cost model. Top-k pays
+    /// 8 bytes (u32 index + f32 value) per kept element against 4 raw.
+    pub fn wire_ratio(&self) -> f64 {
+        match self {
+            Codec::Fp32 => 1.0,
+            Codec::Fp16 => 0.5,
+            Codec::TopK { k } => 2.0 * *k as f64,
+        }
+    }
+
+    /// Compress `data`; `None` means "send raw" (identity codec).
+    pub fn pack(&self, data: &[f32]) -> Option<PackedF32> {
+        self.pack_protect(data, 0)
+    }
+
+    /// [`Codec::pack`] with the last `protect` elements exempt from
+    /// lossy *dropping*: top-k always includes them (exact f32), so
+    /// piggybacked control values (a stop flag, a loss) survive
+    /// sparsification. Fp16 still quantizes them — small integers and
+    /// 0/1 flags are exactly representable.
+    pub fn pack_protect(&self, data: &[f32], protect: usize)
+        -> Option<PackedF32> {
+        match self {
+            Codec::Fp32 => None,
+            Codec::Fp16 => Some(PackedF32::F16(
+                data.iter().map(|&v| f32_to_f16_bits(v)).collect(),
+            )),
+            Codec::TopK { k } => {
+                Some(pack_topk(data, *k, protect.min(data.len())))
+            }
+        }
+    }
+
+    /// Weight/center payloads (replication hops): only fp16 compresses
+    /// them — sparsifying a weight snapshot would zero most of the
+    /// model. Returns `None` to send raw.
+    pub fn pack_replica(&self, data: &[f32]) -> Option<PackedF32> {
+        match self {
+            Codec::Fp16 => self.pack(data),
+            _ => None,
+        }
+    }
+
+    /// Build a weight-like payload, fp16-compressed when this codec is
+    /// fp16 (shared by the PS master, group masters, and EASGD).
+    pub fn weights_payload(&self, step: u64, data: &[f32]) -> Payload {
+        match self.pack_replica(data) {
+            Some(p) => Payload::packed(step, 0.0, p),
+            None => Payload::floats(step, data.to_vec()),
+        }
+    }
+}
+
+impl std::fmt::Display for Codec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Deterministic magnitude top-k: keep `ceil(k * body)` (at least one)
+/// of the first `n - protect` elements by |value| (ties broken by lower
+/// index), plus every protected trailing element, encoded as
+/// index-ascending (index, value) pairs. NaN magnitudes sort largest,
+/// so NaNs are kept and surface downstream instead of vanishing.
+fn pack_topk(data: &[f32], k: f32, protect: usize) -> PackedF32 {
+    let n = data.len();
+    let body = n - protect;
+    let nnz = if body == 0 {
+        0
+    } else {
+        ((k as f64 * body as f64).ceil() as usize).clamp(1, body)
+    };
+    let mut order: Vec<u32> = (0..body as u32).collect();
+    if nnz < body {
+        let cmp = |a: &u32, b: &u32| {
+            let (va, vb) =
+                (data[*a as usize].abs(), data[*b as usize].abs());
+            vb.total_cmp(&va).then_with(|| a.cmp(b))
+        };
+        order.select_nth_unstable_by(nnz, cmp);
+        order.truncate(nnz);
+        order.sort_unstable();
+    }
+    order.extend(body as u32..n as u32);
+    let val = order.iter().map(|&i| data[i as usize]).collect();
+    PackedF32::Sparse { n: n as u32, idx: order, val }
+}
+
+// ---------------------------------------------------------------------------
+// compact forms
+// ---------------------------------------------------------------------------
+
+/// A codec-compressed f32 buffer — the compact form that travels the
+/// wire (see `message::Payload::Packed`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PackedF32 {
+    /// Dense IEEE binary16 bit patterns, one per element.
+    F16(Vec<u16>),
+    /// Sparse (index, value) pairs over a logical length `n`; `idx` is
+    /// strictly ascending, values are exact f32.
+    Sparse { n: u32, idx: Vec<u32>, val: Vec<f32> },
+}
+
+impl PackedF32 {
+    /// Logical (decoded) element count.
+    pub fn len(&self) -> usize {
+        match self {
+            PackedF32::F16(bits) => bits.len(),
+            PackedF32::Sparse { n, .. } => *n as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Compact body size on the wire: a [u32 enc][u32 n] header plus
+    /// the encoding-specific payload (see `message::encode`).
+    pub fn wire_nbytes(&self) -> usize {
+        8 + match self {
+            PackedF32::F16(bits) => 2 * bits.len(),
+            PackedF32::Sparse { idx, .. } => 4 + 8 * idx.len(),
+        }
+    }
+
+    /// Decode into a fresh dense buffer.
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len()];
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Decode into `out` (out.len() must equal `self.len()`); absent
+    /// sparse elements decode to 0.0.
+    pub fn unpack_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len(), "packed length mismatch");
+        match self {
+            PackedF32::F16(bits) => {
+                for (dst, &b) in out.iter_mut().zip(bits) {
+                    *dst = f16_bits_to_f32(b);
+                }
+            }
+            PackedF32::Sparse { idx, val, .. } => {
+                out.fill(0.0);
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v;
+                }
+            }
+        }
+    }
+
+    /// Sum-accumulate the decoded values into `out` (the ring's reduce
+    /// step; absent sparse elements contribute nothing).
+    pub fn add_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len(), "packed length mismatch");
+        match self {
+            PackedF32::F16(bits) => {
+                for (dst, &b) in out.iter_mut().zip(bits) {
+                    *dst += f16_bits_to_f32(b);
+                }
+            }
+            PackedF32::Sparse { idx, val, .. } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] += v;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// error-feedback compressor
+// ---------------------------------------------------------------------------
+
+/// Sender-side compression state: the error-feedback residual. What a
+/// lossy codec drops in one round is added back into the next round's
+/// buffer before compressing, so gradient mass is delayed, never lost
+/// (the residual stays bounded; see the `error_feedback_*` tests).
+pub struct Compressor {
+    codec: Codec,
+    residual: Vec<f32>,
+}
+
+impl Compressor {
+    pub fn new(codec: Codec) -> Self {
+        Self { codec, residual: Vec::new() }
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Compress a whole buffer with error feedback. `None` means "send
+    /// raw" (identity codec; no residual is kept — nothing is lost).
+    pub fn compress(&mut self, data: &[f32]) -> Option<PackedF32> {
+        self.compress_window(data, 0, data.len(), 0)
+    }
+
+    /// Compress `chunk`, a window of a logical buffer of `total`
+    /// elements starting at `offset` — the ring collective compresses
+    /// per-chunk but keeps ONE residual per element index. The last
+    /// `protect` elements of the chunk are exempt from lossy dropping
+    /// (see [`Codec::pack_protect`]).
+    pub fn compress_window(&mut self, chunk: &[f32], offset: usize,
+                           total: usize, protect: usize)
+        -> Option<PackedF32> {
+        if self.codec.is_identity() {
+            return None;
+        }
+        if self.residual.len() != total {
+            // first use (or a shape change): start from a zero residual
+            self.residual = vec![0.0; total];
+        }
+        let res = &mut self.residual[offset..offset + chunk.len()];
+        let acc: Vec<f32> =
+            chunk.iter().zip(res.iter()).map(|(c, r)| c + r).collect();
+        let packed = self
+            .codec
+            .pack_protect(&acc, protect)
+            .expect("non-identity codec packs");
+        match &packed {
+            PackedF32::F16(bits) => {
+                for ((r, &a), &b) in
+                    res.iter_mut().zip(&acc).zip(bits.iter())
+                {
+                    *r = a - f16_bits_to_f32(b);
+                }
+            }
+            PackedF32::Sparse { idx, .. } => {
+                // kept values are exact: residual = acc with kept
+                // positions zeroed
+                res.copy_from_slice(&acc);
+                for &i in idx {
+                    res[i as usize] = 0.0;
+                }
+            }
+        }
+        Some(packed)
+    }
+
+    /// Largest dropped-mass magnitude currently carried (diagnostics).
+    pub fn max_residual(&self) -> f32 {
+        self.residual.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+/// Build a gradient-like payload: compressed (with feedback) when the
+/// compressor's codec is lossy, raw otherwise.
+pub fn grad_payload(comp: &mut Compressor, step: u64, loss: f32,
+                    grads: Vec<f32>) -> Payload {
+    match comp.compress(&grads) {
+        Some(p) => Payload::packed(step, loss, p),
+        None => Payload::grad(step, loss, grads),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_every_non_nan_pattern() {
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1F;
+            let man = h & 0x3FF;
+            if exp == 0x1F && man != 0 {
+                continue; // NaNs canonicalize; checked separately
+            }
+            let f = f16_bits_to_f32(h);
+            assert_eq!(f32_to_f16_bits(f), h,
+                       "pattern {h:#06x} -> {f} did not round-trip");
+        }
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even_ties() {
+        // 1 + 2^-11 is exactly halfway between f16(1.0) and the next
+        // representable (1 + 2^-10): RNE picks the even mantissa (1.0)
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3C00);
+        // 1 + 2^-10 + 2^-11 is halfway with an ODD lower mantissa:
+        // RNE rounds up to mantissa 2
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-10) + 2f32.powi(-11)),
+                   0x3C02);
+        // just above the tie rounds up
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11) + 2f32.powi(-18)),
+                   0x3C01);
+    }
+
+    #[test]
+    fn f16_saturation_and_specials() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(65504.0)), 65504.0);
+        // 65520 is the tie to the first unrepresentable binade: -> Inf
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16_bits(1e9), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xFC00);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // signed zero survives
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f16_bits_to_f32(0x8000).to_bits(), (-0.0f32).to_bits());
+        // subnormal range: 2^-24 is the smallest half subnormal
+        assert_eq!(f32_to_f16_bits(2f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16_bits(2f32.powi(-25)), 0x0000); // tie-even
+        assert_eq!(f32_to_f16_bits(2f32.powi(-25) * 1.5), 0x0001);
+    }
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(Codec::parse("fp32").unwrap(), Codec::Fp32);
+        assert_eq!(Codec::parse("none").unwrap(), Codec::Fp32);
+        assert_eq!(Codec::parse("fp16").unwrap(), Codec::Fp16);
+        assert_eq!(Codec::parse("topk").unwrap(),
+                   Codec::TopK { k: 0.1 });
+        assert_eq!(Codec::parse("topk:0.25").unwrap(),
+                   Codec::TopK { k: 0.25 });
+        assert_eq!(Codec::parse("topk:10%").unwrap(),
+                   Codec::TopK { k: 0.1 });
+        assert!(Codec::parse("topk:0").is_err());
+        assert!(Codec::parse("topk:1.5").is_err());
+        assert!(Codec::parse("topk:abc").is_err());
+        assert!(Codec::parse("gzip").is_err());
+        // canonical names parse back
+        for c in [Codec::Fp32, Codec::Fp16, Codec::TopK { k: 0.25 }] {
+            assert_eq!(Codec::parse(&c.name()).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn wire_ratios() {
+        assert_eq!(Codec::Fp32.wire_ratio(), 1.0);
+        assert_eq!(Codec::Fp16.wire_ratio(), 0.5);
+        assert!((Codec::TopK { k: 0.1 }.wire_ratio() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let data = [0.1f32, -5.0, 0.0, 2.0, -0.5, 3.0];
+        let p = Codec::TopK { k: 0.5 }.pack(&data).unwrap();
+        match &p {
+            PackedF32::Sparse { n, idx, val } => {
+                assert_eq!(*n, 6);
+                assert_eq!(idx, &[1, 3, 5]);
+                assert_eq!(val, &[-5.0, 2.0, 3.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(p.unpack(), vec![0.0, -5.0, 0.0, 2.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn topk_ties_break_by_lower_index() {
+        let data = [1.0f32, -1.0, 1.0, 1.0];
+        let p = Codec::TopK { k: 0.5 }.pack(&data).unwrap();
+        match p {
+            PackedF32::Sparse { idx, .. } => assert_eq!(idx, vec![0, 1]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn topk_protects_trailing_elements() {
+        // 8 body elements + a loss + a 0/1 stop flag: the tiny flag
+        // must survive even though its magnitude never competes
+        let mut data = vec![10.0f32; 8];
+        data.push(0.7); // loss
+        data.push(1.0); // stop flag
+        let p = Codec::TopK { k: 0.125 }.pack_protect(&data, 2).unwrap();
+        let dec = p.unpack();
+        assert_eq!(dec[8], 0.7);
+        assert_eq!(dec[9], 1.0);
+        match &p {
+            PackedF32::Sparse { idx, .. } => {
+                assert_eq!(idx.len(), 3); // 1 body + 2 protected
+                assert_eq!(&idx[1..], &[8, 9]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn topk_edge_lengths() {
+        let c = Codec::TopK { k: 0.1 };
+        assert_eq!(c.pack(&[]).unwrap().unpack(), Vec::<f32>::new());
+        assert_eq!(c.pack(&[3.5]).unwrap().unpack(), vec![3.5]);
+        // k = 1 keeps everything
+        let data = [1.0f32, -2.0, 0.5];
+        assert_eq!(Codec::TopK { k: 1.0 }.pack(&data).unwrap().unpack(),
+                   data.to_vec());
+        // all-protected buffer round-trips exactly
+        assert_eq!(c.pack_protect(&data, 3).unwrap().unpack(),
+                   data.to_vec());
+    }
+
+    #[test]
+    fn topk_is_idempotent_on_its_own_output() {
+        let data: Vec<f32> = (0..40)
+            .map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.3)
+            .collect();
+        let c = Codec::TopK { k: 0.2 };
+        let once = c.pack(&data).unwrap().unpack();
+        let twice = c.pack(&once).unwrap().unpack();
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn fp16_pack_unpack_dense() {
+        let data = [0.5f32, -1.25, 3.0e-5, 70000.0, 0.0];
+        let p = Codec::Fp16.pack(&data).unwrap();
+        let dec = p.unpack();
+        assert_eq!(dec[0], 0.5);
+        assert_eq!(dec[1], -1.25);
+        assert!((dec[2] - 3.0e-5).abs() / 3.0e-5 < 1e-3);
+        assert_eq!(dec[3], f32::INFINITY); // saturation
+        assert_eq!(dec[4], 0.0);
+        assert_eq!(p.wire_nbytes(), 8 + 10);
+    }
+
+    #[test]
+    fn identity_codec_packs_nothing() {
+        assert!(Codec::Fp32.pack(&[1.0, 2.0]).is_none());
+        assert!(Compressor::new(Codec::Fp32)
+            .compress(&[1.0, 2.0])
+            .is_none());
+        assert!(Codec::Fp32.is_identity());
+        assert!(!Codec::Fp16.is_identity());
+    }
+
+    #[test]
+    fn replica_packing_is_fp16_only() {
+        let w = [0.5f32, -0.25];
+        assert!(Codec::Fp32.pack_replica(&w).is_none());
+        assert!(Codec::TopK { k: 0.1 }.pack_replica(&w).is_none());
+        let p = Codec::Fp16.pack_replica(&w).unwrap();
+        assert_eq!(p.unpack(), w.to_vec());
+    }
+
+    #[test]
+    fn error_feedback_reinjects_dropped_mass() {
+        // k keeps 1 of 4: the small element is dropped on round 1 but
+        // its residual joins round 2, where a zero gradient lets it win
+        let mut comp = Compressor::new(Codec::TopK { k: 0.25 });
+        let p1 = comp.compress(&[4.0, 0.5, 0.0, 0.0]).unwrap();
+        assert_eq!(p1.unpack(), vec![4.0, 0.0, 0.0, 0.0]);
+        assert_eq!(comp.max_residual(), 0.5);
+        let p2 = comp.compress(&[0.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(p2.unpack(), vec![0.0, 0.5, 0.0, 0.0]);
+        assert_eq!(comp.max_residual(), 0.0);
+    }
+
+    #[test]
+    fn error_feedback_fp16_carries_quantization_error() {
+        let mut comp = Compressor::new(Codec::Fp16);
+        let v = 1.0 + 2f32.powi(-13); // rounds to 1.0 in fp16
+        let p = comp.compress(&[v]).unwrap();
+        assert_eq!(p.unpack(), vec![1.0]);
+        assert!(comp.max_residual() > 0.0);
+        // the carried error eventually pushes past the quantum
+        let mut total = p.unpack()[0];
+        for _ in 0..20 {
+            total += comp.compress(&[v]).unwrap().unpack()[0];
+        }
+        assert!((total - 21.0 * v).abs() < 2f32.powi(-10),
+                "cumulative delivery drifted: {total} vs {}", 21.0 * v);
+    }
+
+    #[test]
+    fn compress_window_keeps_one_residual_per_index() {
+        let mut comp = Compressor::new(Codec::TopK { k: 0.5 });
+        // two windows of a logical 4-element buffer
+        let a = comp.compress_window(&[3.0, 0.1], 0, 4, 0).unwrap();
+        let b = comp.compress_window(&[0.2, 5.0], 2, 4, 0).unwrap();
+        assert_eq!(a.unpack(), vec![3.0, 0.0]);
+        assert_eq!(b.unpack(), vec![0.0, 5.0]);
+        // residuals live at global indices 1 and 2
+        let c = comp.compress_window(&[0.0, 0.0], 0, 4, 0).unwrap();
+        assert_eq!(c.unpack(), vec![0.0, 0.1]);
+        let d = comp.compress_window(&[0.0, 0.0], 2, 4, 0).unwrap();
+        assert_eq!(d.unpack(), vec![0.2, 0.0]);
+    }
+
+    #[test]
+    fn weights_payload_variants() {
+        let w = [0.5f32, -1.5];
+        match Codec::Fp32.weights_payload(7, &w) {
+            Payload::Floats { step, data } => {
+                assert_eq!(step, 7);
+                assert_eq!(*data, w.to_vec());
+            }
+            other => panic!("{other:?}"),
+        }
+        match Codec::Fp16.weights_payload(7, &w) {
+            Payload::Packed { step, data, .. } => {
+                assert_eq!(step, 7);
+                assert_eq!(data.unpack(), w.to_vec());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -21,9 +21,22 @@
 //! is not the expected chunk (e.g. a `TrainStats` racing into rank 0
 //! while it is inside an all-reduce) is stashed and re-delivered to the
 //! caller afterwards ([`Collective::into_stash`]).
+//!
+//! **Compression** ([`Collective::set_codec`]): with a lossy codec, sum
+//! all-reduces compress every wire hop while keeping the determinism
+//! guarantee. The reduce-scatter reduces *decoded* f32 along the ring's
+//! fixed chain (each hop compresses its partial sums with an
+//! error-feedback residual, so dropped mass re-enters the next round);
+//! the all-gather compresses each completed chunk ONCE on its owner —
+//! which adopts the decoded form itself — and forwards that payload
+//! verbatim, so every rank decodes identical bytes. Min/Max reductions,
+//! scalar agreements, and broadcasts always go raw, and the last
+//! [`Collective::set_exact_tail`] elements are exempt from top-k
+//! dropping (piggybacked control flags must never vanish).
 
 use std::time::Duration;
 
+use crate::mpi::codec::{Codec, Compressor};
 use crate::mpi::comm::{Comm, CommError};
 use crate::mpi::message::{Envelope, Payload, Rank, Tag};
 
@@ -60,6 +73,12 @@ pub struct Collective<'a> {
     stash: Vec<Envelope>,
     seq: u64,
     recv_timeout: Duration,
+    codec: Codec,
+    /// Error-feedback state for compressed hops (one residual slot per
+    /// element index; see the module docs).
+    compressor: Compressor,
+    /// Trailing elements exempt from lossy dropping (stop flags, loss).
+    exact_tail: usize,
 }
 
 impl<'a> Collective<'a> {
@@ -69,12 +88,33 @@ impl<'a> Collective<'a> {
             stash: Vec::new(),
             seq: 0,
             recv_timeout: DEFAULT_RECV_TIMEOUT,
+            codec: Codec::Fp32,
+            compressor: Compressor::new(Codec::Fp32),
+            exact_tail: 0,
         }
     }
 
     /// Override the neighbor-wait bound (see [`DEFAULT_RECV_TIMEOUT`]).
     pub fn set_recv_timeout(&mut self, timeout: Duration) {
         self.recv_timeout = timeout;
+    }
+
+    /// Compress sum all-reduce wire hops with `codec` (resets the
+    /// error-feedback residual). All ranks of a world must configure
+    /// the same codec — chunks are decoded by shape, not negotiated.
+    pub fn set_codec(&mut self, codec: Codec) {
+        self.codec = codec;
+        self.compressor = Compressor::new(codec);
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Exempt the last `n` elements of every compressed all-reduce
+    /// from lossy dropping (piggybacked control values).
+    pub fn set_exact_tail(&mut self, n: usize) {
+        self.exact_tail = n;
     }
 
     pub fn comm(&self) -> &Comm {
@@ -114,20 +154,18 @@ impl<'a> Collective<'a> {
         self.comm.send(to, tag, Payload::floats(self.seq, data.to_vec()))
     }
 
-    /// Receive the next `tag` float payload from `from`, stashing any
-    /// unrelated traffic. `expect_len` of `Some(k)` validates the chunk
-    /// length (ring lockstep invariant).
-    fn recv_floats(&mut self, tag: Tag, from: Rank,
-                   expect_len: Option<usize>)
-        -> Result<std::sync::Arc<Vec<f32>>, CommError> {
+    /// Receive the next `tag` envelope from `from`, stashing any
+    /// unrelated traffic (ring lockstep: wrong-source chunks are a
+    /// protocol violation).
+    fn recv_from(&mut self, tag: Tag, from: Rank)
+        -> Result<Envelope, CommError> {
         loop {
             if let Some(i) = self
                 .stash
                 .iter()
                 .position(|e| e.tag == tag && e.src == from)
             {
-                let env = self.stash.remove(i);
-                return Self::unwrap_floats(env, expect_len);
+                return Ok(self.stash.remove(i));
             }
             let env = self.comm.recv_timeout(self.recv_timeout)?;
             if env.tag == tag {
@@ -138,10 +176,46 @@ impl<'a> Collective<'a> {
                         env.src
                     )));
                 }
-                return Self::unwrap_floats(env, expect_len);
+                return Ok(env);
             }
             self.stash.push(env);
         }
+    }
+
+    /// Receive the next `tag` float payload from `from`. `expect_len`
+    /// of `Some(k)` validates the chunk length (ring lockstep
+    /// invariant).
+    fn recv_floats(&mut self, tag: Tag, from: Rank,
+                   expect_len: Option<usize>)
+        -> Result<std::sync::Arc<Vec<f32>>, CommError> {
+        let env = self.recv_from(tag, from)?;
+        Self::unwrap_floats(env, expect_len)
+    }
+
+    /// Receive a raw-or-compressed chunk of exactly `expect_len`
+    /// logical elements.
+    fn recv_chunk(&mut self, tag: Tag, from: Rank, expect_len: usize)
+        -> Result<Payload, CommError> {
+        let env = self.recv_from(tag, from)?;
+        let got = match &env.payload {
+            Payload::Floats { data, .. } => data.len(),
+            Payload::Packed { data, .. } => data.len(),
+            other => {
+                return Err(CommError::Protocol(format!(
+                    "collective: non-float payload {other:?} from \
+                     rank {}",
+                    env.src
+                )))
+            }
+        };
+        if got != expect_len {
+            return Err(CommError::Protocol(format!(
+                "collective: chunk length {got} from rank {} \
+                 (expected {expect_len})",
+                env.src
+            )));
+        }
+        Ok(env.payload)
     }
 
     fn unwrap_floats(env: Envelope, expect_len: Option<usize>)
@@ -172,14 +246,28 @@ impl<'a> Collective<'a> {
     /// (bitwise) on all ranks. Works for any `data.len()`, including
     /// lengths not divisible by — or smaller than — the world size.
     ///
+    /// With a lossy codec configured ([`Collective::set_codec`]), sum
+    /// reductions compress every wire hop (see the module docs); the
+    /// bitwise-identical guarantee still holds. Min/Max always go raw
+    /// (error feedback is a sum-space concept).
+    ///
     /// All ranks must call this the same number of times with
     /// equal-length buffers (lockstep SPMD, like `MPI_Allreduce`).
     pub fn allreduce(&mut self, data: &mut [f32], op: ReduceOp)
         -> Result<(), CommError> {
-        let n = self.comm.size();
-        if n <= 1 {
+        if self.comm.size() <= 1 {
             return Ok(());
         }
+        if self.codec.is_identity() || op != ReduceOp::Sum {
+            self.allreduce_raw(data, op)
+        } else {
+            self.allreduce_compressed(data)
+        }
+    }
+
+    fn allreduce_raw(&mut self, data: &mut [f32], op: ReduceOp)
+        -> Result<(), CommError> {
+        let n = self.comm.size();
         let rank = self.comm.rank();
         let len = data.len();
         let next = self.next_rank();
@@ -215,13 +303,105 @@ impl<'a> Collective<'a> {
         Ok(())
     }
 
+    /// How many trailing elements of chunk `[s0, s1)` fall inside the
+    /// exact tail `[len - exact_tail, len)` (always a chunk suffix).
+    fn protect_len(&self, len: usize, s0: usize, s1: usize) -> usize {
+        let tail_start = len - self.exact_tail.min(len);
+        s1.saturating_sub(s0.max(tail_start))
+    }
+
+    /// Sum all-reduce with compressed wire hops (see the module docs
+    /// for why every rank still finishes bitwise identical).
+    fn allreduce_compressed(&mut self, data: &mut [f32])
+        -> Result<(), CommError> {
+        let n = self.comm.size();
+        let rank = self.comm.rank();
+        let len = data.len();
+        let next = self.next_rank();
+        let prev = self.prev_rank();
+
+        // Phase 1 — reduce-scatter over decoded f32: each hop
+        // compresses its outgoing partial sums with error feedback
+        // (what this round drops rides along next round).
+        for step in 0..n - 1 {
+            let send_idx = (rank + n - step) % n;
+            let recv_idx = (rank + 2 * n - step - 1) % n;
+            let (s0, s1) = Self::chunk_bounds(len, n, send_idx);
+            let protect = self.protect_len(len, s0, s1);
+            let packed = self
+                .compressor
+                .compress_window(&data[s0..s1], s0, len, protect)
+                .expect("lossy codec packs");
+            self.seq += 1;
+            self.comm.send(next, Tag::RingChunk,
+                           Payload::packed(self.seq, 0.0, packed))?;
+            let (r0, r1) = Self::chunk_bounds(len, n, recv_idx);
+            match self.recv_chunk(Tag::RingChunk, prev, r1 - r0)? {
+                Payload::Packed { data: packed, .. } => {
+                    packed.add_into(&mut data[r0..r1]);
+                }
+                Payload::Floats { data: chunk, .. } => {
+                    for (dst, &src) in
+                        data[r0..r1].iter_mut().zip(chunk.iter())
+                    {
+                        *dst += src;
+                    }
+                }
+                _ => unreachable!("recv_chunk validates the kind"),
+            }
+        }
+
+        // Phase 2 — all-gather: the chunk owner compresses its
+        // completed chunk ONCE (adopting the decoded form itself, so
+        // its replica matches everyone else's) and the payload is then
+        // forwarded verbatim around the ring.
+        let mut carry: Option<Payload> = None;
+        for step in 0..n - 1 {
+            let send_idx = (rank + 1 + 2 * n - step) % n;
+            let recv_idx = (rank + 2 * n - step) % n;
+            let payload = match carry.take() {
+                Some(p) => p,
+                None => {
+                    // step 0: our own completed chunk
+                    let (s0, s1) = Self::chunk_bounds(len, n, send_idx);
+                    let protect = self.protect_len(len, s0, s1);
+                    let packed = self
+                        .compressor
+                        .compress_window(&data[s0..s1], s0, len, protect)
+                        .expect("lossy codec packs");
+                    packed.unpack_into(&mut data[s0..s1]);
+                    self.seq += 1;
+                    Payload::packed(self.seq, 0.0, packed)
+                }
+            };
+            self.comm.send(next, Tag::RingChunk, payload)?;
+            let (r0, r1) = Self::chunk_bounds(len, n, recv_idx);
+            let payload =
+                self.recv_chunk(Tag::RingChunk, prev, r1 - r0)?;
+            match &payload {
+                Payload::Packed { data: packed, .. } => {
+                    packed.unpack_into(&mut data[r0..r1]);
+                }
+                Payload::Floats { data: chunk, .. } => {
+                    data[r0..r1].copy_from_slice(chunk);
+                }
+                _ => unreachable!("recv_chunk validates the kind"),
+            }
+            carry = Some(payload);
+        }
+        Ok(())
+    }
+
     /// Single-value all-reduce convenience (e.g. agreeing on the common
     /// per-epoch round count via `ReduceOp::Min`). Exact for integral
-    /// values below 2^24.
+    /// values below 2^24: scalar agreements are control-plane values,
+    /// so they always travel raw regardless of the configured codec.
     pub fn allreduce_scalar(&mut self, value: f32, op: ReduceOp)
         -> Result<f32, CommError> {
         let mut buf = [value];
-        self.allreduce(&mut buf, op)?;
+        if self.comm.size() > 1 {
+            self.allreduce_raw(&mut buf, op)?;
+        }
         Ok(buf[0])
     }
 
@@ -448,5 +628,224 @@ mod tests {
         let mut buf = vec![0.0f32];
         assert!(matches!(col.broadcast(7, &mut buf),
                          Err(CommError::InvalidRank { .. })));
+    }
+
+    // --- compressed collectives -----------------------------------
+
+    use crate::mpi::codec::Codec;
+
+    /// Run one compressed all-reduce; returns (per-rank results,
+    /// per-rank wire bytes sent during it).
+    fn run_compressed(n: usize, inputs: &[Vec<f32>], codec: Codec,
+                      tail: usize, rounds: usize)
+        -> (Vec<Vec<f32>>, Vec<u64>) {
+        let world = inproc_world(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = world
+                .into_iter()
+                .zip(inputs.iter())
+                .map(|(comm, input)| {
+                    s.spawn(move || {
+                        let mut col = Collective::new(&comm);
+                        col.set_codec(codec);
+                        col.set_exact_tail(tail);
+                        let mut buf = input.clone();
+                        let before = comm.bytes_sent();
+                        for r in 0..rounds {
+                            if r > 0 {
+                                buf.copy_from_slice(input);
+                            }
+                            col.allreduce(&mut buf, ReduceOp::Sum)
+                                .unwrap();
+                        }
+                        (buf, comm.bytes_sent() - before)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).unzip()
+        })
+    }
+
+    fn random_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.normal_f32(0.0, 2.0)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn compressed_allreduce_is_bitwise_identical_across_ranks() {
+        for codec in [Codec::Fp16, Codec::TopK { k: 0.25 }] {
+            for n in [2usize, 3, 4, 5] {
+                for len in [1usize, 3, 7, 64, 65] {
+                    let inputs = random_inputs(
+                        n, len, n as u64 * 131 + len as u64);
+                    let (results, _) =
+                        run_compressed(n, &inputs, codec, 0, 1);
+                    let reference = &results[0];
+                    for (r, got) in results.iter().enumerate() {
+                        assert!(
+                            got.iter().zip(reference.iter()).all(
+                                |(a, b)| a.to_bits() == b.to_bits()),
+                            "rank {r} diverged ({codec:?}, n={n}, \
+                             len={len})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_allreduce_tracks_exact_sum() {
+        let n = 4;
+        let len = 64;
+        let inputs = random_inputs(n, len, 99);
+        let reference = ring_order_reference(&inputs, ReduceOp::Sum);
+        let (results, _) =
+            run_compressed(n, &inputs, Codec::Fp16, 0, 1);
+        for (got, want) in results[0].iter().zip(&reference) {
+            // fp16 has ~2^-11 relative precision per hop; a 4-rank
+            // chain stays well inside 1%
+            assert!((got - want).abs() <= 0.01 * want.abs() + 0.01,
+                    "fp16 sum {got} too far from {want}");
+        }
+    }
+
+    #[test]
+    fn exact_tail_survives_topk() {
+        // body elements are huge, tail elements tiny: without
+        // protection top-k would drop the tail every time
+        let n = 4;
+        let len = 34; // 32 body + loss + stop flag
+        let mut inputs = random_inputs(n, len, 7);
+        for (r, input) in inputs.iter_mut().enumerate() {
+            for v in input.iter_mut() {
+                *v *= 100.0;
+            }
+            input[len - 2] = 0.25 + r as f32; // loss-like, f32-exact
+            input[len - 1] = if r == 2 { 1.0 } else { 0.0 }; // flag
+        }
+        let reference = ring_order_reference(&inputs, ReduceOp::Sum);
+        let (results, _) = run_compressed(
+            n, &inputs, Codec::TopK { k: 0.1 }, 2, 1);
+        for got in &results {
+            assert_eq!(got[len - 2], reference[len - 2],
+                       "protected loss must be the exact f32 chain sum");
+            assert_eq!(got[len - 1], 1.0, "stop flag must survive");
+        }
+    }
+
+    #[test]
+    fn min_max_and_scalar_ignore_the_codec() {
+        // Min/Max reductions and scalar agreements must stay exact
+        // even when a lossy codec is configured (raw fallback) —
+        // including SUM scalars whose values fp16 cannot represent.
+        let n = 3;
+        let world = inproc_world(n);
+        let results: Vec<(f32, f32, Vec<f32>)> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = world
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, comm)| {
+                        s.spawn(move || {
+                            let mut col = Collective::new(&comm);
+                            col.set_codec(Codec::Fp16);
+                            let min = col
+                                .allreduce_scalar(10.0 + r as f32,
+                                                  ReduceOp::Min)
+                                .unwrap();
+                            // 70001+70002+70003: each addend already
+                            // overflows fp16 — must stay exact
+                            let sum = col
+                                .allreduce_scalar(
+                                    70001.0 + r as f32,
+                                    ReduceOp::Sum)
+                                .unwrap();
+                            col.set_codec(Codec::TopK { k: 0.1 });
+                            let mut buf = vec![r as f32 + 0.125; 8];
+                            col.allreduce(&mut buf, ReduceOp::Max)
+                                .unwrap();
+                            (min, sum, buf)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+        for (min, sum, maxes) in &results {
+            assert_eq!(*min, 10.0);
+            assert_eq!(*sum, 210_006.0);
+            assert!(maxes.iter().all(|&v| v == 2.125));
+        }
+    }
+
+    #[test]
+    fn compression_cuts_wire_bytes_per_round() {
+        let n = 4;
+        let len = 4098; // gradient-sized, non-divisible by n
+        let inputs = random_inputs(n, len, 5);
+        let rounds = 3;
+        let bytes = |codec| {
+            let (_, b) = run_compressed(n, &inputs, codec, 2, rounds);
+            b.iter().sum::<u64>() as f64 / rounds as f64
+        };
+        let raw = bytes(Codec::Fp32);
+        let fp16 = bytes(Codec::Fp16);
+        let topk = bytes(Codec::TopK { k: 0.1 });
+        assert!(fp16 < 0.6 * raw,
+                "fp16 {fp16} should be < 60% of fp32 {raw}");
+        assert!(topk < 0.25 * raw,
+                "topk:0.1 {topk} should be < 25% of fp32 {raw}");
+    }
+
+    #[test]
+    fn error_feedback_delivers_dropped_mass_over_rounds() {
+        // Repeatedly all-reduce the SAME gradients under heavy top-k:
+        // cumulative delivered mass must track rounds * true sum
+        // (residuals bounded), the property that keeps top-k training
+        // convergent.
+        let n = 4;
+        let len = 40;
+        let inputs = random_inputs(n, len, 11);
+        let true_sum = ring_order_reference(&inputs, ReduceOp::Sum);
+        let rounds = 300;
+        let world = inproc_world(n);
+        let applied: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = world
+                .into_iter()
+                .zip(inputs.iter())
+                .map(|(comm, input)| {
+                    s.spawn(move || {
+                        let mut col = Collective::new(&comm);
+                        col.set_codec(Codec::TopK { k: 0.1 });
+                        let mut total = vec![0.0f64; input.len()];
+                        let mut buf = input.clone();
+                        for r in 0..rounds {
+                            if r > 0 {
+                                buf.copy_from_slice(input);
+                            }
+                            col.allreduce(&mut buf, ReduceOp::Sum)
+                                .unwrap();
+                            for (t, &v) in total.iter_mut().zip(&buf) {
+                                *t += v as f64;
+                            }
+                        }
+                        total
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut err2 = 0.0f64;
+        let mut ref2 = 0.0f64;
+        for (i, &want) in true_sum.iter().enumerate() {
+            let target = rounds as f64 * want as f64;
+            err2 += (applied[0][i] - target).powi(2);
+            ref2 += target.powi(2);
+        }
+        let rel = (err2 / ref2).sqrt();
+        assert!(rel < 0.05,
+                "cumulative delivery drifted: rel err {rel:.4}");
     }
 }

@@ -13,6 +13,15 @@
 //! Float payloads are little-endian f32; the `Stats` payload is a small
 //! fixed struct. CRC is delegated to TCP's checksum; the frame length is
 //! validated on decode.
+//!
+//! Codec-compressed float buffers ([`crate::mpi::codec`]) travel as the
+//! self-describing `Packed` kind:
+//!
+//! ```text
+//! [u64 step] [f32 loss] [u32 enc] [u32 n] [encoding-specific bytes]
+//!   enc 1 (fp16):  n * u16 binary16 bit patterns
+//!   enc 2 (top-k): [u32 nnz] [nnz * u32 idx] [nnz * f32 val]
+//! ```
 
 pub type Rank = usize;
 
@@ -87,6 +96,14 @@ pub enum Payload {
     /// A gradient: the worker's base weight step (for staleness
     /// accounting) + the batch training loss + the flat gradient.
     Grad { step: u64, loss: f32, data: Vec<f32> },
+    /// A codec-compressed float buffer standing in for `Floats` or
+    /// `Grad` (weight replicas carry `loss = 0.0`). `Arc` so ring
+    /// all-gather hops forward one owner-compressed payload verbatim.
+    Packed {
+        step: u64,
+        loss: f32,
+        data: std::sync::Arc<crate::mpi::codec::PackedF32>,
+    },
 }
 
 impl Payload {
@@ -104,23 +121,58 @@ impl Payload {
         Payload::Grad { step, loss, data }
     }
 
+    pub fn packed(step: u64, loss: f32,
+                  data: crate::mpi::codec::PackedF32) -> Self {
+        Payload::Packed { step, loss, data: std::sync::Arc::new(data) }
+    }
+
+    /// View a weight-like payload (`Floats` or `Packed`) as
+    /// (step, dense data), decoding the compressed form if needed.
+    /// `None` for payloads that carry no float buffer.
+    pub fn weights_like(self)
+        -> Option<(u64, std::sync::Arc<Vec<f32>>)> {
+        match self {
+            Payload::Floats { step, data } => Some((step, data)),
+            Payload::Packed { step, data, .. } => {
+                Some((step, std::sync::Arc::new(data.unpack())))
+            }
+            _ => None,
+        }
+    }
+
+    /// View a gradient-like payload (`Grad` or `Packed`) as
+    /// (step, loss, dense gradient), decoding if needed.
+    pub fn grad_like(self) -> Option<(u64, f32, Vec<f32>)> {
+        match self {
+            Payload::Grad { step, loss, data } => {
+                Some((step, loss, data))
+            }
+            Payload::Packed { step, loss, data } => {
+                Some((step, loss, data.unpack()))
+            }
+            _ => None,
+        }
+    }
+
     fn kind(&self) -> u32 {
         match self {
             Payload::Empty => 0,
             Payload::Floats { .. } => 1,
             Payload::Stats(_) => 2,
             Payload::Grad { .. } => 3,
+            Payload::Packed { .. } => 4,
         }
     }
 
-    /// Approximate wire size (used by the simulator's cost model and the
-    /// comm microbench).
+    /// Exact wire size (used by the simulator's cost model, the comm
+    /// byte counters, and the bench-smoke CI gate).
     pub fn nbytes(&self) -> usize {
         16 + match self {
             Payload::Empty => 0,
             Payload::Floats { data, .. } => 8 + data.len() * 4,
             Payload::Stats(_) => 40,
             Payload::Grad { data, .. } => 12 + data.len() * 4,
+            Payload::Packed { data, .. } => 12 + data.wire_nbytes(),
         }
     }
 }
@@ -141,6 +193,10 @@ pub enum WireError {
     Truncated { need: usize, have: usize },
     UnknownTag(u32),
     UnknownKind(u32),
+    /// Unknown codec encoding id in a `Packed` payload.
+    UnknownEnc(u32),
+    /// Structurally invalid `Packed` body (e.g. sparse index >= n).
+    Corrupt(&'static str),
 }
 
 impl std::fmt::Display for WireError {
@@ -153,15 +209,59 @@ impl std::fmt::Display for WireError {
             WireError::UnknownKind(k) => {
                 write!(f, "unknown payload kind {k}")
             }
+            WireError::UnknownEnc(e) => {
+                write!(f, "unknown packed encoding {e}")
+            }
+            WireError::Corrupt(msg) => {
+                write!(f, "corrupt packed payload: {msg}")
+            }
         }
     }
 }
 
 impl std::error::Error for WireError {}
 
+/// Append a slice of plain-old-data values as little-endian bytes.
+/// On little-endian hosts this is one bulk copy (the gradient hot
+/// path); big-endian hosts fall back to per-element conversion.
+macro_rules! le_slice_io {
+    ($write:ident, $read:ident, $ty:ty, $size:expr) => {
+        pub(crate) fn $write(out: &mut Vec<u8>, data: &[$ty]) {
+            #[cfg(target_endian = "little")]
+            {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8, data.len() * $size)
+                };
+                out.extend_from_slice(bytes);
+            }
+            #[cfg(not(target_endian = "little"))]
+            {
+                for v in data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+
+        /// Decode the whole body as little-endian values (length must
+        /// be a multiple of the element size; a ragged tail is
+        /// dropped, which the callers' length checks rule out).
+        pub(crate) fn $read(body: &[u8]) -> Vec<$ty> {
+            body.chunks_exact($size)
+                .map(|c| <$ty>::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        }
+    };
+}
+
+le_slice_io!(write_f32_slice, read_f32_slice, f32, 4);
+le_slice_io!(write_u16_slice, read_u16_slice, u16, 2);
+le_slice_io!(write_u32_slice, read_u32_slice, u32, 4);
+
 /// Encode (tag, payload) into a frame body (the TCP transport adds the
 /// outer [u32 src][u64 len] header).
 pub fn encode(tag: Tag, payload: &Payload) -> Vec<u8> {
+    use crate::mpi::codec::PackedF32;
     let mut out = Vec::with_capacity(payload.nbytes());
     out.extend_from_slice(&(tag as u32).to_le_bytes());
     out.extend_from_slice(&payload.kind().to_le_bytes());
@@ -173,12 +273,7 @@ pub fn encode(tag: Tag, payload: &Payload) -> Vec<u8> {
             out.extend_from_slice(&((8 + data.len() * 4) as u64)
                 .to_le_bytes());
             out.extend_from_slice(&step.to_le_bytes());
-            // bulk little-endian f32 copy
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(
-                    data.as_ptr() as *const u8, data.len() * 4)
-            };
-            out.extend_from_slice(bytes);
+            write_f32_slice(&mut out, data);
         }
         Payload::Stats(s) => {
             out.extend_from_slice(&40u64.to_le_bytes());
@@ -194,14 +289,79 @@ pub fn encode(tag: Tag, payload: &Payload) -> Vec<u8> {
                 .to_le_bytes());
             out.extend_from_slice(&step.to_le_bytes());
             out.extend_from_slice(&loss.to_le_bytes());
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(
-                    data.as_ptr() as *const u8, data.len() * 4)
-            };
-            out.extend_from_slice(bytes);
+            write_f32_slice(&mut out, data);
+        }
+        Payload::Packed { step, loss, data } => {
+            out.extend_from_slice(
+                &((12 + data.wire_nbytes()) as u64).to_le_bytes());
+            out.extend_from_slice(&step.to_le_bytes());
+            out.extend_from_slice(&loss.to_le_bytes());
+            match data.as_ref() {
+                PackedF32::F16(bits) => {
+                    out.extend_from_slice(&1u32.to_le_bytes());
+                    out.extend_from_slice(
+                        &(bits.len() as u32).to_le_bytes());
+                    write_u16_slice(&mut out, bits);
+                }
+                PackedF32::Sparse { n, idx, val } => {
+                    out.extend_from_slice(&2u32.to_le_bytes());
+                    out.extend_from_slice(&n.to_le_bytes());
+                    out.extend_from_slice(
+                        &(idx.len() as u32).to_le_bytes());
+                    write_u32_slice(&mut out, idx);
+                    write_f32_slice(&mut out, val);
+                }
+            }
         }
     }
     out
+}
+
+/// Decode the `Packed` kind's body (after step + loss).
+fn decode_packed(body: &[u8])
+    -> Result<crate::mpi::codec::PackedF32, WireError> {
+    use crate::mpi::codec::PackedF32;
+    if body.len() < 8 {
+        return Err(WireError::Truncated { need: 8, have: body.len() });
+    }
+    let enc = u32::from_le_bytes(body[0..4].try_into().unwrap());
+    let n = u32::from_le_bytes(body[4..8].try_into().unwrap()) as usize;
+    let rest = &body[8..];
+    match enc {
+        1 => {
+            if rest.len() != 2 * n {
+                return Err(WireError::Truncated { need: 8 + 2 * n,
+                                                  have: body.len() });
+            }
+            Ok(PackedF32::F16(read_u16_slice(rest)))
+        }
+        2 => {
+            if rest.len() < 4 {
+                return Err(WireError::Truncated { need: 12,
+                                                  have: body.len() });
+            }
+            let nnz =
+                u32::from_le_bytes(rest[0..4].try_into().unwrap())
+                    as usize;
+            if nnz > n {
+                return Err(WireError::Corrupt("sparse nnz > n"));
+            }
+            if rest.len() != 4 + 8 * nnz {
+                return Err(WireError::Truncated {
+                    need: 12 + 8 * nnz,
+                    have: body.len(),
+                });
+            }
+            let idx = read_u32_slice(&rest[4..4 + 4 * nnz]);
+            if idx.iter().any(|&i| i as usize >= n) {
+                return Err(WireError::Corrupt(
+                    "sparse index out of range"));
+            }
+            let val = read_f32_slice(&rest[4 + 4 * nnz..]);
+            Ok(PackedF32::Sparse { n: n as u32, idx, val })
+        }
+        e => Err(WireError::UnknownEnc(e)),
+    }
 }
 
 pub fn decode(buf: &[u8]) -> Result<(Tag, Payload), WireError> {
@@ -226,10 +386,7 @@ pub fn decode(buf: &[u8]) -> Result<(Tag, Payload), WireError> {
                                                   have: body.len() });
             }
             let step = u64::from_le_bytes(body[0..8].try_into().unwrap());
-            let data: Vec<f32> = body[8..]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
+            let data = read_f32_slice(&body[8..]);
             Payload::Floats { step, data: std::sync::Arc::new(data) }
         }
         2 => {
@@ -258,11 +415,19 @@ pub fn decode(buf: &[u8]) -> Result<(Tag, Payload), WireError> {
             }
             let step = u64::from_le_bytes(body[0..8].try_into().unwrap());
             let loss = f32::from_le_bytes(body[8..12].try_into().unwrap());
-            let data = body[12..]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
+            let data = read_f32_slice(&body[12..]);
             Payload::Grad { step, loss, data }
+        }
+        4 => {
+            if body.len() < 12 {
+                return Err(WireError::Truncated { need: 12,
+                                                  have: body.len() });
+            }
+            let step = u64::from_le_bytes(body[0..8].try_into().unwrap());
+            let loss = f32::from_le_bytes(body[8..12].try_into().unwrap());
+            let data = decode_packed(&body[12..])?;
+            Payload::Packed { step, loss,
+                              data: std::sync::Arc::new(data) }
         }
         k => return Err(WireError::UnknownKind(k)),
     };
@@ -336,14 +501,94 @@ mod tests {
 
     #[test]
     fn nbytes_matches_encoding() {
+        use crate::mpi::codec::Codec;
         for p in [
             Payload::Empty,
             Payload::floats(1, vec![0.5; 123]),
             Payload::Stats(WorkerStats::default()),
             Payload::grad(2, 0.5, vec![1.0; 17]),
+            Payload::packed(3, 0.25,
+                            Codec::Fp16.pack(&[0.5; 9]).unwrap()),
+            Payload::packed(4, 0.0,
+                            Codec::TopK { k: 0.3 }
+                                .pack(&[1.0, -2.0, 0.0, 4.0, 0.5])
+                                .unwrap()),
         ] {
             assert_eq!(encode(Tag::Ping, &p).len(), p.nbytes());
         }
+    }
+
+    #[test]
+    fn roundtrip_packed_fp16() {
+        use crate::mpi::codec::Codec;
+        let data: Vec<f32> = (0..33).map(|i| i as f32 * 0.25 - 4.0)
+            .collect();
+        let p = Payload::packed(9, 1.5, Codec::Fp16.pack(&data).unwrap());
+        let buf = encode(Tag::Gradients, &p);
+        let (tag, q) = decode(&buf).unwrap();
+        assert_eq!(tag, Tag::Gradients);
+        assert_eq!(q, p);
+        // fp16 wire: outer 16 + step 8 + loss 4 + enc/n header 8 + 2/elem
+        assert_eq!(buf.len(), 16 + 12 + 8 + 2 * 33);
+        match q.weights_like() {
+            Some((step, dense)) => {
+                assert_eq!(step, 9);
+                assert_eq!(*dense, data); // quarter-steps are f16-exact
+            }
+            None => panic!("packed must decode as weights-like"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_packed_sparse() {
+        use crate::mpi::codec::Codec;
+        let data = [0.0f32, -7.0, 0.0, 0.0, 2.5, 0.0];
+        let p = Payload::packed(
+            5, 0.75, Codec::TopK { k: 0.34 }.pack(&data).unwrap());
+        let buf = encode(Tag::Gradients, &p);
+        let (tag, q) = decode(&buf).unwrap();
+        assert_eq!(tag, Tag::Gradients);
+        assert_eq!(q, p);
+        match q.grad_like() {
+            Some((step, loss, dense)) => {
+                assert_eq!(step, 5);
+                assert_eq!(loss, 0.75);
+                assert_eq!(dense, data.to_vec());
+            }
+            None => panic!("packed must decode as grad-like"),
+        }
+        // truncation anywhere must error, never panic
+        for cut in 0..buf.len() {
+            assert!(decode(&buf[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_packed_rejected() {
+        use crate::mpi::codec::Codec;
+        let p = Payload::packed(
+            1, 0.0, Codec::TopK { k: 0.5 }.pack(&[1.0, 2.0]).unwrap());
+        let buf = encode(Tag::Gradients, &p);
+        // unknown encoding id
+        let mut bad = buf.clone();
+        bad[16 + 12] = 0x7F;
+        assert!(matches!(decode(&bad), Err(WireError::UnknownEnc(_))));
+        // sparse index out of range (idx array starts after
+        // 16 outer + 12 step/loss + 8 enc/n + 4 nnz)
+        let mut bad = buf.clone();
+        bad[16 + 12 + 8 + 4] = 0xEE;
+        assert!(matches!(decode(&bad), Err(WireError::Corrupt(_))));
+    }
+
+    #[test]
+    fn f32_slice_helpers_roundtrip() {
+        let data = [1.5f32, -0.25, f32::MIN_POSITIVE, 3.4e38];
+        let mut buf = Vec::new();
+        write_f32_slice(&mut buf, &data);
+        assert_eq!(buf.len(), 16);
+        assert_eq!(read_f32_slice(&buf), data.to_vec());
+        // explicit little-endian byte order
+        assert_eq!(&buf[0..4], &1.5f32.to_le_bytes());
     }
 
     #[test]

@@ -12,11 +12,13 @@
 //!
 //! See DESIGN.md §Substitutions for the fidelity argument.
 
+pub mod codec;
 pub mod collective;
 pub mod comm;
 pub mod message;
 pub mod transport;
 
+pub use codec::{Codec, Compressor, PackedF32};
 pub use collective::{Collective, ReduceOp};
 pub use comm::{Comm, CommError};
 pub use message::{Envelope, Payload, Rank, Tag, WorkerStats};

@@ -243,6 +243,7 @@ mod tests {
             bandwidth_bytes_per_s: 5e9,
             msg_bytes: 13_000.0,
             jitter: 0.0,
+            wire_ratio: 1.0,
         }
     }
 

@@ -1,5 +1,6 @@
 //! Cost model + workload shape for the protocol simulator.
 
+use crate::mpi::codec::Codec;
 use crate::util::rng::Rng;
 
 /// Calibrated cost parameters.
@@ -27,6 +28,12 @@ pub struct CostModel {
     /// Multiplicative gradient-time jitter (0 = deterministic; 0.2 means
     /// +-~20% lognormal-ish spread). Real clusters always have some.
     pub jitter: f64,
+    /// Wire bytes per payload byte after compression (1.0 = raw f32;
+    /// see [`Codec::wire_ratio`]). Scales the bandwidth term of both
+    /// the PS transfer time and the ring all-reduce — latency is
+    /// unaffected, which is exactly why compression helps most in the
+    /// bandwidth-bound regime.
+    pub wire_ratio: f64,
 }
 
 impl CostModel {
@@ -41,6 +48,7 @@ impl CostModel {
             bandwidth_bytes_per_s: 2.0e10,
             msg_bytes: (n_params * 4 + 28) as f64,
             jitter: 0.05,
+            wire_ratio: 1.0,
         }
     }
 
@@ -68,6 +76,7 @@ impl CostModel {
             bandwidth_bytes_per_s: 6.8e9,
             msg_bytes: (n_params * 4 + 28) as f64,
             jitter: 0.1,
+            wire_ratio: 1.0,
         }
     }
 
@@ -82,7 +91,14 @@ impl CostModel {
             bandwidth_bytes_per_s: 6.8e9, // FDR ~56 Gb/s
             msg_bytes: (n_params * 4 + 28) as f64,
             jitter: 0.1,
+            wire_ratio: 1.0,
         }
+    }
+
+    /// Apply a wire codec's volume reduction (see [`Codec::wire_ratio`]).
+    pub fn with_compression(mut self, codec: Codec) -> CostModel {
+        self.wire_ratio = codec.wire_ratio();
+        self
     }
 
     /// Nominal (jitter-free) gradient time for a batch.
@@ -103,7 +119,9 @@ impl CostModel {
 
     /// One-way transfer time of a weight/gradient message.
     pub fn transfer_time(&self) -> f64 {
-        self.latency + self.msg_bytes / self.bandwidth_bytes_per_s
+        self.latency
+            + self.msg_bytes * self.wire_ratio
+                / self.bandwidth_bytes_per_s
     }
 
     /// Wall time of one chunked ring all-reduce over `n` ranks: the
@@ -116,7 +134,7 @@ impl CostModel {
             return 0.0;
         }
         let steps = 2.0 * (n as f64 - 1.0);
-        let chunk_bytes = self.msg_bytes / n as f64;
+        let chunk_bytes = self.msg_bytes * self.wire_ratio / n as f64;
         steps * (self.latency + chunk_bytes / self.bandwidth_bytes_per_s)
     }
 }
@@ -180,6 +198,32 @@ mod tests {
             ..CostModel::shared_memory(100)
         };
         assert!((c.transfer_time() - (1e-5 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_scales_the_bandwidth_term_only() {
+        let c = CostModel {
+            latency: 1e-5,
+            bandwidth_bytes_per_s: 1e9,
+            msg_bytes: 1e6,
+            ..CostModel::shared_memory(100)
+        };
+        let half = c.clone().with_compression(Codec::Fp16);
+        assert!((half.transfer_time() - (1e-5 + 5e-4)).abs() < 1e-12);
+        let sparse = c.clone()
+            .with_compression(Codec::TopK { k: 0.1 });
+        assert!((sparse.transfer_time() - (1e-5 + 2e-4)).abs() < 1e-12);
+        // the ring's bandwidth term halves too; its latency term does
+        // not — compression cannot beat the 2(n-1) lockstep floor
+        let t_raw = c.ring_allreduce_time(8);
+        let t_half = half.ring_allreduce_time(8);
+        let floor = 2.0 * 7.0 * c.latency;
+        assert!(t_half < t_raw);
+        assert!(t_half > floor);
+        assert!((t_raw - floor) / (t_half - floor) > 1.99);
+        // identity codec is a no-op
+        let same = c.clone().with_compression(Codec::Fp32);
+        assert_eq!(same.transfer_time(), c.transfer_time());
     }
 
     #[test]

@@ -100,6 +100,18 @@ pub fn write_csv(path: &str, header: &[&str], rows: &[Vec<String>])
     Ok(())
 }
 
+/// Write a JSON document next to the bench output (machine-readable
+/// summaries for the CI bench-smoke gate; see .github/workflows).
+pub fn write_json(path: &str, value: &crate::util::json::Json)
+    -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", value.to_string_pretty())
+}
+
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {

@@ -1,0 +1,270 @@
+//! End-to-end tests of wire-level gradient compression (mpi::codec)
+//! across the training modes, on the native CPU backend.
+//!
+//! Key invariants:
+//! - `Mode::AllReduce` keeps bitwise-identical weights on every rank
+//!   under every codec (the all-gather replicates owner-compressed
+//!   payloads verbatim);
+//! - top-k with error feedback stays within 2% validation accuracy of
+//!   fp32 on the quickstart problem;
+//! - the PS paths (Downpour, EASGD, hierarchy) train end-to-end with a
+//!   codec configured, and the compressed public-API path works via
+//!   `Experiment::compression`.
+
+use mpi_learn::coordinator::callbacks::Observer;
+use mpi_learn::coordinator::worker::RingWorker;
+use mpi_learn::coordinator::{train, Algo, Data, Experiment,
+                             HierarchySpec, Mode, ModelBuilder,
+                             TrainConfig, Transport};
+use mpi_learn::data::{generate_shard, DataSet, GeneratorConfig};
+use mpi_learn::mpi::Codec;
+use mpi_learn::runtime::Session;
+use mpi_learn::util::rng::Rng;
+
+fn allreduce_cfg(workers: usize, batch: usize, epochs: u32,
+                 compression: Codec) -> TrainConfig {
+    TrainConfig {
+        builder: ModelBuilder::new("mlp", batch),
+        algo: Algo {
+            mode: Mode::AllReduce,
+            batch_size: batch,
+            epochs,
+            max_val_batches: 4,
+            compression,
+            ..Algo::default()
+        },
+        n_workers: workers,
+        seed: 11,
+        transport: Transport::Inproc,
+        hierarchy: None,
+        callbacks: Vec::new(),
+    }
+}
+
+fn synthetic(samples_per_worker: usize) -> Data {
+    Data::Synthetic {
+        gen: GeneratorConfig { seed: 5, ..Default::default() },
+        samples_per_worker,
+        val_samples: 250,
+    }
+}
+
+/// Run the raw RingWorker on `n` ranks with the given codec and return
+/// every rank's final weights.
+fn ring_weights(codec: Codec, n: usize)
+    -> Vec<mpi_learn::tensor::ParamSet> {
+    let session = Session::native().unwrap();
+    let exes = session.executables("mlp_b10").unwrap();
+    let algo = Algo {
+        mode: Mode::AllReduce,
+        batch_size: 10,
+        epochs: 2,
+        compression: codec,
+        ..Algo::default()
+    };
+    let gen = GeneratorConfig { seed: 21, ..Default::default() };
+    let mut rng = Rng::new(3);
+    let datasets: Vec<DataSet> = (0..n)
+        .map(|_| DataSet::from_shard(generate_shard(&gen, 80, &mut rng)))
+        .collect();
+    let init = exes.init_params(&mut Rng::new(7));
+
+    let world = mpi_learn::mpi::inproc_world(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                let ds = &datasets[rank];
+                let algo = &algo;
+                let exes = exes.clone();
+                let init = if rank == 0 { Some(init.clone()) }
+                           else { None };
+                s.spawn(move || {
+                    RingWorker::new(&comm, algo, &exes, ds,
+                                    100 + rank as u64, None)
+                        .run(init, &mut Observer::disabled())
+                        .unwrap()
+                        .weights
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn fp16_allreduce_ranks_end_bitwise_identical() {
+    // Satellite (ISSUE 3): 4 ranks under fp16 compression still finish
+    // with bitwise-identical weights.
+    let weights = ring_weights(Codec::Fp16, 4);
+    let reference = &weights[0];
+    for (rank, w) in weights.iter().enumerate().skip(1) {
+        assert_eq!(w, reference, "rank {rank} diverged under fp16");
+    }
+    // and fp16 training actually moved somewhere close to fp32
+    let raw = ring_weights(Codec::Fp32, 4);
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for (a, b) in reference.flat().iter().zip(raw[0].flat()) {
+        num += (f64::from(*a) - f64::from(*b)).powi(2);
+        den += f64::from(*b).powi(2);
+    }
+    let rel = (num / den).sqrt();
+    assert!(rel < 0.15,
+            "fp16 weights drifted {rel:.4} relative from fp32");
+}
+
+#[test]
+fn topk_allreduce_ranks_end_bitwise_identical() {
+    let weights = ring_weights(Codec::TopK { k: 0.1 }, 4);
+    let reference = &weights[0];
+    for (rank, w) in weights.iter().enumerate().skip(1) {
+        assert_eq!(w, reference, "rank {rank} diverged under topk");
+    }
+}
+
+#[test]
+fn topk_with_error_feedback_tracks_fp32_accuracy() {
+    // Satellite (ISSUE 3): top-k (k = 10%) with error feedback reaches
+    // accuracy within 2% of fp32 on the quickstart problem.
+    let session = Session::native().unwrap();
+    let data = synthetic(250);
+    let fp32 = train(&session,
+                     &allreduce_cfg(4, 25, 4, Codec::Fp32), &data)
+        .unwrap();
+    let topk = train(&session,
+                     &allreduce_cfg(4, 25, 4, Codec::TopK { k: 0.1 }),
+                     &data)
+        .unwrap();
+    let acc_fp32 = fp32.history.final_val_acc().expect("fp32 val");
+    let acc_topk = topk.history.final_val_acc().expect("topk val");
+    assert!(acc_fp32 > 0.6, "fp32 baseline failed to train: {acc_fp32}");
+    assert!(acc_topk >= acc_fp32 - 0.02,
+            "topk acc {acc_topk} fell > 2% below fp32 acc {acc_fp32}");
+}
+
+#[test]
+fn fp16_allreduce_end_to_end_over_both_transports() {
+    let session = Session::native().unwrap();
+    let result = train(&session, &allreduce_cfg(4, 25, 2, Codec::Fp16),
+                       &synthetic(250))
+        .unwrap();
+    assert_eq!(result.history.master_updates, 20);
+    let acc = result.history.final_val_acc().expect("final validation");
+    assert!(acc > 0.6, "fp16 allreduce final val acc {acc}");
+
+    let mut cfg = allreduce_cfg(3, 20, 1, Codec::Fp16);
+    cfg.transport = Transport::Tcp { base_port: 46750 };
+    let result = train(&session, &cfg, &synthetic(100)).unwrap();
+    assert_eq!(result.history.master_updates, 5);
+}
+
+#[test]
+fn downpour_trains_under_fp16_and_topk() {
+    // PS path: compressed gradient uplink (error feedback) + fp16
+    // weight downlink; topk leaves the downlink raw.
+    let session = Session::native().unwrap();
+    for codec in [Codec::Fp16, Codec::TopK { k: 0.25 }] {
+        let cfg = TrainConfig {
+            builder: ModelBuilder::new("mlp", 20),
+            algo: Algo {
+                batch_size: 20,
+                epochs: 2,
+                max_val_batches: 4,
+                compression: codec,
+                ..Algo::default()
+            },
+            n_workers: 2,
+            seed: 13,
+            transport: Transport::Inproc,
+            hierarchy: None,
+            callbacks: Vec::new(),
+        };
+        let result = train(&session, &cfg, &synthetic(200)).unwrap();
+        assert_eq!(result.history.master_updates, 2 * 2 * 10,
+                   "{codec:?}");
+        let acc = result.history.final_val_acc().expect("validation");
+        assert!(acc > 0.6, "downpour {codec:?} final val acc {acc}");
+    }
+}
+
+#[test]
+fn sync_downpour_and_easgd_train_under_fp16() {
+    let session = Session::native().unwrap();
+    let mut cfg = TrainConfig {
+        builder: ModelBuilder::new("mlp", 20),
+        algo: Algo {
+            mode: Mode::Downpour { sync: true },
+            batch_size: 20,
+            epochs: 2,
+            max_val_batches: 4,
+            compression: Codec::Fp16,
+            ..Algo::default()
+        },
+        n_workers: 2,
+        seed: 13,
+        transport: Transport::Inproc,
+        hierarchy: None,
+        callbacks: Vec::new(),
+    };
+    let result = train(&session, &cfg, &synthetic(200)).unwrap();
+    assert!(result.history.master_updates > 0);
+    let acc = result.history.final_val_acc().expect("validation");
+    assert!(acc > 0.6, "sync downpour fp16 final val acc {acc}");
+
+    cfg.algo.mode = Mode::Easgd {
+        tau: 5,
+        alpha: 0.5,
+        worker_optimizer:
+            mpi_learn::optim::OptimizerConfig::Sgd { lr: 0.05 },
+    };
+    let result = train(&session, &cfg, &synthetic(200)).unwrap();
+    assert!(result.history.master_updates > 0,
+            "easgd fp16 made no exchanges");
+}
+
+#[test]
+fn hierarchy_trains_under_fp16() {
+    let session = Session::native().unwrap();
+    let cfg = TrainConfig {
+        builder: ModelBuilder::new("mlp", 20),
+        algo: Algo {
+            batch_size: 20,
+            epochs: 1,
+            max_val_batches: 4,
+            compression: Codec::Fp16,
+            ..Algo::default()
+        },
+        n_workers: 4,
+        seed: 17,
+        transport: Transport::Inproc,
+        hierarchy: Some(HierarchySpec {
+            n_groups: 2,
+            workers_per_group: 2,
+            sync_every: 3,
+        }),
+        callbacks: Vec::new(),
+    };
+    let result = train(&session, &cfg, &synthetic(100)).unwrap();
+    assert!(result.history.master_updates > 0,
+            "hierarchical fp16 synced nothing upward");
+}
+
+#[test]
+fn experiment_facade_carries_compression() {
+    // The compressed public-API path (quickstart's --compression flag
+    // maps exactly onto this chain).
+    let session = Session::native().unwrap();
+    let result = Experiment::new("mlp")
+        .batch(25)
+        .workers(4)
+        .epochs(1)
+        .allreduce()
+        .compression(Codec::Fp16)
+        .synthetic(100, 100)
+        .max_val_batches(4)
+        .run(&session)
+        .unwrap();
+    assert_eq!(result.history.master_updates, 4);
+    assert!(result.history.final_val_acc().is_some());
+}

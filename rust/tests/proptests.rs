@@ -9,6 +9,7 @@ use std::path::PathBuf;
 
 use mpi_learn::data::loader::{divide_files, division_is_partition};
 use mpi_learn::data::{generate_shard, DataSet, GeneratorConfig};
+use mpi_learn::mpi::codec::Codec;
 use mpi_learn::mpi::message::{decode, encode, Payload, Tag, WorkerStats};
 use mpi_learn::simulator::{simulate_async, simulate_sync, CostModel,
                            SimConfig};
@@ -90,6 +91,93 @@ fn prop_wire_roundtrip_random_payloads() {
         // truncation must never panic, only error
         let cut = rng.usize_below(buf.len().max(1));
         let _ = decode(&buf[..cut]);
+        Ok(())
+    });
+}
+
+/// Satellite (ISSUE 3): every float-carrying payload round-trips the
+/// wire through all three codecs — including empty, odd-length, and
+/// NaN/Inf-bearing buffers. NaN breaks `PartialEq`, so the property is
+/// byte-level idempotence: re-encoding the decoded payload must
+/// reproduce the exact frame.
+#[test]
+fn prop_codec_wire_roundtrip_edge_buffers() {
+    check("codec-wire-roundtrip", cases(300), |rng| {
+        // deliberately include the edge lengths every time lengths
+        // are drawn small
+        let len = match rng.usize_below(6) {
+            0 => 0,
+            1 => 1,
+            2 => gen::usize_in(rng, 3, 9) | 1, // odd
+            _ => gen::usize_in(rng, 2, 2000),
+        };
+        let mut data = gen::f32_vec(rng, len, 100.0);
+        // sprinkle non-finite values and halves-exact values
+        for v in data.iter_mut() {
+            match rng.usize_below(12) {
+                0 => *v = f32::NAN,
+                1 => *v = f32::INFINITY,
+                2 => *v = f32::NEG_INFINITY,
+                3 => *v = 0.0,
+                4 => *v = 1e9,  // overflows fp16 -> Inf
+                5 => *v = 1e-9, // underflows fp16 -> 0
+                _ => {}
+            }
+        }
+        let codecs = [
+            Codec::Fp32,
+            Codec::Fp16,
+            Codec::TopK { k: 0.1 },
+            Codec::TopK { k: 1.0 },
+        ];
+        for codec in codecs {
+            let step = rng.next_u64();
+            let loss = rng.normal_f32(0.0, 5.0);
+            let payload = match codec.pack(&data) {
+                Some(p) => Payload::packed(step, loss, p),
+                None => Payload::grad(step, loss, data.clone()),
+            };
+            let buf = encode(Tag::Gradients, &payload);
+            if buf.len() != payload.nbytes() {
+                return Err(format!("{codec:?}: nbytes mismatch"));
+            }
+            let (tag, decoded) =
+                decode(&buf).map_err(|e| e.to_string())?;
+            if tag != Tag::Gradients {
+                return Err("tag changed".into());
+            }
+            // byte-level idempotence survives NaN payloads
+            if encode(tag, &decoded) != buf {
+                return Err(format!(
+                    "{codec:?}: re-encode of the decoded payload \
+                     diverged (len {len})"));
+            }
+            // the dense view must carry the packed semantics: same
+            // length, and exact values wherever the codec is exact
+            let (_, _, dense) = decoded
+                .grad_like()
+                .ok_or("decoded payload lost its gradient view")?;
+            if dense.len() != len {
+                return Err(format!("{codec:?}: length changed"));
+            }
+            if matches!(codec, Codec::Fp32 | Codec::TopK { .. }) {
+                // kept values are exact f32 in these codecs
+                let reference = match codec.pack(&data) {
+                    Some(p) => p.unpack(),
+                    None => data.clone(),
+                };
+                let same = dense.iter().zip(&reference).all(|(a, b)| {
+                    a.to_bits() == b.to_bits()
+                        || (a.is_nan() && b.is_nan())
+                });
+                if !same {
+                    return Err(format!("{codec:?}: values changed"));
+                }
+            }
+            // truncation must never panic, only error
+            let cut = rng.usize_below(buf.len().max(1));
+            let _ = decode(&buf[..cut]);
+        }
         Ok(())
     });
 }
