@@ -6,12 +6,20 @@
 //!     cargo run --release --example quickstart -- --model transformer \
 //!         --batch 16 --workers 2 --epochs 1
 //!     cargo run --release --example quickstart -- --direct   # no framework
-//!     cargo run --release --example quickstart -- --allreduce \
+//!     cargo run --release --example quickstart -- --mode allreduce \
 //!         --workers 4                       # masterless ring all-reduce
-//!     cargo run --release --example quickstart -- --allreduce \
+//!     cargo run --release --example quickstart -- --mode hier-allreduce \
+//!         --workers 4 --groups 2            # grouped ring + leader tree
+//!     cargo run --release --example quickstart -- --mode allreduce \
 //!         --compression fp16                # compressed wire hops
+//!     cargo run --release --example quickstart -- --mode sync --tcp
+//!         # synchronous Downpour over the localhost TCP mesh
 //!     cargo run --release --example quickstart -- --early-stopping 3 \
 //!         --checkpoint runs/quickstart      # callbacks
+//!
+//! The CI mode-matrix job runs this example across every
+//! mode × transport × codec cell, so each flag combination here is a
+//! supported, smoke-tested configuration.
 
 use mpi_learn::coordinator::Experiment;
 use mpi_learn::mpi::Codec;
@@ -24,7 +32,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let workers = args.usize("workers", 2)?;
     let epochs = args.usize("epochs", 3)? as u32;
     let direct = args.bool("direct");
-    let allreduce = args.bool("allreduce");
+    // --allreduce is the historical spelling of --mode allreduce
+    let allreduce_flag = args.bool("allreduce");
+    let mode = args.str("mode",
+                        if allreduce_flag { "allreduce" }
+                        else { "downpour" });
+    let groups = args.usize("groups", 2)?;
+    let tcp = args.bool("tcp");
     let compression = Codec::parse(&args.str("compression", "fp32"))?;
     let patience = args.usize("early-stopping", 0)?;
     let checkpoint = args.str_opt("checkpoint");
@@ -42,15 +56,44 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .epochs(epochs)
         .validate_every(20)
         .max_val_batches(5);
-    if allreduce {
-        println!("running masterless ring all-reduce with {workers} \
-                  ranks...");
-        exp = exp.allreduce();
-    } else if direct {
+    if direct {
         println!("running the no-framework baseline (\"Keras alone\")...");
         exp = exp.direct();
     } else {
-        println!("running async Downpour with {workers} workers...");
+        exp = match mode.as_str() {
+            "downpour" => {
+                println!("running async Downpour with {workers} \
+                          workers...");
+                exp.downpour()
+            }
+            "sync" => {
+                println!("running synchronous Downpour with {workers} \
+                          workers...");
+                exp.downpour_sync()
+            }
+            "easgd" => {
+                println!("running EASGD with {workers} workers...");
+                exp.easgd(4, 0.5)
+            }
+            "allreduce" => {
+                println!("running masterless ring all-reduce with \
+                          {workers} ranks...");
+                exp.allreduce()
+            }
+            "hier-allreduce" => {
+                println!("running hierarchical all-reduce with \
+                          {workers} ranks in {groups} groups...");
+                exp.allreduce_grouped(groups)
+            }
+            other => return Err(format!(
+                "unknown --mode '{other}' (downpour | sync | easgd | \
+                 allreduce | hier-allreduce)")
+                .into()),
+        };
+    }
+    if tcp {
+        println!("carrying the protocol over a localhost TCP mesh...");
+        exp = exp.tcp(47810);
     }
     if !compression.is_identity() {
         println!("compressing gradient exchange with {compression}...");

@@ -1,34 +1,51 @@
 //! Ring all-reduce scaling: measured collective latency on the inproc
-//! transport (per wire codec), plus simulated Fig-3/4-style speedup
-//! curves comparing the parameter-server protocol against the
-//! masterless ring — raw and compressed. The PS master saturates; the
-//! ring does not; compression then cuts the ring's bandwidth term.
+//! transport (per wire codec, flat ring vs hierarchical ring+tree),
+//! plus simulated Fig-3/4-style speedup curves comparing the
+//! parameter-server protocol against the masterless ring — raw,
+//! compressed, and hierarchical. The PS master saturates; the flat ring
+//! pays a `2(n-1)` latency term; the hierarchical schedule collapses it
+//! to `2(m-1) + O(log G)`.
 //!
 //!     cargo bench --bench allreduce_scaling
 //!     cargo bench --bench allreduce_scaling -- --ci --json out.json
+//!     cargo bench --bench allreduce_scaling -- --worlds 8,16,32 \
+//!         --json nightly.json               # nightly scaling sweep
+//!     cargo bench --bench allreduce_scaling -- --ci \
+//!         --pr-json ../BENCH_pr.json        # committed trajectory
 
 use std::collections::BTreeMap;
 
 use mpi_learn::mpi;
-use mpi_learn::mpi::collective::{Collective, ReduceOp};
+use mpi_learn::mpi::collective::{Collective, GroupLayout, ReduceOp};
 use mpi_learn::mpi::Codec;
 use mpi_learn::simulator::{simulate_allreduce, simulate_async,
-                           CostModel, SimConfig};
+                           simulate_hier_allreduce, CostModel,
+                           SimConfig};
 use mpi_learn::util::bench::{fmt_secs, print_table, write_csv,
                              write_json};
 use mpi_learn::util::cli::Args;
 use mpi_learn::util::json::Json;
 
-/// Wall time per all-reduce for `n` ranks over `floats` elements.
-fn measure_ring(n: usize, floats: usize, reps: usize, codec: Codec)
-    -> f64 {
+/// Group count used for hierarchical curves at world size `n`: groups
+/// of ~4 ranks ("one node"), at least 2 groups.
+fn groups_for(n: usize) -> usize {
+    (n / 4).max(2)
+}
+
+/// Wall time per all-reduce for `n` ranks over `floats` elements; with
+/// a layout, the hierarchical ring → tree → ring schedule runs instead
+/// of the flat ring.
+fn measure_ring(n: usize, floats: usize, reps: usize, codec: Codec,
+                layout: Option<&GroupLayout>) -> f64 {
     let world = mpi::inproc_world(n);
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
         for comm in world {
+            let layout = layout.cloned();
             s.spawn(move || {
                 let mut col = Collective::new(&comm);
                 col.set_codec(codec);
+                col.set_groups(layout);
                 let mut buf = vec![1.0f32; floats];
                 // one warmup + timed reps (all ranks in lockstep, so
                 // per-rank timing equals wall timing)
@@ -42,10 +59,90 @@ fn measure_ring(n: usize, floats: usize, reps: usize, codec: Codec)
     t0.elapsed().as_secs_f64() / (reps + 1) as f64
 }
 
+/// Total wire bytes (all ranks) of ONE flat-ring all-reduce — a
+/// deterministic quantity (chunk sizes and top-k keep-counts depend
+/// only on the shape), which is what lets BENCH_pr.json be committed.
+fn measure_bytes_per_round(n: usize, floats: usize, codec: Codec)
+    -> u64 {
+    let world = mpi::inproc_world(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|comm| {
+                s.spawn(move || {
+                    let mut col = Collective::new(&comm);
+                    col.set_codec(codec);
+                    let mut buf = vec![1.0f32; floats];
+                    let before = comm.bytes_sent();
+                    col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                    comm.bytes_sent() - before
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    })
+}
+
+/// The committed, stable-schema perf trajectory (repo-root
+/// BENCH_pr.json). Every value is a deterministic integer — measured
+/// wire bytes per round per codec, and the closed-form cost-model
+/// collective times (ns) for flat vs hierarchical per world size — so
+/// CI can regenerate the file and `git diff` it against the committed
+/// copy.
+fn write_bench_pr(path: &str) {
+    let n_params = 3_023usize; // the paper LSTM's parameter count
+    let ranks = 4usize;
+    let codecs = [Codec::Fp32, Codec::Fp16, Codec::TopK { k: 0.1 }];
+    let mut bytes: BTreeMap<String, Json> = BTreeMap::new();
+    for codec in codecs {
+        bytes.insert(
+            codec.name(),
+            Json::Num(measure_bytes_per_round(ranks, n_params, codec)
+                as f64),
+        );
+    }
+    let cost = CostModel::cluster(n_params);
+    let mut flat: BTreeMap<String, Json> = BTreeMap::new();
+    let mut hier: BTreeMap<String, Json> = BTreeMap::new();
+    let mut hier_groups: BTreeMap<String, Json> = BTreeMap::new();
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let g = groups_for(n);
+        let key = format!("n{n}");
+        flat.insert(key.clone(), Json::Num(
+            (cost.ring_allreduce_time(n) * 1e9).round()));
+        hier.insert(key.clone(), Json::Num(
+            (cost.hierarchical_allreduce_time(n, g) * 1e9).round()));
+        hier_groups.insert(key, Json::Num(g as f64));
+    }
+    let mut collective: BTreeMap<String, Json> = BTreeMap::new();
+    collective.insert("flat".into(), Json::Obj(flat));
+    collective.insert("hier".into(), Json::Obj(hier));
+    collective.insert("hier_groups".into(), Json::Obj(hier_groups));
+    let mut top: BTreeMap<String, Json> = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("bench_pr".into()));
+    top.insert("bytes_per_round".into(), Json::Obj(bytes));
+    top.insert("collective_ns".into(), Json::Obj(collective));
+    top.insert("params".into(), Json::Num(n_params as f64));
+    top.insert("ranks".into(), Json::Num(ranks as f64));
+    top.insert("schema".into(), Json::Num(1.0));
+    write_json(path, &Json::Obj(top)).unwrap();
+    println!("wrote {path}");
+}
+
 fn main() {
     let args = Args::from_env();
     let ci = args.bool("ci");
     let json_path = args.str("json", "runs/bench/allreduce_scaling.json");
+    let pr_json = args.str_opt("pr-json");
+    let default_worlds: Vec<usize> =
+        if ci { vec![2, 4] } else { vec![2, 4, 8] };
+    let worlds = match args.usize_list("worlds", &default_worlds) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
     if let Err(e) = args.finish() {
         eprintln!("error: {e}");
         std::process::exit(2);
@@ -57,12 +154,16 @@ fn main() {
     } else {
         &[(3_023, "lstm"), (32_963, "mlp"), (262_144, "1MB")]
     };
-    let worlds: &[usize] = if ci { &[2, 4] } else { &[2, 4, 8] };
     let codecs = [
         ("fp32", Codec::Fp32),
         ("fp16", Codec::Fp16),
         ("topk10", Codec::TopK { k: 0.1 }),
     ];
+    let reps_for = |floats: usize| match (ci, floats > 100_000) {
+        (true, _) => 10,
+        (false, true) => 30,
+        (false, false) => 100,
+    };
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     let mut measured: BTreeMap<String, f64> = BTreeMap::new();
@@ -70,13 +171,9 @@ fn main() {
         for (cname, codec) in codecs {
             let mut row = vec![format!("{tag} ({floats} f32)"),
                                cname.to_string()];
-            for &n in worlds {
-                let reps = match (ci, floats > 100_000) {
-                    (true, _) => 10,
-                    (false, true) => 30,
-                    (false, false) => 100,
-                };
-                let t = measure_ring(n, floats, reps, codec);
+            for &n in &worlds {
+                let t = measure_ring(n, floats, reps_for(floats), codec,
+                                     None);
                 // per-rank payload volume of the chunked ring
                 let bytes = 2.0 * (n as f64 - 1.0) / n as f64
                     * (floats * 4) as f64 * codec.wire_ratio();
@@ -107,7 +204,45 @@ fn main() {
               &["payload", "codec", "floats", "ranks", "time_s"],
               &csv).unwrap();
 
-    // ---- simulated: PS vs ring (raw and fp16) at paper scale ----
+    // ---- measured: flat ring vs hierarchical (fp32) ----
+    // Inproc threads have no real inter-node latency gap, so this is a
+    // correctness/overhead check, not the wall-clock argument — that is
+    // what the simulated curves below model.
+    let mut rows = Vec::new();
+    for &(floats, tag) in sizes {
+        for &n in &worlds {
+            let g = groups_for(n);
+            if n < 4 || n % g != 0 {
+                continue;
+            }
+            let layout = GroupLayout::contiguous(n, g).unwrap();
+            let reps = reps_for(floats);
+            // the codec loop above already measured the flat fp32 ring
+            // for every (payload, world) cell — reuse it
+            let t_flat = measured[&format!("{tag}/fp32/n{n}")];
+            let t_hier = measure_ring(n, floats, reps, Codec::Fp32,
+                                      Some(&layout));
+            measured.insert(format!("{tag}/hier-g{g}/n{n}"), t_hier);
+            rows.push(vec![
+                format!("{tag} ({floats} f32)"),
+                format!("{n}"),
+                format!("{g}"),
+                fmt_secs(t_flat),
+                fmt_secs(t_hier),
+                format!("{:.2}", t_flat / t_hier),
+            ]);
+        }
+    }
+    if !rows.is_empty() {
+        print_table(
+            "measured flat ring vs hierarchical (fp32, inproc)",
+            &["payload", "ranks", "groups", "flat", "hier",
+              "flat/hier"],
+            &rows,
+        );
+    }
+
+    // ---- simulated: PS vs ring vs hierarchical at paper scale ----
     // paper_gpu: the testbed whose master saturates at ~30x (Fig 4).
     let cost = CostModel::paper_gpu(3_023);
     let cost_fp16 = cost.clone().with_compression(Codec::Fp16);
@@ -123,41 +258,56 @@ fn main() {
     let t1_ring = simulate_allreduce(&cost, &base, 2017).total_time_s;
     let t1_ring16 =
         simulate_allreduce(&cost_fp16, &base, 2017).total_time_s;
+    let t1_hier =
+        simulate_hier_allreduce(&cost, &base, 2, 2017).total_time_s;
     let mut rows = Vec::new();
     let mut csv = Vec::new();
+    let mut sim_times: BTreeMap<String, f64> = BTreeMap::new();
     for w in [1usize, 2, 4, 8, 16, 30, 45, 60, 120] {
         let cfg = SimConfig { n_workers: w, ..base.clone() };
         let seed = 2017 ^ w as u64;
-        let ps = t1 / simulate_async(&cost, &cfg, seed).total_time_s;
-        let ring = t1_ring
-            / simulate_allreduce(&cost, &cfg, seed).total_time_s;
-        let ring16 = t1_ring16
-            / simulate_allreduce(&cost_fp16, &cfg, seed).total_time_s;
+        let g = groups_for(w);
+        let t_ps = simulate_async(&cost, &cfg, seed).total_time_s;
+        let t_ring = simulate_allreduce(&cost, &cfg, seed).total_time_s;
+        let t_ring16 =
+            simulate_allreduce(&cost_fp16, &cfg, seed).total_time_s;
+        let t_hier =
+            simulate_hier_allreduce(&cost, &cfg, g, seed).total_time_s;
+        sim_times.insert(format!("ring/n{w}"), t_ring);
+        sim_times.insert(format!("hier/n{w}"), t_hier);
+        let ps = t1 / t_ps;
+        let ring = t1_ring / t_ring;
+        let ring16 = t1_ring16 / t_ring16;
+        let hier = t1_hier / t_hier;
         rows.push(vec![
             format!("{w}"),
             format!("{ps:.2}"),
             format!("{ring:.2}"),
             format!("{ring16:.2}"),
-            format!("{:.2}", ring / ps),
+            format!("{hier:.2} (g={g})"),
+            format!("{:.2}", hier / ring),
         ]);
         csv.push(vec![format!("{w}"), format!("{ps:.4}"),
-                      format!("{ring:.4}"), format!("{ring16:.4}")]);
+                      format!("{ring:.4}"), format!("{ring16:.4}"),
+                      format!("{hier:.4}")]);
     }
     print_table(
-        "simulated speedup: parameter server vs ring all-reduce \
-         (paper-GPU preset, batch 100)",
+        "simulated speedup: parameter server vs ring vs hierarchical \
+         all-reduce (paper-GPU preset, batch 100)",
         &["workers", "PS speedup", "ring speedup", "ring+fp16",
-          "ring/PS"],
+          "hier ring+tree", "hier/ring"],
         &rows,
     );
     write_csv("runs/bench/allreduce_vs_ps.csv",
               &["workers", "ps_speedup", "ring_speedup",
-                "ring_fp16_speedup"],
+                "ring_fp16_speedup", "hier_speedup"],
               &csv).unwrap();
     println!("\nThe PS curve saturates at ~1/t_update gradients/s \
-              (Figs 3/4); the ring curve keeps scaling until the \
-              latency term 2(n-1)*lat catches up — compression \
-              shrinks only the bandwidth term.");
+              (Figs 3/4); the flat ring keeps scaling until its \
+              2(n-1)*lat term catches up; the hierarchical schedule \
+              pays 2(m-1) cheap intra-group steps plus O(log G) \
+              inter-group tree levels instead, so it keeps climbing \
+              where the flat ring flattens.");
 
     let summary: BTreeMap<String, Json> = [
         ("bench".to_string(),
@@ -168,9 +318,18 @@ fn main() {
              .iter()
              .map(|(k, v)| (k.clone(), Json::Num(*v)))
              .collect())),
+        ("simulated_s".to_string(),
+         Json::Obj(sim_times
+             .iter()
+             .map(|(k, v)| (k.clone(), Json::Num(*v)))
+             .collect())),
     ]
     .into_iter()
     .collect();
     write_json(&json_path, &Json::Obj(summary)).unwrap();
     println!("wrote {json_path}");
+
+    if let Some(path) = pr_json {
+        write_bench_pr(&path);
+    }
 }

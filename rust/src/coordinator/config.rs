@@ -13,6 +13,11 @@
 //!   "transport": "inproc" | {"tcp": {"base_port": 47000}},
 //!   "hierarchy": {"groups": 2, "workers_per_group": 2,
 //!                 "sync_every": 5},
+//!                 // groups >= 2. With "mode": "downpour" this is the
+//!                 // two-level master tree; with "mode": "allreduce"
+//!                 // it selects the hierarchical all-reduce (intra-
+//!                 // group ring + inter-group leader tree;
+//!                 // "sync_every" is ignored there)
 //!   "algo": { ... see Algo::from_json; "mode" may be "downpour",
 //!             "easgd", or "allreduce" (masterless ring) ... },
 //!   "compression": "fp32" | "fp16" | "topk:<k>",  // wire codec for
@@ -34,11 +39,12 @@
 //! }
 //! ```
 //!
-//! Contradictory configurations (e.g. `"mode": "allreduce"` together
-//! with `"hierarchy"`) are rejected here, at parse time, with a
-//! `ConfigError::Invalid` — not deep inside `train()` after data
-//! materialization. The checks are `WorldPlan`'s, so programmatic
-//! `TrainConfig` users get the identical validation.
+//! Contradictory configurations (e.g. `"hierarchy"` with one group, or
+//! with `"mode": "easgd"`) are rejected here, at parse time, with a
+//! `ConfigError::Invalid` that names the offending KEYS — not deep
+//! inside `train()` after data materialization. The checks are
+//! `WorldPlan`'s, so programmatic `TrainConfig` users get the identical
+//! validation.
 
 use std::path::{Path, PathBuf};
 
@@ -144,11 +150,22 @@ impl JobConfig {
             Some(h) => {
                 let groups = h.get("groups").and_then(|v| v.as_usize())
                     .ok_or_else(|| invalid(
-                        "hierarchy.groups required".into()))?;
+                        "\"hierarchy\" requires \"groups\" (>= 2)"
+                            .into()))?;
+                // Absent "workers_per_group": in allreduce mode pass 0
+                // so WorldPlan derives the split from "workers" AND
+                // validates divisibility — the integer-division default
+                // below would silently shrink a non-divisible world.
+                // (Downpour keeps the historical floor default; an
+                // explicit workers_per_group always wins over
+                // "workers", as documented on TrainConfig.)
+                let derive = matches!(
+                    algo.mode, crate::coordinator::algo::Mode::AllReduce);
                 let wpg = h
                     .get("workers_per_group")
                     .and_then(|v| v.as_usize())
-                    .unwrap_or_else(|| workers / groups.max(1));
+                    .unwrap_or_else(|| if derive { 0 }
+                                    else { workers / groups.max(1) });
                 Some(HierarchySpec {
                     n_groups: groups,
                     workers_per_group: wpg,
@@ -293,22 +310,87 @@ mod tests {
                          Mode::Easgd { tau: 4, .. }));
     }
 
-    /// Satellite (ISSUE 2): contradictory mode+topology must fail at
-    /// parse time with ConfigError::Invalid, not deep inside train().
+    /// ISSUE 4 tentpole: allreduce + hierarchy is now a valid config —
+    /// it selects the hierarchical all-reduce topology.
     #[test]
-    fn allreduce_with_hierarchy_rejected_at_parse_time() {
+    fn allreduce_with_hierarchy_parses_to_grouped_plan() {
         let text = r#"{
             "model": "mlp", "workers": 4,
             "algo": {"mode": "allreduce"},
             "hierarchy": {"groups": 2, "workers_per_group": 2}
         }"#;
+        let job = JobConfig::from_json_text(text).unwrap();
+        assert_eq!(job.train.algo.mode, Mode::AllReduce);
+        let plan = WorldPlan::new(&job.train).unwrap();
+        assert_eq!(plan.world_size(), 4, "masterless grouped world");
+        let layout = plan.ring_layout().unwrap();
+        assert_eq!(layout.leaders(), vec![0, 2]);
+    }
+
+    /// Satellite (ISSUE 4): rejected topology combos must name the
+    /// offending KEYS, not just the mode.
+    #[test]
+    fn bad_hierarchy_errors_name_the_keys() {
+        // one group
+        let text = r#"{
+            "model": "mlp", "workers": 4,
+            "algo": {"mode": "allreduce"},
+            "hierarchy": {"groups": 1, "workers_per_group": 4}
+        }"#;
         match JobConfig::from_json_text(text) {
             Err(super::ConfigError::Invalid(msg)) => {
-                assert!(msg.contains("allreduce"), "{msg}");
+                assert!(msg.contains("\"groups\" >= 2"), "{msg}");
+                assert!(msg.contains("\"hierarchy\""), "{msg}");
             }
-            Ok(_) => panic!("allreduce + hierarchy must be rejected"),
-            Err(e) => panic!("wrong error kind: {e}"),
+            other => panic!("expected Invalid, got {:?}",
+                            other.err().map(|e| e.to_string())),
         }
+        // missing groups key
+        let text = r#"{"model": "mlp", "hierarchy": {}}"#;
+        match JobConfig::from_json_text(text) {
+            Err(super::ConfigError::Invalid(msg)) => {
+                assert!(msg.contains("\"groups\""), "{msg}");
+            }
+            other => panic!("expected Invalid, got {:?}",
+                            other.err().map(|e| e.to_string())),
+        }
+        // zero workers per group
+        let text = r#"{
+            "model": "mlp",
+            "hierarchy": {"groups": 2, "workers_per_group": 0}
+        }"#;
+        match JobConfig::from_json_text(text) {
+            Err(super::ConfigError::Invalid(msg)) => {
+                assert!(msg.contains("\"workers_per_group\""), "{msg}");
+            }
+            other => panic!("expected Invalid, got {:?}",
+                            other.err().map(|e| e.to_string())),
+        }
+        // grouped allreduce with an absent workers_per_group and a
+        // non-divisible worker count must ERROR (naming the keys), not
+        // silently train a smaller world
+        let text = r#"{
+            "model": "mlp", "workers": 7,
+            "algo": {"mode": "allreduce"},
+            "hierarchy": {"groups": 2}
+        }"#;
+        match JobConfig::from_json_text(text) {
+            Err(super::ConfigError::Invalid(msg)) => {
+                assert!(msg.contains("\"workers\"")
+                            && msg.contains("\"groups\""),
+                        "{msg}");
+            }
+            other => panic!("expected Invalid, got {:?}",
+                            other.err().map(|e| e.to_string())),
+        }
+        // ...while a divisible count derives the split cleanly
+        let job = JobConfig::from_json_text(r#"{
+            "model": "mlp", "workers": 8,
+            "algo": {"mode": "allreduce"},
+            "hierarchy": {"groups": 2}
+        }"#).unwrap();
+        let plan = WorldPlan::new(&job.train).unwrap();
+        assert_eq!(plan.world_size(), 8);
     }
 
     #[test]

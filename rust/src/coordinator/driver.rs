@@ -251,10 +251,13 @@ fn run_role(plan: &WorldPlan, cfg: &TrainConfig,
             }
             Ok(None)
         }
-        RankRole::RingRank { shard } => {
+        RankRole::RingRank { shard, .. } => {
             let ds = data.worker_dataset(shard, plan.n_shards())?;
             let lr = effective_lr_schedule(&cfg.algo, &cfg.callbacks);
             let seed = plan.seed_of(rank);
+            // grouped (hierarchical) ring worlds hand the collective
+            // its GroupLayout; flat rings pass None
+            let layout = plan.ring_layout();
             if rank == plan.observer() {
                 let val = data.validation_dataset()?;
                 let mut rng = Rng::new(cfg.seed);
@@ -266,6 +269,7 @@ fn run_role(plan: &WorldPlan, cfg: &TrainConfig,
                 let outcome = RingWorker::new(comm, &cfg.algo,
                                               exes.as_ref(), &ds, seed,
                                               lr)
+                    .with_groups(layout)
                     .run(Some(init), &mut observer)
                     .map_err(|e| TrainError::Worker {
                         rank, msg: e.to_string() })?;
@@ -274,6 +278,7 @@ fn run_role(plan: &WorldPlan, cfg: &TrainConfig,
                 let mut observer = Observer::disabled();
                 RingWorker::new(comm, &cfg.algo, exes.as_ref(), &ds,
                                 seed, lr)
+                    .with_groups(layout)
                     .run(None, &mut observer)
                     .map_err(|e| TrainError::Worker {
                         rank, msg: e.to_string() })?;

@@ -151,6 +151,23 @@ impl Experiment {
         self
     }
 
+    /// Masterless **hierarchical** all-reduce: the world is split into
+    /// `groups` contiguous intra-group rings joined by an inter-group
+    /// leader tree — the `2(n-1)` flat-ring latency term becomes
+    /// `2(m-1) + O(log groups)`. The per-group size is derived from
+    /// [`Experiment::workers`] when the world is planned (call order
+    /// does not matter); `workers` must divide evenly into `groups`
+    /// (>= 2) or the plan is rejected with the offending keys named.
+    pub fn allreduce_grouped(mut self, groups: usize) -> Self {
+        self.cfg.algo.mode = Mode::AllReduce;
+        self.cfg.hierarchy = Some(HierarchySpec {
+            n_groups: groups,
+            workers_per_group: 0, // derived from workers at plan time
+            sync_every: 1,        // unused by the ring topology
+        });
+        self
+    }
+
     /// Compress gradient exchange on the wire: [`Codec::Fp16`]
     /// (half-precision, ~0.5x bytes) or [`Codec::TopK`] (magnitude
     /// sparsification with error feedback, ~2k x bytes). Applies to
@@ -161,7 +178,10 @@ impl Experiment {
         self
     }
 
-    /// Two-level master hierarchy (Downpour only).
+    /// Two-level topology: a Downpour master tree, or — combined with
+    /// [`Experiment::allreduce`] — hierarchical all-reduce groups
+    /// (`sync_every` is ignored there; see
+    /// [`Experiment::allreduce_grouped`] for the shorthand).
     pub fn hierarchy(mut self, groups: usize, workers_per_group: usize,
                      sync_every: u64) -> Self {
         self.cfg.hierarchy = Some(HierarchySpec {
@@ -341,6 +361,30 @@ mod tests {
         assert_eq!(cfg.hierarchy.unwrap().n_groups, 2);
         assert_eq!(cfg.transport, Transport::Tcp { base_port: 47123 });
         assert_eq!(cfg.algo.mode, Mode::Downpour { sync: true });
+    }
+
+    #[test]
+    fn grouped_allreduce_knob() {
+        use crate::coordinator::topology::WorldPlan;
+        // the split is derived at plan time, so builder order must not
+        // matter (regression: an early version froze it at call time)
+        for exp in [
+            Experiment::new("mlp").workers(8).allreduce_grouped(2),
+            Experiment::new("mlp").allreduce_grouped(2).workers(8),
+        ] {
+            let cfg = exp.config();
+            assert_eq!(cfg.algo.mode, Mode::AllReduce);
+            assert_eq!(cfg.hierarchy.unwrap().n_groups, 2);
+            let plan = WorldPlan::new(cfg).unwrap();
+            assert_eq!(plan.world_size(), 8);
+            let layout = plan.ring_layout().unwrap();
+            assert_eq!(layout.leaders(), vec![0, 4]);
+        }
+        // non-divisible splits are rejected at plan time, naming keys
+        let exp = Experiment::new("mlp").workers(7).allreduce_grouped(2);
+        let err = WorldPlan::new(exp.config()).unwrap_err();
+        assert!(err.contains("\"workers\"") && err.contains("\"groups\""),
+                "{err}");
     }
 
     #[test]

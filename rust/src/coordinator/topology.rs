@@ -20,6 +20,7 @@
 use crate::coordinator::algo::Mode;
 use crate::coordinator::driver::TrainConfig;
 use crate::coordinator::hierarchy::{HierarchySpec, Role};
+use crate::mpi::collective::GroupLayout;
 use crate::mpi::Rank;
 
 /// What one rank does in the world.
@@ -34,9 +35,11 @@ pub enum RankRole {
     /// Gradient-computing worker reporting to `master`, training data
     /// shard `shard`.
     Worker { master: Rank, shard: usize },
-    /// One peer of the masterless all-reduce ring, training data shard
-    /// `shard`. Rank 0's ring peer doubles as the observer.
-    RingRank { shard: usize },
+    /// One peer of the masterless all-reduce world, training data
+    /// shard `shard` and belonging to collective group `group` (always
+    /// 0 in a flat ring; under `hierarchy + allreduce` the group's
+    /// first rank is its tree leader). Rank 0 doubles as the observer.
+    RingRank { shard: usize, group: usize },
 }
 
 /// Static description of a training world: size, per-rank roles, shard
@@ -64,30 +67,56 @@ impl WorldPlan {
                       n_workers: usize, seed: u64)
         -> Result<WorldPlan, String> {
         let ring = matches!(mode, Mode::AllReduce);
-        if ring && hierarchy.is_some() {
-            return Err("allreduce mode is flat by construction; drop \
-                        the hierarchy spec"
-                .into());
-        }
         if let Some(h) = &hierarchy {
-            if h.n_groups == 0 || h.workers_per_group == 0 {
+            // Key-naming validation: these messages surface verbatim
+            // from `JobConfig` parse errors, so they must say WHICH
+            // keys to fix, not just which mode was rejected.
+            if h.n_groups < 2 {
                 return Err(format!(
-                    "hierarchy needs at least one group and one worker \
-                     per group (got {} x {})",
-                    h.n_groups, h.workers_per_group));
+                    "\"hierarchy\" requires \"groups\" >= 2 (got {}); \
+                     drop \"hierarchy\" for a flat world",
+                    h.n_groups));
             }
-            if !matches!(mode, Mode::Downpour { .. }) {
-                return Err("hierarchical topology requires Downpour \
-                            mode"
+            if !matches!(mode, Mode::Downpour { .. } | Mode::AllReduce) {
+                return Err("\"hierarchy\" requires \"mode\" \
+                            \"downpour\" (grouped parameter servers) \
+                            or \"allreduce\" (grouped ring + leader \
+                            tree); \"easgd\" has no hierarchical form"
                     .into());
             }
         }
+        // Grouped rings accept workers_per_group == 0 as "derive from
+        // the worker count at plan time" — this is what keeps
+        // `Experiment::allreduce_grouped` order-independent of
+        // `Experiment::workers`.
+        let hierarchy = match hierarchy {
+            Some(h) if ring && h.workers_per_group == 0 => {
+                if n_workers == 0 || n_workers % h.n_groups != 0 {
+                    return Err(format!(
+                        "\"workers\" ({n_workers}) must divide evenly \
+                         into \"groups\" ({}) ring groups of >= 1 \
+                         rank each",
+                        h.n_groups));
+                }
+                Some(HierarchySpec {
+                    workers_per_group: n_workers / h.n_groups,
+                    ..h
+                })
+            }
+            Some(h) if h.workers_per_group == 0 => {
+                return Err("\"hierarchy\" requires \
+                            \"workers_per_group\" >= 1 (got 0)"
+                    .into());
+            }
+            h => h,
+        };
         let n_shards = match &hierarchy {
             Some(h) => h.n_groups * h.workers_per_group,
             None => n_workers,
         };
         if n_shards == 0 {
-            return Err("need at least one worker".into());
+            return Err("need at least one worker (\"workers\" >= 1)"
+                .into());
         }
         Ok(WorldPlan { ring, hierarchy, n_shards, seed })
     }
@@ -128,13 +157,31 @@ impl WorldPlan {
         self.hierarchy.as_ref()
     }
 
+    /// Collective-layer group layout of a grouped (hierarchical) ring
+    /// world: `groups` contiguous blocks of `workers_per_group` ranks,
+    /// each block's first rank its tree leader. `None` for flat rings
+    /// and parameter-server worlds.
+    pub fn ring_layout(&self) -> Option<GroupLayout> {
+        match (&self.hierarchy, self.ring) {
+            (Some(h), true) => Some(
+                GroupLayout::contiguous(self.n_shards, h.n_groups)
+                    .expect("plan validation keeps groups divisible"),
+            ),
+            _ => None,
+        }
+    }
+
     /// Which role does `rank` play?
     pub fn role_of(&self, rank: Rank) -> RankRole {
         debug_assert!(rank < self.world_size(),
                       "rank {rank} outside world of {}",
                       self.world_size());
         if self.ring {
-            return RankRole::RingRank { shard: rank };
+            let group = match &self.hierarchy {
+                Some(h) => rank / h.workers_per_group,
+                None => 0,
+            };
+            return RankRole::RingRank { shard: rank, group };
         }
         match &self.hierarchy {
             None => {
@@ -176,7 +223,7 @@ impl WorldPlan {
     pub fn seed_of(&self, rank: Rank) -> u64 {
         match self.role_of(rank) {
             RankRole::Worker { shard, .. }
-            | RankRole::RingRank { shard } => {
+            | RankRole::RingRank { shard, .. } => {
                 self.seed ^ (shard as u64 + 1).wrapping_mul(0x9E37)
             }
             RankRole::Master | RankRole::GroupMaster { .. } => self.seed,
@@ -195,7 +242,13 @@ impl WorldPlan {
             }
             RankRole::GroupMaster { group } => format!("gmaster-{group}"),
             RankRole::Worker { .. } => format!("worker-{rank}"),
-            RankRole::RingRank { .. } => format!("rank-{rank}"),
+            RankRole::RingRank { group, .. } => {
+                if self.hierarchy.is_some() {
+                    format!("rank-{rank}/g{group}")
+                } else {
+                    format!("rank-{rank}")
+                }
+            }
         }
     }
 }
@@ -227,9 +280,11 @@ mod tests {
         let p = plan(Mode::AllReduce, None, 4);
         assert_eq!(p.world_size(), 4);
         for r in 0..4 {
-            assert_eq!(p.role_of(r), RankRole::RingRank { shard: r });
+            assert_eq!(p.role_of(r),
+                       RankRole::RingRank { shard: r, group: 0 });
         }
         assert_eq!(p.rank_tag(2), "rank-2");
+        assert!(p.ring_layout().is_none(), "flat rings have no layout");
     }
 
     #[test]
@@ -254,11 +309,56 @@ mod tests {
     }
 
     #[test]
-    fn allreduce_with_hierarchy_rejected() {
+    fn grouped_allreduce_plans_a_masterless_grouped_world() {
+        // ISSUE 4 tentpole: hierarchy + allreduce is a PLAN now, not a
+        // rejection — G contiguous groups, no master ranks.
+        let spec = HierarchySpec { n_groups: 2, workers_per_group: 4,
+                                   sync_every: 1 };
+        let p = plan(Mode::AllReduce, Some(spec), 0);
+        assert_eq!(p.world_size(), 8, "masterless: world == shard set");
+        assert_eq!(p.n_shards(), 8);
+        assert!(p.is_ring() && p.is_hierarchical());
+        assert_eq!(p.role_of(3),
+                   RankRole::RingRank { shard: 3, group: 0 });
+        assert_eq!(p.role_of(4),
+                   RankRole::RingRank { shard: 4, group: 1 });
+        assert_eq!(p.observer(), 0);
+        let layout = p.ring_layout().expect("grouped ring has a layout");
+        assert_eq!(layout.groups(),
+                   &[vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        assert_eq!(layout.leaders(), vec![0, 4]);
+        assert_eq!(p.rank_tag(5), "rank-5/g1");
+    }
+
+    #[test]
+    fn single_group_hierarchy_rejected_naming_the_key() {
+        // Satellite: rejection messages must name the offending KEYS.
+        for mode in [Mode::AllReduce, Mode::Downpour { sync: false }] {
+            let spec = HierarchySpec { n_groups: 1,
+                                       workers_per_group: 2,
+                                       sync_every: 5 };
+            let err = WorldPlan::from_parts(&mode, Some(spec), 4, 0)
+                .unwrap_err();
+            assert!(err.contains("\"groups\" >= 2"), "{err}");
+            assert!(err.contains("\"hierarchy\""), "{err}");
+        }
+    }
+
+    #[test]
+    fn easgd_hierarchy_rejected_naming_the_keys() {
         let spec = HierarchySpec { n_groups: 2, workers_per_group: 2,
                                    sync_every: 5 };
-        assert!(WorldPlan::from_parts(&Mode::AllReduce, Some(spec), 4, 0)
-            .is_err());
+        let err = WorldPlan::from_parts(
+            &Mode::Easgd {
+                tau: 4,
+                alpha: 0.5,
+                worker_optimizer:
+                    crate::optim::OptimizerConfig::Sgd { lr: 0.05 },
+            },
+            Some(spec), 4, 0)
+            .unwrap_err();
+        assert!(err.contains("\"hierarchy\"") && err.contains("easgd"),
+                "{err}");
     }
 
     #[test]

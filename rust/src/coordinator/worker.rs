@@ -17,7 +17,7 @@ use crate::coordinator::callbacks::{LrScheduleSpec, Observer};
 use crate::data::DataSet;
 use crate::metrics::{History, Stopwatch, WorkerReport};
 use crate::mpi::codec::{grad_payload, Compressor};
-use crate::mpi::collective::{Collective, ReduceOp};
+use crate::mpi::collective::{Collective, GroupLayout, ReduceOp};
 use crate::mpi::{Comm, Payload, Rank, Tag, WorkerStats};
 use crate::runtime::ModelExecutables;
 use crate::tensor::ParamSet;
@@ -350,13 +350,27 @@ pub struct RingWorker<'a> {
     /// applied identically on every rank (callbacks only run on rank 0,
     /// so a stateful master-side schedule would diverge the replicas).
     lr: Option<LrScheduleSpec>,
+    /// Grouped topology for the gradient collectives (hierarchical
+    /// all-reduce: intra-group ring + inter-group leader tree). `None`
+    /// keeps the flat ring.
+    groups: Option<GroupLayout>,
 }
 
 impl<'a> RingWorker<'a> {
     pub fn new(comm: &'a Comm, algo: &'a Algo,
                exes: &'a ModelExecutables, data: &'a DataSet, seed: u64,
                lr: Option<LrScheduleSpec>) -> Self {
-        Self { comm, algo, exes, data, rng: Rng::new(seed), lr }
+        Self { comm, algo, exes, data, rng: Rng::new(seed), lr,
+               groups: None }
+    }
+
+    /// Route the gradient all-reduces through a hierarchical
+    /// [`GroupLayout`] (every rank of the world must get the identical
+    /// layout). The initial weight broadcast and the round-count
+    /// agreement stay on the flat raw ring either way.
+    pub fn with_groups(mut self, groups: Option<GroupLayout>) -> Self {
+        self.groups = groups;
+        self
     }
 
     /// Train to completion. `init` is consumed on rank 0 and broadcast
@@ -376,6 +390,9 @@ impl<'a> RingWorker<'a> {
         // exempt from lossy dropping.
         col.set_codec(self.algo.compression);
         col.set_exact_tail(2);
+        // Grouped topology (hierarchical all-reduce); sum collectives
+        // dispatch to ring → tree → ring, control traffic stays flat.
+        col.set_groups(self.groups.take());
 
         // Identical start everywhere: rank 0's init circulates the ring.
         let mut params = match init {

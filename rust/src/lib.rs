@@ -61,6 +61,16 @@
 //!   at the price of per-round latency `2(n-1)·lat` and lockstep
 //!   synchronicity (no stale-gradient tolerance). `mpi-learn simulate
 //!   --algo allreduce` projects the crossover for a given cost model.
+//! - **Hierarchical all-reduce** (`Mode::AllReduce` + a hierarchy
+//!   spec; flags `--mode allreduce --hierarchy --groups G`, or
+//!   `Experiment::allreduce_grouped`): the masterless world splits
+//!   into `G` intra-group rings joined by an inter-group binary
+//!   leader tree (`mpi::collective::GroupLayout`), collapsing the
+//!   flat ring's `2(n-1)` latency term to `2(m-1) + O(log G)` —
+//!   cheap node-local hops plus a logarithmic number of network hops
+//!   (HyPar-Flow's topology argument). The bitwise-identical-weights
+//!   guarantee is unchanged, raw or compressed (DESIGN.md §Topology);
+//!   `mpi-learn simulate --algo hier-allreduce` prices it.
 //!
 //! All modes accept wire-level **gradient compression**
 //! ([`mpi::codec`], flag `--compression fp16|topk:<k>`): fp16
@@ -70,10 +80,10 @@
 //! (DESIGN.md §Gradient compression).
 //!
 //! Architecture (DESIGN.md has the full inventory):
-//! - [`mpi`] — MPI-style tagged point-to-point substrate (threads+channels
-//!   or TCP mesh) plus the [`mpi::collective`] ring
-//!   all-reduce/broadcast layer and the [`mpi::codec`] wire codecs
-//!   built on it.
+//! - [`mpi`] — MPI-style tagged point-to-point substrate
+//!   (threads+channels or TCP mesh) plus the [`mpi::collective`] layer
+//!   (ring all-reduce/broadcast, tree reduce/broadcast, hierarchical
+//!   all-reduce) and the [`mpi::codec`] wire codecs built on it.
 //! - [`runtime`] — artifact manifest + execution backends (native CPU
 //!   engine by default; PJRT behind the `pjrt` feature).
 //! - [`data`] — shard file format, synthetic HEP dataset, batching loader,
@@ -85,8 +95,8 @@
 //!   processes, Downpour + EASGD + masterless all-reduce, sync/async,
 //!   hierarchical masters, validation.
 //! - [`simulator`] — discrete-event protocol simulator for cluster-scale
-//!   sweeps (Figs 3/4, Table I) with both parameter-server and ring
-//!   cost models.
+//!   sweeps (Figs 3/4, Table I) with parameter-server, flat-ring, and
+//!   hierarchical cost models (separate intra/inter link terms).
 //! - [`tensor`], [`metrics`], [`util`] — support substrates.
 
 pub mod coordinator;

@@ -17,12 +17,17 @@
 //!   mpi-learn train --mode allreduce --model mlp --workers 8 \
 //!       --epochs 3                      # masterless ring all-reduce
 //!   mpi-learn train --mode allreduce --workers 8 --compression fp16
+//!   mpi-learn train --mode allreduce --hierarchy --groups 2 \
+//!       --workers 8                     # hierarchical all-reduce:
+//!       # two 4-rank intra-group rings + an inter-group leader tree
 //!   mpi-learn train --workers 4 --compression topk:0.1  # sparsified
 //!       # gradient uplink with error feedback
 //!   mpi-learn train --model mlp --workers 4 --validate-every 20 \
 //!       --early-stopping 3 --checkpoint runs/ckpt   # callbacks
 //!   mpi-learn simulate --workers 1,2,4,8,16,30,45,60 --preset cluster
 //!   mpi-learn simulate --algo allreduce --preset cluster
+//!   mpi-learn simulate --algo hier-allreduce --groups 4 \
+//!       --workers 16,32,64              # grouped ring + leader tree
 //!   mpi-learn info
 
 use std::path::PathBuf;
@@ -131,13 +136,12 @@ fn cmd_launch(args: &Args) -> i32 {
         Ok(j) => j,
         Err(e) => return fail(e),
     };
-    let size = match &job.train.hierarchy {
-        Some(h) => h.world_size(),
-        // allreduce is masterless: the world is exactly the worker set
-        None if job.train.algo.mode == Mode::AllReduce => {
-            job.train.n_workers
-        }
-        None => job.train.n_workers + 1,
+    // WorldPlan is the single source of truth for world size (a
+    // hand-rolled copy here went stale when grouped allreduce landed:
+    // its world is masterless even though a hierarchy spec is present)
+    let size = match mpi_learn::coordinator::WorldPlan::new(&job.train) {
+        Ok(plan) => plan.world_size(),
+        Err(e) => return fail(e),
     };
     let exe = match std::env::current_exe() {
         Ok(e) => e,
@@ -239,8 +243,13 @@ const TRAIN_FLAGS: &[Flag] = &[
            help: "stream round/validation metrics as JSON lines" },
     Flag { name: "data", value: "<dir>", default: "",
            help: "train_*.mpil shard dir (default: synthetic data)" },
+    Flag { name: "hierarchy", value: "", default: "",
+           help: "two-level topology (needs --groups >= 2): grouped \
+                  masters (downpour) or intra-group ring + inter-group \
+                  leader tree (allreduce)" },
     Flag { name: "groups", value: "<n>", default: "0",
-           help: "two-level hierarchy with N group masters (0 = flat)" },
+           help: "group count of the two-level topology (>= 2, <= \
+                  --workers; 0 = flat)" },
     Flag { name: "sync-every", value: "<n>", default: "10",
            help: "hierarchy: group master upward sync period" },
     Flag { name: "tcp", value: "", default: "",
@@ -423,12 +432,37 @@ fn cmd_train(args: &Args) -> i32 {
     let data_dir = args.str_opt("data");
     let direct = args.bool("direct");
     let tcp = args.bool("tcp");
+    let hierarchy_flag = args.bool("hierarchy");
     let groups = args.usize("groups", 0).unwrap_or(0);
     let sync_every = args.usize("sync-every", 10).unwrap_or(10) as u64;
     let seed = args.u64("seed", 2017).unwrap_or(2017);
     let artifacts = args.str_opt("artifacts");
     if let Err(e) = args.finish() {
         return fail(e);
+    }
+
+    // Parse-time --groups validation (ISSUE 4 satellite): errors name
+    // the flags to fix instead of surfacing from deep inside train().
+    if hierarchy_flag && groups < 2 {
+        return fail(format!(
+            "--hierarchy requires --groups >= 2 (got {groups})"));
+    }
+    if groups > 0 {
+        if groups < 2 {
+            return fail(format!(
+                "--groups must be >= 2 (got {groups}); omit it for a \
+                 flat world"));
+        }
+        if groups > workers {
+            return fail(format!(
+                "--groups ({groups}) must be <= --workers ({workers}): \
+                 every group needs at least one worker"));
+        }
+        if workers % groups != 0 {
+            return fail(format!(
+                "--workers ({workers}) must divide evenly into \
+                 --groups ({groups}) equal groups"));
+        }
     }
 
     let data = match data_dir {
@@ -513,8 +547,12 @@ fn cmd_simulate(args: &Args) -> i32 {
     let n_params = args.usize("params", 3023).unwrap_or(3023);
     let algo = args.str("algo", "downpour");
     let compression = args.str("compression", "fp32");
+    let groups = args.usize("groups", 4).unwrap_or(4);
     if let Err(e) = args.finish() {
         return fail(e);
+    }
+    if groups < 2 {
+        return fail(format!("--groups must be >= 2 (got {groups})"));
     }
     let cost = match preset.as_str() {
         "shared" => CostModel::shared_memory(n_params),
@@ -538,8 +576,11 @@ fn cmd_simulate(args: &Args) -> i32 {
                                                &worker_counts, 2017),
         "allreduce" => simulator::speedup_curve_allreduce(
             &cost, &base, &worker_counts, 2017),
+        "hier-allreduce" => simulator::speedup_curve_hier_allreduce(
+            &cost, &base, &worker_counts, groups, 2017),
         other => return fail(format!(
-            "unknown simulate algo '{other}' (downpour|allreduce)")),
+            "unknown simulate algo '{other}' \
+             (downpour|allreduce|hier-allreduce)")),
     };
     println!("workers,speedup");
     for (w, s) in curve {

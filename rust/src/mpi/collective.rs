@@ -33,6 +33,29 @@
 //! scalar agreements, and broadcasts always go raw, and the last
 //! [`Collective::set_exact_tail`] elements are exempt from top-k
 //! dropping (piggybacked control flags must never vanish).
+//!
+//! **Hierarchical all-reduce** ([`Collective::set_groups`]): a flat ring
+//! pays a `2(n-1)` lockstep-latency term per round — the curve-flattener
+//! HyPar-Flow attributes the PS-free scaling wall to. With a
+//! [`GroupLayout`] configured, sum all-reduces instead run
+//! ring → tree → ring:
+//!
+//! 1. each group runs the chunked ring **reduce-scatter** over its own
+//!    members (`Tag::GroupChunk`, cheap intra-node hops),
+//! 2. members gather their completed chunks onto the group **leader**
+//!    (`Tag::GroupGather`), so each leader holds its group's full sum,
+//! 3. leaders combine partial sums up a **binary tree**
+//!    (`Tag::TreeReduce`) — `ceil(log2 G)` expensive inter-node hops
+//!    instead of `G` ring steps,
+//! 4. the tree root builds the **canonical payload** (compressing it
+//!    ONCE under a lossy codec, adopting the decoded form itself) and it
+//!    travels back down the leader tree (`Tag::TreeBcast`) and around
+//!    each group's ring (`Tag::GroupBcast`) *verbatim* — every rank
+//!    decodes identical bytes, so the bitwise-identical guarantee holds
+//!    exactly as in the flat ring.
+//!
+//! Min/Max reductions, scalar agreements, and `broadcast` ignore the
+//! layout (control-plane traffic stays on the flat raw ring).
 
 use std::time::Duration;
 
@@ -66,6 +89,86 @@ impl ReduceOp {
     }
 }
 
+/// Disjoint rank groups covering a masterless world — the topology input
+/// of the hierarchical all-reduce. The first member of each group is its
+/// *leader* (the rank that joins the inter-group binary tree); the
+/// leader of group 0 is the tree root.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupLayout {
+    groups: Vec<Vec<Rank>>,
+}
+
+impl GroupLayout {
+    /// Build a layout from explicit member lists. Groups must be
+    /// non-empty and disjoint (every rank in at most one group).
+    pub fn new(groups: Vec<Vec<Rank>>) -> Result<GroupLayout, String> {
+        if groups.is_empty() {
+            return Err("group layout needs at least one group".into());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for (g, members) in groups.iter().enumerate() {
+            if members.is_empty() {
+                return Err(format!("group {g} is empty"));
+            }
+            for &r in members {
+                if !seen.insert(r) {
+                    return Err(format!(
+                        "rank {r} appears in more than one group"));
+                }
+            }
+        }
+        Ok(GroupLayout { groups })
+    }
+
+    /// Split ranks `0..world` into `n_groups` contiguous blocks (the
+    /// canonical layout: ranks of one group are co-located "node"
+    /// neighbors). `world` must divide evenly.
+    pub fn contiguous(world: usize, n_groups: usize)
+        -> Result<GroupLayout, String> {
+        if n_groups == 0 || world == 0 || world % n_groups != 0 {
+            return Err(format!(
+                "cannot split {world} ranks into {n_groups} equal \
+                 groups"));
+        }
+        let per = world / n_groups;
+        Self::new((0..n_groups)
+            .map(|g| (g * per..(g + 1) * per).collect())
+            .collect())
+    }
+
+    pub fn groups(&self) -> &[Vec<Rank>] {
+        &self.groups
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Group index of `rank`, if it belongs to the layout.
+    pub fn group_of(&self, rank: Rank) -> Option<usize> {
+        self.groups.iter().position(|g| g.contains(&rank))
+    }
+
+    /// One leader per group: the group's first member.
+    pub fn leaders(&self) -> Vec<Rank> {
+        self.groups.iter().map(|g| g[0]).collect()
+    }
+
+    /// Total ranks covered by the layout.
+    pub fn world_size(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+}
+
+/// Position of `rank` in `members`, or a protocol error (collectives
+/// over a subset require the caller to be part of it).
+fn member_pos(members: &[Rank], rank: Rank) -> Result<usize, CommError> {
+    members.iter().position(|&r| r == rank).ok_or_else(|| {
+        CommError::Protocol(format!(
+            "collective: rank {rank} is not a member of {members:?}"))
+    })
+}
+
 /// Per-rank collective endpoint: wraps a [`Comm`] with the stash needed
 /// to keep ring traffic and unrelated protocol messages untangled.
 pub struct Collective<'a> {
@@ -79,6 +182,8 @@ pub struct Collective<'a> {
     compressor: Compressor,
     /// Trailing elements exempt from lossy dropping (stop flags, loss).
     exact_tail: usize,
+    /// Grouped topology for sum all-reduces (None = flat ring).
+    groups: Option<GroupLayout>,
 }
 
 impl<'a> Collective<'a> {
@@ -91,6 +196,7 @@ impl<'a> Collective<'a> {
             codec: Codec::Fp32,
             compressor: Compressor::new(Codec::Fp32),
             exact_tail: 0,
+            groups: None,
         }
     }
 
@@ -115,6 +221,20 @@ impl<'a> Collective<'a> {
     /// from lossy dropping (piggybacked control values).
     pub fn set_exact_tail(&mut self, n: usize) {
         self.exact_tail = n;
+    }
+
+    /// Route sum all-reduces through the hierarchical
+    /// ring → tree → ring schedule over `layout` (see the module docs);
+    /// `None` restores the flat ring. All ranks of a world must
+    /// configure the identical layout — the schedule is positional, not
+    /// negotiated. Min/Max reductions, scalar agreements, and
+    /// broadcasts are unaffected.
+    pub fn set_groups(&mut self, layout: Option<GroupLayout>) {
+        self.groups = layout;
+    }
+
+    pub fn groups_layout(&self) -> Option<&GroupLayout> {
+        self.groups.as_ref()
     }
 
     pub fn comm(&self) -> &Comm {
@@ -152,6 +272,29 @@ impl<'a> Collective<'a> {
         -> Result<(), CommError> {
         self.seq += 1;
         self.comm.send(to, tag, Payload::floats(self.seq, data.to_vec()))
+    }
+
+    /// Like [`Collective::recv_from`], but same-tag traffic from other
+    /// sources is stashed instead of treated as a protocol violation —
+    /// needed wherever a rank legitimately hears the same tag from
+    /// several peers in arbitrary order (a tree parent's two children,
+    /// a leader gathering its whole group).
+    fn recv_from_stashing(&mut self, tag: Tag, from: Rank)
+        -> Result<Envelope, CommError> {
+        loop {
+            if let Some(i) = self
+                .stash
+                .iter()
+                .position(|e| e.tag == tag && e.src == from)
+            {
+                return Ok(self.stash.remove(i));
+            }
+            let env = self.comm.recv_timeout(self.recv_timeout)?;
+            if env.tag == tag && env.src == from {
+                return Ok(env);
+            }
+            self.stash.push(env);
+        }
     }
 
     /// Receive the next `tag` envelope from `from`, stashing any
@@ -197,6 +340,12 @@ impl<'a> Collective<'a> {
     fn recv_chunk(&mut self, tag: Tag, from: Rank, expect_len: usize)
         -> Result<Payload, CommError> {
         let env = self.recv_from(tag, from)?;
+        Self::check_chunk(env, expect_len)
+    }
+
+    /// Validate a chunk envelope's payload kind and logical length.
+    fn check_chunk(env: Envelope, expect_len: usize)
+        -> Result<Payload, CommError> {
         let got = match &env.payload {
             Payload::Floats { data, .. } => data.len(),
             Payload::Packed { data, .. } => data.len(),
@@ -253,10 +402,17 @@ impl<'a> Collective<'a> {
     ///
     /// All ranks must call this the same number of times with
     /// equal-length buffers (lockstep SPMD, like `MPI_Allreduce`).
+    /// With a [`GroupLayout`] configured ([`Collective::set_groups`]),
+    /// sum reductions run the hierarchical ring → tree → ring schedule
+    /// instead of the flat ring; Min/Max still use the flat raw ring
+    /// (they are rare control-plane reductions).
     pub fn allreduce(&mut self, data: &mut [f32], op: ReduceOp)
         -> Result<(), CommError> {
         if self.comm.size() <= 1 {
             return Ok(());
+        }
+        if op == ReduceOp::Sum && self.groups.is_some() {
+            return self.allreduce_hier(data);
         }
         if self.codec.is_identity() || op != ReduceOp::Sum {
             self.allreduce_raw(data, op)
@@ -327,28 +483,12 @@ impl<'a> Collective<'a> {
             let send_idx = (rank + n - step) % n;
             let recv_idx = (rank + 2 * n - step - 1) % n;
             let (s0, s1) = Self::chunk_bounds(len, n, send_idx);
-            let protect = self.protect_len(len, s0, s1);
-            let packed = self
-                .compressor
-                .compress_window(&data[s0..s1], s0, len, protect)
-                .expect("lossy codec packs");
-            self.seq += 1;
-            self.comm.send(next, Tag::RingChunk,
-                           Payload::packed(self.seq, 0.0, packed))?;
+            self.send_sum_chunk(next, Tag::RingChunk, data, s0, s1,
+                                len)?;
             let (r0, r1) = Self::chunk_bounds(len, n, recv_idx);
-            match self.recv_chunk(Tag::RingChunk, prev, r1 - r0)? {
-                Payload::Packed { data: packed, .. } => {
-                    packed.add_into(&mut data[r0..r1]);
-                }
-                Payload::Floats { data: chunk, .. } => {
-                    for (dst, &src) in
-                        data[r0..r1].iter_mut().zip(chunk.iter())
-                    {
-                        *dst += src;
-                    }
-                }
-                _ => unreachable!("recv_chunk validates the kind"),
-            }
+            let payload =
+                self.recv_chunk(Tag::RingChunk, prev, r1 - r0)?;
+            Self::add_payload(&payload, &mut data[r0..r1]);
         }
 
         // Phase 2 — all-gather: the chunk owner compresses its
@@ -388,6 +528,241 @@ impl<'a> Collective<'a> {
                 _ => unreachable!("recv_chunk validates the kind"),
             }
             carry = Some(payload);
+        }
+        Ok(())
+    }
+
+    // --- hierarchical all-reduce (ring → tree → ring) ---------------
+
+    /// Send the partial sums `data[s0..s1)` (a window of the logical
+    /// `len`-element buffer) to `to`: raw under the identity codec,
+    /// error-feedback-compressed otherwise (exact tail protected).
+    fn send_sum_chunk(&mut self, to: Rank, tag: Tag, data: &[f32],
+                      s0: usize, s1: usize, len: usize)
+        -> Result<(), CommError> {
+        if self.codec.is_identity() {
+            self.seq += 1;
+            self.comm.send(to, tag,
+                           Payload::floats(self.seq,
+                                           data[s0..s1].to_vec()))
+        } else {
+            let protect = self.protect_len(len, s0, s1);
+            let packed = self
+                .compressor
+                .compress_window(&data[s0..s1], s0, len, protect)
+                .expect("lossy codec packs");
+            self.seq += 1;
+            self.comm.send(to, tag, Payload::packed(self.seq, 0.0,
+                                                    packed))
+        }
+    }
+
+    /// Sum-accumulate a received raw-or-packed chunk into `dst`.
+    fn add_payload(payload: &Payload, dst: &mut [f32]) {
+        match payload {
+            Payload::Packed { data, .. } => data.add_into(dst),
+            Payload::Floats { data, .. } => {
+                for (d, &s) in dst.iter_mut().zip(data.iter()) {
+                    *d += s;
+                }
+            }
+            _ => unreachable!("recv_chunk validates the kind"),
+        }
+    }
+
+    /// Overwrite `dst` with a received raw-or-packed chunk's decoded
+    /// values (adoption hops: gather, broadcasts).
+    fn set_payload(payload: &Payload, dst: &mut [f32]) {
+        match payload {
+            Payload::Packed { data, .. } => data.unpack_into(dst),
+            Payload::Floats { data, .. } => dst.copy_from_slice(data),
+            _ => unreachable!("recv_chunk validates the kind"),
+        }
+    }
+
+    /// [`Collective::recv_chunk`] via the stashing receive — for hops
+    /// where several peers legitimately send the same tag (tree
+    /// children, group gathers).
+    fn recv_chunk_stashing(&mut self, tag: Tag, from: Rank,
+                           expect_len: usize)
+        -> Result<Payload, CommError> {
+        let env = self.recv_from_stashing(tag, from)?;
+        Self::check_chunk(env, expect_len)
+    }
+
+    /// Build the one payload every rank of a broadcast will adopt: raw
+    /// shared floats under the identity codec; compressed ONCE (error
+    /// feedback, exact tail protected) under a lossy codec — the
+    /// builder adopts the decoded form itself, so its replica matches
+    /// every receiver's bytes.
+    fn canonical_payload(&mut self, data: &mut [f32]) -> Payload {
+        self.seq += 1;
+        if self.codec.is_identity() {
+            Payload::floats(self.seq, data.to_vec())
+        } else {
+            let len = data.len();
+            let protect = self.protect_len(len, 0, len);
+            let packed = self
+                .compressor
+                .compress_window(data, 0, len, protect)
+                .expect("lossy codec packs");
+            packed.unpack_into(data);
+            Payload::packed(self.seq, 0.0, packed)
+        }
+    }
+
+    /// Binary-tree sum-reduce over `members` (position `p`'s parent is
+    /// `(p-1)/2`): on return `members[0]` holds the element-wise sum of
+    /// every member's input in a deterministic order (own subtree, then
+    /// left child's, then right child's); other members hold partial
+    /// sums that a following broadcast should overwrite. With a lossy
+    /// codec, upward hops compress with error feedback. Must be called
+    /// by every member with equal-length buffers.
+    pub fn tree_reduce_sum(&mut self, members: &[Rank],
+                           data: &mut [f32]) -> Result<(), CommError> {
+        let pos = member_pos(members, self.comm.rank())?;
+        let len = data.len();
+        for c in [2 * pos + 1, 2 * pos + 2] {
+            if c < members.len() {
+                let payload = self.recv_chunk_stashing(
+                    Tag::TreeReduce, members[c], len)?;
+                Self::add_payload(&payload, data);
+            }
+        }
+        if pos > 0 {
+            self.send_sum_chunk(members[(pos - 1) / 2],
+                                Tag::TreeReduce, data, 0, len, len)?;
+        }
+        Ok(())
+    }
+
+    /// Binary-tree broadcast from `members[0]`: every member adopts the
+    /// root's buffer. The canonical payload (see
+    /// [`Collective::canonical_payload`]) is forwarded verbatim, so all
+    /// members finish with identical bytes even under a lossy codec.
+    /// Returns the payload so callers can keep forwarding it (the
+    /// hierarchical all-reduce chains it into each group's ring).
+    fn tree_bcast_payload(&mut self, members: &[Rank],
+                          data: &mut [f32])
+        -> Result<Payload, CommError> {
+        let pos = member_pos(members, self.comm.rank())?;
+        let payload = if pos == 0 {
+            self.canonical_payload(data)
+        } else {
+            let parent = members[(pos - 1) / 2];
+            let payload = self.recv_chunk_stashing(
+                Tag::TreeBcast, parent, data.len())?;
+            Self::set_payload(&payload, data);
+            payload
+        };
+        for c in [2 * pos + 1, 2 * pos + 2] {
+            if c < members.len() {
+                self.comm.send(members[c], Tag::TreeBcast,
+                               payload.clone())?;
+            }
+        }
+        Ok(payload)
+    }
+
+    /// Public tree broadcast (reduce's companion): `members[0]`'s
+    /// buffer replicated to every member in `ceil(log2 n)` hop levels.
+    pub fn tree_broadcast(&mut self, members: &[Rank],
+                          data: &mut [f32]) -> Result<(), CommError> {
+        self.tree_bcast_payload(members, data).map(|_| ())
+    }
+
+    /// Hierarchical sum all-reduce (see the module docs): intra-group
+    /// chunked ring reduce-scatter → gather onto the group leader →
+    /// binary-tree reduce over leaders → the root's canonical payload
+    /// travels back down the tree and around each group's ring
+    /// verbatim. All ranks finish bitwise identical, raw or compressed.
+    fn allreduce_hier(&mut self, data: &mut [f32])
+        -> Result<(), CommError> {
+        let layout = self.groups.clone()
+            .expect("allreduce_hier requires a group layout");
+        if layout.world_size() != self.comm.size() {
+            return Err(CommError::Protocol(format!(
+                "collective: group layout covers {} ranks but the \
+                 world has {}",
+                layout.world_size(),
+                self.comm.size()
+            )));
+        }
+        let rank = self.comm.rank();
+        let len = data.len();
+        let gi = layout.group_of(rank).ok_or_else(|| {
+            CommError::Protocol(format!(
+                "collective: rank {rank} missing from the group layout"
+            ))
+        })?;
+        let members = layout.groups()[gi].clone();
+        let m = members.len();
+        let pos = member_pos(&members, rank)?;
+
+        // Phase 1 — intra-group chunked ring reduce-scatter (the flat
+        // ring's schedule over the group's members): after m-1 steps,
+        // position p owns the complete group sum of chunk (p+1) mod m.
+        // Dedicated tags (GroupChunk/GroupBcast, not RingChunk/Bcast):
+        // a rank's group-ring neighbor differs from its flat-ring
+        // neighbor, and flat collectives (the initial broadcast, scalar
+        // agreements) interleave with grouped rounds — shared tags
+        // would make a fast rank's grouped chunk look like a flat
+        // chunk from the wrong source.
+        if m > 1 {
+            let next = members[(pos + 1) % m];
+            let prev = members[(pos + m - 1) % m];
+            for step in 0..m - 1 {
+                let send_idx = (pos + m - step) % m;
+                let recv_idx = (pos + 2 * m - step - 1) % m;
+                let (s0, s1) = Self::chunk_bounds(len, m, send_idx);
+                self.send_sum_chunk(next, Tag::GroupChunk, data, s0, s1,
+                                    len)?;
+                let (r0, r1) = Self::chunk_bounds(len, m, recv_idx);
+                let payload =
+                    self.recv_chunk(Tag::GroupChunk, prev, r1 - r0)?;
+                Self::add_payload(&payload, &mut data[r0..r1]);
+            }
+            // Phase 2 — gather the scattered chunks onto the leader so
+            // it holds the full group sum for the inter-group tree.
+            // (These are adoption hops: each chunk's group sum exists
+            // only on its owner.)
+            if pos == 0 {
+                for (p, &src) in members.iter().enumerate().skip(1) {
+                    let (r0, r1) =
+                        Self::chunk_bounds(len, m, (p + 1) % m);
+                    let payload = self.recv_chunk_stashing(
+                        Tag::GroupGather, src, r1 - r0)?;
+                    Self::set_payload(&payload, &mut data[r0..r1]);
+                }
+            } else {
+                let (s0, s1) = Self::chunk_bounds(len, m, (pos + 1) % m);
+                self.send_sum_chunk(members[0], Tag::GroupGather, data,
+                                    s0, s1, len)?;
+            }
+        }
+
+        if pos == 0 {
+            // Phases 3-4 — leaders only: combine group sums up the
+            // binary tree, then carry the canonical result back down.
+            let leaders = layout.leaders();
+            self.tree_reduce_sum(&leaders, data)?;
+            let payload = self.tree_bcast_payload(&leaders, data)?;
+            // Phase 5 — re-broadcast into the group's ring: the SAME
+            // payload chains leader → members[1] → … → members[m-1].
+            if m > 1 {
+                self.comm.send(members[1], Tag::GroupBcast, payload)?;
+            }
+        } else {
+            // Phase 5, member side: adopt the canonical payload from
+            // the ring predecessor and forward it verbatim.
+            let payload =
+                self.recv_chunk(Tag::GroupBcast, members[pos - 1],
+                                len)?;
+            Self::set_payload(&payload, data);
+            if pos + 1 < m {
+                self.comm.send(members[pos + 1], Tag::GroupBcast,
+                               payload)?;
+            }
         }
         Ok(())
     }
@@ -797,6 +1172,322 @@ mod tests {
                 "fp16 {fp16} should be < 60% of fp32 {raw}");
         assert!(topk < 0.25 * raw,
                 "topk:0.1 {topk} should be < 25% of fp32 {raw}");
+    }
+
+    // --- hierarchical collectives -----------------------------------
+
+    /// Reference reduction matching the hierarchical schedule's
+    /// deterministic order: each group's sum in its ring order (see
+    /// [`ring_order_reference`]), then the binary tree's fold at the
+    /// root (own subtree, then left child's total, then right child's).
+    fn hier_order_reference(inputs: &[Vec<f32>], layout: &GroupLayout)
+        -> Vec<f32> {
+        let group_sums: Vec<Vec<f32>> = layout
+            .groups()
+            .iter()
+            .map(|members| {
+                let ins: Vec<Vec<f32>> = members
+                    .iter()
+                    .map(|&r| inputs[r].clone())
+                    .collect();
+                ring_order_reference(&ins, ReduceOp::Sum)
+            })
+            .collect();
+        fn tree_val(p: usize, sums: &[Vec<f32>]) -> Vec<f32> {
+            let mut acc = sums[p].clone();
+            for c in [2 * p + 1, 2 * p + 2] {
+                if c < sums.len() {
+                    for (a, b) in
+                        acc.iter_mut().zip(tree_val(c, sums))
+                    {
+                        *a += b;
+                    }
+                }
+            }
+            acc
+        }
+        tree_val(0, &group_sums)
+    }
+
+    fn run_hier(n: usize, layout: &GroupLayout, inputs: &[Vec<f32>],
+                codec: Codec, tail: usize) -> Vec<Vec<f32>> {
+        let world = inproc_world(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = world
+                .into_iter()
+                .zip(inputs.iter())
+                .map(|(comm, input)| {
+                    let layout = layout.clone();
+                    s.spawn(move || {
+                        let mut col = Collective::new(&comm);
+                        col.set_codec(codec);
+                        col.set_exact_tail(tail);
+                        col.set_groups(Some(layout));
+                        let mut buf = input.clone();
+                        col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn group_layout_validation() {
+        let l = GroupLayout::contiguous(8, 2).unwrap();
+        assert_eq!(l.groups(), &[vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        assert_eq!(l.leaders(), vec![0, 4]);
+        assert_eq!(l.n_groups(), 2);
+        assert_eq!(l.world_size(), 8);
+        assert_eq!(l.group_of(5), Some(1));
+        assert_eq!(l.group_of(9), None);
+        assert!(GroupLayout::contiguous(8, 3).is_err(), "non-divisible");
+        assert!(GroupLayout::contiguous(0, 2).is_err());
+        assert!(GroupLayout::new(vec![]).is_err());
+        assert!(GroupLayout::new(vec![vec![0], vec![]]).is_err());
+        assert!(GroupLayout::new(vec![vec![0, 1], vec![1, 2]]).is_err(),
+                "overlapping groups");
+    }
+
+    #[test]
+    fn tree_reduce_then_broadcast_replicates_sum() {
+        // 6 members: an unbalanced binary tree (positions 3..5 are
+        // leaves at different depths). Integer inputs make the sum
+        // order-independent, so exact equality is required.
+        let n = 6;
+        let members: Vec<usize> = (0..n).collect();
+        let world = inproc_world(n);
+        let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = world
+                .into_iter()
+                .enumerate()
+                .map(|(r, comm)| {
+                    let members = members.clone();
+                    s.spawn(move || {
+                        let mut col = Collective::new(&comm);
+                        let mut buf =
+                            vec![(r + 1) as f32, -(r as f32)];
+                        col.tree_reduce_sum(&members, &mut buf)
+                            .unwrap();
+                        col.tree_broadcast(&members, &mut buf).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for got in &results {
+            assert_eq!(got, &vec![21.0, -15.0]);
+        }
+    }
+
+    #[test]
+    fn tree_collectives_work_on_a_rank_subset() {
+        // Only ranks 0, 2, 4 of a 5-rank world join the tree; the
+        // others stay idle — the subset schedule must not involve them.
+        let world = inproc_world(5);
+        let members = vec![0usize, 2, 4];
+        let results: Vec<Option<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = world
+                .into_iter()
+                .enumerate()
+                .map(|(r, comm)| {
+                    let members = members.clone();
+                    s.spawn(move || {
+                        if !members.contains(&r) {
+                            return None;
+                        }
+                        let mut col = Collective::new(&comm);
+                        let mut buf = vec![r as f32 + 1.0];
+                        col.tree_reduce_sum(&members, &mut buf)
+                            .unwrap();
+                        col.tree_broadcast(&members, &mut buf).unwrap();
+                        Some(buf[0])
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (r, got) in results.iter().enumerate() {
+            match got {
+                Some(v) => assert_eq!(*v, 9.0, "member {r}"),
+                None => assert!(!members.contains(&r)),
+            }
+        }
+    }
+
+    #[test]
+    fn hier_allreduce_matches_reference_and_is_identical() {
+        // The raw hierarchical schedule is exactly as deterministic as
+        // the flat ring: every rank must match the reference BITWISE.
+        for (n, g) in [(4usize, 2usize), (6, 2), (6, 3), (8, 2),
+                       (8, 4), (9, 3)] {
+            let layout = GroupLayout::contiguous(n, g).unwrap();
+            for len in [1usize, 3, 7, 64, 65] {
+                let inputs = random_inputs(
+                    n, len, n as u64 * 977 + g as u64 * 31 + len as u64);
+                let reference = hier_order_reference(&inputs, &layout);
+                let results =
+                    run_hier(n, &layout, &inputs, Codec::Fp32, 0);
+                for (r, got) in results.iter().enumerate() {
+                    assert!(
+                        got.iter().zip(reference.iter()).all(
+                            |(a, b)| a.to_bits() == b.to_bits()),
+                        "rank {r} != reference (n={n} g={g} len={len})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_allreduce_compressed_bitwise_identical_across_ranks() {
+        for codec in [Codec::Fp16, Codec::TopK { k: 0.25 }] {
+            for (n, g) in [(4usize, 2usize), (8, 2), (8, 4), (9, 3)] {
+                let layout = GroupLayout::contiguous(n, g).unwrap();
+                for len in [1usize, 7, 65] {
+                    let inputs = random_inputs(
+                        n, len,
+                        n as u64 * 389 + g as u64 * 7 + len as u64);
+                    let results =
+                        run_hier(n, &layout, &inputs, codec, 0);
+                    let reference = &results[0];
+                    for (r, got) in results.iter().enumerate() {
+                        assert!(
+                            got.iter().zip(reference.iter()).all(
+                                |(a, b)| a.to_bits() == b.to_bits()),
+                            "rank {r} diverged ({codec:?}, n={n}, \
+                             g={g}, len={len})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_fp16_tracks_exact_sum() {
+        let n = 8;
+        let len = 64;
+        let layout = GroupLayout::contiguous(n, 2).unwrap();
+        let inputs = random_inputs(n, len, 271);
+        let reference = hier_order_reference(&inputs, &layout);
+        let results = run_hier(n, &layout, &inputs, Codec::Fp16, 0);
+        for (got, want) in results[0].iter().zip(&reference) {
+            assert!((got - want).abs() <= 0.02 * want.abs() + 0.02,
+                    "fp16 hier sum {got} too far from {want}");
+        }
+    }
+
+    #[test]
+    fn hier_exact_tail_survives_topk() {
+        let n = 8;
+        let len = 34; // 32 body + loss + stop flag
+        let layout = GroupLayout::contiguous(n, 2).unwrap();
+        let mut inputs = random_inputs(n, len, 17);
+        for (r, input) in inputs.iter_mut().enumerate() {
+            for v in input.iter_mut() {
+                *v *= 100.0;
+            }
+            input[len - 2] = 0.25 + r as f32;
+            input[len - 1] = if r == 5 { 1.0 } else { 0.0 };
+        }
+        let results = run_hier(n, &layout, &inputs,
+                               Codec::TopK { k: 0.1 }, 2);
+        for got in &results {
+            assert!(got[len - 1] >= 1.0, "stop flag must survive");
+        }
+        // the protected tail also stays bitwise identical everywhere
+        for got in &results {
+            assert_eq!(got[len - 2].to_bits(),
+                       results[0][len - 2].to_bits());
+        }
+    }
+
+    #[test]
+    fn hier_min_max_fall_back_to_flat_raw_ring() {
+        // Min/Max ignore the layout (control-plane reductions).
+        let n = 6;
+        let layout = GroupLayout::contiguous(n, 2).unwrap();
+        let world = inproc_world(n);
+        let results: Vec<f32> = std::thread::scope(|s| {
+            let handles: Vec<_> = world
+                .into_iter()
+                .enumerate()
+                .map(|(r, comm)| {
+                    let layout = layout.clone();
+                    s.spawn(move || {
+                        let mut col = Collective::new(&comm);
+                        col.set_groups(Some(layout));
+                        col.allreduce_scalar(10.0 + r as f32,
+                                             ReduceOp::Min)
+                            .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(results.iter().all(|&v| v == 10.0), "{results:?}");
+    }
+
+    #[test]
+    fn hier_layout_must_cover_the_world() {
+        let world = inproc_world(3);
+        let mut col = Collective::new(&world[0]);
+        col.set_groups(Some(GroupLayout::contiguous(2, 2).unwrap()));
+        let mut buf = vec![0.0f32; 4];
+        assert!(matches!(col.allreduce(&mut buf, ReduceOp::Sum),
+                         Err(CommError::Protocol(_))));
+    }
+
+    #[test]
+    fn hier_allreduce_repeated_rounds_stay_identical() {
+        // Error feedback carries state across rounds; ranks must stay
+        // bitwise identical on every round, not just the first.
+        let n = 8;
+        let len = 40;
+        let layout = GroupLayout::contiguous(n, 4).unwrap();
+        let inputs = random_inputs(n, len, 23);
+        let world = inproc_world(n);
+        let per_round: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = world
+                .into_iter()
+                .zip(inputs.iter())
+                .map(|(comm, input)| {
+                    let layout = layout.clone();
+                    s.spawn(move || {
+                        let mut col = Collective::new(&comm);
+                        col.set_codec(Codec::TopK { k: 0.2 });
+                        col.set_groups(Some(layout));
+                        let mut rounds = Vec::new();
+                        let mut buf = input.clone();
+                        for r in 0..4 {
+                            if r > 0 {
+                                buf.copy_from_slice(input);
+                            }
+                            col.allreduce(&mut buf, ReduceOp::Sum)
+                                .unwrap();
+                            rounds.push(buf.clone());
+                        }
+                        rounds
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for round in 0..4 {
+            let reference = &per_round[0][round];
+            for (r, rank_rounds) in per_round.iter().enumerate() {
+                assert!(
+                    rank_rounds[round]
+                        .iter()
+                        .zip(reference.iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "rank {r} diverged on round {round}"
+                );
+            }
+        }
     }
 
     #[test]

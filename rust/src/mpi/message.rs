@@ -51,6 +51,24 @@ pub enum Tag {
     RingChunk = 9,
     /// neighbor -> neighbor: ring broadcast payload (collective layer)
     Bcast = 10,
+    /// child -> parent: binary-tree reduce partial sum (collective layer,
+    /// hierarchical all-reduce's inter-group phase)
+    TreeReduce = 11,
+    /// parent -> child: binary-tree broadcast payload (collective layer)
+    TreeBcast = 12,
+    /// member -> group leader: reduce-scattered chunk gather (collective
+    /// layer, hierarchical all-reduce's intra-group phase)
+    GroupGather = 13,
+    /// group-ring neighbor -> neighbor: intra-group reduce-scatter
+    /// chunk. Distinct from `RingChunk` so grouped traffic can never be
+    /// mistaken for a flat collective's (their source ranks differ, and
+    /// a fast rank's first grouped chunk may arrive while its neighbor
+    /// is still inside a flat collective's strict receive).
+    GroupChunk = 14,
+    /// group-ring neighbor -> neighbor: the canonical result payload
+    /// chained through the group (distinct from `Bcast` for the same
+    /// reason as `GroupChunk`).
+    GroupBcast = 15,
 }
 
 impl Tag {
@@ -67,6 +85,11 @@ impl Tag {
             8 => Tag::Ping,
             9 => Tag::RingChunk,
             10 => Tag::Bcast,
+            11 => Tag::TreeReduce,
+            12 => Tag::TreeBcast,
+            13 => Tag::GroupGather,
+            14 => Tag::GroupChunk,
+            15 => Tag::GroupBcast,
             _ => return None,
         })
     }
@@ -490,7 +513,9 @@ mod tests {
 
     #[test]
     fn collective_tags_roundtrip() {
-        for tag in [Tag::RingChunk, Tag::Bcast] {
+        for tag in [Tag::RingChunk, Tag::Bcast, Tag::TreeReduce,
+                    Tag::TreeBcast, Tag::GroupGather, Tag::GroupChunk,
+                    Tag::GroupBcast] {
             let p = Payload::floats(3, vec![0.5, 1.5]);
             let (t2, p2) = decode(&encode(tag, &p)).unwrap();
             assert_eq!(t2, tag);

@@ -19,7 +19,7 @@ pub mod message;
 pub mod transport;
 
 pub use codec::{Codec, Compressor, PackedF32};
-pub use collective::{Collective, ReduceOp};
+pub use collective::{Collective, GroupLayout, ReduceOp};
 pub use comm::{Comm, CommError};
 pub use message::{Envelope, Payload, Rank, Tag, WorkerStats};
 

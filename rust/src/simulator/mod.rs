@@ -150,17 +150,19 @@ pub fn simulate(cost: &CostModel, cfg: &SimConfig, seed: u64)
     }
 }
 
-/// Simulate one masterless ring-all-reduce run (`Mode::AllReduce`): per
-/// round, the slowest rank's gradient gates the lockstep collective,
-/// then every rank applies the identical update in parallel. Rank 0's
-/// validation still serializes the world (it is a barrier participant),
-/// but there is no per-gradient master service time — the quantity whose
-/// saturation caps the parameter-server curves of Figs 3/4.
-pub fn simulate_allreduce(cost: &CostModel, cfg: &SimConfig, seed: u64)
-    -> SimResult {
+/// Shared protocol loop of the masterless modes: per round, the
+/// slowest rank's gradient gates the lockstep collective (wall time
+/// `collective_s`, whatever its topology), then every rank applies the
+/// identical update in parallel. Rank 0's validation still serializes
+/// the world (it is a barrier participant), but there is no
+/// per-gradient master service time — the quantity whose saturation
+/// caps the parameter-server curves of Figs 3/4. One implementation so
+/// flat-ring and hierarchical simulations can never diverge in
+/// anything but the collective term.
+fn simulate_masterless(cost: &CostModel, cfg: &SimConfig,
+                       collective_s: f64, seed: u64) -> SimResult {
     let rounds = cfg.batches_per_worker();
     let mut rng = Rng::new(seed);
-    let ring = cost.ring_allreduce_time(cfg.n_workers);
     let mut t = 0.0f64;
     let mut rank0_busy = 0.0f64;
     let mut validations = 0u64;
@@ -168,7 +170,7 @@ pub fn simulate_allreduce(cost: &CostModel, cfg: &SimConfig, seed: u64)
         let slowest = (0..cfg.n_workers)
             .map(|_| cost.grad_time(cfg.batch, &mut rng))
             .fold(0.0f64, f64::max);
-        t += slowest + ring + cost.t_update;
+        t += slowest + collective_s + cost.t_update;
         rank0_busy += cost.t_update;
         if cfg.validate_every > 0
             && (round + 1) % cfg.validate_every == 0 {
@@ -184,6 +186,50 @@ pub fn simulate_allreduce(cost: &CostModel, cfg: &SimConfig, seed: u64)
         updates: rounds,
         validations,
     }
+}
+
+/// Simulate one masterless flat-ring all-reduce run
+/// (`Mode::AllReduce`); see [`simulate_masterless`] for the protocol.
+pub fn simulate_allreduce(cost: &CostModel, cfg: &SimConfig, seed: u64)
+    -> SimResult {
+    simulate_masterless(cost, cfg,
+                        cost.ring_allreduce_time(cfg.n_workers), seed)
+}
+
+/// Simulate one masterless **hierarchical** all-reduce run
+/// (`Mode::AllReduce` + hierarchy): identical protocol to
+/// [`simulate_allreduce`], but the per-round collective is the grouped
+/// ring → tree → ring schedule
+/// ([`CostModel::hierarchical_allreduce_time`]) — the flat ring's
+/// `2(n-1)` inter-node latency term becomes `2(m-1)` cheap intra-group
+/// steps plus `O(log groups)` inter-group tree levels.
+pub fn simulate_hier_allreduce(cost: &CostModel, cfg: &SimConfig,
+                               groups: usize, seed: u64) -> SimResult {
+    simulate_masterless(
+        cost, cfg,
+        cost.hierarchical_allreduce_time(cfg.n_workers, groups), seed)
+}
+
+/// Speedup-vs-workers series for the hierarchical all-reduce
+/// (`groups` fixed across the sweep; each world splits into `groups`
+/// equal groups, clamped to the world size).
+pub fn speedup_curve_hier_allreduce(cost: &CostModel, base: &SimConfig,
+                                    worker_counts: &[usize],
+                                    groups: usize, seed: u64)
+    -> Vec<(usize, f64)> {
+    let t1 = simulate_hier_allreduce(
+        cost, &SimConfig { n_workers: 1, ..base.clone() }, groups, seed)
+        .total_time_s;
+    worker_counts
+        .iter()
+        .map(|&w| {
+            let cfg = SimConfig { n_workers: w, ..base.clone() };
+            let t = simulate_hier_allreduce(cost, &cfg, groups,
+                                            seed ^ w as u64)
+                .total_time_s;
+            (w, t1 / t)
+        })
+        .collect()
 }
 
 /// Speedup-vs-workers series for the all-reduce mode (fixed total
@@ -241,6 +287,8 @@ mod tests {
             t_val: 0.0,
             latency: 1e-5,
             bandwidth_bytes_per_s: 5e9,
+            intra_latency: 1e-6,
+            intra_bandwidth_bytes_per_s: 2e10,
             msg_bytes: 13_000.0,
             jitter: 0.0,
             wire_ratio: 1.0,
@@ -367,6 +415,43 @@ mod tests {
             ring < ps / 2.0,
             "ring {ring:.2}s should beat saturated PS {ps:.2}s"
         );
+    }
+
+    #[test]
+    fn hier_allreduce_beats_flat_ring_at_scale() {
+        // ISSUE 4 acceptance: under the default (cluster) cost model
+        // the hierarchical collective must beat the flat ring for
+        // n >= 16 — the 2(n-1) inter-node latency term is the flat
+        // ring's scaling wall.
+        let c = CostModel::cluster(3_023);
+        let mut k = cfg(16);
+        k.total_samples = 160_000;
+        for n in [16usize, 32, 64] {
+            let mut k = SimConfig { n_workers: n, ..k.clone() };
+            k.total_samples = 10_000 * n as u64;
+            let flat = simulate_allreduce(&c, &k, 3).total_time_s;
+            let hier =
+                simulate_hier_allreduce(&c, &k, n / 4, 3).total_time_s;
+            assert!(hier <= flat,
+                    "n={n}: hier {hier:.4}s !<= flat {flat:.4}s");
+        }
+    }
+
+    #[test]
+    fn hier_allreduce_round_count_matches_protocol() {
+        let c = cost();
+        let k = cfg(8);
+        let r = simulate_hier_allreduce(&c, &k, 2, 0);
+        assert_eq!(r.updates, k.batches_per_worker());
+        assert!(r.total_time_s > 0.0);
+        // same protocol, same jitter draws: only the collective term
+        // differs from the flat ring
+        let flat = simulate_allreduce(&c, &k, 0);
+        let per_round_delta = (flat.total_time_s - r.total_time_s)
+            / r.updates as f64;
+        let want = c.ring_allreduce_time(8)
+            - c.hierarchical_allreduce_time(8, 2);
+        assert!((per_round_delta - want).abs() < 1e-9);
     }
 
     #[test]

@@ -19,10 +19,18 @@ pub struct CostModel {
     pub t_update: f64,
     /// One validation round (serial on the master), seconds.
     pub t_val: f64,
-    /// One-way message latency, seconds.
+    /// One-way message latency across the *inter-group* link (the
+    /// network between nodes), seconds.
     pub latency: f64,
-    /// Link bandwidth, bytes/second.
+    /// Inter-group link bandwidth, bytes/second.
     pub bandwidth_bytes_per_s: f64,
+    /// One-way latency between ranks of the SAME group (node-local:
+    /// shared memory / NVLink / loopback), seconds. Flat collectives
+    /// never use it; the hierarchical all-reduce pays it on the
+    /// intra-group ring phases.
+    pub intra_latency: f64,
+    /// Intra-group (node-local) bandwidth, bytes/second.
+    pub intra_bandwidth_bytes_per_s: f64,
     /// Weight/gradient message size, bytes.
     pub msg_bytes: f64,
     /// Multiplicative gradient-time jitter (0 = deterministic; 0.2 means
@@ -46,6 +54,9 @@ impl CostModel {
             t_val: 0.0,
             latency: 2.0e-6,
             bandwidth_bytes_per_s: 2.0e10,
+            // one shared-memory node: intra == inter
+            intra_latency: 2.0e-6,
+            intra_bandwidth_bytes_per_s: 2.0e10,
             msg_bytes: (n_params * 4 + 28) as f64,
             jitter: 0.05,
             wire_ratio: 1.0,
@@ -74,6 +85,9 @@ impl CostModel {
             t_val: 0.0,
             latency: 2.0e-5,
             bandwidth_bytes_per_s: 6.8e9,
+            // co-located GPU workers exchange node-locally
+            intra_latency: 2.0e-6,
+            intra_bandwidth_bytes_per_s: 2.0e10,
             msg_bytes: (n_params * 4 + 28) as f64,
             jitter: 0.1,
             wire_ratio: 1.0,
@@ -89,6 +103,9 @@ impl CostModel {
             t_val: 0.0,
             latency: 2.0e-5,
             bandwidth_bytes_per_s: 6.8e9, // FDR ~56 Gb/s
+            // ranks of one group share a Cooley node (shared memory)
+            intra_latency: 2.0e-6,
+            intra_bandwidth_bytes_per_s: 2.0e10,
             msg_bytes: (n_params * 4 + 28) as f64,
             jitter: 0.1,
             wire_ratio: 1.0,
@@ -136,6 +153,46 @@ impl CostModel {
         let steps = 2.0 * (n as f64 - 1.0);
         let chunk_bytes = self.msg_bytes * self.wire_ratio / n as f64;
         steps * (self.latency + chunk_bytes / self.bandwidth_bytes_per_s)
+    }
+
+    /// Wall time of one **hierarchical** all-reduce over `n` ranks in
+    /// `groups` groups of `m = ceil(n/groups)` (matching the collective
+    /// layer's ring → tree → ring schedule):
+    ///
+    /// - intra-group ring reduce-scatter: `m-1` steps of a `1/m` chunk
+    ///   at *intra* cost;
+    /// - gather onto the leader: `m-1` chunk receives, serialized at
+    ///   the leader (intra cost);
+    /// - leader binary tree, up then down: `2*ceil(log2 groups)` hop
+    ///   levels each moving the full message at *inter* cost — the
+    ///   `2(G-1)` ring term collapses to a logarithm;
+    /// - re-broadcast around the group ring: `m-1` store-and-forward
+    ///   hops of the full message at intra cost.
+    ///
+    /// With one rank per group (`m == 1`) only the tree terms remain
+    /// (a pure tree all-reduce); with one group it degenerates to
+    /// intra-only ring phases.
+    pub fn hierarchical_allreduce_time(&self, n: usize, groups: usize)
+        -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let g = groups.clamp(1, n);
+        let m = n.div_ceil(g);
+        let bytes = self.msg_bytes * self.wire_ratio;
+        let intra_chunk_step = self.intra_latency
+            + bytes / m as f64 / self.intra_bandwidth_bytes_per_s;
+        let intra_full_step = self.intra_latency
+            + bytes / self.intra_bandwidth_bytes_per_s;
+        let inter_full_step =
+            self.latency + bytes / self.bandwidth_bytes_per_s;
+        // ceil(log2 g) without float logs (exact at powers of two)
+        let depth = usize::BITS - (g - 1).leading_zeros();
+        let reduce_scatter = (m as f64 - 1.0) * intra_chunk_step;
+        let gather = (m as f64 - 1.0) * intra_chunk_step;
+        let tree = 2.0 * depth as f64 * inter_full_step;
+        let bcast = (m as f64 - 1.0) * intra_full_step;
+        reduce_scatter + gather + tree + bcast
     }
 }
 
@@ -259,6 +316,54 @@ mod tests {
         let bw_only = CostModel { latency: 0.0, ..c };
         let cap = 2.0 * bw_only.msg_bytes / bw_only.bandwidth_bytes_per_s;
         assert!(bw_only.ring_allreduce_time(64) < cap + 1e-12);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_for_big_worlds() {
+        // The tentpole's economics: on the cluster preset (cheap intra
+        // hops, expensive inter hops) the grouped schedule must win
+        // from n = 16 up — this inequality is also the CI bench gate.
+        let c = CostModel::cluster(3_023);
+        for n in [16usize, 32, 64, 128] {
+            let flat = c.ring_allreduce_time(n);
+            let hier = c.hierarchical_allreduce_time(n, n / 4);
+            assert!(hier < flat,
+                    "n={n}: hier {hier:.2e} !< flat {flat:.2e}");
+        }
+        // degenerate shapes stay finite and sane
+        assert_eq!(c.hierarchical_allreduce_time(1, 1), 0.0);
+        assert!(c.hierarchical_allreduce_time(4, 2) > 0.0);
+        // group count is clamped into [1, n]
+        assert!(c.hierarchical_allreduce_time(4, 99).is_finite());
+    }
+
+    #[test]
+    fn hierarchical_tree_term_is_logarithmic() {
+        // with the group size m fixed at 4, doubling the group count
+        // adds exactly one tree level (2 inter hops: up + down)
+        let c = CostModel::cluster(3_023);
+        let step = c.latency + c.msg_bytes / c.bandwidth_bytes_per_s;
+        let t8 = c.hierarchical_allreduce_time(32, 8);
+        let t16 = c.hierarchical_allreduce_time(64, 16);
+        assert!((t16 - t8 - 2.0 * step).abs() < 1e-12,
+                "t16-t8 = {:.3e}, want {:.3e}", t16 - t8, 2.0 * step);
+    }
+
+    #[test]
+    fn hierarchical_compression_scales_bandwidth_terms_only() {
+        let c = CostModel::cluster(3_023);
+        let half = c.clone().with_compression(Codec::Fp16);
+        let m = 4usize;
+        let g = 4usize;
+        let n = m * g;
+        let t_raw = c.hierarchical_allreduce_time(n, g);
+        let t_half = half.hierarchical_allreduce_time(n, g);
+        // latency floor: 3(m-1) intra steps + 2*log2(g) inter steps
+        let floor = 3.0 * (m as f64 - 1.0) * c.intra_latency
+            + 2.0 * 2.0 * c.latency;
+        assert!(t_half < t_raw);
+        assert!(t_half > floor);
+        assert!((t_raw - floor) / (t_half - floor) > 1.99);
     }
 
     #[test]

@@ -186,7 +186,11 @@ fn allreduce_works_over_tcp() {
 }
 
 #[test]
-fn allreduce_rejects_hierarchy() {
+fn allreduce_with_hierarchy_trains_grouped() {
+    // ISSUE 4 tentpole: hierarchy + allreduce now plans a grouped
+    // masterless world (2 rings of 2 + a leader tree) and trains
+    // end-to-end. The dedicated equivalence suite lives in
+    // tests/hier_allreduce.rs.
     let session = Session::native().unwrap();
     let mut cfg = allreduce_cfg(4, 20, 1);
     cfg.hierarchy = Some(HierarchySpec {
@@ -194,8 +198,22 @@ fn allreduce_rejects_hierarchy() {
         workers_per_group: 2,
         sync_every: 5,
     });
+    let result = train(&session, &cfg, &synthetic(100)).unwrap();
+    assert_eq!(result.history.master_updates, 5);
+    assert_eq!(result.history.workers.len(), 4);
+}
+
+#[test]
+fn allreduce_single_group_hierarchy_rejected() {
+    let session = Session::native().unwrap();
+    let mut cfg = allreduce_cfg(4, 20, 1);
+    cfg.hierarchy = Some(HierarchySpec {
+        n_groups: 1,
+        workers_per_group: 4,
+        sync_every: 5,
+    });
     let err = train(&session, &cfg, &synthetic(100));
-    assert!(err.is_err(), "hierarchy + allreduce must be rejected");
+    assert!(err.is_err(), "a one-group hierarchy is rejected");
 }
 
 #[test]

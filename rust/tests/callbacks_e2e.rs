@@ -85,6 +85,20 @@ fn early_stopping_fires_at_the_right_round_in_every_mode() {
     assert_eq!(r.history.master_updates, 2,
                "hierarchical: stop at the 2nd super-master update");
 
+    // grouped (hierarchical) allreduce: the piggybacked stop flag must
+    // survive the ring → tree → ring schedule so every rank abandons
+    // the flagged round in lockstep
+    let mut c = cfg(Mode::AllReduce, 4);
+    c.hierarchy = Some(HierarchySpec {
+        n_groups: 2,
+        workers_per_group: 2,
+        sync_every: 1,
+    });
+    c.callbacks.push(never_improves(2));
+    let r = train(&session, &c, &synthetic(400)).unwrap();
+    assert_eq!(r.history.master_updates, 10,
+               "hier-allreduce: stop at validate_every * patience");
+
     // direct baseline: the same observer drives the same stop
     let mut c = cfg(Mode::Downpour { sync: false }, 1);
     c.callbacks.push(never_improves(2));
@@ -159,8 +173,10 @@ fn jsonl_logger_streams_from_training() {
 
 /// WorldPlan invariants over random configurations: rank 0 is always
 /// the observer role, roles partition the world, shard indices are a
-/// permutation of 0..n_shards, per-shard seeds are distinct, and the
-/// plan is independent of the transport.
+/// permutation of 0..n_shards, per-shard seeds are distinct, grouped
+/// allreduce plans put every rank in exactly one group with the leaders
+/// forming a connected binary tree, and the plan is independent of the
+/// transport.
 #[test]
 fn prop_worldplan_invariants() {
     check("worldplan", PropConfig { cases: 300, seed: 0x70B0 }, |rng| {
@@ -174,10 +190,11 @@ fn prop_worldplan_invariants() {
             },
             _ => Mode::AllReduce,
         };
-        let hierarchy = if matches!(mode, Mode::Downpour { .. })
+        let hierarchy = if matches!(mode, Mode::Downpour { .. }
+                                          | Mode::AllReduce)
             && rng.uniform() < 0.5 {
             Some(HierarchySpec {
-                n_groups: gen::usize_in(rng, 1, 4),
+                n_groups: gen::usize_in(rng, 2, 4),
                 workers_per_group: gen::usize_in(rng, 1, 4),
                 sync_every: gen::usize_in(rng, 1, 10) as u64,
             })
@@ -222,9 +239,21 @@ fn prop_worldplan_invariants() {
                         }
                     }
                 }
-                RankRole::RingRank { shard } => {
+                RankRole::RingRank { shard, group } => {
                     if !ring {
                         return Err("ring rank outside allreduce".into());
+                    }
+                    match hierarchy {
+                        Some(h) if group >= h.n_groups => {
+                            return Err(format!(
+                                "rank {r} in out-of-range group \
+                                 {group}"))
+                        }
+                        None if group != 0 => {
+                            return Err(format!(
+                                "flat ring rank {r} in group {group}"))
+                        }
+                        _ => {}
                     }
                     shards.push(shard);
                     shard_seeds.push(plan.seed_of(r));
@@ -233,6 +262,80 @@ fn prop_worldplan_invariants() {
         }
         if ring && masters != 0 {
             return Err("allreduce world has a master".into());
+        }
+        // grouped-allreduce layout invariants: every rank in exactly
+        // one group, the role's group matches the layout, and the
+        // leaders form a connected binary tree (every non-root leader's
+        // parent position is a valid leader position)
+        match plan.ring_layout() {
+            Some(layout) => {
+                if !(ring && hierarchy.is_some()) {
+                    return Err("layout on a non-grouped plan".into());
+                }
+                let mut seen = vec![0usize; size];
+                for (g, members) in layout.groups().iter().enumerate() {
+                    if members.is_empty() {
+                        return Err(format!("group {g} is empty"));
+                    }
+                    for &r in members {
+                        if r >= size {
+                            return Err(format!(
+                                "group {g} member {r} outside world"));
+                        }
+                        seen[r] += 1;
+                        match plan.role_of(r) {
+                            RankRole::RingRank { group, .. }
+                                if group == g => {}
+                            other => {
+                                return Err(format!(
+                                    "rank {r} in layout group {g} but \
+                                     role {other:?}"))
+                            }
+                        }
+                    }
+                }
+                if seen.iter().any(|&c| c != 1) {
+                    return Err(format!(
+                        "ranks not in exactly one group: {seen:?}"));
+                }
+                // leader-tree structure: one leader per group, each
+                // the head (minimum rank) of its own group, strictly
+                // ascending — which is what makes the positional
+                // binary tree (parent (p-1)/2) well-defined and rooted
+                // at the observer
+                let leaders = layout.leaders();
+                if leaders.len() != layout.groups().len() {
+                    return Err("one leader per group".into());
+                }
+                for (g, (&leader, members)) in leaders
+                    .iter()
+                    .zip(layout.groups().iter())
+                    .enumerate()
+                {
+                    if members.first() != Some(&leader)
+                        || members.iter().min() != Some(&leader)
+                    {
+                        return Err(format!(
+                            "leader {leader} is not the head of \
+                             group {g}: {members:?}"));
+                    }
+                    if g > 0 && leaders[g - 1] >= leader {
+                        return Err(format!(
+                            "leaders not strictly ascending: \
+                             {leaders:?}"));
+                    }
+                }
+                if leaders[0] != plan.observer() {
+                    return Err("tree root must be the observer \
+                                rank 0".into());
+                }
+            }
+            None => {
+                if ring && hierarchy.is_some() {
+                    return Err("grouped allreduce plan without a \
+                                layout".into());
+                }
+            }
         }
         if !ring && masters != 1 {
             return Err(format!("{masters} masters"));
