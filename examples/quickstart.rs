@@ -12,6 +12,8 @@
 //!         --workers 4 --groups 2            # grouped ring + leader tree
 //!     cargo run --release --example quickstart -- --mode allreduce \
 //!         --compression fp16                # compressed wire hops
+//!     cargo run --release --example quickstart -- --mode allreduce \
+//!         --buckets         # per-layer all-reduce overlapped w/ backprop
 //!     cargo run --release --example quickstart -- --mode sync --tcp
 //!         # synchronous Downpour over the localhost TCP mesh
 //!     cargo run --release --example quickstart -- --early-stopping 3 \
@@ -40,6 +42,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let groups = args.usize("groups", 2)?;
     let tcp = args.bool("tcp");
     let compression = Codec::parse(&args.str("compression", "fp32"))?;
+    let buckets = args.bool("buckets");
     let patience = args.usize("early-stopping", 0)?;
     let checkpoint = args.str_opt("checkpoint");
     args.finish()?;
@@ -98,6 +101,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !compression.is_identity() {
         println!("compressing gradient exchange with {compression}...");
         exp = exp.compression(compression);
+    }
+    if buckets {
+        println!("bucketing the all-reduce per layer, overlapped with \
+                  backprop...");
+        exp = exp.buckets();
     }
     if patience > 0 {
         exp = exp.early_stopping(patience as u32);

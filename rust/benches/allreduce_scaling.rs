@@ -118,13 +118,38 @@ fn write_bench_pr(path: &str) {
     collective.insert("flat".into(), Json::Obj(flat));
     collective.insert("hier".into(), Json::Obj(hier));
     collective.insert("hier_groups".into(), Json::Obj(hier_groups));
+    // overlap column: round wall-clock (gradient start → reduced
+    // gradients, ns) for the bucketed compute-overlapped schedule vs
+    // the serial one (full backprop, then one standalone reduce).
+    // `buckets` mirrors the paper LSTM's layer DAG: cell + head + the
+    // piggybacked loss/stop tail. The CI bench-smoke gate asserts
+    // bucketed < serial for every n >= 8.
+    let batch = 100usize;
+    let buckets = 3usize;
+    let mut bucketed: BTreeMap<String, Json> = BTreeMap::new();
+    let mut serial: BTreeMap<String, Json> = BTreeMap::new();
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let key = format!("n{n}");
+        bucketed.insert(key.clone(), Json::Num(
+            (cost.bucketed_allreduce_time(n, batch, buckets) * 1e9)
+                .round()));
+        serial.insert(key, Json::Num(
+            ((cost.grad_time_nominal(batch)
+                + cost.ring_allreduce_time(n)) * 1e9).round()));
+    }
+    let mut overlap: BTreeMap<String, Json> = BTreeMap::new();
+    overlap.insert("batch".into(), Json::Num(batch as f64));
+    overlap.insert("buckets".into(), Json::Num(buckets as f64));
+    overlap.insert("bucketed_ns".into(), Json::Obj(bucketed));
+    overlap.insert("serial_ns".into(), Json::Obj(serial));
     let mut top: BTreeMap<String, Json> = BTreeMap::new();
     top.insert("bench".into(), Json::Str("bench_pr".into()));
     top.insert("bytes_per_round".into(), Json::Obj(bytes));
     top.insert("collective_ns".into(), Json::Obj(collective));
+    top.insert("overlap".into(), Json::Obj(overlap));
     top.insert("params".into(), Json::Num(n_params as f64));
     top.insert("ranks".into(), Json::Num(ranks as f64));
-    top.insert("schema".into(), Json::Num(1.0));
+    top.insert("schema".into(), Json::Num(2.0));
     write_json(path, &Json::Obj(top)).unwrap();
     println!("wrote {path}");
 }
@@ -308,6 +333,33 @@ fn main() {
               pays 2(m-1) cheap intra-group steps plus O(log G) \
               inter-group tree levels instead, so it keeps climbing \
               where the flat ring flattens.");
+
+    // ---- simulated: bucketed overlap vs serial round wall-clock ----
+    // cluster preset — the regime the bucketed schedule targets
+    // (compute comparable to comm). 3 buckets = the paper LSTM's DAG
+    // (cell + head + piggyback tail).
+    let cost_cl = CostModel::cluster(3_023);
+    let mut rows = Vec::new();
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let serial = cost_cl.grad_time_nominal(100)
+            + cost_cl.ring_allreduce_time(n);
+        let bucketed = cost_cl.bucketed_allreduce_time(n, 100, 3);
+        sim_times.insert(format!("serial_round/n{n}"), serial);
+        sim_times.insert(format!("bucketed_round/n{n}"), bucketed);
+        rows.push(vec![
+            format!("{n}"),
+            fmt_secs(serial),
+            fmt_secs(bucketed),
+            format!("{:.3}", serial / bucketed),
+        ]);
+    }
+    print_table(
+        "simulated round wall-clock: serial (backprop then reduce) vs \
+         bucketed overlapped all-reduce (cluster preset, batch 100, \
+         3 buckets)",
+        &["ranks", "serial", "bucketed", "overlap gain"],
+        &rows,
+    );
 
     let summary: BTreeMap<String, Json> = [
         ("bench".to_string(),

@@ -79,6 +79,56 @@ fn main() {
               &["artifact", "batch", "params", "grad_s", "eval_s"],
               &csv).unwrap();
 
+    // ---- scratch-arena delta (native backend) ----
+    // The native engine pools forward/backward scratch buffers in a
+    // per-worker arena; flipping reuse off prices the steady-state
+    // allocation traffic the arena removes. (Identical results either
+    // way — see native::tests::scratch_reuse_does_not_change_results.)
+    let mut rows = Vec::new();
+    for key in ["lstm_b100", "mlp_b100"] {
+        let exes = match session.executables(key) {
+            Ok(e) => e,
+            Err(_) => continue,
+        };
+        if exes.backend_name() != "native" {
+            continue; // PJRT manages its own buffers
+        }
+        let meta = exes.meta.clone();
+        let mut rng = Rng::new(1);
+        let params = exes.init_params(&mut rng);
+        let x: Vec<f32> = (0..meta.x_len())
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let y: Vec<i32> = (0..meta.batch)
+            .map(|_| rng.usize_below(meta.classes) as i32)
+            .collect();
+        exes.set_scratch_reuse(true);
+        let pooled = measure("grad/arena", 2, 20,
+                             || { exes.grad_step(&params, &x, &y)
+                                      .unwrap(); });
+        exes.set_scratch_reuse(false);
+        let fresh = measure("grad/alloc", 2, 20,
+                            || { exes.grad_step(&params, &x, &y)
+                                     .unwrap(); });
+        exes.set_scratch_reuse(true);
+        rows.push(vec![
+            key.to_string(),
+            fmt_secs(pooled.mean_s),
+            fmt_secs(fresh.mean_s),
+            format!("{:.1}%",
+                    100.0 * (fresh.mean_s - pooled.mean_s)
+                        / fresh.mean_s),
+        ]);
+    }
+    if !rows.is_empty() {
+        print_table(
+            "native grad step: pooled scratch arena vs per-step \
+             allocation",
+            &["artifact", "arena", "alloc", "arena saves"],
+            &rows,
+        );
+    }
+
     // ---- optimizer update cost (the master's serial work) ----
     let mut rows = Vec::new();
     for (name, opt_cfg) in [

@@ -62,6 +62,11 @@ pub struct Algo {
     /// codecs compress gradient hops with error feedback; fp16 also
     /// compresses weight replication hops. See `mpi::codec`.
     pub compression: Codec,
+    /// All-reduce mode only: launch one all-reduce per layer bucket as
+    /// its gradient lands during backprop, overlapping communication
+    /// with the rest of the backward pass (DESIGN.md §Layer DAG &
+    /// bucketed overlap). Off = one monolithic all-reduce per round.
+    pub buckets: bool,
 }
 
 impl Default for Algo {
@@ -77,6 +82,7 @@ impl Default for Algo {
             lr_decay: 0.0,
             lr_decay_every: 0,
             compression: Codec::Fp32,
+            buckets: false,
         }
     }
 }
@@ -131,6 +137,9 @@ impl Algo {
         if let Some(c) = j.get("compression").and_then(|v| v.as_str()) {
             algo.compression = Codec::parse(c)
                 .map_err(|e| format!("compression: {e}"))?;
+        }
+        if let Some(b) = j.get("buckets").and_then(|v| v.as_bool()) {
+            algo.buckets = b;
         }
         match j.get("mode").and_then(|v| v.as_str()).unwrap_or("downpour") {
             "downpour" => {
@@ -228,6 +237,16 @@ mod tests {
         let a = Algo { grad_clip: 1.0, ..Algo::default() };
         let opt = a.build_master_optimizer(4);
         assert_eq!(opt.name(), "grad-clip");
+    }
+
+    #[test]
+    fn json_buckets() {
+        assert!(!Algo::default().buckets);
+        let j = Json::parse(
+            r#"{"mode": "allreduce", "buckets": true}"#).unwrap();
+        assert!(Algo::from_json(&j).unwrap().buckets);
+        let j = Json::parse(r#"{"mode": "allreduce"}"#).unwrap();
+        assert!(!Algo::from_json(&j).unwrap().buckets);
     }
 
     #[test]

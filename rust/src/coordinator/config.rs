@@ -23,6 +23,9 @@
 //!   "compression": "fp32" | "fp16" | "topk:<k>",  // wire codec for
 //!                               // gradient exchange (see mpi::codec;
 //!                               // also accepted inside "algo")
+//!   "buckets": true,            // allreduce mode: per-layer bucketed
+//!                               // all-reduce overlapped with backprop
+//!                               // (also accepted inside "algo")
 //!   "callbacks": [              // observer-side training callbacks
 //!     {"kind": "early_stopping", "patience": 3, "min_delta": 0.0},
 //!     {"kind": "checkpoint", "dir": "runs/ckpt", "every": 100,
@@ -126,6 +129,11 @@ impl JobConfig {
         if let Some(c) = j.get("compression").and_then(|v| v.as_str()) {
             algo.compression = crate::mpi::codec::Codec::parse(c)
                 .map_err(|e| invalid(format!("compression: {e}")))?;
+        }
+
+        // buckets mirrors compression: top level or inside "algo"
+        if let Some(b) = j.get("buckets").and_then(|v| v.as_bool()) {
+            algo.buckets = b;
         }
 
         let transport = match j.get("transport") {
@@ -450,6 +458,25 @@ mod tests {
             JobConfig::from_json_text(
                 r#"{"model": "mlp", "compression": "gzip"}"#),
             Err(ConfigError::Invalid(_))));
+    }
+
+    #[test]
+    fn buckets_config() {
+        // top-level key
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 4, "buckets": true,
+                "algo": {"mode": "allreduce"}}"#).unwrap();
+        assert!(job.train.algo.buckets);
+        // inside "algo"
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 4,
+                "algo": {"mode": "allreduce", "buckets": true}}"#)
+            .unwrap();
+        assert!(job.train.algo.buckets);
+        // default off
+        let job = JobConfig::from_json_text(r#"{"model": "mlp"}"#)
+            .unwrap();
+        assert!(!job.train.algo.buckets);
     }
 
     #[test]

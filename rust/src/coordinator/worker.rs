@@ -18,8 +18,8 @@ use crate::data::DataSet;
 use crate::metrics::{History, Stopwatch, WorkerReport};
 use crate::mpi::codec::{grad_payload, Compressor};
 use crate::mpi::collective::{Collective, GroupLayout, ReduceOp};
-use crate::mpi::{Comm, Payload, Rank, Tag, WorkerStats};
-use crate::runtime::ModelExecutables;
+use crate::mpi::{tags, Comm, Payload, Rank, Tag, WorkerStats};
+use crate::runtime::{BucketReady, GradSink, ModelExecutables};
 use crate::tensor::ParamSet;
 use crate::util::rng::Rng;
 
@@ -322,6 +322,35 @@ impl<'a> Worker<'a> {
     }
 }
 
+/// [`GradSink`] that launches one bucket collective per layer the
+/// moment its gradient lands during backprop (`Algo::buckets`). The
+/// launched collectives complete later via
+/// [`Collective::bucket_finish_sum`]; a failed launch is latched here
+/// and surfaced after the gradient step (backprop itself is
+/// infallible, so nothing is lost by finishing it).
+struct BucketLauncher<'c, 'w> {
+    col: &'c mut Collective<'w>,
+    /// Global element count of the round's reduce vector
+    /// (n_params + piggybacked loss + stop flag).
+    total: usize,
+    err: Option<crate::mpi::CommError>,
+}
+
+impl GradSink for BucketLauncher<'_, '_> {
+    fn bucket_ready(&mut self, ready: BucketReady, grads: &[f32]) {
+        if self.err.is_some() {
+            return;
+        }
+        let bucket = self.col.pending_buckets();
+        if let Err(e) = self.col.bucket_begin(
+            bucket, grads, ready.param_range.start,
+            ready.param_range.end, self.total)
+        {
+            self.err = Some(e);
+        }
+    }
+}
+
 /// Result of one rank's all-reduce training run. All ranks finish with
 /// bitwise-identical `weights`; `history` is populated on rank 0.
 pub struct RingOutcome {
@@ -334,7 +363,12 @@ pub struct RingOutcome {
 /// this — there is no master). Per round: local gradient, ring
 /// all-reduce to average gradients (the batch loss and the stop flag
 /// piggyback as two extra elements, so a round costs exactly one
-/// collective), then an identical replicated optimizer step. Rank 0
+/// collective), then an identical replicated optimizer step. With
+/// `Algo::buckets`, the single collective becomes one collective per
+/// layer bucket, each launched mid-backprop as its layer's gradient
+/// lands ([`BucketLauncher`]) and drained after the step — identical
+/// results, communication overlapped with compute (DESIGN.md §Layer
+/// DAG & bucketed overlap). Rank 0
 /// additionally drives the [`Observer`] (validation schedule +
 /// callbacks) and owns the returned [`History`]; when a callback
 /// requests a stop, rank 0 raises the flag and every rank abandons the
@@ -422,6 +456,21 @@ impl<'a> RingWorker<'a> {
         }
 
         let n_params = params.num_params();
+        // Bucketed overlap: one collective per layer bucket, launched
+        // mid-backprop as each layer's gradient lands, plus one tail
+        // bucket for the piggybacked loss + stop flag. Requires a tag
+        // lane per bucket; a model with more layers than lanes falls
+        // back to the monolithic collective.
+        let n_buckets = params.layer_ranges().len() + 1;
+        let use_buckets = self.algo.buckets && n > 1
+            && n_buckets <= tags::MAX_BUCKETS as usize;
+        if self.algo.buckets && !use_buckets && n > 1 && rank == 0 {
+            log::warn!(
+                "allreduce: {n_buckets} buckets exceed the \
+                 {} tag lanes; using the monolithic all-reduce",
+                tags::MAX_BUCKETS
+            );
+        }
         let mut opt = self.algo.build_master_optimizer(n_params);
         let lr_spec = self.lr;
         let mut history = History::default();
@@ -451,10 +500,31 @@ impl<'a> RingWorker<'a> {
                     || done_rounds >= rounds {
                     return;
                 }
-                let out = match grad_timer
-                    .time(|| exes.grad_step(&params, x, y)) {
-                    Ok(o) => o,
-                    Err(e) => {
+                // Bucketed mode starts each layer's collective inside
+                // the gradient step (that launch time IS the overlap,
+                // so it stays on the grad timer); the monolithic path
+                // computes the whole gradient first.
+                let (step, sink_err) = grad_timer.time(|| {
+                    if use_buckets {
+                        let mut sink = BucketLauncher {
+                            col: &mut col,
+                            total: n_params + 2,
+                            err: None,
+                        };
+                        let res = exes.grad_step_overlapped(
+                            &params, x, y, &mut sink);
+                        (res, sink.err)
+                    } else {
+                        (exes.grad_step(&params, x, y), None)
+                    }
+                });
+                let out = match (step, sink_err) {
+                    (Ok(o), None) => o,
+                    (Err(e), _) => {
+                        failure = Some(e.into());
+                        return;
+                    }
+                    (_, Some(e)) => {
                         failure = Some(e.into());
                         return;
                     }
@@ -467,8 +537,19 @@ impl<'a> RingWorker<'a> {
                 let mut reduced = out.grads;
                 reduced.push(out.loss);
                 reduced.push(stop_flag);
-                if let Err(e) = comm_timer
-                    .time(|| col.allreduce(&mut reduced, ReduceOp::Sum)) {
+                let comm_result = comm_timer.time(|| {
+                    if use_buckets {
+                        // tail bucket (loss + stop flag), then drain
+                        // every in-flight bucket in launch order
+                        let tail = col.pending_buckets();
+                        col.bucket_begin(tail, &reduced, n_params,
+                                         n_params + 2, n_params + 2)?;
+                        col.bucket_finish_sum(&mut reduced)
+                    } else {
+                        col.allreduce(&mut reduced, ReduceOp::Sum)
+                    }
+                });
+                if let Err(e) = comm_result {
                     failure = Some(e.into());
                     return;
                 }

@@ -71,6 +71,14 @@
 //!   (HyPar-Flow's topology argument). The bitwise-identical-weights
 //!   guarantee is unchanged, raw or compressed (DESIGN.md §Topology);
 //!   `mpi-learn simulate --algo hier-allreduce` prices it.
+//! - **Bucketed overlapped all-reduce** (`Algo::buckets`; flags
+//!   `--mode allreduce --buckets`, or [`coordinator::Experiment`]'s
+//!   `buckets()`): the native backend's layer DAG
+//!   ([`runtime::GradSink`]) launches one windowed collective per
+//!   layer bucket *while backprop continues*, overlapping the wire
+//!   with compute — identical results (fp32/fp16 bitwise-equal to the
+//!   monolithic path), composing with compression and the
+//!   hierarchical topology (DESIGN.md §Layer DAG & bucketed overlap).
 //!
 //! All modes accept wire-level **gradient compression**
 //! ([`mpi::codec`], flag `--compression fp16|topk:<k>`): fp16
@@ -85,7 +93,8 @@
 //!   (ring all-reduce/broadcast, tree reduce/broadcast, hierarchical
 //!   all-reduce) and the [`mpi::codec`] wire codecs built on it.
 //! - [`runtime`] — artifact manifest + execution backends (native CPU
-//!   engine by default; PJRT behind the `pjrt` feature).
+//!   engine by default, structured as an explicit layer DAG; PJRT
+//!   behind the `pjrt` feature).
 //! - [`data`] — shard file format, synthetic HEP dataset, batching loader,
 //!   even file division.
 //! - [`optim`] — master-side optimizers (momentum is the paper's

@@ -217,6 +217,9 @@ const TRAIN_FLAGS: &[Flag] = &[
     Flag { name: "compression", value: "<c>", default: "fp32",
            help: "wire codec: fp32 | fp16 | topk:<k> (gradient \
                   compression with error feedback)" },
+    Flag { name: "buckets", value: "", default: "",
+           help: "allreduce: per-layer bucketed all-reduce overlapped \
+                  with backprop (identical results, less comm wait)" },
     Flag { name: "optimizer", value: "<o>", default: "momentum",
            help: "sgd | momentum | adam | rmsprop | adadelta" },
     Flag { name: "lr", value: "<f>", default: "0.05",
@@ -370,6 +373,7 @@ fn parse_algo(args: &Args) -> Result<Algo, String> {
     };
     algo.compression =
         Codec::parse(&args.str("compression", "fp32"))?;
+    algo.buckets = args.bool("buckets");
     algo.mode = match args.str("mode", "downpour").as_str() {
         "downpour" => Mode::Downpour { sync: args.bool("sync") },
         "easgd" => Mode::Easgd {

@@ -56,12 +56,26 @@
 //!
 //! Min/Max reductions, scalar agreements, and `broadcast` ignore the
 //! layout (control-plane traffic stays on the flat raw ring).
+//!
+//! **Bucketed overlap** ([`Collective::bucket_begin`] /
+//! [`Collective::bucket_finish_sum`]): a sum all-reduce can be split
+//! into per-layer *buckets* — contiguous windows of the round buffer —
+//! each launched as soon as its layer's backward pass completes, so the
+//! wire works while upstream layers still compute. Every bucket runs
+//! the same flat-ring or hierarchical schedule on its own
+//! `(bucket, phase)` tag lanes (see [`crate::mpi::tags`]), and windows
+//! are chunked on the GLOBAL grid, so fp32/fp16 bucketed results are
+//! bitwise identical to the monolithic all-reduce over the same buffer
+//! (top-k re-selects per packed slice, so it stays bitwise identical
+//! *across ranks* but not to the monolith). See DESIGN.md §Layer DAG &
+//! bucketed overlap.
 
 use std::time::Duration;
 
 use crate::mpi::codec::{Codec, Compressor};
 use crate::mpi::comm::{Comm, CommError};
-use crate::mpi::message::{Envelope, Payload, Rank, Tag};
+use crate::mpi::message::{BucketPhase, Envelope, Payload, Rank, Tag};
+use crate::mpi::tags;
 
 /// Default bound on waiting for a ring neighbor. A peer that dies
 /// mid-collective can never be detected by disconnect alone (other
@@ -184,6 +198,50 @@ pub struct Collective<'a> {
     exact_tail: usize,
     /// Grouped topology for sum all-reduces (None = flat ring).
     groups: Option<GroupLayout>,
+    /// Buckets launched by [`Collective::bucket_begin`] and not yet
+    /// completed by [`Collective::bucket_finish_sum`], in launch order.
+    pending: Vec<PendingBucket>,
+}
+
+/// One outstanding bucketed sum all-reduce: the window `[w0, w1)` of a
+/// logical `total`-element round buffer, running on its own
+/// `(bucket, phase)` tag lanes.
+struct PendingBucket {
+    bucket: usize,
+    w0: usize,
+    w1: usize,
+    total: usize,
+    /// The schedule's first wire send already happened in
+    /// `bucket_begin` (false on 1-rank worlds and 1-member groups).
+    first_sent: bool,
+}
+
+/// The tag lane set one hierarchical sum all-reduce runs on — the fixed
+/// monolithic tags, or a bucket's five dedicated lanes.
+struct HierTags {
+    chunk: Tag,
+    gather: Tag,
+    tree_reduce: Tag,
+    tree_bcast: Tag,
+    bcast: Tag,
+}
+
+const MONOLITH_HIER_TAGS: HierTags = HierTags {
+    chunk: Tag::GroupChunk,
+    gather: Tag::GroupGather,
+    tree_reduce: Tag::TreeReduce,
+    tree_bcast: Tag::TreeBcast,
+    bcast: Tag::GroupBcast,
+};
+
+fn bucket_hier_tags(bucket: usize) -> HierTags {
+    HierTags {
+        chunk: tags::bucket_tag(bucket, BucketPhase::Chunk),
+        gather: tags::bucket_tag(bucket, BucketPhase::Gather),
+        tree_reduce: tags::bucket_tag(bucket, BucketPhase::TreeReduce),
+        tree_bcast: tags::bucket_tag(bucket, BucketPhase::TreeBcast),
+        bcast: tags::bucket_tag(bucket, BucketPhase::Bcast),
+    }
 }
 
 impl<'a> Collective<'a> {
@@ -197,6 +255,7 @@ impl<'a> Collective<'a> {
             compressor: Compressor::new(Codec::Fp32),
             exact_tail: 0,
             groups: None,
+            pending: Vec::new(),
         }
     }
 
@@ -266,6 +325,23 @@ impl<'a> Collective<'a> {
         let start = i * base + i.min(rem);
         let end = start + base + usize::from(i < rem);
         (start, end)
+    }
+
+    /// Intersection of GLOBAL chunk `i` (the [`Collective::chunk_bounds`]
+    /// grid over the whole `total`-element buffer) with the window
+    /// `[w0, w1)`. Bucketed collectives chunk on the global grid — not
+    /// per-window — so every element keeps the exact reduction start
+    /// rank and accumulation order it has in the monolithic all-reduce,
+    /// which is what makes fp32 and fp16 bucketed results bitwise
+    /// identical to the monolith. The intersection may be empty (windows
+    /// smaller than the grid); empty slices still travel the ring so
+    /// the lockstep schedule stays uniform.
+    pub fn window_chunk(total: usize, n: usize, i: usize, w0: usize,
+                        w1: usize) -> (usize, usize) {
+        let (c0, c1) = Self::chunk_bounds(total, n, i);
+        let lo = c0.max(w0).min(w1);
+        let hi = c1.min(w1).max(lo);
+        (lo, hi)
     }
 
     fn send_chunk(&mut self, to: Rank, tag: Tag, data: &[f32])
@@ -411,14 +487,16 @@ impl<'a> Collective<'a> {
         if self.comm.size() <= 1 {
             return Ok(());
         }
-        if op == ReduceOp::Sum && self.groups.is_some() {
+        if op != ReduceOp::Sum {
+            return self.allreduce_raw(data, op);
+        }
+        if self.groups.is_some() {
             return self.allreduce_hier(data);
         }
-        if self.codec.is_identity() || op != ReduceOp::Sum {
-            self.allreduce_raw(data, op)
-        } else {
-            self.allreduce_compressed(data)
-        }
+        // The monolithic flat sum is the windowed ring over the full
+        // window — raw and compressed hops share one schedule.
+        let len = data.len();
+        self.ring_sum_window(data, 0, len, len, Tag::RingChunk, false)
     }
 
     fn allreduce_raw(&mut self, data: &mut [f32], op: ReduceOp)
@@ -466,35 +544,61 @@ impl<'a> Collective<'a> {
         s1.saturating_sub(s0.max(tail_start))
     }
 
-    /// Sum all-reduce with compressed wire hops (see the module docs
-    /// for why every rank still finishes bitwise identical).
-    fn allreduce_compressed(&mut self, data: &mut [f32])
-        -> Result<(), CommError> {
+    /// The payload for a chunk this rank OWNS (its reduction is
+    /// complete): raw floats under the identity codec; compressed ONCE
+    /// with error feedback otherwise, adopting the decoded form locally
+    /// so the owner's replica matches every receiver's bytes. `[s0, s1)`
+    /// is a window of the logical `total`-element buffer.
+    fn owned_chunk_payload(&mut self, data: &mut [f32], s0: usize,
+                           s1: usize, total: usize) -> Payload {
+        self.seq += 1;
+        if self.codec.is_identity() {
+            Payload::floats(self.seq, data[s0..s1].to_vec())
+        } else {
+            let protect = self.protect_len(total, s0, s1);
+            let packed = self
+                .compressor
+                .compress_window(&data[s0..s1], s0, total, protect)
+                .expect("lossy codec packs");
+            packed.unpack_into(&mut data[s0..s1]);
+            Payload::packed(self.seq, 0.0, packed)
+        }
+    }
+
+    /// Windowed flat-ring sum all-reduce over `data[w0..w1)`, chunked
+    /// on the GLOBAL `total`-element grid (see
+    /// [`Collective::window_chunk`]), running on `tag`. The full window
+    /// `0..len` on `Tag::RingChunk` IS the monolithic all-reduce; a
+    /// bucket's window on its own tag lane is one overlapped bucket.
+    /// With `skip_first_send` the reduce-scatter's step-0 send is
+    /// assumed already on the wire ([`Collective::bucket_begin`]).
+    fn ring_sum_window(&mut self, data: &mut [f32], w0: usize,
+                       w1: usize, total: usize, tag: Tag,
+                       skip_first_send: bool) -> Result<(), CommError> {
         let n = self.comm.size();
         let rank = self.comm.rank();
-        let len = data.len();
         let next = self.next_rank();
         let prev = self.prev_rank();
 
-        // Phase 1 — reduce-scatter over decoded f32: each hop
-        // compresses its outgoing partial sums with error feedback
-        // (what this round drops rides along next round).
+        // Phase 1 — reduce-scatter over decoded f32: each hop carries
+        // partial sums (compressed with error feedback under a lossy
+        // codec — what this round drops rides along next round).
         for step in 0..n - 1 {
             let send_idx = (rank + n - step) % n;
             let recv_idx = (rank + 2 * n - step - 1) % n;
-            let (s0, s1) = Self::chunk_bounds(len, n, send_idx);
-            self.send_sum_chunk(next, Tag::RingChunk, data, s0, s1,
-                                len)?;
-            let (r0, r1) = Self::chunk_bounds(len, n, recv_idx);
-            let payload =
-                self.recv_chunk(Tag::RingChunk, prev, r1 - r0)?;
+            if step > 0 || !skip_first_send {
+                let (s0, s1) =
+                    Self::window_chunk(total, n, send_idx, w0, w1);
+                self.send_sum_chunk(next, tag, data, s0, s1, total)?;
+            }
+            let (r0, r1) = Self::window_chunk(total, n, recv_idx, w0, w1);
+            let payload = self.recv_chunk(tag, prev, r1 - r0)?;
             Self::add_payload(&payload, &mut data[r0..r1]);
         }
 
-        // Phase 2 — all-gather: the chunk owner compresses its
-        // completed chunk ONCE (adopting the decoded form itself, so
-        // its replica matches everyone else's) and the payload is then
-        // forwarded verbatim around the ring.
+        // Phase 2 — all-gather: the chunk owner builds its payload ONCE
+        // and it is then forwarded verbatim around the ring, so every
+        // rank adopts identical bytes.
         let mut carry: Option<Payload> = None;
         for step in 0..n - 1 {
             let send_idx = (rank + 1 + 2 * n - step) % n;
@@ -503,30 +607,15 @@ impl<'a> Collective<'a> {
                 Some(p) => p,
                 None => {
                     // step 0: our own completed chunk
-                    let (s0, s1) = Self::chunk_bounds(len, n, send_idx);
-                    let protect = self.protect_len(len, s0, s1);
-                    let packed = self
-                        .compressor
-                        .compress_window(&data[s0..s1], s0, len, protect)
-                        .expect("lossy codec packs");
-                    packed.unpack_into(&mut data[s0..s1]);
-                    self.seq += 1;
-                    Payload::packed(self.seq, 0.0, packed)
+                    let (s0, s1) =
+                        Self::window_chunk(total, n, send_idx, w0, w1);
+                    self.owned_chunk_payload(data, s0, s1, total)
                 }
             };
-            self.comm.send(next, Tag::RingChunk, payload)?;
-            let (r0, r1) = Self::chunk_bounds(len, n, recv_idx);
-            let payload =
-                self.recv_chunk(Tag::RingChunk, prev, r1 - r0)?;
-            match &payload {
-                Payload::Packed { data: packed, .. } => {
-                    packed.unpack_into(&mut data[r0..r1]);
-                }
-                Payload::Floats { data: chunk, .. } => {
-                    data[r0..r1].copy_from_slice(chunk);
-                }
-                _ => unreachable!("recv_chunk validates the kind"),
-            }
+            self.comm.send(next, tag, payload)?;
+            let (r0, r1) = Self::window_chunk(total, n, recv_idx, w0, w1);
+            let payload = self.recv_chunk(tag, prev, r1 - r0)?;
+            Self::set_payload(&payload, &mut data[r0..r1]);
             carry = Some(payload);
         }
         Ok(())
@@ -590,27 +679,6 @@ impl<'a> Collective<'a> {
         Self::check_chunk(env, expect_len)
     }
 
-    /// Build the one payload every rank of a broadcast will adopt: raw
-    /// shared floats under the identity codec; compressed ONCE (error
-    /// feedback, exact tail protected) under a lossy codec — the
-    /// builder adopts the decoded form itself, so its replica matches
-    /// every receiver's bytes.
-    fn canonical_payload(&mut self, data: &mut [f32]) -> Payload {
-        self.seq += 1;
-        if self.codec.is_identity() {
-            Payload::floats(self.seq, data.to_vec())
-        } else {
-            let len = data.len();
-            let protect = self.protect_len(len, 0, len);
-            let packed = self
-                .compressor
-                .compress_window(data, 0, len, protect)
-                .expect("lossy codec packs");
-            packed.unpack_into(data);
-            Payload::packed(self.seq, 0.0, packed)
-        }
-    }
-
     /// Binary-tree sum-reduce over `members` (position `p`'s parent is
     /// `(p-1)/2`): on return `members[0]` holds the element-wise sum of
     /// every member's input in a deterministic order (own subtree, then
@@ -620,45 +688,56 @@ impl<'a> Collective<'a> {
     /// by every member with equal-length buffers.
     pub fn tree_reduce_sum(&mut self, members: &[Rank],
                            data: &mut [f32]) -> Result<(), CommError> {
-        let pos = member_pos(members, self.comm.rank())?;
         let len = data.len();
+        self.tree_reduce_sum_window(members, data, 0, len, len,
+                                    Tag::TreeReduce)
+    }
+
+    /// Windowed tree sum-reduce (see [`Collective::tree_reduce_sum`]):
+    /// only `data[w0..w1)` of the logical `total`-element buffer is
+    /// reduced, on `tag`.
+    fn tree_reduce_sum_window(&mut self, members: &[Rank],
+                              data: &mut [f32], w0: usize, w1: usize,
+                              total: usize, tag: Tag)
+        -> Result<(), CommError> {
+        let pos = member_pos(members, self.comm.rank())?;
         for c in [2 * pos + 1, 2 * pos + 2] {
             if c < members.len() {
                 let payload = self.recv_chunk_stashing(
-                    Tag::TreeReduce, members[c], len)?;
-                Self::add_payload(&payload, data);
+                    tag, members[c], w1 - w0)?;
+                Self::add_payload(&payload, &mut data[w0..w1]);
             }
         }
         if pos > 0 {
-            self.send_sum_chunk(members[(pos - 1) / 2],
-                                Tag::TreeReduce, data, 0, len, len)?;
+            self.send_sum_chunk(members[(pos - 1) / 2], tag, data, w0,
+                                w1, total)?;
         }
         Ok(())
     }
 
     /// Binary-tree broadcast from `members[0]`: every member adopts the
-    /// root's buffer. The canonical payload (see
-    /// [`Collective::canonical_payload`]) is forwarded verbatim, so all
-    /// members finish with identical bytes even under a lossy codec.
-    /// Returns the payload so callers can keep forwarding it (the
-    /// hierarchical all-reduce chains it into each group's ring).
-    fn tree_bcast_payload(&mut self, members: &[Rank],
-                          data: &mut [f32])
+    /// root's window. The root builds the canonical payload ONCE via
+    /// [`Collective::owned_chunk_payload`] (adopting the decoded form
+    /// itself) and it is forwarded verbatim, so all members finish with
+    /// identical bytes even under a lossy codec. Returns the payload so
+    /// callers can keep forwarding it (the hierarchical all-reduce
+    /// chains it into each group's ring).
+    fn tree_bcast_window(&mut self, members: &[Rank], data: &mut [f32],
+                         w0: usize, w1: usize, total: usize, tag: Tag)
         -> Result<Payload, CommError> {
         let pos = member_pos(members, self.comm.rank())?;
         let payload = if pos == 0 {
-            self.canonical_payload(data)
+            self.owned_chunk_payload(data, w0, w1, total)
         } else {
             let parent = members[(pos - 1) / 2];
-            let payload = self.recv_chunk_stashing(
-                Tag::TreeBcast, parent, data.len())?;
-            Self::set_payload(&payload, data);
+            let payload =
+                self.recv_chunk_stashing(tag, parent, w1 - w0)?;
+            Self::set_payload(&payload, &mut data[w0..w1]);
             payload
         };
         for c in [2 * pos + 1, 2 * pos + 2] {
             if c < members.len() {
-                self.comm.send(members[c], Tag::TreeBcast,
-                               payload.clone())?;
+                self.comm.send(members[c], tag, payload.clone())?;
             }
         }
         Ok(payload)
@@ -668,18 +747,17 @@ impl<'a> Collective<'a> {
     /// buffer replicated to every member in `ceil(log2 n)` hop levels.
     pub fn tree_broadcast(&mut self, members: &[Rank],
                           data: &mut [f32]) -> Result<(), CommError> {
-        self.tree_bcast_payload(members, data).map(|_| ())
+        let len = data.len();
+        self.tree_bcast_window(members, data, 0, len, len,
+                               Tag::TreeBcast).map(|_| ())
     }
 
-    /// Hierarchical sum all-reduce (see the module docs): intra-group
-    /// chunked ring reduce-scatter → gather onto the group leader →
-    /// binary-tree reduce over leaders → the root's canonical payload
-    /// travels back down the tree and around each group's ring
-    /// verbatim. All ranks finish bitwise identical, raw or compressed.
-    fn allreduce_hier(&mut self, data: &mut [f32])
-        -> Result<(), CommError> {
-        let layout = self.groups.clone()
-            .expect("allreduce_hier requires a group layout");
+    /// This rank's group under the configured layout: (members, own
+    /// position, leaders). Validates the layout against the world.
+    fn hier_group(&self)
+        -> Result<(Vec<Rank>, usize, Vec<Rank>), CommError> {
+        let layout = self.groups.as_ref()
+            .expect("hierarchical schedule requires a group layout");
         if layout.world_size() != self.comm.size() {
             return Err(CommError::Protocol(format!(
                 "collective: group layout covers {} ranks but the \
@@ -689,37 +767,68 @@ impl<'a> Collective<'a> {
             )));
         }
         let rank = self.comm.rank();
-        let len = data.len();
         let gi = layout.group_of(rank).ok_or_else(|| {
             CommError::Protocol(format!(
                 "collective: rank {rank} missing from the group layout"
             ))
         })?;
         let members = layout.groups()[gi].clone();
-        let m = members.len();
         let pos = member_pos(&members, rank)?;
+        Ok((members, pos, layout.leaders()))
+    }
+
+    /// Hierarchical sum all-reduce (see the module docs): intra-group
+    /// chunked ring reduce-scatter → gather onto the group leader →
+    /// binary-tree reduce over leaders → the root's canonical payload
+    /// travels back down the tree and around each group's ring
+    /// verbatim. All ranks finish bitwise identical, raw or compressed.
+    fn allreduce_hier(&mut self, data: &mut [f32])
+        -> Result<(), CommError> {
+        let len = data.len();
+        self.hier_sum_window(data, 0, len, len, &MONOLITH_HIER_TAGS,
+                             false)
+    }
+
+    /// Windowed hierarchical sum all-reduce over `data[w0..w1)` of the
+    /// logical `total`-element buffer, on the tag lanes `tags`. The
+    /// full window on [`MONOLITH_HIER_TAGS`] IS the monolithic
+    /// hierarchical all-reduce; a bucket's window on its own lanes is
+    /// one overlapped bucket. Intra-group chunks sit on the GLOBAL
+    /// per-group grid (see [`Collective::window_chunk`]) so bucketing
+    /// never changes any element's reduction order. `skip_first_send`:
+    /// the intra-ring's step-0 send already happened in
+    /// [`Collective::bucket_begin`].
+    fn hier_sum_window(&mut self, data: &mut [f32], w0: usize,
+                       w1: usize, total: usize, hier: &HierTags,
+                       skip_first_send: bool) -> Result<(), CommError> {
+        let (members, pos, leaders) = self.hier_group()?;
+        let m = members.len();
 
         // Phase 1 — intra-group chunked ring reduce-scatter (the flat
         // ring's schedule over the group's members): after m-1 steps,
         // position p owns the complete group sum of chunk (p+1) mod m.
-        // Dedicated tags (GroupChunk/GroupBcast, not RingChunk/Bcast):
-        // a rank's group-ring neighbor differs from its flat-ring
-        // neighbor, and flat collectives (the initial broadcast, scalar
-        // agreements) interleave with grouped rounds — shared tags
-        // would make a fast rank's grouped chunk look like a flat
-        // chunk from the wrong source.
+        // Dedicated tags (never RingChunk/Bcast): a rank's group-ring
+        // neighbor differs from its flat-ring neighbor, and flat
+        // collectives (the initial broadcast, scalar agreements)
+        // interleave with grouped rounds — shared tags would make a
+        // fast rank's grouped chunk look like a flat chunk from the
+        // wrong source.
         if m > 1 {
             let next = members[(pos + 1) % m];
             let prev = members[(pos + m - 1) % m];
             for step in 0..m - 1 {
                 let send_idx = (pos + m - step) % m;
                 let recv_idx = (pos + 2 * m - step - 1) % m;
-                let (s0, s1) = Self::chunk_bounds(len, m, send_idx);
-                self.send_sum_chunk(next, Tag::GroupChunk, data, s0, s1,
-                                    len)?;
-                let (r0, r1) = Self::chunk_bounds(len, m, recv_idx);
+                if step > 0 || !skip_first_send {
+                    let (s0, s1) =
+                        Self::window_chunk(total, m, send_idx, w0, w1);
+                    self.send_sum_chunk(next, hier.chunk, data, s0, s1,
+                                        total)?;
+                }
+                let (r0, r1) =
+                    Self::window_chunk(total, m, recv_idx, w0, w1);
                 let payload =
-                    self.recv_chunk(Tag::GroupChunk, prev, r1 - r0)?;
+                    self.recv_chunk(hier.chunk, prev, r1 - r0)?;
                 Self::add_payload(&payload, &mut data[r0..r1]);
             }
             // Phase 2 — gather the scattered chunks onto the leader so
@@ -729,42 +838,135 @@ impl<'a> Collective<'a> {
             if pos == 0 {
                 for (p, &src) in members.iter().enumerate().skip(1) {
                     let (r0, r1) =
-                        Self::chunk_bounds(len, m, (p + 1) % m);
+                        Self::window_chunk(total, m, (p + 1) % m, w0,
+                                           w1);
                     let payload = self.recv_chunk_stashing(
-                        Tag::GroupGather, src, r1 - r0)?;
+                        hier.gather, src, r1 - r0)?;
                     Self::set_payload(&payload, &mut data[r0..r1]);
                 }
             } else {
-                let (s0, s1) = Self::chunk_bounds(len, m, (pos + 1) % m);
-                self.send_sum_chunk(members[0], Tag::GroupGather, data,
-                                    s0, s1, len)?;
+                let (s0, s1) =
+                    Self::window_chunk(total, m, (pos + 1) % m, w0, w1);
+                self.send_sum_chunk(members[0], hier.gather, data, s0,
+                                    s1, total)?;
             }
         }
 
         if pos == 0 {
             // Phases 3-4 — leaders only: combine group sums up the
             // binary tree, then carry the canonical result back down.
-            let leaders = layout.leaders();
-            self.tree_reduce_sum(&leaders, data)?;
-            let payload = self.tree_bcast_payload(&leaders, data)?;
+            self.tree_reduce_sum_window(&leaders, data, w0, w1, total,
+                                        hier.tree_reduce)?;
+            let payload = self.tree_bcast_window(&leaders, data, w0, w1,
+                                                 total,
+                                                 hier.tree_bcast)?;
             // Phase 5 — re-broadcast into the group's ring: the SAME
             // payload chains leader → members[1] → … → members[m-1].
             if m > 1 {
-                self.comm.send(members[1], Tag::GroupBcast, payload)?;
+                self.comm.send(members[1], hier.bcast, payload)?;
             }
         } else {
             // Phase 5, member side: adopt the canonical payload from
             // the ring predecessor and forward it verbatim.
-            let payload =
-                self.recv_chunk(Tag::GroupBcast, members[pos - 1],
-                                len)?;
-            Self::set_payload(&payload, data);
+            let payload = self.recv_chunk(hier.bcast, members[pos - 1],
+                                          w1 - w0)?;
+            Self::set_payload(&payload, &mut data[w0..w1]);
             if pos + 1 < m {
-                self.comm.send(members[pos + 1], Tag::GroupBcast,
-                               payload)?;
+                self.comm.send(members[pos + 1], hier.bcast, payload)?;
             }
         }
         Ok(())
+    }
+
+    // --- bucketed (compute-overlapped) sum all-reduce ---------------
+
+    /// Launch the sum all-reduce of one bucket — the window `[w0, w1)`
+    /// of the logical `total`-element round buffer — and return
+    /// immediately: only the schedule's first wire send happens here;
+    /// everything else (including every receive) is deferred to
+    /// [`Collective::bucket_finish_sum`]. Launching each bucket as its
+    /// layer's backward completes puts that chunk on the wire while
+    /// upstream layers are still computing — the comm/compute overlap.
+    /// `data` only needs `w1` elements (the round buffer's tail may not
+    /// exist yet when early buckets launch).
+    ///
+    /// Buckets run on dedicated `(bucket, phase)` tag lanes
+    /// ([`crate::mpi::tags`]), so up to `MAX_BUCKETS` may be
+    /// outstanding without cross-talk, and windows chunk on the GLOBAL
+    /// grid — so fp32/fp16 results stay bitwise identical to the
+    /// monolithic all-reduce over the same buffer. All ranks must
+    /// launch the same buckets in the same order (lockstep SPMD).
+    pub fn bucket_begin(&mut self, bucket: usize, data: &[f32],
+                        w0: usize, w1: usize, total: usize)
+        -> Result<(), CommError> {
+        assert!(w0 <= w1 && w1 <= total && w1 <= data.len(),
+                "bucket window [{w0}, {w1}) out of bounds \
+                 (total {total}, data {})", data.len());
+        let n = self.comm.size();
+        let mut first_sent = false;
+        if n > 1 {
+            let tag = tags::bucket_tag(bucket, BucketPhase::Chunk);
+            if self.groups.is_some() {
+                // hierarchical: step 0 of the intra-group ring
+                // reduce-scatter (send_idx at step 0 is own position)
+                let (members, pos, _) = self.hier_group()?;
+                let m = members.len();
+                if m > 1 {
+                    let next = members[(pos + 1) % m];
+                    let (s0, s1) =
+                        Self::window_chunk(total, m, pos, w0, w1);
+                    self.send_sum_chunk(next, tag, data, s0, s1,
+                                        total)?;
+                    first_sent = true;
+                }
+            } else {
+                // flat ring: step 0's send chunk is the rank's own
+                let rank = self.comm.rank();
+                let next = self.next_rank();
+                let (s0, s1) = Self::window_chunk(total, n, rank, w0, w1);
+                self.send_sum_chunk(next, tag, data, s0, s1, total)?;
+                first_sent = true;
+            }
+        }
+        self.pending.push(PendingBucket {
+            bucket, w0, w1, total, first_sent,
+        });
+        Ok(())
+    }
+
+    /// Complete every outstanding bucket, in launch order: the rest of
+    /// each bucket's reduce-scatter plus the all-gather (or the
+    /// hierarchical gather/tree/broadcast) that replicates its reduced
+    /// window. `data` is the full `total`-element round buffer. On
+    /// return the pending list is empty and every launched window of
+    /// `data` holds the world sum, bitwise identical on all ranks.
+    pub fn bucket_finish_sum(&mut self, data: &mut [f32])
+        -> Result<(), CommError> {
+        let pending = std::mem::take(&mut self.pending);
+        if self.comm.size() <= 1 {
+            return Ok(());
+        }
+        for pb in pending {
+            debug_assert_eq!(data.len(), pb.total,
+                             "finish buffer must be the round's full \
+                              logical buffer");
+            if self.groups.is_some() {
+                let hier = bucket_hier_tags(pb.bucket);
+                self.hier_sum_window(data, pb.w0, pb.w1, pb.total,
+                                     &hier, pb.first_sent)?;
+            } else {
+                let tag =
+                    tags::bucket_tag(pb.bucket, BucketPhase::Chunk);
+                self.ring_sum_window(data, pb.w0, pb.w1, pb.total, tag,
+                                     pb.first_sent)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Buckets launched and not yet finished.
+    pub fn pending_buckets(&self) -> usize {
+        self.pending.len()
     }
 
     /// Single-value all-reduce convenience (e.g. agreeing on the common
@@ -1538,5 +1740,218 @@ mod tests {
         let rel = (err2 / ref2).sqrt();
         assert!(rel < 0.05,
                 "cumulative delivery drifted: rel err {rel:.4}");
+    }
+
+    // --- bucketed (compute-overlapped) collectives ------------------
+
+    #[test]
+    fn window_chunks_tile_the_global_grid() {
+        // For any window partition of 0..total, the non-empty
+        // window∩chunk intersections tile each global chunk exactly —
+        // the invariant that makes bucketing order-preserving.
+        for n in [1usize, 2, 3, 5, 8] {
+            for total in [0usize, 1, 5, 9, 64, 65] {
+                let mut windows: Vec<(usize, usize)> = Vec::new();
+                let mut lo = 0;
+                for c in [total / 5, total / 3, total / 2, total] {
+                    let hi = c.max(lo);
+                    windows.push((lo, hi));
+                    lo = hi;
+                }
+                for i in 0..n {
+                    let (c0, c1) =
+                        Collective::chunk_bounds(total, n, i);
+                    let mut covered = c0;
+                    for &(w0, w1) in &windows {
+                        let (s0, s1) = Collective::window_chunk(
+                            total, n, i, w0, w1);
+                        assert!(s0 <= s1 && w0 <= s0 && s1 <= w1,
+                                "n={n} total={total} i={i} \
+                                 window=({w0},{w1})");
+                        if s0 < s1 {
+                            assert_eq!(s0, covered);
+                            covered = s1;
+                        }
+                    }
+                    assert_eq!(covered, c1,
+                               "chunk {i} not tiled (n={n}, \
+                                total={total})");
+                }
+            }
+        }
+    }
+
+    /// Bucketed rounds: every window launched via `bucket_begin` (in
+    /// order), then completed with one `bucket_finish_sum` — the
+    /// worker's overlap schedule, minus the interleaved compute.
+    fn run_bucketed(n: usize, inputs: &[Vec<f32>], codec: Codec,
+                    tail: usize, windows: &[(usize, usize)],
+                    layout: Option<&GroupLayout>, rounds: usize)
+        -> Vec<Vec<f32>> {
+        let world = inproc_world(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = world
+                .into_iter()
+                .zip(inputs.iter())
+                .map(|(comm, input)| {
+                    let layout = layout.cloned();
+                    s.spawn(move || {
+                        let mut col = Collective::new(&comm);
+                        col.set_codec(codec);
+                        col.set_exact_tail(tail);
+                        col.set_groups(layout);
+                        let total = input.len();
+                        let mut buf = input.clone();
+                        for r in 0..rounds {
+                            if r > 0 {
+                                buf.copy_from_slice(input);
+                            }
+                            for (b, &(w0, w1)) in
+                                windows.iter().enumerate()
+                            {
+                                col.bucket_begin(b, &buf, w0, w1,
+                                                 total).unwrap();
+                            }
+                            assert_eq!(col.pending_buckets(),
+                                       windows.len());
+                            col.bucket_finish_sum(&mut buf).unwrap();
+                            assert_eq!(col.pending_buckets(), 0);
+                        }
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    /// Uneven layer-shaped windows over a 65-element buffer, including
+    /// an empty window and a 2-element tail bucket.
+    const WINDOWS_65: &[(usize, usize)] =
+        &[(0, 20), (20, 23), (23, 23), (23, 63), (63, 65)];
+
+    #[test]
+    fn bucketed_allreduce_matches_monolithic_bitwise() {
+        // fp32 AND fp16: splitting the round into buckets must not
+        // change a single bit vs one monolithic all-reduce — global
+        // chunking preserves every element's reduction order, and the
+        // error-feedback residual sees identical windows. Checked over
+        // multiple rounds so residual state is covered too.
+        let rounds = 3;
+        for codec in [Codec::Fp32, Codec::Fp16] {
+            for n in [2usize, 3, 4, 8] {
+                let len = 65;
+                let inputs =
+                    random_inputs(n, len, n as u64 * 541 + 13);
+                let (mono, _) =
+                    run_compressed(n, &inputs, codec, 2, rounds);
+                let bucketed = run_bucketed(n, &inputs, codec, 2,
+                                            WINDOWS_65, None, rounds);
+                for (r, (got, want)) in
+                    bucketed.iter().zip(mono.iter()).enumerate()
+                {
+                    assert!(
+                        got.iter().zip(want.iter()).all(
+                            |(a, b)| a.to_bits() == b.to_bits()),
+                        "rank {r}: bucketed != monolithic \
+                         ({codec:?}, n={n})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_hier_matches_monolithic_hier_bitwise() {
+        // Same property through the hierarchical schedule: per-bucket
+        // ring → tree → ring must equal the monolithic hierarchical
+        // all-reduce bit for bit (fp32 and fp16).
+        for codec in [Codec::Fp32, Codec::Fp16] {
+            for (n, g) in [(4usize, 2usize), (8, 2), (8, 4), (9, 3)] {
+                let layout = GroupLayout::contiguous(n, g).unwrap();
+                let inputs = random_inputs(
+                    n, 65, n as u64 * 733 + g as u64);
+                let mono =
+                    run_hier(n, &layout, &inputs, codec, 2);
+                let bucketed = run_bucketed(n, &inputs, codec, 2,
+                                            WINDOWS_65, Some(&layout),
+                                            1);
+                for (r, (got, want)) in
+                    bucketed.iter().zip(mono.iter()).enumerate()
+                {
+                    assert!(
+                        got.iter().zip(want.iter()).all(
+                            |(a, b)| a.to_bits() == b.to_bits()),
+                        "rank {r}: bucketed hier != monolithic \
+                         ({codec:?}, n={n}, g={g})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_topk_identical_across_ranks_and_tail_exact() {
+        // Top-k selects per packed slice, so bucket boundaries change
+        // WHICH elements travel — bucketed top-k cannot equal the
+        // monolith. The training-critical guarantees that must still
+        // hold: every rank finishes bitwise identical, and the
+        // protected tail (loss + stop flag) survives undropped.
+        let n = 4;
+        let len = 65;
+        let mut inputs = random_inputs(n, len, 29);
+        for (r, input) in inputs.iter_mut().enumerate() {
+            for v in input.iter_mut() {
+                *v *= 100.0;
+            }
+            input[len - 2] = 0.5 + r as f32;
+            input[len - 1] = if r == 1 { 1.0 } else { 0.0 };
+        }
+        for layout in [None,
+                       Some(GroupLayout::contiguous(n, 2).unwrap())] {
+            let results = run_bucketed(n, &inputs,
+                                       Codec::TopK { k: 0.1 }, 2,
+                                       WINDOWS_65, layout.as_ref(), 3);
+            let reference = &results[0];
+            for (r, got) in results.iter().enumerate() {
+                assert!(
+                    got.iter().zip(reference.iter()).all(
+                        |(a, b)| a.to_bits() == b.to_bits()),
+                    "rank {r} diverged (layout={layout:?})"
+                );
+            }
+            assert!(reference[len - 1] >= 1.0,
+                    "stop flag must survive top-k bucketing");
+        }
+    }
+
+    #[test]
+    fn bucketed_with_more_buckets_than_elements() {
+        // Degenerate shapes: windows narrower than the chunk grid (so
+        // most window∩chunk intersections are empty) must still
+        // complete in lockstep and produce the monolithic result.
+        let n = 4;
+        let len = 3;
+        let windows = [(0usize, 1usize), (1, 1), (1, 2), (2, 3)];
+        let inputs = random_inputs(n, len, 83);
+        let reference = ring_order_reference(&inputs, ReduceOp::Sum);
+        let results = run_bucketed(n, &inputs, Codec::Fp32, 0,
+                                   &windows, None, 1);
+        for got in &results {
+            assert_eq!(got, &reference);
+        }
+    }
+
+    #[test]
+    fn bucketed_single_rank_is_identity() {
+        let world = inproc_world(1);
+        let mut col = Collective::new(&world[0]);
+        let mut data = vec![4.0f32, -1.0, 2.5];
+        col.bucket_begin(0, &data, 0, 2, 3).unwrap();
+        col.bucket_begin(1, &data, 2, 3, 3).unwrap();
+        assert_eq!(col.pending_buckets(), 2);
+        col.bucket_finish_sum(&mut data).unwrap();
+        assert_eq!(col.pending_buckets(), 0);
+        assert_eq!(data, vec![4.0, -1.0, 2.5]);
     }
 }

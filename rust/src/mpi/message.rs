@@ -25,54 +25,130 @@
 
 pub type Rank = usize;
 
-/// Protocol tags (superset of mpi_learn's).
+/// Phase of a per-bucket collective, encoded into the bucket tag block.
+/// Each phase mirrors one of the fixed collective tags (`RingChunk`,
+/// `GroupGather`, `TreeReduce`, `TreeBcast`, `GroupBcast`) so a bucketed
+/// all-reduce runs the exact same schedule as the monolithic one, just
+/// on a tag lane of its own per bucket.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 #[repr(u32)]
+pub enum BucketPhase {
+    /// ring reduce-scatter / all-gather chunk (flat ring or intra-group)
+    Chunk = 0,
+    /// member -> group leader gather (hierarchical intra-group)
+    Gather = 1,
+    /// child -> parent inter-group tree partial sum (hierarchical)
+    TreeReduce = 2,
+    /// parent -> child canonical payload (hierarchical)
+    TreeBcast = 3,
+    /// leader -> group ring canonical payload (hierarchical)
+    Bcast = 4,
+}
+
+impl BucketPhase {
+    pub fn from_u32(v: u32) -> Option<BucketPhase> {
+        Some(match v {
+            0 => BucketPhase::Chunk,
+            1 => BucketPhase::Gather,
+            2 => BucketPhase::TreeReduce,
+            3 => BucketPhase::TreeBcast,
+            4 => BucketPhase::Bcast,
+            _ => return None,
+        })
+    }
+}
+
+/// Protocol tags (superset of mpi_learn's).
+///
+/// Every fixed tag's wire value is pinned by the central registry in
+/// [`crate::mpi::tags`] (compile-time-checked unique and ordered); the
+/// data-carrying `Bucket` variant owns the contiguous block above the
+/// fixed tags, one lane per (bucket, phase). Wire values come from
+/// [`Tag::to_u32`] — there is deliberately no `as u32` cast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Tag {
     /// worker -> master: ready to train, send me initial weights
-    Ready = 0,
+    Ready,
     /// worker -> master: gradient payload (Downpour)
-    Gradients = 1,
+    Gradients,
     /// master -> worker: full weight payload
-    Weights = 2,
+    Weights,
     /// worker -> master: EASGD weight exchange request (payload = worker weights)
-    ExchangeWeights = 3,
+    ExchangeWeights,
     /// master -> worker: EASGD center variable
-    Center = 4,
+    Center,
     /// master -> worker: stop training
-    Exit = 5,
+    Exit,
     /// worker -> master: per-epoch timing/progress stats
-    TrainStats = 6,
+    TrainStats,
     /// master -> parent master: hierarchical aggregated gradient
-    AggGradients = 7,
+    AggGradients,
     /// any -> any: liveness probe (comm microbench)
-    Ping = 8,
+    Ping,
     /// neighbor -> neighbor: ring all-reduce chunk (collective layer)
-    RingChunk = 9,
+    RingChunk,
     /// neighbor -> neighbor: ring broadcast payload (collective layer)
-    Bcast = 10,
+    Bcast,
     /// child -> parent: binary-tree reduce partial sum (collective layer,
     /// hierarchical all-reduce's inter-group phase)
-    TreeReduce = 11,
+    TreeReduce,
     /// parent -> child: binary-tree broadcast payload (collective layer)
-    TreeBcast = 12,
+    TreeBcast,
     /// member -> group leader: reduce-scattered chunk gather (collective
     /// layer, hierarchical all-reduce's intra-group phase)
-    GroupGather = 13,
+    GroupGather,
     /// group-ring neighbor -> neighbor: intra-group reduce-scatter
     /// chunk. Distinct from `RingChunk` so grouped traffic can never be
     /// mistaken for a flat collective's (their source ranks differ, and
     /// a fast rank's first grouped chunk may arrive while its neighbor
     /// is still inside a flat collective's strict receive).
-    GroupChunk = 14,
+    GroupChunk,
     /// group-ring neighbor -> neighbor: the canonical result payload
     /// chained through the group (distinct from `Bcast` for the same
     /// reason as `GroupChunk`).
-    GroupBcast = 15,
+    GroupBcast,
+    /// Per-bucket collective traffic for the compute-overlapped
+    /// (bucketed) all-reduce: one tag lane per (bucket, phase) so
+    /// multiple outstanding collectives can be in flight without
+    /// cross-talk — the wrong-source hazard that forced `GroupChunk`
+    /// away from `RingChunk` applies between buckets too.
+    Bucket { bucket: u16, phase: BucketPhase },
 }
 
 impl Tag {
+    /// Wire value. Fixed tags are the registry's pinned values; bucket
+    /// tags map into the block at
+    /// `BUCKET_TAG_BASE + bucket * BUCKET_PHASES + phase`.
+    pub fn to_u32(self) -> u32 {
+        use crate::mpi::tags::{BUCKET_PHASES, BUCKET_TAG_BASE};
+        match self {
+            Tag::Ready => 0,
+            Tag::Gradients => 1,
+            Tag::Weights => 2,
+            Tag::ExchangeWeights => 3,
+            Tag::Center => 4,
+            Tag::Exit => 5,
+            Tag::TrainStats => 6,
+            Tag::AggGradients => 7,
+            Tag::Ping => 8,
+            Tag::RingChunk => 9,
+            Tag::Bcast => 10,
+            Tag::TreeReduce => 11,
+            Tag::TreeBcast => 12,
+            Tag::GroupGather => 13,
+            Tag::GroupChunk => 14,
+            Tag::GroupBcast => 15,
+            Tag::Bucket { bucket, phase } => {
+                BUCKET_TAG_BASE
+                    + bucket as u32 * BUCKET_PHASES
+                    + phase as u32
+            }
+        }
+    }
+
     pub fn from_u32(v: u32) -> Option<Tag> {
+        use crate::mpi::tags::{BUCKET_PHASES, BUCKET_TAG_BASE,
+                               MAX_BUCKETS};
         Some(match v {
             0 => Tag::Ready,
             1 => Tag::Gradients,
@@ -90,6 +166,16 @@ impl Tag {
             13 => Tag::GroupGather,
             14 => Tag::GroupChunk,
             15 => Tag::GroupBcast,
+            v if (BUCKET_TAG_BASE
+                ..BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES)
+                .contains(&v) =>
+            {
+                let rel = v - BUCKET_TAG_BASE;
+                Tag::Bucket {
+                    bucket: (rel / BUCKET_PHASES) as u16,
+                    phase: BucketPhase::from_u32(rel % BUCKET_PHASES)?,
+                }
+            }
             _ => return None,
         })
     }
@@ -286,7 +372,7 @@ le_slice_io!(write_u32_slice, read_u32_slice, u32, 4);
 pub fn encode(tag: Tag, payload: &Payload) -> Vec<u8> {
     use crate::mpi::codec::PackedF32;
     let mut out = Vec::with_capacity(payload.nbytes());
-    out.extend_from_slice(&(tag as u32).to_le_bytes());
+    out.extend_from_slice(&tag.to_u32().to_le_bytes());
     out.extend_from_slice(&payload.kind().to_le_bytes());
     match payload {
         Payload::Empty => {
@@ -520,8 +606,36 @@ mod tests {
             let (t2, p2) = decode(&encode(tag, &p)).unwrap();
             assert_eq!(t2, tag);
             assert_eq!(p2, p);
-            assert_eq!(Tag::from_u32(tag as u32), Some(tag));
+            assert_eq!(Tag::from_u32(tag.to_u32()), Some(tag));
         }
+    }
+
+    #[test]
+    fn bucket_tags_roundtrip() {
+        use crate::mpi::tags::{BUCKET_PHASES, BUCKET_TAG_BASE,
+                               MAX_BUCKETS};
+        let phases = [BucketPhase::Chunk, BucketPhase::Gather,
+                      BucketPhase::TreeReduce, BucketPhase::TreeBcast,
+                      BucketPhase::Bcast];
+        assert_eq!(phases.len() as u32, BUCKET_PHASES);
+        let mut seen = std::collections::HashSet::new();
+        for bucket in 0..MAX_BUCKETS as u16 {
+            for phase in phases {
+                let tag = Tag::Bucket { bucket, phase };
+                let v = tag.to_u32();
+                assert!(v >= BUCKET_TAG_BASE);
+                assert!(seen.insert(v), "duplicate wire value {v}");
+                assert_eq!(Tag::from_u32(v), Some(tag));
+                let p = Payload::floats(7, vec![0.25, -1.0]);
+                let (t2, p2) = decode(&encode(tag, &p)).unwrap();
+                assert_eq!(t2, tag);
+                assert_eq!(p2, p);
+            }
+        }
+        // the lane just past the block is unassigned
+        assert_eq!(
+            Tag::from_u32(BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES),
+            None);
     }
 
     #[test]

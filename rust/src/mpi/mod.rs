@@ -21,7 +21,105 @@ pub mod transport;
 pub use codec::{Codec, Compressor, PackedF32};
 pub use collective::{Collective, GroupLayout, ReduceOp};
 pub use comm::{Comm, CommError};
-pub use message::{Envelope, Payload, Rank, Tag, WorkerStats};
+pub use message::{BucketPhase, Envelope, Payload, Rank, Tag,
+                  WorkerStats};
+
+/// Central wire-tag registry: the single table every protocol tag's
+/// numeric value is pinned by.
+///
+/// PR 4 hit a real wrong-source race from two collectives sharing a tag
+/// ad hoc (`GroupChunk` had to be split from `RingChunk`); this module
+/// makes tag allocation explicit. The fixed tags occupy `0..16`; the
+/// per-bucket collective block for the overlapped all-reduce occupies
+/// `[BUCKET_TAG_BASE, BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES)`,
+/// one lane per (bucket, phase). Uniqueness and ordering are checked at
+/// compile time — adding a clashing entry fails the build.
+pub mod tags {
+    use super::message::{BucketPhase, Tag};
+
+    /// Every fixed protocol tag, in wire order. New fixed tags must be
+    /// appended here with the next free value below [`BUCKET_TAG_BASE`].
+    pub const REGISTRY: &[(u32, &str)] = &[
+        (0, "Ready"),
+        (1, "Gradients"),
+        (2, "Weights"),
+        (3, "ExchangeWeights"),
+        (4, "Center"),
+        (5, "Exit"),
+        (6, "TrainStats"),
+        (7, "AggGradients"),
+        (8, "Ping"),
+        (9, "RingChunk"),
+        (10, "Bcast"),
+        (11, "TreeReduce"),
+        (12, "TreeBcast"),
+        (13, "GroupGather"),
+        (14, "GroupChunk"),
+        (15, "GroupBcast"),
+    ];
+
+    /// First wire value of the bucket-tag block.
+    pub const BUCKET_TAG_BASE: u32 = 16;
+    /// Tag lanes per bucket — one per [`BucketPhase`] variant.
+    pub const BUCKET_PHASES: u32 = 5;
+    /// Maximum concurrently-addressable buckets per round (the tail
+    /// loss/stop bucket counts as one).
+    pub const MAX_BUCKETS: u32 = 32;
+
+    const fn strictly_increasing(t: &[(u32, &str)]) -> bool {
+        let mut i = 1;
+        while i < t.len() {
+            if t[i].0 <= t[i - 1].0 {
+                return false;
+            }
+            i += 1;
+        }
+        true
+    }
+
+    // Compile-time-unique listing: values strictly increase (hence no
+    // duplicates), start at 0, and stay below the bucket block.
+    const _: () = assert!(strictly_increasing(REGISTRY));
+    const _: () = assert!(REGISTRY[0].0 == 0);
+    const _: () =
+        assert!(REGISTRY[REGISTRY.len() - 1].0 < BUCKET_TAG_BASE);
+    const _: () = assert!(BUCKET_PHASES >= 1 && MAX_BUCKETS >= 1);
+
+    /// The wire tag for one (bucket, phase) collective lane.
+    pub fn bucket_tag(bucket: usize, phase: BucketPhase) -> Tag {
+        assert!(
+            (bucket as u32) < MAX_BUCKETS,
+            "bucket {bucket} exceeds MAX_BUCKETS ({MAX_BUCKETS})"
+        );
+        Tag::Bucket { bucket: bucket as u16, phase }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        /// Registry entries decode to tags whose Debug names match the
+        /// registered names and whose wire values roundtrip — the table
+        /// cannot drift from the enum.
+        #[test]
+        fn registry_matches_tag_enum() {
+            for &(v, name) in REGISTRY {
+                let tag = Tag::from_u32(v)
+                    .unwrap_or_else(|| panic!("{name} ({v}) missing"));
+                assert_eq!(format!("{tag:?}"), name);
+                assert_eq!(tag.to_u32(), v);
+            }
+            // the registry covers every fixed value below the block
+            assert_eq!(REGISTRY.len() as u32, BUCKET_TAG_BASE);
+        }
+
+        #[test]
+        #[should_panic(expected = "exceeds MAX_BUCKETS")]
+        fn bucket_tag_bounds_checked() {
+            bucket_tag(MAX_BUCKETS as usize, BucketPhase::Chunk);
+        }
+    }
+}
 
 /// Build an in-process world of `n` ranks (rank 0 first).
 pub fn inproc_world(n: usize) -> Vec<Comm> {

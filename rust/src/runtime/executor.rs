@@ -170,6 +170,34 @@ pub struct GradOutput {
     pub grads: Vec<f32>,
 }
 
+/// One layer's slice of the flat gradient became final mid-backward.
+///
+/// The native layer DAG emits these in reverse topological order
+/// (output layer first) while upstream layers are still computing; the
+/// bucketed all-reduce launches a collective per event so communication
+/// overlaps the rest of backprop (DESIGN.md §Layer DAG & bucketed
+/// overlap).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketReady {
+    /// DAG node index (emission order: highest index first).
+    pub layer: usize,
+    /// Finalized contiguous range of the flat gradient vector
+    /// (matches one [`ParamSet::layer_ranges`] entry).
+    pub param_range: std::ops::Range<usize>,
+}
+
+/// Receiver for [`BucketReady`] events. `grads` is the full flat
+/// gradient buffer; only `ready.param_range` is guaranteed final when
+/// the event fires.
+pub trait GradSink {
+    fn bucket_ready(&mut self, ready: BucketReady, grads: &[f32]);
+}
+
+/// No-op sink for plain (non-overlapped) gradient steps.
+impl GradSink for () {
+    fn bucket_ready(&mut self, _ready: BucketReady, _grads: &[f32]) {}
+}
+
 impl ModelExecutables {
     /// Compile grad+eval (+ predict if wanted) for one variant via PJRT.
     #[cfg(feature = "pjrt")]
@@ -302,6 +330,49 @@ impl ModelExecutables {
                 debug_assert_eq!(off, self.meta.param_count);
                 Ok(GradOutput { loss, grads })
             }
+        }
+    }
+
+    /// [`ModelExecutables::grad_step`] with per-layer [`BucketReady`]
+    /// emission for the bucketed, compute-overlapped all-reduce.
+    ///
+    /// The native backend fires each event the moment that layer's
+    /// gradient lands, mid-backward. The PJRT backend computes the full
+    /// gradient first (the compiled HLO is opaque) and then replays the
+    /// same event sequence post-hoc — callers see identical semantics,
+    /// just without intra-step overlap.
+    pub fn grad_step_overlapped(&self, params: &ParamSet, x: &[f32],
+                                y: &[i32], sink: &mut dyn GradSink)
+        -> Result<GradOutput, RuntimeError> {
+        self.check_xy(x, y)?;
+        match &self.backend {
+            Backend::Native(model) => {
+                self.check_params(params)?;
+                model.grad_step_overlapped(params, x, y, sink)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { .. } => {
+                let out = self.grad_step(params, x, y)?;
+                let ranges = params.layer_ranges();
+                for (layer, (_, range)) in
+                    ranges.into_iter().enumerate().rev() {
+                    sink.bucket_ready(
+                        BucketReady { layer, param_range: range },
+                        &out.grads);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Toggle scratch-buffer pooling in the native engine (no-op for
+    /// PJRT, which manages its own buffers). On by default; the
+    /// microbench flips it to price the arena.
+    pub fn set_scratch_reuse(&self, on: bool) {
+        match &self.backend {
+            Backend::Native(model) => model.set_scratch_reuse(on),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { .. } => {}
         }
     }
 

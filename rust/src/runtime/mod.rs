@@ -19,7 +19,8 @@ pub(crate) mod native;
 
 pub use artifact::{default_artifact_dir, ArtifactError, Manifest,
                    ModelMeta};
-pub use executor::{Client, GradOutput, ModelExecutables, RuntimeError};
+pub use executor::{BucketReady, Client, GradOutput, GradSink,
+                   ModelExecutables, RuntimeError};
 #[cfg(feature = "pjrt")]
 pub use executor::Executable;
 

@@ -11,17 +11,40 @@
 //! dependencies. Parameter flattening follows the manifest convention:
 //! sorted parameter names, row-major tensors.
 //!
+//! Models execute as an explicit **layer DAG** ([`LayerDag`]): each
+//! node implements [`Layer`] (`forward` + a two-half `backward`), owns
+//! one contiguous slice of the flat parameter vector
+//! ([`crate::tensor::ParamSet::layer_ranges`]), and the backward sweep
+//! runs nodes in reverse topological order, emitting a
+//! [`BucketReady`] event through a [`GradSink`] the moment a node's
+//! gradient slice is final — before upstream nodes compute. That event
+//! stream is what drives the bucketed, compute-overlapped all-reduce
+//! (see DESIGN.md §Layer DAG & bucketed overlap). Scratch buffers
+//! (activations, tapes, per-step temporaries) come from a per-call
+//! [`Arena`] pool so steady-state training rounds stop reallocating.
+//!
 //! Supported families: `mlp` (the quickstart model) and `lstm` (the
 //! paper benchmark). `transformer` still requires the PJRT path.
 
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
 use crate::runtime::artifact::ModelMeta;
-use crate::runtime::executor::{GradOutput, RuntimeError};
+use crate::runtime::executor::{BucketReady, GradOutput, GradSink,
+                               RuntimeError};
 use crate::tensor::ParamSet;
 
-/// A natively-executable model variant.
-pub(crate) enum NativeModel {
-    Mlp(MlpNet),
-    Lstm(LstmNet),
+/// A natively-executable model: the layer DAG plus the scratch-arena
+/// pool shared by every caller of this (Arc-shared) executable.
+pub(crate) struct NativeModel {
+    dag: LayerDag,
+    /// Retired scratch buffers, one arena per concurrent caller
+    /// (popped for the duration of a step, pushed back after).
+    arenas: Mutex<Vec<Arena>>,
+    /// When false, every step runs on a fresh arena and nothing is
+    /// pooled — the microbench baseline.
+    reuse_scratch: AtomicBool,
 }
 
 /// Tanh MLP over flattened input: dims[0] -> … -> dims.last().
@@ -159,58 +182,546 @@ fn argmax_correct(logits: &[f32], y: &[i32], batch: usize,
     correct as f32
 }
 
+/// Copy time-step `t` of `[B, T, F]` input into a `[B, F]` buffer.
+fn step_input(x: &[f32], t: usize, batch: usize, seq_len: usize,
+              features: usize, out: &mut [f32]) {
+    for bi in 0..batch {
+        let src = bi * seq_len * features + t * features;
+        out[bi * features..(bi + 1) * features]
+            .copy_from_slice(&x[src..src + features]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scratch arena
+// ---------------------------------------------------------------------------
+
+/// Recycled scratch allocations for one in-flight step. `take_zeroed`
+/// hands out a zeroed buffer, reusing a retired allocation when one is
+/// big enough; `put` retires a buffer for later reuse. Buffers carry no
+/// identity — any retired allocation with enough capacity serves any
+/// request — so the values a step computes are independent of what the
+/// arena previously held (zeroing guarantees it).
+pub(crate) struct Arena {
+    free: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    fn new() -> Arena {
+        Arena { free: Vec::new() }
+    }
+
+    fn take_zeroed(&mut self, n: usize) -> Vec<f32> {
+        match self.free.iter().position(|v| v.capacity() >= n) {
+            Some(i) => {
+                let mut v = self.free.swap_remove(i);
+                v.clear();
+                v.resize(n, 0.0);
+                v
+            }
+            None => vec![0.0f32; n],
+        }
+    }
+
+    fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.free.push(v);
+        }
+    }
+}
+
+/// Backward state a node's `forward` leaves for its backward half,
+/// beyond the input activation itself (which the DAG retains).
+pub(crate) enum Tape {
+    /// Dense nodes need only their input activation.
+    None,
+    /// LSTM recurrence state: h[t]/c[t] and the activated gates
+    /// (i, f, g, o) per step. `hs[t]` is the state *entering* step t
+    /// (the final state is the node's output activation, not kept
+    /// here); `cs` spans 0..=T.
+    Lstm {
+        hs: Vec<Vec<f32>>,
+        cs: Vec<Vec<f32>>,
+        gates: Vec<[Vec<f32>; 4]>,
+    },
+}
+
+impl Tape {
+    fn recycle(self, arena: &mut Arena) {
+        match self {
+            Tape::None => {}
+            Tape::Lstm { hs, cs, gates } => {
+                for v in hs {
+                    arena.put(v);
+                }
+                for v in cs {
+                    arena.put(v);
+                }
+                for step in gates {
+                    for v in step {
+                        arena.put(v);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// layer DAG
+// ---------------------------------------------------------------------------
+
+/// One node of the model DAG. Backward is split in two halves so the
+/// DAG can emit [`BucketReady`] between them: once `accumulate_grads`
+/// returns, this node's slice of the flat gradient is FINAL and may hit
+/// the wire while `input_grad` (and every upstream node) still
+/// computes.
+pub(crate) trait Layer {
+    /// Node name (for diagnostics; matches the
+    /// [`ParamSet::layer_ranges`] prefix).
+    fn name(&self) -> &str;
+
+    /// Contiguous range of the flat parameter/gradient vector this
+    /// node owns.
+    fn param_range(&self) -> Range<usize>;
+
+    /// Consume the upstream activation (`input`; the raw model input
+    /// for the first node) and produce this node's output activation
+    /// plus its backward tape.
+    fn forward(&self, params: &ParamSet, input: &[f32],
+               arena: &mut Arena) -> (Vec<f32>, Tape);
+
+    /// First backward half: accumulate d(loss)/d(own params) into
+    /// `grads[param_range]` from the downstream gradient `dz`.
+    fn accumulate_grads(&self, params: &ParamSet, input: &[f32],
+                        tape: &Tape, dz: &[f32], grads: &mut [f32],
+                        arena: &mut Arena);
+
+    /// Second backward half: the gradient flowing to the upstream node
+    /// (`None` for a node with no trainable upstream), consuming `dz`.
+    fn input_grad(&self, params: &ParamSet, input: &[f32], tape: &Tape,
+                  dz: Vec<f32>, arena: &mut Arena) -> Option<Vec<f32>>;
+
+    /// Full backward: both halves, no emission point. The DAG calls
+    /// the halves separately so the bucket launch can sit in between.
+    fn backward(&self, params: &ParamSet, input: &[f32], tape: &Tape,
+                dz: Vec<f32>, grads: &mut [f32], arena: &mut Arena)
+        -> Option<Vec<f32>> {
+        self.accumulate_grads(params, input, tape, &dz, grads, arena);
+        self.input_grad(params, input, tape, dz, arena)
+    }
+}
+
+/// The model as an explicit chain of [`Layer`] nodes (a linear DAG:
+/// node i feeds node i+1). Forward runs in topological order; backward
+/// in reverse, emitting [`BucketReady`] per node.
+pub(crate) struct LayerDag {
+    nodes: Vec<Box<dyn Layer + Send + Sync>>,
+    batch: usize,
+    classes: usize,
+}
+
+impl LayerDag {
+    /// Forward chain; returns per-node output activations and tapes
+    /// (acts.last() = logits).
+    fn forward(&self, params: &ParamSet, x: &[f32], arena: &mut Arena)
+        -> (Vec<Vec<f32>>, Vec<Tape>) {
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.nodes.len());
+        let mut tapes: Vec<Tape> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let input: &[f32] = match acts.last() {
+                Some(a) => a,
+                None => x,
+            };
+            let (out, tape) = node.forward(params, input, arena);
+            acts.push(out);
+            tapes.push(tape);
+        }
+        (acts, tapes)
+    }
+
+    /// Loss + flat gradient, emitting one [`BucketReady`] per node in
+    /// reverse topological order, each fired the moment that node's
+    /// gradient slice is final.
+    fn grad(&self, params: &ParamSet, x: &[f32], y: &[i32],
+            arena: &mut Arena, sink: &mut dyn GradSink) -> GradOutput {
+        let (acts, tapes) = self.forward(params, x, arena);
+        let (loss, mut dz) = softmax_xent_grad(
+            acts.last().unwrap(), y, self.batch, self.classes);
+        let mut grads = grad_buffer(params.num_params());
+        for i in (0..self.nodes.len()).rev() {
+            let node = &self.nodes[i];
+            let input: &[f32] = if i == 0 { x } else { &acts[i - 1] };
+            node.accumulate_grads(params, input, &tapes[i], &dz,
+                                  &mut grads, arena);
+            sink.bucket_ready(
+                BucketReady { layer: i, param_range: node.param_range() },
+                &grads);
+            match node.input_grad(params, input, &tapes[i],
+                                  std::mem::take(&mut dz), arena) {
+                Some(d) => dz = d,
+                None => break,
+            }
+        }
+        arena.put(dz);
+        for tape in tapes {
+            tape.recycle(arena);
+        }
+        for act in acts {
+            arena.put(act);
+        }
+        GradOutput { loss, grads }
+    }
+
+    /// Forward-only logits (caller owns the returned buffer; interior
+    /// activations and tapes are recycled).
+    fn logits(&self, params: &ParamSet, x: &[f32], arena: &mut Arena)
+        -> Vec<f32> {
+        let (mut acts, tapes) = self.forward(params, x, arena);
+        let out = acts.pop().unwrap();
+        for tape in tapes {
+            tape.recycle(arena);
+        }
+        for act in acts {
+            arena.put(act);
+        }
+        out
+    }
+}
+
+/// Fully-connected node: `z = input @ w + b`, optional tanh. Serves
+/// both the MLP's `fc{i}` layers and the LSTM's linear head.
+struct DenseLayer {
+    name: String,
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    /// ParamSet view indices (declaration order: bias, then weight).
+    bias_view: usize,
+    w_view: usize,
+    /// Flat range covering bias + weight (contiguous by layout).
+    range: Range<usize>,
+    /// Apply tanh to the output (hidden MLP layers; logits layers are
+    /// linear).
+    tanh: bool,
+    /// The upstream node applied tanh, so the emitted input gradient
+    /// must include tanh' — computed here, consumer side, preserving
+    /// the monolithic op order bit for bit.
+    input_tanh: bool,
+    /// No trainable upstream: skip the input-gradient matmul entirely.
+    first: bool,
+}
+
+impl Layer for DenseLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        self.range.clone()
+    }
+
+    fn forward(&self, params: &ParamSet, input: &[f32],
+               arena: &mut Arena) -> (Vec<f32>, Tape) {
+        let (b, m, n) = (self.batch, self.in_dim, self.out_dim);
+        let bias = params.slice(self.bias_view);
+        let w = params.slice(self.w_view);
+        let mut z = arena.take_zeroed(b * n);
+        for row in 0..b {
+            z[row * n..(row + 1) * n].copy_from_slice(bias);
+        }
+        matmul_acc(input, w, &mut z, b, m, n);
+        if self.tanh {
+            for v in &mut z {
+                *v = v.tanh();
+            }
+        }
+        (z, Tape::None)
+    }
+
+    fn accumulate_grads(&self, _params: &ParamSet, input: &[f32],
+                        _tape: &Tape, dz: &[f32], grads: &mut [f32],
+                        _arena: &mut Arena) {
+        let (b, m, n) = (self.batch, self.in_dim, self.out_dim);
+        let own = &mut grads[self.range.clone()];
+        let (db, dw) = own.split_at_mut(n);
+        matmul_tn_acc(input, dz, dw, m, b, n);
+        for row in 0..b {
+            for (j, dbj) in db.iter_mut().enumerate() {
+                *dbj += dz[row * n + j];
+            }
+        }
+    }
+
+    fn input_grad(&self, params: &ParamSet, input: &[f32], _tape: &Tape,
+                  dz: Vec<f32>, arena: &mut Arena) -> Option<Vec<f32>> {
+        if self.first {
+            arena.put(dz);
+            return None;
+        }
+        let (b, m, n) = (self.batch, self.in_dim, self.out_dim);
+        let w = params.slice(self.w_view);
+        let mut dh = arena.take_zeroed(b * m);
+        matmul_nt_acc(&dz, w, &mut dh, b, n, m);
+        if self.input_tanh {
+            for (d, &h) in dh.iter_mut().zip(input) {
+                *d *= 1.0 - h * h;
+            }
+        }
+        arena.put(dz);
+        Some(dh)
+    }
+}
+
+/// The recurrent LSTM cell: consumes the whole `[B, T, F]` input,
+/// produces the final hidden state `h_T` `[B, H]`. Backward runs the
+/// entire BPTT loop inside `accumulate_grads` (the cell is the first
+/// node, so there is no upstream gradient to split off).
+struct LstmCellLayer {
+    batch: usize,
+    seq_len: usize,
+    features: usize,
+    hidden: usize,
+    /// ParamSet view indices: lstm_b, lstm_wh, lstm_wx.
+    bias_view: usize,
+    wh_view: usize,
+    wx_view: usize,
+    range: Range<usize>,
+}
+
+impl Layer for LstmCellLayer {
+    fn name(&self) -> &str {
+        "lstm"
+    }
+
+    fn param_range(&self) -> Range<usize> {
+        self.range.clone()
+    }
+
+    fn forward(&self, params: &ParamSet, input: &[f32],
+               arena: &mut Arena) -> (Vec<f32>, Tape) {
+        let (b, h, ff) = (self.batch, self.hidden, self.features);
+        let bias = params.slice(self.bias_view);
+        let wh = params.slice(self.wh_view);
+        let wx = params.slice(self.wx_view);
+
+        let mut hs = Vec::with_capacity(self.seq_len + 1);
+        let mut cs = Vec::with_capacity(self.seq_len + 1);
+        hs.push(arena.take_zeroed(b * h));
+        cs.push(arena.take_zeroed(b * h));
+        let mut gates = Vec::with_capacity(self.seq_len);
+        let mut xt = arena.take_zeroed(b * ff);
+        for t in 0..self.seq_len {
+            step_input(input, t, b, self.seq_len, ff, &mut xt);
+            let mut z = arena.take_zeroed(b * 4 * h);
+            for row in 0..b {
+                z[row * 4 * h..(row + 1) * 4 * h].copy_from_slice(bias);
+            }
+            matmul_acc(&xt, wx, &mut z, b, ff, 4 * h);
+            matmul_acc(&hs[t], wh, &mut z, b, h, 4 * h);
+
+            let mut gi = arena.take_zeroed(b * h);
+            let mut gf = arena.take_zeroed(b * h);
+            let mut gg = arena.take_zeroed(b * h);
+            let mut go = arena.take_zeroed(b * h);
+            let mut c_new = arena.take_zeroed(b * h);
+            let mut h_new = arena.take_zeroed(b * h);
+            let c_prev = &cs[t];
+            for row in 0..b {
+                for j in 0..h {
+                    let zrow = &z[row * 4 * h..(row + 1) * 4 * h];
+                    let k = row * h + j;
+                    let i = sigmoid(zrow[j]);
+                    let f = sigmoid(zrow[h + j] + FORGET_BIAS);
+                    let g = zrow[2 * h + j].tanh();
+                    let o = sigmoid(zrow[3 * h + j]);
+                    let c = f * c_prev[k] + i * g;
+                    gi[k] = i;
+                    gf[k] = f;
+                    gg[k] = g;
+                    go[k] = o;
+                    c_new[k] = c;
+                    h_new[k] = o * c.tanh();
+                }
+            }
+            arena.put(z);
+            gates.push([gi, gf, gg, go]);
+            hs.push(h_new);
+            cs.push(c_new);
+        }
+        arena.put(xt);
+        let out = hs.pop().unwrap();
+        (out, Tape::Lstm { hs, cs, gates })
+    }
+
+    fn accumulate_grads(&self, params: &ParamSet, input: &[f32],
+                        tape: &Tape, dz: &[f32], grads: &mut [f32],
+                        arena: &mut Arena) {
+        let Tape::Lstm { hs, cs, gates } = tape else {
+            unreachable!("LSTM cell backward needs its recurrence tape")
+        };
+        let (b, h, ff) = (self.batch, self.hidden, self.features);
+        let wh = params.slice(self.wh_view);
+
+        // own gradient slices: bias [4H], wh [H,4H], wx [F,4H] — the
+        // declaration-order layout inside this node's range
+        let own = &mut grads[self.range.clone()];
+        let (db, rest) = own.split_at_mut(4 * h);
+        let (dwh, dwx) = rest.split_at_mut(h * 4 * h);
+
+        // dh flowing into the last hidden state (from the head)
+        let mut dh = arena.take_zeroed(b * h);
+        dh.copy_from_slice(dz);
+        let mut dc = arena.take_zeroed(b * h);
+        let mut xt = arena.take_zeroed(b * ff);
+        let mut dzg = arena.take_zeroed(b * 4 * h);
+        for t in (0..self.seq_len).rev() {
+            let [gi, gf, gg, go] = &gates[t];
+            let c_new = &cs[t + 1];
+            let c_prev = &cs[t];
+            for k in 0..b * h {
+                let tc = c_new[k].tanh();
+                let dck = dc[k] + dh[k] * go[k] * (1.0 - tc * tc);
+                let dok = dh[k] * tc;
+                let row = k / h;
+                let j = k % h;
+                let zrow = &mut dzg[row * 4 * h..(row + 1) * 4 * h];
+                zrow[j] = dck * gg[k] * gi[k] * (1.0 - gi[k]);
+                zrow[h + j] = dck * c_prev[k] * gf[k] * (1.0 - gf[k]);
+                zrow[2 * h + j] = dck * gi[k] * (1.0 - gg[k] * gg[k]);
+                zrow[3 * h + j] = dok * go[k] * (1.0 - go[k]);
+                // carry to c_{t-1}; dh_{t-1} is recomputed below
+                dc[k] = dck * gf[k];
+            }
+            step_input(input, t, b, self.seq_len, ff, &mut xt);
+            matmul_tn_acc(&xt, &dzg, dwx, ff, b, 4 * h);
+            matmul_tn_acc(&hs[t], &dzg, dwh, h, b, 4 * h);
+            for row in 0..b {
+                for (j, dbj) in db.iter_mut().enumerate() {
+                    *dbj += dzg[row * 4 * h + j];
+                }
+            }
+            for v in dh.iter_mut() {
+                *v = 0.0;
+            }
+            matmul_nt_acc(&dzg, wh, &mut dh, b, 4 * h, h);
+        }
+        arena.put(dh);
+        arena.put(dc);
+        arena.put(xt);
+        arena.put(dzg);
+    }
+
+    fn input_grad(&self, _params: &ParamSet, _input: &[f32],
+                  _tape: &Tape, dz: Vec<f32>, arena: &mut Arena)
+        -> Option<Vec<f32>> {
+        // first node: gradients w.r.t. the raw input are not needed
+        arena.put(dz);
+        None
+    }
+}
+
 // ---------------------------------------------------------------------------
 // model construction
 // ---------------------------------------------------------------------------
+
+/// (offset, len) of each manifest parameter in the flat vector, in
+/// declaration order (the [`ParamSet`] layout).
+fn view_layout(params: &[(String, Vec<usize>)]) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(params.len());
+    let mut off = 0usize;
+    for (_, shape) in params {
+        let len: usize = shape.iter().product();
+        out.push((off, len));
+        off += len;
+    }
+    out
+}
 
 impl NativeModel {
     /// Build from a manifest entry, validating that the parameter table
     /// matches what this backend can execute.
     pub(crate) fn from_meta(meta: &ModelMeta)
         -> Result<NativeModel, RuntimeError> {
-        match meta.model.as_str() {
-            "mlp" => MlpNet::from_meta(meta).map(NativeModel::Mlp),
-            "lstm" => LstmNet::from_meta(meta).map(NativeModel::Lstm),
-            other => Err(RuntimeError::Unsupported(format!(
-                "model family '{other}' needs the PJRT backend \
-                 (native backend supports mlp and lstm)"
-            ))),
+        let dag = match meta.model.as_str() {
+            "mlp" => MlpNet::from_meta(meta)?.into_dag(meta),
+            "lstm" => LstmNet::from_meta(meta)?.into_dag(meta),
+            other => {
+                return Err(RuntimeError::Unsupported(format!(
+                    "model family '{other}' needs the PJRT backend \
+                     (native backend supports mlp and lstm)"
+                )))
+            }
+        };
+        Ok(NativeModel {
+            dag,
+            arenas: Mutex::new(Vec::new()),
+            reuse_scratch: AtomicBool::new(true),
+        })
+    }
+
+    /// Run `f` on a pooled arena (or a throwaway one when reuse is
+    /// off). The pool holds one arena per concurrent caller, so
+    /// threads never contend on buffer contents.
+    fn with_arena<R>(&self, f: impl FnOnce(&mut Arena) -> R) -> R {
+        let reuse = self.reuse_scratch.load(Ordering::Relaxed);
+        let mut arena = if reuse {
+            self.arenas.lock().unwrap().pop().unwrap_or_else(Arena::new)
+        } else {
+            Arena::new()
+        };
+        let out = f(&mut arena);
+        if reuse {
+            self.arenas.lock().unwrap().push(arena);
+        }
+        out
+    }
+
+    /// Toggle scratch-buffer pooling (on by default). Turning it off
+    /// drops the pool — the `runtime_microbench` baseline mode.
+    pub(crate) fn set_scratch_reuse(&self, on: bool) {
+        self.reuse_scratch.store(on, Ordering::Relaxed);
+        if !on {
+            self.arenas.lock().unwrap().clear();
         }
     }
 
     pub(crate) fn grad_step(&self, params: &ParamSet, x: &[f32],
                             y: &[i32]) -> Result<GradOutput, RuntimeError> {
-        match self {
-            NativeModel::Mlp(m) => Ok(m.grad(params, x, y)),
-            NativeModel::Lstm(m) => Ok(m.grad(params, x, y)),
-        }
+        self.grad_step_overlapped(params, x, y, &mut ())
+    }
+
+    /// [`NativeModel::grad_step`] with per-layer [`BucketReady`]
+    /// emission: `sink` fires in reverse topological order, each event
+    /// as soon as that layer's gradient slice is final.
+    pub(crate) fn grad_step_overlapped(&self, params: &ParamSet,
+                                       x: &[f32], y: &[i32],
+                                       sink: &mut dyn GradSink)
+        -> Result<GradOutput, RuntimeError> {
+        Ok(self.with_arena(|arena| {
+            self.dag.grad(params, x, y, arena, sink)
+        }))
     }
 
     pub(crate) fn eval_step(&self, params: &ParamSet, x: &[f32],
                             y: &[i32]) -> Result<(f32, f32), RuntimeError> {
-        let logits = self.logits(params, x);
         let (batch, classes) = self.out_shape();
-        let (loss, _) = softmax_xent_grad(&logits, y, batch, classes);
-        Ok((loss, argmax_correct(&logits, y, batch, classes)))
+        Ok(self.with_arena(|arena| {
+            let logits = self.dag.logits(params, x, arena);
+            let (loss, _) = softmax_xent_grad(&logits, y, batch, classes);
+            let ncorrect = argmax_correct(&logits, y, batch, classes);
+            arena.put(logits);
+            (loss, ncorrect)
+        }))
     }
 
     pub(crate) fn predict(&self, params: &ParamSet, x: &[f32])
         -> Result<Vec<f32>, RuntimeError> {
-        Ok(self.logits(params, x))
-    }
-
-    fn logits(&self, params: &ParamSet, x: &[f32]) -> Vec<f32> {
-        match self {
-            NativeModel::Mlp(m) => m.forward(params, x).pop().unwrap(),
-            NativeModel::Lstm(m) => m.forward(params, x).logits,
-        }
+        Ok(self.with_arena(|arena| self.dag.logits(params, x, arena)))
     }
 
     fn out_shape(&self) -> (usize, usize) {
-        match self {
-            NativeModel::Mlp(m) => (m.batch, *m.dims.last().unwrap()),
-            NativeModel::Lstm(m) => (m.batch, m.classes),
-        }
+        (self.dag.batch, self.dag.classes)
     }
 }
 
@@ -302,6 +813,43 @@ impl MlpNet {
         Ok(MlpNet { batch: meta.batch, dims })
     }
 
+    /// One `DenseLayer` node per fc pair (tanh on hidden layers).
+    fn into_dag(self, meta: &ModelMeta) -> LayerDag {
+        let views = view_layout(&meta.params);
+        let n_layers = self.dims.len() - 1;
+        let mut nodes: Vec<Box<dyn Layer + Send + Sync>> =
+            Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let (boff, blen) = views[2 * li];
+            let (woff, wlen) = views[2 * li + 1];
+            debug_assert_eq!(boff + blen, woff,
+                             "bias must precede its weight contiguously");
+            nodes.push(Box::new(DenseLayer {
+                name: format!("fc{li}"),
+                batch: self.batch,
+                in_dim: self.dims[li],
+                out_dim: self.dims[li + 1],
+                bias_view: 2 * li,
+                w_view: 2 * li + 1,
+                range: boff..woff + wlen,
+                tanh: li < n_layers - 1,
+                input_tanh: li > 0,
+                first: li == 0,
+            }));
+        }
+        LayerDag {
+            nodes,
+            batch: self.batch,
+            classes: *self.dims.last().unwrap(),
+        }
+    }
+}
+
+/// Monolithic MLP reference: the pre-DAG single-function forward and
+/// backward, kept as the oracle for the monolith-vs-DAG bitwise
+/// equality test.
+#[cfg(test)]
+impl MlpNet {
     /// Forward pass; returns activations per layer (acts[0] = flat x,
     /// acts.last() = logits; hidden activations are post-tanh).
     fn forward(&self, params: &ParamSet, x: &[f32]) -> Vec<Vec<f32>> {
@@ -368,7 +916,9 @@ impl MlpNet {
 // LSTM
 // ---------------------------------------------------------------------------
 
-/// Forward-pass state kept for backprop-through-time.
+/// Forward-pass state kept for backprop-through-time (monolithic
+/// reference path).
+#[cfg(test)]
 struct LstmForward {
     logits: Vec<f32>,
     /// h[t] for t = 0..=T (h[0] is the zero initial state), each [B, H].
@@ -405,16 +955,47 @@ impl LstmNet {
         })
     }
 
-    /// Copy time-step `t` of `[B, T, F]` input into a `[B, F]` buffer.
-    fn step_input(&self, x: &[f32], t: usize, out: &mut [f32]) {
-        let (tt, ff) = (self.seq_len, self.features);
-        for bi in 0..self.batch {
-            let src = bi * tt * ff + t * ff;
-            out[bi * ff..(bi + 1) * ff]
-                .copy_from_slice(&x[src..src + ff]);
+    /// Two nodes: the recurrent cell (views 0-2), then the linear head
+    /// (views 3-4).
+    fn into_dag(self, meta: &ModelMeta) -> LayerDag {
+        let views = view_layout(&meta.params);
+        let cell_end = views[2].0 + views[2].1;
+        let nodes: Vec<Box<dyn Layer + Send + Sync>> = vec![
+            Box::new(LstmCellLayer {
+                batch: self.batch,
+                seq_len: self.seq_len,
+                features: self.features,
+                hidden: self.hidden,
+                bias_view: 0,
+                wh_view: 1,
+                wx_view: 2,
+                range: 0..cell_end,
+            }),
+            Box::new(DenseLayer {
+                name: "out".into(),
+                batch: self.batch,
+                in_dim: self.hidden,
+                out_dim: self.classes,
+                bias_view: 3,
+                w_view: 4,
+                range: views[3].0..views[4].0 + views[4].1,
+                tanh: false,
+                input_tanh: false,
+                first: false,
+            }),
+        ];
+        LayerDag {
+            nodes,
+            batch: self.batch,
+            classes: self.classes,
         }
     }
+}
 
+/// Monolithic LSTM reference (pre-DAG), kept as the oracle for the
+/// monolith-vs-DAG bitwise equality test.
+#[cfg(test)]
+impl LstmNet {
     fn forward(&self, params: &ParamSet, x: &[f32]) -> LstmForward {
         let (b, h, ff) = (self.batch, self.hidden, self.features);
         let bias = params.slice(0);
@@ -428,7 +1009,7 @@ impl LstmNet {
         let mut gates = Vec::with_capacity(self.seq_len);
         let mut xt = vec![0.0f32; b * ff];
         for t in 0..self.seq_len {
-            self.step_input(x, t, &mut xt);
+            step_input(x, t, b, self.seq_len, ff, &mut xt);
             let mut z = vec![0.0f32; b * 4 * h];
             for row in 0..b {
                 z[row * 4 * h..(row + 1) * 4 * h].copy_from_slice(bias);
@@ -526,7 +1107,7 @@ impl LstmNet {
                 // carry to c_{t-1}; dh_{t-1} is recomputed below
                 dc[k] = dck * gf[k];
             }
-            self.step_input(x, t, &mut xt);
+            step_input(x, t, b, self.seq_len, ff, &mut xt);
             // lstm_wx [F, 4H] at view 2, lstm_wh [H, 4H] at view 1,
             // lstm_b [4H] at view 0
             {
@@ -563,6 +1144,19 @@ impl LstmNet {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    fn test_inputs(meta: &ModelMeta, seed: u64)
+        -> (ParamSet, Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let params = ParamSet::glorot_init(&meta.params, &mut rng);
+        let x: Vec<f32> = (0..meta.batch * meta.seq_len * meta.features)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let y: Vec<i32> = (0..meta.batch)
+            .map(|_| rng.usize_below(meta.classes) as i32)
+            .collect();
+        (params, x, y)
+    }
 
     fn fd_check(meta: &ModelMeta, model: &NativeModel, probes: usize) {
         // Directional finite difference in f32: the whole-gradient
@@ -624,6 +1218,192 @@ mod tests {
         let meta = meta_for_key("lstm_b10").unwrap();
         let model = NativeModel::from_meta(&meta).unwrap();
         fd_check(&meta, &model, 3);
+    }
+
+    #[test]
+    fn per_layer_gradient_matches_finite_difference() {
+        // Directional FD restricted to ONE layer's parameter range at a
+        // time: validates each DAG node's accumulate_grads in isolation
+        // (a whole-model probe can hide one layer's error behind the
+        // others' mass).
+        for key in ["mlp_b10", "lstm_b10"] {
+            let meta = meta_for_key(key).unwrap();
+            let model = NativeModel::from_meta(&meta).unwrap();
+            let (params, x, y) = test_inputs(&meta, 42);
+            let out = model.grad_step(&params, &x, &y).unwrap();
+            let mut rng = Rng::new(171);
+            for (name, range) in params.layer_ranges() {
+                let mut dir = vec![0.0f32; params.num_params()];
+                for v in &mut dir[range.clone()] {
+                    *v = rng.normal_f32(0.0, 1.0);
+                }
+                let eps = 1e-3f32;
+                let mut plus = params.clone();
+                plus.axpy(eps, &dir);
+                let mut minus = params.clone();
+                minus.axpy(-eps, &dir);
+                let (lp, _) = model.eval_step(&plus, &x, &y).unwrap();
+                let (lm, _) = model.eval_step(&minus, &x, &y).unwrap();
+                let fd = (lp - lm) / (2.0 * eps);
+                // dir is zero outside the layer range, so the full
+                // projection IS the per-layer projection
+                let analytic: f32 = out
+                    .grads
+                    .iter()
+                    .zip(&dir)
+                    .map(|(g, d)| g * d)
+                    .sum();
+                let denom = fd.abs().max(analytic.abs()).max(1e-3);
+                assert!(
+                    (fd - analytic).abs() / denom < 0.05,
+                    "{key} layer {name}: fd={fd} analytic={analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dag_gradients_match_monolith_bitwise() {
+        // The DAG is a pure restructuring of the monolithic backward:
+        // identical op sequence, so loss AND every gradient element
+        // must match bit for bit.
+        let meta = meta_for_key("mlp_b10").unwrap();
+        let model = NativeModel::from_meta(&meta).unwrap();
+        let mono = MlpNet::from_meta(&meta).unwrap();
+        let (params, x, y) = test_inputs(&meta, 1234);
+        let dag_out = model.grad_step(&params, &x, &y).unwrap();
+        let mono_out = mono.grad(&params, &x, &y);
+        assert_eq!(dag_out.loss.to_bits(), mono_out.loss.to_bits());
+        assert!(dag_out
+            .grads
+            .iter()
+            .zip(&mono_out.grads)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "mlp DAG gradient diverged from the monolith");
+
+        let meta = meta_for_key("lstm_b10").unwrap();
+        let model = NativeModel::from_meta(&meta).unwrap();
+        let mono = LstmNet::from_meta(&meta).unwrap();
+        let (params, x, y) = test_inputs(&meta, 5678);
+        let dag_out = model.grad_step(&params, &x, &y).unwrap();
+        let mono_out = mono.grad(&params, &x, &y);
+        assert_eq!(dag_out.loss.to_bits(), mono_out.loss.to_bits());
+        assert!(dag_out
+            .grads
+            .iter()
+            .zip(&mono_out.grads)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "lstm DAG gradient diverged from the monolith");
+    }
+
+    /// Sink recording every emission plus a snapshot of the emitted
+    /// slice at emission time.
+    struct RecordingSink {
+        events: Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
+    }
+
+    impl GradSink for RecordingSink {
+        fn bucket_ready(&mut self, ready: BucketReady, grads: &[f32]) {
+            let snap = grads[ready.param_range.clone()].to_vec();
+            self.events.push((ready.layer, ready.param_range, snap));
+        }
+    }
+
+    #[test]
+    fn bucket_ready_fires_reverse_order_with_final_slices() {
+        // Emission order must be the reverse of layer_ranges (output
+        // layer first), and each emitted slice must already hold its
+        // FINAL value — that is the entire basis of the overlap.
+        for key in ["mlp_b10", "lstm_b10"] {
+            let meta = meta_for_key(key).unwrap();
+            let model = NativeModel::from_meta(&meta).unwrap();
+            let (params, x, y) = test_inputs(&meta, 99);
+            let mut sink = RecordingSink { events: Vec::new() };
+            let out = model
+                .grad_step_overlapped(&params, &x, &y, &mut sink)
+                .unwrap();
+            let ranges = params.layer_ranges();
+            assert_eq!(sink.events.len(), ranges.len(), "{key}");
+            for (ev, (name, range)) in
+                sink.events.iter().zip(ranges.iter().rev())
+            {
+                assert_eq!(&ev.1, range, "{key} layer {name}");
+                assert!(ev.2
+                    .iter()
+                    .zip(&out.grads[range.clone()])
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{key} layer {name}: slice not final at \
+                         emission");
+            }
+            for w in sink.events.windows(2) {
+                assert!(w[0].0 > w[1].0,
+                        "{key}: layer ids must descend");
+            }
+        }
+    }
+
+    #[test]
+    fn layer_backward_composes_the_two_halves() {
+        // The provided Layer::backward must equal accumulate_grads
+        // followed by input_grad — the DAG relies on that split being a
+        // pure refactoring of the combined step.
+        let meta = meta_for_key("mlp_b10").unwrap();
+        let dag = MlpNet::from_meta(&meta).unwrap().into_dag(&meta);
+        let (params, x, y) = test_inputs(&meta, 11);
+        let mut arena = Arena::new();
+        let (acts, tapes) = dag.forward(&params, &x, &mut arena);
+        let (_, dz) = softmax_xent_grad(acts.last().unwrap(), &y,
+                                        meta.batch, meta.classes);
+        let last = dag.nodes.len() - 1;
+        let node = &dag.nodes[last];
+        let input = &acts[last - 1];
+        let mut split = grad_buffer(params.num_params());
+        node.accumulate_grads(&params, input, &tapes[last], &dz,
+                              &mut split, &mut arena);
+        let d_split = node
+            .input_grad(&params, input, &tapes[last], dz.clone(),
+                        &mut arena)
+            .unwrap();
+        let mut combined = grad_buffer(params.num_params());
+        let d_combined = node
+            .backward(&params, input, &tapes[last], dz, &mut combined,
+                      &mut arena)
+            .unwrap();
+        assert!(split
+            .iter()
+            .zip(&combined)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(d_split
+            .iter()
+            .zip(&d_combined)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_change_results() {
+        // Cold arena, warm arena, and reuse-off must all produce
+        // bitwise-identical gradients (take_zeroed guarantees buffer
+        // history cannot leak into values).
+        for key in ["mlp_b10", "lstm_b10"] {
+            let meta = meta_for_key(key).unwrap();
+            let model = NativeModel::from_meta(&meta).unwrap();
+            let (params, x, y) = test_inputs(&meta, 31);
+            let cold = model.grad_step(&params, &x, &y).unwrap();
+            let warm = model.grad_step(&params, &x, &y).unwrap();
+            model.set_scratch_reuse(false);
+            let fresh = model.grad_step(&params, &x, &y).unwrap();
+            model.set_scratch_reuse(true);
+            for other in [&warm, &fresh] {
+                assert_eq!(cold.loss.to_bits(), other.loss.to_bits(),
+                           "{key}");
+                assert!(cold
+                    .grads
+                    .iter()
+                    .zip(&other.grads)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{key}: arena reuse changed the gradient");
+            }
+        }
     }
 
     #[test]

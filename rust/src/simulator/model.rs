@@ -155,6 +155,39 @@ impl CostModel {
         steps * (self.latency + chunk_bytes / self.bandwidth_bytes_per_s)
     }
 
+    /// Wall time from gradient-start to fully-reduced gradients when
+    /// the round is split into `buckets` equal buckets, each launched
+    /// as backprop produces it (`Algo::buckets`; DESIGN.md §Layer DAG
+    /// & bucketed overlap).
+    ///
+    /// Bucket i's collective cannot start before its share of the
+    /// backward pass has run (`grad * (i+1)/B`), and the wire is
+    /// serial, so each bucket starts at `max(wire-so-far, ready)` and
+    /// costs a ring all-reduce of a `1/B`-size message. The monolithic
+    /// schedule is `grad + ring_allreduce_time(n)`; with one bucket the
+    /// two are identical, and bucketing wins exactly when the
+    /// per-bucket compute tail (`grad/B`) outweighs the extra lockstep
+    /// latency (`2(n-1) * latency`) each additional bucket adds.
+    pub fn bucketed_allreduce_time(&self, n: usize, batch: usize,
+                                   buckets: usize) -> f64 {
+        let grad = self.grad_time_nominal(batch);
+        if n <= 1 {
+            return grad;
+        }
+        let b = buckets.max(1);
+        let steps = 2.0 * (n as f64 - 1.0);
+        let per_bucket = steps
+            * (self.latency
+                + self.msg_bytes * self.wire_ratio / b as f64 / n as f64
+                    / self.bandwidth_bytes_per_s);
+        let mut wire = 0.0f64;
+        for i in 0..b {
+            let ready = grad * (i + 1) as f64 / b as f64;
+            wire = wire.max(ready) + per_bucket;
+        }
+        wire
+    }
+
     /// Wall time of one **hierarchical** all-reduce over `n` ranks in
     /// `groups` groups of `m = ceil(n/groups)` (matching the collective
     /// layer's ring → tree → ring schedule):
@@ -316,6 +349,34 @@ mod tests {
         let bw_only = CostModel { latency: 0.0, ..c };
         let cap = 2.0 * bw_only.msg_bytes / bw_only.bandwidth_bytes_per_s;
         assert!(bw_only.ring_allreduce_time(64) < cap + 1e-12);
+    }
+
+    #[test]
+    fn bucketed_overlap_beats_serial_compute_then_reduce() {
+        // The round's wall clock: bucketed (overlapped) vs monolithic
+        // (full backprop, then one standalone reduce). This inequality
+        // at n >= 8 is also the CI bench-smoke overlap gate.
+        let c = CostModel::cluster(3_023);
+        let serial = |n: usize| {
+            c.grad_time_nominal(100) + c.ring_allreduce_time(n)
+        };
+        for n in [8usize, 16, 32, 64] {
+            let bucketed = c.bucketed_allreduce_time(n, 100, 4);
+            assert!(
+                bucketed < serial(n),
+                "n={n}: bucketed {bucketed:.3e} !< serial {:.3e}",
+                serial(n)
+            );
+        }
+        // one bucket IS the serial schedule (identical latency count)
+        let one = c.bucketed_allreduce_time(8, 100, 1);
+        assert!((one - serial(8)).abs() < 1e-15);
+        // over-bucketing drowns the overlap in lockstep latency terms
+        assert!(c.bucketed_allreduce_time(8, 100, 1000)
+                    > c.bucketed_allreduce_time(8, 100, 4));
+        // singleton world: compute only, no wire at all
+        assert_eq!(c.bucketed_allreduce_time(1, 100, 4),
+                   c.grad_time_nominal(100));
     }
 
     #[test]

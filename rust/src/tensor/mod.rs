@@ -159,6 +159,35 @@ impl ParamSet {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
     }
 
+    /// Stable per-layer slices of the flat buffer: consecutive views
+    /// whose names share a layer prefix (the part before the last `_`,
+    /// e.g. `fc0_b`/`fc0_w` -> `fc0`) are grouped into one contiguous
+    /// range. Because views are declared in sorted-name order and a
+    /// layer's params sort together, each layer is one contiguous slice
+    /// — which is what lets all-reduce buckets map 1:1 onto layers
+    /// without changing the flat layout or the checkpoint format.
+    pub fn layer_ranges(&self) -> Vec<(String, std::ops::Range<usize>)> {
+        let prefix = |name: &str| {
+            match name.rfind('_') {
+                Some(i) => name[..i].to_string(),
+                None => name.to_string(),
+            }
+        };
+        let mut out: Vec<(String, std::ops::Range<usize>)> = Vec::new();
+        for v in &self.views {
+            let p = prefix(&v.name);
+            match out.last_mut() {
+                Some((name, range)) if *name == p => {
+                    debug_assert_eq!(range.end, v.offset,
+                                     "layer views must be contiguous");
+                    range.end = v.offset + v.len;
+                }
+                _ => out.push((p, v.offset..v.offset + v.len)),
+            }
+        }
+        out
+    }
+
     /// Checkpoint serialization: name/shape table + raw f32 payload.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         use std::io::Write;
@@ -290,6 +319,53 @@ mod tests {
         let g = vec![2.0f32; ps.num_params()];
         ps.axpy(-0.5, &g);
         assert!(ps.flat().iter().all(|&x| x == -1.0));
+    }
+
+    #[test]
+    fn layer_ranges_group_consecutive_prefixes() {
+        // lstm layer = views 0..3 (b, wh, wx), out layer = views 3..5
+        let ps = ParamSet::zeros(&specs());
+        let ranges = ps.layer_ranges();
+        assert_eq!(ranges.len(), 2);
+        assert_eq!(ranges[0], ("lstm".to_string(), 0..80 + 1600 + 1280));
+        assert_eq!(ranges[1], ("out".to_string(), 2960..2960 + 3 + 60));
+        // ranges partition the flat buffer
+        assert_eq!(ranges[0].1.end, ranges[1].1.start);
+        assert_eq!(ranges.last().unwrap().1.end, ps.num_params());
+    }
+
+    #[test]
+    fn layer_ranges_mlp_shape() {
+        let ps = ParamSet::zeros(&[
+            ("fc0_b".into(), vec![64]),
+            ("fc0_w".into(), vec![480, 64]),
+            ("fc1_b".into(), vec![32]),
+            ("fc1_w".into(), vec![64, 32]),
+            ("fc2_b".into(), vec![3]),
+            ("fc2_w".into(), vec![32, 3]),
+        ]);
+        let ranges = ps.layer_ranges();
+        let names: Vec<&str> =
+            ranges.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["fc0", "fc1", "fc2"]);
+        let mut end = 0;
+        for (_, r) in &ranges {
+            assert_eq!(r.start, end);
+            end = r.end;
+        }
+        assert_eq!(end, ps.num_params());
+    }
+
+    #[test]
+    fn layer_ranges_underscore_free_names() {
+        let ps = ParamSet::zeros(&[
+            ("alpha".into(), vec![4]),
+            ("beta".into(), vec![2]),
+        ]);
+        let ranges = ps.layer_ranges();
+        assert_eq!(ranges.len(), 2);
+        assert_eq!(ranges[0], ("alpha".to_string(), 0..4));
+        assert_eq!(ranges[1], ("beta".to_string(), 4..6));
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! End-to-end tests of the bucketed, compute-overlapped all-reduce
+//! (ISSUE 6): with `Algo::buckets` the single per-round collective
+//! becomes one windowed collective per layer bucket, each launched
+//! mid-backprop as its layer's gradient lands, plus a tail bucket for
+//! the piggybacked loss + stop flag.
+//!
+//! Acceptance invariants:
+//! - bucketed training produces **bitwise-identical weights to the
+//!   monolithic path** under fp32 and fp16 (per-bucket windows reuse
+//!   the global chunk boundaries, so every fp16 packet holds the exact
+//!   same elements either way);
+//! - every rank still ends bitwise-identical under all three codecs
+//!   (fp32 / fp16 / top-k — top-k reshuffles its per-chunk selection
+//!   across bucket windows, so it only promises cross-rank identity);
+//! - the hierarchical (grouped) topology composes with buckets;
+//! - early stopping stays lockstep: the flag rides the tail bucket and
+//!   all ranks abandon the flagged round together.
+//!
+//! Runs on the native CPU backend — no artifacts needed.
+
+use mpi_learn::coordinator::callbacks::{Callback, CallbackSet, Control,
+                                        Observer, RoundInfo};
+use mpi_learn::coordinator::worker::RingWorker;
+use mpi_learn::coordinator::{Algo, Experiment, Mode};
+use mpi_learn::data::{generate_shard, DataSet, GeneratorConfig};
+use mpi_learn::mpi::{Codec, GroupLayout};
+use mpi_learn::runtime::Session;
+use mpi_learn::tensor::ParamSet;
+use mpi_learn::util::rng::Rng;
+
+fn make_datasets(n: usize, samples: usize) -> Vec<DataSet> {
+    let gen = GeneratorConfig { seed: 21, ..Default::default() };
+    let mut rng = Rng::new(3);
+    (0..n)
+        .map(|_| DataSet::from_shard(generate_shard(&gen, samples,
+                                                    &mut rng)))
+        .collect()
+}
+
+/// Rank-0 callback that requests a stop after a fixed update count —
+/// deterministic stand-in for EarlyStopping's validation trigger.
+struct StopAt(u64);
+
+impl Callback for StopAt {
+    fn on_round(&mut self, info: &RoundInfo<'_>, ctl: &mut Control) {
+        if info.update >= self.0 {
+            ctl.stop();
+        }
+    }
+}
+
+/// Drive `n` RingWorkers over the inproc transport and return every
+/// rank's (final weights, batches run). With `stop_at`, rank 0 runs a
+/// [`StopAt`] callback; other ranks always get `Observer::disabled()`.
+fn run_ring_world(model_key: &str, n: usize, buckets: bool,
+                  codec: Codec, layout: Option<GroupLayout>,
+                  epochs: u32, datasets: &[DataSet],
+                  stop_at: Option<u64>)
+    -> Vec<(ParamSet, u64)> {
+    let session = Session::native().unwrap();
+    let exes = session.executables(model_key).unwrap();
+    let algo = Algo {
+        mode: Mode::AllReduce,
+        batch_size: 10,
+        epochs,
+        compression: codec,
+        buckets,
+        ..Algo::default()
+    };
+    let init = exes.init_params(&mut Rng::new(7));
+    let world = mpi_learn::mpi::inproc_world(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                let ds = &datasets[rank];
+                let algo = &algo;
+                let exes = exes.clone();
+                let layout = layout.clone();
+                let init = if rank == 0 { Some(init.clone()) }
+                           else { None };
+                s.spawn(move || {
+                    let mut obs = match stop_at {
+                        Some(at) if rank == 0 => {
+                            let mut cbs = CallbackSet::new();
+                            cbs.push(Box::new(StopAt(at)));
+                            Observer::new(algo, None, cbs)
+                        }
+                        _ => Observer::disabled(),
+                    };
+                    let outcome =
+                        RingWorker::new(&comm, algo, &exes, ds,
+                                        100 + rank as u64, None)
+                            .with_groups(layout)
+                            .run(init, &mut obs)
+                            .unwrap();
+                    (outcome.weights, outcome.report.batches)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+fn weights_only(model_key: &str, n: usize, buckets: bool, codec: Codec,
+                layout: Option<GroupLayout>, datasets: &[DataSet])
+    -> Vec<ParamSet> {
+    run_ring_world(model_key, n, buckets, codec, layout, 2, datasets,
+                   None)
+        .into_iter()
+        .map(|(w, _)| w)
+        .collect()
+}
+
+/// ISSUE 6 acceptance: the bucketed all-reduce produces
+/// bitwise-identical replicated weights to the monolithic path under
+/// fp32 AND fp16 — every bucket's wire packets reuse the global chunk
+/// boundaries, so the codec sees the exact same element groups.
+#[test]
+fn bucketed_matches_monolithic_bitwise_under_fp32_and_fp16() {
+    for model in ["mlp_b10", "lstm_b10"] {
+        let datasets = make_datasets(4, 80);
+        for codec in [Codec::Fp32, Codec::Fp16] {
+            let mono =
+                weights_only(model, 4, false, codec, None, &datasets);
+            let bucketed =
+                weights_only(model, 4, true, codec, None, &datasets);
+            assert_eq!(bucketed[0], mono[0],
+                       "{model}: bucketed diverged from monolithic \
+                        under {codec:?}");
+            for (rank, w) in bucketed.iter().enumerate().skip(1) {
+                assert_eq!(w, &bucketed[0],
+                           "{model}: rank {rank} diverged under \
+                            {codec:?} (bucketed)");
+            }
+        }
+    }
+}
+
+/// Top-k re-selects per wire window, so the bucketed trajectory is a
+/// *different* (equally valid) sparsification than the monolithic one —
+/// but the replicated-optimizer invariant must still hold: every rank
+/// bitwise-identical.
+#[test]
+fn bucketed_topk_ranks_end_bitwise_identical() {
+    let datasets = make_datasets(4, 80);
+    let weights = weights_only("mlp_b10", 4, true,
+                               Codec::TopK { k: 0.1 }, None, &datasets);
+    let init = {
+        let session = Session::native().unwrap();
+        let exes = session.executables("mlp_b10").unwrap();
+        exes.init_params(&mut Rng::new(7))
+    };
+    assert_ne!(weights[0], init, "training must have moved the weights");
+    for (rank, w) in weights.iter().enumerate().skip(1) {
+        assert_eq!(w, &weights[0],
+                   "rank {rank} diverged under topk (bucketed)");
+    }
+}
+
+/// Buckets compose with the hierarchical (grouped) topology of ISSUE 4:
+/// each bucket runs the ring → tree → ring schedule over its window.
+/// fp32 and fp16 stay bitwise-equal to the grouped monolithic run; all
+/// three codecs keep cross-rank identity.
+#[test]
+fn bucketed_composes_with_hierarchical_groups() {
+    let datasets = make_datasets(8, 80);
+    let layout = GroupLayout::contiguous(8, 2).unwrap();
+    for codec in [Codec::Fp32, Codec::Fp16] {
+        let mono = weights_only("mlp_b10", 8, false, codec,
+                                Some(layout.clone()), &datasets);
+        let bucketed = weights_only("mlp_b10", 8, true, codec,
+                                    Some(layout.clone()), &datasets);
+        assert_eq!(bucketed[0], mono[0],
+                   "grouped bucketed diverged from grouped monolithic \
+                    under {codec:?}");
+        for (rank, w) in bucketed.iter().enumerate().skip(1) {
+            assert_eq!(w, &bucketed[0],
+                       "rank {rank} diverged under {codec:?} \
+                        (grouped bucketed)");
+        }
+    }
+    let topk = weights_only("mlp_b10", 8, true, Codec::TopK { k: 0.1 },
+                            Some(layout), &datasets);
+    for (rank, w) in topk.iter().enumerate().skip(1) {
+        assert_eq!(w, &topk[0],
+                   "rank {rank} diverged under topk (grouped bucketed)");
+    }
+}
+
+/// Early-stop lockstep under buckets: the stop flag rides the tail
+/// bucket, so when rank 0's callbacks request a stop every rank
+/// abandons the flagged round pre-update and finishes with the same
+/// batch count and bitwise-identical weights.
+#[test]
+fn bucketed_early_stop_keeps_ranks_lockstep() {
+    let datasets = make_datasets(4, 80);
+    let out = run_ring_world("mlp_b10", 4, true, Codec::Fp16, None, 2,
+                             &datasets, Some(3));
+    // 80 samples / batch 10 = 8 rounds/epoch × 2 epochs = 16 possible;
+    // the flag raised after update 3 kills round 4 on every rank.
+    for (rank, (_, batches)) in out.iter().enumerate() {
+        assert_eq!(*batches, 3,
+                   "rank {rank} did not stop in lockstep at update 3");
+    }
+    for (rank, (w, _)) in out.iter().enumerate().skip(1) {
+        assert_eq!(w, &out[0].0,
+                   "rank {rank} diverged after the early stop");
+    }
+}
+
+/// The public-API path: `Experiment::buckets()` (the quickstart's
+/// `--buckets` flag maps onto this chain) trains end-to-end.
+#[test]
+fn experiment_facade_carries_buckets() {
+    let session = Session::native().unwrap();
+    let result = Experiment::new("mlp")
+        .batch(25)
+        .workers(4)
+        .epochs(1)
+        .allreduce()
+        .buckets()
+        .synthetic(100, 100)
+        .max_val_batches(4)
+        .run(&session)
+        .unwrap();
+    assert_eq!(result.history.master_updates, 4);
+    assert!(result.history.final_val_acc().is_some());
+}
