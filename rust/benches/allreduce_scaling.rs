@@ -149,7 +149,11 @@ fn write_bench_pr(path: &str) {
     top.insert("overlap".into(), Json::Obj(overlap));
     top.insert("params".into(), Json::Num(n_params as f64));
     top.insert("ranks".into(), Json::Num(ranks as f64));
-    top.insert("schema".into(), Json::Num(2.0));
+    top.insert("schema".into(), Json::Num(3.0));
+    // schema 3: the serving-path block (closed-form like collective_ns;
+    // the formula lives in mpi_learn::serving so benches/serve_bench.rs
+    // emits the identical numbers).
+    top.insert("serving".into(), mpi_learn::serving::bench_block());
     write_json(path, &Json::Obj(top)).unwrap();
     println!("wrote {path}");
 }

@@ -1,0 +1,179 @@
+//! Serving-path benchmark: latency and throughput of the full HTTP →
+//! micro-batcher → executor stack, measured end-to-end against a live
+//! `serving::start` instance on an ephemeral port.
+//!
+//!     cargo bench --bench serve_bench
+//!     cargo bench --bench serve_bench -- --ci
+//!     cargo bench --bench serve_bench -- --ci --pr-json ../BENCH_pr.json
+//!
+//! Measured numbers (machine-dependent) go to
+//! `runs/bench/serve_bench.json`. The committed BENCH_pr.json gets the
+//! deterministic closed-form `serving` block instead
+//! ([`mpi_learn::serving::bench_block`] — the same function
+//! `allreduce_scaling --pr-json` embeds), so `--pr-json` here is an
+//! idempotent merge and CI can regenerate + `git diff` the file on any
+//! machine.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use mpi_learn::runtime::Session;
+use mpi_learn::serving::http::client_request;
+use mpi_learn::serving::{self, ServeConfig, SERVE_BENCH_BATCHES,
+                         SERVE_BENCH_REPLICAS};
+use mpi_learn::util::bench::{fmt_secs, print_table, write_json};
+use mpi_learn::util::cli::Args;
+use mpi_learn::util::json::Json;
+use mpi_learn::util::rng::Rng;
+use mpi_learn::util::stats;
+
+const MODEL: &str = "mlp";
+
+fn checkpoint_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join("mpi_learn_serve_bench");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let exe = Session::native()
+        .unwrap()
+        .executables(&format!("{MODEL}_b32"))
+        .unwrap();
+    exe.init_params(&mut Rng::new(2017))
+        .save(&dir.join("checkpoint-1.mplw"))
+        .unwrap();
+    dir
+}
+
+fn body_for(rows: usize, row_len: usize) -> String {
+    let row: Vec<String> = (0..row_len)
+        .map(|k| format!("{:?}", ((k % 89) as f64) * 0.02 - 0.9))
+        .collect();
+    let row = format!("[{}]", row.join(","));
+    format!("{{\"instances\": [{}]}}", vec![row; rows].join(","))
+}
+
+fn main() {
+    let args = Args::from_env();
+    let ci = args.bool("ci");
+    let json_path = args.str("json", "runs/bench/serve_bench.json");
+    let pr_json = args.str_opt("pr-json");
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+    let iters = if ci { 30 } else { 200 };
+    let clients = 4usize;
+
+    let exe = Session::native()
+        .unwrap()
+        .executables(&format!("{MODEL}_b32"))
+        .unwrap();
+    let row_len = exe.meta.seq_len * exe.meta.features;
+    let dir = checkpoint_dir();
+
+    let mut rows_out = Vec::new();
+    let mut measured: BTreeMap<String, Json> = BTreeMap::new();
+    for &replicas in &SERVE_BENCH_REPLICAS {
+        let cfg = ServeConfig {
+            model: MODEL.into(),
+            checkpoint_dir: dir.clone(),
+            port: 0,
+            max_batch: 32,
+            batch_deadline_ms: 1,
+            replicas,
+            tcp: false,
+            base_port: 47950,
+            poll_ms: 10_000,
+            replica_timeout_ms: 10_000,
+        };
+        let mut handle = serving::start(&cfg).unwrap();
+        let addr = handle.addr();
+        for &batch in &SERVE_BENCH_BATCHES {
+            let body = Arc::new(body_for(batch, row_len));
+            // Latency: sequential closed-loop round trips.
+            let mut samples = Vec::with_capacity(iters);
+            for i in 0..iters + 3 {
+                let t0 = Instant::now();
+                let (status, _) = client_request(
+                    addr, "POST", "/v1/predict", &body).unwrap();
+                assert_eq!(status, 200);
+                if i >= 3 {
+                    samples.push(t0.elapsed().as_secs_f64());
+                }
+            }
+            let p50 = stats::percentile(&samples, 50.0);
+            let p99 = stats::percentile(&samples, 99.0);
+            // Throughput: open the loop with concurrent clients so
+            // replica fan-out actually pipelines.
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for _ in 0..clients {
+                    let body = body.clone();
+                    s.spawn(move || {
+                        for _ in 0..iters {
+                            let (status, _) = client_request(
+                                addr, "POST", "/v1/predict", &body)
+                                .unwrap();
+                            assert_eq!(status, 200);
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let qps = (clients * iters * batch) as f64 / wall;
+            let key = format!("b{batch}_r{replicas}");
+            rows_out.push(vec![
+                format!("{replicas}"),
+                format!("{batch}"),
+                fmt_secs(p50),
+                fmt_secs(p99),
+                format!("{qps:.0}"),
+            ]);
+            measured.insert(format!("p50_ns/{key}"),
+                            Json::Num((p50 * 1e9).round()));
+            measured.insert(format!("p99_ns/{key}"),
+                            Json::Num((p99 * 1e9).round()));
+            measured.insert(format!("qps/{key}"),
+                            Json::Num(qps.round()));
+        }
+        handle.stop();
+    }
+    print_table(
+        "measured serving path: HTTP + micro-batcher + executor \
+         (mlp_b32, rows/request = batch; QPS over 4 concurrent clients)",
+        &["replicas", "batch", "p50", "p99", "rows/s"],
+        &rows_out,
+    );
+
+    let summary: BTreeMap<String, Json> = [
+        ("bench".to_string(), Json::Str("serve_bench".to_string())),
+        ("ci".to_string(), Json::Bool(ci)),
+        ("measured".to_string(), Json::Obj(measured)),
+    ]
+    .into_iter()
+    .collect();
+    write_json(&json_path, &Json::Obj(summary)).unwrap();
+    println!("wrote {json_path}");
+
+    // Idempotent merge of the deterministic serving block into the
+    // committed trajectory file (same values allreduce_scaling writes).
+    if let Some(path) = pr_json {
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            eprintln!("error: --pr-json {path}: {e} (run \
+                       allreduce_scaling -- --pr-json first)");
+            std::process::exit(2);
+        });
+        let mut top = match Json::parse(&text) {
+            Ok(Json::Obj(m)) => m,
+            _ => {
+                eprintln!("error: {path} is not a JSON object");
+                std::process::exit(2);
+            }
+        };
+        top.insert("schema".into(), Json::Num(3.0));
+        top.insert("serving".into(), serving::bench_block());
+        write_json(&path, &Json::Obj(top)).unwrap();
+        println!("merged serving block into {path}");
+    }
+}

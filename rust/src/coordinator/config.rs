@@ -81,6 +81,16 @@ impl std::fmt::Display for ConfigError {
 
 impl std::error::Error for ConfigError {}
 
+/// Read and parse a JSON config file with uniform `ConfigError`
+/// classification — the shared front half of every `from_file`
+/// (training jobs here, [`crate::serving::ServeConfig`] for the
+/// inference front-end).
+pub fn load_json(path: &Path) -> Result<Json, ConfigError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ConfigError::Io(path.to_path_buf(), e))?;
+    Json::parse(&text).map_err(|e| ConfigError::Parse(e.to_string()))
+}
+
 /// A fully-resolved training job description.
 pub struct JobConfig {
     pub train: TrainConfig,
@@ -89,9 +99,7 @@ pub struct JobConfig {
 
 impl JobConfig {
     pub fn from_file(path: &Path) -> Result<JobConfig, ConfigError> {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| ConfigError::Io(path.to_path_buf(), e))?;
-        Self::from_json_text(&text)
+        Self::from_json(&load_json(path)?)
     }
 
     pub fn from_json_text(text: &str) -> Result<JobConfig, ConfigError> {

@@ -41,4 +41,4 @@ pub use driver::{run_rank, train, train_direct, train_with_callbacks,
                  TrainConfig, TrainError, TrainResult, Transport};
 pub use experiment::Experiment;
 pub use hierarchy::HierarchySpec;
-pub use topology::{RankRole, WorldPlan};
+pub use topology::{RankRole, ServePlan, ServeRole, WorldPlan};

@@ -253,6 +253,82 @@ impl WorldPlan {
     }
 }
 
+/// What one rank does in a serving world.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeRole {
+    /// Rank 0: owns the HTTP listener, the micro-batcher, and the
+    /// checkpoint watcher; dispatches batches to replicas and
+    /// broadcasts reloaded weights.
+    Frontend,
+    /// Inference replica `index` (0-based): holds one model executable
+    /// + the current `ParamSet`, answers `ServeRequest` batches.
+    Replica { index: usize },
+}
+
+/// Static description of an inference-serving world: the `WorldPlan`
+/// analogue for the `serve` subcommand, so replica worlds are built
+/// over the exact same `Comm` substrate (inproc threads or a TCP mesh)
+/// as training worlds.
+///
+/// Layout is fixed: rank 0 is the frontend, ranks `1..=replicas` are
+/// replicas. With `replicas == 0` there is no RPC world at all — the
+/// frontend runs inference in-process (the single-node fast path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServePlan {
+    replicas: usize,
+}
+
+impl ServePlan {
+    pub fn new(replicas: usize) -> Result<ServePlan, String> {
+        // Cap far above any sane deployment, but low enough that a
+        // mis-typed flag can't fork thousands of threads.
+        if replicas > 256 {
+            return Err(format!(
+                "\"replicas\" ({replicas}) exceeds the supported \
+                 maximum (256)"));
+        }
+        Ok(ServePlan { replicas })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Total ranks: the frontend plus every replica. 1 when the world
+    /// is in-process only (`replicas == 0`).
+    pub fn world_size(&self) -> usize {
+        self.replicas + 1
+    }
+
+    pub fn frontend(&self) -> Rank {
+        0
+    }
+
+    /// The replica ranks, in dispatch order.
+    pub fn replica_ranks(&self) -> Vec<Rank> {
+        (1..=self.replicas).collect()
+    }
+
+    pub fn role_of(&self, rank: Rank) -> ServeRole {
+        debug_assert!(rank < self.world_size(),
+                      "rank {rank} outside serve world of {}",
+                      self.world_size());
+        if rank == 0 {
+            ServeRole::Frontend
+        } else {
+            ServeRole::Replica { index: rank - 1 }
+        }
+    }
+
+    /// Log-line tag for a rank (mirrors `WorldPlan::rank_tag`).
+    pub fn rank_tag(&self, rank: Rank) -> String {
+        match self.role_of(rank) {
+            ServeRole::Frontend => "frontend".into(),
+            ServeRole::Replica { index } => format!("replica-{index}"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,5 +465,33 @@ mod tests {
         assert_eq!(p.seed_of(0), 2017);
         assert_eq!(p.seed_of(1), 2017 ^ 0x9E37u64);
         assert_eq!(p.seed_of(2), 2017 ^ 2u64.wrapping_mul(0x9E37));
+    }
+
+    #[test]
+    fn serve_plan_layout() {
+        let p = ServePlan::new(4).unwrap();
+        assert_eq!(p.world_size(), 5);
+        assert_eq!(p.frontend(), 0);
+        assert_eq!(p.replicas(), 4);
+        assert_eq!(p.replica_ranks(), vec![1, 2, 3, 4]);
+        assert_eq!(p.role_of(0), ServeRole::Frontend);
+        assert_eq!(p.role_of(1), ServeRole::Replica { index: 0 });
+        assert_eq!(p.role_of(4), ServeRole::Replica { index: 3 });
+        assert_eq!(p.rank_tag(0), "frontend");
+        assert_eq!(p.rank_tag(2), "replica-1");
+    }
+
+    #[test]
+    fn serve_plan_zero_replicas_is_in_process() {
+        let p = ServePlan::new(0).unwrap();
+        assert_eq!(p.world_size(), 1);
+        assert!(p.replica_ranks().is_empty());
+        assert_eq!(p.role_of(0), ServeRole::Frontend);
+    }
+
+    #[test]
+    fn serve_plan_caps_replicas() {
+        let err = ServePlan::new(10_000).unwrap_err();
+        assert!(err.contains("replicas"), "{err}");
     }
 }

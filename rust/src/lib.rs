@@ -106,6 +106,11 @@
 //! - [`simulator`] — discrete-event protocol simulator for cluster-scale
 //!   sweeps (Figs 3/4, Table I) with parameter-server, flat-ring, and
 //!   hierarchical cost models (separate intra/inter link terms).
+//! - [`serving`] — HTTP inference front-end (`serve` subcommand):
+//!   request micro-batching into the native backend, optional
+//!   rank-sharded replicas over the [`mpi`] substrate, and hot
+//!   checkpoint reload that atomically swaps weights published by a
+//!   concurrent training run without dropping in-flight requests.
 //! - [`tensor`], [`metrics`], [`util`] — support substrates.
 
 pub mod coordinator;
@@ -114,6 +119,7 @@ pub mod metrics;
 pub mod mpi;
 pub mod optim;
 pub mod runtime;
+pub mod serving;
 pub mod simulator;
 pub mod tensor;
 pub mod util;

@@ -7,6 +7,8 @@
 //!   info       list AOT artifacts and their interfaces
 //!   rank       run ONE rank of a TCP-mesh job (SPMD deployment)
 //!   launch     spawn one `rank` process per rank and wait
+//!   serve      HTTP inference front-end over a checkpoint dir
+//!              (`serve --help`)
 //!
 //! Examples:
 //!   mpi-learn gen-data --dir data/hep --files 16 --samples 2000
@@ -29,6 +31,9 @@
 //!   mpi-learn simulate --algo hier-allreduce --groups 4 \
 //!       --workers 16,32,64              # grouped ring + leader tree
 //!   mpi-learn info
+//!   mpi-learn serve --model lstm --checkpoint-dir runs/ckpt \
+//!       --port 8080 --max-batch 32      # then:
+//!       # curl -d '{"instances": [[...]]}' localhost:8080/v1/predict
 
 use std::path::PathBuf;
 
@@ -53,9 +58,10 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("rank") => cmd_rank(&args),
         Some("launch") => cmd_launch(&args),
+        Some("serve") => cmd_serve(&args),
         _ => {
             eprintln!("usage: mpi-learn \
-                       <gen-data|train|simulate|info|rank|launch> \
+                       <gen-data|train|simulate|info|rank|launch|serve> \
                        [flags]  (try: mpi-learn train --help)");
             2
         }
@@ -283,6 +289,107 @@ fn train_usage() -> String {
         out.push('\n');
     }
     out
+}
+
+const SERVE_FLAGS: &[Flag] = &[
+    Flag { name: "config", value: "<serve.json>", default: "",
+           help: "load the serve config from a JSON file (bare object \
+                  or a \"serve\" block in a job.json)" },
+    Flag { name: "model", value: "<family>", default: "lstm",
+           help: "model family: mlp | lstm (must match checkpoints)" },
+    Flag { name: "checkpoint-dir", value: "<dir>", default: "runs/ckpt",
+           help: "dir a training run writes *.mplw checkpoints into; \
+                  polled for hot reload" },
+    Flag { name: "port", value: "<n>", default: "8080",
+           help: "HTTP listen port (0 = ephemeral)" },
+    Flag { name: "max-batch", value: "<n>", default: "32",
+           help: "rows per forward pass: micro-batch flush threshold \
+                  and per-request row cap" },
+    Flag { name: "batch-deadline-ms", value: "<ms>", default: "5",
+           help: "flush a partial micro-batch after this long" },
+    Flag { name: "replicas", value: "<n>", default: "0",
+           help: "inference replica ranks to fan batches over \
+                  (0 = in-process, no replica pool)" },
+    Flag { name: "tcp", value: "", default: "",
+           help: "carry replica traffic over a localhost TCP mesh" },
+    Flag { name: "base-port", value: "<n>", default: "47800",
+           help: "first port of the replica TCP mesh (with --tcp)" },
+    Flag { name: "poll-ms", value: "<ms>", default: "500",
+           help: "checkpoint dir poll interval" },
+    Flag { name: "replica-timeout-ms", value: "<ms>", default: "2000",
+           help: "per-batch replica deadline before mark-dead + retry" },
+    Flag { name: "help", value: "", default: "",
+           help: "print this usage text" },
+];
+
+fn serve_usage() -> String {
+    let mut out = String::from(
+        "usage: mpi-learn serve [--config serve.json | flags]\n\n\
+         flags:\n");
+    for f in SERVE_FLAGS {
+        let mut left = format!("--{}", f.name);
+        if !f.value.is_empty() {
+            left.push(' ');
+            left.push_str(f.value);
+        }
+        out.push_str(&format!("  {left:<28} {}", f.help));
+        if !f.default.is_empty() {
+            out.push_str(&format!(" [default: {}]", f.default));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// HTTP inference front-end: micro-batching, optional replica ranks,
+/// hot checkpoint reload. Runs until killed.
+fn cmd_serve(args: &Args) -> i32 {
+    if args.bool("help") {
+        print!("{}", serve_usage());
+        return 0;
+    }
+    let cfg = if let Some(config) = args.str_opt("config") {
+        if let Err(e) = args.finish() {
+            return fail(e);
+        }
+        match mpi_learn::serving::ServeConfig::from_file(
+            &PathBuf::from(config)) {
+            Ok(c) => c,
+            Err(e) => return fail(e),
+        }
+    } else {
+        let defaults = mpi_learn::serving::ServeConfig::default();
+        let cfg = mpi_learn::serving::ServeConfig {
+            model: args.str("model", &defaults.model),
+            checkpoint_dir: PathBuf::from(
+                args.str("checkpoint-dir", "runs/ckpt")),
+            port: args.u64("port", defaults.port as u64)
+                .unwrap_or(defaults.port as u64) as u16,
+            max_batch: args.usize("max-batch", defaults.max_batch)
+                .unwrap_or(defaults.max_batch),
+            batch_deadline_ms: args
+                .u64("batch-deadline-ms", defaults.batch_deadline_ms)
+                .unwrap_or(defaults.batch_deadline_ms),
+            replicas: args.usize("replicas", defaults.replicas)
+                .unwrap_or(defaults.replicas),
+            tcp: args.bool("tcp"),
+            base_port: args.u64("base-port", defaults.base_port as u64)
+                .unwrap_or(defaults.base_port as u64) as u16,
+            poll_ms: args.u64("poll-ms", defaults.poll_ms)
+                .unwrap_or(defaults.poll_ms),
+            replica_timeout_ms: args
+                .u64("replica-timeout-ms", defaults.replica_timeout_ms)
+                .unwrap_or(defaults.replica_timeout_ms),
+        };
+        if let Err(e) = args.finish() {
+            return fail(e);
+        }
+        cfg
+    };
+    match mpi_learn::serving::run_serve(&cfg) {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
 }
 
 /// Callback flags shared by the flag-driven `train` path.
@@ -638,6 +745,22 @@ mod tests {
             }
         }
         assert!(usage.starts_with("usage: mpi-learn train"));
+    }
+
+    #[test]
+    fn usage_lists_every_serve_flag() {
+        let usage = serve_usage();
+        for f in SERVE_FLAGS {
+            assert!(usage.contains(&format!("--{}", f.name)),
+                    "serve usage is missing --{}", f.name);
+            if !f.default.is_empty() {
+                assert!(usage.contains(&format!("[default: {}]",
+                                                f.default)),
+                        "serve usage is missing the default of --{}",
+                        f.name);
+            }
+        }
+        assert!(usage.starts_with("usage: mpi-learn serve"));
     }
 
     #[test]

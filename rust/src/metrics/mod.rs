@@ -136,6 +136,159 @@ impl Stopwatch {
     }
 }
 
+/// Fixed log-bucket latency histogram (HDR-style, 16 sub-buckets per
+/// octave → worst-case quantile error ~3%), merge-able across threads.
+///
+/// Values are unsigned integers (the serving path records nanoseconds).
+/// `record` is O(1) with no allocation; `merge` folds a per-worker
+/// histogram into an aggregate, so each replica/batcher thread can own
+/// a private `Histogram` and the `/metrics` endpoint can sum them
+/// without contention on the hot path.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+/// 16 sub-buckets per power of two.
+const HIST_SUB_BITS: u32 = 4;
+const HIST_SUB: usize = 1 << HIST_SUB_BITS;
+/// Octaves 4..=63 each contribute HIST_SUB buckets, plus the exact
+/// 0..16 range: (63 - 4 + 1) * 16 + 16 = 976.
+const HIST_BUCKETS: usize = (64 - HIST_SUB_BITS as usize) * HIST_SUB
+    + HIST_SUB;
+
+fn hist_bucket(v: u64) -> usize {
+    if v < HIST_SUB as u64 {
+        return v as usize; // exact buckets for 0..15
+    }
+    let msb = 63 - v.leading_zeros(); // >= HIST_SUB_BITS
+    let octave = (msb - HIST_SUB_BITS + 1) as usize;
+    let sub = ((v >> (msb - HIST_SUB_BITS)) as usize) & (HIST_SUB - 1);
+    octave * HIST_SUB + sub
+}
+
+/// Midpoint of the value range bucket `idx` covers (its inverse).
+fn hist_value(idx: usize) -> u64 {
+    if idx < HIST_SUB {
+        return idx as u64;
+    }
+    let octave = (idx / HIST_SUB) as u32;
+    let sub = (idx % HIST_SUB) as u64;
+    let width = 1u64 << (octave - 1);
+    let lower = (HIST_SUB as u64 + sub) << (octave - 1);
+    lower + (width - 1) / 2
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[hist_bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold `other` into `self` (exact: bucket-wise addition).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile in `[0, 1]`: the representative value of the bucket
+    /// holding the `ceil(q * count)`-th smallest sample. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                // Clamp to the true observed extremes so p0/p100 are
+                // exact rather than bucket midpoints.
+                return hist_value(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// Summary as a JSON object — the payload the `/metrics` route and
+    /// the JsonlLogger-style periodic dump both serialize.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("min", Json::Num(self.min() as f64)),
+            ("max", Json::Num(self.max() as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.p50() as f64)),
+            ("p99", Json::Num(self.p99() as f64)),
+            ("p999", Json::Num(self.p999() as f64)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +318,105 @@ mod tests {
         h.wallclock_s = 4.0;
         assert_eq!(h.total_samples(), 800);
         assert!((h.throughput_samples_per_s() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_empty_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p999(), 0);
+    }
+
+    #[test]
+    fn histogram_small_values_are_exact() {
+        // Values below 32 land in exact buckets, so every quantile
+        // matches the sorted-vec order statistic exactly.
+        let mut h = Histogram::new();
+        let vals: Vec<u64> = (0..32).chain(0..32).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_unstable();
+        for q in [0.01, 0.25, 0.50, 0.75, 0.99, 1.0] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize)
+                .clamp(1, sorted.len());
+            assert_eq!(h.quantile(q), sorted[rank - 1],
+                       "q={q} diverged from oracle");
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 31);
+        assert_eq!(h.count(), 64);
+    }
+
+    #[test]
+    fn histogram_matches_sorted_vec_oracle_within_bucket_error() {
+        // Log-spaced latencies across six orders of magnitude: the
+        // histogram's p50/p99/p999 must track util::stats::percentile
+        // on the raw sorted values within the 1/32 bucket resolution
+        // (plus oracle interpolation slack).
+        use crate::util::rng::Rng;
+        use crate::util::stats::percentile;
+        let mut rng = Rng::new(42);
+        let mut h = Histogram::new();
+        let mut raw: Vec<f64> = Vec::new();
+        for _ in 0..10_000 {
+            // exp-ish spread: 1e2 .. 1e8 ns
+            let e = rng.uniform_f32(2.0, 8.0) as f64;
+            let v = 10f64.powf(e) as u64;
+            h.record(v);
+            raw.push(v as f64);
+        }
+        raw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (q, got) in [(50.0, h.p50()), (99.0, h.p99()),
+                         (99.9, h.p999())] {
+            let want = percentile(&raw, q);
+            let rel = (got as f64 - want).abs() / want;
+            assert!(rel < 0.05,
+                    "q={q}: hist {got} vs oracle {want:.0} (rel {rel:.4})");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_single() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let vals: Vec<u64> = (0..2_000)
+            .map(|_| rng.uniform_f32(1.0, 1e7) as u64)
+            .collect();
+        let mut whole = Histogram::new();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, &v) in vals.iter().enumerate() {
+            whole.record(v);
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        assert_eq!(a.p50(), whole.p50());
+        assert_eq!(a.p99(), whole.p99());
+        assert_eq!(a.p999(), whole.p999());
+        assert_eq!(a.mean(), whole.mean());
+    }
+
+    #[test]
+    fn histogram_json_summary_shape() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        let j = h.to_json();
+        let field = |k: &str| j.get(k).unwrap().as_i64().unwrap();
+        assert_eq!(field("count"), 3);
+        assert_eq!(field("min"), 10);
+        assert_eq!(field("max"), 30);
+        assert_eq!(field("p50"), 20);
     }
 
     #[test]

@@ -113,6 +113,12 @@ pub enum Tag {
     /// cross-talk — the wrong-source hazard that forced `GroupChunk`
     /// away from `RingChunk` applies between buckets too.
     Bucket { bucket: u16, phase: BucketPhase },
+    /// serve frontend -> replica: one micro-batch of inference inputs
+    /// (`Floats { step: batch id, data: rows * seq_len * features }`).
+    ServeRequest,
+    /// serve replica -> frontend: the logits for one micro-batch
+    /// (`Floats { step: batch id, data: rows * classes }`).
+    ServeReply,
 }
 
 impl Tag {
@@ -120,7 +126,8 @@ impl Tag {
     /// tags map into the block at
     /// `BUCKET_TAG_BASE + bucket * BUCKET_PHASES + phase`.
     pub fn to_u32(self) -> u32 {
-        use crate::mpi::tags::{BUCKET_PHASES, BUCKET_TAG_BASE};
+        use crate::mpi::tags::{BUCKET_PHASES, BUCKET_TAG_BASE,
+                               SERVE_TAG_BASE};
         match self {
             Tag::Ready => 0,
             Tag::Gradients => 1,
@@ -143,12 +150,14 @@ impl Tag {
                     + bucket as u32 * BUCKET_PHASES
                     + phase as u32
             }
+            Tag::ServeRequest => SERVE_TAG_BASE,
+            Tag::ServeReply => SERVE_TAG_BASE + 1,
         }
     }
 
     pub fn from_u32(v: u32) -> Option<Tag> {
         use crate::mpi::tags::{BUCKET_PHASES, BUCKET_TAG_BASE,
-                               MAX_BUCKETS};
+                               MAX_BUCKETS, SERVE_TAG_BASE};
         Some(match v {
             0 => Tag::Ready,
             1 => Tag::Gradients,
@@ -176,6 +185,8 @@ impl Tag {
                     phase: BucketPhase::from_u32(rel % BUCKET_PHASES)?,
                 }
             }
+            v if v == SERVE_TAG_BASE => Tag::ServeRequest,
+            v if v == SERVE_TAG_BASE + 1 => Tag::ServeReply,
             _ => return None,
         })
     }
@@ -632,10 +643,27 @@ mod tests {
                 assert_eq!(p2, p);
             }
         }
-        // the lane just past the block is unassigned
-        assert_eq!(
-            Tag::from_u32(BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES),
-            None);
+        // the lane just past the bucket block now belongs to the
+        // serving RPC pair, and the lane past THAT is unassigned
+        use crate::mpi::tags::{SERVE_TAGS, SERVE_TAG_BASE};
+        assert_eq!(BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES,
+                   SERVE_TAG_BASE);
+        assert_eq!(Tag::from_u32(SERVE_TAG_BASE + SERVE_TAGS), None);
+    }
+
+    #[test]
+    fn serve_tags_roundtrip() {
+        use crate::mpi::tags::{SERVE_TAGS, SERVE_TAG_BASE};
+        let lanes = [Tag::ServeRequest, Tag::ServeReply];
+        assert_eq!(lanes.len() as u32, SERVE_TAGS);
+        for (i, tag) in lanes.into_iter().enumerate() {
+            assert_eq!(tag.to_u32(), SERVE_TAG_BASE + i as u32);
+            assert_eq!(Tag::from_u32(tag.to_u32()), Some(tag));
+            let p = Payload::floats(11, vec![0.5, -0.25, 3.0]);
+            let (t2, p2) = decode(&encode(tag, &p)).unwrap();
+            assert_eq!(t2, tag);
+            assert_eq!(p2, p);
+        }
     }
 
     #[test]

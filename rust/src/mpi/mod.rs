@@ -32,7 +32,9 @@ pub use message::{BucketPhase, Envelope, Payload, Rank, Tag,
 /// makes tag allocation explicit. The fixed tags occupy `0..16`; the
 /// per-bucket collective block for the overlapped all-reduce occupies
 /// `[BUCKET_TAG_BASE, BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES)`,
-/// one lane per (bucket, phase). Uniqueness and ordering are checked at
+/// one lane per (bucket, phase); the serving RPC block
+/// (`ServeRequest`/`ServeReply`) sits directly above it at
+/// [`tags::SERVE_TAG_BASE`]. Uniqueness and ordering are checked at
 /// compile time — adding a clashing entry fails the build.
 pub mod tags {
     use super::message::{BucketPhase, Tag};
@@ -66,6 +68,18 @@ pub mod tags {
     /// loss/stop bucket counts as one).
     pub const MAX_BUCKETS: u32 = 32;
 
+    /// First wire value of the serving block, directly above the bucket
+    /// block. The inference front-end's frontend<->replica RPC rides the
+    /// same `Comm` substrate as training, so its tags are pinned here
+    /// like every other lane: `ServeRequest` = SERVE_TAG_BASE,
+    /// `ServeReply` = SERVE_TAG_BASE + 1. (They are deliberately NOT in
+    /// [`REGISTRY`], which by invariant covers exactly the fixed values
+    /// below [`BUCKET_TAG_BASE`].)
+    pub const SERVE_TAG_BASE: u32 =
+        BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES;
+    /// Wire values in the serving block (`ServeRequest`, `ServeReply`).
+    pub const SERVE_TAGS: u32 = 2;
+
     const fn strictly_increasing(t: &[(u32, &str)]) -> bool {
         let mut i = 1;
         while i < t.len() {
@@ -84,6 +98,11 @@ pub mod tags {
     const _: () =
         assert!(REGISTRY[REGISTRY.len() - 1].0 < BUCKET_TAG_BASE);
     const _: () = assert!(BUCKET_PHASES >= 1 && MAX_BUCKETS >= 1);
+    // The serving block starts exactly where the bucket block ends.
+    const _: () = assert!(
+        SERVE_TAG_BASE == BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES
+    );
+    const _: () = assert!(SERVE_TAGS == 2);
 
     /// The wire tag for one (bucket, phase) collective lane.
     pub fn bucket_tag(bucket: usize, phase: BucketPhase) -> Tag {
@@ -117,6 +136,20 @@ pub mod tags {
         #[should_panic(expected = "exceeds MAX_BUCKETS")]
         fn bucket_tag_bounds_checked() {
             bucket_tag(MAX_BUCKETS as usize, BucketPhase::Chunk);
+        }
+
+        /// The serving RPC lanes sit exactly at the top of the bucket
+        /// block and roundtrip through the wire mapping.
+        #[test]
+        fn serve_block_pinned_above_buckets() {
+            assert_eq!(SERVE_TAG_BASE,
+                       BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES);
+            assert_eq!(Tag::from_u32(SERVE_TAG_BASE),
+                       Some(Tag::ServeRequest));
+            assert_eq!(Tag::from_u32(SERVE_TAG_BASE + 1),
+                       Some(Tag::ServeReply));
+            assert_eq!(Tag::ServeRequest.to_u32(), SERVE_TAG_BASE);
+            assert_eq!(Tag::ServeReply.to_u32(), SERVE_TAG_BASE + 1);
         }
     }
 }

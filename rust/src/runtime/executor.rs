@@ -423,6 +423,36 @@ impl ModelExecutables {
         }
     }
 
+    /// Batched inference over a partial batch: (params, `rows` rows of
+    /// input) -> logits `[rows * classes]`.
+    ///
+    /// The serving micro-batcher rarely fills the executable's compiled
+    /// batch exactly, and both native model families compute each batch
+    /// row independently (row-major matmuls / per-row LSTM recurrence),
+    /// so zero-padding the tail rows and truncating the output is
+    /// bitwise-identical per row to a full-batch call. `rows` must be
+    /// in `1..=meta.batch`.
+    pub fn predict_rows(&self, params: &ParamSet, x: &[f32], rows: usize)
+        -> Result<Vec<f32>, RuntimeError> {
+        let row_len = self.meta.seq_len * self.meta.features;
+        if rows == 0 || rows > self.meta.batch {
+            return Err(RuntimeError::BadInput {
+                what: "rows", expect: self.meta.batch, got: rows });
+        }
+        if x.len() != rows * row_len {
+            return Err(RuntimeError::BadInput {
+                what: "x", expect: rows * row_len, got: x.len() });
+        }
+        if rows == self.meta.batch {
+            return self.predict(params, x);
+        }
+        let mut padded = vec![0.0f32; self.meta.x_len()];
+        padded[..x.len()].copy_from_slice(x);
+        let mut logits = self.predict(params, &padded)?;
+        logits.truncate(rows * self.meta.classes);
+        Ok(logits)
+    }
+
     /// Fresh Glorot-initialized parameters matching this variant.
     pub fn init_params(&self, rng: &mut crate::util::rng::Rng) -> ParamSet {
         ParamSet::glorot_init(&self.meta.params, rng)
@@ -439,3 +469,52 @@ const _: () = {
         assert_send_sync::<Arc<ModelExecutables>>();
     }
 };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::meta_for_key;
+
+    /// Partial-batch inference must be bitwise-identical per row to a
+    /// full-batch call — the property the serving micro-batcher's
+    /// zero-pad-and-truncate path stands on, for both model families.
+    #[test]
+    fn predict_rows_matches_full_batch_prefix() {
+        for key in ["mlp_b8", "lstm_b8"] {
+            let meta = meta_for_key(key).unwrap();
+            let exe = ModelExecutables::native(&meta).unwrap();
+            let mut rng = crate::util::rng::Rng::new(3);
+            let params = exe.init_params(&mut rng);
+            let row = meta.seq_len * meta.features;
+            let x: Vec<f32> = (0..meta.x_len())
+                .map(|i| ((i % 97) as f32) * 0.021 - 1.0)
+                .collect();
+            let full = exe.predict(&params, &x).unwrap();
+            for rows in [1usize, 3, meta.batch] {
+                let part = exe
+                    .predict_rows(&params, &x[..rows * row], rows)
+                    .unwrap();
+                assert_eq!(part.len(), rows * meta.classes);
+                assert_eq!(part[..], full[..rows * meta.classes],
+                           "{key} rows={rows} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_rows_validates_inputs() {
+        let meta = meta_for_key("mlp_b4").unwrap();
+        let exe = ModelExecutables::native(&meta).unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let params = exe.init_params(&mut rng);
+        let row = meta.seq_len * meta.features;
+        // zero rows rejected
+        assert!(exe.predict_rows(&params, &[], 0).is_err());
+        // more rows than the compiled batch rejected
+        let big = vec![0.0f32; 5 * row];
+        assert!(exe.predict_rows(&params, &big, 5).is_err());
+        // length/rows mismatch rejected
+        let x = vec![0.0f32; 2 * row - 1];
+        assert!(exe.predict_rows(&params, &x, 2).is_err());
+    }
+}

@@ -1,0 +1,443 @@
+//! Request micro-batcher: the serving hot path's fan-in point.
+//!
+//! Concurrent HTTP handler threads submit small predict requests; one
+//! flusher thread coalesces them into a single forward pass. A batch
+//! flushes when the queued rows reach `max_batch` OR when the oldest
+//! queued request has waited `deadline` — whichever comes first — so
+//! throughput under load and tail latency when idle are both bounded.
+//!
+//! The executor is injected as a [`BatchExec`] trait object: in
+//! single-process serving it wraps `ModelExecutables::predict_rows`
+//! against the hot-reloadable `ParamSet`; with `--replicas N` it is the
+//! replica pool dispatching over `Comm`. That seam is what lets the
+//! flush policy be unit-tested with a scripted executor.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::Histogram;
+
+/// One micro-batch's executor: `rows` rows of flat input (row-major,
+/// `rows * row_len` floats) -> `(weight_version, flat logits)` with
+/// `rows * classes` logits. The version is the one the pass actually
+/// computed with — under a concurrent hot reload it may lag the
+/// published version, and responses must report the truth so clients
+/// (and the e2e suite) can tie outputs to exact weights. An `Err`
+/// fails only the requests in this batch (HTTP 503), never the server.
+pub trait BatchExec: Send + Sync {
+    fn predict(&self, rows: usize, x: &[f32])
+        -> Result<(u64, Vec<f32>), String>;
+}
+
+/// Flush policy + shapes.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush when this many rows are queued (also the executor's
+    /// compiled batch capacity — one request may not exceed it).
+    pub max_batch: usize,
+    /// Flush when the oldest queued request has waited this long.
+    pub deadline: Duration,
+    /// Floats per input row (`seq_len * features`).
+    pub row_len: usize,
+    /// Floats per output row.
+    pub classes: usize,
+    /// Batches allowed in flight at once. 1 serializes the executor;
+    /// with `--replicas N` the serve loop sets `N` so the replica pool
+    /// can keep every replica busy while the batcher keeps collecting.
+    pub max_inflight: usize,
+}
+
+struct Pending {
+    rows: usize,
+    x: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<(u64, Vec<f32>), String>>,
+}
+
+#[derive(Default)]
+struct Queue {
+    pending: Vec<Pending>,
+    queued_rows: usize,
+    inflight: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    cfg: BatcherConfig,
+    queue: Mutex<Queue>,
+    /// Woken on submit and on shutdown.
+    cv: Condvar,
+    /// End-to-end batch latency (enqueue of the oldest request ->
+    /// responses sent), nanoseconds.
+    latency: Mutex<Histogram>,
+    /// Rows per flushed batch — how full the batcher runs.
+    batch_rows: Mutex<Histogram>,
+}
+
+/// Handle to the flusher thread. Dropping without `shutdown()` leaves
+/// the thread running until the process exits (the serve loop's normal
+/// lifetime); tests call `shutdown()` for a clean join.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    // Behind a Mutex so shutdown works through an `Arc<Batcher>` (the
+    // HTTP layer and the serve handle share one).
+    flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Batcher {
+    pub fn start(cfg: BatcherConfig, exec: Arc<dyn BatchExec>) -> Batcher {
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        assert!(cfg.max_inflight >= 1, "max_inflight must be >= 1");
+        let shared = Arc::new(Shared {
+            cfg,
+            queue: Mutex::new(Queue::default()),
+            cv: Condvar::new(),
+            latency: Mutex::new(Histogram::new()),
+            batch_rows: Mutex::new(Histogram::new()),
+        });
+        let flusher = {
+            let shared = shared.clone();
+            std::thread::spawn(move || flush_loop(shared, exec))
+        };
+        Batcher { shared, flusher: Mutex::new(Some(flusher)) }
+    }
+
+    /// Enqueue one request and block until its `(weight_version,
+    /// logits)` (or the batch's error) come back. `rows` must be
+    /// `1..=max_batch` and `x.len() == rows * row_len` — the HTTP
+    /// layer enforces both before calling (400/413), so violations
+    /// here are bugs.
+    pub fn predict(&self, rows: usize, x: Vec<f32>)
+        -> Result<(u64, Vec<f32>), String> {
+        assert!((1..=self.shared.cfg.max_batch).contains(&rows),
+                "rows {rows} outside 1..={}", self.shared.cfg.max_batch);
+        assert_eq!(x.len(), rows * self.shared.cfg.row_len,
+                   "input length / rows mismatch");
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.shutdown {
+                return Err("server shutting down".into());
+            }
+            q.queued_rows += rows;
+            q.pending.push(Pending {
+                rows,
+                x,
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+        }
+        self.shared.cv.notify_all();
+        rx.recv().unwrap_or_else(|_| Err("batcher stopped".into()))
+    }
+
+    /// Snapshot of the end-to-end batch latency histogram.
+    pub fn latency(&self) -> Histogram {
+        self.shared.latency.lock().unwrap().clone()
+    }
+
+    /// Snapshot of the rows-per-flush histogram.
+    pub fn batch_rows(&self) -> Histogram {
+        self.shared.batch_rows.lock().unwrap().clone()
+    }
+
+    /// Stop the flusher. Queued requests still flush first (drain, then
+    /// exit) and in-flight batches finish, so no accepted request is
+    /// dropped.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.flusher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.inflight > 0 {
+            q = self.shared.cv.wait(q).unwrap();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn flush_loop(shared: Arc<Shared>, exec: Arc<dyn BatchExec>) {
+    let cfg = shared.cfg;
+    loop {
+        // Decide under the lock, execute outside it.
+        let batch: Vec<Pending>;
+        {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.pending.is_empty() {
+                    if q.shutdown {
+                        return;
+                    }
+                    // Nothing queued: an empty flush must never reach
+                    // the executor, so just wait for a submit.
+                    q = shared.cv.wait(q).unwrap();
+                    continue;
+                }
+                if q.inflight >= cfg.max_inflight {
+                    // At the concurrency cap: wait for a batch thread
+                    // to finish (it notifies the condvar).
+                    q = shared.cv.wait(q).unwrap();
+                    continue;
+                }
+                let waited = q.pending[0].enqueued.elapsed();
+                if q.queued_rows >= cfg.max_batch
+                    || waited >= cfg.deadline
+                    || q.shutdown {
+                    break;
+                }
+                let (nq, _) = shared.cv
+                    .wait_timeout(q, cfg.deadline - waited)
+                    .unwrap();
+                q = nq;
+            }
+            // Take whole requests in arrival order while they fit the
+            // executor's batch; a request that would overflow waits for
+            // the next flush (its rows stay counted in queued_rows).
+            let mut take = 0usize;
+            let mut rows = 0usize;
+            while take < q.pending.len()
+                && rows + q.pending[take].rows <= cfg.max_batch {
+                rows += q.pending[take].rows;
+                take += 1;
+            }
+            batch = q.pending.drain(..take).collect();
+            q.queued_rows -= rows;
+            if !batch.is_empty() {
+                q.inflight += 1;
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        // Run the batch on its own thread so the flusher can keep
+        // collecting: with `--replicas N` up to `max_inflight` batches
+        // dispatch concurrently and the replica pool fans them out.
+        let shared = shared.clone();
+        let exec = exec.clone();
+        std::thread::spawn(move || run_batch(&shared, exec.as_ref(), batch));
+    }
+}
+
+fn run_batch(shared: &Shared, exec: &dyn BatchExec, batch: Vec<Pending>) {
+    let cfg = shared.cfg;
+    let rows: usize = batch.iter().map(|p| p.rows).sum();
+    let oldest = batch[0].enqueued;
+    let mut x = Vec::with_capacity(rows * cfg.row_len);
+    for p in &batch {
+        x.extend_from_slice(&p.x);
+    }
+    let result = exec.predict(rows, &x);
+    shared.batch_rows.lock().unwrap().record(rows as u64);
+    // Record latency before replying so a caller that returns from
+    // `predict` observes its own flush in the histogram.
+    let ns = oldest.elapsed().as_nanos().min(u128::from(u64::MAX));
+    shared.latency.lock().unwrap().record(ns as u64);
+    match result {
+        Ok((version, logits)) => {
+            // Split in arrival order: request i gets its own rows'
+            // logits, so responses are order-preserving however
+            // arrivals interleaved.
+            let mut off = 0usize;
+            for p in &batch {
+                let n = p.rows * cfg.classes;
+                let _ = p.reply
+                    .send(Ok((version, logits[off..off + n].to_vec())));
+                off += n;
+            }
+        }
+        Err(e) => {
+            // Fail only this batch; later batches are unaffected.
+            for p in &batch {
+                let _ = p.reply.send(Err(e.clone()));
+            }
+        }
+    }
+    let mut q = shared.queue.lock().unwrap();
+    q.inflight -= 1;
+    drop(q);
+    shared.cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Echo executor: classes == row_len, output row == input row.
+    /// Records every call's row count so tests can assert flush shape.
+    struct Echo {
+        calls: Mutex<Vec<usize>>,
+        delay: Duration,
+    }
+
+    impl Echo {
+        fn new() -> Arc<Echo> {
+            Arc::new(Echo {
+                calls: Mutex::new(Vec::new()),
+                delay: Duration::ZERO,
+            })
+        }
+
+        fn call_sizes(&self) -> Vec<usize> {
+            self.calls.lock().unwrap().clone()
+        }
+    }
+
+    impl BatchExec for Echo {
+        fn predict(&self, rows: usize, x: &[f32])
+            -> Result<(u64, Vec<f32>), String> {
+            self.calls.lock().unwrap().push(rows);
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            Ok((7, x.to_vec()))
+        }
+    }
+
+    fn cfg(max_batch: usize, deadline_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            deadline: Duration::from_millis(deadline_ms),
+            row_len: 4,
+            classes: 4,
+            max_inflight: 2,
+        }
+    }
+
+    fn row(fill: f32) -> Vec<f32> {
+        vec![fill; 4]
+    }
+
+    #[test]
+    fn max_batch_flushes_before_deadline() {
+        let echo = Echo::new();
+        // Deadline far away: only the rows threshold can flush.
+        let b = Arc::new(Batcher::start(cfg(4, 60_000), echo.clone()));
+        let t0 = Instant::now();
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    b.predict(1, row(i as f32)).unwrap()
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30),
+                "must flush on max-batch, not deadline");
+        assert_eq!(echo.call_sizes(), vec![4],
+                   "four 1-row requests coalesce into one 4-row pass");
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let echo = Echo::new();
+        let b = Batcher::start(cfg(32, 30), echo.clone());
+        let t0 = Instant::now();
+        let (v, out) = b.predict(2, [row(1.0), row(2.0)].concat())
+            .unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(v, 7, "executor's weight version must pass through");
+        assert_eq!(out, [row(1.0), row(2.0)].concat());
+        assert!(waited >= Duration::from_millis(25),
+                "flushed after only {waited:?} — deadline not honored");
+        assert_eq!(echo.call_sizes(), vec![2]);
+    }
+
+    #[test]
+    fn empty_queue_never_calls_predict() {
+        let echo = Echo::new();
+        let b = Batcher::start(cfg(8, 10), echo.clone());
+        // Several deadline periods pass with nothing queued.
+        std::thread::sleep(Duration::from_millis(60));
+        b.shutdown();
+        assert!(echo.call_sizes().is_empty(),
+                "idle batcher must never flush an empty batch");
+    }
+
+    #[test]
+    fn response_order_preserved_under_interleaved_arrivals() {
+        let echo = Echo::new();
+        let b = Arc::new(Batcher::start(cfg(8, 5), echo.clone()));
+        let mut threads = Vec::new();
+        for i in 0..24 {
+            let b = b.clone();
+            threads.push(std::thread::spawn(move || {
+                let fill = i as f32;
+                // 1- and 2-row requests interleave arbitrarily.
+                let rows = 1 + (i % 2);
+                let x: Vec<f32> = vec![fill; 4 * rows];
+                let (_, out) = b.predict(rows, x.clone()).unwrap();
+                (x, out)
+            }));
+        }
+        for t in threads {
+            let (sent, got) = t.join().unwrap();
+            assert_eq!(sent, got,
+                       "a request must get back exactly its own rows");
+        }
+        let sizes = echo.call_sizes();
+        assert!(sizes.iter().all(|&r| (1..=8).contains(&r)), "{sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 24 + 12,
+                   "every submitted row flushed exactly once");
+    }
+
+    /// A failing executor fails only the requests in that flush; the
+    /// next batch succeeds — the per-batch 503 contract.
+    struct FailOnce {
+        failed: AtomicUsize,
+        inner: Arc<Echo>,
+    }
+
+    impl BatchExec for FailOnce {
+        fn predict(&self, rows: usize, x: &[f32])
+            -> Result<(u64, Vec<f32>), String> {
+            if self.failed.fetch_add(1, Ordering::SeqCst) == 0 {
+                return Err("replica timeout".into());
+            }
+            self.inner.predict(rows, x)
+        }
+    }
+
+    #[test]
+    fn failed_batch_503s_only_its_own_requests() {
+        let exec = Arc::new(FailOnce {
+            failed: AtomicUsize::new(0),
+            inner: Echo::new(),
+        });
+        let b = Batcher::start(cfg(8, 10), exec);
+        let first = b.predict(1, row(1.0));
+        assert_eq!(first.unwrap_err(), "replica timeout");
+        let second = b.predict(1, row(2.0));
+        assert_eq!(second.unwrap().1, row(2.0),
+                   "a batch failure must not poison later batches");
+    }
+
+    #[test]
+    fn latency_histogram_records_flushes() {
+        let echo = Echo::new();
+        let b = Batcher::start(cfg(4, 5), echo);
+        for _ in 0..3 {
+            b.predict(1, row(0.0)).unwrap();
+        }
+        let lat = b.latency();
+        assert_eq!(lat.count(), 3);
+        assert!(lat.max() > 0);
+        let rows = b.batch_rows();
+        assert_eq!(rows.count(), 3);
+        b.shutdown();
+    }
+}

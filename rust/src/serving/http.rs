@@ -1,0 +1,478 @@
+//! Dependency-free HTTP/1.1 front-end for the serving stack.
+//!
+//! Thread-per-connection with keep-alive, `Content-Length` framed
+//! bodies, and three typed routes:
+//!
+//! * `POST /v1/predict` — JSON instances in, logits out (through the
+//!   micro-batcher). 400 malformed, 413 over `--max-batch`, 503 when
+//!   the batch's executor failed, 200 otherwise with the weight
+//!   version the answer was computed with.
+//! * `GET /healthz` — liveness + which weights are serving.
+//! * `GET /metrics` — latency/batch-size histograms and counters.
+//!
+//! No TLS, no chunked encoding, no HTTP/2 — the paper's deployment
+//! story is a trusted cluster network behind a real ingress; what
+//! matters here is that the stack stays vendored-deps-only.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::serving::batcher::Batcher;
+use crate::serving::json::{error_body, parse_predict_request,
+                           predict_response, BodyError};
+use crate::serving::ServeState;
+use crate::util::json::Json;
+
+/// Hard cap on request bodies, before JSON parsing even starts.
+const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// Everything a handler thread needs, shared across connections.
+pub struct ServeCtx {
+    pub state: Arc<ServeState>,
+    pub batcher: Arc<Batcher>,
+    pub model_key: String,
+    pub row_len: usize,
+    pub classes: usize,
+    pub max_batch: usize,
+    pub replicas: usize,
+}
+
+/// Listener + accept thread. `shutdown()` stops accepting and joins
+/// the accept loop; live handler threads finish their current request
+/// and exit on the stop flag.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    requests: Arc<AtomicU64>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `127.0.0.1:port` (0 = ephemeral, for tests) and start
+    /// accepting.
+    pub fn start(port: u16, ctx: Arc<ServeCtx>)
+        -> std::io::Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(AtomicU64::new(0));
+        let accept = {
+            let stop = stop.clone();
+            let requests = requests.clone();
+            std::thread::spawn(move || {
+                accept_loop(&listener, &ctx, &stop, &requests)
+            })
+        };
+        Ok(Server { addr, stop, requests, accept: Some(accept) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Requests answered since boot (all routes, all statuses).
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, ctx: &Arc<ServeCtx>,
+               stop: &Arc<AtomicBool>, requests: &Arc<AtomicU64>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        let ctx = ctx.clone();
+        let stop = stop.clone();
+        let requests = requests.clone();
+        std::thread::spawn(move || {
+            handle_conn(stream, &ctx, &stop, &requests);
+        });
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+    keep_alive: bool,
+}
+
+enum ReadError {
+    Io(std::io::Error),
+    TooLarge(usize),
+    Malformed(String),
+}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> ReadError {
+        ReadError::Io(e)
+    }
+}
+
+/// Parse one request off the wire. `Ok(None)` is a clean EOF between
+/// keep-alive requests.
+fn read_request(r: &mut impl BufRead)
+    -> Result<Option<Request>, ReadError> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() {
+        return Err(ReadError::Malformed("malformed request line".into()));
+    }
+    // HTTP/1.1 defaults to keep-alive, 1.0 to close.
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            return Ok(None); // peer vanished mid-headers
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let Some((name, value)) = h.split_once(':') else { continue };
+        let value = value.trim();
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                content_length = value.parse().map_err(|_| {
+                    ReadError::Malformed("bad content-length".into())
+                })?;
+            }
+            "connection" => match value.to_ascii_lowercase().as_str() {
+                "close" => keep_alive = false,
+                "keep-alive" => keep_alive = true,
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(ReadError::TooLarge(content_length));
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)?;
+    let body = String::from_utf8(body).map_err(|_| {
+        ReadError::Malformed("body is not valid UTF-8".into())
+    })?;
+    Ok(Some(Request { method, path, body, keep_alive }))
+}
+
+struct Response {
+    status: u16,
+    reason: &'static str,
+    body: String,
+}
+
+fn resp(status: u16, reason: &'static str, body: String) -> Response {
+    Response { status, reason, body }
+}
+
+fn write_response(w: &mut impl Write, r: &Response, keep_alive: bool)
+    -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        r.status, r.reason, r.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+        r.body
+    )?;
+    w.flush()
+}
+
+fn handle_conn(stream: TcpStream, ctx: &ServeCtx, stop: &AtomicBool,
+               requests: &AtomicU64) {
+    // Idle keep-alive connections die after this, which also bounds
+    // how long a handler thread can outlive `Server::shutdown`.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    while !stop.load(Ordering::SeqCst) {
+        let req = match read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => break,
+            Err(ReadError::TooLarge(n)) => {
+                let body = error_body(&format!(
+                    "request body of {n} bytes exceeds the \
+                     {MAX_BODY_BYTES} byte limit"
+                ));
+                let _ = write_response(
+                    &mut stream,
+                    &resp(413, "Payload Too Large", body), false);
+                break;
+            }
+            Err(ReadError::Malformed(m)) => {
+                let _ = write_response(
+                    &mut stream,
+                    &resp(400, "Bad Request", error_body(&m)), false);
+                break;
+            }
+            Err(ReadError::Io(_)) => break,
+        };
+        requests.fetch_add(1, Ordering::Relaxed);
+        let keep_alive = req.keep_alive;
+        let response = route(ctx, &req);
+        if write_response(&mut stream, &response, keep_alive).is_err() {
+            break;
+        }
+        if !keep_alive {
+            break;
+        }
+    }
+}
+
+fn route(ctx: &ServeCtx, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/predict") => predict(ctx, &req.body),
+        ("GET", "/healthz") => healthz(ctx),
+        ("GET", "/metrics") => metrics(ctx),
+        (_, "/v1/predict") | (_, "/healthz") | (_, "/metrics") => resp(
+            405,
+            "Method Not Allowed",
+            error_body("/v1/predict takes POST; /healthz and /metrics \
+                        take GET"),
+        ),
+        _ => resp(404, "Not Found",
+                  error_body("routes: POST /v1/predict, GET /healthz, \
+                              GET /metrics")),
+    }
+}
+
+fn predict(ctx: &ServeCtx, body: &str) -> Response {
+    match parse_predict_request(body, ctx.row_len, ctx.max_batch) {
+        Ok(req) => match ctx.batcher.predict(req.rows, req.x) {
+            Ok((version, logits)) => resp(
+                200, "OK",
+                predict_response(&logits, ctx.classes, version)),
+            // The batch failed (replica timeout after retry, executor
+            // error) — only this request's batch, hence 503 here and
+            // healthy answers on the very next flush.
+            Err(e) => resp(503, "Service Unavailable", error_body(&e)),
+        },
+        Err(BodyError::TooLarge { rows, max_rows }) => resp(
+            413, "Payload Too Large",
+            error_body(&BodyError::TooLarge { rows, max_rows }
+                .to_string()),
+        ),
+        Err(BodyError::Bad(m)) => {
+            resp(400, "Bad Request", error_body(&m))
+        }
+    }
+}
+
+fn healthz(ctx: &ServeCtx) -> Response {
+    let (version, _) = ctx.state.params_versioned();
+    let body = Json::obj(vec![
+        ("status", Json::str("ok")),
+        ("model", Json::str(ctx.model_key.clone())),
+        ("weight_version", Json::Num(version as f64)),
+        ("weight_source", Json::str(ctx.state.source())),
+        ("replicas", Json::Num(ctx.replicas as f64)),
+        ("reload_errors",
+         Json::Num(ctx.state.reload_errors() as f64)),
+    ])
+    .to_string_compact();
+    resp(200, "OK", body)
+}
+
+fn metrics(ctx: &ServeCtx) -> Response {
+    let body = Json::obj(vec![
+        ("latency_ns", ctx.batcher.latency().to_json()),
+        ("batch_rows", ctx.batcher.batch_rows().to_json()),
+        ("weight_version",
+         Json::Num(ctx.state.version() as f64)),
+        ("reload_errors",
+         Json::Num(ctx.state.reload_errors() as f64)),
+    ])
+    .to_string_compact();
+    resp(200, "OK", body)
+}
+
+/// Minimal one-shot HTTP client (tests, benches, the e2e suite): one
+/// connection, `Connection: close`, returns `(status, body)`.
+pub fn client_request(addr: SocketAddr, method: &str, path: &str,
+                      body: &str) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\n\
+         Connection: close\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    let mut reader = BufReader::new(stream);
+    reader.read_to_end(&mut raw)?;
+    let text = String::from_utf8_lossy(&raw);
+    let bad = || std::io::Error::new(std::io::ErrorKind::InvalidData,
+                                     "malformed http response");
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(bad)?;
+    let body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .ok_or_else(bad)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::batcher::{BatchExec, Batcher, BatcherConfig};
+    use crate::tensor::ParamSet;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body_and_keep_alive() {
+        let raw = "POST /v1/predict HTTP/1.1\r\nHost: x\r\n\
+                   Content-Length: 4\r\n\r\nabcdGET /healthz HTTP/1.1\
+                   \r\nConnection: close\r\n\r\n";
+        let mut r = Cursor::new(raw.as_bytes());
+        let one = read_request(&mut r).ok().flatten().unwrap();
+        assert_eq!(one.method, "POST");
+        assert_eq!(one.path, "/v1/predict");
+        assert_eq!(one.body, "abcd");
+        assert!(one.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        let two = read_request(&mut r).ok().flatten().unwrap();
+        assert_eq!(two.method, "GET");
+        assert!(!two.keep_alive, "Connection: close honored");
+        assert!(read_request(&mut r).ok().flatten().is_none(),
+                "clean EOF after the last request");
+    }
+
+    #[test]
+    fn rejects_oversized_and_malformed_requests() {
+        let raw = format!(
+            "POST /v1/predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        match read_request(&mut Cursor::new(raw.as_bytes())) {
+            Err(ReadError::TooLarge(n)) => {
+                assert_eq!(n, MAX_BODY_BYTES + 1)
+            }
+            _ => panic!("oversized body must be refused up front"),
+        }
+        match read_request(&mut Cursor::new(b"garbage\r\n\r\n" as &[u8]))
+        {
+            Err(ReadError::Malformed(_)) => {}
+            _ => panic!("malformed request line must error"),
+        }
+    }
+
+    /// 2-float rows, 2 "classes": identity executor at version 3.
+    struct Echo;
+
+    impl BatchExec for Echo {
+        fn predict(&self, _rows: usize, x: &[f32])
+            -> Result<(u64, Vec<f32>), String> {
+            Ok((3, x.to_vec()))
+        }
+    }
+
+    fn test_ctx() -> Arc<ServeCtx> {
+        let specs = vec![("w".to_string(), vec![2usize])];
+        let state = Arc::new(ServeState::new(ParamSet::zeros(&specs),
+                                             "boot"));
+        let batcher = Arc::new(Batcher::start(
+            BatcherConfig {
+                max_batch: 4,
+                deadline: Duration::from_millis(2),
+                row_len: 2,
+                classes: 2,
+                max_inflight: 1,
+            },
+            Arc::new(Echo),
+        ));
+        Arc::new(ServeCtx {
+            state,
+            batcher,
+            model_key: "echo_b4".into(),
+            row_len: 2,
+            classes: 2,
+            max_batch: 4,
+            replicas: 0,
+        })
+    }
+
+    #[test]
+    fn server_routes_and_status_codes_end_to_end() {
+        let mut server = Server::start(0, test_ctx()).unwrap();
+        let addr = server.addr();
+        // 200 with echoed predictions + the executor's version.
+        let (status, body) = client_request(
+            addr, "POST", "/v1/predict",
+            r#"{"instances": [[1.5, -2.0]]}"#).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("weight_version").unwrap().as_i64(), Some(3));
+        let preds = j.get("predictions").unwrap().as_arr().unwrap();
+        assert_eq!(preds.len(), 1);
+        // healthz reports the state's version (0 at boot).
+        let (status, body) =
+            client_request(addr, "GET", "/healthz", "").unwrap();
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(j.get("weight_version").unwrap().as_i64(), Some(0));
+        // metrics is well-formed JSON with the histograms.
+        let (status, body) =
+            client_request(addr, "GET", "/metrics", "").unwrap();
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        assert!(j.get("latency_ns").unwrap().get("count").is_some());
+        // Error statuses: 400 / 413 / 404 / 405.
+        let (status, _) = client_request(
+            addr, "POST", "/v1/predict", "not json").unwrap();
+        assert_eq!(status, 400);
+        let (status, _) = client_request(
+            addr, "POST", "/v1/predict",
+            r#"{"instances": [[1,2],[1,2],[1,2],[1,2],[1,2]]}"#)
+            .unwrap();
+        assert_eq!(status, 413, "5 rows > max_batch 4");
+        let (status, _) =
+            client_request(addr, "GET", "/nope", "").unwrap();
+        assert_eq!(status, 404);
+        let (status, _) =
+            client_request(addr, "GET", "/v1/predict", "").unwrap();
+        assert_eq!(status, 405);
+        assert!(server.requests() >= 7);
+        server.shutdown();
+        // Shutdown is idempotent and new connections now fail fast or
+        // get dropped; either way the server thread is gone.
+        server.shutdown();
+    }
+}

@@ -1,0 +1,189 @@
+//! Typed JSON bodies for the serving API, built on the crate's own
+//! parser ([`crate::util::json`] — no serde in the offline tree).
+//!
+//! Float transport is exact: an `f32` widened to `f64` serializes via
+//! Rust's shortest-roundtrip formatting and parses back to the same
+//! `f64`, whose narrowing to `f32` is the original value. The e2e suite
+//! leans on this to compare HTTP responses *bitwise* against a locally
+//! computed forward pass.
+
+use crate::util::json::Json;
+
+/// A decoded `POST /v1/predict` body: `rows` row-major input rows,
+/// flattened.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictRequest {
+    pub rows: usize,
+    pub x: Vec<f32>,
+}
+
+/// Why a request body was rejected (maps to HTTP 400 vs 413).
+#[derive(Clone, Debug, PartialEq)]
+pub enum BodyError {
+    /// Malformed JSON or wrong shape/types — HTTP 400.
+    Bad(String),
+    /// Well-formed but more rows than the server's `--max-batch` —
+    /// HTTP 413.
+    TooLarge { rows: usize, max_rows: usize },
+}
+
+impl std::fmt::Display for BodyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BodyError::Bad(m) => write!(f, "{m}"),
+            BodyError::TooLarge { rows, max_rows } => write!(
+                f,
+                "request has {rows} instances, server max-batch is \
+                 {max_rows}"
+            ),
+        }
+    }
+}
+
+/// Parse `{"instances": [[f32; row_len], ...]}`. Every instance must
+/// be a flat array of exactly `row_len` finite numbers; at least one
+/// and at most `max_rows` instances.
+pub fn parse_predict_request(body: &str, row_len: usize, max_rows: usize)
+    -> Result<PredictRequest, BodyError> {
+    let bad = BodyError::Bad;
+    let j = Json::parse(body)
+        .map_err(|e| bad(format!("invalid JSON: {e}")))?;
+    let instances = j
+        .get("instances")
+        .ok_or_else(|| bad("missing required key \"instances\"".into()))?
+        .as_arr()
+        .ok_or_else(|| bad("\"instances\" must be an array".into()))?;
+    if instances.is_empty() {
+        return Err(bad("\"instances\" must be non-empty".into()));
+    }
+    if instances.len() > max_rows {
+        return Err(BodyError::TooLarge {
+            rows: instances.len(),
+            max_rows,
+        });
+    }
+    let mut x = Vec::with_capacity(instances.len() * row_len);
+    for (i, inst) in instances.iter().enumerate() {
+        let row = inst.as_arr().ok_or_else(|| {
+            bad(format!("instance {i} must be an array of numbers"))
+        })?;
+        if row.len() != row_len {
+            return Err(bad(format!(
+                "instance {i} has {} values, model expects {row_len} \
+                 (seq_len * features)",
+                row.len()
+            )));
+        }
+        for (k, v) in row.iter().enumerate() {
+            let f = v.as_f64().ok_or_else(|| {
+                bad(format!("instance {i}[{k}] is not a number"))
+            })?;
+            if !f.is_finite() {
+                return Err(bad(format!(
+                    "instance {i}[{k}] is not finite"
+                )));
+            }
+            x.push(f as f32);
+        }
+    }
+    Ok(PredictRequest { rows: instances.len(), x })
+}
+
+/// `{"predictions": [[f32; classes], ...], "weight_version": v}`.
+pub fn predict_response(logits: &[f32], classes: usize, version: u64)
+    -> String {
+    debug_assert_eq!(logits.len() % classes, 0);
+    let rows: Vec<Json> = logits
+        .chunks_exact(classes)
+        .map(|row| {
+            Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect())
+        })
+        .collect();
+    Json::obj(vec![
+        ("predictions", Json::Arr(rows)),
+        ("weight_version", Json::Num(version as f64)),
+    ])
+    .to_string_compact()
+}
+
+/// `{"error": msg}` — every non-200 body has this shape.
+pub fn error_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_well_formed_request() {
+        let body = r#"{"instances": [[1.0, 2.5], [-3.0, 0.125]]}"#;
+        let req = parse_predict_request(body, 2, 8).unwrap();
+        assert_eq!(req.rows, 2);
+        assert_eq!(req.x, vec![1.0, 2.5, -3.0, 0.125]);
+    }
+
+    #[test]
+    fn rejects_malformed_bodies_with_reasons() {
+        for (body, needle) in [
+            ("not json", "invalid JSON"),
+            ("{}", "instances"),
+            (r#"{"instances": 3}"#, "array"),
+            (r#"{"instances": []}"#, "non-empty"),
+            (r#"{"instances": [[1.0]]}"#, "expects 2"),
+            (r#"{"instances": [[1.0, "x"]]}"#, "not a number"),
+        ] {
+            match parse_predict_request(body, 2, 8) {
+                Err(BodyError::Bad(m)) => {
+                    assert!(m.contains(needle), "{body}: {m}")
+                }
+                other => panic!("{body}: expected Bad, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_request_is_too_large_not_bad() {
+        let body = r#"{"instances": [[1.0], [2.0], [3.0]]}"#;
+        assert_eq!(
+            parse_predict_request(body, 1, 2),
+            Err(BodyError::TooLarge { rows: 3, max_rows: 2 })
+        );
+    }
+
+    #[test]
+    fn f32_roundtrips_bitwise_through_response_json() {
+        // Awkward values: subnormal, almost-1, big, tiny negative.
+        let logits = [
+            1.1754944e-38f32,
+            0.1,
+            -0.30000001,
+            3.4e38,
+            0.999_999_94,
+            -7.0e-9,
+        ];
+        let body = predict_response(&logits, 3, 42);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("weight_version").unwrap().as_i64(), Some(42));
+        let rows = j.get("predictions").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        let mut back = Vec::new();
+        for row in rows {
+            for v in row.as_arr().unwrap() {
+                back.push(v.as_f64().unwrap() as f32);
+            }
+        }
+        assert_eq!(back.len(), logits.len());
+        for (a, b) in back.iter().zip(&logits) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+        }
+    }
+
+    #[test]
+    fn error_body_is_json() {
+        let b = error_body("bad \"thing\"\n");
+        let j = Json::parse(&b).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(),
+                   Some("bad \"thing\"\n"));
+    }
+}

@@ -1,0 +1,613 @@
+//! HTTP inference serving for trained checkpoints (PR 6's tentpole).
+//!
+//! The `serve` subcommand turns a training output directory into a
+//! dependency-free HTTP/1.1 prediction service running the native
+//! Layer-DAG backend:
+//!
+//! ```text
+//!   POST /v1/predict ── parse ([`json`]) ── [`batcher`] ──┐
+//!   POST /v1/predict ── parse ─────────────── (coalesce) ──┤
+//!                                                          ▼
+//!                                 one predict_rows() pass, either
+//!                                 in-process or fanned over rank-
+//!                                 sharded replicas ([`replica`])
+//!                                                          │
+//!   GET /healthz, /metrics ◄── [`ServeState`] ◄── [`reload`] watcher
+//! ```
+//!
+//! Three moving parts, each its own module with its own tests:
+//!
+//! * [`batcher`] — micro-batches concurrent requests into one forward
+//!   pass (flush on `--max-batch` rows or `--batch-deadline-ms`,
+//!   whichever first).
+//! * [`replica`] — with `--replicas N`, an (N+1)-rank `Comm` world
+//!   (inproc or TCP) where rank 0 dispatches batches to replica ranks
+//!   with a per-batch timeout and a single retry on peer failure.
+//! * [`reload`] — polls the checkpoint dir and hot-swaps the newest
+//!   valid `ParamSet` with one atomic `Arc` flip; in-flight batches
+//!   finish on the weights they started with, and a torn or wrong
+//!   checkpoint is logged and skipped, never served.
+//!
+//! [`ServeState`] is the hinge: the current weights + version that the
+//! HTTP layer reports, the reloader publishes to, and the executors
+//! snapshot per batch.
+
+pub mod batcher;
+pub mod http;
+pub mod json;
+pub mod reload;
+pub mod replica;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::coordinator::config::ConfigError;
+use crate::mpi;
+use crate::runtime::executor::ModelExecutables;
+use crate::runtime::native::meta_for_key;
+use crate::simulator::CostModel;
+use crate::tensor::ParamSet;
+use crate::util::json::Json;
+
+use batcher::{BatchExec, Batcher, BatcherConfig};
+use reload::Watcher;
+use replica::ReplicaPool;
+
+/// Weight-publication hook: `(version, flat weights)`. The replica
+/// pool registers one so a reload reaches every replica rank.
+type PublishHook = Box<dyn Fn(u64, Arc<Vec<f32>>) + Send + Sync>;
+
+/// What the one write lock guards: the weights, their version, and
+/// where they came from — always consistent with each other, so an
+/// executor's per-batch snapshot can truthfully report which version
+/// it computed with.
+struct Current {
+    version: u64,
+    params: Arc<ParamSet>,
+    source: String,
+}
+
+/// The served weights and their provenance. Readers (`/healthz`, the
+/// executors) clone an `Arc<ParamSet>` and are immune to concurrent
+/// swaps; the reload watcher is the only writer after boot.
+pub struct ServeState {
+    current: RwLock<Current>,
+    reload_errors: AtomicU64,
+    expected_params: usize,
+    on_publish: Mutex<Option<PublishHook>>,
+}
+
+impl ServeState {
+    /// Boot with the initial weights. Version 0 is the boot version;
+    /// every successful reload increments it.
+    pub fn new(ps: ParamSet, source: &str) -> ServeState {
+        ServeState {
+            expected_params: ps.num_params(),
+            current: RwLock::new(Current {
+                version: 0,
+                params: Arc::new(ps),
+                source: source.to_string(),
+            }),
+            reload_errors: AtomicU64::new(0),
+            on_publish: Mutex::new(None),
+        }
+    }
+
+    /// Parameter count every published checkpoint must match.
+    pub fn expected_params(&self) -> usize {
+        self.expected_params
+    }
+
+    /// Atomically swap in new weights; returns the new version.
+    /// In-flight batches keep the `Arc` they already snapshotted.
+    pub fn publish(&self, ps: ParamSet, source: &str) -> u64 {
+        assert_eq!(ps.num_params(), self.expected_params,
+                   "publish with wrong parameter count");
+        let flat = Arc::new(ps.flat().to_vec());
+        let version = {
+            let mut cur = self.current.write().unwrap();
+            cur.version += 1;
+            cur.params = Arc::new(ps);
+            cur.source = source.to_string();
+            cur.version
+        };
+        if let Some(hook) = self.on_publish.lock().unwrap().as_ref() {
+            hook(version, flat);
+        }
+        version
+    }
+
+    pub fn version(&self) -> u64 {
+        self.current.read().unwrap().version
+    }
+
+    /// Snapshot of the current weights.
+    pub fn params(&self) -> Arc<ParamSet> {
+        self.current.read().unwrap().params.clone()
+    }
+
+    /// Consistent (version, weights) snapshot for an executor.
+    pub fn params_versioned(&self) -> (u64, Arc<ParamSet>) {
+        let cur = self.current.read().unwrap();
+        (cur.version, cur.params.clone())
+    }
+
+    /// Where the current weights came from (path or "init").
+    pub fn source(&self) -> String {
+        self.current.read().unwrap().source.clone()
+    }
+
+    pub fn note_reload_error(&self) {
+        self.reload_errors.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Checkpoints seen but rejected (corrupt / wrong model) since boot.
+    pub fn reload_errors(&self) -> u64 {
+        self.reload_errors.load(Ordering::SeqCst)
+    }
+
+    /// Register the weight-publication hook (replica broadcast).
+    pub fn set_on_publish(&self, hook: PublishHook) {
+        *self.on_publish.lock().unwrap() = Some(hook);
+    }
+}
+
+/// `serve` subcommand configuration (flags or the `"serve"` block of a
+/// JSON config file — see [`ServeConfig::from_json`]).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Model family: `mlp` | `lstm` (must match the checkpoint).
+    pub model: String,
+    /// Directory the training run writes `*.mplw` checkpoints into.
+    pub checkpoint_dir: PathBuf,
+    /// TCP port to listen on (0 = ephemeral, for tests).
+    pub port: u16,
+    /// Rows per forward pass — the compiled batch variant, the flush
+    /// threshold, and the per-request row cap (HTTP 413 above it).
+    pub max_batch: usize,
+    /// Micro-batch flush deadline for partial batches.
+    pub batch_deadline_ms: u64,
+    /// Inference replica ranks (0 = run the model in-process).
+    pub replicas: usize,
+    /// Carry replica traffic over a localhost TCP mesh instead of
+    /// in-process channels.
+    pub tcp: bool,
+    /// First port of the replica TCP mesh (with `tcp`).
+    pub base_port: u16,
+    /// Checkpoint dir poll interval.
+    pub poll_ms: u64,
+    /// Per-batch replica deadline before mark-dead + retry.
+    pub replica_timeout_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            model: "lstm".into(),
+            checkpoint_dir: PathBuf::from("runs/ckpt"),
+            port: 8080,
+            max_batch: 32,
+            batch_deadline_ms: 5,
+            replicas: 0,
+            tcp: false,
+            base_port: 47800,
+            poll_ms: 500,
+            replica_timeout_ms: 2_000,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The compiled-variant key this config serves. Parameter counts
+    /// are batch-independent, so any `--max-batch` serves checkpoints
+    /// from any `train --batch`.
+    pub fn model_key(&self) -> String {
+        format!("{}_b{}", self.model, self.max_batch)
+    }
+
+    pub fn from_file(path: &Path) -> Result<ServeConfig, ConfigError> {
+        Self::from_json(&crate::coordinator::config::load_json(path)?)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<ServeConfig, ConfigError> {
+        let j = Json::parse(text)
+            .map_err(|e| ConfigError::Parse(e.to_string()))?;
+        Self::from_json(&j)
+    }
+
+    /// Accepts either a bare object of serve keys or a file with a
+    /// top-level `"serve"` block (so one job.json can hold both the
+    /// train and serve halves of a deployment).
+    pub fn from_json(j: &Json) -> Result<ServeConfig, ConfigError> {
+        let invalid = ConfigError::Invalid;
+        let j = j.get("serve").unwrap_or(j);
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = j.get("model") {
+            cfg.model = v.as_str()
+                .ok_or_else(|| invalid("\"model\" must be a string"
+                    .into()))?
+                .to_string();
+        }
+        if let Some(v) = j.get("checkpoint_dir") {
+            cfg.checkpoint_dir = PathBuf::from(v.as_str().ok_or_else(
+                || invalid("\"checkpoint_dir\" must be a string".into()),
+            )?);
+        }
+        let num = |key: &str, j: &Json| -> Result<Option<usize>,
+                                                  ConfigError> {
+            match j.get(key) {
+                Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                    ConfigError::Invalid(format!(
+                        "\"{key}\" must be a non-negative integer"
+                    ))
+                }),
+                None => Ok(None),
+            }
+        };
+        if let Some(v) = num("port", j)? {
+            cfg.port = v as u16;
+        }
+        if let Some(v) = num("max_batch", j)? {
+            cfg.max_batch = v;
+        }
+        if let Some(v) = num("batch_deadline_ms", j)? {
+            cfg.batch_deadline_ms = v as u64;
+        }
+        if let Some(v) = num("replicas", j)? {
+            cfg.replicas = v;
+        }
+        if let Some(v) = j.get("tcp") {
+            cfg.tcp = v.as_bool()
+                .ok_or_else(|| invalid("\"tcp\" must be a bool".into()))?;
+        }
+        if let Some(v) = num("base_port", j)? {
+            cfg.base_port = v as u16;
+        }
+        if let Some(v) = num("poll_ms", j)? {
+            cfg.poll_ms = v as u64;
+        }
+        if let Some(v) = num("replica_timeout_ms", j)? {
+            cfg.replica_timeout_ms = v as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_batch == 0 {
+            return Err(ConfigError::Invalid(
+                "\"max_batch\" must be >= 1".into()));
+        }
+        if self.replicas > 256 {
+            return Err(ConfigError::Invalid(format!(
+                "\"replicas\" ({}) exceeds the supported maximum (256)",
+                self.replicas
+            )));
+        }
+        if meta_for_key(&self.model_key()).is_none() {
+            return Err(ConfigError::Invalid(format!(
+                "unknown model family \"{}\" (mlp | lstm)", self.model
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// In-process executor: snapshot the current weights, one batched
+/// forward pass. The snapshot-per-batch is what makes hot reload safe
+/// without locks in the compute path.
+struct LocalExec {
+    exe: Arc<ModelExecutables>,
+    state: Arc<ServeState>,
+}
+
+impl BatchExec for LocalExec {
+    fn predict(&self, rows: usize, x: &[f32])
+        -> Result<(u64, Vec<f32>), String> {
+        let (version, params) = self.state.params_versioned();
+        self.exe
+            .predict_rows(&params, x, rows)
+            .map(|logits| (version, logits))
+            .map_err(|e| e.to_string())
+    }
+}
+
+/// A running serve stack; dropping (or `stop()`) shuts every layer
+/// down in dependency order. Tests and the e2e suite boot this on an
+/// ephemeral port instead of shelling out.
+pub struct ServeHandle {
+    server: http::Server,
+    watcher: Watcher,
+    batcher: Arc<Batcher>,
+    state: Arc<ServeState>,
+    pool: Option<Arc<ReplicaPool>>,
+}
+
+impl ServeHandle {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.addr()
+    }
+
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    pub fn stop(&mut self) {
+        // Watcher first (no more publishes), then stop accepting HTTP,
+        // then drain the batcher, then retire the replicas.
+        self.watcher.stop();
+        self.server.shutdown();
+        self.batcher.shutdown();
+        if let Some(pool) = &self.pool {
+            pool.shutdown();
+        }
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Boot the full serving stack: initial weights (newest checkpoint in
+/// the dir, else Glorot init at version 0), executor (in-process or
+/// replica pool), micro-batcher, reload watcher, HTTP server.
+pub fn start(cfg: &ServeConfig) -> Result<ServeHandle, String> {
+    cfg.validate().map_err(|e| e.to_string())?;
+    let meta = meta_for_key(&cfg.model_key())
+        .ok_or_else(|| format!("unknown model key {}", cfg.model_key()))?;
+    let exe = Arc::new(
+        ModelExecutables::native(&meta).map_err(|e| e.to_string())?);
+
+    // Initial weights: newest checkpoint if the dir has one.
+    let mut initial_fp = None;
+    let (boot, source) = match reload::scan_newest(&cfg.checkpoint_dir) {
+        Some(path) => {
+            let ps = ParamSet::load(&path).map_err(|e| {
+                format!("loading {}: {e}", path.display())
+            })?;
+            if ps.num_params() != meta.param_count {
+                return Err(format!(
+                    "{} has {} params, {} expects {}",
+                    path.display(), ps.num_params(), cfg.model_key(),
+                    meta.param_count
+                ));
+            }
+            initial_fp = reload::fingerprint(&path).ok();
+            let source = path.display().to_string();
+            (ps, source)
+        }
+        None => {
+            log::warn!(
+                "serve: no checkpoint in {} yet — serving Glorot-init \
+                 weights until one appears",
+                cfg.checkpoint_dir.display()
+            );
+            let mut rng = crate::util::rng::Rng::new(2017);
+            (exe.init_params(&mut rng), "init".to_string())
+        }
+    };
+    let state = Arc::new(ServeState::new(boot, &source));
+
+    // Executor: local, or a replica pool over the Comm layer.
+    let (exec, pool): (Arc<dyn BatchExec>, Option<Arc<ReplicaPool>>) =
+        if cfg.replicas == 0 {
+            (Arc::new(LocalExec { exe: exe.clone(),
+                                  state: state.clone() }),
+             None)
+        } else {
+            let world = if cfg.tcp {
+                mpi::tcp_world(cfg.replicas + 1, cfg.base_port)
+                    .map_err(|e| format!("replica tcp mesh: {e:?}"))?
+            } else {
+                mpi::inproc_world(cfg.replicas + 1)
+            };
+            let init = Arc::new(state.params().flat().to_vec());
+            let pool = Arc::new(ReplicaPool::start(
+                world, exe.clone(), init,
+                Duration::from_millis(cfg.replica_timeout_ms)));
+            let hooked = pool.clone();
+            state.set_on_publish(Box::new(move |version, flat| {
+                hooked.broadcast_weights(version, flat);
+            }));
+            (pool.clone() as Arc<dyn BatchExec>, Some(pool))
+        };
+
+    let batcher = Arc::new(Batcher::start(
+        BatcherConfig {
+            max_batch: cfg.max_batch,
+            deadline: Duration::from_millis(cfg.batch_deadline_ms),
+            row_len: meta.seq_len * meta.features,
+            classes: meta.classes,
+            max_inflight: cfg.replicas.max(1),
+        },
+        exec,
+    ));
+
+    let watcher = Watcher::start(
+        cfg.checkpoint_dir.clone(),
+        Duration::from_millis(cfg.poll_ms.max(1)),
+        state.clone(),
+        initial_fp,
+    );
+
+    let ctx = Arc::new(http::ServeCtx {
+        state: state.clone(),
+        batcher: batcher.clone(),
+        model_key: cfg.model_key(),
+        row_len: meta.seq_len * meta.features,
+        classes: meta.classes,
+        max_batch: cfg.max_batch,
+        replicas: cfg.replicas,
+    });
+    let server = http::Server::start(cfg.port, ctx)
+        .map_err(|e| format!("http listen on port {}: {e}", cfg.port))?;
+    log::info!(
+        "serve: {} on http://{} ({} replicas, max-batch {}, \
+         weights from {})",
+        cfg.model_key(), server.addr(), cfg.replicas, cfg.max_batch,
+        source
+    );
+    Ok(ServeHandle { server, watcher, batcher, state, pool })
+}
+
+/// `serve` subcommand entry: boot and block forever (the process is
+/// stopped by signal — systemd/CI kill the whole process group).
+pub fn run_serve(cfg: &ServeConfig) -> Result<(), String> {
+    let handle = start(cfg)?;
+    // Periodic operational dump, JsonlLogger-style, to the log.
+    loop {
+        std::thread::sleep(Duration::from_secs(30));
+        let lat = handle.batcher.latency();
+        log::info!(
+            "serve: weights v{} | {} batches | p50 {}ns p99 {}ns",
+            handle.state.version(), lat.count(), lat.p50(), lat.p99()
+        );
+    }
+}
+
+/// Batch sizes the serving bench (and BENCH_pr.json block) covers.
+pub const SERVE_BENCH_BATCHES: [usize; 3] = [1, 8, 32];
+/// Replica counts the serving bench covers.
+pub const SERVE_BENCH_REPLICAS: [usize; 2] = [1, 4];
+
+/// The deterministic `serving` block of `BENCH_pr.json` (schema 3).
+///
+/// Like the `collective_ns` block, these are closed-form cost-model
+/// numbers — reproducible on any machine, so the committed file can be
+/// gated with `git diff --exit-code` in CI. The model: a forward pass
+/// costs a third of [`CostModel::grad_time_nominal`] (one of
+/// forward/backward/update), plus fixed HTTP+batching overhead and one
+/// frontend→replica RPC hop on the cluster preset's intra-node link.
+/// Real measured latencies go to `runs/bench/serve_bench.json` (not
+/// committed) via `benches/serve_bench.rs`.
+pub fn bench_block() -> Json {
+    let cost = CostModel::cluster(3023);
+    // Request parse + micro-batch assembly on the frontend.
+    let http_overhead = 100.0e-6;
+    // One ServeRequest/ServeReply round trip (intra-node link).
+    let rpc_hop = 2.0 * cost.intra_latency + 20.0e-6;
+    let mut p50: Vec<(String, Json)> = Vec::new();
+    let mut p99: Vec<(String, Json)> = Vec::new();
+    let mut qps: Vec<(String, Json)> = Vec::new();
+    for &r in &SERVE_BENCH_REPLICAS {
+        for &b in &SERVE_BENCH_BATCHES {
+            let fwd = cost.grad_time_nominal(b) / 3.0;
+            let lat50 = http_overhead + rpc_hop + fwd;
+            // Tail: one straggling replica redo's worth of slack.
+            let lat99 = lat50 * 1.25 + cost.latency;
+            // Replicas pipeline independently; the frontend overhead
+            // amortizes across in-flight batches.
+            let throughput = r as f64 * b as f64 / (fwd + rpc_hop);
+            let key = format!("b{b}_r{r}");
+            p50.push((key.clone(), Json::Num((lat50 * 1e9).round())));
+            p99.push((key.clone(), Json::Num((lat99 * 1e9).round())));
+            qps.push((key, Json::Num(throughput.round())));
+        }
+    }
+    let obj = |pairs: Vec<(String, Json)>| {
+        Json::Obj(pairs.into_iter().collect())
+    };
+    Json::obj(vec![
+        ("model_params", Json::Num(3023.0)),
+        ("p50_ns", obj(p50)),
+        ("p99_ns", obj(p99)),
+        ("qps", obj(qps)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_parses_json_block() {
+        let cfg = ServeConfig::from_json_text(
+            r#"{"serve": {"model": "mlp", "checkpoint_dir": "out",
+                 "port": 9000, "max_batch": 8, "replicas": 2,
+                 "batch_deadline_ms": 3, "poll_ms": 100}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "mlp");
+        assert_eq!(cfg.model_key(), "mlp_b8");
+        assert_eq!(cfg.port, 9000);
+        assert_eq!(cfg.replicas, 2);
+        assert_eq!(cfg.batch_deadline_ms, 3);
+        // Bare object (no "serve" wrapper) works too.
+        let cfg = ServeConfig::from_json_text(r#"{"model": "lstm"}"#)
+            .unwrap();
+        assert_eq!(cfg.model, "lstm");
+    }
+
+    #[test]
+    fn serve_config_rejects_bad_values() {
+        for text in [
+            r#"{"serve": {"max_batch": 0}}"#,
+            r#"{"serve": {"replicas": 1000}}"#,
+            r#"{"serve": {"model": "resnet"}}"#,
+            r#"{"serve": {"port": "eighty"}}"#,
+        ] {
+            assert!(ServeConfig::from_json_text(text).is_err(),
+                    "{text} must be rejected");
+        }
+    }
+
+    #[test]
+    fn serve_state_publish_runs_hook_and_snapshots() {
+        let specs = vec![("w".to_string(), vec![3usize])];
+        let state = ServeState::new(ParamSet::zeros(&specs), "boot");
+        let seen: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        {
+            let seen = seen.clone();
+            state.set_on_publish(Box::new(move |v, flat| {
+                assert_eq!(flat.len(), 3);
+                seen.lock().unwrap().push(v);
+            }));
+        }
+        let before = state.params();
+        let mut next = ParamSet::zeros(&specs);
+        next.flat_mut().fill(4.0);
+        assert_eq!(state.publish(next, "ckpt-1"), 1);
+        assert_eq!(state.version(), 1);
+        assert_eq!(state.source(), "ckpt-1");
+        assert_eq!(*seen.lock().unwrap(), vec![1]);
+        // The old snapshot is untouched — in-flight batches finish on
+        // the weights they started with.
+        assert!(before.flat().iter().all(|&x| x == 0.0));
+        assert!(state.params().flat().iter().all(|&x| x == 4.0));
+    }
+
+    #[test]
+    fn bench_block_is_deterministic_and_complete() {
+        let a = bench_block();
+        let b = bench_block();
+        assert_eq!(a.to_string_compact(), b.to_string_compact());
+        for section in ["p50_ns", "p99_ns", "qps"] {
+            let s = a.get(section).unwrap().as_obj().unwrap();
+            assert_eq!(s.len(), 6, "{section}");
+            for r in SERVE_BENCH_REPLICAS {
+                for bsz in SERVE_BENCH_BATCHES {
+                    let key = format!("b{bsz}_r{r}");
+                    assert!(s.contains_key(&key), "{section}.{key}");
+                }
+            }
+        }
+        let num = |sec: &str, key: &str| {
+            a.get(sec).unwrap().get(key).unwrap().as_f64().unwrap()
+        };
+        for r in SERVE_BENCH_REPLICAS {
+            for bsz in SERVE_BENCH_BATCHES {
+                let key = format!("b{bsz}_r{r}");
+                assert!(num("p99_ns", &key) > num("p50_ns", &key));
+                assert!(num("qps", &key) > 0.0);
+            }
+        }
+        // More replicas mean more throughput at the same batch size.
+        assert!(num("qps", "b32_r4") > num("qps", "b32_r1"));
+        // Bigger batches amortize overhead into higher QPS.
+        assert!(num("qps", "b32_r1") > num("qps", "b1_r1"));
+    }
+}

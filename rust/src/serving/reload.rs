@@ -1,0 +1,270 @@
+//! Hot checkpoint reload: poll the training output dir, swap in the
+//! newest valid `ParamSet` without dropping traffic.
+//!
+//! The watcher thread scans every `poll` interval for the newest
+//! `*.mplw` file (ignoring the `.tmp` siblings `ParamSet::save` stages
+//! writes through), fingerprints it (length + crc32), and on change
+//! attempts a load. A valid checkpoint of the right parameter count is
+//! published with one atomic `Arc` flip — in-flight requests keep the
+//! `Arc` they already cloned and finish on the old weights; every
+//! request that starts afterwards sees the new ones. An invalid file
+//! (torn copy from a non-atomic producer, wrong model, truncation) is
+//! logged and skipped: the server keeps serving the last good weights.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::serving::ServeState;
+use crate::tensor::ParamSet;
+
+/// Newest checkpoint in `dir`: `*.mplw` files only (the `.tmp` staging
+/// siblings are in-progress writes), ordered by modification time with
+/// a numeric-friendly name tiebreak — `(len, lexicographic)`, so
+/// `checkpoint-10` beats `checkpoint-9` written in the same instant.
+pub fn scan_newest(dir: &Path) -> Option<PathBuf> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    let mut best: Option<(std::time::SystemTime, (usize, String),
+                          PathBuf)> = None;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        if !name.ends_with(".mplw") {
+            continue;
+        }
+        let mtime = match entry.metadata().and_then(|m| m.modified()) {
+            Ok(t) => t,
+            Err(_) => continue,
+        };
+        let key = (mtime, (name.len(), name));
+        match &best {
+            Some((t, n, _)) if (t, n) >= (&key.0, &key.1) => {}
+            _ => best = Some((key.0, key.1, path)),
+        }
+    }
+    best.map(|(_, _, p)| p)
+}
+
+/// Cheap change detector: a checkpoint is "new" if its (path, length,
+/// crc32) differs from the last one we acted on. Length alone misses
+/// same-size rewrites; mtime alone has filesystem granularity issues.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    pub path: PathBuf,
+    pub len: u64,
+    pub crc: u32,
+}
+
+pub fn fingerprint(path: &Path) -> std::io::Result<Fingerprint> {
+    let bytes = std::fs::read(path)?;
+    let mut h = crc32fast::Hasher::new();
+    h.update(&bytes);
+    Ok(Fingerprint {
+        path: path.to_path_buf(),
+        len: bytes.len() as u64,
+        crc: h.finalize(),
+    })
+}
+
+/// One poll step, factored out of the thread loop for direct testing:
+/// returns `Some(version)` if a new checkpoint was published.
+pub fn poll_once(dir: &Path, state: &ServeState,
+                 last: &mut Option<Fingerprint>) -> Option<u64> {
+    let path = scan_newest(dir)?;
+    let fp = match fingerprint(&path) {
+        Ok(fp) => fp,
+        // Racing a producer's rename or delete — try again next poll.
+        Err(_) => return None,
+    };
+    if last.as_ref() == Some(&fp) {
+        return None;
+    }
+    match ParamSet::load(&path) {
+        Ok(ps) if ps.num_params() == state.expected_params() => {
+            // Remember the fingerprint only once acted on, so a file
+            // that changes again mid-poll is re-examined.
+            *last = Some(fp);
+            let version = state.publish(ps, &path.display().to_string());
+            log::info!(
+                "serve: reloaded weights v{version} from {}",
+                path.display()
+            );
+            Some(version)
+        }
+        Ok(ps) => {
+            *last = Some(fp);
+            state.note_reload_error();
+            log::warn!(
+                "serve: ignoring {} — has {} params, model expects {} \
+                 (wrong model family?); still serving v{}",
+                path.display(),
+                ps.num_params(),
+                state.expected_params(),
+                state.version()
+            );
+            None
+        }
+        Err(e) => {
+            *last = Some(fp);
+            state.note_reload_error();
+            log::warn!(
+                "serve: failed to load {}: {e}; still serving v{}",
+                path.display(),
+                state.version()
+            );
+            None
+        }
+    }
+}
+
+/// Handle to the watcher thread; `stop()` joins it.
+pub struct Watcher {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Watcher {
+    /// Spawn the polling thread. The initial fingerprint covers the
+    /// checkpoint the server booted from (if any), so startup does not
+    /// immediately re-publish identical weights.
+    pub fn start(dir: PathBuf, poll: Duration, state: Arc<ServeState>,
+                 initial: Option<Fingerprint>) -> Watcher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut last = initial;
+                while !stop.load(Ordering::Relaxed) {
+                    poll_once(&dir, &state, &mut last);
+                    std::thread::sleep(poll);
+                }
+            })
+        };
+        Watcher { stop, thread: Some(thread) }
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Watcher {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ParamSet;
+
+    fn specs() -> Vec<(String, Vec<usize>)> {
+        vec![("w".into(), vec![4]), ("b".into(), vec![2])]
+    }
+
+    fn ps(fill: f32) -> ParamSet {
+        let mut p = ParamSet::zeros(&specs());
+        p.flat_mut().fill(fill);
+        p
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mpi_learn_reload_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn scan_skips_tmp_and_prefers_numeric_order() {
+        let d = tmpdir("scan");
+        ps(1.0).save(&d.join("checkpoint-9.mplw")).unwrap();
+        ps(2.0).save(&d.join("checkpoint-10.mplw")).unwrap();
+        std::fs::write(d.join("checkpoint-99.mplw.tmp"), b"torn")
+            .unwrap();
+        std::fs::write(d.join("notes.txt"), b"ignored").unwrap();
+        // Equal-mtime tiebreak must pick checkpoint-10 over -9; if the
+        // filesystem gave -10 a later mtime the outcome is the same.
+        let newest = scan_newest(&d).unwrap();
+        assert_eq!(newest.file_name().unwrap(), "checkpoint-10.mplw");
+    }
+
+    #[test]
+    fn scan_empty_dir_is_none() {
+        let d = tmpdir("empty");
+        assert_eq!(scan_newest(&d), None);
+        assert_eq!(scan_newest(&d.join("missing")), None);
+    }
+
+    #[test]
+    fn poll_publishes_new_checkpoint_and_bumps_version() {
+        let d = tmpdir("publish");
+        let state = ServeState::new(ps(0.0), "boot");
+        let mut last = None;
+        // Nothing there yet.
+        assert_eq!(poll_once(&d, &state, &mut last), None);
+        ps(1.5).save(&d.join("checkpoint-1.mplw")).unwrap();
+        assert_eq!(poll_once(&d, &state, &mut last), Some(1));
+        assert_eq!(state.version(), 1);
+        assert!(state.params().flat().iter().all(|&x| x == 1.5));
+        // Unchanged file: no re-publish.
+        assert_eq!(poll_once(&d, &state, &mut last), None);
+        assert_eq!(state.version(), 1);
+        // A newer checkpoint wins.
+        ps(2.5).save(&d.join("checkpoint-2.mplw")).unwrap();
+        assert_eq!(poll_once(&d, &state, &mut last), Some(2));
+        assert!(state.params().flat().iter().all(|&x| x == 2.5));
+    }
+
+    #[test]
+    fn poll_keeps_serving_through_bad_checkpoints() {
+        let d = tmpdir("bad");
+        let state = ServeState::new(ps(7.0), "boot");
+        let mut last = None;
+        // Corrupt file: logged, counted, old weights keep serving.
+        std::fs::write(d.join("checkpoint-1.mplw"), b"MPLWgarbage")
+            .unwrap();
+        assert_eq!(poll_once(&d, &state, &mut last), None);
+        assert_eq!(state.version(), 0);
+        assert_eq!(state.reload_errors(), 1);
+        assert!(state.params().flat().iter().all(|&x| x == 7.0));
+        // Wrong parameter count: same containment.
+        let wrong = ParamSet::zeros(&[("w".into(), vec![3])]);
+        wrong.save(&d.join("checkpoint-2.mplw")).unwrap();
+        assert_eq!(poll_once(&d, &state, &mut last), None);
+        assert_eq!(state.version(), 0);
+        assert_eq!(state.reload_errors(), 2);
+        // And a good one still gets through afterwards.
+        ps(9.0).save(&d.join("checkpoint-3.mplw")).unwrap();
+        assert_eq!(poll_once(&d, &state, &mut last), Some(1));
+        assert!(state.params().flat().iter().all(|&x| x == 9.0));
+    }
+
+    #[test]
+    fn watcher_thread_picks_up_changes() {
+        let d = tmpdir("thread");
+        let state = Arc::new(ServeState::new(ps(0.0), "boot"));
+        let mut w = Watcher::start(d.clone(),
+                                   Duration::from_millis(10),
+                                   state.clone(), None);
+        ps(3.0).save(&d.join("best.mplw")).unwrap();
+        let deadline = std::time::Instant::now()
+            + Duration::from_secs(10);
+        while state.version() == 0 {
+            assert!(std::time::Instant::now() < deadline,
+                    "watcher never published the new checkpoint");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(state.params().flat().iter().all(|&x| x == 3.0));
+        w.stop();
+    }
+}

@@ -1,0 +1,547 @@
+//! Rank-sharded inference replicas behind the micro-batcher.
+//!
+//! With `--replicas N` the serve plan is an (N+1)-rank world on the
+//! existing [`crate::mpi::Comm`] layer (inproc or TCP): rank 0 is the
+//! HTTP frontend, ranks `1..=N` each run a replica loop around
+//! `ModelExecutables::predict_rows`. The frontend's dispatcher thread
+//! owns the rank-0 `Comm` and fans flushed batches over idle replicas
+//! using the serve tag lane ([`Tag::ServeRequest`]/[`Tag::ServeReply`],
+//! pinned above the bucket block like PR 5's all-reduce lanes).
+//!
+//! Failure policy, per the serving contract: a replica that misses its
+//! per-batch deadline (or whose link drops) is marked dead and the
+//! batch is retried ONCE on another live replica; if the retry also
+//! fails — or no replica remains — only that batch's requests error
+//! (HTTP 503). Weight reloads are broadcast on the [`Tag::Weights`]
+//! lane; per-link FIFO ordering guarantees a replica finishes every
+//! batch accepted before the swap on the old weights.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::mpi::{Comm, Payload, Rank, Tag};
+use crate::runtime::executor::ModelExecutables;
+use crate::serving::batcher::BatchExec;
+use crate::tensor::ParamSet;
+
+enum PoolMsg {
+    Job(Job),
+    Weights(u64, Arc<Vec<f32>>),
+    Shutdown,
+}
+
+struct Job {
+    x: Vec<f32>,
+    retried: bool,
+    reply: mpsc::Sender<Result<(u64, Vec<f32>), String>>,
+}
+
+/// Reply `step` packing: low 32 bits batch id, high 32 bits the weight
+/// version the replica computed with — so the frontend can report the
+/// exact weights behind every response without a second message.
+const BATCH_ID_MASK: u64 = 0xFFFF_FFFF;
+
+/// Frontend handle: dispatcher thread + replica worker threads.
+/// Implements [`BatchExec`], so the batcher is oblivious to whether it
+/// flushes into a local executor or this pool.
+pub struct ReplicaPool {
+    // `Mutex` rather than bare `Sender` so the pool is `Sync` on every
+    // supported toolchain (std's Sender only became `Sync` recently).
+    ctrl: Mutex<mpsc::Sender<PoolMsg>>,
+    // Behind Mutexes so shutdown works through an `Arc<ReplicaPool>`
+    // (the publish hook and the serve handle share one).
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ReplicaPool {
+    /// Spawn replica loops on `comms[1..]` and the dispatcher on
+    /// `comms[0]`. `init` is the flat weight vector every replica
+    /// starts from (the frontend's boot checkpoint).
+    pub fn start(mut comms: Vec<Comm>, exe: Arc<ModelExecutables>,
+                 init: Arc<Vec<f32>>, timeout: Duration) -> ReplicaPool {
+        assert!(comms.len() >= 2, "need a frontend and >=1 replica");
+        let front = comms.remove(0);
+        let ranks: Vec<Rank> = (1..=comms.len()).collect();
+        let workers = comms
+            .into_iter()
+            .map(|comm| {
+                let exe = exe.clone();
+                let init = init.clone();
+                std::thread::spawn(move || run_replica(comm, &exe, &init))
+            })
+            .collect();
+        Self::start_frontend(front, ranks, timeout, workers)
+    }
+
+    /// Dispatcher only — tests use this to pair the frontend with
+    /// scripted replica threads (swallowers, echoes).
+    pub fn start_frontend(front: Comm, ranks: Vec<Rank>,
+                          timeout: Duration,
+                          workers: Vec<std::thread::JoinHandle<()>>)
+        -> ReplicaPool {
+        let (tx, rx) = mpsc::channel();
+        let dispatcher = std::thread::spawn(move || {
+            dispatch_loop(&front, ranks, timeout, &rx)
+        });
+        ReplicaPool {
+            ctrl: Mutex::new(tx),
+            dispatcher: Mutex::new(Some(dispatcher)),
+            workers: Mutex::new(workers),
+        }
+    }
+
+    /// Queue a weight swap: every live replica gets the new flat
+    /// vector on the Weights lane. FIFO per link means batches already
+    /// sent to a replica still run on the weights they were accepted
+    /// under — the pool-side half of "reload never drops traffic".
+    pub fn broadcast_weights(&self, version: u64, flat: Arc<Vec<f32>>) {
+        let _ = self.ctrl.lock().unwrap()
+            .send(PoolMsg::Weights(version, flat));
+    }
+
+    /// Stop the dispatcher (it drains in-flight batches, then sends
+    /// Exit to live replicas) and join every thread.
+    pub fn shutdown(&self) {
+        let _ = self.ctrl.lock().unwrap().send(PoolMsg::Shutdown);
+        if let Some(d) = self.dispatcher.lock().unwrap().take() {
+            let _ = d.join();
+        }
+        for w in self.workers.lock().unwrap().drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ReplicaPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl BatchExec for ReplicaPool {
+    fn predict(&self, rows: usize, x: &[f32])
+        -> Result<(u64, Vec<f32>), String> {
+        if rows == 0 || x.len() % rows != 0 {
+            return Err(format!(
+                "bad batch shape: {} floats / {rows} rows", x.len()
+            ));
+        }
+        let (tx, rx) = mpsc::channel();
+        let job = Job { x: x.to_vec(), retried: false, reply: tx };
+        self.ctrl.lock().unwrap()
+            .send(PoolMsg::Job(job))
+            .map_err(|_| "replica pool stopped".to_string())?;
+        rx.recv().unwrap_or_else(|_| Err("replica pool stopped".into()))
+    }
+}
+
+/// The frontend dispatcher: single owner of the rank-0 `Comm`.
+/// Batches arrive as control messages, go out tagged with a monotonic
+/// batch id (`Floats.step`), and replies are matched by (rank, id) —
+/// a late reply from a replica already declared dead is dropped.
+fn dispatch_loop(front: &Comm, ranks: Vec<Rank>, timeout: Duration,
+                 ctrl: &mpsc::Receiver<PoolMsg>) {
+    let mut alive = ranks;
+    let mut queued: VecDeque<Job> = VecDeque::new();
+    let mut inflight: HashMap<Rank, (u64, Instant, Job)> = HashMap::new();
+    let mut next_id: u64 = 1;
+    let mut shutdown = false;
+    loop {
+        // 1. Control messages: block briefly when fully idle, poll when
+        // work is pending.
+        let idle = queued.is_empty() && inflight.is_empty();
+        let first = if idle {
+            match ctrl.recv_timeout(Duration::from_millis(20)) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Some(PoolMsg::Shutdown)
+                }
+            }
+        } else {
+            match ctrl.try_recv() {
+                Ok(m) => Some(m),
+                Err(mpsc::TryRecvError::Empty) => None,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    Some(PoolMsg::Shutdown)
+                }
+            }
+        };
+        let mut msgs: Vec<PoolMsg> = first.into_iter().collect();
+        while let Ok(m) = ctrl.try_recv() {
+            msgs.push(m);
+        }
+        for m in msgs {
+            match m {
+                PoolMsg::Job(j) => queued.push_back(j),
+                PoolMsg::Weights(version, flat) => {
+                    alive.retain(|&r| {
+                        let p = Payload::floats_shared(version,
+                                                       flat.clone());
+                        let ok = front.send(r, Tag::Weights, p).is_ok();
+                        if !ok {
+                            log::warn!(
+                                "serve: replica {r} unreachable on \
+                                 weight broadcast; marking dead"
+                            );
+                        }
+                        ok
+                    });
+                }
+                PoolMsg::Shutdown => shutdown = true,
+            }
+        }
+        if shutdown && queued.is_empty() && inflight.is_empty() {
+            break;
+        }
+        let mut progress = false;
+        // 2. Assign queued batches to idle live replicas.
+        while let Some(job) = queued.pop_front() {
+            let slot = alive.iter().copied()
+                .find(|r| !inflight.contains_key(r));
+            let Some(r) = slot else {
+                queued.push_front(job);
+                break;
+            };
+            let id = next_id;
+            next_id += 1;
+            let p = Payload::floats(id, job.x.clone());
+            if front.send(r, Tag::ServeRequest, p).is_ok() {
+                inflight.insert(r, (id, Instant::now(), job));
+                progress = true;
+            } else {
+                log::warn!("serve: send to replica {r} failed; \
+                            marking dead");
+                alive.retain(|&a| a != r);
+                fail_or_retry(job, &mut queued, &alive,
+                              format!("replica {r} unreachable"));
+            }
+        }
+        if alive.is_empty() {
+            for job in queued.drain(..) {
+                let _ = job.reply
+                    .send(Err("no replicas alive".to_string()));
+            }
+        }
+        // 3. Replies — matched by (source rank, batch id).
+        while let Ok(Some(env)) = front.try_recv() {
+            if env.tag != Tag::ServeReply {
+                continue;
+            }
+            let src = env.src;
+            match env.payload.weights_like() {
+                Some((step, data)) => {
+                    let id = step & BATCH_ID_MASK;
+                    let version = step >> 32;
+                    let hit = matches!(
+                        inflight.get(&src),
+                        Some(&(want, _, _)) if want & BATCH_ID_MASK == id
+                    );
+                    if hit {
+                        let (_, _, job) = inflight.remove(&src).unwrap();
+                        let _ = job.reply
+                            .send(Ok((version, data.as_ref().clone())));
+                        progress = true;
+                    }
+                    // else: stale reply from a timed-out batch — drop.
+                }
+                None => {
+                    // Empty reply = replica-side predict error. That
+                    // is deterministic (bad shape), so no retry.
+                    if let Some((_, _, job)) = inflight.remove(&src) {
+                        let _ = job.reply.send(Err(format!(
+                            "replica {src} failed the batch"
+                        )));
+                        progress = true;
+                    }
+                }
+            }
+        }
+        // 4. Timeouts: mark dead, single retry elsewhere.
+        let now = Instant::now();
+        let expired: Vec<Rank> = inflight
+            .iter()
+            .filter(|(_, (_, sent, _))| {
+                now.duration_since(*sent) >= timeout
+            })
+            .map(|(&r, _)| r)
+            .collect();
+        for r in expired {
+            let (_, _, job) = inflight.remove(&r).unwrap();
+            alive.retain(|&a| a != r);
+            log::warn!(
+                "serve: replica {r} missed the {timeout:?} deadline; \
+                 marking dead"
+            );
+            fail_or_retry(job, &mut queued, &alive,
+                          format!("replica {r} timed out"));
+            progress = true;
+        }
+        if !idle && !progress {
+            // Busy-wait guard while batches are in flight.
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    for r in alive {
+        let _ = front.send(r, Tag::Exit, Payload::Empty);
+    }
+}
+
+/// Timeout/link-failure policy: one retry on another live replica,
+/// else the batch (and only this batch) errors.
+fn fail_or_retry(mut job: Job, queued: &mut VecDeque<Job>,
+                 alive: &[Rank], why: String) {
+    if job.retried || alive.is_empty() {
+        let _ = job.reply.send(Err(why));
+    } else {
+        job.retried = true;
+        queued.push_front(job);
+    }
+}
+
+/// One replica's serve loop: answer ServeRequest batches with the
+/// current weights, swap weights on the Weights lane, leave on Exit
+/// (or when the frontend's link drops).
+pub fn run_replica(comm: Comm, exe: &ModelExecutables,
+                   init: &[f32]) {
+    let mut params = ParamSet::zeros(&exe.meta.params);
+    params.set_flat(init);
+    let mut version: u64 = 0;
+    let row_len = exe.meta.seq_len * exe.meta.features;
+    loop {
+        let env = match comm.recv() {
+            Ok(e) => e,
+            Err(_) => break,
+        };
+        match env.tag {
+            Tag::ServeRequest => {
+                let Some((id, data)) = env.payload.weights_like() else {
+                    continue;
+                };
+                let step = (version << 32) | (id & BATCH_ID_MASK);
+                let rows = data.len() / row_len;
+                let reply = if data.len() % row_len != 0 || rows == 0 {
+                    Payload::Empty
+                } else {
+                    match exe.predict_rows(&params, &data, rows) {
+                        Ok(logits) => Payload::floats(step, logits),
+                        Err(e) => {
+                            log::error!(
+                                "serve: replica {} predict failed: {e}",
+                                comm.rank()
+                            );
+                            Payload::Empty
+                        }
+                    }
+                };
+                if comm.send(0, Tag::ServeReply, reply).is_err() {
+                    break;
+                }
+            }
+            Tag::Weights => {
+                if let Some((v, flat)) = env.payload.weights_like() {
+                    if flat.len() == params.num_params() {
+                        params.set_flat(&flat);
+                        version = v;
+                        log::info!(
+                            "serve: replica {} now on weights v{v}",
+                            comm.rank()
+                        );
+                    } else {
+                        log::error!(
+                            "serve: replica {} ignoring weights v{v}: \
+                             {} floats, expected {}",
+                            comm.rank(), flat.len(), params.num_params()
+                        );
+                    }
+                }
+            }
+            Tag::Exit => break,
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi;
+    use crate::runtime::native::meta_for_key;
+    use crate::util::rng::Rng;
+
+    fn exe(key: &str) -> Arc<ModelExecutables> {
+        let meta = meta_for_key(key).unwrap();
+        Arc::new(ModelExecutables::native(&meta).unwrap())
+    }
+
+    fn init_flat(exe: &ModelExecutables, seed: u64) -> Arc<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let ps = exe.init_params(&mut rng);
+        Arc::new(ps.flat().to_vec())
+    }
+
+    fn params_from(exe: &ModelExecutables, flat: &[f32]) -> ParamSet {
+        let mut ps = ParamSet::zeros(&exe.meta.params);
+        ps.set_flat(flat);
+        ps
+    }
+
+    fn input(exe: &ModelExecutables, rows: usize) -> Vec<f32> {
+        let row_len = exe.meta.seq_len * exe.meta.features;
+        (0..rows * row_len)
+            .map(|i| ((i % 89) as f32) * 0.02 - 0.9)
+            .collect()
+    }
+
+    #[test]
+    fn pool_matches_local_predict_over_inproc_world() {
+        let exe = exe("mlp_b4");
+        let init = init_flat(&exe, 11);
+        let world = mpi::inproc_world(3);
+        let pool = ReplicaPool::start(world, exe.clone(), init.clone(),
+                                      Duration::from_secs(10));
+        let reference = params_from(&exe, &init);
+        for rows in [1usize, 3, 4] {
+            let x = input(&exe, rows);
+            let (v, got) = pool.predict(rows, &x).unwrap();
+            let want = exe.predict_rows(&reference, &x, rows).unwrap();
+            assert_eq!(v, 0, "boot weights are version 0");
+            assert_eq!(got, want, "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn concurrent_batches_fan_out_and_all_succeed() {
+        let exe = exe("mlp_b4");
+        let init = init_flat(&exe, 12);
+        let world = mpi::inproc_world(4);
+        let pool = Arc::new(ReplicaPool::start(
+            world, exe.clone(), init.clone(),
+            Duration::from_secs(10)));
+        let reference = params_from(&exe, &init);
+        let threads: Vec<_> = (0..6)
+            .map(|_| {
+                let pool = pool.clone();
+                let exe = exe.clone();
+                let x = input(&exe, 2);
+                std::thread::spawn(move || {
+                    (x.clone(), pool.predict(2, &x).unwrap().1)
+                })
+            })
+            .collect();
+        for t in threads {
+            let (x, got) = t.join().unwrap();
+            let want = exe.predict_rows(&reference, &x, 2).unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn weights_broadcast_swaps_replica_params() {
+        let exe = exe("mlp_b4");
+        let old = init_flat(&exe, 13);
+        let new = init_flat(&exe, 14);
+        assert_ne!(old.as_ref(), new.as_ref());
+        let world = mpi::inproc_world(3);
+        let pool = ReplicaPool::start(world, exe.clone(), old,
+                                      Duration::from_secs(10));
+        pool.broadcast_weights(1, new.clone());
+        // Control channel + per-link FIFO: a job submitted after the
+        // broadcast runs on the new weights on every replica.
+        let reference = params_from(&exe, &new);
+        for _ in 0..4 {
+            let x = input(&exe, 2);
+            let (v, got) = pool.predict(2, &x).unwrap();
+            let want = exe.predict_rows(&reference, &x, 2).unwrap();
+            assert_eq!(v, 1, "reply must carry the swapped-in version");
+            assert_eq!(got, want);
+        }
+    }
+
+    /// A replica that reads requests and never answers.
+    fn spawn_swallower(comm: Comm) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || loop {
+            match comm.recv() {
+                Ok(env) if env.tag == Tag::Exit => break,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        })
+    }
+
+    /// A replica that echoes the request payload straight back.
+    fn spawn_echo(comm: Comm) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || loop {
+            match comm.recv() {
+                Ok(env) if env.tag == Tag::ServeRequest => {
+                    let (id, data) =
+                        env.payload.weights_like().unwrap();
+                    let p = Payload::floats(id, data.as_ref().clone());
+                    if comm.send(0, Tag::ServeReply, p).is_err() {
+                        break;
+                    }
+                }
+                Ok(env) if env.tag == Tag::Exit => break,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        })
+    }
+
+    #[test]
+    fn timeout_marks_replica_dead_and_retries_on_healthy_one() {
+        let mut world = mpi::inproc_world(3);
+        let front = world.remove(0);
+        let swallow = spawn_swallower(world.remove(0));
+        let echo = spawn_echo(world.remove(0));
+        let timeout = Duration::from_millis(60);
+        let pool = ReplicaPool::start_frontend(
+            front, vec![1, 2], timeout, vec![swallow, echo]);
+        // First batch lands on replica 1 (the swallower), times out,
+        // and the single retry succeeds on replica 2.
+        let t0 = Instant::now();
+        let got = pool.predict(2, &[1.0, 2.0]).unwrap().1;
+        assert_eq!(got, vec![1.0, 2.0]);
+        assert!(t0.elapsed() >= timeout,
+                "must have waited out the dead replica first");
+        // Replica 1 stays dead; later batches go straight to 2.
+        let t1 = Instant::now();
+        let got = pool.predict(1, &[3.0]).unwrap().1;
+        assert_eq!(got, vec![3.0]);
+        assert!(t1.elapsed() < timeout,
+                "dead replica must not be retried every batch");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn timeout_with_no_replica_left_fails_only_that_batch_path() {
+        let mut world = mpi::inproc_world(2);
+        let front = world.remove(0);
+        let swallow = spawn_swallower(world.remove(0));
+        let timeout = Duration::from_millis(40);
+        let pool = ReplicaPool::start_frontend(
+            front, vec![1], timeout, vec![swallow]);
+        let err = pool.predict(1, &[1.0]).unwrap_err();
+        assert!(err.contains("timed out"), "{err}");
+        // The pool survives: later calls error cleanly, no hang.
+        let err = pool.predict(1, &[2.0]).unwrap_err();
+        assert!(err.contains("no replicas alive"), "{err}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_works_over_tcp_transport() {
+        let exe = exe("mlp_b4");
+        let init = init_flat(&exe, 15);
+        let world = mpi::tcp_world(2, 47310).unwrap();
+        let pool = ReplicaPool::start(world, exe.clone(), init.clone(),
+                                      Duration::from_secs(10));
+        let reference = params_from(&exe, &init);
+        let x = input(&exe, 3);
+        let got = pool.predict(3, &x).unwrap().1;
+        let want = exe.predict_rows(&reference, &x, 3).unwrap();
+        assert_eq!(got, want);
+    }
+}

@@ -189,9 +189,18 @@ impl ParamSet {
     }
 
     /// Checkpoint serialization: name/shape table + raw f32 payload.
+    ///
+    /// The write is atomic with respect to concurrent readers: bytes go
+    /// to a `<path>.tmp` sibling first, then `fs::rename` publishes the
+    /// file in one step. A hot-reload watcher polling `path` therefore
+    /// sees either the complete old file or the complete new one —
+    /// never a torn, half-written checkpoint.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         use std::io::Write;
-        let mut f = std::fs::File::create(path)?;
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        let mut f = std::fs::File::create(&tmp)?;
         f.write_all(b"MPLW")?; // magic
         f.write_all(&(1u32).to_le_bytes())?; // version
         f.write_all(&(self.views.len() as u32).to_le_bytes())?;
@@ -212,6 +221,9 @@ impl ParamSet {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
         f.write_all(&bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
@@ -220,30 +232,53 @@ impl ParamSet {
         let mut f = std::fs::File::open(path)?;
         let mut buf = Vec::new();
         f.read_to_end(&mut buf)?;
-        let bad = |m: &str| std::io::Error::new(
-            std::io::ErrorKind::InvalidData, m.to_string());
+        let bad = |m: String| std::io::Error::new(
+            std::io::ErrorKind::InvalidData, m);
         if buf.len() < 12 || &buf[..4] != b"MPLW" {
-            return Err(bad("not a ParamSet checkpoint"));
+            return Err(bad("not a ParamSet checkpoint".into()));
         }
+        // Every read below is bounds-checked: a truncated file must
+        // produce a descriptive io::Error (the hot-reload watcher
+        // logs it and keeps serving), never a slice-index panic.
         let mut pos = 4usize;
-        let rd_u32 = |buf: &[u8], pos: &mut usize| -> u32 {
+        fn need(buf: &[u8], pos: usize, n: usize, what: &str)
+            -> std::io::Result<()> {
+            if buf.len() - pos < n {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "truncated checkpoint: {what} needs {n} bytes at \
+                         offset {pos}, only {} remain",
+                        buf.len() - pos
+                    ),
+                ));
+            }
+            Ok(())
+        }
+        fn rd_u32(buf: &[u8], pos: &mut usize, what: &str)
+            -> std::io::Result<u32> {
+            need(buf, *pos, 4, what)?;
             let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into()
                 .unwrap());
             *pos += 4;
-            v
-        };
-        let version = rd_u32(&buf, &mut pos);
-        if version != 1 {
-            return Err(bad("unsupported checkpoint version"));
+            Ok(v)
         }
-        let nviews = rd_u32(&buf, &mut pos) as usize;
-        let mut specs = Vec::with_capacity(nviews);
+        let version = rd_u32(&buf, &mut pos, "version")?;
+        if version != 1 {
+            return Err(bad(format!(
+                "unsupported checkpoint version {version} (expected 1)"
+            )));
+        }
+        let nviews = rd_u32(&buf, &mut pos, "view count")? as usize;
+        let mut specs = Vec::with_capacity(nviews.min(1024));
         for _ in 0..nviews {
-            let nlen = rd_u32(&buf, &mut pos) as usize;
+            let nlen = rd_u32(&buf, &mut pos, "name length")? as usize;
+            need(&buf, pos, nlen, "view name")?;
             let name = String::from_utf8(buf[pos..pos + nlen].to_vec())
-                .map_err(|_| bad("bad name"))?;
+                .map_err(|_| bad("bad name".into()))?;
             pos += nlen;
-            let ndim = rd_u32(&buf, &mut pos) as usize;
+            let ndim = rd_u32(&buf, &mut pos, "dim count")? as usize;
+            need(&buf, pos, ndim.saturating_mul(8), "shape dims")?;
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
                 let d = u64::from_le_bytes(buf[pos..pos + 8].try_into()
@@ -255,8 +290,13 @@ impl ParamSet {
         }
         let mut set = Self::zeros(&specs);
         let want = set.data.len() * 4;
-        if buf.len() - pos != want {
-            return Err(bad("payload size mismatch"));
+        let got = buf.len() - pos;
+        if got != want {
+            return Err(bad(format!(
+                "payload size mismatch: header declares {} f32s \
+                 (expected {want} payload bytes), file has {got}",
+                set.data.len()
+            )));
         }
         for (i, chunk) in buf[pos..].chunks_exact(4).enumerate() {
             set.data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
@@ -400,6 +440,84 @@ mod tests {
         let path = std::env::temp_dir().join("mpi_learn_ckpt_bad.bin");
         std::fs::write(&path, b"definitely not a checkpoint").unwrap();
         assert!(ParamSet::load(&path).is_err());
+    }
+
+    #[test]
+    fn load_rejects_every_truncation_without_panicking() {
+        // Write a valid checkpoint, then sweep every prefix length: each
+        // truncated file must come back as a descriptive io::Error (a
+        // torn file must never panic the hot-reload watcher).
+        let mut rng = Rng::new(11);
+        let ps = ParamSet::glorot_init(&specs(), &mut rng);
+        let dir = std::env::temp_dir();
+        let full = dir.join("mpi_learn_ckpt_trunc_full.bin");
+        ps.save(&full).unwrap();
+        let bytes = std::fs::read(&full).unwrap();
+        let cut = dir.join("mpi_learn_ckpt_trunc_cut.bin");
+        for len in 0..bytes.len() {
+            std::fs::write(&cut, &bytes[..len]).unwrap();
+            let err = ParamSet::load(&cut).expect_err("truncated file");
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        }
+        // The untruncated file still loads.
+        assert_eq!(ParamSet::load(&full).unwrap(), ps);
+    }
+
+    #[test]
+    fn load_names_expected_vs_actual_bytes_on_short_payload() {
+        let ps = ParamSet::zeros(&[("w".into(), vec![4])]);
+        let dir = std::env::temp_dir();
+        let path = dir.join("mpi_learn_ckpt_short_payload.bin");
+        ps.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Drop the last 4 bytes: header is intact, payload is one f32
+        // short — the error must name expected (16) vs actual (12).
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = ParamSet::load(&path).expect_err("short payload");
+        let msg = err.to_string();
+        assert!(msg.contains("16"), "missing expected bytes: {msg}");
+        assert!(msg.contains("12"), "missing actual bytes: {msg}");
+    }
+
+    #[test]
+    fn save_is_atomic_for_concurrent_readers() {
+        // A reader polling the path while a writer repeatedly saves must
+        // only ever observe a complete old or complete new checkpoint —
+        // never a torn file. This is the contract the serving hot-reload
+        // watcher depends on (save writes <path>.tmp then renames).
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let dir = std::env::temp_dir().join("mpi_learn_atomic_save");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.mplw");
+        let mk = |fill: f32| {
+            let mut ps = ParamSet::zeros(&specs());
+            ps.flat_mut().fill(fill);
+            ps
+        };
+        mk(0.0).save(&path).unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let (stop, path) = (stop.clone(), path.clone());
+            std::thread::spawn(move || {
+                let mut i = 0u32;
+                while !stop.load(Ordering::Relaxed) {
+                    mk(i as f32).save(&path).unwrap();
+                    i += 1;
+                }
+            })
+        };
+        let n = ParamSet::zeros(&specs()).num_params();
+        for _ in 0..200 {
+            let ps = ParamSet::load(&path)
+                .expect("reader must never see a torn file");
+            assert_eq!(ps.num_params(), n);
+            let first = ps.flat()[0];
+            assert!(ps.flat().iter().all(|&x| x == first),
+                    "mixed old/new bytes observed");
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
     }
 
     #[test]

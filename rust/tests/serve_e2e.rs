@@ -1,0 +1,220 @@
+//! End-to-end serving tests (ISSUE 7 acceptance): boot the full stack
+//! on an ephemeral port, hammer `POST /v1/predict` from concurrent
+//! clients while a new checkpoint lands mid-flight, and prove
+//!
+//! * zero requests fail across the hot swap (every response is 200),
+//! * every response is bitwise-identical to a fresh `predict_rows`
+//!   call on a freshly-loaded `ParamSet` for the `weight_version` the
+//!   response claims, and
+//! * `/healthz` reports the new version without a restart.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpi_learn::runtime::{ModelExecutables, Session};
+use mpi_learn::serving::http::client_request;
+use mpi_learn::serving::{self, ServeConfig};
+use mpi_learn::tensor::ParamSet;
+use mpi_learn::util::json::Json;
+use mpi_learn::util::rng::Rng;
+
+const MODEL: &str = "mlp";
+const MAX_BATCH: usize = 4;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mpi_learn_serve_e2e_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn exe() -> Arc<ModelExecutables> {
+    Session::native()
+        .unwrap()
+        .executables(&format!("{MODEL}_b{MAX_BATCH}"))
+        .unwrap()
+}
+
+fn cfg(dir: &std::path::Path, replicas: usize) -> ServeConfig {
+    ServeConfig {
+        model: MODEL.into(),
+        checkpoint_dir: dir.to_path_buf(),
+        port: 0,
+        max_batch: MAX_BATCH,
+        batch_deadline_ms: 1,
+        replicas,
+        tcp: false,
+        base_port: 47900,
+        poll_ms: 10,
+        replica_timeout_ms: 5_000,
+    }
+}
+
+/// Deterministic request row: every (thread, iteration, element) slot
+/// gets a fixed value, so the validation pass can rebuild the exact
+/// input from the recorded floats alone.
+fn row(t: usize, i: usize, row_len: usize) -> Vec<f32> {
+    (0..row_len)
+        .map(|k| (((t * 997 + i * 31 + k) % 89) as f32) * 0.02 - 0.9)
+        .collect()
+}
+
+fn body_for(x: &[f32], rows: usize, row_len: usize) -> String {
+    let rows: Vec<String> = (0..rows)
+        .map(|r| {
+            let cells: Vec<String> = x[r * row_len..(r + 1) * row_len]
+                .iter()
+                // f32 -> f64 is exact; {:?} round-trips the f64.
+                .map(|v| format!("{:?}", *v as f64))
+                .collect();
+            format!("[{}]", cells.join(","))
+        })
+        .collect();
+    format!("{{\"instances\": [{}]}}", rows.join(","))
+}
+
+struct Reply {
+    rows: usize,
+    x: Vec<f32>,
+    version: u64,
+    logits: Vec<f32>,
+}
+
+fn parse_reply(body: &str, rows: usize, x: Vec<f32>, classes: usize)
+    -> Reply {
+    let j = Json::parse(body).unwrap();
+    let version = j.get("weight_version").unwrap().as_i64().unwrap()
+        as u64;
+    let preds = j.get("predictions").unwrap().as_arr().unwrap();
+    assert_eq!(preds.len(), rows, "one prediction row per input row");
+    let mut logits = Vec::with_capacity(rows * classes);
+    for p in preds {
+        let p = p.as_arr().unwrap();
+        assert_eq!(p.len(), classes);
+        logits.extend(p.iter().map(|v| v.as_f64().unwrap() as f32));
+    }
+    Reply { rows, x, version, logits }
+}
+
+/// Drive concurrent clients through a hot swap; returns every reply.
+fn hammer_through_swap(tag: &str, replicas: usize) -> Vec<Reply> {
+    let exe = exe();
+    let row_len = exe.meta.seq_len * exe.meta.features;
+    let classes = exe.meta.classes;
+    let dir = tmpdir(tag);
+
+    let p1 = exe.init_params(&mut Rng::new(1));
+    let p2 = exe.init_params(&mut Rng::new(2));
+    assert_ne!(p1.flat(), p2.flat(), "the swap must be observable");
+    p1.save(&dir.join("checkpoint-1.mplw")).unwrap();
+
+    let mut handle = serving::start(&cfg(&dir, replicas)).unwrap();
+    let addr = handle.addr();
+
+    // Booted from the checkpoint, not Glorot init.
+    let (status, body) = client_request(addr, "GET", "/healthz", "")
+        .unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("weight_version").unwrap().as_i64(), Some(0));
+    assert!(j.get("weight_source").unwrap().as_str().unwrap()
+        .contains("checkpoint-1"), "{body}");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let clients: Vec<_> = (0..4)
+        .map(|t| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut replies = Vec::new();
+                let mut i = 0;
+                while !stop.load(Ordering::Relaxed) && i < 400 {
+                    let rows = 1 + (t + i) % 2;
+                    let mut x = Vec::new();
+                    for r in 0..rows {
+                        x.extend(row(t, i * 2 + r, row_len));
+                    }
+                    let (status, body) = client_request(
+                        addr, "POST", "/v1/predict",
+                        &body_for(&x, rows, row_len))
+                        .unwrap();
+                    assert_eq!(status, 200,
+                               "request failed during hot swap: {body}");
+                    replies.push(parse_reply(&body, rows, x, classes));
+                    i += 1;
+                }
+                replies
+            })
+        })
+        .collect();
+
+    // Let traffic flow on v0, then drop the new checkpoint mid-load.
+    std::thread::sleep(Duration::from_millis(150));
+    p2.save(&dir.join("checkpoint-2.mplw")).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while handle.state().version() < 1 {
+        assert!(Instant::now() < deadline, "reload never happened");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Keep hammering on the new weights for a bit, then stop.
+    std::thread::sleep(Duration::from_millis(150));
+    stop.store(true, Ordering::Relaxed);
+    let replies: Vec<Reply> = clients
+        .into_iter()
+        .flat_map(|c| c.join().unwrap())
+        .collect();
+
+    // /healthz shows the bump — same process, no restart.
+    let (status, body) = client_request(addr, "GET", "/healthz", "")
+        .unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("weight_version").unwrap().as_i64(), Some(1),
+               "{body}");
+    assert!(j.get("weight_source").unwrap().as_str().unwrap()
+        .contains("checkpoint-2"), "{body}");
+    handle.stop();
+
+    // Bitwise validation against FRESH loads of the two checkpoints,
+    // keyed by the version each response claims it was computed with.
+    let v0 = ParamSet::load(&dir.join("checkpoint-1.mplw")).unwrap();
+    let v1 = ParamSet::load(&dir.join("checkpoint-2.mplw")).unwrap();
+    let (mut on_v0, mut on_v1) = (0usize, 0usize);
+    for r in &replies {
+        let params = match r.version {
+            0 => {
+                on_v0 += 1;
+                &v0
+            }
+            1 => {
+                on_v1 += 1;
+                &v1
+            }
+            v => panic!("impossible weight_version {v}"),
+        };
+        let want = exe.predict_rows(params, &r.x, r.rows).unwrap();
+        let want_bits: Vec<u32> =
+            want.iter().map(|f| f.to_bits()).collect();
+        let got_bits: Vec<u32> =
+            r.logits.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(got_bits, want_bits,
+                   "response not bitwise-identical to a fresh \
+                    predict on weights v{}", r.version);
+    }
+    assert!(on_v0 > 0, "no traffic was served on the boot weights");
+    assert!(on_v1 > 0, "no traffic was served on the new weights");
+    replies
+}
+
+#[test]
+fn hot_swap_under_load_drops_zero_requests() {
+    let replies = hammer_through_swap("local", 0);
+    assert!(replies.len() >= 8);
+}
+
+#[test]
+fn hot_swap_with_replica_pool_drops_zero_requests() {
+    let replies = hammer_through_swap("replicas", 2);
+    assert!(replies.len() >= 8);
+}
