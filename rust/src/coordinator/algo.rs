@@ -67,6 +67,15 @@ pub struct Algo {
     /// with the rest of the backward pass (DESIGN.md §Layer DAG &
     /// bucketed overlap). Off = one monolithic all-reduce per round.
     pub buckets: bool,
+    /// All-reduce mode only: survive rank churn. On a dead neighbor the
+    /// surviving ranks agree on the member set, replan the ring, and
+    /// resume from replicated weights (DESIGN.md §Elasticity,
+    /// docs/RUNBOOK.md).
+    pub elastic: bool,
+    /// Elastic mode: how long a collective receive may stall before the
+    /// peer is suspected dead, and how long membership agreement waits
+    /// for survivors to answer probes. Default 30 000 ms.
+    pub elastic_timeout_ms: u64,
 }
 
 impl Default for Algo {
@@ -83,6 +92,8 @@ impl Default for Algo {
             lr_decay_every: 0,
             compression: Codec::Fp32,
             buckets: false,
+            elastic: false,
+            elastic_timeout_ms: 30_000,
         }
     }
 }
@@ -140,6 +151,14 @@ impl Algo {
         }
         if let Some(b) = j.get("buckets").and_then(|v| v.as_bool()) {
             algo.buckets = b;
+        }
+        if let Some(b) = j.get("elastic").and_then(|v| v.as_bool()) {
+            algo.elastic = b;
+        }
+        if let Some(t) = j.get("elastic_timeout_ms")
+            .and_then(|v| v.as_usize())
+        {
+            algo.elastic_timeout_ms = t as u64;
         }
         match j.get("mode").and_then(|v| v.as_str()).unwrap_or("downpour") {
             "downpour" => {
@@ -247,6 +266,19 @@ mod tests {
         assert!(Algo::from_json(&j).unwrap().buckets);
         let j = Json::parse(r#"{"mode": "allreduce"}"#).unwrap();
         assert!(!Algo::from_json(&j).unwrap().buckets);
+    }
+
+    #[test]
+    fn json_elastic() {
+        let d = Algo::default();
+        assert!(!d.elastic);
+        assert_eq!(d.elastic_timeout_ms, 30_000);
+        let j = Json::parse(
+            r#"{"mode": "allreduce", "elastic": true,
+                "elastic_timeout_ms": 1500}"#).unwrap();
+        let a = Algo::from_json(&j).unwrap();
+        assert!(a.elastic);
+        assert_eq!(a.elastic_timeout_ms, 1500);
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //!   "buckets": true,            // allreduce mode: per-layer bucketed
 //!                               // all-reduce overlapped with backprop
 //!                               // (also accepted inside "algo")
+//!   "elastic": true,            // allreduce mode: survive rank churn —
+//!                               // replan the ring over survivors and
+//!                               // resume (DESIGN.md §Elasticity,
+//!                               // docs/RUNBOOK.md; also inside "algo")
+//!   "elastic_timeout_ms": 30000, // suspicion + agreement window
 //!   "callbacks": [              // observer-side training callbacks
 //!     {"kind": "early_stopping", "patience": 3, "min_delta": 0.0},
 //!     {"kind": "checkpoint", "dir": "runs/ckpt", "every": 100,
@@ -142,6 +147,25 @@ impl JobConfig {
         // buckets mirrors compression: top level or inside "algo"
         if let Some(b) = j.get("buckets").and_then(|v| v.as_bool()) {
             algo.buckets = b;
+        }
+
+        // elastic knobs mirror buckets: top level or inside "algo"
+        if let Some(b) = j.get("elastic").and_then(|v| v.as_bool()) {
+            algo.elastic = b;
+        }
+        if let Some(t) = j.get("elastic_timeout_ms")
+            .and_then(|v| v.as_usize())
+        {
+            algo.elastic_timeout_ms = t as u64;
+        }
+        if algo.elastic
+            && !matches!(algo.mode,
+                         crate::coordinator::algo::Mode::AllReduce)
+        {
+            return Err(invalid(
+                "\"elastic\" requires \"mode\": \"allreduce\" (PS \
+                 masters tolerate departing workers natively)"
+                    .into()));
         }
 
         let transport = match j.get("transport") {
@@ -485,6 +509,42 @@ mod tests {
         let job = JobConfig::from_json_text(r#"{"model": "mlp"}"#)
             .unwrap();
         assert!(!job.train.algo.buckets);
+    }
+
+    #[test]
+    fn elastic_config() {
+        // top-level keys
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 4, "elastic": true,
+                "elastic_timeout_ms": 2000,
+                "algo": {"mode": "allreduce"}}"#).unwrap();
+        assert!(job.train.algo.elastic);
+        assert_eq!(job.train.algo.elastic_timeout_ms, 2000);
+        // inside "algo"
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 4,
+                "algo": {"mode": "allreduce", "elastic": true}}"#)
+            .unwrap();
+        assert!(job.train.algo.elastic);
+        assert_eq!(job.train.algo.elastic_timeout_ms, 30_000);
+        // default off
+        let job = JobConfig::from_json_text(r#"{"model": "mlp"}"#)
+            .unwrap();
+        assert!(!job.train.algo.elastic);
+        // contradictory: elastic only makes sense for the lockstep
+        // collective — PS masters shrink their barriers natively
+        match JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 4, "elastic": true,
+                "algo": {"mode": "downpour"}}"#)
+        {
+            Err(super::ConfigError::Invalid(msg)) => {
+                assert!(msg.contains("elastic")
+                        && msg.contains("allreduce"),
+                        "error must name the keys: {msg}");
+            }
+            other => panic!("expected Invalid, got {:?}",
+                            other.map(|_| ())),
+        }
     }
 
     #[test]

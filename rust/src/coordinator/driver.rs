@@ -258,6 +258,13 @@ fn run_role(plan: &WorldPlan, cfg: &TrainConfig,
             // grouped (hierarchical) ring worlds hand the collective
             // its GroupLayout; flat rings pass None
             let layout = plan.ring_layout();
+            // Elastic mode: the worker replans from the launch plan on
+            // churn and re-shards the dataset over member positions.
+            let resharder = |pos: usize, m: usize| {
+                data.worker_dataset(pos, m).map_err(|e| e.to_string())
+            };
+            let timeout = std::time::Duration::from_millis(
+                cfg.algo.elastic_timeout_ms.max(1));
             if rank == plan.observer() {
                 let val = data.validation_dataset()?;
                 let mut rng = Rng::new(cfg.seed);
@@ -266,20 +273,30 @@ fn run_role(plan: &WorldPlan, cfg: &TrainConfig,
                 let mut observer = build_observer(cfg, exes.as_ref(),
                                                   &val, extra,
                                                   init.num_params());
-                let outcome = RingWorker::new(comm, &cfg.algo,
-                                              exes.as_ref(), &ds, seed,
-                                              lr)
-                    .with_groups(layout)
+                let mut w = RingWorker::new(comm, &cfg.algo,
+                                            exes.as_ref(), &ds, seed,
+                                            lr)
+                    .with_groups(layout);
+                if cfg.algo.elastic {
+                    w = w.with_elastic(plan.clone(), timeout)
+                        .with_resharder(&resharder);
+                }
+                let outcome = w
                     .run(Some(init), &mut observer)
                     .map_err(|e| TrainError::Worker {
                         rank, msg: e.to_string() })?;
                 Ok(Some((outcome.history, outcome.weights)))
             } else {
                 let mut observer = Observer::disabled();
-                RingWorker::new(comm, &cfg.algo, exes.as_ref(), &ds,
-                                seed, lr)
-                    .with_groups(layout)
-                    .run(None, &mut observer)
+                let mut w = RingWorker::new(comm, &cfg.algo,
+                                            exes.as_ref(), &ds, seed,
+                                            lr)
+                    .with_groups(layout);
+                if cfg.algo.elastic {
+                    w = w.with_elastic(plan.clone(), timeout)
+                        .with_resharder(&resharder);
+                }
+                w.run(None, &mut observer)
                     .map_err(|e| TrainError::Worker {
                         rank, msg: e.to_string() })?;
                 Ok(None)

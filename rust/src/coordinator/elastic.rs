@@ -1,0 +1,565 @@
+//! Elastic membership agreement: re-forming the world on rank churn.
+//!
+//! PR 8 tentpole. When a ring collective aborts (a neighbor timed out,
+//! a send failed, or an elastic control message interrupted the round —
+//! [`CommError::Interrupted`]), the survivors run the protocol in this
+//! module at the next round boundary:
+//!
+//! 1. **suspect** — any member that detected the failure announces it
+//!    to rank 0 (`ElasticSuspect`, stamped with its current epoch).
+//! 2. **agree** — rank 0, the membership coordinator, probes every
+//!    member of the current plan (`ElasticProbe`) and collects
+//!    `ElasticAlive` answers (each carrying the member's completed
+//!    update count) within the elastic timeout. Non-responders are
+//!    declared dead; pending `ElasticJoin` requests are merged in.
+//! 3. **replan** — the survivor set (plus joiners) becomes the next
+//!    [`WorldPlan`] generation via [`WorldPlan::replan`] /
+//!    [`WorldPlan::replan_grown`]; rank 0 distributes it as an
+//!    `ElasticPlan` message stamped with the new epoch.
+//! 4. **resume** — every member adopts the plan
+//!    ([`Collective::adopt_world`]), the most-advanced survivor
+//!    (`sync_root`, ties broken toward the lowest rank) broadcasts its
+//!    weights so all replicas restart bitwise-identical, and training
+//!    resumes from `resume_update`.
+//!
+//! Rank 0 is the fixed coordinator: its death ends the job, exactly
+//! like a parameter-server master's (documented limitation — see
+//! DESIGN.md §Elasticity). The serving pool has a separate, simpler
+//! mark-dead path for replicas (DESIGN.md §Serving): replicas are
+//! stateless so the pool only stops dispatching to them, while
+//! training members share optimizer state and must re-agree on one
+//! world.
+//!
+//! The full state machine (steady → suspect → agree → replan → resume)
+//! and the in-flight bucket / error-feedback-residual handling are
+//! specified in DESIGN.md §Elasticity; operational guidance (flags,
+//! log lines, metrics) is in docs/RUNBOOK.md.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::topology::WorldPlan;
+use crate::mpi::collective::Collective;
+use crate::mpi::comm::CommError;
+use crate::mpi::message::{Envelope, Payload, Rank, Tag};
+
+/// Default window rank 0 waits for `ElasticAlive` answers before
+/// declaring non-responders dead (`--elastic-timeout-ms` overrides).
+/// Members wait twice this long for the coordinator's plan (one window
+/// of collection plus one of distribution slack).
+pub const DEFAULT_ELASTIC_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The agreed next world, as distributed by the coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NewWorld {
+    /// Generation of the new plan (strictly greater than the old).
+    pub epoch: u64,
+    /// Surviving members (original rank IDs, ascending, `members[0] ==
+    /// 0`).
+    pub members: Vec<Rank>,
+    /// The member whose weights seed the new world: the most-advanced
+    /// survivor, ties broken toward the lowest rank.
+    pub sync_root: Rank,
+    /// Update count training resumes from (the sync root's).
+    pub resume_update: u64,
+}
+
+/// What the agreement decided for one member.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MemberOutcome {
+    /// This rank is a member of the new world: adopt it and resume.
+    Continue(NewWorld),
+    /// This rank was declared dead (e.g. it stalled past the timeout
+    /// and answered late). It must stop training cleanly — it may
+    /// re-enter later via [`request_join`].
+    Evicted,
+}
+
+/// Split a u64 into two exactly-representable f32 halves (16 bits
+/// each per limb keeps every value < 2^40 exact — far beyond any
+/// update count).
+fn split_u64(v: u64) -> [f32; 2] {
+    [((v >> 16) & 0xFF_FFFF) as f32, (v & 0xFFFF) as f32]
+}
+
+fn join_u64(hi: f32, lo: f32) -> u64 {
+    ((hi as u64) << 16) | (lo as u64 & 0xFFFF)
+}
+
+/// Progress report carried by `ElasticSuspect` / `ElasticAlive`:
+/// `[updates_hi, updates_lo]`, generation in the step's high bits.
+fn progress_payload(step: u64, completed: u64) -> Payload {
+    Payload::floats(step, split_u64(completed).to_vec())
+}
+
+fn progress_of(payload: &Payload) -> Option<(u64, u64)> {
+    match payload {
+        Payload::Floats { step, data } if data.len() == 2 => {
+            Some((step >> 32, join_u64(data[0], data[1])))
+        }
+        _ => None,
+    }
+}
+
+/// Encode a [`NewWorld`] for the wire: `[n_members, members...,
+/// sync_root, resume_hi, resume_lo]`, epoch in the step's high bits.
+pub fn encode_plan(w: &NewWorld) -> Payload {
+    let mut data = Vec::with_capacity(w.members.len() + 4);
+    data.push(w.members.len() as f32);
+    data.extend(w.members.iter().map(|&r| r as f32));
+    data.push(w.sync_root as f32);
+    data.extend_from_slice(&split_u64(w.resume_update));
+    Payload::floats(w.epoch << 32, data)
+}
+
+pub fn decode_plan(payload: &Payload) -> Result<NewWorld, String> {
+    let (step, data) = match payload {
+        Payload::Floats { step, data } => (*step, data),
+        p => return Err(format!("elastic plan: unexpected payload {p:?}")),
+    };
+    let n = *data.first().ok_or("elastic plan: empty payload")? as usize;
+    if data.len() != n + 4 {
+        return Err(format!(
+            "elastic plan: expected {} elements for {n} members, got {}",
+            n + 4,
+            data.len()));
+    }
+    Ok(NewWorld {
+        epoch: step >> 32,
+        members: data[1..=n].iter().map(|&f| f as Rank).collect(),
+        sync_root: data[n + 1] as Rank,
+        resume_update: join_u64(data[n + 2], data[n + 3]),
+    })
+}
+
+/// Rank 0's half of the agreement: probe the current members, collect
+/// answers for up to `timeout`, fold in pending joiners, replan, and
+/// distribute the result. Returns the agreed [`NewWorld`] (rank 0 then
+/// adopts it like every other member).
+///
+/// `completed` is rank 0's own completed-update count; it participates
+/// in the `sync_root` election like any survivor's.
+pub fn coordinate(col: &mut Collective, plan: &WorldPlan,
+                  completed: u64, timeout: Duration)
+    -> Result<NewWorld, String> {
+    let me = col.comm().rank();
+    if me != 0 {
+        return Err(format!(
+            "rank {me} cannot coordinate membership (rank 0 does)"));
+    }
+    let epoch = col.epoch();
+    let members: Vec<Rank> = match col.members() {
+        Some(m) => m.to_vec(),
+        None => (0..col.comm().size()).collect(),
+    };
+
+    // Progress per live member; joiners (incl. evicted ranks that
+    // resurfaced) are re-admitted with zero credit for the election.
+    let mut alive: BTreeMap<Rank, u64> = BTreeMap::new();
+    alive.insert(me, completed);
+    let mut joiners: BTreeSet<Rank> =
+        col.pending_joiners().into_iter().collect();
+    let mut record = |alive: &mut BTreeMap<Rank, u64>,
+                      joiners: &mut BTreeSet<Rank>,
+                      env: &Envelope| {
+        if let Some((gen, updates)) = progress_of(&env.payload) {
+            if gen >= epoch && members.contains(&env.src) {
+                alive.insert(env.src, updates);
+            } else if gen >= epoch {
+                joiners.insert(env.src); // evicted straggler re-admits
+            }
+        }
+    };
+
+    // Suspect announcements that interrupted rank 0's own collective
+    // are already in the stash — they count as answers.
+    let stashed: Vec<Envelope> = {
+        let stash = col.stash_mut();
+        let mut taken = Vec::new();
+        stash.retain(|e| {
+            if matches!(e.tag, Tag::ElasticSuspect | Tag::ElasticAlive) {
+                taken.push(e.clone());
+                false
+            } else {
+                true
+            }
+        });
+        taken
+    };
+    for env in &stashed {
+        record(&mut alive, &mut joiners, env);
+    }
+
+    for &r in &members {
+        if r == me {
+            continue;
+        }
+        let probe = Payload::floats(epoch << 32, vec![]);
+        if col.comm().send(r, Tag::ElasticProbe, probe).is_err() {
+            // endpoint already dead: no point waiting for its answer
+            col.comm().close_peer(r);
+        }
+    }
+
+    let deadline = Instant::now() + timeout;
+    while alive.len() < members.len() {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match col.comm().recv_timeout(deadline - now) {
+            Ok(env) => match env.tag {
+                Tag::ElasticSuspect | Tag::ElasticAlive => {
+                    record(&mut alive, &mut joiners, &env);
+                }
+                Tag::ElasticJoin => {
+                    joiners.insert(env.src);
+                }
+                Tag::ElasticProbe | Tag::ElasticPlan => {
+                    // only rank 0 emits these; a stray copy is stale
+                }
+                _ => col.stash_mut().push(env),
+            },
+            Err(CommError::Timeout(_)) => break,
+            Err(e) => {
+                return Err(format!("membership agreement: {e}"));
+            }
+        }
+    }
+
+    let survivors: Vec<Rank> = alive.keys().copied().collect();
+    let joiners: Vec<Rank> = joiners
+        .into_iter()
+        .filter(|&r| r < col.comm().size() && !alive.contains_key(&r))
+        .collect();
+    let mut next = plan
+        .replan(&survivors)
+        .map_err(|e| format!("replan after churn: {e}"))?;
+    if !joiners.is_empty() {
+        next = next
+            .replan_grown(&joiners)
+            .map_err(|e| format!("replan (scale-up): {e}"))?;
+    }
+
+    let (&sync_root, &resume_update) = alive
+        .iter()
+        .max_by_key(|&(&r, &u)| (u, std::cmp::Reverse(r)))
+        .expect("alive always contains rank 0");
+    let new_members = next
+        .members()
+        .expect("replanned plans always carry a member list")
+        .to_vec();
+    log::info!(
+        "elastic: epoch {} -> {}: members {:?} (of {:?}), joiners \
+         {:?}, sync root {} at update {}",
+        epoch, next.epoch(), new_members, members, joiners, sync_root,
+        resume_update);
+
+    let world = NewWorld {
+        epoch: next.epoch(),
+        members: new_members,
+        sync_root,
+        resume_update,
+    };
+    let payload = encode_plan(&world);
+    for &r in &world.members {
+        if r != me
+            && col.comm().send(r, Tag::ElasticPlan, payload.clone())
+                .is_err()
+        {
+            // died between probe and plan: the next round's failure
+            // detection replans again from this generation
+            log::warn!("elastic: plan delivery to rank {r} failed");
+        }
+    }
+    for &r in &members {
+        if !world.members.contains(&r) {
+            col.comm().close_peer(r); // drop the dead peer's endpoint
+        }
+    }
+    Ok(world)
+}
+
+/// A member's half of the agreement: optionally announce the suspected
+/// failure (`announce` — set when this rank detected it itself, rather
+/// than being interrupted by a control message), answer probes, and
+/// wait up to `2 * timeout` for the coordinator's plan.
+///
+/// Probe answers echo the PROBE's generation stamp, not this rank's —
+/// a member still catching up on a previous replan must not have its
+/// answer discarded as stale.
+pub fn await_plan(col: &mut Collective, completed: u64,
+                  timeout: Duration, announce: bool)
+    -> Result<MemberOutcome, String> {
+    let me = col.comm().rank();
+    let epoch = col.epoch();
+    if announce {
+        // best-effort: if rank 0 is the dead one, the job is over and
+        // the deadline below surfaces that
+        let _ = col.comm().send(
+            0,
+            Tag::ElasticSuspect,
+            progress_payload(epoch << 32, completed),
+        );
+    }
+    let deadline = Instant::now() + timeout.saturating_mul(2);
+    loop {
+        let env = next_control(col, deadline)?;
+        match env.tag {
+            Tag::ElasticProbe => {
+                if let Payload::Floats { step, .. } = env.payload {
+                    let _ = col.comm().send(
+                        env.src,
+                        Tag::ElasticAlive,
+                        progress_payload(step, completed),
+                    );
+                }
+            }
+            Tag::ElasticPlan => {
+                let world = decode_plan(&env.payload)?;
+                if world.epoch <= epoch {
+                    continue; // stale plan from a superseded agreement
+                }
+                return Ok(if world.members.contains(&me) {
+                    MemberOutcome::Continue(world)
+                } else {
+                    MemberOutcome::Evicted
+                });
+            }
+            _ => unreachable!("next_control filters tags"),
+        }
+    }
+}
+
+/// A joiner's entry point: announce to rank 0 and wait for a plan that
+/// admits this rank. The join is only folded in at rank 0's next
+/// agreement (a round boundary with pending joiners, or the next
+/// churn), so `timeout` here should cover several training rounds —
+/// not the per-agreement elastic timeout.
+pub fn request_join(col: &mut Collective, timeout: Duration)
+    -> Result<NewWorld, String> {
+    let me = col.comm().rank();
+    col.comm()
+        .send(0, Tag::ElasticJoin, Payload::floats(0, vec![]))
+        .map_err(|e| format!("join request: {e}"))?;
+    let deadline = Instant::now() + timeout;
+    loop {
+        let env = next_control(col, deadline)?;
+        match env.tag {
+            Tag::ElasticProbe => {
+                // being probed means a concurrent agreement is running;
+                // answering admits us as a zero-credit survivor
+                if let Payload::Floats { step, .. } = env.payload {
+                    let _ = col.comm().send(
+                        env.src,
+                        Tag::ElasticAlive,
+                        progress_payload(step, 0),
+                    );
+                }
+            }
+            Tag::ElasticPlan => {
+                let world = decode_plan(&env.payload)?;
+                if world.members.contains(&me) {
+                    return Ok(world);
+                }
+                // a churn-only replan that predates our join: wait on
+            }
+            _ => unreachable!("next_control filters tags"),
+        }
+    }
+}
+
+/// Next membership-control envelope: the collective stash first (a
+/// control message that interrupted a round was parked there), then
+/// the wire. Everything else is stashed for the post-recovery
+/// generation screen.
+fn next_control(col: &mut Collective, deadline: Instant)
+    -> Result<Envelope, String> {
+    let timed_out = || -> String {
+        "membership agreement timed out waiting for the \
+         coordinator's plan (is rank 0 alive? rank 0's death ends \
+         the job — see docs/RUNBOOK.md)"
+            .into()
+    };
+    if let Some(i) = col.stash_mut().iter().position(|e| {
+        matches!(e.tag, Tag::ElasticProbe | Tag::ElasticPlan)
+    }) {
+        return Ok(col.stash_mut().remove(i));
+    }
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(timed_out());
+        }
+        match col.comm().recv_timeout(deadline - now) {
+            Ok(env) => match env.tag {
+                Tag::ElasticProbe | Tag::ElasticPlan => return Ok(env),
+                Tag::ElasticSuspect | Tag::ElasticAlive
+                | Tag::ElasticJoin => {
+                    // coordinator-bound traffic; not ours to keep
+                }
+                _ => col.stash_mut().push(env),
+            },
+            Err(CommError::Timeout(_)) => return Err(timed_out()),
+            Err(e) => return Err(format!("membership agreement: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::algo::Mode;
+    use crate::mpi::transport::inproc;
+
+    const T: Duration = Duration::from_millis(400);
+
+    fn ring_plan(n: usize) -> WorldPlan {
+        WorldPlan::from_parts(&Mode::AllReduce, None, n, 7).unwrap()
+    }
+
+    #[test]
+    fn plan_payload_roundtrip() {
+        let w = NewWorld {
+            epoch: 3,
+            members: vec![0, 2, 5],
+            sync_root: 2,
+            resume_update: 123_456_789,
+        };
+        let p = encode_plan(&w);
+        match &p {
+            Payload::Floats { step, .. } => assert_eq!(step >> 32, 3),
+            p => panic!("unexpected {p:?}"),
+        }
+        assert_eq!(decode_plan(&p).unwrap(), w);
+        assert!(decode_plan(&Payload::Empty).is_err());
+        assert!(decode_plan(&Payload::floats(0, vec![9.0])).is_err());
+    }
+
+    #[test]
+    fn progress_roundtrip_is_exact_beyond_f32_integers() {
+        let updates = (1u64 << 25) + 3; // not exactly representable
+        let p = progress_payload(5 << 32, updates);
+        assert_eq!(progress_of(&p), Some((5, updates)));
+    }
+
+    #[test]
+    fn agreement_declares_silent_rank_dead() {
+        let mut world = inproc::world(4);
+        let c3 = world.pop().unwrap();
+        let c2 = world.pop().unwrap();
+        let c1 = world.pop().unwrap();
+        let c0 = world.pop().unwrap();
+        drop(c3); // rank 3 "crashed" before the agreement
+
+        let members = std::thread::scope(|s| {
+            let h1 = s.spawn(|| {
+                let mut col = Collective::new(&c1);
+                col.set_elastic(true);
+                // rank 1 detected the failure itself: it announces
+                await_plan(&mut col, 11, T, true).unwrap()
+            });
+            let h2 = s.spawn(|| {
+                let mut col = Collective::new(&c2);
+                col.set_elastic(true);
+                await_plan(&mut col, 12, T, false).unwrap()
+            });
+            let mut col = Collective::new(&c0);
+            col.set_elastic(true);
+            let plan = ring_plan(4);
+            let world =
+                coordinate(&mut col, &plan, 5, T).unwrap();
+            (world, h1.join().unwrap(), h2.join().unwrap())
+        });
+
+        let (world, m1, m2) = members;
+        assert_eq!(world.epoch, 1);
+        assert_eq!(world.members, vec![0, 1, 2]);
+        // rank 2 is the most advanced survivor
+        assert_eq!(world.sync_root, 2);
+        assert_eq!(world.resume_update, 12);
+        assert_eq!(m1, MemberOutcome::Continue(world.clone()));
+        assert_eq!(m2, MemberOutcome::Continue(world));
+        // the dead peer's endpoint is gone on the coordinator
+        assert!(!c0.has_peer(3));
+    }
+
+    #[test]
+    fn joiner_is_admitted_at_the_next_agreement() {
+        let mut world = inproc::world(3);
+        let c2 = world.pop().unwrap();
+        let c1 = world.pop().unwrap();
+        let c0 = world.pop().unwrap();
+
+        // current generation: only {0, 1} train, rank 2 idles
+        let base = ring_plan(3);
+        let plan = base.replan(&[0, 1]).unwrap();
+        assert_eq!(plan.epoch(), 1);
+
+        // the join request is already queued before the agreement
+        // starts, so the test is deterministic
+        c2.send(0, Tag::ElasticJoin, Payload::floats(0, vec![]))
+            .unwrap();
+
+        let (world, m1) = std::thread::scope(|s| {
+            let h1 = s.spawn(|| {
+                let mut col = Collective::new(&c1);
+                col.adopt_world(1, Some(vec![0, 1]));
+                await_plan(&mut col, 20, T, false).unwrap()
+            });
+            let mut col = Collective::new(&c0);
+            col.adopt_world(1, Some(vec![0, 1]));
+            let w = coordinate(&mut col, &plan, 20, T).unwrap();
+            (w, h1.join().unwrap())
+        });
+
+        // replan (epoch 2) then replan_grown (epoch 3)
+        assert_eq!(world.epoch, 3);
+        assert_eq!(world.members, vec![0, 1, 2]);
+        // tie at 20 updates -> lowest rank wins the election
+        assert_eq!(world.sync_root, 0);
+        assert_eq!(world.resume_update, 20);
+        assert_eq!(m1, MemberOutcome::Continue(world.clone()));
+
+        // the joiner's plan is already in its queue: request_join
+        // re-announces (harmless) and picks it up
+        let mut col = Collective::new(&c2);
+        assert_eq!(request_join(&mut col, T).unwrap(), world);
+    }
+
+    #[test]
+    fn member_excluded_from_the_plan_is_evicted() {
+        let mut world = inproc::world(2);
+        let c1 = world.pop().unwrap();
+        let c0 = world.pop().unwrap();
+        let w = NewWorld {
+            epoch: 1,
+            members: vec![0],
+            sync_root: 0,
+            resume_update: 9,
+        };
+        c0.send(1, Tag::ElasticPlan, encode_plan(&w)).unwrap();
+        let mut col = Collective::new(&c1);
+        assert_eq!(await_plan(&mut col, 4, T, false).unwrap(),
+                   MemberOutcome::Evicted);
+    }
+
+    #[test]
+    fn stale_plans_are_ignored() {
+        let mut world = inproc::world(2);
+        let c1 = world.pop().unwrap();
+        let c0 = world.pop().unwrap();
+        // rank 1 already sits at epoch 2: an epoch-1 plan is stale,
+        // the later epoch-3 plan wins
+        let old = NewWorld { epoch: 1, members: vec![0, 1],
+                             sync_root: 0, resume_update: 1 };
+        let new = NewWorld { epoch: 3, members: vec![0, 1],
+                             sync_root: 1, resume_update: 8 };
+        c0.send(1, Tag::ElasticPlan, encode_plan(&old)).unwrap();
+        c0.send(1, Tag::ElasticPlan, encode_plan(&new)).unwrap();
+        let mut col = Collective::new(&c1);
+        col.adopt_world(2, Some(vec![0, 1]));
+        assert_eq!(await_plan(&mut col, 4, T, false).unwrap(),
+                   MemberOutcome::Continue(new));
+    }
+}

@@ -189,6 +189,32 @@ impl Experiment {
         self
     }
 
+    /// All-reduce mode: survive rank churn. When a rank dies mid-run
+    /// the survivors detect the silence within `timeout_ms`, agree on
+    /// the member set, re-form the ring over the survivors, re-shard
+    /// the dataset, and resume from replicated weights; late joiners
+    /// are re-admitted through the same path. See DESIGN.md
+    /// §Elasticity and docs/RUNBOOK.md for the protocol and operator
+    /// knobs.
+    ///
+    /// ```
+    /// use mpi_learn::coordinator::Experiment;
+    ///
+    /// let exp = Experiment::new("mlp")
+    ///     .workers(8)
+    ///     .allreduce()
+    ///     .elastic(5_000);
+    /// assert!(exp.config().algo.elastic);
+    /// assert_eq!(exp.config().algo.elastic_timeout_ms, 5_000);
+    /// ```
+    pub fn elastic(mut self, timeout_ms: u64) -> Self {
+        self.cfg.algo.elastic = true;
+        if timeout_ms > 0 {
+            self.cfg.algo.elastic_timeout_ms = timeout_ms;
+        }
+        self
+    }
+
     /// Two-level topology: a Downpour master tree, or — combined with
     /// [`Experiment::allreduce`] — hierarchical all-reduce groups
     /// (`sync_every` is ignored there; see
@@ -403,6 +429,18 @@ mod tests {
         let exp = Experiment::new("mlp").allreduce().buckets();
         assert!(exp.config().algo.buckets);
         assert!(!Experiment::new("mlp").config().algo.buckets);
+    }
+
+    #[test]
+    fn elastic_knob() {
+        let exp = Experiment::new("mlp").allreduce().elastic(2_000);
+        assert!(exp.config().algo.elastic);
+        assert_eq!(exp.config().algo.elastic_timeout_ms, 2_000);
+        // 0 keeps the default window rather than a zero-length one
+        let exp = Experiment::new("mlp").allreduce().elastic(0);
+        assert!(exp.config().algo.elastic);
+        assert_eq!(exp.config().algo.elastic_timeout_ms, 30_000);
+        assert!(!Experiment::new("mlp").config().algo.elastic);
     }
 
     #[test]

@@ -13,6 +13,9 @@
 //!   EASGD / AllReduce, sync/async, optimizer, validation frequency).
 //! - [`builder`] — the `ModelBuilder` and `Data` user-interface classes.
 //! - [`master`] / [`worker`] — the process roles (incl. `RingWorker`).
+//! - [`elastic`] — membership agreement on rank churn: versioned
+//!   `WorldPlan` epochs, suspect/agree/replan/resume (DESIGN.md
+//!   §Elasticity).
 //! - [`hierarchy`] — two-level master topology.
 //! - [`validation`] — held-out evaluation + schedule.
 //! - [`driver`] — the launcher: `train` / `run_rank` both execute roles
@@ -24,6 +27,7 @@ pub mod builder;
 pub mod callbacks;
 pub mod config;
 pub mod driver;
+pub mod elastic;
 pub mod experiment;
 pub mod hierarchy;
 pub mod master;

@@ -44,12 +44,44 @@ pub enum RankRole {
 
 /// Static description of a training world: size, per-rank roles, shard
 /// assignment, and seed derivation.
-#[derive(Clone, Copy, Debug, PartialEq)]
+///
+/// Since PR 8 the plan is **versioned**: [`WorldPlan::epoch`] counts
+/// replans, and [`WorldPlan::replan`] / [`WorldPlan::replan_grown`]
+/// produce the next generation's plan when ranks depart or join — the
+/// ring/group layout and shard assignment are re-derived from the
+/// surviving member list while the underlying `Comm` world (and the
+/// original rank IDs) stay fixed.
+///
+/// ```
+/// use mpi_learn::coordinator::{Mode, WorldPlan};
+///
+/// let plan = WorldPlan::from_parts(&Mode::AllReduce, None, 4, 7)
+///     .unwrap();
+/// assert_eq!((plan.epoch(), plan.world_size()), (0, 4));
+///
+/// // rank 2 departs: the survivors re-form a 3-rank ring and the
+/// // dataset is re-sharded over the three member positions
+/// let next = plan.replan(&[0, 1, 3]).unwrap();
+/// assert_eq!((next.epoch(), next.world_size()), (1, 3));
+/// assert_eq!(next.members(), Some(&[0, 1, 3][..]));
+///
+/// // a later scale-up re-admits rank 2 through the same path
+/// let grown = next.replan_grown(&[2]).unwrap();
+/// assert_eq!((grown.epoch(), grown.world_size()), (2, 4));
+/// ```
+#[derive(Clone, Debug, PartialEq)]
 pub struct WorldPlan {
     ring: bool,
     hierarchy: Option<HierarchySpec>,
     n_shards: usize,
     seed: u64,
+    /// Plan generation: 0 at launch, +1 per replan. Stamped into the
+    /// high bits of collective payload steps so stragglers from a
+    /// replaced world are rejected.
+    epoch: u64,
+    /// Surviving members over the ORIGINAL rank space, ascending
+    /// (`None` = the full original world).
+    members: Option<Vec<Rank>>,
 }
 
 impl WorldPlan {
@@ -118,7 +150,127 @@ impl WorldPlan {
             return Err("need at least one worker (\"workers\" >= 1)"
                 .into());
         }
-        Ok(WorldPlan { ring, hierarchy, n_shards, seed })
+        Ok(WorldPlan { ring, hierarchy, n_shards, seed, epoch: 0,
+                       members: None })
+    }
+
+    /// Plan generation (0 until the first replan).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Current member list over the original rank space (`None` = the
+    /// full original world, i.e. ranks `0..world_size()`).
+    pub fn members(&self) -> Option<&[Rank]> {
+        self.members.as_deref()
+    }
+
+    /// The member list in the form `Collective::adopt_world` takes.
+    pub fn collective_members(&self) -> Option<Vec<Rank>> {
+        self.members.clone()
+    }
+
+    /// Does `rank` (an original rank ID) participate in this plan?
+    pub fn is_member(&self, rank: Rank) -> bool {
+        match &self.members {
+            Some(m) => m.contains(&rank),
+            None => rank < self.world_size(),
+        }
+    }
+
+    /// Re-form the world from the surviving ranks (original rank IDs):
+    /// the new ring order is the ascending survivor list, the dataset
+    /// is re-sharded one shard per member position, and the epoch is
+    /// bumped. Only masterless ring worlds are re-plannable — PS modes
+    /// tolerate departed children natively (and the serving pool has
+    /// its own replica mark-dead path, see DESIGN.md §Serving). Rank 0
+    /// must survive: it coordinates membership agreement, so its death
+    /// ends the job exactly like a PS master's.
+    ///
+    /// A single survivor is a valid world: it degrades to local
+    /// training (collectives become no-ops), not an error.
+    pub fn replan(&self, survivors: &[Rank])
+        -> Result<WorldPlan, String> {
+        let members = self.normalize_members(survivors.to_vec())?;
+        for &r in &members {
+            if !self.is_member(r) {
+                return Err(format!(
+                    "replan: rank {r} is not a member of the current \
+                     world (epoch {})", self.epoch));
+            }
+        }
+        Ok(self.with_members(self.epoch + 1, members))
+    }
+
+    /// Scale-up replan: admit `joiners` (original rank IDs that must
+    /// exist in the launched `Comm` world) alongside every current
+    /// member. Joins ride the exact same epoch-bump path as departures;
+    /// the new members' weights are replicated by the resume broadcast.
+    pub fn replan_grown(&self, joiners: &[Rank])
+        -> Result<WorldPlan, String> {
+        let mut members: Vec<Rank> = match &self.members {
+            Some(m) => m.clone(),
+            None => (0..self.world_size()).collect(),
+        };
+        members.extend_from_slice(joiners);
+        let members = self.normalize_members(members)?;
+        Ok(self.with_members(self.epoch + 1, members))
+    }
+
+    fn normalize_members(&self, mut members: Vec<Rank>)
+        -> Result<Vec<Rank>, String> {
+        if !self.ring {
+            return Err("only masterless ring worlds are re-plannable; \
+                        PS modes tolerate departed children natively"
+                .into());
+        }
+        members.sort_unstable();
+        members.dedup();
+        if members.is_empty() {
+            return Err("replan needs at least one survivor".into());
+        }
+        if members[0] != 0 {
+            return Err("rank 0 coordinates membership agreement and \
+                        cannot be replaced; its departure ends the job"
+                .into());
+        }
+        Ok(members)
+    }
+
+    /// Build the plan a member adopts when the coordinator distributes
+    /// `(epoch, members)` — the worker-side counterpart of
+    /// [`WorldPlan::replan`] (the wire carries only the member list, so
+    /// every rank reconstructs an identical plan from its launch copy).
+    pub fn with_members(&self, epoch: u64, members: Vec<Rank>)
+        -> WorldPlan {
+        WorldPlan {
+            ring: self.ring,
+            hierarchy: self.hierarchy,
+            n_shards: members.len(),
+            seed: self.seed,
+            epoch,
+            members: Some(members),
+        }
+    }
+
+    /// The CURRENT grouped-ring schedule, if any: `(n_groups,
+    /// members_per_group)`. The hierarchy spec is immutable launch
+    /// intent; this derives the generation's actual grouping from the
+    /// live member count, falling back to a flat ring whenever the
+    /// members no longer divide evenly into the requested groups (a
+    /// later grow-replan that restores divisibility restores the
+    /// grouped schedule).
+    fn grouping(&self) -> Option<(usize, usize)> {
+        match (&self.hierarchy, self.ring) {
+            (Some(h), true)
+                if h.n_groups >= 2
+                    && self.n_shards % h.n_groups == 0
+                    && self.n_shards / h.n_groups >= 1 =>
+            {
+                Some((h.n_groups, self.n_shards / h.n_groups))
+            }
+            _ => None,
+        }
     }
 
     /// Total ranks in the world.
@@ -158,31 +310,57 @@ impl WorldPlan {
     }
 
     /// Collective-layer group layout of a grouped (hierarchical) ring
-    /// world: `groups` contiguous blocks of `workers_per_group` ranks,
-    /// each block's first rank its tree leader. `None` for flat rings
-    /// and parameter-server worlds.
+    /// world: `groups` contiguous blocks of the CURRENT member list,
+    /// each block's first member its tree leader. `None` for flat
+    /// rings, parameter-server worlds, and replanned generations whose
+    /// member count no longer divides into the requested groups (they
+    /// fall back to the flat ring schedule until a grow-replan restores
+    /// divisibility).
     pub fn ring_layout(&self) -> Option<GroupLayout> {
-        match (&self.hierarchy, self.ring) {
-            (Some(h), true) => Some(
-                GroupLayout::contiguous(self.n_shards, h.n_groups)
-                    .expect("plan validation keeps groups divisible"),
-            ),
-            _ => None,
-        }
+        let (n_groups, per) = self.grouping()?;
+        let members: Vec<Rank> = match &self.members {
+            Some(m) => m.clone(),
+            None => (0..self.n_shards).collect(),
+        };
+        Some(GroupLayout::new(
+            (0..n_groups)
+                .map(|g| members[g * per..(g + 1) * per].to_vec())
+                .collect(),
+        )
+        .expect("member chunks are non-empty and disjoint"))
     }
 
-    /// Which role does `rank` play?
+    /// Which role does `rank` play? `rank` is an ORIGINAL rank ID and
+    /// must be a member of the current generation.
     pub fn role_of(&self, rank: Rank) -> RankRole {
+        if self.ring {
+            // member-positional: a replanned plan's shard/group come
+            // from the rank's position in the survivor list, so shards
+            // always cover `0..world_size()` exactly once
+            let pos = match &self.members {
+                Some(m) => m
+                    .iter()
+                    .position(|&r| r == rank)
+                    .unwrap_or_else(|| {
+                        panic!("rank {rank} is not a member of the \
+                                epoch-{} world {m:?}", self.epoch)
+                    }),
+                None => {
+                    debug_assert!(rank < self.world_size(),
+                                  "rank {rank} outside world of {}",
+                                  self.world_size());
+                    rank
+                }
+            };
+            let group = match self.grouping() {
+                Some((_, per)) => pos / per,
+                None => 0,
+            };
+            return RankRole::RingRank { shard: pos, group };
+        }
         debug_assert!(rank < self.world_size(),
                       "rank {rank} outside world of {}",
                       self.world_size());
-        if self.ring {
-            let group = match &self.hierarchy {
-                Some(h) => rank / h.workers_per_group,
-                None => 0,
-            };
-            return RankRole::RingRank { shard: rank, group };
-        }
         match &self.hierarchy {
             None => {
                 if rank == 0 {
@@ -493,5 +671,86 @@ mod tests {
     fn serve_plan_caps_replicas() {
         let err = ServePlan::new(10_000).unwrap_err();
         assert!(err.contains("replicas"), "{err}");
+    }
+
+    // --- elastic replans --------------------------------------------
+
+    #[test]
+    fn replan_reshards_over_survivors() {
+        let p = plan(Mode::AllReduce, None, 5);
+        assert_eq!(p.epoch(), 0);
+        assert!(p.members().is_none());
+        let q = p.replan(&[3, 0, 1, 3]).unwrap(); // unsorted + dup ok
+        assert_eq!(q.epoch(), 1);
+        assert_eq!(q.world_size(), 3);
+        assert_eq!(q.n_shards(), 3);
+        assert_eq!(q.members(), Some(&[0, 1, 3][..]));
+        // shards are member positions: a permutation of 0..3
+        assert_eq!(q.role_of(0), RankRole::RingRank { shard: 0,
+                                                      group: 0 });
+        assert_eq!(q.role_of(1), RankRole::RingRank { shard: 1,
+                                                      group: 0 });
+        assert_eq!(q.role_of(3), RankRole::RingRank { shard: 2,
+                                                      group: 0 });
+        assert!(q.is_member(3) && !q.is_member(2));
+        // the departed rank cannot re-enter via replan (only via
+        // replan_grown)
+        assert!(q.replan(&[0, 2]).is_err());
+        // ...but can via the join path, restoring a 4-rank world
+        let g = q.replan_grown(&[2]).unwrap();
+        assert_eq!(g.epoch(), 2);
+        assert_eq!(g.members(), Some(&[0, 1, 2, 3][..]));
+    }
+
+    #[test]
+    fn replan_requires_rank_zero_and_ring_mode() {
+        let p = plan(Mode::AllReduce, None, 4);
+        let err = p.replan(&[1, 2, 3]).unwrap_err();
+        assert!(err.contains("rank 0"), "{err}");
+        let ps = plan(Mode::Downpour { sync: false }, None, 4);
+        assert!(ps.replan(&[0, 1]).is_err());
+        assert!(p.replan(&[]).is_err());
+    }
+
+    #[test]
+    fn replan_single_survivor_degrades_to_local() {
+        let p = plan(Mode::AllReduce, None, 4);
+        let q = p.replan(&[0]).unwrap();
+        assert_eq!(q.world_size(), 1);
+        assert_eq!(q.role_of(0), RankRole::RingRank { shard: 0,
+                                                      group: 0 });
+        assert!(q.ring_layout().is_none());
+    }
+
+    #[test]
+    fn grouped_replan_falls_back_to_flat_until_divisible() {
+        let spec = HierarchySpec { n_groups: 2, workers_per_group: 4,
+                                   sync_every: 1 };
+        let p = plan(Mode::AllReduce, Some(spec), 0);
+        // kill rank 5: 7 survivors don't divide into 2 groups
+        let q = p.replan(&[0, 1, 2, 3, 4, 6, 7]).unwrap();
+        assert!(q.ring_layout().is_none(), "7 ∤ 2 → flat ring");
+        assert_eq!(q.role_of(6), RankRole::RingRank { shard: 5,
+                                                      group: 0 });
+        // kill rank 7 too: 6 survivors re-form 2 groups of 3 members
+        let r = q.replan(&[0, 1, 2, 3, 4, 6]).unwrap();
+        assert_eq!(r.epoch(), 2);
+        let layout = r.ring_layout().expect("6 members → 2 groups");
+        assert_eq!(layout.groups(), &[vec![0, 1, 2], vec![3, 4, 6]]);
+        assert_eq!(layout.leaders(), vec![0, 3]);
+        assert_eq!(r.role_of(6), RankRole::RingRank { shard: 5,
+                                                      group: 1 });
+        // re-admit both: the original grouped layout is restored
+        let s = r.replan_grown(&[5, 7]).unwrap();
+        assert_eq!(s.ring_layout().unwrap().groups(),
+                   &[vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+    }
+
+    #[test]
+    fn with_members_reconstructs_the_coordinator_plan() {
+        let p = plan(Mode::AllReduce, None, 6);
+        let replanned = p.replan(&[0, 2, 4, 5]).unwrap();
+        let adopted = p.with_members(1, vec![0, 2, 4, 5]);
+        assert_eq!(adopted, replanned);
     }
 }

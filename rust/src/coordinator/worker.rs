@@ -10,15 +10,18 @@
 //! stop piggybacks as one extra element on the next collective, so every
 //! rank breaks in lockstep with identical weights.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::algo::{Algo, Mode};
 use crate::coordinator::callbacks::{LrScheduleSpec, Observer};
+use crate::coordinator::elastic::{self, MemberOutcome, NewWorld};
+use crate::coordinator::topology::WorldPlan;
 use crate::data::DataSet;
 use crate::metrics::{History, Stopwatch, WorkerReport};
 use crate::mpi::codec::{grad_payload, Compressor};
 use crate::mpi::collective::{Collective, GroupLayout, ReduceOp};
-use crate::mpi::{tags, Comm, Payload, Rank, Tag, WorkerStats};
+use crate::mpi::{tags, Comm, CommError, Envelope, Payload, Rank, Tag,
+                 WorkerStats};
 use crate::runtime::{BucketReady, GradSink, ModelExecutables};
 use crate::tensor::ParamSet;
 use crate::util::rng::Rng;
@@ -40,6 +43,13 @@ pub enum WorkerError {
     Protocol(Tag),
     EarlyExit,
     Unsupported(&'static str),
+    /// Elastic membership agreement failed (e.g. the coordinator's
+    /// plan never arrived — rank 0 is gone, which ends the job).
+    Elastic(String),
+    /// Chaos hook: this rank was told to die mid-run
+    /// ([`RingWorker::with_fault_after`]) and is simulating a crash —
+    /// no stats, no wind-down.
+    FaultInjected,
 }
 
 impl std::fmt::Display for WorkerError {
@@ -55,6 +65,10 @@ impl std::fmt::Display for WorkerError {
             }
             WorkerError::Unsupported(msg) => {
                 write!(f, "unsupported: {msg}")
+            }
+            WorkerError::Elastic(msg) => write!(f, "elastic: {msg}"),
+            WorkerError::FaultInjected => {
+                write!(f, "fault injection: this rank crashed on cue")
             }
         }
     }
@@ -366,7 +380,7 @@ pub struct RingOutcome {
 /// collective), then an identical replicated optimizer step. With
 /// `Algo::buckets`, the single collective becomes one collective per
 /// layer bucket, each launched mid-backprop as its layer's gradient
-/// lands ([`BucketLauncher`]) and drained after the step — identical
+/// lands (`BucketLauncher`) and drained after the step — identical
 /// results, communication overlapped with compute (DESIGN.md §Layer
 /// DAG & bucketed overlap). Rank 0
 /// additionally drives the [`Observer`] (validation schedule +
@@ -388,14 +402,44 @@ pub struct RingWorker<'a> {
     /// all-reduce: intra-group ring + inter-group leader tree). `None`
     /// keeps the flat ring.
     groups: Option<GroupLayout>,
+    /// Elastic mode: the versioned [`WorldPlan`] this rank replans
+    /// from when membership churns. `None` = fixed world (any comm
+    /// failure is fatal, the historical behavior).
+    elastic_plan: Option<WorldPlan>,
+    /// Failure-detection + agreement window (elastic mode only).
+    elastic_timeout: Duration,
+    /// Re-shards the dataset after a replan: `(member_position,
+    /// n_members) -> DataSet`. Without one, survivors keep training
+    /// their launch shard (coverage gaps are accepted).
+    resharder: Option<&'a ReshardFn>,
+    /// Chaos hook: simulate a crash once `update_count` reaches this.
+    fault_after: Option<u64>,
 }
+
+/// Re-sharding callback: `(member_position, n_members)` over the NEW
+/// member list -> that member's dataset. Shared across rank threads by
+/// the driver, hence `Sync`.
+pub type ReshardFn =
+    dyn Fn(usize, usize) -> Result<DataSet, String> + Sync;
+
+/// Give up after this many back-to-back agreement attempts (churn
+/// during recovery restarts the agreement; a world this unstable is
+/// better off failing loudly).
+const MAX_RECOVERY_ATTEMPTS: u32 = 5;
+
+/// A joiner waits this many elastic-timeout windows to be admitted:
+/// joins are only folded in at a round boundary or the next churn, so
+/// the wait spans training rounds, not one agreement.
+const JOIN_WAIT_WINDOWS: u32 = 20;
 
 impl<'a> RingWorker<'a> {
     pub fn new(comm: &'a Comm, algo: &'a Algo,
                exes: &'a ModelExecutables, data: &'a DataSet, seed: u64,
                lr: Option<LrScheduleSpec>) -> Self {
         Self { comm, algo, exes, data, rng: Rng::new(seed), lr,
-               groups: None }
+               groups: None, elastic_plan: None,
+               elastic_timeout: elastic::DEFAULT_ELASTIC_TIMEOUT,
+               resharder: None, fault_after: None }
     }
 
     /// Route the gradient all-reduces through a hierarchical
@@ -407,9 +451,43 @@ impl<'a> RingWorker<'a> {
         self
     }
 
+    /// Enable elastic membership (DESIGN.md §Elasticity): collective
+    /// failures trigger the suspect → agree → replan → resume protocol
+    /// instead of aborting the job, `timeout` bounds both failure
+    /// detection (the collective's neighbor wait) and the agreement
+    /// window. A rank that is not a member of `plan` enters as a
+    /// JOINER: it waits to be admitted and receives replicated weights.
+    pub fn with_elastic(mut self, plan: WorldPlan, timeout: Duration)
+        -> Self {
+        self.elastic_plan = Some(plan);
+        self.elastic_timeout = timeout;
+        self
+    }
+
+    /// Install the re-sharding callback used after each replan.
+    pub fn with_resharder(mut self, f: &'a ReshardFn) -> Self {
+        self.resharder = Some(f);
+        self
+    }
+
+    /// Chaos hook (tests/failure drills): simulate a crash — return
+    /// [`WorkerError::FaultInjected`] without stats or wind-down — as
+    /// soon as `updates` updates have been applied.
+    pub fn with_fault_after(mut self, updates: u64) -> Self {
+        self.fault_after = Some(updates);
+        self
+    }
+
     /// Train to completion. `init` is consumed on rank 0 and broadcast
     /// to the world; other ranks pass `None`. `observer` is consulted
     /// on rank 0 only (pass `Observer::disabled()` elsewhere).
+    ///
+    /// In elastic mode ([`RingWorker::with_elastic`]) a failed round
+    /// does not kill the job: the survivors agree on a new world,
+    /// re-sync weights from the most advanced member, and restart the
+    /// interrupted data epoch (the optimizer's momentum is
+    /// deterministically reset on every member, so replicas stay
+    /// bitwise-identical — DESIGN.md §Elasticity).
     pub fn run(mut self, init: Option<ParamSet>,
                observer: &mut Observer<'_>)
         -> Result<RingOutcome, WorkerError> {
@@ -428,49 +506,25 @@ impl<'a> RingWorker<'a> {
         // dispatch to ring → tree → ring, control traffic stays flat.
         col.set_groups(self.groups.take());
 
-        // Identical start everywhere: rank 0's init circulates the ring.
+        let elastic = self.elastic_plan.is_some();
+        let mut cur_plan = self.elastic_plan.take();
+        if elastic {
+            col.set_elastic(true);
+            // failure detection latency == the neighbor-wait bound
+            col.set_recv_timeout(self.elastic_timeout);
+            let p = cur_plan.as_ref().unwrap();
+            col.adopt_world(p.epoch(), p.collective_members());
+        }
+        let fallback = self.data;
+        let fault_after = self.fault_after;
+        let resharder = self.resharder;
+        let mut owned_data: Option<DataSet> = None;
+
         let mut params = match init {
             Some(p) if rank == 0 => p,
             _ => ParamSet::zeros(&self.exes.meta.params),
         };
-        let mut weights_buf = params.flat().to_vec();
-        col.broadcast(0, &mut weights_buf)?;
-        if rank != 0 {
-            params.set_flat(&weights_buf);
-        }
-        drop(weights_buf);
-
-        // Agree on the common per-epoch round count: the minimum of the
-        // ranks' local batch counts. Uneven data divisions would
-        // otherwise leave the lockstep collectives waiting forever on a
-        // rank that ran out of batches.
-        let local_batches = self.data.batches_per_epoch(batch);
-        let rounds = col
-            .allreduce_scalar(local_batches as f32, ReduceOp::Min)?
-            as u64;
-        if (rounds as usize) < local_batches {
-            log::debug!(
-                "allreduce rank {rank}: trimming epoch to {rounds} \
-                 common rounds (local {local_batches})"
-            );
-        }
-
         let n_params = params.num_params();
-        // Bucketed overlap: one collective per layer bucket, launched
-        // mid-backprop as each layer's gradient lands, plus one tail
-        // bucket for the piggybacked loss + stop flag. Requires a tag
-        // lane per bucket; a model with more layers than lanes falls
-        // back to the monolithic collective.
-        let n_buckets = params.layer_ranges().len() + 1;
-        let use_buckets = self.algo.buckets && n > 1
-            && n_buckets <= tags::MAX_BUCKETS as usize;
-        if self.algo.buckets && !use_buckets && n > 1 && rank == 0 {
-            log::warn!(
-                "allreduce: {n_buckets} buckets exceed the \
-                 {} tag lanes; using the monolithic all-reduce",
-                tags::MAX_BUCKETS
-            );
-        }
         let mut opt = self.algo.build_master_optimizer(n_params);
         let lr_spec = self.lr;
         let mut history = History::default();
@@ -479,115 +533,319 @@ impl<'a> RingWorker<'a> {
         let mut update_timer = Stopwatch::new();
         let mut update_count = 0u64;
         let mut last_loss = 0.0f32;
-        let inv_n = 1.0 / n as f32;
         let mut epochs_done = 0u32;
+        let mut epoch = 0u32;
+        let mut rounds;
         // Early-stop lockstep: rank 0 raises the flag after its
         // callbacks request a stop; the flagged round is abandoned by
         // every rank before the update, keeping weights identical.
         let mut stop_flag = 0.0f32;
         let mut stopped = false;
 
-        let data = self.data;
+        if elastic && !cur_plan.as_ref().unwrap().is_member(rank) {
+            // JOINER: this rank is excluded from the launch plan. It
+            // announces itself to the coordinator and idles until an
+            // agreement admits it (replicated weights arrive via the
+            // resume broadcast, so it enters bitwise-identical).
+            let world = elastic::request_join(
+                &mut col,
+                self.elastic_timeout
+                    .saturating_mul(JOIN_WAIT_WINDOWS),
+            )
+            .map_err(WorkerError::Elastic)?;
+            let rs = apply_world(
+                &mut col, cur_plan.as_ref().unwrap(), &world,
+                &mut params, 0, batch, resharder, &mut owned_data,
+                fallback)?;
+            opt = self.algo.build_master_optimizer(n_params);
+            update_count = rs.update_count;
+            epoch = rs.epoch;
+            rounds = rs.rounds;
+            cur_plan = Some(rs.plan);
+            log::info!(
+                "elastic rank {rank}: joined epoch-{} world of {} \
+                 members at update {update_count}",
+                world.epoch,
+                world.members.len());
+        } else {
+            // Identical start everywhere: rank 0's init circulates the
+            // ring.
+            let mut weights_buf = params.flat().to_vec();
+            col.broadcast(0, &mut weights_buf)?;
+            if rank != 0 {
+                params.set_flat(&weights_buf);
+            }
+            drop(weights_buf);
+
+            // Agree on the common per-epoch round count: the minimum
+            // of the ranks' local batch counts. Uneven data divisions
+            // would otherwise leave the lockstep collectives waiting
+            // forever on a rank that ran out of batches.
+            let local_batches = fallback.batches_per_epoch(batch);
+            rounds = col
+                .allreduce_scalar(local_batches as f32, ReduceOp::Min)?
+                as u64;
+            if (rounds as usize) < local_batches {
+                log::debug!(
+                    "allreduce rank {rank}: trimming epoch to {rounds} \
+                     common rounds (local {local_batches})"
+                );
+            }
+        }
+
+        // Bucketed overlap: one collective per layer bucket, launched
+        // mid-backprop as each layer's gradient lands, plus one tail
+        // bucket for the piggybacked loss + stop flag. Requires a tag
+        // lane per bucket; a model with more layers than lanes falls
+        // back to the monolithic collective.
+        let n_buckets = params.layer_ranges().len() + 1;
+        let bucket_lanes_ok = n_buckets <= tags::MAX_BUCKETS as usize;
+        let mut n_live = col.n_ranks();
+        let mut use_buckets =
+            self.algo.buckets && n_live > 1 && bucket_lanes_ok;
+        if self.algo.buckets && !bucket_lanes_ok && n_live > 1
+            && rank == 0
+        {
+            log::warn!(
+                "allreduce: {n_buckets} buckets exceed the \
+                 {} tag lanes; using the monolithic all-reduce",
+                tags::MAX_BUCKETS
+            );
+        }
+        let mut inv_n = 1.0 / n_live as f32;
+
         let exes = self.exes;
         let algo = self.algo;
 
-        for epoch in 0..algo.epochs {
+        while epoch < algo.epochs {
             let mut erng = self.rng.fork(epoch as u64);
             let mut done_rounds = 0u64;
             let mut failure: Option<WorkerError> = None;
-            data.for_each_batch(batch, &mut erng, |x, y| {
-                if failure.is_some() || stopped
-                    || done_rounds >= rounds {
-                    return;
+            {
+                let data: &DataSet =
+                    owned_data.as_ref().unwrap_or(fallback);
+                data.for_each_batch(batch, &mut erng, |x, y| {
+                    if failure.is_some() || stopped
+                        || done_rounds >= rounds {
+                        return;
+                    }
+                    if fault_after.map_or(false, |f| update_count >= f)
+                    {
+                        failure = Some(WorkerError::FaultInjected);
+                        return;
+                    }
+                    if elastic && rank == 0 {
+                        // Scale-up entry: fold pending joiners in at a
+                        // round boundary by aborting into the same
+                        // agreement path a failure takes. The drained
+                        // requests go back into the stash so the
+                        // coordinator sees them.
+                        let joiners = col.pending_joiners();
+                        if !joiners.is_empty() {
+                            for &r in &joiners {
+                                col.stash_mut().push(Envelope {
+                                    src: r,
+                                    tag: Tag::ElasticJoin,
+                                    payload: Payload::Empty,
+                                });
+                            }
+                            failure = Some(WorkerError::Comm(
+                                CommError::Interrupted(format!(
+                                    "join request from ranks \
+                                     {joiners:?}"))));
+                            return;
+                        }
+                    }
+                    // Bucketed mode starts each layer's collective
+                    // inside the gradient step (that launch time IS
+                    // the overlap, so it stays on the grad timer); the
+                    // monolithic path computes the whole gradient
+                    // first.
+                    let (step, sink_err) = grad_timer.time(|| {
+                        if use_buckets {
+                            let mut sink = BucketLauncher {
+                                col: &mut col,
+                                total: n_params + 2,
+                                err: None,
+                            };
+                            let res = exes.grad_step_overlapped(
+                                &params, x, y, &mut sink);
+                            (res, sink.err)
+                        } else {
+                            (exes.grad_step(&params, x, y), None)
+                        }
+                    });
+                    let out = match (step, sink_err) {
+                        (Ok(o), None) => o,
+                        (Err(e), _) => {
+                            failure = Some(e.into());
+                            return;
+                        }
+                        (_, Some(e)) => {
+                            failure = Some(e.into());
+                            return;
+                        }
+                    };
+                    last_loss = out.loss;
+                    // average gradients world-wide; the local loss and
+                    // the stop flag ride along as two extra elements
+                    // (grad_step allocates the buffer with spare
+                    // slots, so these pushes never reallocate the
+                    // gradient on the hot path)
+                    let mut reduced = out.grads;
+                    reduced.push(out.loss);
+                    reduced.push(stop_flag);
+                    let comm_result = comm_timer.time(|| {
+                        if use_buckets {
+                            // tail bucket (loss + stop flag), then
+                            // drain every in-flight bucket in launch
+                            // order
+                            let tail = col.pending_buckets();
+                            col.bucket_begin(tail, &reduced, n_params,
+                                             n_params + 2,
+                                             n_params + 2)?;
+                            col.bucket_finish_sum(&mut reduced)
+                        } else {
+                            col.allreduce(&mut reduced, ReduceOp::Sum)
+                        }
+                    });
+                    if let Err(e) = comm_result {
+                        failure = Some(e.into());
+                        return;
+                    }
+                    if reduced[n_params + 1] > 0.0 {
+                        // someone (rank 0) requested a stop before
+                        // this round: abandon it pre-update on every
+                        // rank
+                        stopped = true;
+                        return;
+                    }
+                    for v in reduced.iter_mut().take(n_params + 1) {
+                        *v *= inv_n;
+                    }
+                    let mean_loss = reduced[n_params];
+                    if let Some(spec) = lr_spec {
+                        opt.set_lr_scale(
+                            spec.scale_for_update(update_count + 1));
+                    }
+                    update_timer.start();
+                    opt.update(params.flat_mut(),
+                               &reduced[..n_params]);
+                    update_timer.stop();
+                    update_count += 1;
+                    done_rounds += 1;
+                    if rank == 0 {
+                        observer.after_update(
+                            update_count, mean_loss, &params,
+                            started.elapsed().as_secs_f64(),
+                            &mut history);
+                        if observer.should_stop() {
+                            stop_flag = 1.0;
+                        }
+                    }
+                });
+            }
+            match failure {
+                None => {
+                    if stopped {
+                        break;
+                    }
+                    epochs_done = epoch + 1;
+                    epoch += 1;
                 }
-                // Bucketed mode starts each layer's collective inside
-                // the gradient step (that launch time IS the overlap,
-                // so it stays on the grad timer); the monolithic path
-                // computes the whole gradient first.
-                let (step, sink_err) = grad_timer.time(|| {
-                    if use_buckets {
-                        let mut sink = BucketLauncher {
-                            col: &mut col,
-                            total: n_params + 2,
-                            err: None,
+                Some(e) if elastic && recoverable(&e) => {
+                    // suspect → agree → replan → resume. Churn DURING
+                    // recovery restarts the agreement from the newer
+                    // generation, up to the attempt cap.
+                    let mut err = e;
+                    let mut attempt = 0u32;
+                    loop {
+                        attempt += 1;
+                        if attempt > MAX_RECOVERY_ATTEMPTS {
+                            return Err(err);
+                        }
+                        log::warn!(
+                            "elastic rank {rank}: round aborted \
+                             ({err}); membership agreement, attempt \
+                             {attempt}/{MAX_RECOVERY_ATTEMPTS}"
+                        );
+                        // Interrupted = a control message told us (the
+                        // coordinator already knows); anything else we
+                        // detected ourselves and must announce.
+                        let announce = !matches!(
+                            &err,
+                            WorkerError::Comm(
+                                CommError::Interrupted(_)));
+                        let outcome = if rank == 0 {
+                            elastic::coordinate(
+                                &mut col, cur_plan.as_ref().unwrap(),
+                                update_count, self.elastic_timeout)
+                                .map(MemberOutcome::Continue)
+                        } else {
+                            elastic::await_plan(
+                                &mut col, update_count,
+                                self.elastic_timeout, announce)
                         };
-                        let res = exes.grad_step_overlapped(
-                            &params, x, y, &mut sink);
-                        (res, sink.err)
-                    } else {
-                        (exes.grad_step(&params, x, y), None)
-                    }
-                });
-                let out = match (step, sink_err) {
-                    (Ok(o), None) => o,
-                    (Err(e), _) => {
-                        failure = Some(e.into());
-                        return;
-                    }
-                    (_, Some(e)) => {
-                        failure = Some(e.into());
-                        return;
-                    }
-                };
-                last_loss = out.loss;
-                // average gradients world-wide; the local loss and the
-                // stop flag ride along as two extra elements (grad_step
-                // allocates the buffer with spare slots, so these
-                // pushes never reallocate the gradient on the hot path)
-                let mut reduced = out.grads;
-                reduced.push(out.loss);
-                reduced.push(stop_flag);
-                let comm_result = comm_timer.time(|| {
-                    if use_buckets {
-                        // tail bucket (loss + stop flag), then drain
-                        // every in-flight bucket in launch order
-                        let tail = col.pending_buckets();
-                        col.bucket_begin(tail, &reduced, n_params,
-                                         n_params + 2, n_params + 2)?;
-                        col.bucket_finish_sum(&mut reduced)
-                    } else {
-                        col.allreduce(&mut reduced, ReduceOp::Sum)
-                    }
-                });
-                if let Err(e) = comm_result {
-                    failure = Some(e.into());
-                    return;
-                }
-                if reduced[n_params + 1] > 0.0 {
-                    // someone (rank 0) requested a stop before this
-                    // round: abandon it pre-update on every rank
-                    stopped = true;
-                    return;
-                }
-                for v in reduced.iter_mut().take(n_params + 1) {
-                    *v *= inv_n;
-                }
-                let mean_loss = reduced[n_params];
-                if let Some(spec) = lr_spec {
-                    opt.set_lr_scale(
-                        spec.scale_for_update(update_count + 1));
-                }
-                update_timer.start();
-                opt.update(params.flat_mut(), &reduced[..n_params]);
-                update_timer.stop();
-                update_count += 1;
-                done_rounds += 1;
-                if rank == 0 {
-                    observer.after_update(
-                        update_count, mean_loss, &params,
-                        started.elapsed().as_secs_f64(), &mut history);
-                    if observer.should_stop() {
-                        stop_flag = 1.0;
+                        let world = match outcome {
+                            Ok(MemberOutcome::Continue(w)) => w,
+                            Ok(MemberOutcome::Evicted) => {
+                                log::warn!(
+                                    "elastic rank {rank}: evicted \
+                                     from the new world; exiting \
+                                     cleanly");
+                                return Ok(RingOutcome {
+                                    report: WorkerReport {
+                                        rank,
+                                        epochs: epochs_done,
+                                        batches: update_count,
+                                        samples: update_count
+                                            * batch as u64,
+                                        last_train_loss: last_loss,
+                                        grad_time_s:
+                                            grad_timer.total_s(),
+                                        comm_wait_s:
+                                            comm_timer.total_s(),
+                                    },
+                                    weights: params,
+                                    history: History::default(),
+                                });
+                            }
+                            Err(msg) => {
+                                return Err(WorkerError::Elastic(msg));
+                            }
+                        };
+                        match apply_world(
+                            &mut col, cur_plan.as_ref().unwrap(),
+                            &world, &mut params, epoch, batch,
+                            resharder, &mut owned_data, fallback)
+                        {
+                            Ok(rs) => {
+                                // momentum deterministically reset on
+                                // EVERY member — replica-identical
+                                opt = algo
+                                    .build_master_optimizer(n_params);
+                                update_count = rs.update_count;
+                                epoch = rs.epoch;
+                                rounds = rs.rounds;
+                                n_live = rs.n;
+                                inv_n = 1.0 / n_live as f32;
+                                use_buckets = algo.buckets
+                                    && n_live > 1 && bucket_lanes_ok;
+                                cur_plan = Some(rs.plan);
+                                log::info!(
+                                    "elastic rank {rank}: resumed \
+                                     epoch {epoch} at update \
+                                     {update_count} in a {n_live}\
+                                     -member world");
+                                break;
+                            }
+                            Err(e2) if recoverable(&e2) => err = e2,
+                            Err(e2) => return Err(e2),
+                        }
                     }
                 }
-            });
-            if let Some(e) = failure {
-                return Err(e);
+                Some(e) => return Err(e),
             }
-            if stopped {
-                break;
-            }
-            epochs_done = epoch + 1;
         }
 
         let report = WorkerReport {
@@ -622,11 +880,35 @@ impl<'a> RingWorker<'a> {
 
         // Rank 0 wind-down: collect every peer's stats. Some may have
         // been stashed by the final collectives (a faster rank finishes
-        // its last all-gather — and reports — before rank 0 does).
+        // its last all-gather — and reports — before rank 0 does). In
+        // elastic mode only the FINAL generation's members report, and
+        // the collection is timeout-bounded so a peer dying during
+        // wind-down cannot hang the job (its stats are simply missing
+        // from the history).
+        let peers: Vec<Rank> = match col.members() {
+            Some(m) => m.iter().copied().filter(|&r| r != 0).collect(),
+            None => (1..n).collect(),
+        };
         let mut stash = col.into_stash();
         history.workers.push(report.clone());
-        for _ in 1..n {
-            let env = self.comm.recv_tag(Tag::TrainStats, &mut stash)?;
+        let stats_deadline =
+            Instant::now() + self.elastic_timeout.saturating_mul(2);
+        for _ in 0..peers.len() {
+            let env = if elastic {
+                match recv_tag_deadline(self.comm, Tag::TrainStats,
+                                        &mut stash, stats_deadline) {
+                    Some(env) => env,
+                    None => {
+                        log::warn!(
+                            "elastic wind-down: missing TrainStats \
+                             from some of {peers:?}; history is \
+                             incomplete");
+                        break;
+                    }
+                }
+            } else {
+                self.comm.recv_tag(Tag::TrainStats, &mut stash)?
+            };
             if let Payload::Stats(s) = env.payload {
                 history.workers.push(WorkerReport {
                     rank: env.src,
@@ -647,5 +929,96 @@ impl<'a> RingWorker<'a> {
         observer.finish(update_count, &params,
                         started.elapsed().as_secs_f64(), &mut history);
         Ok(RingOutcome { report, weights: params, history })
+    }
+}
+
+/// Post-agreement state every member installs identically.
+struct ResumeState {
+    plan: WorldPlan,
+    /// Data epoch training restarts from (the max across members — the
+    /// interrupted epoch is replayed from its first round).
+    epoch: u32,
+    rounds: u64,
+    update_count: u64,
+    n: usize,
+}
+
+/// Can this error trigger the elastic recovery path (vs. a local bug
+/// that must abort)?
+fn recoverable(e: &WorkerError) -> bool {
+    matches!(
+        e,
+        WorkerError::Comm(
+            CommError::Interrupted(_)
+            | CommError::Timeout(_)
+            | CommError::SendFailed(_)))
+}
+
+/// The identical resume sequence every member of an agreed [`NewWorld`]
+/// runs (DESIGN.md §Elasticity): adopt the plan (purging stale
+/// generations and discarding the error-feedback residual), re-sync
+/// weights from the sync root, Max-agree the data epoch to restart,
+/// re-shard, and Min-agree the new common round count.
+#[allow(clippy::too_many_arguments)]
+fn apply_world(col: &mut Collective, base: &WorldPlan,
+               world: &NewWorld, params: &mut ParamSet, my_epoch: u32,
+               batch: usize, resharder: Option<&ReshardFn>,
+               owned_data: &mut Option<DataSet>, fallback: &DataSet)
+    -> Result<ResumeState, WorkerError> {
+    let plan = base.with_members(world.epoch, world.members.clone());
+    col.adopt_world(world.epoch, plan.collective_members());
+    col.set_groups(plan.ring_layout());
+    // bitwise-identical restart: the most advanced survivor's weights
+    // replace everyone's
+    let mut buf = params.flat().to_vec();
+    col.broadcast(world.sync_root, &mut buf)?;
+    params.set_flat(&buf);
+    drop(buf);
+    // members may sit one epoch apart (a failure at an epoch boundary);
+    // joiners enter at 0 — everyone restarts the max
+    let epoch =
+        col.allreduce_scalar(my_epoch as f32, ReduceOp::Max)? as u32;
+    if let Some(f) = resharder {
+        let m = world.members.len();
+        let pos = world
+            .members
+            .iter()
+            .position(|&r| r == col.comm().rank())
+            .expect("apply_world runs on members only");
+        *owned_data = Some(f(pos, m).map_err(WorkerError::Elastic)?);
+    }
+    let local = owned_data
+        .as_ref()
+        .unwrap_or(fallback)
+        .batches_per_epoch(batch);
+    let rounds =
+        col.allreduce_scalar(local as f32, ReduceOp::Min)? as u64;
+    Ok(ResumeState {
+        plan,
+        epoch,
+        rounds,
+        update_count: world.resume_update,
+        n: world.members.len(),
+    })
+}
+
+/// Deadline-bounded [`Comm::recv_tag`]: `None` on timeout instead of
+/// blocking forever on a peer that died during wind-down.
+fn recv_tag_deadline(comm: &Comm, want: Tag,
+                     stash: &mut Vec<Envelope>,
+                     deadline: Instant) -> Option<Envelope> {
+    if let Some(i) = stash.iter().position(|e| e.tag == want) {
+        return Some(stash.remove(i));
+    }
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            return None;
+        }
+        match comm.recv_timeout(deadline - now) {
+            Ok(env) if env.tag == want => return Some(env),
+            Ok(env) => stash.push(env),
+            Err(_) => return None,
+        }
     }
 }

@@ -226,6 +226,12 @@ const TRAIN_FLAGS: &[Flag] = &[
     Flag { name: "buckets", value: "", default: "",
            help: "allreduce: per-layer bucketed all-reduce overlapped \
                   with backprop (identical results, less comm wait)" },
+    Flag { name: "elastic", value: "", default: "",
+           help: "allreduce: survive rank churn — replan the ring over \
+                  survivors and resume (see docs/RUNBOOK.md)" },
+    Flag { name: "elastic-timeout-ms", value: "<ms>", default: "30000",
+           help: "elastic: dead-peer suspicion + membership agreement \
+                  window" },
     Flag { name: "optimizer", value: "<o>", default: "momentum",
            help: "sgd | momentum | adam | rmsprop | adadelta" },
     Flag { name: "lr", value: "<f>", default: "0.05",
@@ -481,6 +487,9 @@ fn parse_algo(args: &Args) -> Result<Algo, String> {
     algo.compression =
         Codec::parse(&args.str("compression", "fp32"))?;
     algo.buckets = args.bool("buckets");
+    algo.elastic = args.bool("elastic");
+    algo.elastic_timeout_ms = args.usize("elastic-timeout-ms", 30_000)
+        .map_err(|e| e.to_string())? as u64;
     algo.mode = match args.str("mode", "downpour").as_str() {
         "downpour" => Mode::Downpour { sync: args.bool("sync") },
         "easgd" => Mode::Easgd {

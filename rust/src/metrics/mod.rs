@@ -1,4 +1,22 @@
 //! Training metrics: history records, timers, throughput accounting.
+//!
+//! Everything a finished run hands back or a live service exports:
+//!
+//! * [`History`] — the observer's record of one training run
+//!   (per-epoch losses, [`ValRecord`] validation points, final
+//!   [`WorkerReport`]s, wall-clock). Returned by
+//!   `Experiment::run` / `driver::train`, serialized by the benches
+//!   and the `jsonl` callback.
+//! * [`Stopwatch`] — monotonic split timer behind the
+//!   `grad_time_s` / `comm_wait_s` accounting in [`WorkerReport`].
+//! * [`Histogram`] — mergeable log-bucketed latency histogram
+//!   (p50/p99/p999) behind the serving front-end's `GET /metrics`
+//!   endpoint; buckets are fixed at compile time so replicas'
+//!   histograms merge without negotiation.
+//!
+//! None of this is wired to a metrics *backend* — export is plain
+//! text (serving) or JSONL (training callbacks), in keeping with the
+//! crate's no-new-dependencies budget.
 
 use std::time::Instant;
 

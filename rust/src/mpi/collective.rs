@@ -83,7 +83,7 @@ use crate::mpi::tags;
 /// rank would hang the whole world forever; with it, the survivors
 /// surface `CommError::Timeout` and the driver reports the failure.
 /// Generous enough that validation pauses and big payloads never trip it.
-const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(300);
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(300);
 
 /// Element-wise reduction operator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -201,6 +201,19 @@ pub struct Collective<'a> {
     /// Buckets launched by [`Collective::bucket_begin`] and not yet
     /// completed by [`Collective::bucket_finish_sum`], in launch order.
     pending: Vec<PendingBucket>,
+    /// World generation: stamped into the high 32 bits of every
+    /// collective payload's `step` so traffic from an already-replaced
+    /// world is rejected (the wrong-source race class the tag registry
+    /// exists for, extended across replans). 0 until the first replan.
+    epoch: u64,
+    /// Current membership over the ORIGINAL Comm rank space (`None` =
+    /// every rank). Replans shrink/grow this list; the `Comm` world
+    /// itself never changes size after launch.
+    members: Option<Vec<Rank>>,
+    /// Elastic mode: membership-control envelopes (`ElasticSuspect` /
+    /// `ElasticProbe` / `ElasticPlan`) interrupt in-flight collectives
+    /// with [`CommError::Interrupted`] instead of being stashed.
+    elastic: bool,
 }
 
 /// One outstanding bucketed sum all-reduce: the window `[w0, w1)` of a
@@ -256,6 +269,9 @@ impl<'a> Collective<'a> {
             exact_tail: 0,
             groups: None,
             pending: Vec::new(),
+            epoch: 0,
+            members: None,
+            elastic: false,
         }
     }
 
@@ -307,12 +323,187 @@ impl<'a> Collective<'a> {
         self.stash
     }
 
-    fn next_rank(&self) -> Rank {
-        (self.comm.rank() + 1) % self.comm.size()
+    /// Direct mutable access to the stash — the elastic membership
+    /// protocol ([`crate::coordinator::elastic`]) shares it so control
+    /// envelopes stashed mid-collective are found by its receives.
+    pub fn stash_mut(&mut self) -> &mut Vec<Envelope> {
+        &mut self.stash
     }
 
-    fn prev_rank(&self) -> Rank {
-        (self.comm.rank() + self.comm.size() - 1) % self.comm.size()
+    /// Enable elastic membership handling: `ElasticSuspect` /
+    /// `ElasticProbe` / `ElasticPlan` envelopes observed inside a
+    /// collective abort it with [`CommError::Interrupted`] so the
+    /// caller can run the membership-agreement barrier.
+    pub fn set_elastic(&mut self, on: bool) {
+        self.elastic = on;
+    }
+
+    /// Current world generation (0 until the first replan).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Current member list (`None` = the full Comm world).
+    pub fn members(&self) -> Option<&[Rank]> {
+        self.members.as_deref()
+    }
+
+    /// Ranks participating in collectives under the current plan.
+    pub fn n_ranks(&self) -> usize {
+        self.members.as_ref().map_or(self.comm.size(), |m| m.len())
+    }
+
+    /// Adopt a replanned world: bump the generation, install the member
+    /// list, and deterministically reset in-flight state — pending
+    /// buckets are dropped, the error-feedback residual is DISCARDED
+    /// (not flushed: survivors abort at different points of the round,
+    /// so only a reset keeps the compressor state replica-identical;
+    /// DESIGN.md §Elasticity), and stale stash entries from older
+    /// generations are purged. Stashed future-generation traffic (sent
+    /// by members that adopted before us) is kept: it is this world's.
+    pub fn adopt_world(&mut self, epoch: u64,
+                       members: Option<Vec<Rank>>) {
+        self.epoch = epoch;
+        self.members = members;
+        self.pending.clear();
+        self.compressor = Compressor::new(self.codec);
+        self.stash.retain(|e| {
+            let stale_gen = Self::gen_of(&e.payload)
+                .map_or(false, |g| g < epoch);
+            let screened = Self::is_collective_tag(e.tag)
+                || matches!(e.tag, Tag::ElasticSuspect
+                            | Tag::ElasticProbe | Tag::ElasticAlive
+                            | Tag::ElasticPlan);
+            !(screened && stale_gen)
+        });
+    }
+
+    /// Drain every `ElasticJoin` request observed so far (stashed
+    /// mid-collective or still sitting in the receive queue), deduped
+    /// and sorted.
+    pub fn pending_joiners(&mut self) -> Vec<Rank> {
+        let mut joiners: Vec<Rank> = Vec::new();
+        self.stash.retain(|e| {
+            if e.tag == Tag::ElasticJoin {
+                joiners.push(e.src);
+                false
+            } else {
+                true
+            }
+        });
+        loop {
+            match self.comm.try_recv() {
+                Ok(Some(env)) => {
+                    if env.tag == Tag::ElasticJoin {
+                        joiners.push(env.src);
+                    } else {
+                        self.stash.push(env);
+                    }
+                }
+                Ok(None) | Err(_) => break,
+            }
+        }
+        joiners.sort_unstable();
+        joiners.dedup();
+        joiners
+    }
+
+    /// The world generation stamped into a payload's `step` high bits
+    /// (None for payloads that carry no step).
+    fn gen_of(payload: &Payload) -> Option<u64> {
+        match payload {
+            Payload::Floats { step, .. }
+            | Payload::Packed { step, .. }
+            | Payload::Grad { step, .. } => Some(step >> 32),
+            _ => None,
+        }
+    }
+
+    /// Tags whose envelopes carry generation-screened collective data.
+    fn is_collective_tag(tag: Tag) -> bool {
+        matches!(tag,
+                 Tag::RingChunk | Tag::Bcast | Tag::TreeReduce
+                 | Tag::TreeBcast | Tag::GroupGather | Tag::GroupChunk
+                 | Tag::GroupBcast | Tag::Bucket { .. })
+    }
+
+    /// Whether a stashed/received envelope may satisfy the current
+    /// collective receive: collective data must carry the current
+    /// generation (stale worlds' chunks are never deliverable).
+    fn current_gen(&self, e: &Envelope) -> bool {
+        !Self::is_collective_tag(e.tag)
+            || Self::gen_of(&e.payload).map_or(true, |g| g == self.epoch)
+    }
+
+    /// Gate one envelope observed inside a collective receive loop.
+    /// `Ok(Some(env))` = deliverable; `Ok(None)` = swallowed (stale
+    /// generation) or parked in the stash (future generation, elastic
+    /// control); `Err(Interrupted)` = membership control demands the
+    /// caller abort the in-flight round (elastic mode only).
+    fn screen(&mut self, env: Envelope)
+        -> Result<Option<Envelope>, CommError> {
+        if Self::is_collective_tag(env.tag) {
+            return Ok(match Self::gen_of(&env.payload) {
+                Some(g) if g < self.epoch => None, // stale world: drop
+                Some(g) if g > self.epoch => {
+                    // a member that already adopted the next plan is
+                    // ahead of us — keep its traffic for after adoption
+                    self.stash.push(env);
+                    None
+                }
+                _ => Some(env),
+            });
+        }
+        match env.tag {
+            Tag::ElasticSuspect | Tag::ElasticProbe
+            | Tag::ElasticPlan => {
+                if Self::gen_of(&env.payload)
+                    .map_or(false, |g| g < self.epoch)
+                {
+                    return Ok(None); // stale control: drop
+                }
+                let what =
+                    format!("{:?} from rank {}", env.tag, env.src);
+                self.stash.push(env);
+                if self.elastic {
+                    Err(CommError::Interrupted(what))
+                } else {
+                    Ok(None)
+                }
+            }
+            Tag::ElasticAlive | Tag::ElasticJoin => {
+                // consumed out-of-band by the membership protocol
+                self.stash.push(env);
+                Ok(None)
+            }
+            _ => Ok(Some(env)),
+        }
+    }
+
+    /// Stamp the next collective payload: world generation in the high
+    /// 32 bits, the monotone send sequence in the low 32.
+    fn next_step(&mut self) -> u64 {
+        self.seq += 1;
+        (self.epoch << 32) | (self.seq & 0xFFFF_FFFF)
+    }
+
+    /// The current world's ring: (member count, own position, next
+    /// rank, prev rank). With no member list this is the full Comm
+    /// world's rank order.
+    fn ring(&self) -> Result<(usize, usize, Rank, Rank), CommError> {
+        match &self.members {
+            None => {
+                let n = self.comm.size();
+                let rank = self.comm.rank();
+                Ok((n, rank, (rank + 1) % n, (rank + n - 1) % n))
+            }
+            Some(members) => {
+                let m = members.len();
+                let pos = member_pos(members, self.comm.rank())?;
+                Ok((m, pos, members[(pos + 1) % m],
+                    members[(pos + m - 1) % m]))
+            }
+        }
     }
 
     /// Bounds of balanced chunk `i` when a length-`len` vector is split
@@ -346,8 +537,8 @@ impl<'a> Collective<'a> {
 
     fn send_chunk(&mut self, to: Rank, tag: Tag, data: &[f32])
         -> Result<(), CommError> {
-        self.seq += 1;
-        self.comm.send(to, tag, Payload::floats(self.seq, data.to_vec()))
+        let step = self.next_step();
+        self.comm.send(to, tag, Payload::floats(step, data.to_vec()))
     }
 
     /// Like [`Collective::recv_from`], but same-tag traffic from other
@@ -358,14 +549,16 @@ impl<'a> Collective<'a> {
     fn recv_from_stashing(&mut self, tag: Tag, from: Rank)
         -> Result<Envelope, CommError> {
         loop {
-            if let Some(i) = self
-                .stash
-                .iter()
-                .position(|e| e.tag == tag && e.src == from)
-            {
+            if let Some(i) = self.stash.iter().position(|e| {
+                e.tag == tag && e.src == from && self.current_gen(e)
+            }) {
                 return Ok(self.stash.remove(i));
             }
             let env = self.comm.recv_timeout(self.recv_timeout)?;
+            let env = match self.screen(env)? {
+                Some(env) => env,
+                None => continue,
+            };
             if env.tag == tag && env.src == from {
                 return Ok(env);
             }
@@ -379,14 +572,16 @@ impl<'a> Collective<'a> {
     fn recv_from(&mut self, tag: Tag, from: Rank)
         -> Result<Envelope, CommError> {
         loop {
-            if let Some(i) = self
-                .stash
-                .iter()
-                .position(|e| e.tag == tag && e.src == from)
-            {
+            if let Some(i) = self.stash.iter().position(|e| {
+                e.tag == tag && e.src == from && self.current_gen(e)
+            }) {
                 return Ok(self.stash.remove(i));
             }
             let env = self.comm.recv_timeout(self.recv_timeout)?;
+            let env = match self.screen(env)? {
+                Some(env) => env,
+                None => continue,
+            };
             if env.tag == tag {
                 if env.src != from {
                     return Err(CommError::Protocol(format!(
@@ -484,7 +679,7 @@ impl<'a> Collective<'a> {
     /// (they are rare control-plane reductions).
     pub fn allreduce(&mut self, data: &mut [f32], op: ReduceOp)
         -> Result<(), CommError> {
-        if self.comm.size() <= 1 {
+        if self.n_ranks() <= 1 {
             return Ok(());
         }
         if op != ReduceOp::Sum {
@@ -501,18 +696,20 @@ impl<'a> Collective<'a> {
 
     fn allreduce_raw(&mut self, data: &mut [f32], op: ReduceOp)
         -> Result<(), CommError> {
-        let n = self.comm.size();
-        let rank = self.comm.rank();
+        // Positional over the current member list, so the same schedule
+        // runs on the full world and on any replanned survivor subset.
+        let (n, pos, next, prev) = self.ring()?;
+        if n <= 1 {
+            return Ok(());
+        }
         let len = data.len();
-        let next = self.next_rank();
-        let prev = self.prev_rank();
 
         // Phase 1 — reduce-scatter: after step s, a rank holds the
-        // partial reduction of s+1 ranks for chunk (rank - s) mod n;
-        // after n-1 steps it owns the complete chunk (rank + 1) mod n.
+        // partial reduction of s+1 ranks for chunk (pos - s) mod n;
+        // after n-1 steps it owns the complete chunk (pos + 1) mod n.
         for step in 0..n - 1 {
-            let send_idx = (rank + n - step) % n;
-            let recv_idx = (rank + 2 * n - step - 1) % n;
+            let send_idx = (pos + n - step) % n;
+            let recv_idx = (pos + 2 * n - step - 1) % n;
             let (s0, s1) = Self::chunk_bounds(len, n, send_idx);
             self.send_chunk(next, Tag::RingChunk, &data[s0..s1])?;
             let (r0, r1) = Self::chunk_bounds(len, n, recv_idx);
@@ -525,8 +722,8 @@ impl<'a> Collective<'a> {
 
         // Phase 2 — all-gather: circulate the completed chunks.
         for step in 0..n - 1 {
-            let send_idx = (rank + 1 + 2 * n - step) % n;
-            let recv_idx = (rank + 2 * n - step) % n;
+            let send_idx = (pos + 1 + 2 * n - step) % n;
+            let recv_idx = (pos + 2 * n - step) % n;
             let (s0, s1) = Self::chunk_bounds(len, n, send_idx);
             self.send_chunk(next, Tag::RingChunk, &data[s0..s1])?;
             let (r0, r1) = Self::chunk_bounds(len, n, recv_idx);
@@ -551,9 +748,9 @@ impl<'a> Collective<'a> {
     /// is a window of the logical `total`-element buffer.
     fn owned_chunk_payload(&mut self, data: &mut [f32], s0: usize,
                            s1: usize, total: usize) -> Payload {
-        self.seq += 1;
+        let step = self.next_step();
         if self.codec.is_identity() {
-            Payload::floats(self.seq, data[s0..s1].to_vec())
+            Payload::floats(step, data[s0..s1].to_vec())
         } else {
             let protect = self.protect_len(total, s0, s1);
             let packed = self
@@ -561,7 +758,7 @@ impl<'a> Collective<'a> {
                 .compress_window(&data[s0..s1], s0, total, protect)
                 .expect("lossy codec packs");
             packed.unpack_into(&mut data[s0..s1]);
-            Payload::packed(self.seq, 0.0, packed)
+            Payload::packed(step, 0.0, packed)
         }
     }
 
@@ -575,17 +772,14 @@ impl<'a> Collective<'a> {
     fn ring_sum_window(&mut self, data: &mut [f32], w0: usize,
                        w1: usize, total: usize, tag: Tag,
                        skip_first_send: bool) -> Result<(), CommError> {
-        let n = self.comm.size();
-        let rank = self.comm.rank();
-        let next = self.next_rank();
-        let prev = self.prev_rank();
+        let (n, pos, next, prev) = self.ring()?;
 
         // Phase 1 — reduce-scatter over decoded f32: each hop carries
         // partial sums (compressed with error feedback under a lossy
         // codec — what this round drops rides along next round).
         for step in 0..n - 1 {
-            let send_idx = (rank + n - step) % n;
-            let recv_idx = (rank + 2 * n - step - 1) % n;
+            let send_idx = (pos + n - step) % n;
+            let recv_idx = (pos + 2 * n - step - 1) % n;
             if step > 0 || !skip_first_send {
                 let (s0, s1) =
                     Self::window_chunk(total, n, send_idx, w0, w1);
@@ -601,8 +795,8 @@ impl<'a> Collective<'a> {
         // rank adopts identical bytes.
         let mut carry: Option<Payload> = None;
         for step in 0..n - 1 {
-            let send_idx = (rank + 1 + 2 * n - step) % n;
-            let recv_idx = (rank + 2 * n - step) % n;
+            let send_idx = (pos + 1 + 2 * n - step) % n;
+            let recv_idx = (pos + 2 * n - step) % n;
             let payload = match carry.take() {
                 Some(p) => p,
                 None => {
@@ -630,9 +824,9 @@ impl<'a> Collective<'a> {
                       s0: usize, s1: usize, len: usize)
         -> Result<(), CommError> {
         if self.codec.is_identity() {
-            self.seq += 1;
+            let step = self.next_step();
             self.comm.send(to, tag,
-                           Payload::floats(self.seq,
+                           Payload::floats(step,
                                            data[s0..s1].to_vec()))
         } else {
             let protect = self.protect_len(len, s0, s1);
@@ -640,8 +834,8 @@ impl<'a> Collective<'a> {
                 .compressor
                 .compress_window(&data[s0..s1], s0, len, protect)
                 .expect("lossy codec packs");
-            self.seq += 1;
-            self.comm.send(to, tag, Payload::packed(self.seq, 0.0,
+            let step = self.next_step();
+            self.comm.send(to, tag, Payload::packed(step, 0.0,
                                                     packed))
         }
     }
@@ -758,12 +952,12 @@ impl<'a> Collective<'a> {
         -> Result<(Vec<Rank>, usize, Vec<Rank>), CommError> {
         let layout = self.groups.as_ref()
             .expect("hierarchical schedule requires a group layout");
-        if layout.world_size() != self.comm.size() {
+        if layout.world_size() != self.n_ranks() {
             return Err(CommError::Protocol(format!(
                 "collective: group layout covers {} ranks but the \
                  world has {}",
                 layout.world_size(),
-                self.comm.size()
+                self.n_ranks()
             )));
         }
         let rank = self.comm.rank();
@@ -902,9 +1096,8 @@ impl<'a> Collective<'a> {
         assert!(w0 <= w1 && w1 <= total && w1 <= data.len(),
                 "bucket window [{w0}, {w1}) out of bounds \
                  (total {total}, data {})", data.len());
-        let n = self.comm.size();
         let mut first_sent = false;
-        if n > 1 {
+        if self.n_ranks() > 1 {
             let tag = tags::bucket_tag(bucket, BucketPhase::Chunk);
             if self.groups.is_some() {
                 // hierarchical: step 0 of the intra-group ring
@@ -921,9 +1114,8 @@ impl<'a> Collective<'a> {
                 }
             } else {
                 // flat ring: step 0's send chunk is the rank's own
-                let rank = self.comm.rank();
-                let next = self.next_rank();
-                let (s0, s1) = Self::window_chunk(total, n, rank, w0, w1);
+                let (n, pos, next, _) = self.ring()?;
+                let (s0, s1) = Self::window_chunk(total, n, pos, w0, w1);
                 self.send_sum_chunk(next, tag, data, s0, s1, total)?;
                 first_sent = true;
             }
@@ -943,7 +1135,7 @@ impl<'a> Collective<'a> {
     pub fn bucket_finish_sum(&mut self, data: &mut [f32])
         -> Result<(), CommError> {
         let pending = std::mem::take(&mut self.pending);
-        if self.comm.size() <= 1 {
+        if self.n_ranks() <= 1 {
             return Ok(());
         }
         for pb in pending {
@@ -976,7 +1168,7 @@ impl<'a> Collective<'a> {
     pub fn allreduce_scalar(&mut self, value: f32, op: ReduceOp)
         -> Result<f32, CommError> {
         let mut buf = [value];
-        if self.comm.size() > 1 {
+        if self.n_ranks() > 1 {
             self.allreduce_raw(&mut buf, op)?;
         }
         Ok(buf[0])
@@ -987,27 +1179,31 @@ impl<'a> Collective<'a> {
     /// inproc transport forwards it without re-copying.
     pub fn broadcast(&mut self, root: Rank, data: &mut Vec<f32>)
         -> Result<(), CommError> {
-        let n = self.comm.size();
-        if root >= n {
-            return Err(CommError::InvalidRank { rank: root, size: n });
+        if root >= self.comm.size() {
+            return Err(CommError::InvalidRank { rank: root,
+                                                size: self.comm.size() });
         }
-        if n <= 1 {
+        let (m, pos, next, prev) = self.ring()?;
+        if m <= 1 {
             return Ok(());
         }
-        let rank = self.comm.rank();
-        let next = self.next_rank();
-        self.seq += 1;
-        if rank == root {
+        // positional: the root may sit anywhere in a replanned
+        // member list
+        let root_pos = match &self.members {
+            None => root,
+            Some(members) => member_pos(members, root)?,
+        };
+        let step = self.next_step();
+        if pos == root_pos {
             self.comm.send(next, Tag::Bcast,
-                           Payload::floats(self.seq, data.clone()))?;
+                           Payload::floats(step, data.clone()))?;
         } else {
-            let prev = self.prev_rank();
             let payload = self.recv_floats(Tag::Bcast, prev, None)?;
             data.clear();
             data.extend_from_slice(&payload);
-            if next != root {
+            if (pos + 1) % m != root_pos {
                 self.comm.send(next, Tag::Bcast,
-                               Payload::floats_shared(self.seq, payload))?;
+                               Payload::floats_shared(step, payload))?;
             }
         }
         Ok(())
@@ -1953,5 +2149,144 @@ mod tests {
         col.bucket_finish_sum(&mut data).unwrap();
         assert_eq!(col.pending_buckets(), 0);
         assert_eq!(data, vec![4.0, -1.0, 2.5]);
+    }
+
+    // --- elastic worlds ---------------------------------------------
+
+    /// A replanned world: 4 Comm ranks, survivors {0, 2, 3}. The
+    /// member ring all-reduces among itself exactly like a fresh
+    /// 3-rank world; rank 1 never participates.
+    #[test]
+    fn subset_ring_allreduce_over_survivors() {
+        let inputs: Vec<Vec<f32>> = vec![
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            vec![100.0, 200.0, 300.0, 400.0, 500.0],
+        ];
+        let reference = ring_order_reference(&inputs, ReduceOp::Sum);
+        let members = vec![0usize, 2, 3];
+        let mut world: Vec<Option<Comm>> =
+            inproc_world(4).into_iter().map(Some).collect();
+        let survivors: Vec<Comm> = members
+            .iter()
+            .map(|&r| world[r].take().unwrap())
+            .collect();
+        let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = survivors
+                .into_iter()
+                .zip(inputs.iter())
+                .map(|(comm, input)| {
+                    let members = members.clone();
+                    let mut buf = input.clone();
+                    s.spawn(move || {
+                        let mut col = Collective::new(&comm);
+                        col.adopt_world(1, Some(members));
+                        assert_eq!(col.n_ranks(), 3);
+                        col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                        // broadcast from a mid-list member too
+                        let mut extra = if comm.rank() == 2 {
+                            vec![7.0f32, 8.0]
+                        } else {
+                            vec![0.0f32; 2]
+                        };
+                        col.broadcast(2, &mut extra).unwrap();
+                        assert_eq!(extra, vec![7.0, 8.0]);
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for got in &results {
+            assert_eq!(got, &reference);
+        }
+    }
+
+    /// A straggler chunk stamped with a replaced world's generation
+    /// must be dropped by the receiver, not summed into the round.
+    #[test]
+    fn stale_generation_chunks_are_dropped() {
+        let world = inproc_world(2);
+        let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let h0 = s.spawn(|| {
+                let comm = &world[0];
+                // gen-0 straggler racing into the gen-1 world
+                comm.send(1, Tag::RingChunk,
+                          Payload::floats(7, vec![99.0]))
+                    .unwrap();
+                let mut col = Collective::new(comm);
+                col.adopt_world(1, None);
+                let mut buf = vec![1.0f32, 2.0];
+                col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                buf
+            });
+            let h1 = s.spawn(|| {
+                let mut col = Collective::new(&world[1]);
+                col.adopt_world(1, None);
+                let mut buf = vec![10.0f32, 20.0];
+                col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                buf
+            });
+            vec![h0.join().unwrap(), h1.join().unwrap()]
+        });
+        for got in &results {
+            assert_eq!(got, &vec![11.0, 22.0]);
+        }
+    }
+
+    /// In elastic mode a membership-control envelope aborts the
+    /// in-flight collective with `Interrupted` and is preserved in the
+    /// stash for the agreement protocol.
+    #[test]
+    fn elastic_control_interrupts_a_collective() {
+        let world = inproc_world(2);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let mut col = Collective::new(&world[1]);
+                col.set_elastic(true);
+                col.set_recv_timeout(Duration::from_secs(10));
+                let mut buf = vec![0.0f32; 4];
+                let err = col
+                    .allreduce(&mut buf, ReduceOp::Sum)
+                    .unwrap_err();
+                assert!(matches!(err, CommError::Interrupted(_)),
+                        "{err:?}");
+                assert!(col.stash_mut().iter()
+                    .any(|e| e.tag == Tag::ElasticProbe));
+            });
+            world[0]
+                .send(1, Tag::ElasticProbe, Payload::floats(0, vec![]))
+                .unwrap();
+            h.join().unwrap();
+        });
+    }
+
+    /// Without elastic mode, control traffic is stashed silently and
+    /// the collective completes — PS/EASGD worlds and tests that never
+    /// opt in see no behavior change.
+    #[test]
+    fn elastic_control_is_stashed_when_not_elastic() {
+        let world = inproc_world(2);
+        let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let h0 = s.spawn(|| {
+                let comm = &world[0];
+                comm.send(1, Tag::ElasticJoin, Payload::Empty).unwrap();
+                let mut col = Collective::new(comm);
+                let mut buf = vec![1.0f32, -1.0];
+                col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                buf
+            });
+            let h1 = s.spawn(|| {
+                let mut col = Collective::new(&world[1]);
+                let mut buf = vec![2.0f32, 5.0];
+                col.allreduce(&mut buf, ReduceOp::Sum).unwrap();
+                assert_eq!(col.pending_joiners(), vec![0]);
+                buf
+            });
+            vec![h0.join().unwrap(), h1.join().unwrap()]
+        });
+        for got in &results {
+            assert_eq!(got, &vec![3.0, 4.0]);
+        }
     }
 }

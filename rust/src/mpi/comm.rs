@@ -26,6 +26,11 @@ pub enum CommError {
     /// Peer violated a protocol invariant (e.g. a collective received a
     /// chunk from a non-neighbor rank or with the wrong length).
     Protocol(String),
+    /// An elastic-membership control message arrived mid-collective:
+    /// the caller must abort the in-flight round and run the
+    /// membership-agreement barrier (DESIGN.md §Elasticity). Not a
+    /// transport failure — the world is being re-formed.
+    Interrupted(String),
     Io(std::io::Error),
 }
 
@@ -43,6 +48,9 @@ impl std::fmt::Display for CommError {
                 write!(f, "invalid rank {rank} (world size {size})")
             }
             CommError::Protocol(msg) => write!(f, "protocol: {msg}"),
+            CommError::Interrupted(msg) => {
+                write!(f, "collective interrupted: {msg}")
+            }
             CommError::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -56,9 +64,14 @@ impl From<std::io::Error> for CommError {
     }
 }
 
-/// Sending half — transport-specific.
+/// Sending half — transport-specific. Peer maps sit behind `RefCell`
+/// so a departed peer's endpoint can be dropped (`Comm::close_peer`)
+/// without `&mut self` — `Comm` is already `!Sync` (Cell counters), so
+/// single-threaded interior mutability is safe here.
 pub(super) enum Sender {
-    Inproc(Vec<Option<std::sync::mpsc::Sender<Envelope>>>),
+    Inproc(
+        std::cell::RefCell<Vec<Option<std::sync::mpsc::Sender<Envelope>>>>,
+    ),
     Tcp(super::transport::tcp::TcpSenders),
 }
 
@@ -117,15 +130,50 @@ impl Comm {
         }
         self.bytes_sent.set(self.bytes_sent.get() + payload.nbytes() as u64);
         match &self.tx {
-            Sender::Inproc(peers) => match peers[to].as_ref() {
-                Some(ch) => ch
-                    .send(Envelope { src: self.rank, tag, payload })
-                    .map_err(|_| CommError::SendFailed(to)),
-                None => Err(CommError::InvalidRank { rank: to,
-                                                     size: self.size }),
-            },
+            Sender::Inproc(peers) => {
+                // Clone the channel handle out of the borrow before
+                // sending so a reentrant close cannot observe a held
+                // borrow. A `None` slot for a non-self rank means the
+                // peer departed (`close_peer`): report SendFailed, the
+                // same error a dead TCP peer produces.
+                let ch = peers.borrow()[to].clone();
+                match ch {
+                    Some(ch) => ch
+                        .send(Envelope { src: self.rank, tag, payload })
+                        .map_err(|_| CommError::SendFailed(to)),
+                    None => Err(CommError::SendFailed(to)),
+                }
+            }
             Sender::Tcp(senders) => senders.send(self.rank, to, tag,
                                                  &payload),
+        }
+    }
+
+    /// Drop the sending endpoint for a departed peer. Subsequent sends
+    /// to it fail fast with `SendFailed` instead of writing into a dead
+    /// channel/socket; the TCP transport also shuts the socket down so
+    /// the survivor does not hold the dead peer's half-open connection.
+    /// Idempotent; out-of-range ranks are ignored.
+    pub fn close_peer(&self, peer: Rank) {
+        if peer >= self.size || peer == self.rank {
+            return;
+        }
+        match &self.tx {
+            Sender::Inproc(peers) => {
+                peers.borrow_mut()[peer] = None;
+            }
+            Sender::Tcp(senders) => senders.close_peer(peer),
+        }
+    }
+
+    /// Whether this rank still holds a live sending endpoint for `peer`.
+    pub fn has_peer(&self, peer: Rank) -> bool {
+        if peer >= self.size || peer == self.rank {
+            return false;
+        }
+        match &self.tx {
+            Sender::Inproc(peers) => peers.borrow()[peer].is_some(),
+            Sender::Tcp(senders) => senders.has_peer(peer),
         }
     }
 

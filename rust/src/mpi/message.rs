@@ -107,6 +107,26 @@ pub enum Tag {
     /// chained through the group (distinct from `Bcast` for the same
     /// reason as `GroupChunk`).
     GroupBcast,
+    /// member -> coordinator (rank 0): my collective timed out — a
+    /// neighbor is suspected dead. Generation-stamped with the sender's
+    /// world epoch so stale suspicions from an already-replaced world
+    /// are discarded (see DESIGN.md §Elasticity).
+    ElasticSuspect,
+    /// coordinator -> members: liveness probe at a membership-agreement
+    /// barrier; answer with `ElasticAlive` or be declared departed.
+    ElasticProbe,
+    /// member -> coordinator: probe answer. Payload carries the member's
+    /// completed-update count so the coordinator can pick the
+    /// most-advanced survivor as the weight re-sync root.
+    ElasticAlive,
+    /// coordinator -> members: the agreed next world
+    /// (epoch, member list, sync root, resume update count) encoded by
+    /// [`crate::coordinator::elastic`].
+    ElasticPlan,
+    /// joiner -> coordinator: request admission at the next membership
+    /// barrier. Deliberately exempt from generation screening — a joiner
+    /// cannot know the current epoch.
+    ElasticJoin,
     /// Per-bucket collective traffic for the compute-overlapped
     /// (bucketed) all-reduce: one tag lane per (bucket, phase) so
     /// multiple outstanding collectives can be in flight without
@@ -145,6 +165,11 @@ impl Tag {
             Tag::GroupGather => 13,
             Tag::GroupChunk => 14,
             Tag::GroupBcast => 15,
+            Tag::ElasticSuspect => 16,
+            Tag::ElasticProbe => 17,
+            Tag::ElasticAlive => 18,
+            Tag::ElasticPlan => 19,
+            Tag::ElasticJoin => 20,
             Tag::Bucket { bucket, phase } => {
                 BUCKET_TAG_BASE
                     + bucket as u32 * BUCKET_PHASES
@@ -175,6 +200,11 @@ impl Tag {
             13 => Tag::GroupGather,
             14 => Tag::GroupChunk,
             15 => Tag::GroupBcast,
+            16 => Tag::ElasticSuspect,
+            17 => Tag::ElasticProbe,
+            18 => Tag::ElasticAlive,
+            19 => Tag::ElasticPlan,
+            20 => Tag::ElasticJoin,
             v if (BUCKET_TAG_BASE
                 ..BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES)
                 .contains(&v) =>
@@ -664,6 +694,24 @@ mod tests {
             assert_eq!(t2, tag);
             assert_eq!(p2, p);
         }
+    }
+
+    #[test]
+    fn elastic_tags_roundtrip() {
+        let lanes = [Tag::ElasticSuspect, Tag::ElasticProbe,
+                     Tag::ElasticAlive, Tag::ElasticPlan,
+                     Tag::ElasticJoin];
+        for (i, tag) in lanes.into_iter().enumerate() {
+            assert_eq!(tag.to_u32(), 16 + i as u32);
+            assert_eq!(Tag::from_u32(tag.to_u32()), Some(tag));
+            let p = Payload::floats(1 << 32, vec![3.0, 7.0]);
+            let (t2, p2) = decode(&encode(tag, &p)).unwrap();
+            assert_eq!(t2, tag);
+            assert_eq!(p2, p);
+        }
+        // the elastic block sits directly below the bucket block
+        use crate::mpi::tags::BUCKET_TAG_BASE;
+        assert_eq!(Tag::ElasticJoin.to_u32() + 1, BUCKET_TAG_BASE);
     }
 
     #[test]

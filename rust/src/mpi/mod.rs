@@ -29,7 +29,10 @@ pub use message::{BucketPhase, Envelope, Payload, Rank, Tag,
 ///
 /// PR 4 hit a real wrong-source race from two collectives sharing a tag
 /// ad hoc (`GroupChunk` had to be split from `RingChunk`); this module
-/// makes tag allocation explicit. The fixed tags occupy `0..16`; the
+/// makes tag allocation explicit. The fixed tags (point-to-point
+/// protocol, collective lanes, and the elastic membership-agreement
+/// control lanes `ElasticSuspect..ElasticJoin`) occupy
+/// `0..BUCKET_TAG_BASE`; the
 /// per-bucket collective block for the overlapped all-reduce occupies
 /// `[BUCKET_TAG_BASE, BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES)`,
 /// one lane per (bucket, phase); the serving RPC block
@@ -58,10 +61,15 @@ pub mod tags {
         (13, "GroupGather"),
         (14, "GroupChunk"),
         (15, "GroupBcast"),
+        (16, "ElasticSuspect"),
+        (17, "ElasticProbe"),
+        (18, "ElasticAlive"),
+        (19, "ElasticPlan"),
+        (20, "ElasticJoin"),
     ];
 
     /// First wire value of the bucket-tag block.
-    pub const BUCKET_TAG_BASE: u32 = 16;
+    pub const BUCKET_TAG_BASE: u32 = 21;
     /// Tag lanes per bucket — one per [`BucketPhase`] variant.
     pub const BUCKET_PHASES: u32 = 5;
     /// Maximum concurrently-addressable buckets per round (the tail

@@ -31,7 +31,8 @@ pub fn world(n: usize) -> Vec<Comm> {
                     Some(tx.clone())
                 })
                 .collect();
-            Comm::new(rank, n, Sender::Inproc(peers), rx)
+            Comm::new(rank, n,
+                      Sender::Inproc(std::cell::RefCell::new(peers)), rx)
         })
         .collect()
 }

@@ -19,17 +19,27 @@ use std::time::{Duration, Instant};
 use crate::mpi::comm::{Comm, CommError, Sender};
 use crate::mpi::message::{self, Envelope, Payload, Rank, Tag};
 
-/// Writer half of the mesh: rank -> shared stream.
+/// Writer half of the mesh: rank -> shared stream. The map sits behind
+/// a `RefCell` so a dead peer's socket can be purged without `&mut`
+/// (the owning `Comm` is `!Sync`, so the single-threaded borrow is
+/// safe): before this, a failed send left the half-open connection in
+/// the peer map forever, and every later send to the departed rank
+/// re-attempted a write into a dead socket instead of failing fast.
 pub struct TcpSenders {
-    streams: BTreeMap<Rank, Arc<Mutex<TcpStream>>>,
+    streams: std::cell::RefCell<BTreeMap<Rank, Arc<Mutex<TcpStream>>>>,
 }
 
 impl TcpSenders {
     pub(crate) fn send(&self, src: Rank, to: Rank, tag: Tag,
                        payload: &Payload) -> Result<(), CommError> {
+        // Clone the Arc out of the borrow before locking: purging on
+        // error re-borrows the map, and a reader must never observe a
+        // held RefCell borrow across the blocking write.
         let stream = self
             .streams
+            .borrow()
             .get(&to)
+            .cloned()
             .ok_or(CommError::SendFailed(to))?;
         let body = message::encode(tag, payload);
         let mut guard = stream.lock().expect("tcp stream poisoned");
@@ -37,10 +47,27 @@ impl TcpSenders {
         frame.extend_from_slice(&(src as u32).to_le_bytes());
         frame.extend_from_slice(&(body.len() as u64).to_le_bytes());
         frame.extend_from_slice(&body);
-        guard
-            .write_all(&frame)
-            .map_err(|_| CommError::SendFailed(to))?;
+        if guard.write_all(&frame).is_err() {
+            // the peer is gone: shut the socket down and drop it from
+            // the map so the connection does not linger half-open
+            let _ = guard.shutdown(std::net::Shutdown::Both);
+            drop(guard);
+            self.streams.borrow_mut().remove(&to);
+            return Err(CommError::SendFailed(to));
+        }
         Ok(())
+    }
+
+    /// Proactively tear down the connection to a departed peer.
+    pub(crate) fn close_peer(&self, peer: Rank) {
+        if let Some(stream) = self.streams.borrow_mut().remove(&peer) {
+            let guard = stream.lock().expect("tcp stream poisoned");
+            let _ = guard.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    pub(crate) fn has_peer(&self, peer: Rank) -> bool {
+        self.streams.borrow().contains_key(&peer)
     }
 }
 
@@ -129,7 +156,14 @@ pub fn endpoint(rank: Rank, n: usize, base_port: u16)
         streams.insert(peer, Arc::new(Mutex::new(stream)));
     }
 
-    Ok(Comm::new(rank, n, Sender::Tcp(TcpSenders { streams }), queue_rx))
+    Ok(Comm::new(
+        rank,
+        n,
+        Sender::Tcp(TcpSenders {
+            streams: std::cell::RefCell::new(streams),
+        }),
+        queue_rx,
+    ))
 }
 
 /// Convenience: bring up all `n` endpoints on threads and return them

@@ -227,6 +227,47 @@ impl CostModel {
         let bcast = (m as f64 - 1.0) * intra_full_step;
         reduce_scatter + gather + tree + bcast
     }
+
+    /// Wall-clock cost of one elastic recovery (a rank dies mid-round
+    /// and the survivors re-form the ring — DESIGN.md §Elasticity):
+    ///
+    /// - detection: the stalled collective runs out the suspicion
+    ///   window (`timeout_s`, `--elastic-timeout-ms`);
+    /// - membership agreement: suspect → probe → alive → plan, ~3
+    ///   one-way hops between rank 0 and the farthest survivor;
+    /// - weight re-replication: store-and-forward around the new ring,
+    ///   `m-1` full-message hops from the sync root;
+    /// - resume barriers: two scalar agreement collectives (epoch and
+    ///   round count), latency-only.
+    ///
+    /// The timeout dominates at realistic settings — the knob trades
+    /// false-positive evictions against recovery latency, which is why
+    /// the RUNBOOK tells operators to tune it to tail round time, not
+    /// to the mean.
+    pub fn elastic_recovery_time(&self, survivors: usize,
+                                 timeout_s: f64) -> f64 {
+        let m = survivors.max(1) as f64;
+        let full_step = self.transfer_time();
+        let agreement = 3.0 * full_step;
+        let rebroadcast = (m - 1.0) * full_step;
+        let barriers = 2.0 * 2.0 * (m - 1.0) * self.latency;
+        timeout_s + agreement + rebroadcast + barriers
+    }
+
+    /// Fraction of an uninterrupted run's throughput retained when
+    /// `churn_events` recoveries (each costing
+    /// [`CostModel::elastic_recovery_time`]) interrupt a run of
+    /// `run_time_s`. The non-elastic alternative retains 0.0 — the job
+    /// dies with the first rank.
+    pub fn churn_retention(&self, run_time_s: f64, survivors: usize,
+                           churn_events: usize, timeout_s: f64) -> f64 {
+        if run_time_s <= 0.0 {
+            return 0.0;
+        }
+        let lost = churn_events as f64
+            * self.elastic_recovery_time(survivors, timeout_s);
+        run_time_s / (run_time_s + lost)
+    }
 }
 
 /// Workload shape: the paper's protocol (fixed dataset divided evenly,
@@ -425,6 +466,28 @@ mod tests {
         assert!(t_half < t_raw);
         assert!(t_half > floor);
         assert!((t_raw - floor) / (t_half - floor) > 1.99);
+    }
+
+    #[test]
+    fn elastic_recovery_cost_shape() {
+        let c = CostModel::cluster(3_023);
+        // the suspicion window dominates at the default 30 s setting
+        let t = c.elastic_recovery_time(7, 30.0);
+        assert!(t > 30.0 && t < 30.0 + 1.0, "{t}");
+        // more survivors -> more re-replication hops
+        assert!(c.elastic_recovery_time(15, 0.0)
+                    > c.elastic_recovery_time(3, 0.0));
+        // a single survivor pays detection + agreement only (no ring)
+        let solo = c.elastic_recovery_time(1, 1.0);
+        assert!((solo - (1.0 + 3.0 * c.transfer_time())).abs() < 1e-12);
+        // retention: churn-free runs keep everything; each event eats
+        // one recovery window; the denominator grows monotonically
+        assert_eq!(c.churn_retention(100.0, 7, 0, 30.0), 1.0);
+        let one = c.churn_retention(3600.0, 7, 1, 30.0);
+        let two = c.churn_retention(3600.0, 7, 2, 30.0);
+        assert!(one < 1.0 && two < one, "{one} {two}");
+        assert!(one > 0.99, "a 30 s recovery in a 1 h run: {one}");
+        assert_eq!(c.churn_retention(0.0, 7, 1, 30.0), 0.0);
     }
 
     #[test]

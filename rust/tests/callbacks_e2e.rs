@@ -365,6 +365,98 @@ fn prop_worldplan_invariants() {
         if p1 != p2 || p1 != plan {
             return Err("plan depends on transport".into());
         }
+        // elastic replans (ISSUE 8): a random survivor subset (rank 0
+        // always survives — its death ends the job) must yield a
+        // coherent, strictly-newer world
+        if ring {
+            let mut survivors: Vec<usize> = (1..size)
+                .filter(|_| rng.uniform() < 0.7)
+                .collect();
+            survivors.push(0);
+            let rp = plan.replan(&survivors)
+                .map_err(|e| format!("replan rejected: {e}"))?;
+            if rp.epoch() != plan.epoch() + 1 {
+                return Err(format!("replan epoch {} after {}",
+                                   rp.epoch(), plan.epoch()));
+            }
+            let members = rp.members()
+                .ok_or("replanned plan must list members")?;
+            let mut want = survivors.clone();
+            want.sort_unstable();
+            want.dedup();
+            if members != want.as_slice() {
+                return Err(format!(
+                    "members {members:?} != survivors {want:?}"));
+            }
+            // shards cover 0..m exactly once, in member order
+            let m = members.len();
+            let mut rshards: Vec<usize> = members
+                .iter()
+                .map(|&r| match rp.role_of(r) {
+                    RankRole::RingRank { shard, .. } => Ok(shard),
+                    other => Err(format!(
+                        "member {r} got role {other:?}")),
+                })
+                .collect::<Result<_, _>>()?;
+            rshards.sort_unstable();
+            if rshards != (0..m).collect::<Vec<_>>() {
+                return Err(format!(
+                    "replanned shards not 0..{m}: {rshards:?}"));
+            }
+            match rp.ring_layout() {
+                Some(layout) => {
+                    // grouped replans partition the members exactly once
+                    let flat: Vec<usize> = layout
+                        .groups()
+                        .iter()
+                        .flat_map(|g| g.iter().copied())
+                        .collect();
+                    let mut sorted = flat.clone();
+                    sorted.sort_unstable();
+                    if sorted != members {
+                        return Err(format!(
+                            "layout {flat:?} is not a partition of \
+                             {members:?}"));
+                    }
+                }
+                None if m == 1 => {} // degrades to local training
+                None => {}           // flat ring (or non-divisible)
+            }
+            if m == 1 && rp.ring_layout().is_some() {
+                return Err("1-member world must not have a grouped \
+                            layout".into());
+            }
+            // chained churn: epochs strictly increase; re-admitting
+            // every departed rank restores the launch grouping
+            let rp2 = rp.replan(&[0])
+                .map_err(|e| format!("second replan: {e}"))?;
+            if rp2.epoch() != rp.epoch() + 1 {
+                return Err("epochs must increase per replan".into());
+            }
+            let departed: Vec<usize> =
+                (0..size).filter(|r| !members.contains(r)).collect();
+            let grown = rp.replan_grown(&departed)
+                .map_err(|e| format!("replan_grown: {e}"))?;
+            let full: Vec<usize> = (0..size).collect();
+            if grown.members() != Some(full.as_slice()) {
+                return Err("grow-back must restore full \
+                            membership".into());
+            }
+            if grown.ring_layout().map(|l| l.groups().to_vec())
+                != plan.ring_layout().map(|l| l.groups().to_vec())
+            {
+                return Err("grow-back must restore the launch \
+                            grouping".into());
+            }
+            // a rank that was never in the world cannot survive, and
+            // rank 0 cannot be dropped
+            if plan.replan(&[0, size]).is_ok() {
+                return Err("foreign rank accepted".into());
+            }
+            if size > 1 && plan.replan(&[1]).is_ok() {
+                return Err("world without rank 0 accepted".into());
+            }
+        }
         Ok(())
     });
 }

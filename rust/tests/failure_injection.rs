@@ -143,6 +143,62 @@ fn tcp_send_to_closed_peer_fails_gracefully() {
 }
 
 #[test]
+fn tcp_dead_peer_is_purged_after_failed_send() {
+    // Regression (ISSUE 8 bugfix): a failed send used to leave the dead
+    // peer's half-open stream in the sender map, so every later send
+    // re-entered write_all against a broken socket (and on some kernels
+    // blocked in the TCP retransmit queue). The transport must tear the
+    // endpoint down on first failure: has_peer() goes false and further
+    // sends fail fast with SendFailed.
+    let base_port = 46940; // 46900 belongs to the test above
+    let mut world = mpi::tcp_world(2, base_port).unwrap();
+    let c1 = world.pop().unwrap();
+    let c0 = world.pop().unwrap();
+    drop(c1);
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(c0.has_peer(1), "peer map intact before any failure");
+    let mut failed_at = None;
+    for i in 0..200 {
+        if c0
+            .send(1, Tag::Weights, Payload::floats(0, vec![0.0; 65_536]))
+            .is_err()
+        {
+            failed_at = Some(i);
+            break;
+        }
+    }
+    assert!(failed_at.is_some(), "sends to a dead peer must fail");
+    // the half-open endpoint is gone...
+    assert!(!c0.has_peer(1), "dead peer must be purged from the map");
+    // ...and the next send fails immediately without touching a socket
+    match c0.send(1, Tag::Ping, Payload::Empty) {
+        Err(mpi::CommError::SendFailed(1)) => {}
+        other => panic!("expected fast SendFailed(1), got {other:?}"),
+    }
+}
+
+#[test]
+fn inproc_close_peer_mirrors_a_dead_rank() {
+    // close_peer() is how the elastic layer evicts a departed rank; the
+    // in-process transport must behave like the TCP one afterwards.
+    let mut world = mpi::inproc_world(3);
+    let _c2 = world.pop().unwrap();
+    let _c1 = world.pop().unwrap();
+    let c0 = world.pop().unwrap();
+    assert!(c0.has_peer(1) && c0.has_peer(2));
+    c0.close_peer(1);
+    assert!(!c0.has_peer(1), "closed peer must disappear");
+    assert!(c0.has_peer(2), "other peers are untouched");
+    match c0.send(1, Tag::Ping, Payload::Empty) {
+        Err(mpi::CommError::SendFailed(1)) => {}
+        other => panic!("expected SendFailed(1), got {other:?}"),
+    }
+    // closing twice is a no-op, and self is never a peer
+    c0.close_peer(1);
+    assert!(!c0.has_peer(0), "self-channel is not a peer");
+}
+
+#[test]
 fn wire_decode_never_panics_on_fuzz() {
     let mut rng = Rng::new(99);
     for _ in 0..2000 {

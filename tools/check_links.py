@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo docs (stdlib only).
+
+Validates every relative link and in-page anchor in the files given on
+the command line (CI runs it over README.md, DESIGN.md and
+docs/RUNBOOK.md). External http(s) links are NOT fetched — CI must not
+depend on the network — only their syntax is accepted.
+
+Checked:
+  * [text](path)          -> path exists, relative to the linking file
+  * [text](path#anchor)   -> path exists AND the .md target contains a
+                             heading whose GitHub slug == anchor
+  * [text](#anchor)       -> heading with that slug in the same file
+
+Exit status: number of broken links (0 == success).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+
+
+def strip_fences(text):
+    """Drop fenced code blocks — their brackets are not links."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line):
+            fenced = not fenced
+            out.append("")
+        else:
+            out.append("" if fenced else line)
+    return "\n".join(out)
+
+
+def github_slug(heading):
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->'-'."""
+    # inline code/links inside the heading contribute their text only
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    heading = heading.replace("`", "")
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def slugs_of(path):
+    """All heading anchors of a markdown file, with -1/-2 dup suffixes."""
+    seen, slugs = {}, set()
+    for line in strip_fences(path.read_text()).splitlines():
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        base = github_slug(m.group(2))
+        n = seen.get(base, 0)
+        seen[base] = n + 1
+        slugs.add(base if n == 0 else f"{base}-{n}")
+    return slugs
+
+
+def check_file(path, errors):
+    text = strip_fences(path.read_text())
+    for n, line in enumerate(text.splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:
+                continue
+            raw_path, _, anchor = target.partition("#")
+            dest = path if not raw_path \
+                else (path.parent / raw_path).resolve()
+            if not dest.exists():
+                errors.append(f"{path}:{n}: missing file: {target}")
+                continue
+            if anchor:
+                if dest.suffix != ".md":
+                    continue  # anchors into non-markdown: not checked
+                if anchor.lower() not in slugs_of(dest):
+                    errors.append(
+                        f"{path}:{n}: missing anchor: {target}")
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(f"usage: {argv[0]} FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors = []
+    for name in argv[1:]:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        check_file(p, errors)
+    for e in errors:
+        print(e, file=sys.stderr)
+    checked = len(argv) - 1
+    print(f"checked {checked} file(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return min(len(errors), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
