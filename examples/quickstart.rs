@@ -14,6 +14,8 @@
 //!         --compression fp16                # compressed wire hops
 //!     cargo run --release --example quickstart -- --mode allreduce \
 //!         --buckets         # per-layer all-reduce overlapped w/ backprop
+//!     cargo run --release --example quickstart -- --mode allreduce \
+//!         --auto            # self-tuning planner picks the topology
 //!     cargo run --release --example quickstart -- --mode sync --tcp
 //!         # synchronous Downpour over the localhost TCP mesh
 //!     cargo run --release --example quickstart -- --early-stopping 3 \
@@ -43,6 +45,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let tcp = args.bool("tcp");
     let compression = Codec::parse(&args.str("compression", "fp32"))?;
     let buckets = args.bool("buckets");
+    let auto = args.bool("auto");
     let patience = args.usize("early-stopping", 0)?;
     let checkpoint = args.str_opt("checkpoint");
     args.finish()?;
@@ -106,6 +109,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         println!("bucketing the all-reduce per layer, overlapped with \
                   backprop...");
         exp = exp.buckets();
+    }
+    if auto {
+        println!("self-tuning the topology: probing links, sweeping the \
+                  cost model...");
+        exp = exp.auto_tune();
     }
     if patience > 0 {
         exp = exp.early_stopping(patience as u32);

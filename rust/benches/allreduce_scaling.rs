@@ -15,6 +15,7 @@
 
 use std::collections::BTreeMap;
 
+use mpi_learn::coordinator::planner;
 use mpi_learn::mpi;
 use mpi_learn::mpi::collective::{Collective, GroupLayout, ReduceOp};
 use mpi_learn::mpi::Codec;
@@ -142,14 +143,51 @@ fn write_bench_pr(path: &str) {
     overlap.insert("buckets".into(), Json::Num(buckets as f64));
     overlap.insert("bucketed_ns".into(), Json::Obj(bucketed));
     overlap.insert("serial_ns".into(), Json::Obj(serial));
+    // schema 4: the planner's decision surface on the same cluster
+    // preset — per world size, every (topology x codec) candidate's
+    // predicted round time (ns) and the chosen key, plus the link
+    // costs the sweep ran on. All closed-form, so the committed copy
+    // regenerates bit-identically; measured-vs-predicted comparisons
+    // live in the uncommitted run artifacts instead. The CI planner
+    // gate asserts chosen == argmin of its own candidate listing.
+    let sweep_codecs = [Codec::Fp32, Codec::Fp16];
+    let mut predicted: BTreeMap<String, Json> = BTreeMap::new();
+    let mut chosen: BTreeMap<String, Json> = BTreeMap::new();
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let choice = planner::sweep(&cost, n, batch, &sweep_codecs,
+                                    false);
+        let key = format!("n{n}");
+        let mut cands: BTreeMap<String, Json> = BTreeMap::new();
+        for c in &choice.candidates {
+            cands.insert(c.key(),
+                         Json::Num((c.predicted_s * 1e9).round()));
+        }
+        predicted.insert(key.clone(), Json::Obj(cands));
+        chosen.insert(key, Json::Str(choice.chosen.key()));
+    }
+    let mut links: BTreeMap<String, Json> = BTreeMap::new();
+    links.insert("inter_latency_ns".into(),
+                 Json::Num((cost.latency * 1e9).round()));
+    links.insert("inter_bw_bps".into(),
+                 Json::Num(cost.bandwidth_bytes_per_s));
+    links.insert("intra_latency_ns".into(),
+                 Json::Num((cost.intra_latency * 1e9).round()));
+    links.insert("intra_bw_bps".into(),
+                 Json::Num(cost.intra_bandwidth_bytes_per_s));
+    let mut planner_block: BTreeMap<String, Json> = BTreeMap::new();
+    planner_block.insert("batch".into(), Json::Num(batch as f64));
+    planner_block.insert("link_costs".into(), Json::Obj(links));
+    planner_block.insert("predicted_ns".into(), Json::Obj(predicted));
+    planner_block.insert("chosen".into(), Json::Obj(chosen));
     let mut top: BTreeMap<String, Json> = BTreeMap::new();
     top.insert("bench".into(), Json::Str("bench_pr".into()));
     top.insert("bytes_per_round".into(), Json::Obj(bytes));
     top.insert("collective_ns".into(), Json::Obj(collective));
     top.insert("overlap".into(), Json::Obj(overlap));
     top.insert("params".into(), Json::Num(n_params as f64));
+    top.insert("planner".into(), Json::Obj(planner_block));
     top.insert("ranks".into(), Json::Num(ranks as f64));
-    top.insert("schema".into(), Json::Num(3.0));
+    top.insert("schema".into(), Json::Num(4.0));
     // schema 3: the serving-path block (closed-form like collective_ns;
     // the formula lives in mpi_learn::serving so benches/serve_bench.rs
     // emits the identical numbers).
@@ -365,6 +403,33 @@ fn main() {
         &rows,
     );
 
+    // ---- the planner's sweep on the same cluster preset ----
+    // The decision surface `--auto` navigates: per world size, the
+    // chosen (topology, codec) and its predicted round time, next to
+    // the measured flat-ring collectives above.
+    let mut planner_chosen: BTreeMap<String, Json> = BTreeMap::new();
+    let mut rows = Vec::new();
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let choice = planner::sweep(&cost_cl, n, 100,
+                                    &[Codec::Fp32, Codec::Fp16], false);
+        sim_times.insert(format!("planner_pred_round/n{n}"),
+                         choice.chosen.predicted_s);
+        planner_chosen.insert(format!("n{n}"),
+                              Json::Str(choice.chosen.key()));
+        rows.push(vec![
+            format!("{n}"),
+            choice.chosen.key(),
+            fmt_secs(choice.chosen.predicted_s),
+            format!("{}", choice.candidates.len()),
+        ]);
+    }
+    print_table(
+        "planner sweep: chosen plan per world size (cluster preset, \
+         batch 100)",
+        &["ranks", "chosen", "predicted round", "candidates"],
+        &rows,
+    );
+
     let summary: BTreeMap<String, Json> = [
         ("bench".to_string(),
          Json::Str("allreduce_scaling".to_string())),
@@ -379,6 +444,7 @@ fn main() {
              .iter()
              .map(|(k, v)| (k.clone(), Json::Num(*v)))
              .collect())),
+        ("planner_chosen".to_string(), Json::Obj(planner_chosen)),
     ]
     .into_iter()
     .collect();

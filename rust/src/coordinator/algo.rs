@@ -5,6 +5,7 @@
 //! algorithm runs (Downpour SGD default, Elastic Averaging SGD optional)
 //! and whether gradient exchange is asynchronous (default) or synchronous.
 
+use crate::coordinator::planner::RetuneConfig;
 use crate::mpi::codec::Codec;
 use crate::optim::OptimizerConfig;
 use crate::util::json::Json;
@@ -76,6 +77,22 @@ pub struct Algo {
     /// peer is suspected dead, and how long membership agreement waits
     /// for survivors to answer probes. Default 30 000 ms.
     pub elastic_timeout_ms: u64,
+    /// All-reduce mode only: self-tune the topology at startup. Rank 0
+    /// probes the links, calibrates the cost model, and the planner
+    /// sweep picks flat-vs-hier, group count, codec, and bucketing
+    /// (DESIGN.md §Autotuning). Mutually exclusive with an explicit
+    /// hierarchy.
+    pub auto: bool,
+    /// Auto mode: the online re-tuner triggers when a window's measured
+    /// round time exceeds `retune_factor` x the planner's prediction
+    /// (plus the probe's noise floor). Default 2.0.
+    pub retune_factor: f64,
+    /// Auto mode: rounds per re-tuner measurement window. Default 50.
+    pub retune_window: u64,
+    /// Filled in by the driver's auto phase (never from JSON): the
+    /// chosen plan's prediction + trigger knobs the worker-side online
+    /// re-tuner runs against. `None` = re-tuner off.
+    pub retune: Option<RetuneConfig>,
 }
 
 impl Default for Algo {
@@ -94,6 +111,10 @@ impl Default for Algo {
             buckets: false,
             elastic: false,
             elastic_timeout_ms: 30_000,
+            auto: false,
+            retune_factor: 2.0,
+            retune_window: 50,
+            retune: None,
         }
     }
 }
@@ -159,6 +180,28 @@ impl Algo {
             .and_then(|v| v.as_usize())
         {
             algo.elastic_timeout_ms = t as u64;
+        }
+        if let Some(b) = j.get("auto").and_then(|v| v.as_bool()) {
+            algo.auto = b;
+        }
+        if let Some(f) = j.get("retune_factor").and_then(|v| v.as_f64())
+        {
+            if f <= 1.0 {
+                return Err(format!(
+                    "\"retune_factor\" must be > 1.0 (got {f}); the \
+                     re-tuner triggers on measured > factor x predicted"
+                ));
+            }
+            algo.retune_factor = f;
+        }
+        if let Some(w) = j.get("retune_window")
+            .and_then(|v| v.as_usize())
+        {
+            if w == 0 {
+                return Err("\"retune_window\" must be >= 1 round"
+                    .into());
+            }
+            algo.retune_window = w as u64;
         }
         match j.get("mode").and_then(|v| v.as_str()).unwrap_or("downpour") {
             "downpour" => {
@@ -279,6 +322,30 @@ mod tests {
         let a = Algo::from_json(&j).unwrap();
         assert!(a.elastic);
         assert_eq!(a.elastic_timeout_ms, 1500);
+    }
+
+    #[test]
+    fn json_auto_and_retune_knobs() {
+        let d = Algo::default();
+        assert!(!d.auto);
+        assert_eq!(d.retune_factor, 2.0);
+        assert_eq!(d.retune_window, 50);
+        let j = Json::parse(
+            r#"{"mode": "allreduce", "auto": true,
+                "retune_factor": 3.5, "retune_window": 20}"#).unwrap();
+        let a = Algo::from_json(&j).unwrap();
+        assert!(a.auto);
+        assert_eq!(a.retune_factor, 3.5);
+        assert_eq!(a.retune_window, 20);
+        // a trigger factor at or below 1.0 would fire on every window
+        let j = Json::parse(
+            r#"{"mode": "allreduce", "retune_factor": 0.9}"#).unwrap();
+        let err = Algo::from_json(&j).unwrap_err();
+        assert!(err.contains("retune_factor"), "{err}");
+        let j = Json::parse(
+            r#"{"mode": "allreduce", "retune_window": 0}"#).unwrap();
+        let err = Algo::from_json(&j).unwrap_err();
+        assert!(err.contains("retune_window"), "{err}");
     }
 
     #[test]

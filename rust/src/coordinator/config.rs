@@ -168,6 +168,29 @@ impl JobConfig {
                     .into()));
         }
 
+        // "auto" mirrors elastic: top level or inside "algo", only
+        // meaningful for the lockstep collective the planner tunes
+        if let Some(b) = j.get("auto").and_then(|v| v.as_bool()) {
+            algo.auto = b;
+        }
+        if algo.auto
+            && !matches!(algo.mode,
+                         crate::coordinator::algo::Mode::AllReduce)
+        {
+            return Err(invalid(
+                "\"auto\" requires \"mode\": \"allreduce\" — the \
+                 planner tunes ring topologies (flat vs grouped, \
+                 buckets, codec); PS modes have no topology sweep"
+                    .into()));
+        }
+        if algo.auto && j.get("hierarchy").is_some() {
+            return Err(invalid(
+                "\"auto\" and \"hierarchy\" are mutually exclusive: \
+                 drop \"hierarchy\" to let the planner pick the \
+                 grouping, or drop \"auto\" to pin it"
+                    .into()));
+        }
+
         let transport = match j.get("transport") {
             None => Transport::Inproc,
             Some(t) if t.as_str() == Some("inproc") => Transport::Inproc,
@@ -540,6 +563,52 @@ mod tests {
             Err(super::ConfigError::Invalid(msg)) => {
                 assert!(msg.contains("elastic")
                         && msg.contains("allreduce"),
+                        "error must name the keys: {msg}");
+            }
+            other => panic!("expected Invalid, got {:?}",
+                            other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn auto_config() {
+        // top-level key
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 8, "auto": true,
+                "algo": {"mode": "allreduce"}}"#).unwrap();
+        assert!(job.train.algo.auto);
+        // inside "algo"
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 8,
+                "algo": {"mode": "allreduce", "auto": true}}"#)
+            .unwrap();
+        assert!(job.train.algo.auto);
+        // default off
+        let job = JobConfig::from_json_text(r#"{"model": "mlp"}"#)
+            .unwrap();
+        assert!(!job.train.algo.auto);
+        // contradictory: auto is a ring-topology sweep
+        match JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 4, "auto": true,
+                "algo": {"mode": "downpour"}}"#)
+        {
+            Err(super::ConfigError::Invalid(msg)) => {
+                assert!(msg.contains("auto")
+                            && msg.contains("allreduce"),
+                        "error must name the keys: {msg}");
+            }
+            other => panic!("expected Invalid, got {:?}",
+                            other.map(|_| ())),
+        }
+        // contradictory: a pinned hierarchy leaves nothing to tune
+        match JobConfig::from_json_text(
+            r#"{"model": "mlp", "workers": 8, "auto": true,
+                "algo": {"mode": "allreduce"},
+                "hierarchy": {"groups": 2}}"#)
+        {
+            Err(super::ConfigError::Invalid(msg)) => {
+                assert!(msg.contains("\"auto\"")
+                            && msg.contains("\"hierarchy\""),
                         "error must name the keys: {msg}");
             }
             other => panic!("expected Invalid, got {:?}",

@@ -15,18 +15,21 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::algo::Algo;
+use crate::coordinator::algo::{Algo, Mode};
 use crate::coordinator::builder::{Data, ModelBuilder};
 use crate::coordinator::callbacks::{effective_lr_schedule, Callback,
                                     CallbackSet, CallbackSpec, Observer};
 use crate::coordinator::hierarchy::{GroupMaster, HierarchySpec};
 use crate::coordinator::master::{Master, MasterContext};
+use crate::coordinator::planner::{self, RetuneConfig, Topology};
 use crate::coordinator::topology::{RankRole, WorldPlan};
 use crate::coordinator::worker::{RingWorker, Worker};
 use crate::data::DataSet;
 use crate::metrics::History;
+use crate::mpi::codec::Codec;
 use crate::mpi::{self, Payload, Tag};
 use crate::runtime::{ModelExecutables, Session};
+use crate::simulator::{measure_costs, CostModel, LinkCalibration};
 use crate::tensor::ParamSet;
 use crate::util::rng::Rng;
 
@@ -313,6 +316,139 @@ fn make_world(transport: Transport, size: usize)
     })
 }
 
+/// Probe both link classes over a short-lived world of the training
+/// transport: peers echo in [`planner::respond_probe`], rank 0 times
+/// ping-pongs against the provisional layout's intra/inter peers. The
+/// sentinel is sent even when probing fails — a responder that never
+/// hears it would hang the join.
+fn probe_links(transport: Transport, n: usize)
+    -> Result<LinkCalibration, TrainError> {
+    let mut world = make_world(transport, n)?;
+    let comm0 = world.remove(0);
+    let (intra_peer, inter_peer) = planner::probe_peers(n);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for comm in world {
+            let rank = comm.rank();
+            handles.push((rank, s.spawn(move || {
+                planner::respond_probe(&comm).map_err(|e| e.to_string())
+            })));
+        }
+        let mut seq = 0u64;
+        let probed = probe_link_classes(&comm0, intra_peer, inter_peer,
+                                        &mut seq);
+        let _ = planner::finish_probe(&comm0, n);
+        let joined = join_ranks(handles);
+        let links = probed.map_err(TrainError::Comm)?;
+        joined?;
+        Ok(links)
+    })
+}
+
+fn probe_link_classes(comm0: &mpi::Comm, intra_peer: usize,
+                      inter_peer: Option<usize>, seq: &mut u64)
+    -> Result<LinkCalibration, mpi::CommError> {
+    let intra = planner::probe_link(comm0, intra_peer, seq)?;
+    // a world with a single link class (too small / ragged to group)
+    // uses the one measurement for both model slots
+    let inter = match inter_peer {
+        Some(p) => planner::probe_link(comm0, p, seq)?,
+        None => intra,
+    };
+    Ok(LinkCalibration { intra, inter })
+}
+
+/// The self-tuning startup phase (DESIGN.md §Autotuning): probe the
+/// links over a short-lived world, calibrate the compute costs on the
+/// real executables, sweep the closed-form round-time models, and
+/// return a copy of `cfg` with the winning topology pinned in —
+/// hierarchy, codec, bucketing — plus the [`RetuneConfig`] the worker's
+/// online re-tuner runs against. The returned config trains through the
+/// exact same `WorldPlan` path as a hand-flagged one.
+fn auto_tune_config(cfg: &TrainConfig, exes: &Arc<ModelExecutables>)
+    -> Result<TrainConfig, TrainError> {
+    if cfg.algo.mode != Mode::AllReduce {
+        return Err(TrainError::Config(
+            "auto-tuning requires allreduce mode — the planner tunes \
+             ring topologies, not parameter-server worlds".into()));
+    }
+    if cfg.hierarchy.is_some() {
+        return Err(TrainError::Config(
+            "auto and an explicit hierarchy are mutually exclusive: \
+             drop the hierarchy to let the planner pick the grouping, \
+             or drop auto to pin it".into()));
+    }
+    let n = cfg.n_workers;
+    // TCP probe worlds bind above the training ports so the training
+    // world never races a lingering probe socket on rebind
+    let probe_transport = match cfg.transport {
+        Transport::Inproc => Transport::Inproc,
+        Transport::Tcp { base_port } => Transport::Tcp {
+            base_port: base_port + n as u16 },
+    };
+    let links = if n >= 2 {
+        probe_links(probe_transport, n)?
+    } else {
+        LinkCalibration {
+            intra: crate::simulator::LinkCost::unprobed(),
+            inter: crate::simulator::LinkCost::unprobed(),
+        }
+    };
+    let cal = measure_costs(exes, &cfg.algo.optimizer, 9);
+    let mut cost = CostModel::cluster(exes.meta.param_count);
+    cal.apply(&mut cost);
+    links.apply(&mut cost);
+    log::info!(
+        "[planner] probe intra latency={:.3e}s bw={:.3e}B/s | inter \
+         latency={:.3e}s bw={:.3e}B/s | grad={:.3e}s noise={:.1}%",
+        links.intra.latency_s, links.intra.bandwidth_bytes_per_s,
+        links.inter.latency_s, links.inter.bandwidth_bytes_per_s,
+        cal.t_grad,
+        100.0 * links.rel_spread().max(cal.grad_rel_spread));
+
+    // the codec axis is swept only when the operator left it at the
+    // fp32 default; an explicit codec (incl. top-k) is a pin
+    let codecs = if cfg.algo.compression == Codec::Fp32 {
+        vec![Codec::Fp32, Codec::Fp16]
+    } else {
+        vec![cfg.algo.compression]
+    };
+    let choice = planner::sweep(&cost, n, cfg.algo.batch_size, &codecs,
+                                cfg.algo.buckets);
+    for line in choice.log_lines() {
+        log::info!("{line}");
+    }
+
+    let mut tuned = cfg.clone();
+    match choice.chosen.topology {
+        Topology::Flat => {
+            tuned.hierarchy = None;
+            tuned.algo.buckets = false;
+        }
+        Topology::FlatBucketed { .. } => {
+            tuned.hierarchy = None;
+            tuned.algo.buckets = true;
+        }
+        Topology::Hier { groups } => {
+            tuned.hierarchy = Some(HierarchySpec {
+                n_groups: groups,
+                workers_per_group: 0,
+                sync_every: 1,
+            });
+            tuned.algo.buckets = false;
+        }
+    }
+    tuned.algo.compression = choice.chosen.codec;
+    tuned.algo.retune = Some(RetuneConfig {
+        predicted_round_s: choice.chosen.predicted_s,
+        factor: cfg.algo.retune_factor,
+        window: cfg.algo.retune_window,
+        max_replans: planner::MAX_RETUNE_REPLANS,
+        noise_floor: links.rel_spread().max(cal.grad_rel_spread),
+    });
+    Ok(tuned)
+}
+
 /// Join per-rank threads, attributing a failure to the thread's REAL
 /// rank. (Regression guard: the old hierarchical launcher reported the
 /// spawn-handle index as the rank.)
@@ -348,8 +484,17 @@ pub fn train_with_callbacks(session: &Session, cfg: &TrainConfig,
                             extra: Vec<Box<dyn Callback>>)
     -> Result<TrainResult, TrainError> {
     crate::util::logging::init();
-    let plan = WorldPlan::new(cfg).map_err(TrainError::Config)?;
     let exes = session.executables(&cfg.builder.variant_key())?;
+    // Auto-tuned runs probe + sweep FIRST, then train through the same
+    // plan path as a hand-flagged config (DESIGN.md §Autotuning).
+    let tuned;
+    let cfg = if cfg.algo.auto {
+        tuned = auto_tune_config(cfg, &exes)?;
+        &tuned
+    } else {
+        cfg
+    };
+    let plan = WorldPlan::new(cfg).map_err(TrainError::Config)?;
     preflight(data)?;
     preflight_ring(&plan, data)?;
     let mut world = make_world(cfg.transport, plan.world_size())?;
@@ -392,6 +537,15 @@ pub fn run_rank(session: &Session, cfg: &TrainConfig, data: &Data,
                 rank: usize, base_port: u16)
     -> Result<Option<TrainResult>, TrainError> {
     crate::util::logging::init();
+    if cfg.algo.auto {
+        // every SPMD process derives its role from the SAME config
+        // before any connection exists, so a rank-0 probe could never
+        // reshape the world the other processes already committed to
+        return Err(TrainError::Config(
+            "auto-tuning is not available under SPMD run_rank: run the \
+             probe via train(), or pin a topology explicitly (see \
+             docs/RUNBOOK.md)".into()));
+    }
     let plan = WorldPlan::new(cfg).map_err(TrainError::Config)?;
     let exes = session.executables(&cfg.builder.variant_key())?;
     preflight(data)?;

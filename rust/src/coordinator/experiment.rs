@@ -215,6 +215,32 @@ impl Experiment {
         self
     }
 
+    /// All-reduce mode: self-tune the topology instead of flagging it.
+    /// At startup rank 0 probes the links (latency + bandwidth, intra
+    /// vs inter class), calibrates the cost model with measured compute
+    /// costs, and the planner sweep picks flat-vs-hierarchical, the
+    /// group count, the wire codec, and bucketing by minimizing the
+    /// predicted round time; an online re-tuner watches measured round
+    /// times against the prediction (DESIGN.md §Autotuning,
+    /// docs/RUNBOOK.md). Mutually exclusive with an explicit
+    /// [`Experiment::hierarchy`] / [`Experiment::allreduce_grouped`];
+    /// an explicit [`Experiment::compression`] or
+    /// [`Experiment::buckets`] pins that axis of the sweep.
+    ///
+    /// ```
+    /// use mpi_learn::coordinator::Experiment;
+    ///
+    /// let exp = Experiment::new("mlp")
+    ///     .workers(8)
+    ///     .allreduce()
+    ///     .auto_tune();
+    /// assert!(exp.config().algo.auto);
+    /// ```
+    pub fn auto_tune(mut self) -> Self {
+        self.cfg.algo.auto = true;
+        self
+    }
+
     /// Two-level topology: a Downpour master tree, or — combined with
     /// [`Experiment::allreduce`] — hierarchical all-reduce groups
     /// (`sync_every` is ignored there; see

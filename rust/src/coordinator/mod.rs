@@ -16,6 +16,9 @@
 //! - [`elastic`] — membership agreement on rank churn: versioned
 //!   `WorldPlan` epochs, suspect/agree/replan/resume (DESIGN.md
 //!   §Elasticity).
+//! - [`planner`] — the self-tuning topology planner: probe the links,
+//!   calibrate the `CostModel`, sweep the closed-form round times, and
+//!   emit the argmin as a normal `WorldPlan` (DESIGN.md §Autotuning).
 //! - [`hierarchy`] — two-level master topology.
 //! - [`validation`] — held-out evaluation + schedule.
 //! - [`driver`] — the launcher: `train` / `run_rank` both execute roles
@@ -31,6 +34,7 @@ pub mod elastic;
 pub mod experiment;
 pub mod hierarchy;
 pub mod master;
+pub mod planner;
 pub mod topology;
 pub mod validation;
 pub mod worker;
@@ -45,4 +49,5 @@ pub use driver::{run_rank, train, train_direct, train_with_callbacks,
                  TrainConfig, TrainError, TrainResult, Transport};
 pub use experiment::Experiment;
 pub use hierarchy::HierarchySpec;
+pub use planner::{Candidate, PlanChoice, RetuneConfig, Topology};
 pub use topology::{RankRole, ServePlan, ServeRole, WorldPlan};

@@ -273,6 +273,20 @@ impl WorldPlan {
         }
     }
 
+    /// Every grouped-ring group count a world of `n_workers` ranks can
+    /// legally form, ascending: `g >= 2` groups (the planner and
+    /// [`WorldPlan::from_parts`] both reject single-group hierarchies),
+    /// dividing the workers evenly, with at least 2 members per group
+    /// (a 1-member group has no intra ring and degrades to the pure
+    /// tree the flat candidates already cover). This is the sweep
+    /// space of the self-tuning planner — keeping it here means the
+    /// planner can never propose a grouping the plan itself rejects.
+    pub fn candidate_groupings(n_workers: usize) -> Vec<usize> {
+        (2..=n_workers / 2)
+            .filter(|g| n_workers % g == 0)
+            .collect()
+    }
+
     /// Total ranks in the world.
     pub fn world_size(&self) -> usize {
         if self.ring {
@@ -671,6 +685,32 @@ mod tests {
     fn serve_plan_caps_replicas() {
         let err = ServePlan::new(10_000).unwrap_err();
         assert!(err.contains("replicas"), "{err}");
+    }
+
+    #[test]
+    fn candidate_groupings_are_exactly_the_legal_ones() {
+        assert!(WorldPlan::candidate_groupings(1).is_empty());
+        assert!(WorldPlan::candidate_groupings(2).is_empty());
+        assert!(WorldPlan::candidate_groupings(3).is_empty());
+        assert_eq!(WorldPlan::candidate_groupings(4), vec![2]);
+        assert_eq!(WorldPlan::candidate_groupings(6), vec![2, 3]);
+        assert!(WorldPlan::candidate_groupings(7).is_empty());
+        assert_eq!(WorldPlan::candidate_groupings(8), vec![2, 4]);
+        assert_eq!(WorldPlan::candidate_groupings(64),
+                   vec![2, 4, 8, 16, 32]);
+        // every candidate builds a valid grouped plan of the same size
+        for n in [4usize, 6, 8, 12, 64] {
+            for g in WorldPlan::candidate_groupings(n) {
+                let spec = HierarchySpec { n_groups: g,
+                                           workers_per_group: 0,
+                                           sync_every: 1 };
+                let p = WorldPlan::from_parts(&Mode::AllReduce,
+                                              Some(spec), n, 0)
+                    .unwrap();
+                assert_eq!(p.world_size(), n);
+                assert_eq!(p.ring_layout().unwrap().groups().len(), g);
+            }
+        }
     }
 
     // --- elastic replans --------------------------------------------

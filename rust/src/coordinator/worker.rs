@@ -15,6 +15,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::algo::{Algo, Mode};
 use crate::coordinator::callbacks::{LrScheduleSpec, Observer};
 use crate::coordinator::elastic::{self, MemberOutcome, NewWorld};
+use crate::coordinator::planner::RetuneConfig;
 use crate::coordinator::topology::WorldPlan;
 use crate::data::DataSet;
 use crate::metrics::{History, Stopwatch, WorkerReport};
@@ -432,6 +433,60 @@ const MAX_RECOVERY_ATTEMPTS: u32 = 5;
 /// the wait spans training rounds, not one agreement.
 const JOIN_WAIT_WINDOWS: u32 = 20;
 
+/// Rank-0 state of the online re-tuner (DESIGN.md §Autotuning): holds
+/// the planner's predicted round time against measured windows. A
+/// window's cost is the delta of the grad + collective + update timers
+/// — exactly the terms the prediction covers, so validation and
+/// callback time on the observer can never fake a divergence.
+struct RetuneState {
+    cfg: RetuneConfig,
+    /// grad+comm+update seconds already on the timers at window start.
+    window_work_s: f64,
+    window_rounds: u64,
+    replans_done: u32,
+    /// Round time the divergence test compares against: the planner's
+    /// prediction at launch, the measured average after a re-plan.
+    baseline_s: f64,
+    /// Measured average to adopt as the new baseline once the re-plan
+    /// this window triggered completes.
+    pending_baseline_s: Option<f64>,
+    /// The one-shot "cannot re-plan" hint was already logged.
+    hinted: bool,
+}
+
+impl RetuneState {
+    fn new(cfg: RetuneConfig) -> Self {
+        RetuneState { cfg, window_work_s: 0.0, window_rounds: 0,
+                      replans_done: 0,
+                      baseline_s: cfg.predicted_round_s,
+                      pending_baseline_s: None, hinted: false }
+    }
+
+    /// Restart the measurement window from `work_now_s` on the clocks
+    /// (also called after recovery, so an aborted round's timeout wait
+    /// never pollutes the next window).
+    fn reset_window(&mut self, work_now_s: f64) {
+        self.window_work_s = work_now_s;
+        self.window_rounds = 0;
+    }
+
+    /// Account one finished round; at the window boundary, return the
+    /// measured average round time iff it diverged past the trigger
+    /// (`baseline * factor * (1 + noise_floor)`).
+    fn round_done(&mut self, work_now_s: f64) -> Option<f64> {
+        self.window_rounds += 1;
+        if self.window_rounds < self.cfg.window {
+            return None;
+        }
+        let avg = (work_now_s - self.window_work_s)
+            / self.window_rounds as f64;
+        self.reset_window(work_now_s);
+        let trigger = self.baseline_s * self.cfg.factor
+            * (1.0 + self.cfg.noise_floor);
+        (avg > trigger).then_some(avg)
+    }
+}
+
 impl<'a> RingWorker<'a> {
     pub fn new(comm: &'a Comm, algo: &'a Algo,
                exes: &'a ModelExecutables, data: &'a DataSet, seed: u64,
@@ -617,6 +672,15 @@ impl<'a> RingWorker<'a> {
         let exes = self.exes;
         let algo = self.algo;
 
+        // Online re-tuner (auto mode): rank 0 holds measured windows
+        // against the planner's predicted round time and triggers a
+        // bounded re-plan through the elastic path on divergence.
+        let mut retune = if rank == 0 {
+            algo.retune.map(RetuneState::new)
+        } else {
+            None
+        };
+
         while epoch < algo.epochs {
             let mut erng = self.rng.fork(epoch as u64);
             let mut done_rounds = 0u64;
@@ -742,6 +806,56 @@ impl<'a> RingWorker<'a> {
                         if observer.should_stop() {
                             stop_flag = 1.0;
                         }
+                        if let Some(rt) = retune.as_mut() {
+                            let work = grad_timer.total_s()
+                                + comm_timer.total_s()
+                                + update_timer.total_s();
+                            if let Some(measured) = rt.round_done(work)
+                            {
+                                if elastic && rt.replans_done
+                                    < rt.cfg.max_replans
+                                {
+                                    rt.replans_done += 1;
+                                    rt.pending_baseline_s =
+                                        Some(measured);
+                                    log::warn!(
+                                        "[retune] measured {measured:.3e}\
+                                         s/round vs predicted {:.3e}s \
+                                         (trigger x{:.2}); re-planning \
+                                         ({}/{} used)",
+                                        rt.baseline_s, rt.cfg.factor,
+                                        rt.replans_done,
+                                        rt.cfg.max_replans);
+                                    // same latch the joiner fold-in
+                                    // uses: abort into the agreement
+                                    // path at the round boundary
+                                    failure = Some(WorkerError::Comm(
+                                        CommError::Interrupted(
+                                            format!(
+                                                "retune: measured \
+                                                 {measured:.3e}s/round \
+                                                 diverged from \
+                                                 predicted {:.3e}s",
+                                                rt.baseline_s))));
+                                    return;
+                                }
+                                if !rt.hinted {
+                                    rt.hinted = true;
+                                    log::warn!(
+                                        "[retune] measured {measured:.3e}\
+                                         s/round vs predicted {:.3e}s — \
+                                         {}; pin a topology or relaunch \
+                                         with --auto (docs/RUNBOOK.md)",
+                                        rt.baseline_s,
+                                        if elastic {
+                                            "re-plan budget exhausted"
+                                        } else {
+                                            "--elastic is off, cannot \
+                                             re-plan in place"
+                                        });
+                                }
+                            }
+                        }
                     }
                 });
             }
@@ -837,6 +951,21 @@ impl<'a> RingWorker<'a> {
                                      epoch {epoch} at update \
                                      {update_count} in a {n_live}\
                                      -member world");
+                                if let Some(rt) = retune.as_mut() {
+                                    if let Some(b) =
+                                        rt.pending_baseline_s.take()
+                                    {
+                                        rt.baseline_s = b;
+                                        log::info!(
+                                            "[retune] adopted measured \
+                                             {b:.3e}s/round as the new \
+                                             baseline");
+                                    }
+                                    rt.reset_window(
+                                        grad_timer.total_s()
+                                        + comm_timer.total_s()
+                                        + update_timer.total_s());
+                                }
                                 break;
                             }
                             Err(e2) if recoverable(&e2) => err = e2,

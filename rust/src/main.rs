@@ -232,6 +232,15 @@ const TRAIN_FLAGS: &[Flag] = &[
     Flag { name: "elastic-timeout-ms", value: "<ms>", default: "30000",
            help: "elastic: dead-peer suspicion + membership agreement \
                   window" },
+    Flag { name: "auto", value: "", default: "",
+           help: "allreduce: self-tune the topology — probe the links, \
+                  calibrate the cost model, and let the planner pick \
+                  flat-vs-hier, groups, codec, and bucketing" },
+    Flag { name: "retune-factor", value: "<f>", default: "2.0",
+           help: "auto: re-plan when a window's measured round time \
+                  exceeds factor x the planner's prediction" },
+    Flag { name: "retune-window", value: "<n>", default: "50",
+           help: "auto: rounds per re-tuner measurement window" },
     Flag { name: "optimizer", value: "<o>", default: "momentum",
            help: "sgd | momentum | adam | rmsprop | adadelta" },
     Flag { name: "lr", value: "<f>", default: "0.05",
@@ -490,6 +499,20 @@ fn parse_algo(args: &Args) -> Result<Algo, String> {
     algo.elastic = args.bool("elastic");
     algo.elastic_timeout_ms = args.usize("elastic-timeout-ms", 30_000)
         .map_err(|e| e.to_string())? as u64;
+    algo.auto = args.bool("auto");
+    algo.retune_factor = args.f64("retune-factor", 2.0)
+        .map_err(|e| e.to_string())?;
+    if algo.retune_factor <= 1.0 {
+        return Err(format!(
+            "--retune-factor must be > 1.0 (got {}): the re-tuner \
+             triggers on measured > factor x predicted",
+            algo.retune_factor));
+    }
+    algo.retune_window = args.usize("retune-window", 50)
+        .map_err(|e| e.to_string())? as u64;
+    if algo.retune_window == 0 {
+        return Err("--retune-window must be >= 1 round".into());
+    }
     algo.mode = match args.str("mode", "downpour").as_str() {
         "downpour" => Mode::Downpour { sync: args.bool("sync") },
         "easgd" => Mode::Easgd {
@@ -566,6 +589,24 @@ fn cmd_train(args: &Args) -> i32 {
     if hierarchy_flag && groups < 2 {
         return fail(format!(
             "--hierarchy requires --groups >= 2 (got {groups})"));
+    }
+    // --auto hands the topology decision to the planner; an explicit
+    // topology flag next to it would silently lose one or the other.
+    if algo.auto && (hierarchy_flag || groups > 0) {
+        return fail(
+            "--auto and --hierarchy/--groups are mutually exclusive: \
+             drop the topology flags to let the planner pick the \
+             grouping, or drop --auto to pin it");
+    }
+    if algo.auto && algo.mode != Mode::AllReduce {
+        return fail(
+            "--auto requires --mode allreduce: the planner tunes ring \
+             topologies, not parameter-server worlds");
+    }
+    if algo.auto && direct {
+        return fail(
+            "--auto has nothing to tune under --direct (single \
+             process, no collectives)");
     }
     if groups > 0 {
         if groups < 2 {
@@ -770,6 +811,29 @@ mod tests {
             }
         }
         assert!(usage.starts_with("usage: mpi-learn serve"));
+    }
+
+    #[test]
+    fn auto_flags_parse_and_validate() {
+        let args = Args::parse(
+            ["train", "--mode", "allreduce", "--auto"]
+                .iter().map(|s| s.to_string()).collect());
+        let a = parse_algo(&args).unwrap();
+        assert!(a.auto);
+        assert_eq!(a.retune_factor, 2.0);
+        assert_eq!(a.retune_window, 50);
+        // a trigger factor at or below 1.0 would fire on every window
+        let args = Args::parse(
+            ["train", "--mode", "allreduce", "--auto",
+             "--retune-factor", "0.5"]
+                .iter().map(|s| s.to_string()).collect());
+        let err = parse_algo(&args).unwrap_err();
+        assert!(err.contains("retune-factor"), "{err}");
+        let args = Args::parse(
+            ["train", "--mode", "allreduce", "--retune-window", "0"]
+                .iter().map(|s| s.to_string()).collect());
+        let err = parse_algo(&args).unwrap_err();
+        assert!(err.contains("retune-window"), "{err}");
     }
 
     #[test]

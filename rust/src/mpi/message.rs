@@ -139,6 +139,15 @@ pub enum Tag {
     /// serve replica -> frontend: the logits for one micro-batch
     /// (`Floats { step: batch id, data: rows * classes }`).
     ServeReply,
+    /// planner rank 0 -> peer: topology-probe ping. `Payload::Empty`
+    /// measures pure link latency; a `Floats` payload of ramped size
+    /// measures bandwidth (the peer echoes it back verbatim). `step`
+    /// sequences the probe so a straggling echo can never be matched
+    /// to a later exchange.
+    ProbePing,
+    /// peer -> planner rank 0: the probe echo (same payload shape as
+    /// the ping it answers).
+    ProbePong,
 }
 
 impl Tag {
@@ -147,7 +156,7 @@ impl Tag {
     /// `BUCKET_TAG_BASE + bucket * BUCKET_PHASES + phase`.
     pub fn to_u32(self) -> u32 {
         use crate::mpi::tags::{BUCKET_PHASES, BUCKET_TAG_BASE,
-                               SERVE_TAG_BASE};
+                               PROBE_TAG_BASE, SERVE_TAG_BASE};
         match self {
             Tag::Ready => 0,
             Tag::Gradients => 1,
@@ -177,12 +186,15 @@ impl Tag {
             }
             Tag::ServeRequest => SERVE_TAG_BASE,
             Tag::ServeReply => SERVE_TAG_BASE + 1,
+            Tag::ProbePing => PROBE_TAG_BASE,
+            Tag::ProbePong => PROBE_TAG_BASE + 1,
         }
     }
 
     pub fn from_u32(v: u32) -> Option<Tag> {
         use crate::mpi::tags::{BUCKET_PHASES, BUCKET_TAG_BASE,
-                               MAX_BUCKETS, SERVE_TAG_BASE};
+                               MAX_BUCKETS, PROBE_TAG_BASE,
+                               SERVE_TAG_BASE};
         Some(match v {
             0 => Tag::Ready,
             1 => Tag::Gradients,
@@ -217,6 +229,8 @@ impl Tag {
             }
             v if v == SERVE_TAG_BASE => Tag::ServeRequest,
             v if v == SERVE_TAG_BASE + 1 => Tag::ServeReply,
+            v if v == PROBE_TAG_BASE => Tag::ProbePing,
+            v if v == PROBE_TAG_BASE + 1 => Tag::ProbePong,
             _ => return None,
         })
     }
@@ -673,12 +687,16 @@ mod tests {
                 assert_eq!(p2, p);
             }
         }
-        // the lane just past the bucket block now belongs to the
-        // serving RPC pair, and the lane past THAT is unassigned
-        use crate::mpi::tags::{SERVE_TAGS, SERVE_TAG_BASE};
+        // the lane just past the bucket block belongs to the serving
+        // RPC pair, the pair past THAT to the planner's probe, and the
+        // lane past the probe block is unassigned
+        use crate::mpi::tags::{PROBE_TAGS, PROBE_TAG_BASE, SERVE_TAGS,
+                               SERVE_TAG_BASE};
         assert_eq!(BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES,
                    SERVE_TAG_BASE);
-        assert_eq!(Tag::from_u32(SERVE_TAG_BASE + SERVE_TAGS), None);
+        assert_eq!(Tag::from_u32(SERVE_TAG_BASE + SERVE_TAGS),
+                   Some(Tag::ProbePing));
+        assert_eq!(Tag::from_u32(PROBE_TAG_BASE + PROBE_TAGS), None);
     }
 
     #[test]
@@ -690,6 +708,21 @@ mod tests {
             assert_eq!(tag.to_u32(), SERVE_TAG_BASE + i as u32);
             assert_eq!(Tag::from_u32(tag.to_u32()), Some(tag));
             let p = Payload::floats(11, vec![0.5, -0.25, 3.0]);
+            let (t2, p2) = decode(&encode(tag, &p)).unwrap();
+            assert_eq!(t2, tag);
+            assert_eq!(p2, p);
+        }
+    }
+
+    #[test]
+    fn probe_tags_roundtrip() {
+        use crate::mpi::tags::{PROBE_TAGS, PROBE_TAG_BASE};
+        let lanes = [Tag::ProbePing, Tag::ProbePong];
+        assert_eq!(lanes.len() as u32, PROBE_TAGS);
+        for (i, tag) in lanes.into_iter().enumerate() {
+            assert_eq!(tag.to_u32(), PROBE_TAG_BASE + i as u32);
+            assert_eq!(Tag::from_u32(tag.to_u32()), Some(tag));
+            let p = Payload::floats(13, vec![0.0; 64]);
             let (t2, p2) = decode(&encode(tag, &p)).unwrap();
             assert_eq!(t2, tag);
             assert_eq!(p2, p);

@@ -88,6 +88,18 @@ pub mod tags {
     /// Wire values in the serving block (`ServeRequest`, `ServeReply`).
     pub const SERVE_TAGS: u32 = 2;
 
+    /// First wire value of the topology-probe block, directly above the
+    /// serving block. The self-tuning planner's link probe
+    /// (`ProbePing`/`ProbePong` ping-pong + ramped-size bandwidth
+    /// transfers, see DESIGN.md §Autotuning) gets its own lane so probe
+    /// traffic can never be mistaken for training or serving messages —
+    /// the same isolation argument as every other block here. Like the
+    /// serving tags, these are NOT in [`REGISTRY`] (which covers exactly
+    /// the fixed values below [`BUCKET_TAG_BASE`]).
+    pub const PROBE_TAG_BASE: u32 = SERVE_TAG_BASE + SERVE_TAGS;
+    /// Wire values in the probe block (`ProbePing`, `ProbePong`).
+    pub const PROBE_TAGS: u32 = 2;
+
     const fn strictly_increasing(t: &[(u32, &str)]) -> bool {
         let mut i = 1;
         while i < t.len() {
@@ -106,11 +118,14 @@ pub mod tags {
     const _: () =
         assert!(REGISTRY[REGISTRY.len() - 1].0 < BUCKET_TAG_BASE);
     const _: () = assert!(BUCKET_PHASES >= 1 && MAX_BUCKETS >= 1);
-    // The serving block starts exactly where the bucket block ends.
+    // The serving block starts exactly where the bucket block ends,
+    // and the probe block exactly where the serving block ends.
     const _: () = assert!(
         SERVE_TAG_BASE == BUCKET_TAG_BASE + MAX_BUCKETS * BUCKET_PHASES
     );
     const _: () = assert!(SERVE_TAGS == 2);
+    const _: () = assert!(PROBE_TAG_BASE == SERVE_TAG_BASE + SERVE_TAGS);
+    const _: () = assert!(PROBE_TAGS == 2);
 
     /// The wire tag for one (bucket, phase) collective lane.
     pub fn bucket_tag(bucket: usize, phase: BucketPhase) -> Tag {
@@ -158,6 +173,19 @@ pub mod tags {
                        Some(Tag::ServeReply));
             assert_eq!(Tag::ServeRequest.to_u32(), SERVE_TAG_BASE);
             assert_eq!(Tag::ServeReply.to_u32(), SERVE_TAG_BASE + 1);
+        }
+
+        /// The planner's probe lanes sit exactly at the top of the
+        /// serving block and roundtrip through the wire mapping.
+        #[test]
+        fn probe_block_pinned_above_serve() {
+            assert_eq!(PROBE_TAG_BASE, SERVE_TAG_BASE + SERVE_TAGS);
+            assert_eq!(Tag::from_u32(PROBE_TAG_BASE),
+                       Some(Tag::ProbePing));
+            assert_eq!(Tag::from_u32(PROBE_TAG_BASE + 1),
+                       Some(Tag::ProbePong));
+            assert_eq!(Tag::ProbePing.to_u32(), PROBE_TAG_BASE);
+            assert_eq!(Tag::ProbePong.to_u32(), PROBE_TAG_BASE + 1);
         }
     }
 }

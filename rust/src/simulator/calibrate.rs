@@ -1,6 +1,10 @@
 //! Live calibration: measure this host's real protocol costs and inject
 //! them into a [`CostModel`]. Used by the Fig 3/4 and Table I benches so
-//! simulated sweeps rest on measured numbers (DESIGN.md §Substitutions).
+//! simulated sweeps rest on measured numbers (DESIGN.md §Substitutions),
+//! and since the self-tuning planner (DESIGN.md §Autotuning) also by the
+//! `--auto` startup probe: compute costs come from [`measure_costs`],
+//! link costs from the planner's ping-pong probe via [`LinkCost`] /
+//! [`LinkCalibration`].
 
 use std::time::Instant;
 
@@ -13,19 +17,56 @@ use crate::util::rng::Rng;
 /// Measured per-operation costs.
 #[derive(Clone, Copy, Debug)]
 pub struct Calibration {
-    /// Mean gradient-step time at the measured batch size, seconds.
+    /// Median gradient-step time at the measured batch size, seconds.
     pub t_grad: f64,
     /// The batch size it was measured at.
     pub batch: usize,
-    /// Mean master optimizer update, seconds.
+    /// Median master optimizer update, seconds.
     pub t_update: f64,
-    /// Mean validation-batch eval time, seconds.
+    /// Median validation-batch eval time, seconds.
     pub t_eval_batch: f64,
+    /// Relative standard deviation of the per-rep gradient timings
+    /// (stddev / median). The online re-tuner compares measured-vs-
+    /// predicted divergence against this noise floor so a jittery host
+    /// is not mistaken for a mis-planned topology.
+    pub grad_rel_spread: f64,
+}
+
+/// Median and relative spread (stddev / median) of a sample set.
+///
+/// The median discards warm-up stragglers and GC/scheduler outliers
+/// that used to drag the old mean-of-reps estimate (a single 10x
+/// outlier in 15 reps shifted the mean by ~60%); the spread is returned
+/// so callers can tell measurement noise from real model divergence.
+pub fn median_and_spread(samples: &[f64]) -> (f64, f64) {
+    assert!(!samples.is_empty(), "median of zero samples");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = sorted.len() / 2;
+    let median = if sorted.len() % 2 == 1 {
+        sorted[mid]
+    } else {
+        0.5 * (sorted[mid - 1] + sorted[mid])
+    };
+    if sorted.len() < 2 || median <= 0.0 {
+        return (median, 0.0);
+    }
+    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / (sorted.len() - 1) as f64;
+    (median, var.sqrt() / median)
 }
 
 /// Measure gradient, update, and eval costs for one artifact variant.
+///
+/// Each rep is timed individually and the **median** is reported
+/// (pre-PR 9 this averaged one aggregate wall-clock over all reps after
+/// a single warm-up step, so one descheduled rep polluted the whole
+/// estimate); the relative spread rides along in
+/// [`Calibration::grad_rel_spread`].
 pub fn measure_costs(exes: &ModelExecutables, opt: &OptimizerConfig,
                      reps: usize) -> Calibration {
+    let reps = reps.max(1);
     let meta = &exes.meta;
     let mut rng = Rng::new(0xCA11B);
     let params = exes.init_params(&mut rng);
@@ -36,30 +77,50 @@ pub fn measure_costs(exes: &ModelExecutables, opt: &OptimizerConfig,
         .map(|_| rng.usize_below(meta.classes) as i32)
         .collect();
 
-    exes.grad_step(&params, &x, &y).expect("calibration grad"); // warm
-    let t0 = Instant::now();
-    for _ in 0..reps {
-        exes.grad_step(&params, &x, &y).expect("calibration grad");
-    }
-    let t_grad = t0.elapsed().as_secs_f64() / reps as f64;
+    // two warm-up steps: the first pays allocator/page-fault costs, the
+    // second settles the caches
+    exes.grad_step(&params, &x, &y).expect("calibration grad");
+    exes.grad_step(&params, &x, &y).expect("calibration grad");
+    let grad_samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            exes.grad_step(&params, &x, &y).expect("calibration grad");
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    let (t_grad, grad_rel_spread) = median_and_spread(&grad_samples);
 
-    let t0 = Instant::now();
-    for _ in 0..reps {
-        exes.eval_step(&params, &x, &y).expect("calibration eval");
-    }
-    let t_eval_batch = t0.elapsed().as_secs_f64() / reps as f64;
+    exes.eval_step(&params, &x, &y).expect("calibration eval");
+    let eval_samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            exes.eval_step(&params, &x, &y).expect("calibration eval");
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    let (t_eval_batch, _) = median_and_spread(&eval_samples);
 
+    // single updates are sub-microsecond — time CHUNKS of updates and
+    // take the median chunk mean, which keeps the outlier rejection
+    // without asking the clock for nanosecond resolution
     let mut optimizer = opt.build(meta.param_count);
     let mut w = ParamSet::zeros(&meta.params);
     let g = vec![1e-3f32; meta.param_count];
-    let t0 = Instant::now();
-    let ureps = 1000;
-    for _ in 0..ureps {
-        optimizer.update(w.flat_mut(), &g);
-    }
-    let t_update = t0.elapsed().as_secs_f64() / ureps as f64;
+    let chunks = 8usize;
+    let per_chunk = 125usize;
+    let update_samples: Vec<f64> = (0..chunks)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..per_chunk {
+                optimizer.update(w.flat_mut(), &g);
+            }
+            t0.elapsed().as_secs_f64() / per_chunk as f64
+        })
+        .collect();
+    let (t_update, _) = median_and_spread(&update_samples);
 
-    Calibration { t_grad, batch: meta.batch, t_update, t_eval_batch }
+    Calibration { t_grad, batch: meta.batch, t_update, t_eval_batch,
+                  grad_rel_spread }
 }
 
 impl Calibration {
@@ -88,5 +149,125 @@ impl Calibration {
         cost.t_grad_fixed = fixed;
         cost.t_grad_per_sample = per_sample;
         cost.t_update = self.t_update;
+    }
+}
+
+/// One probed link class (intra-group or inter-group), as measured by
+/// the planner's `ProbePing`/`ProbePong` exchange over the real `Comm`
+/// layer: empty-payload ping-pongs give the latency, ramped-size float
+/// payloads give the bandwidth, and the relative spread of the
+/// round-trip samples rides along for the re-tuner's noise floor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkCost {
+    /// One-way message latency, seconds.
+    pub latency_s: f64,
+    /// Sustained bandwidth, bytes/second.
+    pub bandwidth_bytes_per_s: f64,
+    /// Relative standard deviation of the round-trip samples.
+    pub rel_spread: f64,
+}
+
+impl LinkCost {
+    /// A link that was never probed (degenerate worlds): zero latency,
+    /// effectively infinite bandwidth — the sweep then reduces to the
+    /// compute terms, which is the right answer for a 1-rank world.
+    pub fn unprobed() -> LinkCost {
+        LinkCost { latency_s: 0.0, bandwidth_bytes_per_s: f64::MAX,
+                   rel_spread: 0.0 }
+    }
+}
+
+/// The probe phase's full result: both link classes, ready to inject
+/// into a [`CostModel`] next to [`Calibration`]'s compute terms.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkCalibration {
+    /// The node-local (same provisional group) link class.
+    pub intra: LinkCost,
+    /// The cross-group link class.
+    pub inter: LinkCost,
+}
+
+impl LinkCalibration {
+    /// Inject the probed link costs into a cost model, replacing the
+    /// preset's guessed latency/bandwidth for both link classes.
+    pub fn apply(&self, cost: &mut CostModel) {
+        cost.latency = self.inter.latency_s;
+        cost.bandwidth_bytes_per_s = self.inter.bandwidth_bytes_per_s;
+        cost.intra_latency = self.intra.latency_s;
+        cost.intra_bandwidth_bytes_per_s =
+            self.intra.bandwidth_bytes_per_s;
+    }
+
+    /// The noisier of the two link classes' relative spreads — the
+    /// re-tuner's divergence test must clear at least this.
+    pub fn rel_spread(&self) -> f64 {
+        self.intra.rel_spread.max(self.inter.rel_spread)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_discards_the_outlier_the_old_mean_kept() {
+        // 14 quiet reps + one 10x straggler: the mean moves ~60%, the
+        // median does not move at all — this is the measure_costs bugfix.
+        let mut samples = vec![1.0e-3; 14];
+        samples.push(1.0e-2);
+        let (median, spread) = median_and_spread(&samples);
+        assert_eq!(median, 1.0e-3);
+        assert!(spread > 0.0);
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!(mean > 1.5e-3, "the old estimator was off: {mean}");
+    }
+
+    #[test]
+    fn median_handles_even_odd_and_degenerate_sets() {
+        assert_eq!(median_and_spread(&[2.0]), (2.0, 0.0));
+        let (m, s) = median_and_spread(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert!(s > 0.0);
+        let (m, _) = median_and_spread(&[5.0, 1.0, 3.0]);
+        assert_eq!(m, 3.0, "median sorts first");
+        // identical samples: zero spread
+        let (m, s) = median_and_spread(&[4.0, 4.0, 4.0, 4.0]);
+        assert_eq!((m, s), (4.0, 0.0));
+    }
+
+    #[test]
+    fn link_calibration_overwrites_the_preset_links() {
+        let mut cost = CostModel::cluster(3_023);
+        let links = LinkCalibration {
+            intra: LinkCost { latency_s: 3.0e-6,
+                              bandwidth_bytes_per_s: 1.5e10,
+                              rel_spread: 0.02 },
+            inter: LinkCost { latency_s: 4.0e-5,
+                              bandwidth_bytes_per_s: 5.0e9,
+                              rel_spread: 0.08 },
+        };
+        links.apply(&mut cost);
+        assert_eq!(cost.latency, 4.0e-5);
+        assert_eq!(cost.bandwidth_bytes_per_s, 5.0e9);
+        assert_eq!(cost.intra_latency, 3.0e-6);
+        assert_eq!(cost.intra_bandwidth_bytes_per_s, 1.5e10);
+        assert_eq!(links.rel_spread(), 0.08);
+        // compute terms are untouched — those belong to Calibration
+        assert_eq!(cost.t_grad_fixed,
+                   CostModel::cluster(3_023).t_grad_fixed);
+    }
+
+    #[test]
+    fn calibration_apply_splits_fixed_and_per_sample() {
+        let cal = Calibration { t_grad: 1.0e-2, batch: 100,
+                                t_update: 2.0e-5, t_eval_batch: 5.0e-3,
+                                grad_rel_spread: 0.01 };
+        let mut cost = CostModel::cluster(3_023);
+        cal.apply(&mut cost);
+        assert!((cost.t_grad_fixed - 1.5e-3).abs() < 1e-15);
+        assert!((cost.t_grad_per_sample - 8.5e-5).abs() < 1e-15);
+        // the projected time at the measured batch reproduces t_grad
+        assert!((cost.grad_time_nominal(100) - cal.t_grad).abs()
+                    < 1e-12);
     }
 }

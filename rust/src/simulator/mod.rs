@@ -14,7 +14,8 @@
 pub mod calibrate;
 pub mod model;
 
-pub use calibrate::{measure_costs, Calibration};
+pub use calibrate::{measure_costs, median_and_spread, Calibration,
+                    LinkCalibration, LinkCost};
 pub use model::{CostModel, SimConfig, SimResult};
 
 use std::cmp::Ordering;

@@ -1,0 +1,128 @@
+//! End-to-end tests of the self-tuning topology planner (`--auto`,
+//! DESIGN.md §Autotuning): an auto-tuned run must train bitwise-
+//! identically to the equivalent hand-flagged run, because every
+//! topology the sweep can choose (flat / bucketed / hierarchical, fp32
+//! / fp16) is bitwise-equivalent to every other by construction.
+
+use mpi_learn::coordinator::{run_rank, train, Algo, Data,
+                             HierarchySpec, Mode, ModelBuilder,
+                             TrainConfig, TrainError, Transport};
+use mpi_learn::data::GeneratorConfig;
+use mpi_learn::mpi::Codec;
+use mpi_learn::runtime::Session;
+
+fn base_cfg(auto: bool) -> TrainConfig {
+    TrainConfig {
+        builder: ModelBuilder::new("mlp", 25),
+        algo: Algo {
+            mode: Mode::AllReduce,
+            batch_size: 25,
+            epochs: 2,
+            validate_every: 5,
+            max_val_batches: 4,
+            // Pin the codec axis: the wire format must match between
+            // the auto and explicit runs (fp16 rounds the reduced
+            // gradients identically on every topology, but differently
+            // from fp32).
+            compression: Codec::Fp16,
+            auto,
+            ..Algo::default()
+        },
+        n_workers: 4,
+        seed: 11,
+        transport: Transport::Inproc,
+        hierarchy: None,
+        callbacks: Vec::new(),
+    }
+}
+
+fn synthetic() -> Data {
+    Data::Synthetic {
+        gen: GeneratorConfig { seed: 5, ..Default::default() },
+        samples_per_worker: 250,
+        val_samples: 250,
+    }
+}
+
+fn weight_bits(r: &mpi_learn::coordinator::TrainResult) -> Vec<u32> {
+    r.weights.flat().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Acceptance (ISSUE 9): whatever plan the probe-driven sweep picks,
+/// the training trajectory is bit-for-bit the trajectory of the same
+/// config with the topology pinned by hand — the planner changes the
+/// schedule of the collectives, never the arithmetic.
+#[test]
+fn auto_trains_bitwise_identically_to_the_pinned_topology() {
+    let session = Session::native().unwrap();
+    let auto = train(&session, &base_cfg(true), &synthetic()).unwrap();
+    let flat = train(&session, &base_cfg(false), &synthetic()).unwrap();
+
+    assert_eq!(auto.history.master_updates,
+               flat.history.master_updates);
+    assert_eq!(weight_bits(&auto), weight_bits(&flat),
+               "auto's chosen topology diverged from the flat run");
+    assert_eq!(auto.history.validations.len(),
+               flat.history.validations.len());
+    for (a, f) in auto.history.validations.iter()
+        .zip(&flat.history.validations)
+    {
+        assert_eq!(a.update, f.update);
+        assert_eq!(a.val_loss.to_bits(), f.val_loss.to_bits(),
+                   "validation at update {} diverged", a.update);
+        assert_eq!(a.val_acc.to_bits(), f.val_acc.to_bits());
+    }
+}
+
+/// `auto` hands the grouping decision to the planner; an explicit
+/// hierarchy next to it must error before any world spawns.
+#[test]
+fn auto_with_an_explicit_hierarchy_is_rejected() {
+    let session = Session::native().unwrap();
+    let mut cfg = base_cfg(true);
+    cfg.hierarchy = Some(HierarchySpec {
+        n_groups: 2,
+        workers_per_group: 2,
+        sync_every: 1,
+    });
+    match train(&session, &cfg, &synthetic()) {
+        Err(TrainError::Config(msg)) => {
+            assert!(msg.contains("hierarchy"), "{msg}");
+        }
+        other => panic!("expected Config error, got {:?}",
+                        other.map(|_| ())),
+    }
+}
+
+/// The planner tunes ring topologies only: auto in a parameter-server
+/// mode is a config error, not a silent no-op.
+#[test]
+fn auto_outside_allreduce_is_rejected() {
+    let session = Session::native().unwrap();
+    let mut cfg = base_cfg(true);
+    cfg.algo.mode = Mode::Downpour { sync: false };
+    match train(&session, &cfg, &synthetic()) {
+        Err(TrainError::Config(msg)) => {
+            assert!(msg.contains("allreduce"), "{msg}");
+        }
+        other => panic!("expected Config error, got {:?}",
+                        other.map(|_| ())),
+    }
+}
+
+/// SPMD processes derive their role from the same static config before
+/// any connection exists, so a rank-0 probe could never reshape the
+/// world the other processes committed to — run_rank must reject auto
+/// with a clear error instead of hanging.
+#[test]
+fn run_rank_rejects_auto_with_a_config_error() {
+    let session = Session::native().unwrap();
+    match run_rank(&session, &base_cfg(true), &synthetic(), 0, 48310) {
+        Err(TrainError::Config(msg)) => {
+            assert!(msg.contains("run_rank") || msg.contains("SPMD"),
+                    "{msg}");
+        }
+        other => panic!("expected Config error, got {:?}",
+                        other.map(|_| ())),
+    }
+}

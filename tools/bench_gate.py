@@ -1,0 +1,243 @@
+#!/usr/bin/env python3
+"""CI bench gates in one place (stdlib only).
+
+Each gate that used to live as an inline-Python step in
+.github/workflows/ci.yml is a named subcommand here, with its threshold
+in THRESHOLDS rather than buried in a heredoc. CI invokes one gate per
+step so a failure is attributed to the right step name:
+
+    python3 tools/bench_gate.py fp16-volume  BENCH_ci.json
+    python3 tools/bench_gate.py hier-vs-flat BENCH_pr.json
+    python3 tools/bench_gate.py overlap      BENCH_pr.json
+    python3 tools/bench_gate.py planner      BENCH_pr.json
+    python3 tools/bench_gate.py staleness    BENCH_pr.json
+    python3 tools/bench_gate.py autotune-log quickstart_auto.log
+    python3 tools/bench_gate.py sweep-summary allreduce_nightly.json
+
+Exit status: 0 == the gate holds; anything else is a regression, with
+the reason on stdout/stderr (and a ::error:: annotation where the gate
+guards a committed file).
+"""
+
+import json
+import math
+import re
+import subprocess
+import sys
+
+THRESHOLDS = {
+    # fp16 must at least halve the wire volume (with header slack);
+    # top-k at k=0.1 must cut it below a quarter.
+    "fp16_bytes_ratio": 0.60,
+    "topk10_bytes_ratio": 0.25,
+    # World sizes from which the asymptotic winner must actually win.
+    "hier_beats_flat_from_n": 16,
+    "overlap_wins_from_n": 8,
+    # The planner must not pick a hierarchy below the crossover (n=2
+    # has no valid grouping at all) and must pick one at scale.
+    "planner_flat_below_n": 4,
+    "planner_hier_from_n": 16,
+}
+
+CANDIDATE_RE = re.compile(
+    r"\[planner\] candidate (\S+) predicted ([0-9.eE+-]+)s/round")
+CHOSE_RE = re.compile(
+    r"\[planner\] chose (\S+) codec=(\S+) buckets=\S+ "
+    r"predicted ([0-9.eE+-]+)s/round")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def comm_block(path):
+    """BENCH_ci.json is a list of bench blocks; pick the microbench."""
+    doc = load(path)
+    blocks = doc if isinstance(doc, list) else [doc]
+    for b in blocks:
+        if b.get("bench") == "comm_microbench":
+            return b
+    sys.exit(f"no comm_microbench block in {path}")
+
+
+def gate_fp16_volume(path):
+    comm = comm_block(path)
+    fp16, topk = comm["ratio_fp16"], comm["ratio_topk10"]
+    lim16 = THRESHOLDS["fp16_bytes_ratio"]
+    limtk = THRESHOLDS["topk10_bytes_ratio"]
+    print(f"fp16 bytes/round ratio:     {fp16:.4f} (must be < {lim16})")
+    print(f"topk:0.1 bytes/round ratio: {topk:.4f} (must be < {limtk})")
+    if fp16 >= lim16 or topk >= limtk:
+        sys.exit("wire compression regressed past the gate")
+
+
+def gate_hier_vs_flat(path):
+    pr = load(path)
+    flat = pr["collective_ns"]["flat"]
+    hier = pr["collective_ns"]["hier"]
+    from_n = THRESHOLDS["hier_beats_flat_from_n"]
+    bad = []
+    for key, t_flat in sorted(flat.items()):
+        n = int(key[1:])
+        t_hier = hier[key]
+        marker = "<=" if t_hier <= t_flat else "REGRESSION"
+        print(f"n={n:3d}: hier {t_hier:>9.0f} ns {marker} "
+              f"flat {t_flat:>9.0f} ns")
+        if n >= from_n and t_hier > t_flat:
+            bad.append(key)
+    if bad:
+        sys.exit(f"hierarchical all-reduce slower than the flat ring "
+                 f"at {bad} — the topology gate failed")
+
+
+def gate_overlap(path):
+    pr = load(path)
+    bucketed = pr["overlap"]["bucketed_ns"]
+    serial = pr["overlap"]["serial_ns"]
+    from_n = THRESHOLDS["overlap_wins_from_n"]
+    bad = []
+    for key, t_serial in sorted(serial.items()):
+        n = int(key[1:])
+        t_bucketed = bucketed[key]
+        marker = "<" if t_bucketed < t_serial else "REGRESSION"
+        print(f"n={n:3d}: bucketed {t_bucketed:>9.0f} ns {marker} "
+              f"serial {t_serial:>9.0f} ns")
+        if n >= from_n and t_bucketed >= t_serial:
+            bad.append(key)
+    if bad:
+        sys.exit(f"bucketed round not faster than backprop + "
+                 f"standalone reduce at {bad} — the overlap gate "
+                 f"failed")
+
+
+def gate_planner(path):
+    """Schema-4 planner block: the recorded choice must be the argmin
+    of the recorded predictions, flat below the crossover, hierarchical
+    above it."""
+    pr = load(path)
+    if pr.get("schema", 0) < 4:
+        sys.exit(f"{path} is schema {pr.get('schema')} — the planner "
+                 f"gate needs schema >= 4 (regenerate the file)")
+    planner = pr["planner"]
+    bad = []
+    for key, preds in sorted(planner["predicted_ns"].items()):
+        n = int(key[1:])
+        chosen = planner["chosen"][key]
+        best_ns = min(preds.values())
+        ok = preds.get(chosen) == best_ns
+        marker = "argmin" if ok else "NOT THE ARGMIN"
+        print(f"n={n:3d}: chose {chosen:<22} "
+              f"{preds.get(chosen, math.nan):>9} ns {marker} "
+              f"(best {best_ns} ns over {len(preds)} candidates)")
+        if not ok:
+            bad.append(f"{key}: chose {chosen} but the minimum is "
+                       f"{best_ns} ns")
+        if n < THRESHOLDS["planner_flat_below_n"] \
+                and chosen.startswith("hier"):
+            bad.append(f"{key}: picked {chosen} below the crossover")
+        if n >= THRESHOLDS["planner_hier_from_n"] \
+                and not chosen.startswith("hier"):
+            bad.append(f"{key}: picked {chosen} at scale — the "
+                       f"hierarchy should win from "
+                       f"n={THRESHOLDS['planner_hier_from_n']}")
+    if bad:
+        sys.exit("planner gate failed:\n  " + "\n  ".join(bad))
+
+
+def gate_staleness(path):
+    """The committed file must be tracked AND match the regenerated
+    one. `git diff` exits 0 for untracked paths, which would make the
+    gate vacuous in exactly the forgot-to-commit case it exists to
+    catch — so require tracking first."""
+    regen = ("run 'cargo bench --bench allreduce_scaling -- --ci "
+             f"--pr-json ../{path}' and commit the result")
+    if subprocess.run(["git", "ls-files", "--error-unmatch", path],
+                      capture_output=True).returncode != 0:
+        print(f"::error::{path} is not committed — {regen}")
+        sys.exit(1)
+    if subprocess.run(["git", "diff", "--exit-code", path]).returncode:
+        print(f"::error::{path} is stale — {regen}")
+        sys.exit(1)
+    print(f"{path} is tracked and matches the regenerated output")
+
+
+def parse_autotune_log(path):
+    """Split a quickstart/train log into sweeps: each `[planner] chose`
+    line closes the run of `[planner] candidate` lines before it."""
+    sweeps, cands = [], []
+    with open(path) as f:
+        for line in f:
+            m = CANDIDATE_RE.search(line)
+            if m:
+                cands.append((m.group(1), float(m.group(2))))
+                continue
+            m = CHOSE_RE.search(line)
+            if m:
+                chosen = f"{m.group(1)}|{m.group(2)}"
+                sweeps.append((cands, chosen, float(m.group(3))))
+                cands = []
+    return sweeps
+
+
+def gate_autotune_log(path):
+    """Live-run gate: the plan the `--auto` run logged must be the
+    argmin of the candidate predictions it logged next to it."""
+    sweeps = parse_autotune_log(path)
+    if not sweeps:
+        sys.exit(f"no '[planner] chose' line in {path} — did the run "
+                 f"actually auto-tune?")
+    for i, (cands, chosen, chosen_s) in enumerate(sweeps):
+        if not cands:
+            sys.exit(f"sweep {i}: a chose line with no candidate "
+                     f"lines before it")
+        best_key, best_s = min(cands, key=lambda kv: kv[1])
+        print(f"sweep {i}: chose {chosen} at {chosen_s:.3e}s/round "
+              f"over {len(cands)} candidates "
+              f"(argmin {best_key} at {best_s:.3e}s)")
+        if chosen_s > best_s:
+            sys.exit(f"sweep {i}: chose {chosen} "
+                     f"({chosen_s:.3e}s/round) but {best_key} "
+                     f"predicted {best_s:.3e}s — not the argmin")
+        if chosen != best_key and chosen_s != best_s:
+            sys.exit(f"sweep {i}: chose {chosen} which is not among "
+                     f"the minimal candidates")
+    print(f"{len(sweeps)} sweep(s) OK: every chosen plan is its "
+          f"sweep's argmin")
+
+
+def sweep_summary(path):
+    """Not a gate: print the planner columns of an allreduce_scaling
+    sweep JSON (nightly log surface)."""
+    doc = load(path)
+    chosen = doc.get("planner_chosen", {})
+    sims = doc.get("simulated_s", {})
+    if not chosen:
+        sys.exit(f"{path} has no planner_chosen block — bench too old?")
+    print(f"{'ranks':>6} {'chosen plan':<22} {'predicted round':>16}")
+    for key in sorted(chosen, key=lambda k: int(k[1:])):
+        pred = sims.get(f"planner_pred_round/{key}")
+        pred_str = f"{pred * 1e3:.3f} ms" if pred is not None else "?"
+        print(f"{key[1:]:>6} {chosen[key]:<22} {pred_str:>16}")
+
+
+GATES = {
+    "fp16-volume": gate_fp16_volume,
+    "hier-vs-flat": gate_hier_vs_flat,
+    "overlap": gate_overlap,
+    "planner": gate_planner,
+    "staleness": gate_staleness,
+    "autotune-log": gate_autotune_log,
+    "sweep-summary": sweep_summary,
+}
+
+
+def main(argv):
+    if len(argv) != 2 or argv[0] not in GATES:
+        names = " | ".join(GATES)
+        sys.exit(f"usage: bench_gate.py <{names}> <path>")
+    GATES[argv[0]](argv[1])
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
