@@ -143,6 +143,40 @@ fn write_bench_pr(path: &str) {
     overlap.insert("buckets".into(), Json::Num(buckets as f64));
     overlap.insert("bucketed_ns".into(), Json::Obj(bucketed));
     overlap.insert("serial_ns".into(), Json::Obj(serial));
+    // schema 5: the intra-rank compute term — closed-form GEMM
+    // throughput (MFLOP/s, integer) per thread count from the cluster
+    // preset's Amdahl model, plus the modeled GEMM wall time (ns) for
+    // the microbench shapes. "small" sits below the engine's inline
+    // cutoff, so its time is thread-invariant by construction — the
+    // model mirrors the real kernels' serial fallback. Measured
+    // per-kernel GFLOP/s live in the uncommitted runtime_microbench
+    // JSON; the CI compute gate asserts t4 > t1 MFLOP/s here.
+    let mut mflops: BTreeMap<String, Json> = BTreeMap::new();
+    for t in [1usize, 2, 4, 8] {
+        mflops.insert(format!("t{t}"), Json::Num(
+            (cost.gemm_gflops(t) * 1e3).round()));
+    }
+    let gemm_shapes: &[(&str, usize, usize, usize)] = &[
+        ("small", 16, 64, 32),
+        ("medium", 64, 256, 64),
+        ("large", 100, 480, 64),
+    ];
+    let mut gemm_ns: BTreeMap<String, Json> = BTreeMap::new();
+    for &(tag, m, k, n) in gemm_shapes {
+        let mut by_t: BTreeMap<String, Json> = BTreeMap::new();
+        for t in [1usize, 2, 4, 8] {
+            by_t.insert(format!("t{t}"), Json::Num(
+                (cost.gemm_time(m, k, n, t) * 1e9).round()));
+        }
+        gemm_ns.insert(tag.into(), Json::Obj(by_t));
+    }
+    let mut compute: BTreeMap<String, Json> = BTreeMap::new();
+    compute.insert("base_mflops".into(), Json::Num(
+        (cost.gemm_base_gflops * 1e3).round()));
+    compute.insert("parallel_frac_ppm".into(), Json::Num(
+        (cost.gemm_parallel_frac * 1e6).round()));
+    compute.insert("mflops".into(), Json::Obj(mflops));
+    compute.insert("gemm_time_ns".into(), Json::Obj(gemm_ns));
     // schema 4: the planner's decision surface on the same cluster
     // preset — per world size, every (topology x codec) candidate's
     // predicted round time (ns) and the chosen key, plus the link
@@ -183,11 +217,12 @@ fn write_bench_pr(path: &str) {
     top.insert("bench".into(), Json::Str("bench_pr".into()));
     top.insert("bytes_per_round".into(), Json::Obj(bytes));
     top.insert("collective_ns".into(), Json::Obj(collective));
+    top.insert("compute".into(), Json::Obj(compute));
     top.insert("overlap".into(), Json::Obj(overlap));
     top.insert("params".into(), Json::Num(n_params as f64));
     top.insert("planner".into(), Json::Obj(planner_block));
     top.insert("ranks".into(), Json::Num(ranks as f64));
-    top.insert("schema".into(), Json::Num(4.0));
+    top.insert("schema".into(), Json::Num(5.0));
     // schema 3: the serving-path block (closed-form like collective_ns;
     // the formula lives in mpi_learn::serving so benches/serve_bench.rs
     // emits the identical numbers).

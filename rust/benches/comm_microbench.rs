@@ -185,6 +185,48 @@ fn main() {
               {:.1}% — the CI gate requires < 60% and < 25%.",
              100.0 * ratio_fp16, 100.0 * ratio_topk10);
 
+    // ---- wire encoding: fresh allocation vs reused buffer ----
+    // The TCP transport keeps a per-connection frame-buffer pool and
+    // encodes every steady-state send with `encode_into` (exact-sized
+    // by `Payload::nbytes`, zero reallocation); this prices what that
+    // pool removes relative to a fresh `encode` Vec per message.
+    let mut rows = Vec::new();
+    let mut encode_delta: BTreeMap<String, f64> = BTreeMap::new();
+    for &(floats, tag) in sizes {
+        let reps = if ci { 200 } else { 2_000 };
+        let payload =
+            mpi::Payload::floats(7, vec![0.125f32; floats]);
+        let fresh = mpi_learn::util::bench::measure(
+            "encode", 10, reps,
+            || {
+                std::hint::black_box(
+                    mpi::message::encode(Tag::Gradients, &payload));
+            });
+        let mut buf = Vec::new();
+        let reused = mpi_learn::util::bench::measure(
+            "encode_into", 10, reps,
+            || {
+                mpi::message::encode_into(&mut buf, Tag::Gradients,
+                                          &payload);
+                std::hint::black_box(&buf);
+            });
+        let saved =
+            100.0 * (fresh.mean_s - reused.mean_s) / fresh.mean_s;
+        encode_delta.insert(tag.to_string(), saved);
+        rows.push(vec![
+            format!("{tag} ({floats} f32)"),
+            fmt_secs(fresh.mean_s),
+            fmt_secs(reused.mean_s),
+            format!("{saved:.1}%"),
+        ]);
+    }
+    print_table(
+        "wire encoding: fresh Vec per message vs pooled reused buffer",
+        &["payload", "encode (alloc)", "encode_into (reuse)",
+          "reuse saves"],
+        &rows,
+    );
+
     let summary: BTreeMap<String, Json> = [
         ("bench".to_string(),
          Json::Str("comm_microbench".to_string())),
@@ -198,6 +240,11 @@ fn main() {
              .collect())),
         ("ratio_fp16".to_string(), Json::Num(ratio_fp16)),
         ("ratio_topk10".to_string(), Json::Num(ratio_topk10)),
+        ("encode_reuse_saved_pct".to_string(),
+         Json::Obj(encode_delta
+             .iter()
+             .map(|(k, v)| (k.clone(), Json::Num(*v)))
+             .collect())),
     ]
     .into_iter()
     .collect();

@@ -5,14 +5,34 @@
 //! feed EXPERIMENTS.md §Calibration. Run with:
 //!
 //!     cargo bench --bench runtime_microbench
+//!     cargo bench --bench runtime_microbench -- --ci \
+//!         --json runs/bench/runtime_microbench.json
+//!
+//! `--json` also records the compute-kernel GFLOP/s sweep (kernel x
+//! shape x threads), which `tools/bench_gate.py compute` checks for
+//! thread-pool speedup on the large shape.
+
+use std::collections::BTreeMap;
 
 use mpi_learn::optim::OptimizerConfig;
-use mpi_learn::runtime::Session;
+use mpi_learn::runtime::{kernel_gflops, Session};
 use mpi_learn::tensor::ParamSet;
-use mpi_learn::util::bench::{fmt_secs, measure, print_table, write_csv};
+use mpi_learn::util::bench::{fmt_secs, measure, print_table, write_csv,
+                             write_json};
+use mpi_learn::util::cli::Args;
+use mpi_learn::util::json::Json;
 use mpi_learn::util::rng::Rng;
 
 fn main() {
+    let args = Args::from_env();
+    let ci = args.bool("ci");
+    let json_path =
+        args.str("json", "runs/bench/runtime_microbench.json");
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+
     let session = match Session::open_default() {
         Ok(s) => s,
         Err(e) => {
@@ -157,6 +177,56 @@ fn main() {
         &rows,
     );
 
-    println!("\nThese means parameterize CostModel::{{t_grad_*, t_update}} \
-              for the Fig 3/4/Table I sweeps.");
+    // ---- compute kernels: GFLOP/s per kernel x shape x threads ----
+    // The lane-chunked pooled GEMMs (DESIGN.md §Compute kernels) are
+    // bitwise-identical at any thread count, so the only question the
+    // bench answers is throughput. "small" sits below the inline
+    // cutoff (the pool is bypassed, so all thread counts tie); "large"
+    // is the calibration probe's shape, where threads=4 must beat
+    // threads=1 — the `bench_gate.py compute` check.
+    let shapes: &[(&str, usize, usize, usize)] = &[
+        ("small", 16, 64, 32),
+        ("medium", 64, 256, 64),
+        ("large", 100, 480, 64),
+    ];
+    let threads = [1usize, 2, 4];
+    let reps = if ci { 3 } else { 8 };
+    let mut rows = Vec::new();
+    let mut gflops: BTreeMap<String, Json> = BTreeMap::new();
+    for kernel in ["nn", "tn", "nt"] {
+        for &(tag, m, k, n) in shapes {
+            let mut row = vec![kernel.to_string(),
+                               format!("{tag} ({m}x{k}x{n})")];
+            let mut by_t = Vec::new();
+            for &t in &threads {
+                let g = kernel_gflops(kernel, t, m, k, n, reps);
+                gflops.insert(format!("{kernel}/{tag}/t{t}"),
+                              Json::Num(g));
+                row.push(format!("{g:.2}"));
+                by_t.push(g);
+            }
+            row.push(format!("{:.2}x", by_t[2] / by_t[0]));
+            rows.push(row);
+        }
+    }
+    print_table(
+        "compute kernel throughput (GFLOP/s, pooled lane-chunked GEMMs)",
+        &["kernel", "shape (m x k x n)", "t=1", "t=2", "t=4",
+          "t4/t1"],
+        &rows,
+    );
+
+    let summary: BTreeMap<String, Json> = [
+        ("bench".to_string(),
+         Json::Str("runtime_microbench".to_string())),
+        ("ci".to_string(), Json::Bool(ci)),
+        ("compute_gflops".to_string(), Json::Obj(gflops)),
+    ]
+    .into_iter()
+    .collect();
+    write_json(&json_path, &Json::Obj(summary)).unwrap();
+    println!("wrote {json_path}");
+
+    println!("\nThese means parameterize CostModel::{{t_grad_*, t_update, \
+              gemm_*}} for the Fig 3/4/Table I sweeps.");
 }

@@ -86,6 +86,7 @@ fn main() {
             base_port: 47950,
             poll_ms: 10_000,
             replica_timeout_ms: 10_000,
+            threads: 1,
         };
         let mut handle = serving::start(&cfg).unwrap();
         let addr = handle.addr();
@@ -171,7 +172,13 @@ fn main() {
                 std::process::exit(2);
             }
         };
-        top.insert("schema".into(), Json::Num(3.0));
+        // Never downgrade the file's schema: allreduce_scaling owns
+        // the version stamp (currently 5); merging the serving block
+        // into an already-stamped file must leave it alone, or the
+        // staleness gate would flag a phantom diff.
+        if top.get("schema").is_none() {
+            top.insert("schema".into(), Json::Num(3.0));
+        }
         top.insert("serving".into(), serving::bench_block());
         write_json(&path, &Json::Obj(top)).unwrap();
         println!("merged serving block into {path}");

@@ -93,6 +93,12 @@ pub struct Algo {
     /// chosen plan's prediction + trigger knobs the worker-side online
     /// re-tuner runs against. `None` = re-tuner off.
     pub retune: Option<RetuneConfig>,
+    /// Compute threads per rank for the native engine's kernel pool
+    /// (GEMMs, gate activations, optimizer steps, fp16 codec). `0`
+    /// (default) = auto-detect from `available_parallelism`; `1` = the
+    /// serial path. Any value trains bitwise-identically (DESIGN.md
+    /// §Compute kernels).
+    pub threads: usize,
 }
 
 impl Default for Algo {
@@ -115,6 +121,7 @@ impl Default for Algo {
             retune_factor: 2.0,
             retune_window: 50,
             retune: None,
+            threads: 0,
         }
     }
 }
@@ -202,6 +209,9 @@ impl Algo {
                     .into());
             }
             algo.retune_window = w as u64;
+        }
+        if let Some(t) = j.get("threads").and_then(|v| v.as_usize()) {
+            algo.threads = t; // 0 = auto-detect
         }
         match j.get("mode").and_then(|v| v.as_str()).unwrap_or("downpour") {
             "downpour" => {
@@ -309,6 +319,16 @@ mod tests {
         assert!(Algo::from_json(&j).unwrap().buckets);
         let j = Json::parse(r#"{"mode": "allreduce"}"#).unwrap();
         assert!(!Algo::from_json(&j).unwrap().buckets);
+    }
+
+    #[test]
+    fn json_threads() {
+        assert_eq!(Algo::default().threads, 0); // 0 = auto-detect
+        let j = Json::parse(
+            r#"{"mode": "allreduce", "threads": 4}"#).unwrap();
+        assert_eq!(Algo::from_json(&j).unwrap().threads, 4);
+        let j = Json::parse(r#"{"mode": "allreduce"}"#).unwrap();
+        assert_eq!(Algo::from_json(&j).unwrap().threads, 0);
     }
 
     #[test]

@@ -31,6 +31,10 @@
 //!                               // resume (DESIGN.md §Elasticity,
 //!                               // docs/RUNBOOK.md; also inside "algo")
 //!   "elastic_timeout_ms": 30000, // suspicion + agreement window
+//!   "threads": 0,               // compute threads per rank for the
+//!                               // native kernel pool; 0 = auto-detect
+//!                               // (bitwise-identical at any value;
+//!                               // also accepted inside "algo")
 //!   "callbacks": [              // observer-side training callbacks
 //!     {"kind": "early_stopping", "patience": 3, "min_delta": 0.0},
 //!     {"kind": "checkpoint", "dir": "runs/ckpt", "every": 100,
@@ -166,6 +170,13 @@ impl JobConfig {
                 "\"elastic\" requires \"mode\": \"allreduce\" (PS \
                  masters tolerate departing workers natively)"
                     .into()));
+        }
+
+        // compute threads mirror buckets: top level or inside "algo".
+        // 0 = auto-detect; any value trains bitwise-identically, so
+        // there is no mode restriction.
+        if let Some(t) = j.get("threads").and_then(|v| v.as_usize()) {
+            algo.threads = t;
         }
 
         // "auto" mirrors elastic: top level or inside "algo", only
@@ -568,6 +579,29 @@ mod tests {
             other => panic!("expected Invalid, got {:?}",
                             other.map(|_| ())),
         }
+    }
+
+    #[test]
+    fn threads_config() {
+        // top-level key
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "threads": 4}"#).unwrap();
+        assert_eq!(job.train.algo.threads, 4);
+        // inside "algo"
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp",
+                "algo": {"mode": "allreduce", "threads": 2}}"#)
+            .unwrap();
+        assert_eq!(job.train.algo.threads, 2);
+        // top level wins over "algo"
+        let job = JobConfig::from_json_text(
+            r#"{"model": "mlp", "threads": 1,
+                "algo": {"threads": 8}}"#).unwrap();
+        assert_eq!(job.train.algo.threads, 1);
+        // default: 0 = auto-detect
+        let job = JobConfig::from_json_text(r#"{"model": "mlp"}"#)
+            .unwrap();
+        assert_eq!(job.train.algo.threads, 0);
     }
 
     #[test]

@@ -225,7 +225,9 @@ fn run_role(plan: &WorldPlan, cfg: &TrainConfig,
                 children: plan.master_children(),
                 observer,
             };
-            let outcome = Master::new(comm, ctx, init).run();
+            let outcome = Master::new(comm, ctx, init)
+                .with_pool(exes.thread_pool())
+                .run();
             Ok(Some((outcome.history, outcome.weights)))
         }
         RankRole::GroupMaster { group } => {
@@ -485,6 +487,11 @@ pub fn train_with_callbacks(session: &Session, cfg: &TrainConfig,
     -> Result<TrainResult, TrainError> {
     crate::util::logging::init();
     let exes = session.executables(&cfg.builder.variant_key())?;
+    // Size the compute pool before anything touches the kernels —
+    // in particular before the auto phase's measure_costs, so the
+    // calibrated compute term reflects the pool the run will use.
+    // In-process ranks share the executables, so one call covers all.
+    exes.set_threads(cfg.algo.threads);
     // Auto-tuned runs probe + sweep FIRST, then train through the same
     // plan path as a hand-flagged config (DESIGN.md §Autotuning).
     let tuned;
@@ -548,6 +555,7 @@ pub fn run_rank(session: &Session, cfg: &TrainConfig, data: &Data,
     }
     let plan = WorldPlan::new(cfg).map_err(TrainError::Config)?;
     let exes = session.executables(&cfg.builder.variant_key())?;
+    exes.set_threads(cfg.algo.threads);
     preflight(data)?;
     let t0 = Instant::now();
     let comm = crate::mpi::transport::tcp::endpoint(
@@ -571,6 +579,7 @@ pub fn train_direct(session: &Session, cfg: &TrainConfig, data: &Data)
     -> Result<TrainResult, TrainError> {
     crate::util::logging::init();
     let exes = session.executables(&cfg.builder.variant_key())?;
+    exes.set_threads(cfg.algo.threads);
     preflight(data)?;
     let ds = data.worker_dataset(0, 1)?;
     let val = data.validation_dataset()?;

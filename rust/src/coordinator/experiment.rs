@@ -109,6 +109,24 @@ impl Experiment {
         self
     }
 
+    /// Compute threads per rank for the native kernel pool (GEMMs,
+    /// gate activations, optimizer steps, fp16 codec). `0` (the
+    /// default) auto-detects from `available_parallelism`; `1` pins
+    /// the serial path. Training results are bitwise-identical at any
+    /// value — the pool only partitions index ranges, never the
+    /// accumulation order (DESIGN.md §Compute kernels).
+    ///
+    /// ```
+    /// use mpi_learn::coordinator::Experiment;
+    ///
+    /// let exp = Experiment::new("mlp").workers(4).threads(2);
+    /// assert_eq!(exp.config().algo.threads, 2);
+    /// ```
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.algo.threads = n;
+        self
+    }
+
     // --- distributed algorithm -----------------------------------
 
     /// Full [`Algo`] override — the escape hatch for variants the
@@ -467,6 +485,14 @@ mod tests {
         assert!(exp.config().algo.elastic);
         assert_eq!(exp.config().algo.elastic_timeout_ms, 30_000);
         assert!(!Experiment::new("mlp").config().algo.elastic);
+    }
+
+    #[test]
+    fn threads_knob() {
+        let exp = Experiment::new("mlp").threads(4);
+        assert_eq!(exp.config().algo.threads, 4);
+        // default: 0 = auto-detect
+        assert_eq!(Experiment::new("mlp").config().algo.threads, 0);
     }
 
     #[test]

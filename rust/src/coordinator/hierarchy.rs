@@ -150,9 +150,11 @@ impl<'a> GroupMaster<'a> {
 
         let mut optimizer =
             self.algo.build_master_optimizer(weights.num_params());
+        optimizer.set_pool(self.exes.thread_pool());
         // Upward-sync codec state (AggGradients is a gradient hop:
         // lossy codecs apply, with error feedback across syncs).
         let mut compressor = Compressor::new(self.algo.compression);
+        compressor.set_pool(self.exes.thread_pool());
         let mut done: BTreeSet<Rank> = BTreeSet::new();
         let mut updates_since_sync = 0u64;
         let mut update_count = 0u64;

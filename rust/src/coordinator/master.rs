@@ -109,6 +109,17 @@ impl<'a> Master<'a> {
         }
     }
 
+    /// Partition the optimizer's update loop over the compute pool.
+    /// Updates stay bitwise-identical — the pool only splits the index
+    /// range, never the per-element operation order.
+    pub fn with_pool(
+        mut self,
+        pool: std::sync::Arc<crate::util::threadpool::ThreadPool>,
+    ) -> Self {
+        self.optimizer.set_pool(pool);
+        self
+    }
+
     fn active_children(&self) -> usize {
         self.ctx.children.len() - self.done.len()
     }

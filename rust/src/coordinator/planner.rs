@@ -468,7 +468,10 @@ mod tests {
         use crate::simulator::{Calibration, LinkCalibration};
         let cal = Calibration { t_grad: 8.0e-3, batch: 100,
                                 t_update: 3.0e-5, t_eval_batch: 1.0e-3,
-                                grad_rel_spread: 0.02 };
+                                grad_rel_spread: 0.02,
+                                gemm_gflops_t1: 3.0,
+                                gemm_gflops_pool: 9.0,
+                                pool_threads: 4 };
         let links = LinkCalibration {
             intra: LinkCost { latency_s: 2.5e-6,
                               bandwidth_bytes_per_s: 1.8e10,

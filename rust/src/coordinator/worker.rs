@@ -176,6 +176,7 @@ impl<'a> Worker<'a> {
         // persists across batches AND epochs (dropped mass is delayed,
         // never lost).
         let mut compressor = Compressor::new(self.algo.compression);
+        compressor.set_pool(self.exes.thread_pool());
         for epoch in 0..self.algo.epochs {
             let mut rng = self.rng.fork(epoch as u64);
             let mut failure: Option<WorkerError> = None;
@@ -250,6 +251,7 @@ impl<'a> Worker<'a> {
         -> Result<WorkerReport, WorkerError> {
         let batch = self.algo.batch_size;
         let mut opt = worker_opt.build(params.num_params());
+        opt.set_pool(self.exes.thread_pool());
         let mut report = WorkerReport {
             rank: self.comm.rank(),
             ..Default::default()
@@ -557,6 +559,10 @@ impl<'a> RingWorker<'a> {
         // exempt from lossy dropping.
         col.set_codec(self.algo.compression);
         col.set_exact_tail(2);
+        // The compute pool behind the model's kernels also partitions
+        // the codec pack/unpack and reduce loops — bitwise-identical,
+        // the pool never changes accumulation order.
+        col.set_pool(self.exes.thread_pool());
         // Grouped topology (hierarchical all-reduce); sum collectives
         // dispatch to ring → tree → ring, control traffic stays flat.
         col.set_groups(self.groups.take());
@@ -581,6 +587,7 @@ impl<'a> RingWorker<'a> {
         };
         let n_params = params.num_params();
         let mut opt = self.algo.build_master_optimizer(n_params);
+        opt.set_pool(self.exes.thread_pool());
         let lr_spec = self.lr;
         let mut history = History::default();
         let mut grad_timer = Stopwatch::new();
@@ -613,6 +620,7 @@ impl<'a> RingWorker<'a> {
                 &mut params, 0, batch, resharder, &mut owned_data,
                 fallback)?;
             opt = self.algo.build_master_optimizer(n_params);
+            opt.set_pool(self.exes.thread_pool());
             update_count = rs.update_count;
             epoch = rs.epoch;
             rounds = rs.rounds;
@@ -938,6 +946,7 @@ impl<'a> RingWorker<'a> {
                                 // EVERY member — replica-identical
                                 opt = algo
                                     .build_master_optimizer(n_params);
+                                opt.set_pool(exes.thread_pool());
                                 update_count = rs.update_count;
                                 epoch = rs.epoch;
                                 rounds = rs.rounds;

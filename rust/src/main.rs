@@ -241,6 +241,11 @@ const TRAIN_FLAGS: &[Flag] = &[
                   exceeds factor x the planner's prediction" },
     Flag { name: "retune-window", value: "<n>", default: "50",
            help: "auto: rounds per re-tuner measurement window" },
+    Flag { name: "threads", value: "<n>", default: "0",
+           help: "compute threads per rank for the native kernel pool \
+                  (GEMMs, activations, optimizer steps, fp16 codec); \
+                  0 = auto-detect; results are bitwise-identical at \
+                  any value" },
     Flag { name: "optimizer", value: "<o>", default: "momentum",
            help: "sgd | momentum | adam | rmsprop | adadelta" },
     Flag { name: "lr", value: "<f>", default: "0.05",
@@ -333,6 +338,10 @@ const SERVE_FLAGS: &[Flag] = &[
            help: "checkpoint dir poll interval" },
     Flag { name: "replica-timeout-ms", value: "<ms>", default: "2000",
            help: "per-batch replica deadline before mark-dead + retry" },
+    Flag { name: "threads", value: "<n>", default: "0",
+           help: "compute threads for the kernel pool behind each \
+                  forward pass (0 = auto-detect; predictions are \
+                  bitwise-identical at any value)" },
     Flag { name: "help", value: "", default: "",
            help: "print this usage text" },
 ];
@@ -395,6 +404,8 @@ fn cmd_serve(args: &Args) -> i32 {
             replica_timeout_ms: args
                 .u64("replica-timeout-ms", defaults.replica_timeout_ms)
                 .unwrap_or(defaults.replica_timeout_ms),
+            threads: args.usize("threads", defaults.threads)
+                .unwrap_or(defaults.threads),
         };
         if let Err(e) = args.finish() {
             return fail(e);
@@ -513,6 +524,7 @@ fn parse_algo(args: &Args) -> Result<Algo, String> {
     if algo.retune_window == 0 {
         return Err("--retune-window must be >= 1 round".into());
     }
+    algo.threads = args.usize("threads", 0).map_err(|e| e.to_string())?;
     algo.mode = match args.str("mode", "downpour").as_str() {
         "downpour" => Mode::Downpour { sync: args.bool("sync") },
         "easgd" => Mode::Easgd {

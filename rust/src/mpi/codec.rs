@@ -23,7 +23,11 @@
 //! one owner-compressed payload verbatim, so `Mode::AllReduce` keeps its
 //! bitwise-identical-weights invariant under every codec.
 
+use std::sync::Arc;
+
 use crate::mpi::message::Payload;
+use crate::runtime::kernels::par_blocks;
+use crate::util::threadpool::{SharedMut, ThreadPool};
 
 // ---------------------------------------------------------------------------
 // IEEE 754 binary16 conversion (round-to-nearest-even)
@@ -296,13 +300,33 @@ impl PackedF32 {
     /// Decode into `out` (out.len() must equal `self.len()`); absent
     /// sparse elements decode to 0.0.
     pub fn unpack_into(&self, out: &mut [f32]) {
+        self.unpack_into_pooled(out, None);
+    }
+
+    /// [`PackedF32::unpack_into`] with the dense f16 loop partitioned
+    /// over `pool`. Each element decodes independently, so the result
+    /// is bitwise-identical at any thread count; sparse payloads stay
+    /// serial (scattered writes).
+    pub fn unpack_into_pooled(&self, out: &mut [f32],
+                              pool: Option<&ThreadPool>) {
         assert_eq!(out.len(), self.len(), "packed length mismatch");
         match self {
-            PackedF32::F16(bits) => {
-                for (dst, &b) in out.iter_mut().zip(bits) {
-                    *dst = f16_bits_to_f32(b);
+            PackedF32::F16(bits) => match pool {
+                Some(pool) => {
+                    let ov = SharedMut::new(out);
+                    par_blocks(pool, bits.len(), |r| {
+                        let o = unsafe { ov.range(r.clone()) };
+                        for (dst, &b) in o.iter_mut().zip(&bits[r]) {
+                            *dst = f16_bits_to_f32(b);
+                        }
+                    });
                 }
-            }
+                None => {
+                    for (dst, &b) in out.iter_mut().zip(bits) {
+                        *dst = f16_bits_to_f32(b);
+                    }
+                }
+            },
             PackedF32::Sparse { idx, val, .. } => {
                 out.fill(0.0);
                 for (&i, &v) in idx.iter().zip(val) {
@@ -315,13 +339,32 @@ impl PackedF32 {
     /// Sum-accumulate the decoded values into `out` (the ring's reduce
     /// step; absent sparse elements contribute nothing).
     pub fn add_into(&self, out: &mut [f32]) {
+        self.add_into_pooled(out, None);
+    }
+
+    /// [`PackedF32::add_into`] with the dense f16 loop partitioned over
+    /// `pool` (same bitwise contract as
+    /// [`PackedF32::unpack_into_pooled`]).
+    pub fn add_into_pooled(&self, out: &mut [f32],
+                           pool: Option<&ThreadPool>) {
         assert_eq!(out.len(), self.len(), "packed length mismatch");
         match self {
-            PackedF32::F16(bits) => {
-                for (dst, &b) in out.iter_mut().zip(bits) {
-                    *dst += f16_bits_to_f32(b);
+            PackedF32::F16(bits) => match pool {
+                Some(pool) => {
+                    let ov = SharedMut::new(out);
+                    par_blocks(pool, bits.len(), |r| {
+                        let o = unsafe { ov.range(r.clone()) };
+                        for (dst, &b) in o.iter_mut().zip(&bits[r]) {
+                            *dst += f16_bits_to_f32(b);
+                        }
+                    });
                 }
-            }
+                None => {
+                    for (dst, &b) in out.iter_mut().zip(bits) {
+                        *dst += f16_bits_to_f32(b);
+                    }
+                }
+            },
             PackedF32::Sparse { idx, val, .. } => {
                 for (&i, &v) in idx.iter().zip(val) {
                     out[i as usize] += v;
@@ -342,15 +385,25 @@ impl PackedF32 {
 pub struct Compressor {
     codec: Codec,
     residual: Vec<f32>,
+    /// Partition the fp16 quantize+residual loop over this pool. Every
+    /// element's op sequence is unchanged, so packed bytes and residual
+    /// are bitwise-identical at any thread count. Top-k stays serial —
+    /// its global magnitude selection is one reduction.
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl Compressor {
     pub fn new(codec: Codec) -> Self {
-        Self { codec, residual: Vec::new() }
+        Self { codec, residual: Vec::new(), pool: None }
     }
 
     pub fn codec(&self) -> Codec {
         self.codec
+    }
+
+    /// Run the fp16 pack loop on `pool` (see the field docs).
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = Some(pool);
     }
 
     /// Compress a whole buffer with error feedback. `None` means "send
@@ -375,6 +428,27 @@ impl Compressor {
             self.residual = vec![0.0; total];
         }
         let res = &mut self.residual[offset..offset + chunk.len()];
+        if let (Codec::Fp16, Some(pool)) = (self.codec, &self.pool) {
+            // Fused pooled fp16 path: per element, acc = chunk + res,
+            // quantize, carry the error — the exact op sequence of the
+            // generic path below, just partitioned into disjoint
+            // blocks.
+            let mut bits = vec![0u16; chunk.len()];
+            let bv = SharedMut::new(&mut bits);
+            let rv = SharedMut::new(res);
+            par_blocks(pool, chunk.len(), |r| {
+                let bs = unsafe { bv.range(r.clone()) };
+                let rs = unsafe { rv.range(r.clone()) };
+                for ((b, rr), &c) in
+                    bs.iter_mut().zip(rs.iter_mut()).zip(&chunk[r])
+                {
+                    let a = c + *rr;
+                    *b = f32_to_f16_bits(a);
+                    *rr = a - f16_bits_to_f32(*b);
+                }
+            });
+            return Some(PackedF32::F16(bits));
+        }
         let acc: Vec<f32> =
             chunk.iter().zip(res.iter()).map(|(c, r)| c + r).collect();
         let packed = self
@@ -640,6 +714,41 @@ mod tests {
         assert_eq!(c.unpack(), vec![0.0, 0.1]);
         let d = comp.compress_window(&[0.0, 0.0], 2, 4, 0).unwrap();
         assert_eq!(d.unpack(), vec![0.2, 0.0]);
+    }
+
+    /// The pooled fp16 pack/unpack paths must be bitwise-identical to
+    /// the serial ones — packed bits, residual, and decoded floats.
+    #[test]
+    fn pooled_fp16_paths_are_bitwise_identical() {
+        let n = 9_137usize;
+        let data: Vec<f32> = (0..n)
+            .map(|i| ((i % 251) as f32 - 125.0) * 1.7e-3
+                 + ((i % 7) as f32) * 1e-7)
+            .collect();
+        for threads in [2usize, 4] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            let mut serial = Compressor::new(Codec::Fp16);
+            let mut pooled = Compressor::new(Codec::Fp16);
+            pooled.set_pool(Arc::clone(&pool));
+            for round in 0..3 {
+                let ps = serial.compress(&data).unwrap();
+                let pp = pooled.compress(&data).unwrap();
+                assert_eq!(ps, pp, "round {round} at {threads} threads");
+                let mut outs = vec![0.0f32; n];
+                let mut outp = vec![0.0f32; n];
+                ps.unpack_into(&mut outs);
+                pp.unpack_into_pooled(&mut outp, Some(&pool));
+                assert!(outs.iter().zip(&outp)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()));
+                let mut adds = outs.clone();
+                let mut addp = outs.clone();
+                ps.add_into(&mut adds);
+                pp.add_into_pooled(&mut addp, Some(&pool));
+                assert!(adds.iter().zip(&addp)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+            assert_eq!(serial.max_residual(), pooled.max_residual());
+        }
     }
 
     #[test]

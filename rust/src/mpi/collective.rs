@@ -70,12 +70,14 @@
 //! *across ranks* but not to the monolith). See DESIGN.md §Layer DAG &
 //! bucketed overlap.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::mpi::codec::{Codec, Compressor};
 use crate::mpi::comm::{Comm, CommError};
 use crate::mpi::message::{BucketPhase, Envelope, Payload, Rank, Tag};
 use crate::mpi::tags;
+use crate::util::threadpool::ThreadPool;
 
 /// Default bound on waiting for a ring neighbor. A peer that dies
 /// mid-collective can never be detected by disconnect alone (other
@@ -194,6 +196,8 @@ pub struct Collective<'a> {
     /// Error-feedback state for compressed hops (one residual slot per
     /// element index; see the module docs).
     compressor: Compressor,
+    /// Compute pool for the fp16 pack/unpack hot loops (None = serial).
+    pool: Option<Arc<ThreadPool>>,
     /// Trailing elements exempt from lossy dropping (stop flags, loss).
     exact_tail: usize,
     /// Grouped topology for sum all-reduces (None = flat ring).
@@ -266,6 +270,7 @@ impl<'a> Collective<'a> {
             recv_timeout: DEFAULT_RECV_TIMEOUT,
             codec: Codec::Fp32,
             compressor: Compressor::new(Codec::Fp32),
+            pool: None,
             exact_tail: 0,
             groups: None,
             pending: Vec::new(),
@@ -286,6 +291,17 @@ impl<'a> Collective<'a> {
     pub fn set_codec(&mut self, codec: Codec) {
         self.codec = codec;
         self.compressor = Compressor::new(codec);
+        if let Some(pool) = &self.pool {
+            self.compressor.set_pool(Arc::clone(pool));
+        }
+    }
+
+    /// Run the fp16 pack/unpack hot loops on the rank's compute pool
+    /// (bitwise-identical at any thread count; see
+    /// [`Compressor::set_pool`]).
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.compressor.set_pool(Arc::clone(&pool));
+        self.pool = Some(pool);
     }
 
     pub fn codec(&self) -> Codec {
@@ -367,6 +383,9 @@ impl<'a> Collective<'a> {
         self.members = members;
         self.pending.clear();
         self.compressor = Compressor::new(self.codec);
+        if let Some(pool) = &self.pool {
+            self.compressor.set_pool(Arc::clone(pool));
+        }
         self.stash.retain(|e| {
             let stale_gen = Self::gen_of(&e.payload)
                 .map_or(false, |g| g < epoch);
@@ -787,7 +806,8 @@ impl<'a> Collective<'a> {
             }
             let (r0, r1) = Self::window_chunk(total, n, recv_idx, w0, w1);
             let payload = self.recv_chunk(tag, prev, r1 - r0)?;
-            Self::add_payload(&payload, &mut data[r0..r1]);
+            Self::add_payload(&payload, &mut data[r0..r1],
+                              self.pool.as_deref());
         }
 
         // Phase 2 — all-gather: the chunk owner builds its payload ONCE
@@ -809,7 +829,8 @@ impl<'a> Collective<'a> {
             self.comm.send(next, tag, payload)?;
             let (r0, r1) = Self::window_chunk(total, n, recv_idx, w0, w1);
             let payload = self.recv_chunk(tag, prev, r1 - r0)?;
-            Self::set_payload(&payload, &mut data[r0..r1]);
+            Self::set_payload(&payload, &mut data[r0..r1],
+                                  self.pool.as_deref());
             carry = Some(payload);
         }
         Ok(())
@@ -840,10 +861,14 @@ impl<'a> Collective<'a> {
         }
     }
 
-    /// Sum-accumulate a received raw-or-packed chunk into `dst`.
-    fn add_payload(payload: &Payload, dst: &mut [f32]) {
+    /// Sum-accumulate a received raw-or-packed chunk into `dst` (the
+    /// fp16 decode loop runs on `pool` when present).
+    fn add_payload(payload: &Payload, dst: &mut [f32],
+                   pool: Option<&ThreadPool>) {
         match payload {
-            Payload::Packed { data, .. } => data.add_into(dst),
+            Payload::Packed { data, .. } => {
+                data.add_into_pooled(dst, pool)
+            }
             Payload::Floats { data, .. } => {
                 for (d, &s) in dst.iter_mut().zip(data.iter()) {
                     *d += s;
@@ -855,9 +880,12 @@ impl<'a> Collective<'a> {
 
     /// Overwrite `dst` with a received raw-or-packed chunk's decoded
     /// values (adoption hops: gather, broadcasts).
-    fn set_payload(payload: &Payload, dst: &mut [f32]) {
+    fn set_payload(payload: &Payload, dst: &mut [f32],
+                   pool: Option<&ThreadPool>) {
         match payload {
-            Payload::Packed { data, .. } => data.unpack_into(dst),
+            Payload::Packed { data, .. } => {
+                data.unpack_into_pooled(dst, pool)
+            }
             Payload::Floats { data, .. } => dst.copy_from_slice(data),
             _ => unreachable!("recv_chunk validates the kind"),
         }
@@ -899,7 +927,8 @@ impl<'a> Collective<'a> {
             if c < members.len() {
                 let payload = self.recv_chunk_stashing(
                     tag, members[c], w1 - w0)?;
-                Self::add_payload(&payload, &mut data[w0..w1]);
+                Self::add_payload(&payload, &mut data[w0..w1],
+                                  self.pool.as_deref());
             }
         }
         if pos > 0 {
@@ -926,7 +955,8 @@ impl<'a> Collective<'a> {
             let parent = members[(pos - 1) / 2];
             let payload =
                 self.recv_chunk_stashing(tag, parent, w1 - w0)?;
-            Self::set_payload(&payload, &mut data[w0..w1]);
+            Self::set_payload(&payload, &mut data[w0..w1],
+                              self.pool.as_deref());
             payload
         };
         for c in [2 * pos + 1, 2 * pos + 2] {
@@ -1023,7 +1053,8 @@ impl<'a> Collective<'a> {
                     Self::window_chunk(total, m, recv_idx, w0, w1);
                 let payload =
                     self.recv_chunk(hier.chunk, prev, r1 - r0)?;
-                Self::add_payload(&payload, &mut data[r0..r1]);
+                Self::add_payload(&payload, &mut data[r0..r1],
+                              self.pool.as_deref());
             }
             // Phase 2 — gather the scattered chunks onto the leader so
             // it holds the full group sum for the inter-group tree.
@@ -1036,7 +1067,8 @@ impl<'a> Collective<'a> {
                                            w1);
                     let payload = self.recv_chunk_stashing(
                         hier.gather, src, r1 - r0)?;
-                    Self::set_payload(&payload, &mut data[r0..r1]);
+                    Self::set_payload(&payload, &mut data[r0..r1],
+                                  self.pool.as_deref());
                 }
             } else {
                 let (s0, s1) =
@@ -1064,7 +1096,8 @@ impl<'a> Collective<'a> {
             // the ring predecessor and forward it verbatim.
             let payload = self.recv_chunk(hier.bcast, members[pos - 1],
                                           w1 - w0)?;
-            Self::set_payload(&payload, &mut data[w0..w1]);
+            Self::set_payload(&payload, &mut data[w0..w1],
+                              self.pool.as_deref());
             if pos + 1 < m {
                 self.comm.send(members[pos + 1], hier.bcast, payload)?;
             }

@@ -425,8 +425,29 @@ le_slice_io!(write_u32_slice, read_u32_slice, u32, 4);
 /// Encode (tag, payload) into a frame body (the TCP transport adds the
 /// outer [u32 src][u64 len] header).
 pub fn encode(tag: Tag, payload: &Payload) -> Vec<u8> {
-    use crate::mpi::codec::PackedF32;
     let mut out = Vec::with_capacity(payload.nbytes());
+    encode_into(&mut out, tag, payload);
+    out
+}
+
+/// [`encode`] into a caller-owned buffer: clears `out`, reserves the
+/// exact frame size ([`Payload::nbytes`] counts the 16-byte header
+/// too), then appends the frame. A pooled send buffer therefore
+/// reallocates only when a payload outgrows every previous one —
+/// steady-state training rounds encode with zero allocations (see
+/// `transport::tcp`'s frame-buffer pool).
+pub fn encode_into(out: &mut Vec<u8>, tag: Tag, payload: &Payload) {
+    out.clear();
+    out.reserve(payload.nbytes());
+    encode_append(out, tag, payload);
+}
+
+/// Append the frame body to `out` without clearing — the TCP transport
+/// prefixes its own `[u32 src][u64 body_len]` header in the same
+/// buffer, so one pooled `Vec` holds the whole wire frame.
+pub(crate) fn encode_append(out: &mut Vec<u8>, tag: Tag,
+                            payload: &Payload) {
+    use crate::mpi::codec::PackedF32;
     out.extend_from_slice(&tag.to_u32().to_le_bytes());
     out.extend_from_slice(&payload.kind().to_le_bytes());
     match payload {
@@ -478,7 +499,6 @@ pub fn encode(tag: Tag, payload: &Payload) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
 /// Decode the `Packed` kind's body (after step + loss).
@@ -763,6 +783,44 @@ mod tests {
                                 .unwrap()),
         ] {
             assert_eq!(encode(Tag::Ping, &p).len(), p.nbytes());
+        }
+    }
+
+    /// The encoder must size its buffer exactly up front: encoding may
+    /// never outgrow the initial capacity (a growth realloc in the hot
+    /// send path would defeat the transport's buffer pool), and
+    /// `encode_into` must reuse a warm buffer without reallocating.
+    #[test]
+    fn encode_never_outgrows_initial_capacity() {
+        use crate::mpi::codec::Codec;
+        let payloads = [
+            Payload::Empty,
+            Payload::floats(1, (0..501).map(|i| i as f32).collect()),
+            Payload::Stats(WorkerStats::default()),
+            Payload::grad(2, 0.5, vec![1.0; 333]),
+            Payload::packed(3, 0.25,
+                            Codec::Fp16.pack(&[0.5; 77]).unwrap()),
+            Payload::packed(4, 0.0,
+                            Codec::TopK { k: 0.1 }
+                                .pack(&vec![1.0; 90]).unwrap()),
+        ];
+        for p in &payloads {
+            let buf = encode(Tag::Gradients, p);
+            assert_eq!(buf.len(), p.nbytes());
+            assert_eq!(buf.capacity(), p.nbytes(),
+                       "encode grew past its initial capacity");
+        }
+        // warm reuse: once the buffer holds the largest frame's
+        // capacity, every further encode_into leaves it untouched
+        let max = payloads.iter().map(|p| p.nbytes()).max().unwrap();
+        let mut buf = Vec::with_capacity(max);
+        let cap0 = buf.capacity();
+        for p in payloads.iter().chain(payloads.iter().rev()) {
+            encode_into(&mut buf, Tag::Gradients, p);
+            assert_eq!(buf.len(), p.nbytes());
+            assert_eq!(buf, encode(Tag::Gradients, p));
+            assert_eq!(buf.capacity(), cap0,
+                       "warm encode_into reallocated");
         }
     }
 

@@ -27,6 +27,13 @@ use crate::mpi::message::{self, Envelope, Payload, Rank, Tag};
 /// re-attempted a write into a dead socket instead of failing fast.
 pub struct TcpSenders {
     streams: std::cell::RefCell<BTreeMap<Rank, Arc<Mutex<TcpStream>>>>,
+    /// Reusable wire-frame buffers (the send-side mirror of the
+    /// runtime's `Arena`): a steady-state round encodes header + body
+    /// into a warm `Vec<u8>` and reallocates only when a frame outgrows
+    /// every previous one. Before this pool, every send allocated the
+    /// encoded body AND a second frame Vec, then memcpy'd one into the
+    /// other.
+    frame_bufs: std::cell::RefCell<Vec<Vec<u8>>>,
 }
 
 impl TcpSenders {
@@ -41,13 +48,22 @@ impl TcpSenders {
             .get(&to)
             .cloned()
             .ok_or(CommError::SendFailed(to))?;
-        let body = message::encode(tag, payload);
-        let mut guard = stream.lock().expect("tcp stream poisoned");
-        let mut frame = Vec::with_capacity(12 + body.len());
+        let body_len = payload.nbytes();
+        let mut frame = self
+            .frame_bufs
+            .borrow_mut()
+            .pop()
+            .unwrap_or_default();
+        frame.clear();
+        frame.reserve(12 + body_len);
         frame.extend_from_slice(&(src as u32).to_le_bytes());
-        frame.extend_from_slice(&(body.len() as u64).to_le_bytes());
-        frame.extend_from_slice(&body);
-        if guard.write_all(&frame).is_err() {
+        frame.extend_from_slice(&(body_len as u64).to_le_bytes());
+        message::encode_append(&mut frame, tag, payload);
+        debug_assert_eq!(frame.len(), 12 + body_len);
+        let mut guard = stream.lock().expect("tcp stream poisoned");
+        let result = guard.write_all(&frame);
+        self.frame_bufs.borrow_mut().push(frame);
+        if result.is_err() {
             // the peer is gone: shut the socket down and drop it from
             // the map so the connection does not linger half-open
             let _ = guard.shutdown(std::net::Shutdown::Both);
@@ -161,6 +177,7 @@ pub fn endpoint(rank: Rank, n: usize, base_port: u16)
         n,
         Sender::Tcp(TcpSenders {
             streams: std::cell::RefCell::new(streams),
+            frame_bufs: std::cell::RefCell::new(Vec::new()),
         }),
         queue_rx,
     ))

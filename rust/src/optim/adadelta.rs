@@ -1,6 +1,10 @@
 //! AdaDelta (Zeiler) — no global learning rate.
 
+use std::sync::Arc;
+
 use super::Optimizer;
+use crate::runtime::kernels::par_blocks;
+use crate::util::threadpool::{SharedMut, ThreadPool};
 
 pub struct AdaDelta {
     rho: f32,
@@ -8,12 +12,13 @@ pub struct AdaDelta {
     scale: f32,
     acc_g: Vec<f32>,
     acc_dx: Vec<f32>,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl AdaDelta {
     pub fn new(rho: f32, eps: f32, n: usize) -> Self {
         Self { rho, eps, scale: 1.0, acc_g: vec![0.0; n],
-               acc_dx: vec![0.0; n] }
+               acc_dx: vec![0.0; n], pool: None }
     }
 }
 
@@ -22,15 +27,33 @@ impl Optimizer for AdaDelta {
         debug_assert_eq!(weights.len(), grads.len());
         let rho = self.rho;
         let eps = self.eps;
-        for i in 0..weights.len() {
-            let g = grads[i];
-            self.acc_g[i] = rho * self.acc_g[i] + (1.0 - rho) * g * g;
-            let dx = -((self.acc_dx[i] + eps).sqrt()
-                / (self.acc_g[i] + eps).sqrt())
-                * g
-                * self.scale;
-            self.acc_dx[i] = rho * self.acc_dx[i] + (1.0 - rho) * dx * dx;
-            weights[i] += dx;
+        let scale = self.scale;
+        let step = |w: &mut [f32], g: &[f32], acc_g: &mut [f32],
+                    acc_dx: &mut [f32]| {
+            for i in 0..w.len() {
+                let gi = g[i];
+                acc_g[i] = rho * acc_g[i] + (1.0 - rho) * gi * gi;
+                let dx = -((acc_dx[i] + eps).sqrt()
+                    / (acc_g[i] + eps).sqrt())
+                    * gi
+                    * scale;
+                acc_dx[i] = rho * acc_dx[i] + (1.0 - rho) * dx * dx;
+                w[i] += dx;
+            }
+        };
+        match &self.pool {
+            Some(pool) => {
+                let wv = SharedMut::new(weights);
+                let gv = SharedMut::new(&mut self.acc_g);
+                let dv = SharedMut::new(&mut self.acc_dx);
+                par_blocks(pool, grads.len(), |r| {
+                    step(unsafe { wv.range(r.clone()) }, &grads[r.clone()],
+                         unsafe { gv.range(r.clone()) },
+                         unsafe { dv.range(r) });
+                });
+            }
+            None => step(weights, grads, &mut self.acc_g,
+                         &mut self.acc_dx),
         }
     }
 
@@ -40,6 +63,10 @@ impl Optimizer for AdaDelta {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.scale = scale;
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = Some(pool);
     }
 }
 
@@ -56,5 +83,26 @@ mod tests {
             opt.update(&mut w, &[g]);
         }
         assert!(w[0].abs() < 1.0, "{w:?}");
+    }
+
+    #[test]
+    fn pooled_updates_are_bitwise_identical() {
+        let n = 10_001usize;
+        let grads: Vec<f32> =
+            (0..n).map(|i| ((i % 61) as f32 - 30.0) * 0.019).collect();
+        let init: Vec<f32> =
+            (0..n).map(|i| ((i % 53) as f32) * 0.023 - 0.5).collect();
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut serial = AdaDelta::new(0.95, 1e-6, n);
+        let mut pooled = AdaDelta::new(0.95, 1e-6, n);
+        pooled.set_pool(pool);
+        let mut ws = init.clone();
+        let mut wp = init;
+        for _ in 0..3 {
+            serial.update(&mut ws, &grads);
+            pooled.update(&mut wp, &grads);
+        }
+        assert!(ws.iter().zip(&wp)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 }

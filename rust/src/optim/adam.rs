@@ -1,6 +1,10 @@
 //! Adam (Kingma & Ba) with bias correction.
 
+use std::sync::Arc;
+
 use super::Optimizer;
+use crate::runtime::kernels::par_blocks;
+use crate::util::threadpool::{SharedMut, ThreadPool};
 
 pub struct Adam {
     lr: f32,
@@ -11,6 +15,7 @@ pub struct Adam {
     t: u64,
     m: Vec<f32>,
     v: Vec<f32>,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl Adam {
@@ -24,6 +29,7 @@ impl Adam {
             t: 0,
             m: vec![0.0; n],
             v: vec![0.0; n],
+            pool: None,
         }
     }
 }
@@ -34,14 +40,34 @@ impl Optimizer for Adam {
         self.t += 1;
         let b1 = self.beta1;
         let b2 = self.beta2;
+        let eps = self.eps;
+        // t, bias correction and the effective lr are scalars fixed
+        // before the loop, so partitioning the element range cannot
+        // change any per-element arithmetic.
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
         let lr = self.lr * self.scale * bc2.sqrt() / bc1;
-        for i in 0..weights.len() {
-            let g = grads[i];
-            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
-            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
-            weights[i] -= lr * self.m[i] / (self.v[i].sqrt() + self.eps);
+        let step = |w: &mut [f32], g: &[f32], m: &mut [f32],
+                    v: &mut [f32]| {
+            for i in 0..w.len() {
+                let gi = g[i];
+                m[i] = b1 * m[i] + (1.0 - b1) * gi;
+                v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+                w[i] -= lr * m[i] / (v[i].sqrt() + eps);
+            }
+        };
+        match &self.pool {
+            Some(pool) => {
+                let wv = SharedMut::new(weights);
+                let mv = SharedMut::new(&mut self.m);
+                let vv = SharedMut::new(&mut self.v);
+                par_blocks(pool, grads.len(), |r| {
+                    step(unsafe { wv.range(r.clone()) }, &grads[r.clone()],
+                         unsafe { mv.range(r.clone()) },
+                         unsafe { vv.range(r) });
+                });
+            }
+            None => step(weights, grads, &mut self.m, &mut self.v),
         }
     }
 
@@ -51,6 +77,10 @@ impl Optimizer for Adam {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.scale = scale;
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = Some(pool);
     }
 }
 
@@ -80,5 +110,26 @@ mod tests {
         assert!(w[0] < 0.0 && w[1] < 0.0);
         let ratio = w[0] / w[1];
         assert!(ratio < 2.0, "ratio={ratio}, w={w:?}");
+    }
+
+    #[test]
+    fn pooled_updates_are_bitwise_identical() {
+        let n = 9_473usize; // not a multiple of any block size
+        let grads: Vec<f32> =
+            (0..n).map(|i| ((i % 113) as f32 - 56.0) * 0.017).collect();
+        let init: Vec<f32> =
+            (0..n).map(|i| ((i % 97) as f32) * 0.021 - 1.0).collect();
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut serial = Adam::new(0.01, 0.9, 0.999, 1e-8, n);
+        let mut pooled = Adam::new(0.01, 0.9, 0.999, 1e-8, n);
+        pooled.set_pool(pool);
+        let mut ws = init.clone();
+        let mut wp = init;
+        for _ in 0..3 {
+            serial.update(&mut ws, &grads);
+            pooled.update(&mut wp, &grads);
+        }
+        assert!(ws.iter().zip(&wp)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 }

@@ -26,6 +26,12 @@ pub trait Optimizer: Send {
 
     /// Scale the base learning rate (LR schedules / EASGD force tuning).
     fn set_lr_scale(&mut self, scale: f32);
+
+    /// Run the per-element update loop on this compute pool. Every
+    /// element's op sequence is unchanged — the pool only partitions
+    /// the index range — so updates stay bitwise-identical at any
+    /// thread count. Default: keep the serial loop.
+    fn set_pool(&mut self, _pool: std::sync::Arc<crate::util::threadpool::ThreadPool>) {}
 }
 
 /// Optimizer hyper-parameter bundle: what the paper's `Algo` class stores.
@@ -130,6 +136,13 @@ impl Optimizer for GradClip {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.inner.set_lr_scale(scale);
+    }
+
+    // The global L2-norm reduction stays serial (its accumulation
+    // order is the contract); only the inner optimizer's elementwise
+    // loop parallelizes.
+    fn set_pool(&mut self, pool: std::sync::Arc<crate::util::threadpool::ThreadPool>) {
+        self.inner.set_pool(pool);
     }
 }
 

@@ -1,6 +1,10 @@
 //! RMSProp (Tieleman & Hinton) — Keras-style.
 
+use std::sync::Arc;
+
 use super::Optimizer;
+use crate::runtime::kernels::par_blocks;
+use crate::util::threadpool::{SharedMut, ThreadPool};
 
 pub struct RmsProp {
     lr: f32,
@@ -8,11 +12,12 @@ pub struct RmsProp {
     eps: f32,
     scale: f32,
     ms: Vec<f32>,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl RmsProp {
     pub fn new(lr: f32, rho: f32, eps: f32, n: usize) -> Self {
-        Self { lr, rho, eps, scale: 1.0, ms: vec![0.0; n] }
+        Self { lr, rho, eps, scale: 1.0, ms: vec![0.0; n], pool: None }
     }
 }
 
@@ -21,10 +26,24 @@ impl Optimizer for RmsProp {
         debug_assert_eq!(weights.len(), grads.len());
         let lr = self.lr * self.scale;
         let rho = self.rho;
-        for i in 0..weights.len() {
-            let g = grads[i];
-            self.ms[i] = rho * self.ms[i] + (1.0 - rho) * g * g;
-            weights[i] -= lr * g / (self.ms[i].sqrt() + self.eps);
+        let eps = self.eps;
+        let step = |w: &mut [f32], g: &[f32], ms: &mut [f32]| {
+            for i in 0..w.len() {
+                let gi = g[i];
+                ms[i] = rho * ms[i] + (1.0 - rho) * gi * gi;
+                w[i] -= lr * gi / (ms[i].sqrt() + eps);
+            }
+        };
+        match &self.pool {
+            Some(pool) => {
+                let wv = SharedMut::new(weights);
+                let msv = SharedMut::new(&mut self.ms);
+                par_blocks(pool, grads.len(), |r| {
+                    step(unsafe { wv.range(r.clone()) }, &grads[r.clone()],
+                         unsafe { msv.range(r) });
+                });
+            }
+            None => step(weights, grads, &mut self.ms),
         }
     }
 
@@ -34,6 +53,10 @@ impl Optimizer for RmsProp {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.scale = scale;
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = Some(pool);
     }
 }
 
@@ -54,5 +77,26 @@ mod tests {
         // steady-state step is ~lr regardless of gradient magnitude
         assert!((wb[0] - ws[0]).abs() / wb[0].abs() < 0.01,
                 "wb={wb:?} ws={ws:?}");
+    }
+
+    #[test]
+    fn pooled_updates_are_bitwise_identical() {
+        let n = 8_191usize;
+        let grads: Vec<f32> =
+            (0..n).map(|i| ((i % 101) as f32 - 50.0) * 0.013).collect();
+        let init: Vec<f32> =
+            (0..n).map(|i| ((i % 89) as f32) * 0.017 - 0.7).collect();
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut serial = RmsProp::new(0.01, 0.9, 1e-7, n);
+        let mut pooled = RmsProp::new(0.01, 0.9, 1e-7, n);
+        pooled.set_pool(pool);
+        let mut ws = init.clone();
+        let mut wp = init;
+        for _ in 0..3 {
+            serial.update(&mut ws, &grads);
+            pooled.update(&mut wp, &grads);
+        }
+        assert!(ws.iter().zip(&wp)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 }

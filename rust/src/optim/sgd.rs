@@ -1,16 +1,21 @@
 //! Plain SGD and (Nesterov) momentum SGD.
 
+use std::sync::Arc;
+
 use super::Optimizer;
+use crate::runtime::kernels::par_blocks;
+use crate::util::threadpool::{SharedMut, ThreadPool};
 
 /// w -= lr * g
 pub struct Sgd {
     lr: f32,
     scale: f32,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl Sgd {
     pub fn new(lr: f32) -> Self {
-        Self { lr, scale: 1.0 }
+        Self { lr, scale: 1.0, pool: None }
     }
 }
 
@@ -18,8 +23,19 @@ impl Optimizer for Sgd {
     fn update(&mut self, weights: &mut [f32], grads: &[f32]) {
         debug_assert_eq!(weights.len(), grads.len());
         let lr = self.lr * self.scale;
-        for (w, g) in weights.iter_mut().zip(grads) {
-            *w -= lr * g;
+        let step = |w: &mut [f32], g: &[f32]| {
+            for (wi, gi) in w.iter_mut().zip(g) {
+                *wi -= lr * gi;
+            }
+        };
+        match &self.pool {
+            Some(pool) => {
+                let wv = SharedMut::new(weights);
+                par_blocks(pool, grads.len(), |r| {
+                    step(unsafe { wv.range(r.clone()) }, &grads[r]);
+                });
+            }
+            None => step(weights, grads),
         }
     }
 
@@ -29,6 +45,10 @@ impl Optimizer for Sgd {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.scale = scale;
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = Some(pool);
     }
 }
 
@@ -42,11 +62,13 @@ pub struct Momentum {
     nesterov: bool,
     scale: f32,
     velocity: Vec<f32>,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl Momentum {
     pub fn new(lr: f32, mu: f32, nesterov: bool, n: usize) -> Self {
-        Self { lr, mu, nesterov, scale: 1.0, velocity: vec![0.0; n] }
+        Self { lr, mu, nesterov, scale: 1.0, velocity: vec![0.0; n],
+               pool: None }
     }
 }
 
@@ -56,18 +78,32 @@ impl Optimizer for Momentum {
         debug_assert_eq!(weights.len(), self.velocity.len());
         let lr = self.lr * self.scale;
         let mu = self.mu;
-        if self.nesterov {
-            for ((w, g), v) in weights.iter_mut().zip(grads)
-                .zip(self.velocity.iter_mut()) {
-                *v = mu * *v - lr * g;
-                *w += mu * *v - lr * g;
+        let nesterov = self.nesterov;
+        let step = |w: &mut [f32], g: &[f32], vel: &mut [f32]| {
+            if nesterov {
+                for ((wi, gi), vi) in w.iter_mut().zip(g)
+                    .zip(vel.iter_mut()) {
+                    *vi = mu * *vi - lr * gi;
+                    *wi += mu * *vi - lr * gi;
+                }
+            } else {
+                for ((wi, gi), vi) in w.iter_mut().zip(g)
+                    .zip(vel.iter_mut()) {
+                    *vi = mu * *vi - lr * gi;
+                    *wi += *vi;
+                }
             }
-        } else {
-            for ((w, g), v) in weights.iter_mut().zip(grads)
-                .zip(self.velocity.iter_mut()) {
-                *v = mu * *v - lr * g;
-                *w += *v;
+        };
+        match &self.pool {
+            Some(pool) => {
+                let wv = SharedMut::new(weights);
+                let vv = SharedMut::new(&mut self.velocity);
+                par_blocks(pool, grads.len(), |r| {
+                    step(unsafe { wv.range(r.clone()) }, &grads[r.clone()],
+                         unsafe { vv.range(r) });
+                });
             }
+            None => step(weights, grads, &mut self.velocity),
         }
     }
 
@@ -77,6 +113,10 @@ impl Optimizer for Momentum {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.scale = scale;
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = Some(pool);
     }
 }
 
@@ -121,5 +161,42 @@ mod tests {
             nest.update(&mut w2, &[1.0]);
         }
         assert_ne!(w1, w2);
+    }
+
+    /// Pooled updates must be bitwise-identical to the serial loop —
+    /// the optimizer half of the thread-count-invariance contract.
+    #[test]
+    fn pooled_updates_are_bitwise_identical() {
+        let n = 10_000usize;
+        let grads: Vec<f32> =
+            (0..n).map(|i| ((i % 113) as f32 - 56.0) * 0.017).collect();
+        let init: Vec<f32> =
+            (0..n).map(|i| ((i % 97) as f32) * 0.021 - 1.0).collect();
+        for threads in [2usize, 4] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            let mut serial = Momentum::new(0.05, 0.9, true, n);
+            let mut pooled = Momentum::new(0.05, 0.9, true, n);
+            pooled.set_pool(Arc::clone(&pool));
+            let mut ws = init.clone();
+            let mut wp = init.clone();
+            for _ in 0..3 {
+                serial.update(&mut ws, &grads);
+                pooled.update(&mut wp, &grads);
+            }
+            assert!(ws.iter().zip(&wp)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "momentum diverged at {threads} threads");
+
+            let mut serial = Sgd::new(0.05);
+            let mut pooled = Sgd::new(0.05);
+            pooled.set_pool(pool);
+            let mut ws = init.clone();
+            let mut wp = init.clone();
+            serial.update(&mut ws, &grads);
+            pooled.update(&mut wp, &grads);
+            assert!(ws.iter().zip(&wp)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "sgd diverged at {threads} threads");
+        }
     }
 }

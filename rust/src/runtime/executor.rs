@@ -376,6 +376,32 @@ impl ModelExecutables {
         }
     }
 
+    /// Size the native engine's persistent compute pool (no-op for
+    /// PJRT, which threads internally). `0` means auto-detect from
+    /// `available_parallelism`; `1` restores the serial path. Safe to
+    /// call between steps; trained weights are bitwise-identical at any
+    /// thread count (DESIGN.md §Compute kernels).
+    pub fn set_threads(&self, n: usize) {
+        match &self.backend {
+            Backend::Native(model) => model.set_threads(n),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { .. } => {}
+        }
+    }
+
+    /// The native engine's compute pool, shared so the optimizer and
+    /// codec hot loops run on the same threads as the kernels. PJRT
+    /// builds return a fresh 1-thread (inline) pool.
+    pub fn thread_pool(&self) -> Arc<crate::util::threadpool::ThreadPool> {
+        match &self.backend {
+            Backend::Native(model) => model.thread_pool(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt { .. } => {
+                Arc::new(crate::util::threadpool::ThreadPool::new(1))
+            }
+        }
+    }
+
     /// Evaluation: (params, x, y) -> (mean loss, n correct).
     pub fn eval_step(&self, params: &ParamSet, x: &[f32], y: &[i32])
         -> Result<(f32, f32), RuntimeError> {

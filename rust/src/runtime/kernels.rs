@@ -1,0 +1,473 @@
+//! Lane-chunked, pool-parallel GEMM microkernels with a bitwise
+//! contract.
+//!
+//! The three accumulating matmuls below replace the scalar triple loops
+//! that used to live in `runtime/native.rs` — and they are required to
+//! produce **bit-for-bit identical output at any thread count**,
+//! because the all-reduce trainer's replicated-optimizer correctness
+//! (and every bitwise e2e test in this repo) rides on deterministic
+//! gradients. Two rules make that possible (DESIGN.md §Compute
+//! kernels):
+//!
+//! 1. **Vectorize only along non-reduction axes.** Each output element
+//!    `c[i][j]` accumulates its `k`-products in exactly the scalar
+//!    reference order. The lane dimension is a tile of *independent*
+//!    output columns (`j .. j+LANE`), each with its own register
+//!    accumulator — LLVM can turn that into SIMD because the lanes
+//!    never mix, and the per-element op order never changes. The
+//!    reduction axis is never split across lanes or threads.
+//! 2. **Parallelize over output row blocks.** Threads own disjoint,
+//!    statically partitioned blocks of C's rows
+//!    ([`crate::util::threadpool::block_range`]); no two threads touch
+//!    the same output element, so there is nothing to combine and no
+//!    combination order to get wrong.
+//!
+//! Register accumulation (load `c`, add the ordered products, store
+//! once) is bitwise-equal to the in-memory reference because Rust
+//! never contracts `a*b + c` into an FMA on its own, and f32 loads and
+//! stores are exact. The scalar references live in [`scalar`] and the
+//! property suite at the bottom pins every kernel to them across odd
+//! shapes and thread counts.
+
+use std::ops::Range;
+
+use crate::util::threadpool::{block_range, SharedMut, ThreadPool};
+
+/// Width of the independent-column register tile. Not a correctness
+/// parameter (lanes are independent), only a vectorization hint.
+pub(crate) const LANE: usize = 8;
+
+/// A parallel part must carry at least this many flops before forking
+/// helps; below it the kernels run inline on the caller.
+pub(crate) const MIN_FLOPS_PER_PART: usize = 65_536;
+
+/// Minimum elements per part for pooled elementwise loops
+/// ([`par_blocks`]): gate activations, optimizer steps, fp16 codec.
+pub(crate) const MIN_ELEMS_PER_PART: usize = 4_096;
+
+/// How many row blocks to use for a kernel of `rows` rows and `flops`
+/// total flops on `pool` — 1 when the matrix is too small to be worth
+/// waking helpers for.
+fn row_parts(pool: &ThreadPool, rows: usize, flops: usize) -> usize {
+    pool.threads()
+        .min(rows.max(1))
+        .min((flops / MIN_FLOPS_PER_PART).max(1))
+}
+
+/// Reference (and fallback) scalar kernels: the exact pre-pool triple
+/// loops. These define the accumulation order the pooled kernels must
+/// reproduce bit for bit; the property tests compare against them.
+pub(crate) mod scalar {
+    /// C[rows, cols] += A[rows, inner] @ B[inner, cols]
+    pub(crate) fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32],
+                             rows: usize, inner: usize, cols: usize) {
+        for i in 0..rows {
+            let arow = &a[i * inner..(i + 1) * inner];
+            let crow = &mut c[i * cols..(i + 1) * cols];
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * cols..(p + 1) * cols];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+
+    /// C[rows, cols] += A[inner, rows]^T @ B[inner, cols]
+    pub(crate) fn matmul_tn_acc(a: &[f32], b: &[f32], c: &mut [f32],
+                                rows: usize, inner: usize, cols: usize) {
+        for p in 0..inner {
+            let arow = &a[p * rows..(p + 1) * rows];
+            let brow = &b[p * cols..(p + 1) * cols];
+            for (i, &av) in arow.iter().enumerate() {
+                let crow = &mut c[i * cols..(i + 1) * cols];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+
+    /// C[rows, cols] += A[rows, inner] @ B[cols, inner]^T
+    pub(crate) fn matmul_nt_acc(a: &[f32], b: &[f32], c: &mut [f32],
+                                rows: usize, inner: usize, cols: usize) {
+        for i in 0..rows {
+            let arow = &a[i * inner..(i + 1) * inner];
+            for j in 0..cols {
+                let brow = &b[j * inner..(j + 1) * inner];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                c[i * cols + j] += acc;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// single-block (row-range) microkernels
+// ---------------------------------------------------------------------------
+
+/// `matmul_acc` restricted to C rows `ir` (with `c` being exactly that
+/// block). Lane tile over columns; `p` ascends per element exactly as
+/// in the scalar reference.
+fn acc_block(a: &[f32], b: &[f32], c: &mut [f32], ir: Range<usize>,
+             inner: usize, cols: usize) {
+    for (bi, i) in ir.enumerate() {
+        let arow = &a[i * inner..(i + 1) * inner];
+        let crow = &mut c[bi * cols..(bi + 1) * cols];
+        let mut j = 0;
+        while j < cols {
+            let w = LANE.min(cols - j);
+            let mut acc = [0.0f32; LANE];
+            acc[..w].copy_from_slice(&crow[j..j + w]);
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * cols + j..p * cols + j + w];
+                for (accv, &bv) in acc[..w].iter_mut().zip(brow) {
+                    *accv += av * bv;
+                }
+            }
+            crow[j..j + w].copy_from_slice(&acc[..w]);
+            j += w;
+        }
+    }
+}
+
+/// `matmul_tn_acc` restricted to C rows `ir` — the loop nest is
+/// re-ordered to make C's row the outer axis (so rows can be owned by
+/// threads), but each element still sees `p` ascending, which is the
+/// scalar reference's per-element order.
+fn tn_block(a: &[f32], b: &[f32], c: &mut [f32], ir: Range<usize>,
+            rows: usize, inner: usize, cols: usize) {
+    for (bi, i) in ir.enumerate() {
+        let crow = &mut c[bi * cols..(bi + 1) * cols];
+        let mut j = 0;
+        while j < cols {
+            let w = LANE.min(cols - j);
+            let mut acc = [0.0f32; LANE];
+            acc[..w].copy_from_slice(&crow[j..j + w]);
+            for p in 0..inner {
+                let av = a[p * rows + i];
+                let brow = &b[p * cols + j..p * cols + j + w];
+                for (accv, &bv) in acc[..w].iter_mut().zip(brow) {
+                    *accv += av * bv;
+                }
+            }
+            crow[j..j + w].copy_from_slice(&acc[..w]);
+            j += w;
+        }
+    }
+}
+
+/// `matmul_nt_acc` restricted to C rows `ir`. The `k` dot product IS
+/// the reduction, so it stays a sequential scalar chain per output
+/// element; the lane tile is `w` *independent* dot products advanced
+/// in lockstep over `k`.
+fn nt_block(a: &[f32], b: &[f32], c: &mut [f32], ir: Range<usize>,
+            inner: usize, cols: usize) {
+    for (bi, i) in ir.enumerate() {
+        let arow = &a[i * inner..(i + 1) * inner];
+        let crow = &mut c[bi * cols..(bi + 1) * cols];
+        let mut j = 0;
+        while j < cols {
+            let w = LANE.min(cols - j);
+            let mut acc = [0.0f32; LANE];
+            for (k, &av) in arow.iter().enumerate() {
+                for (jj, accv) in acc[..w].iter_mut().enumerate() {
+                    *accv += av * b[(j + jj) * inner + k];
+                }
+            }
+            for (jj, accv) in acc[..w].iter().enumerate() {
+                crow[j + jj] += *accv;
+            }
+            j += w;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pooled entry points
+// ---------------------------------------------------------------------------
+
+/// C[rows, cols] += A[rows, inner] @ B[inner, cols], parallel over row
+/// blocks of C. Bitwise-identical to [`scalar::matmul_acc`] at any
+/// thread count.
+pub(crate) fn matmul_acc(pool: &ThreadPool, a: &[f32], b: &[f32],
+                         c: &mut [f32], rows: usize, inner: usize,
+                         cols: usize) {
+    debug_assert_eq!(a.len(), rows * inner);
+    debug_assert_eq!(b.len(), inner * cols);
+    debug_assert_eq!(c.len(), rows * cols);
+    let parts = row_parts(pool, rows, 2 * rows * inner * cols);
+    if parts <= 1 {
+        return acc_block(a, b, c, 0..rows, inner, cols);
+    }
+    let cv = SharedMut::new(c);
+    pool.run(parts, |idx| {
+        let r = block_range(rows, parts, idx);
+        let cb = unsafe { cv.range(r.start * cols..r.end * cols) };
+        acc_block(a, b, cb, r, inner, cols);
+    });
+}
+
+/// C[rows, cols] += A[inner, rows]^T @ B[inner, cols], parallel over
+/// row blocks of C. Bitwise-identical to [`scalar::matmul_tn_acc`] at
+/// any thread count.
+pub(crate) fn matmul_tn_acc(pool: &ThreadPool, a: &[f32], b: &[f32],
+                            c: &mut [f32], rows: usize, inner: usize,
+                            cols: usize) {
+    debug_assert_eq!(a.len(), inner * rows);
+    debug_assert_eq!(b.len(), inner * cols);
+    debug_assert_eq!(c.len(), rows * cols);
+    let parts = row_parts(pool, rows, 2 * rows * inner * cols);
+    if parts <= 1 {
+        return tn_block(a, b, c, 0..rows, rows, inner, cols);
+    }
+    let cv = SharedMut::new(c);
+    pool.run(parts, |idx| {
+        let r = block_range(rows, parts, idx);
+        let cb = unsafe { cv.range(r.start * cols..r.end * cols) };
+        tn_block(a, b, cb, r, rows, inner, cols);
+    });
+}
+
+/// C[rows, cols] += A[rows, inner] @ B[cols, inner]^T, parallel over
+/// row blocks of C. Bitwise-identical to [`scalar::matmul_nt_acc`] at
+/// any thread count.
+pub(crate) fn matmul_nt_acc(pool: &ThreadPool, a: &[f32], b: &[f32],
+                            c: &mut [f32], rows: usize, inner: usize,
+                            cols: usize) {
+    debug_assert_eq!(a.len(), rows * inner);
+    debug_assert_eq!(b.len(), cols * inner);
+    debug_assert_eq!(c.len(), rows * cols);
+    let parts = row_parts(pool, rows, 2 * rows * inner * cols);
+    if parts <= 1 {
+        return nt_block(a, b, c, 0..rows, inner, cols);
+    }
+    let cv = SharedMut::new(c);
+    pool.run(parts, |idx| {
+        let r = block_range(rows, parts, idx);
+        let cb = unsafe { cv.range(r.start * cols..r.end * cols) };
+        nt_block(a, b, cb, r, inner, cols);
+    });
+}
+
+/// Pooled elementwise loop: run `f` over disjoint blocks of
+/// `0..total`, at least [`MIN_ELEMS_PER_PART`] elements per part.
+/// Callers compute each element exactly as their scalar loop did, so
+/// results are bitwise-identical at any thread count.
+pub(crate) fn par_blocks(pool: &ThreadPool, total: usize,
+                         f: impl Fn(Range<usize>) + Sync) {
+    pool.run_blocks(total, MIN_ELEMS_PER_PART, f);
+}
+
+/// Sustained GFLOP/s of [`matmul_acc`] on an `m x k x n` problem:
+/// best-of-`reps` wall time (the calibration probe behind
+/// `CostModel`'s compute term and the microbench GFLOP/s table).
+pub(crate) fn gemm_gflops(pool: &ThreadPool, m: usize, k: usize,
+                          n: usize, reps: usize) -> f64 {
+    let a: Vec<f32> = (0..m * k).map(|i| (i % 97) as f32 * 0.013).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| (i % 89) as f32 * 0.011).collect();
+    let mut c = vec![0.0f32; m * n];
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    // warm-up (page-in + pool wake)
+    matmul_acc(pool, &a, &b, &mut c, m, k, n);
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        matmul_acc(pool, &a, &b, &mut c, m, k, n);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(&c);
+    flops / best / 1e9
+}
+
+/// Sustained GFLOP/s of a named kernel (`"nn"`, `"tn"`, `"nt"`) on an
+/// `m x k x n` problem with a fresh `threads`-wide pool: best-of-`reps`
+/// wall time. Public for `benches/runtime_microbench.rs` and the CI
+/// compute gate; the training path sizes its long-lived pool through
+/// `ModelExecutables::set_threads` instead.
+pub fn kernel_gflops(kernel: &str, threads: usize, m: usize, k: usize,
+                     n: usize, reps: usize) -> f64 {
+    let pool = ThreadPool::new(threads.max(1));
+    let (na, nb) = match kernel {
+        "tn" => (k * m, k * n),
+        "nt" => (m * k, n * k),
+        _ => (m * k, k * n),
+    };
+    let a: Vec<f32> =
+        (0..na).map(|i| (i % 97) as f32 * 0.013).collect();
+    let b: Vec<f32> =
+        (0..nb).map(|i| (i % 89) as f32 * 0.011).collect();
+    let mut c = vec![0.0f32; m * n];
+    let run = |c: &mut [f32]| match kernel {
+        "tn" => matmul_tn_acc(&pool, &a, &b, c, m, k, n),
+        "nt" => matmul_nt_acc(&pool, &a, &b, c, m, k, n),
+        _ => matmul_acc(&pool, &a, &b, c, m, k, n),
+    };
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    run(&mut c); // warm-up: page-in + pool wake
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        run(&mut c);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(&c);
+    flops / best / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    /// Shapes chosen to hit every boundary: degenerate 1x1, rows <
+    /// threads, inner/cols not multiples of LANE, and the real model
+    /// shapes (mlp fc0, lstm gate block).
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 3, 5),
+        (2, 7, 9),
+        (3, 1, 17),
+        (5, 13, 8),
+        (7, 11, 19),
+        (10, 16, 80),
+        (16, 33, 7),
+        (100, 480, 64),
+    ];
+
+    #[test]
+    fn matmul_acc_bitwise_matches_scalar_at_any_thread_count() {
+        let mut rng = Rng::new(2024);
+        for &threads in &[1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for &(rows, inner, cols) in SHAPES {
+                let a = fill(&mut rng, rows * inner);
+                let b = fill(&mut rng, inner * cols);
+                let init = fill(&mut rng, rows * cols);
+                let mut want = init.clone();
+                scalar::matmul_acc(&a, &b, &mut want, rows, inner, cols);
+                let mut got = init.clone();
+                matmul_acc(&pool, &a, &b, &mut got, rows, inner, cols);
+                assert!(
+                    got.iter().zip(&want)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "acc {rows}x{inner}x{cols} t={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tn_acc_bitwise_matches_scalar_at_any_thread_count() {
+        let mut rng = Rng::new(77);
+        for &threads in &[1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for &(rows, inner, cols) in SHAPES {
+                let a = fill(&mut rng, inner * rows);
+                let b = fill(&mut rng, inner * cols);
+                let init = fill(&mut rng, rows * cols);
+                let mut want = init.clone();
+                scalar::matmul_tn_acc(&a, &b, &mut want, rows, inner,
+                                      cols);
+                let mut got = init.clone();
+                matmul_tn_acc(&pool, &a, &b, &mut got, rows, inner,
+                              cols);
+                assert!(
+                    got.iter().zip(&want)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "tn {rows}x{inner}x{cols} t={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_acc_bitwise_matches_scalar_at_any_thread_count() {
+        let mut rng = Rng::new(4242);
+        for &threads in &[1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for &(rows, inner, cols) in SHAPES {
+                let a = fill(&mut rng, rows * inner);
+                let b = fill(&mut rng, cols * inner);
+                let init = fill(&mut rng, rows * cols);
+                let mut want = init.clone();
+                scalar::matmul_nt_acc(&a, &b, &mut want, rows, inner,
+                                      cols);
+                let mut got = init.clone();
+                matmul_nt_acc(&pool, &a, &b, &mut got, rows, inner,
+                              cols);
+                assert!(
+                    got.iter().zip(&want)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "nt {rows}x{inner}x{cols} t={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_bitwise_property_sweep() {
+        // Random-shape property sweep on top of the fixed boundary
+        // shapes: 64 random (rows, inner, cols) triples per kernel,
+        // threads 1/2/4, all bit-for-bit vs the scalar reference.
+        let mut rng = Rng::new(9001);
+        let pools: Vec<ThreadPool> =
+            [1usize, 2, 4].iter().map(|&t| ThreadPool::new(t)).collect();
+        for case in 0..64 {
+            let rows = 1 + rng.usize_below(24);
+            let inner = 1 + rng.usize_below(40);
+            let cols = 1 + rng.usize_below(24);
+            let a = fill(&mut rng, rows * inner);
+            let b_ic = fill(&mut rng, inner * cols);
+            let a_ir = fill(&mut rng, inner * rows);
+            let b_ci = fill(&mut rng, cols * inner);
+            let init = fill(&mut rng, rows * cols);
+            for pool in &pools {
+                let mut want = init.clone();
+                scalar::matmul_acc(&a, &b_ic, &mut want, rows, inner,
+                                   cols);
+                let mut got = init.clone();
+                matmul_acc(pool, &a, &b_ic, &mut got, rows, inner, cols);
+                assert!(got.iter().zip(&want)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "case {case} acc");
+                let mut want = init.clone();
+                scalar::matmul_tn_acc(&a_ir, &b_ic, &mut want, rows,
+                                      inner, cols);
+                let mut got = init.clone();
+                matmul_tn_acc(pool, &a_ir, &b_ic, &mut got, rows, inner,
+                              cols);
+                assert!(got.iter().zip(&want)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "case {case} tn");
+                let mut want = init.clone();
+                scalar::matmul_nt_acc(&a, &b_ci, &mut want, rows, inner,
+                                      cols);
+                let mut got = init.clone();
+                matmul_nt_acc(pool, &a, &b_ci, &mut got, rows, inner,
+                              cols);
+                assert!(got.iter().zip(&want)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "case {case} nt");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_gflops_probe_is_finite_and_positive() {
+        let pool = ThreadPool::new(2);
+        let g = gemm_gflops(&pool, 32, 32, 32, 2);
+        assert!(g.is_finite() && g > 0.0, "gflops = {g}");
+        for k in ["nn", "tn", "nt"] {
+            let g = kernel_gflops(k, 2, 16, 16, 16, 1);
+            assert!(g.is_finite() && g > 0.0, "{k}: {g}");
+        }
+    }
+}

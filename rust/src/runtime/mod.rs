@@ -15,12 +15,14 @@
 
 pub mod artifact;
 pub mod executor;
+pub(crate) mod kernels;
 pub(crate) mod native;
 
 pub use artifact::{default_artifact_dir, ArtifactError, Manifest,
                    ModelMeta};
 pub use executor::{BucketReady, Client, GradOutput, GradSink,
                    ModelExecutables, RuntimeError};
+pub use kernels::kernel_gflops;
 #[cfg(feature = "pjrt")]
 pub use executor::Executable;
 

@@ -28,12 +28,14 @@
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::runtime::artifact::ModelMeta;
 use crate::runtime::executor::{BucketReady, GradOutput, GradSink,
                                RuntimeError};
+use crate::runtime::kernels;
 use crate::tensor::ParamSet;
+use crate::util::threadpool::{SharedMut, ThreadPool};
 
 /// A natively-executable model: the layer DAG plus the scratch-arena
 /// pool shared by every caller of this (Arc-shared) executable.
@@ -45,6 +47,18 @@ pub(crate) struct NativeModel {
     /// When false, every step runs on a fresh arena and nothing is
     /// pooled — the microbench baseline.
     reuse_scratch: AtomicBool,
+    /// Compute pool the kernels fan out over. Constructed solo (one
+    /// thread, zero helpers — the exact legacy scalar path) and
+    /// resized once by [`NativeModel::set_threads`]; results are
+    /// bitwise-identical at any size (see `runtime/kernels.rs`).
+    pool: Mutex<Arc<ThreadPool>>,
+}
+
+/// Per-step execution context threaded through the layer DAG: the
+/// scratch arena plus the compute pool the kernels run on.
+pub(crate) struct Ctx<'a> {
+    pub(crate) arena: &'a mut Arena,
+    pub(crate) pool: &'a ThreadPool,
 }
 
 /// Tanh MLP over flattened input: dims[0] -> … -> dims.last().
@@ -66,64 +80,24 @@ pub(crate) struct LstmNet {
 /// Keras `unit_forget_bias=True` analogue (see kernels/ref.py).
 const FORGET_BIAS: f32 = 1.0;
 
+// The monolithic test oracles below spell the matmuls unqualified —
+// they must stay on the scalar references so the monolith-vs-DAG
+// bitwise test pins the pooled kernels to the scalar order end to end.
+#[cfg(test)]
+use crate::runtime::kernels::scalar::{matmul_acc, matmul_nt_acc,
+                                      matmul_tn_acc};
+
 // ---------------------------------------------------------------------------
 // dense math helpers (row-major)
 // ---------------------------------------------------------------------------
-
-/// C[rows, cols] += A[rows, inner] @ B[inner, cols]
-fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], rows: usize,
-              inner: usize, cols: usize) {
-    debug_assert_eq!(a.len(), rows * inner);
-    debug_assert_eq!(b.len(), inner * cols);
-    debug_assert_eq!(c.len(), rows * cols);
-    for i in 0..rows {
-        let arow = &a[i * inner..(i + 1) * inner];
-        let crow = &mut c[i * cols..(i + 1) * cols];
-        for (p, &av) in arow.iter().enumerate() {
-            let brow = &b[p * cols..(p + 1) * cols];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
-}
-
-/// C[rows, cols] += A[inner, rows]^T @ B[inner, cols]
-fn matmul_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], rows: usize,
-                 inner: usize, cols: usize) {
-    debug_assert_eq!(a.len(), inner * rows);
-    debug_assert_eq!(b.len(), inner * cols);
-    debug_assert_eq!(c.len(), rows * cols);
-    for p in 0..inner {
-        let arow = &a[p * rows..(p + 1) * rows];
-        let brow = &b[p * cols..(p + 1) * cols];
-        for (i, &av) in arow.iter().enumerate() {
-            let crow = &mut c[i * cols..(i + 1) * cols];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
-}
-
-/// C[rows, cols] += A[rows, inner] @ B[cols, inner]^T
-fn matmul_nt_acc(a: &[f32], b: &[f32], c: &mut [f32], rows: usize,
-                 inner: usize, cols: usize) {
-    debug_assert_eq!(a.len(), rows * inner);
-    debug_assert_eq!(b.len(), cols * inner);
-    debug_assert_eq!(c.len(), rows * cols);
-    for i in 0..rows {
-        let arow = &a[i * inner..(i + 1) * inner];
-        for j in 0..cols {
-            let brow = &b[j * inner..(j + 1) * inner];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            c[i * cols + j] += acc;
-        }
-    }
-}
+//
+// The accumulating matmuls (`matmul_acc` / `matmul_tn_acc` /
+// `matmul_nt_acc`) live in `runtime/kernels.rs` now: lane-chunked,
+// pool-parallel, and property-tested to be bitwise-identical to the
+// scalar references (`kernels::scalar`) at any thread count. The
+// monolithic test oracles below still call the scalar references, so
+// the monolith-vs-DAG bitwise tests also pin kernels-vs-scalar
+// end to end.
 
 fn sigmoid(v: f32) -> f32 {
     1.0 / (1.0 + (-v).exp())
@@ -289,26 +263,26 @@ pub(crate) trait Layer {
     /// for the first node) and produce this node's output activation
     /// plus its backward tape.
     fn forward(&self, params: &ParamSet, input: &[f32],
-               arena: &mut Arena) -> (Vec<f32>, Tape);
+               ctx: &mut Ctx) -> (Vec<f32>, Tape);
 
     /// First backward half: accumulate d(loss)/d(own params) into
     /// `grads[param_range]` from the downstream gradient `dz`.
     fn accumulate_grads(&self, params: &ParamSet, input: &[f32],
                         tape: &Tape, dz: &[f32], grads: &mut [f32],
-                        arena: &mut Arena);
+                        ctx: &mut Ctx);
 
     /// Second backward half: the gradient flowing to the upstream node
     /// (`None` for a node with no trainable upstream), consuming `dz`.
     fn input_grad(&self, params: &ParamSet, input: &[f32], tape: &Tape,
-                  dz: Vec<f32>, arena: &mut Arena) -> Option<Vec<f32>>;
+                  dz: Vec<f32>, ctx: &mut Ctx) -> Option<Vec<f32>>;
 
     /// Full backward: both halves, no emission point. The DAG calls
     /// the halves separately so the bucket launch can sit in between.
     fn backward(&self, params: &ParamSet, input: &[f32], tape: &Tape,
-                dz: Vec<f32>, grads: &mut [f32], arena: &mut Arena)
+                dz: Vec<f32>, grads: &mut [f32], ctx: &mut Ctx)
         -> Option<Vec<f32>> {
-        self.accumulate_grads(params, input, tape, &dz, grads, arena);
-        self.input_grad(params, input, tape, dz, arena)
+        self.accumulate_grads(params, input, tape, &dz, grads, ctx);
+        self.input_grad(params, input, tape, dz, ctx)
     }
 }
 
@@ -324,7 +298,7 @@ pub(crate) struct LayerDag {
 impl LayerDag {
     /// Forward chain; returns per-node output activations and tapes
     /// (acts.last() = logits).
-    fn forward(&self, params: &ParamSet, x: &[f32], arena: &mut Arena)
+    fn forward(&self, params: &ParamSet, x: &[f32], ctx: &mut Ctx)
         -> (Vec<Vec<f32>>, Vec<Tape>) {
         let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.nodes.len());
         let mut tapes: Vec<Tape> = Vec::with_capacity(self.nodes.len());
@@ -333,7 +307,7 @@ impl LayerDag {
                 Some(a) => a,
                 None => x,
             };
-            let (out, tape) = node.forward(params, input, arena);
+            let (out, tape) = node.forward(params, input, ctx);
             acts.push(out);
             tapes.push(tape);
         }
@@ -344,8 +318,8 @@ impl LayerDag {
     /// reverse topological order, each fired the moment that node's
     /// gradient slice is final.
     fn grad(&self, params: &ParamSet, x: &[f32], y: &[i32],
-            arena: &mut Arena, sink: &mut dyn GradSink) -> GradOutput {
-        let (acts, tapes) = self.forward(params, x, arena);
+            ctx: &mut Ctx, sink: &mut dyn GradSink) -> GradOutput {
+        let (acts, tapes) = self.forward(params, x, ctx);
         let (loss, mut dz) = softmax_xent_grad(
             acts.last().unwrap(), y, self.batch, self.classes);
         let mut grads = grad_buffer(params.num_params());
@@ -353,37 +327,37 @@ impl LayerDag {
             let node = &self.nodes[i];
             let input: &[f32] = if i == 0 { x } else { &acts[i - 1] };
             node.accumulate_grads(params, input, &tapes[i], &dz,
-                                  &mut grads, arena);
+                                  &mut grads, ctx);
             sink.bucket_ready(
                 BucketReady { layer: i, param_range: node.param_range() },
                 &grads);
             match node.input_grad(params, input, &tapes[i],
-                                  std::mem::take(&mut dz), arena) {
+                                  std::mem::take(&mut dz), ctx) {
                 Some(d) => dz = d,
                 None => break,
             }
         }
-        arena.put(dz);
+        ctx.arena.put(dz);
         for tape in tapes {
-            tape.recycle(arena);
+            tape.recycle(ctx.arena);
         }
         for act in acts {
-            arena.put(act);
+            ctx.arena.put(act);
         }
         GradOutput { loss, grads }
     }
 
     /// Forward-only logits (caller owns the returned buffer; interior
     /// activations and tapes are recycled).
-    fn logits(&self, params: &ParamSet, x: &[f32], arena: &mut Arena)
+    fn logits(&self, params: &ParamSet, x: &[f32], ctx: &mut Ctx)
         -> Vec<f32> {
-        let (mut acts, tapes) = self.forward(params, x, arena);
+        let (mut acts, tapes) = self.forward(params, x, ctx);
         let out = acts.pop().unwrap();
         for tape in tapes {
-            tape.recycle(arena);
+            tape.recycle(ctx.arena);
         }
         for act in acts {
-            arena.put(act);
+            ctx.arena.put(act);
         }
         out
     }
@@ -422,30 +396,35 @@ impl Layer for DenseLayer {
     }
 
     fn forward(&self, params: &ParamSet, input: &[f32],
-               arena: &mut Arena) -> (Vec<f32>, Tape) {
+               ctx: &mut Ctx) -> (Vec<f32>, Tape) {
         let (b, m, n) = (self.batch, self.in_dim, self.out_dim);
         let bias = params.slice(self.bias_view);
         let w = params.slice(self.w_view);
-        let mut z = arena.take_zeroed(b * n);
+        let mut z = ctx.arena.take_zeroed(b * n);
         for row in 0..b {
             z[row * n..(row + 1) * n].copy_from_slice(bias);
         }
-        matmul_acc(input, w, &mut z, b, m, n);
+        kernels::matmul_acc(ctx.pool, input, w, &mut z, b, m, n);
         if self.tanh {
-            for v in &mut z {
-                *v = v.tanh();
-            }
+            // elementwise, so pooled blocks keep per-element op order
+            let zv = SharedMut::new(&mut z);
+            kernels::par_blocks(ctx.pool, b * n, |r| {
+                let zs = unsafe { zv.range(r) };
+                for v in zs {
+                    *v = v.tanh();
+                }
+            });
         }
         (z, Tape::None)
     }
 
     fn accumulate_grads(&self, _params: &ParamSet, input: &[f32],
                         _tape: &Tape, dz: &[f32], grads: &mut [f32],
-                        _arena: &mut Arena) {
+                        ctx: &mut Ctx) {
         let (b, m, n) = (self.batch, self.in_dim, self.out_dim);
         let own = &mut grads[self.range.clone()];
         let (db, dw) = own.split_at_mut(n);
-        matmul_tn_acc(input, dz, dw, m, b, n);
+        kernels::matmul_tn_acc(ctx.pool, input, dz, dw, m, b, n);
         for row in 0..b {
             for (j, dbj) in db.iter_mut().enumerate() {
                 *dbj += dz[row * n + j];
@@ -454,21 +433,25 @@ impl Layer for DenseLayer {
     }
 
     fn input_grad(&self, params: &ParamSet, input: &[f32], _tape: &Tape,
-                  dz: Vec<f32>, arena: &mut Arena) -> Option<Vec<f32>> {
+                  dz: Vec<f32>, ctx: &mut Ctx) -> Option<Vec<f32>> {
         if self.first {
-            arena.put(dz);
+            ctx.arena.put(dz);
             return None;
         }
         let (b, m, n) = (self.batch, self.in_dim, self.out_dim);
         let w = params.slice(self.w_view);
-        let mut dh = arena.take_zeroed(b * m);
-        matmul_nt_acc(&dz, w, &mut dh, b, n, m);
+        let mut dh = ctx.arena.take_zeroed(b * m);
+        kernels::matmul_nt_acc(ctx.pool, &dz, w, &mut dh, b, n, m);
         if self.input_tanh {
-            for (d, &h) in dh.iter_mut().zip(input) {
-                *d *= 1.0 - h * h;
-            }
+            let dv = SharedMut::new(&mut dh);
+            kernels::par_blocks(ctx.pool, b * m, |r| {
+                let ds = unsafe { dv.range(r.clone()) };
+                for (d, &h) in ds.iter_mut().zip(&input[r]) {
+                    *d *= 1.0 - h * h;
+                }
+            });
         }
-        arena.put(dz);
+        ctx.arena.put(dz);
         Some(dh)
     }
 }
@@ -499,7 +482,7 @@ impl Layer for LstmCellLayer {
     }
 
     fn forward(&self, params: &ParamSet, input: &[f32],
-               arena: &mut Arena) -> (Vec<f32>, Tape) {
+               ctx: &mut Ctx) -> (Vec<f32>, Tape) {
         let (b, h, ff) = (self.batch, self.hidden, self.features);
         let bias = params.slice(self.bias_view);
         let wh = params.slice(self.wh_view);
@@ -507,56 +490,74 @@ impl Layer for LstmCellLayer {
 
         let mut hs = Vec::with_capacity(self.seq_len + 1);
         let mut cs = Vec::with_capacity(self.seq_len + 1);
-        hs.push(arena.take_zeroed(b * h));
-        cs.push(arena.take_zeroed(b * h));
+        hs.push(ctx.arena.take_zeroed(b * h));
+        cs.push(ctx.arena.take_zeroed(b * h));
         let mut gates = Vec::with_capacity(self.seq_len);
-        let mut xt = arena.take_zeroed(b * ff);
+        let mut xt = ctx.arena.take_zeroed(b * ff);
         for t in 0..self.seq_len {
             step_input(input, t, b, self.seq_len, ff, &mut xt);
-            let mut z = arena.take_zeroed(b * 4 * h);
+            let mut z = ctx.arena.take_zeroed(b * 4 * h);
             for row in 0..b {
                 z[row * 4 * h..(row + 1) * 4 * h].copy_from_slice(bias);
             }
-            matmul_acc(&xt, wx, &mut z, b, ff, 4 * h);
-            matmul_acc(&hs[t], wh, &mut z, b, h, 4 * h);
+            kernels::matmul_acc(ctx.pool, &xt, wx, &mut z, b, ff, 4 * h);
+            kernels::matmul_acc(ctx.pool, &hs[t], wh, &mut z, b, h,
+                                4 * h);
 
-            let mut gi = arena.take_zeroed(b * h);
-            let mut gf = arena.take_zeroed(b * h);
-            let mut gg = arena.take_zeroed(b * h);
-            let mut go = arena.take_zeroed(b * h);
-            let mut c_new = arena.take_zeroed(b * h);
-            let mut h_new = arena.take_zeroed(b * h);
-            let c_prev = &cs[t];
-            for row in 0..b {
-                for j in 0..h {
-                    let zrow = &z[row * 4 * h..(row + 1) * 4 * h];
-                    let k = row * h + j;
-                    let i = sigmoid(zrow[j]);
-                    let f = sigmoid(zrow[h + j] + FORGET_BIAS);
-                    let g = zrow[2 * h + j].tanh();
-                    let o = sigmoid(zrow[3 * h + j]);
-                    let c = f * c_prev[k] + i * g;
-                    gi[k] = i;
-                    gf[k] = f;
-                    gg[k] = g;
-                    go[k] = o;
-                    c_new[k] = c;
-                    h_new[k] = o * c.tanh();
-                }
+            let mut gi = ctx.arena.take_zeroed(b * h);
+            let mut gf = ctx.arena.take_zeroed(b * h);
+            let mut gg = ctx.arena.take_zeroed(b * h);
+            let mut go = ctx.arena.take_zeroed(b * h);
+            let mut c_new = ctx.arena.take_zeroed(b * h);
+            let mut h_new = ctx.arena.take_zeroed(b * h);
+            {
+                // Gate activations are per-element independent, so the
+                // pooled blocks compute each k with the exact scalar op
+                // sequence — bitwise-identical at any thread count.
+                // Writes land in six disjoint output buffers at unique
+                // k, so the element-wise views cannot alias.
+                let c_prev: &[f32] = &cs[t];
+                let zr: &[f32] = &z;
+                let vi = SharedMut::new(&mut gi);
+                let vf = SharedMut::new(&mut gf);
+                let vg = SharedMut::new(&mut gg);
+                let vo = SharedMut::new(&mut go);
+                let vc = SharedMut::new(&mut c_new);
+                let vh = SharedMut::new(&mut h_new);
+                kernels::par_blocks(ctx.pool, b * h, |range| {
+                    for k in range {
+                        let row = k / h;
+                        let j = k % h;
+                        let zrow = &zr[row * 4 * h..(row + 1) * 4 * h];
+                        let i = sigmoid(zrow[j]);
+                        let f = sigmoid(zrow[h + j] + FORGET_BIAS);
+                        let g = zrow[2 * h + j].tanh();
+                        let o = sigmoid(zrow[3 * h + j]);
+                        let c = f * c_prev[k] + i * g;
+                        unsafe {
+                            vi.write(k, i);
+                            vf.write(k, f);
+                            vg.write(k, g);
+                            vo.write(k, o);
+                            vc.write(k, c);
+                            vh.write(k, o * c.tanh());
+                        }
+                    }
+                });
             }
-            arena.put(z);
+            ctx.arena.put(z);
             gates.push([gi, gf, gg, go]);
             hs.push(h_new);
             cs.push(c_new);
         }
-        arena.put(xt);
+        ctx.arena.put(xt);
         let out = hs.pop().unwrap();
         (out, Tape::Lstm { hs, cs, gates })
     }
 
     fn accumulate_grads(&self, params: &ParamSet, input: &[f32],
                         tape: &Tape, dz: &[f32], grads: &mut [f32],
-                        arena: &mut Arena) {
+                        ctx: &mut Ctx) {
         let Tape::Lstm { hs, cs, gates } = tape else {
             unreachable!("LSTM cell backward needs its recurrence tape")
         };
@@ -570,32 +571,54 @@ impl Layer for LstmCellLayer {
         let (dwh, dwx) = rest.split_at_mut(h * 4 * h);
 
         // dh flowing into the last hidden state (from the head)
-        let mut dh = arena.take_zeroed(b * h);
+        let mut dh = ctx.arena.take_zeroed(b * h);
         dh.copy_from_slice(dz);
-        let mut dc = arena.take_zeroed(b * h);
-        let mut xt = arena.take_zeroed(b * ff);
-        let mut dzg = arena.take_zeroed(b * 4 * h);
+        let mut dc = ctx.arena.take_zeroed(b * h);
+        let mut xt = ctx.arena.take_zeroed(b * ff);
+        let mut dzg = ctx.arena.take_zeroed(b * 4 * h);
         for t in (0..self.seq_len).rev() {
             let [gi, gf, gg, go] = &gates[t];
             let c_new = &cs[t + 1];
             let c_prev = &cs[t];
-            for k in 0..b * h {
-                let tc = c_new[k].tanh();
-                let dck = dc[k] + dh[k] * go[k] * (1.0 - tc * tc);
-                let dok = dh[k] * tc;
-                let row = k / h;
-                let j = k % h;
-                let zrow = &mut dzg[row * 4 * h..(row + 1) * 4 * h];
-                zrow[j] = dck * gg[k] * gi[k] * (1.0 - gi[k]);
-                zrow[h + j] = dck * c_prev[k] * gf[k] * (1.0 - gf[k]);
-                zrow[2 * h + j] = dck * gi[k] * (1.0 - gg[k] * gg[k]);
-                zrow[3 * h + j] = dok * go[k] * (1.0 - go[k]);
-                // carry to c_{t-1}; dh_{t-1} is recomputed below
-                dc[k] = dck * gf[k];
+            {
+                // Per-element independent like the forward gate loop:
+                // each k reads/writes only its own dc[k] and its own
+                // four dzg slots (row/j are unique per k), so pooled
+                // blocks keep the scalar op order bit for bit.
+                let dhr: &[f32] = &dh;
+                let vdz = SharedMut::new(&mut dzg);
+                let vdc = SharedMut::new(&mut dc);
+                kernels::par_blocks(ctx.pool, b * h, |range| {
+                    for k in range {
+                        let tc = c_new[k].tanh();
+                        let dck = unsafe { vdc.read(k) }
+                            + dhr[k] * go[k] * (1.0 - tc * tc);
+                        let dok = dhr[k] * tc;
+                        let row = k / h;
+                        let j = k % h;
+                        let zoff = row * 4 * h;
+                        unsafe {
+                            vdz.write(zoff + j,
+                                      dck * gg[k] * gi[k] * (1.0 - gi[k]));
+                            vdz.write(zoff + h + j,
+                                      dck * c_prev[k] * gf[k]
+                                          * (1.0 - gf[k]));
+                            vdz.write(zoff + 2 * h + j,
+                                      dck * gi[k] * (1.0 - gg[k] * gg[k]));
+                            vdz.write(zoff + 3 * h + j,
+                                      dok * go[k] * (1.0 - go[k]));
+                            // carry to c_{t-1}; dh_{t-1} is recomputed
+                            // below
+                            vdc.write(k, dck * gf[k]);
+                        }
+                    }
+                });
             }
             step_input(input, t, b, self.seq_len, ff, &mut xt);
-            matmul_tn_acc(&xt, &dzg, dwx, ff, b, 4 * h);
-            matmul_tn_acc(&hs[t], &dzg, dwh, h, b, 4 * h);
+            kernels::matmul_tn_acc(ctx.pool, &xt, &dzg, dwx, ff, b,
+                                   4 * h);
+            kernels::matmul_tn_acc(ctx.pool, &hs[t], &dzg, dwh, h, b,
+                                   4 * h);
             for row in 0..b {
                 for (j, dbj) in db.iter_mut().enumerate() {
                     *dbj += dzg[row * 4 * h + j];
@@ -604,19 +627,20 @@ impl Layer for LstmCellLayer {
             for v in dh.iter_mut() {
                 *v = 0.0;
             }
-            matmul_nt_acc(&dzg, wh, &mut dh, b, 4 * h, h);
+            kernels::matmul_nt_acc(ctx.pool, &dzg, wh, &mut dh, b,
+                                   4 * h, h);
         }
-        arena.put(dh);
-        arena.put(dc);
-        arena.put(xt);
-        arena.put(dzg);
+        ctx.arena.put(dh);
+        ctx.arena.put(dc);
+        ctx.arena.put(xt);
+        ctx.arena.put(dzg);
     }
 
     fn input_grad(&self, _params: &ParamSet, _input: &[f32],
-                  _tape: &Tape, dz: Vec<f32>, arena: &mut Arena)
+                  _tape: &Tape, dz: Vec<f32>, ctx: &mut Ctx)
         -> Option<Vec<f32>> {
         // first node: gradients w.r.t. the raw input are not needed
-        arena.put(dz);
+        ctx.arena.put(dz);
         None
     }
 }
@@ -657,20 +681,24 @@ impl NativeModel {
             dag,
             arenas: Mutex::new(Vec::new()),
             reuse_scratch: AtomicBool::new(true),
+            pool: Mutex::new(Arc::new(ThreadPool::new(1))),
         })
     }
 
     /// Run `f` on a pooled arena (or a throwaway one when reuse is
-    /// off). The pool holds one arena per concurrent caller, so
-    /// threads never contend on buffer contents.
-    fn with_arena<R>(&self, f: impl FnOnce(&mut Arena) -> R) -> R {
+    /// off) plus the current compute pool. The arena pool holds one
+    /// arena per concurrent caller, so threads never contend on buffer
+    /// contents; the compute pool is shared (its submit lock
+    /// serializes concurrent steps' parallel loops).
+    fn with_ctx<R>(&self, f: impl FnOnce(&mut Ctx) -> R) -> R {
+        let pool = self.pool.lock().unwrap().clone();
         let reuse = self.reuse_scratch.load(Ordering::Relaxed);
         let mut arena = if reuse {
             self.arenas.lock().unwrap().pop().unwrap_or_else(Arena::new)
         } else {
             Arena::new()
         };
-        let out = f(&mut arena);
+        let out = f(&mut Ctx { arena: &mut arena, pool: &pool });
         if reuse {
             self.arenas.lock().unwrap().push(arena);
         }
@@ -686,6 +714,24 @@ impl NativeModel {
         }
     }
 
+    /// Resize the compute pool (`0` = auto: the host's available
+    /// parallelism). Safe at any point between steps; results are
+    /// bitwise-identical at every size, so this is purely a throughput
+    /// knob. No-op when the pool already has the requested size.
+    pub(crate) fn set_threads(&self, n: usize) {
+        let target = if n == 0 { ThreadPool::auto_threads() } else { n };
+        let mut pool = self.pool.lock().unwrap();
+        if pool.threads() != target {
+            *pool = Arc::new(ThreadPool::new(target));
+        }
+    }
+
+    /// The live compute pool (for the optimizer step loops and the
+    /// wire codec, which share it — see DESIGN.md §Compute kernels).
+    pub(crate) fn thread_pool(&self) -> Arc<ThreadPool> {
+        self.pool.lock().unwrap().clone()
+    }
+
     pub(crate) fn grad_step(&self, params: &ParamSet, x: &[f32],
                             y: &[i32]) -> Result<GradOutput, RuntimeError> {
         self.grad_step_overlapped(params, x, y, &mut ())
@@ -698,26 +744,24 @@ impl NativeModel {
                                        x: &[f32], y: &[i32],
                                        sink: &mut dyn GradSink)
         -> Result<GradOutput, RuntimeError> {
-        Ok(self.with_arena(|arena| {
-            self.dag.grad(params, x, y, arena, sink)
-        }))
+        Ok(self.with_ctx(|ctx| self.dag.grad(params, x, y, ctx, sink)))
     }
 
     pub(crate) fn eval_step(&self, params: &ParamSet, x: &[f32],
                             y: &[i32]) -> Result<(f32, f32), RuntimeError> {
         let (batch, classes) = self.out_shape();
-        Ok(self.with_arena(|arena| {
-            let logits = self.dag.logits(params, x, arena);
+        Ok(self.with_ctx(|ctx| {
+            let logits = self.dag.logits(params, x, ctx);
             let (loss, _) = softmax_xent_grad(&logits, y, batch, classes);
             let ncorrect = argmax_correct(&logits, y, batch, classes);
-            arena.put(logits);
+            ctx.arena.put(logits);
             (loss, ncorrect)
         }))
     }
 
     pub(crate) fn predict(&self, params: &ParamSet, x: &[f32])
         -> Result<Vec<f32>, RuntimeError> {
-        Ok(self.with_arena(|arena| self.dag.logits(params, x, arena)))
+        Ok(self.with_ctx(|ctx| self.dag.logits(params, x, ctx)))
     }
 
     fn out_shape(&self) -> (usize, usize) {
@@ -1350,8 +1394,10 @@ mod tests {
         let meta = meta_for_key("mlp_b10").unwrap();
         let dag = MlpNet::from_meta(&meta).unwrap().into_dag(&meta);
         let (params, x, y) = test_inputs(&meta, 11);
+        let pool = ThreadPool::new(1);
         let mut arena = Arena::new();
-        let (acts, tapes) = dag.forward(&params, &x, &mut arena);
+        let mut ctx = Ctx { arena: &mut arena, pool: &pool };
+        let (acts, tapes) = dag.forward(&params, &x, &mut ctx);
         let (_, dz) = softmax_xent_grad(acts.last().unwrap(), &y,
                                         meta.batch, meta.classes);
         let last = dag.nodes.len() - 1;
@@ -1359,15 +1405,15 @@ mod tests {
         let input = &acts[last - 1];
         let mut split = grad_buffer(params.num_params());
         node.accumulate_grads(&params, input, &tapes[last], &dz,
-                              &mut split, &mut arena);
+                              &mut split, &mut ctx);
         let d_split = node
             .input_grad(&params, input, &tapes[last], dz.clone(),
-                        &mut arena)
+                        &mut ctx)
             .unwrap();
         let mut combined = grad_buffer(params.num_params());
         let d_combined = node
             .backward(&params, input, &tapes[last], dz, &mut combined,
-                      &mut arena)
+                      &mut ctx)
             .unwrap();
         assert!(split
             .iter()
@@ -1402,6 +1448,32 @@ mod tests {
                     .zip(&other.grads)
                     .all(|(a, b)| a.to_bits() == b.to_bits()),
                         "{key}: arena reuse changed the gradient");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_gradients() {
+        // The entire compute-engine contract in one place: loss and
+        // every gradient element bitwise-identical across pool sizes
+        // (1 = the legacy inline path).
+        for key in ["mlp_b10", "lstm_b10", "mlp_b100"] {
+            let meta = meta_for_key(key).unwrap();
+            let model = NativeModel::from_meta(&meta).unwrap();
+            let (params, x, y) = test_inputs(&meta, 4096);
+            let base = model.grad_step(&params, &x, &y).unwrap();
+            for threads in [2usize, 4, 1] {
+                model.set_threads(threads);
+                let out = model.grad_step(&params, &x, &y).unwrap();
+                assert_eq!(base.loss.to_bits(), out.loss.to_bits(),
+                           "{key} t={threads}");
+                assert!(base
+                    .grads
+                    .iter()
+                    .zip(&out.grads)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{key} t={threads}: gradient depends on the \
+                         thread count");
             }
         }
     }

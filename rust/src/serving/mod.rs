@@ -180,6 +180,11 @@ pub struct ServeConfig {
     pub poll_ms: u64,
     /// Per-batch replica deadline before mark-dead + retry.
     pub replica_timeout_ms: u64,
+    /// Compute threads for the native kernel pool behind every
+    /// forward pass (replica ranks share the executor, so this covers
+    /// them too). `0` = auto-detect; predictions are bitwise-identical
+    /// at any value.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -195,6 +200,7 @@ impl Default for ServeConfig {
             base_port: 47800,
             poll_ms: 500,
             replica_timeout_ms: 2_000,
+            threads: 0,
         }
     }
 }
@@ -270,6 +276,9 @@ impl ServeConfig {
         }
         if let Some(v) = num("replica_timeout_ms", j)? {
             cfg.replica_timeout_ms = v as u64;
+        }
+        if let Some(v) = num("threads", j)? {
+            cfg.threads = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -361,6 +370,9 @@ pub fn start(cfg: &ServeConfig) -> Result<ServeHandle, String> {
         .ok_or_else(|| format!("unknown model key {}", cfg.model_key()))?;
     let exe = Arc::new(
         ModelExecutables::native(&meta).map_err(|e| e.to_string())?);
+    // Size the compute pool once; replica ranks share this executor,
+    // so they inherit the thread count.
+    exe.set_threads(cfg.threads);
 
     // Initial weights: newest checkpoint if the dir has one.
     let mut initial_fp = None;
@@ -536,10 +548,12 @@ mod tests {
         assert_eq!(cfg.port, 9000);
         assert_eq!(cfg.replicas, 2);
         assert_eq!(cfg.batch_deadline_ms, 3);
+        assert_eq!(cfg.threads, 0, "default 0 = auto-detect");
         // Bare object (no "serve" wrapper) works too.
-        let cfg = ServeConfig::from_json_text(r#"{"model": "lstm"}"#)
-            .unwrap();
+        let cfg = ServeConfig::from_json_text(
+            r#"{"model": "lstm", "threads": 2}"#).unwrap();
         assert_eq!(cfg.model, "lstm");
+        assert_eq!(cfg.threads, 2);
     }
 
     #[test]

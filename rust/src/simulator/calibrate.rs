@@ -30,6 +30,14 @@ pub struct Calibration {
     /// predicted divergence against this noise floor so a jittery host
     /// is not mistaken for a mis-planned topology.
     pub grad_rel_spread: f64,
+    /// Measured single-thread GEMM throughput of the compute engine,
+    /// GFLOP/s (the calibration shape of
+    /// [`crate::runtime::kernels::gemm_gflops`]).
+    pub gemm_gflops_t1: f64,
+    /// The same probe on the executables' actual kernel pool.
+    pub gemm_gflops_pool: f64,
+    /// Thread count of the pool `gemm_gflops_pool` was measured on.
+    pub pool_threads: usize,
 }
 
 /// Median and relative spread (stddev / median) of a sample set.
@@ -119,8 +127,24 @@ pub fn measure_costs(exes: &ModelExecutables, opt: &OptimizerConfig,
         .collect();
     let (t_update, _) = median_and_spread(&update_samples);
 
+    // GEMM throughput probe, serial vs the executables' actual pool:
+    // the two points pin the cost model's Amdahl compute term (see
+    // `Calibration::apply`). The shape matches the LSTM backward's
+    // dominant matmul, comfortably above the kernels' inline cutoff.
+    let serial = crate::util::threadpool::ThreadPool::new(1);
+    let gemm_gflops_t1 =
+        crate::runtime::kernels::gemm_gflops(&serial, 100, 480, 64, 3);
+    let pool = exes.thread_pool();
+    let pool_threads = pool.threads();
+    let gemm_gflops_pool = if pool_threads > 1 {
+        crate::runtime::kernels::gemm_gflops(&pool, 100, 480, 64, 3)
+    } else {
+        gemm_gflops_t1
+    };
+
     Calibration { t_grad, batch: meta.batch, t_update, t_eval_batch,
-                  grad_rel_spread }
+                  grad_rel_spread, gemm_gflops_t1, gemm_gflops_pool,
+                  pool_threads }
 }
 
 impl Calibration {
@@ -136,6 +160,27 @@ impl Calibration {
             / self.batch as f64;
         cost.t_update = self.t_update;
         cost.t_val = 0.0;
+        self.apply_gemm(cost);
+    }
+
+    /// Inject the measured GEMM throughput: the serial probe becomes
+    /// the base, and when the pool probe ran on >= 2 threads the two
+    /// points solve the Amdahl parallel fraction exactly
+    /// (`s = 1/((1-f) + f/t)` → `f = (1 - 1/s) / (1 - 1/t)`). A
+    /// 1-thread pool carries no scaling information, so the preset's
+    /// fraction is kept.
+    pub fn apply_gemm(&self, cost: &mut CostModel) {
+        if self.gemm_gflops_t1 <= 0.0 {
+            return;
+        }
+        cost.gemm_base_gflops = self.gemm_gflops_t1;
+        if self.pool_threads > 1 && self.gemm_gflops_pool > 0.0 {
+            let s = (self.gemm_gflops_pool / self.gemm_gflops_t1)
+                .max(1.0);
+            let t = self.pool_threads as f64;
+            let f = (1.0 - 1.0 / s) / (1.0 - 1.0 / t);
+            cost.gemm_parallel_frac = f.clamp(0.0, 0.999);
+        }
     }
 
     /// Two-point calibration from a second, smaller-batch measurement:
@@ -261,7 +306,10 @@ mod tests {
     fn calibration_apply_splits_fixed_and_per_sample() {
         let cal = Calibration { t_grad: 1.0e-2, batch: 100,
                                 t_update: 2.0e-5, t_eval_batch: 5.0e-3,
-                                grad_rel_spread: 0.01 };
+                                grad_rel_spread: 0.01,
+                                gemm_gflops_t1: 2.0,
+                                gemm_gflops_pool: 6.0,
+                                pool_threads: 4 };
         let mut cost = CostModel::cluster(3_023);
         cal.apply(&mut cost);
         assert!((cost.t_grad_fixed - 1.5e-3).abs() < 1e-15);
@@ -269,5 +317,36 @@ mod tests {
         // the projected time at the measured batch reproduces t_grad
         assert!((cost.grad_time_nominal(100) - cal.t_grad).abs()
                     < 1e-12);
+    }
+
+    #[test]
+    fn gemm_calibration_solves_the_amdahl_fraction() {
+        // a measured 3x speedup on 4 threads: f = (1-1/3)/(1-1/4) = 8/9
+        let cal = Calibration { t_grad: 1.0e-2, batch: 100,
+                                t_update: 2.0e-5, t_eval_batch: 5.0e-3,
+                                grad_rel_spread: 0.01,
+                                gemm_gflops_t1: 2.0,
+                                gemm_gflops_pool: 6.0,
+                                pool_threads: 4 };
+        let mut cost = CostModel::cluster(3_023);
+        cal.apply(&mut cost);
+        assert_eq!(cost.gemm_base_gflops, 2.0);
+        assert!((cost.gemm_parallel_frac - 8.0 / 9.0).abs() < 1e-12);
+        // the model reproduces the measured point exactly
+        assert!((cost.gemm_gflops(4) - 6.0).abs() < 1e-9);
+        // a serial pool keeps the preset's fraction (no information)
+        let mut cost = CostModel::cluster(3_023);
+        let preset_frac = cost.gemm_parallel_frac;
+        let serial = Calibration { gemm_gflops_pool: 2.0,
+                                   pool_threads: 1, ..cal };
+        serial.apply(&mut cost);
+        assert_eq!(cost.gemm_base_gflops, 2.0);
+        assert_eq!(cost.gemm_parallel_frac, preset_frac);
+        // an unmeasured probe (0.0) leaves the whole term alone
+        let mut cost = CostModel::cluster(3_023);
+        let none = Calibration { gemm_gflops_t1: 0.0, ..cal };
+        none.apply_gemm(&mut cost);
+        assert_eq!(cost.gemm_base_gflops,
+                   CostModel::cluster(3_023).gemm_base_gflops);
     }
 }

@@ -42,6 +42,17 @@ pub struct CostModel {
     /// unaffected, which is exactly why compression helps most in the
     /// bandwidth-bound regime.
     pub wire_ratio: f64,
+    /// Single-thread GEMM throughput of the rank's compute engine,
+    /// GFLOP/s (`runtime::kernels`, 2mkn flops per matmul). Calibrated
+    /// from a live [`crate::runtime::kernels::gemm_gflops`] probe in
+    /// auto mode; the preset values are plausible defaults for the
+    /// closed-form BENCH blocks.
+    pub gemm_base_gflops: f64,
+    /// Amdahl parallel fraction of the kernel work: the share of a
+    /// GEMM that scales with `--threads` (row blocks), the rest being
+    /// serial dispatch + cache effects. `gemm_speedup` turns this plus
+    /// a thread count into a throughput multiplier.
+    pub gemm_parallel_frac: f64,
 }
 
 impl CostModel {
@@ -60,6 +71,8 @@ impl CostModel {
             msg_bytes: (n_params * 4 + 28) as f64,
             jitter: 0.05,
             wire_ratio: 1.0,
+            gemm_base_gflops: 4.0,
+            gemm_parallel_frac: 0.95,
         }
     }
 
@@ -91,6 +104,9 @@ impl CostModel {
             msg_bytes: (n_params * 4 + 28) as f64,
             jitter: 0.1,
             wire_ratio: 1.0,
+            // GPU workers: high base throughput, near-perfect scaling
+            gemm_base_gflops: 180.0,
+            gemm_parallel_frac: 0.99,
         }
     }
 
@@ -109,6 +125,8 @@ impl CostModel {
             msg_bytes: (n_params * 4 + 28) as f64,
             jitter: 0.1,
             wire_ratio: 1.0,
+            gemm_base_gflops: 4.0,
+            gemm_parallel_frac: 0.95,
         }
     }
 
@@ -121,6 +139,38 @@ impl CostModel {
     /// Nominal (jitter-free) gradient time for a batch.
     pub fn grad_time_nominal(&self, batch: usize) -> f64 {
         self.t_grad_fixed + batch as f64 * self.t_grad_per_sample
+    }
+
+    /// Amdahl throughput multiplier of the kernel pool at `threads`
+    /// compute threads: `1 / ((1-f) + f/t)` with `f =
+    /// gemm_parallel_frac`. Monotonic in `t`, capped at `1/(1-f)`;
+    /// `threads <= 1` is exactly 1.0 (the serial path).
+    pub fn gemm_speedup(&self, threads: usize) -> f64 {
+        let t = threads.max(1) as f64;
+        let f = self.gemm_parallel_frac.clamp(0.0, 1.0);
+        1.0 / ((1.0 - f) + f / t)
+    }
+
+    /// Modeled GEMM throughput at `threads`, GFLOP/s. A shape below
+    /// the kernels' inline cutoff (`MIN_FLOPS_PER_PART` per part —
+    /// too small to farm out) runs serially regardless of the pool,
+    /// which [`CostModel::gemm_time`] accounts for.
+    pub fn gemm_gflops(&self, threads: usize) -> f64 {
+        self.gemm_base_gflops * self.gemm_speedup(threads)
+    }
+
+    /// Modeled wall time of one `m x k x k x n` GEMM (2mkn flops) at
+    /// `threads`. Mirrors the engine's inline cutoff: a matmul whose
+    /// flops cannot fill two minimum-size row parts stays on the
+    /// serial path, so small shapes see no speedup (and no pool
+    /// overhead either).
+    pub fn gemm_time(&self, m: usize, k: usize, n: usize,
+                     threads: usize) -> f64 {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let min_flops_per_part =
+            crate::runtime::kernels::MIN_FLOPS_PER_PART as f64;
+        let t = if flops < 2.0 * min_flops_per_part { 1 } else { threads };
+        flops / (self.gemm_gflops(t) * 1e9)
     }
 
     /// Jittered gradient time draw.
@@ -488,6 +538,37 @@ mod tests {
         assert!(one < 1.0 && two < one, "{one} {two}");
         assert!(one > 0.99, "a 30 s recovery in a 1 h run: {one}");
         assert_eq!(c.churn_retention(0.0, 7, 1, 30.0), 0.0);
+    }
+
+    #[test]
+    fn gemm_compute_term_shape() {
+        let c = CostModel::cluster(3_023);
+        // serial is the identity; speedup grows monotonically with
+        // threads and stays under the Amdahl cap 1/(1-f)
+        assert_eq!(c.gemm_speedup(0), 1.0);
+        assert_eq!(c.gemm_speedup(1), 1.0);
+        let s2 = c.gemm_speedup(2);
+        let s4 = c.gemm_speedup(4);
+        let s64 = c.gemm_speedup(64);
+        assert!(s2 > 1.0 && s4 > s2 && s64 > s4, "{s2} {s4} {s64}");
+        assert!(s64 < 1.0 / (1.0 - c.gemm_parallel_frac) + 1e-9);
+        // throughput scales with the speedup
+        assert!((c.gemm_gflops(4)
+                     - c.gemm_base_gflops * s4).abs() < 1e-9);
+        // a large GEMM gets faster with threads...
+        let big1 = c.gemm_time(100, 480, 64, 1);
+        let big4 = c.gemm_time(100, 480, 64, 4);
+        assert!(big4 < big1, "{big4} !< {big1}");
+        assert!((big1 / big4 - s4).abs() < 1e-9);
+        // ...but a shape under the inline cutoff runs serially at any
+        // thread count (the engine never farms it out)
+        assert_eq!(c.gemm_time(8, 8, 8, 4), c.gemm_time(8, 8, 8, 1));
+        // all presets carry a sane compute term
+        for m in [CostModel::shared_memory(100),
+                  CostModel::paper_gpu(100), CostModel::cluster(100)] {
+            assert!(m.gemm_base_gflops > 0.0);
+            assert!((0.0..1.0).contains(&m.gemm_parallel_frac));
+        }
     }
 
     #[test]

@@ -10,3 +10,4 @@ pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,443 @@
+//! Dependency-free persistent compute pool for intra-rank parallelism.
+//!
+//! The native backend's GEMMs, the optimizer step loops, and the fp16
+//! wire codec are all embarrassingly parallel across disjoint index
+//! ranges — but spawning OS threads per call would cost more than the
+//! loops themselves, and a work-stealing runtime would make the
+//! partition (and therefore the floating-point story) depend on timing.
+//! This pool does the minimum that preserves determinism:
+//!
+//! * **Spawn once, reuse forever.** [`ThreadPool::new`] spawns
+//!   `threads - 1` helper threads that park on a condvar; the caller of
+//!   [`ThreadPool::run`] is always participant 0, so a 1-thread pool
+//!   has no helpers and runs every part inline — byte-for-byte the
+//!   pre-pool code path.
+//! * **Static partitioning.** Work is split into `parts` blocks
+//!   *before* execution ([`block_range`]); threads claim whole blocks
+//!   from an atomic counter. Which thread runs a block can vary with
+//!   timing, but the block boundaries — and therefore every
+//!   floating-point accumulation order inside a block — cannot.
+//! * **Scoped joins.** `run` does not return until every part has
+//!   finished, so the closure may safely borrow the caller's stack
+//!   (internally the borrow is lifetime-erased for the helpers; the
+//!   join is what makes that sound).
+//!
+//! One `run` executes at a time per pool (a submit mutex serializes
+//! concurrent callers — e.g. several in-process ranks sharing one
+//! `ModelExecutables`), which also keeps the helper protocol trivial.
+//!
+//! Sizing comes from `--threads` / JSON `"threads"` /
+//! `Experiment::threads()`; `0` means [`ThreadPool::auto_threads`]
+//! (`std::thread::available_parallelism`). See DESIGN.md §Compute
+//! kernels for how the kernels keep results bitwise-identical at any
+//! thread count.
+
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Persistent pool of compute threads with scoped, statically
+/// partitioned parallel loops. See the module docs for the guarantees.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    /// Serializes concurrent `run` callers (one job in flight).
+    submit: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Helpers park here waiting for a job epoch they have not seen.
+    work: Condvar,
+    /// The submitter parks here waiting for the last part to finish.
+    done: Condvar,
+}
+
+struct PoolState {
+    job: Option<Arc<Job>>,
+    /// Bumped once per submitted job so helpers never re-run one.
+    epoch: u64,
+    shutdown: bool,
+}
+
+/// One submitted parallel loop: a lifetime-erased task plus the claim
+/// and completion counters.
+struct Job {
+    task: RawTask,
+    parts: usize,
+    next: AtomicUsize,
+    finished: AtomicUsize,
+}
+
+/// Lifetime-erased `&(dyn Fn(usize) + Sync)`. Sound because the
+/// submitter blocks in [`ThreadPool::run`] until `finished == parts`,
+/// i.e. until no helper can ever dereference this again.
+struct RawTask(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for RawTask {}
+unsafe impl Sync for RawTask {}
+
+impl RawTask {
+    fn call(&self, part: usize) {
+        unsafe { (*self.0)(part) }
+    }
+}
+
+/// The `idx`-th of `parts` contiguous blocks covering `0..total`, with
+/// the remainder spread one element each over the leading blocks. The
+/// deterministic partition every pooled loop uses.
+pub fn block_range(total: usize, parts: usize, idx: usize) -> Range<usize> {
+    debug_assert!(idx < parts);
+    let base = total / parts;
+    let rem = total % parts;
+    let start = idx * base + idx.min(rem);
+    let len = base + usize::from(idx < rem);
+    start..start + len
+}
+
+impl ThreadPool {
+    /// Build a pool of `threads` participants (`0` =>
+    /// [`ThreadPool::auto_threads`]). Spawns `threads - 1` helper OS
+    /// threads; a 1-thread pool spawns nothing and `run` degenerates
+    /// to an inline loop.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = if threads == 0 {
+            Self::auto_threads()
+        } else {
+            threads
+        };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("mpl-compute-{i}"))
+                    .spawn(move || helper_loop(&shared))
+                    .expect("spawn compute helper")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            submit: Mutex::new(()),
+            handles,
+            threads,
+        }
+    }
+
+    /// What `threads = 0` resolves to: the host's available
+    /// parallelism (1 if the host will not say).
+    pub fn auto_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    /// Number of participants (helpers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0)..f(parts - 1)`, each part exactly once, returning
+    /// only when all parts have finished (scoped join). The caller
+    /// participates, so a helper-less pool runs everything inline, in
+    /// part order. Parts are claimed whole from an atomic counter —
+    /// the partition is static, only the part→thread assignment is
+    /// timing-dependent.
+    pub fn run(&self, parts: usize, f: impl Fn(usize) + Sync) {
+        if parts == 0 {
+            return;
+        }
+        if self.handles.is_empty() || parts == 1 {
+            for i in 0..parts {
+                f(i);
+            }
+            return;
+        }
+        let _guard = self.submit.lock().unwrap();
+        let task: &(dyn Fn(usize) + Sync) = &f;
+        #[allow(clippy::missing_transmute_annotations)]
+        let job = Arc::new(Job {
+            // Erase the stack lifetime; the join below re-establishes it.
+            task: RawTask(unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize) + Sync),
+                    &'static (dyn Fn(usize) + Sync),
+                >(task)
+            }),
+            parts,
+            next: AtomicUsize::new(0),
+            finished: AtomicUsize::new(0),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(Arc::clone(&job));
+            st.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        // Participate: claim blocks like any helper.
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= parts {
+                break;
+            }
+            f(i);
+            job.finished.fetch_add(1, Ordering::Release);
+        }
+        // Scoped join: `f` (and everything it borrows) stays alive
+        // until the last helper bumps `finished` to `parts`.
+        let mut st = self.shared.state.lock().unwrap();
+        while job.finished.load(Ordering::Acquire) < parts {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+
+    /// Parallel loop over `0..total` in contiguous blocks of at least
+    /// `min_per_part` elements (fewer parts when the work is small, so
+    /// tiny loops stay inline and fast). `f` receives each block's
+    /// index range; ranges are disjoint and cover `0..total`.
+    pub fn run_blocks(
+        &self,
+        total: usize,
+        min_per_part: usize,
+        f: impl Fn(Range<usize>) + Sync,
+    ) {
+        if total == 0 {
+            return;
+        }
+        let by_work = if min_per_part == 0 {
+            self.threads
+        } else {
+            total.div_ceil(min_per_part)
+        };
+        let parts = self.threads.min(by_work).max(1);
+        self.run(parts, |i| f(block_range(total, parts, i)));
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn helper_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    // The job may already be complete and cleared (we
+                    // slept through it); just record the epoch and wait
+                    // for the next one.
+                    if let Some(j) = st.job.as_ref() {
+                        break Arc::clone(j);
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.parts {
+                break;
+            }
+            job.task.call(i);
+            job.finished.fetch_add(1, Ordering::Release);
+        }
+        // Wake the submitter under the lock so its recheck cannot miss
+        // the final increment.
+        let _st = shared.state.lock().unwrap();
+        shared.done.notify_one();
+    }
+}
+
+/// A `&mut [T]` that several pool parts may slice **disjointly**. The
+/// pooled kernels partition output buffers into non-overlapping ranges
+/// (one per part) before running; this wrapper carries the base
+/// pointer across the `Sync` closure boundary so each part can
+/// reborrow its own range.
+pub struct SharedMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for SharedMut<'_, T> {}
+unsafe impl<T: Send> Send for SharedMut<'_, T> {}
+
+impl<'a, T> SharedMut<'a, T> {
+    /// Wrap a mutable slice for disjoint parallel sub-slicing.
+    pub fn new(slice: &'a mut [T]) -> SharedMut<'a, T> {
+        SharedMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Reborrow `range` of the underlying slice.
+    ///
+    /// # Safety
+    /// Callers must guarantee that concurrently live ranges are
+    /// disjoint (the pooled loops guarantee it by construction:
+    /// [`block_range`] partitions are non-overlapping).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(
+            self.ptr.add(range.start),
+            range.end - range.start,
+        )
+    }
+
+    /// Write one element. For loops whose per-part writes are
+    /// element-disjoint but not range-contiguous (e.g. the LSTM gate
+    /// buffer, indexed `row*4h + lane`).
+    ///
+    /// # Safety
+    /// No two concurrently running parts may touch the same `idx`.
+    pub unsafe fn write(&self, idx: usize, v: T) {
+        debug_assert!(idx < self.len);
+        self.ptr.add(idx).write(v);
+    }
+
+    /// Read one element (same disjointness contract as
+    /// [`SharedMut::write`]: only the part that owns `idx` may access
+    /// it).
+    ///
+    /// # Safety
+    /// No concurrently running part may write `idx` while this reads.
+    pub unsafe fn read(&self, idx: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(idx < self.len);
+        *self.ptr.add(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_range_partitions_exactly() {
+        for total in [0usize, 1, 2, 7, 64, 1000, 1003] {
+            for parts in 1..=9usize {
+                let mut seen = 0usize;
+                let mut expect_start = 0usize;
+                for idx in 0..parts {
+                    let r = block_range(total, parts, idx);
+                    assert_eq!(r.start, expect_start,
+                               "gap at {total}/{parts}/{idx}");
+                    expect_start = r.end;
+                    seen += r.len();
+                }
+                assert_eq!(expect_start, total);
+                assert_eq!(seen, total);
+            }
+        }
+    }
+
+    #[test]
+    fn run_executes_every_part_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for parts in [1usize, 2, 3, 7, 33] {
+                let hits: Vec<AtomicUsize> =
+                    (0..parts).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(parts, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1,
+                               "part {i} at {threads} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_blocks_covers_the_range_disjointly() {
+        let pool = ThreadPool::new(4);
+        for total in [0usize, 1, 5, 4096, 10_000] {
+            let marks: Vec<AtomicUsize> =
+                (0..total).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_blocks(total, 64, |r| {
+                for i in r {
+                    marks[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(marks.iter()
+                .all(|m| m.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_and_scoped() {
+        // Many consecutive jobs borrowing different stack data: the
+        // scoped join must make each borrow sound.
+        let pool = ThreadPool::new(3);
+        for round in 0..50usize {
+            let input: Vec<usize> = (0..257).map(|i| i + round).collect();
+            let mut out = vec![0usize; input.len()];
+            let view = SharedMut::new(&mut out);
+            pool.run_blocks(input.len(), 16, |r| {
+                let o = unsafe { view.range(r.clone()) };
+                for (dst, &src) in o.iter_mut().zip(&input[r]) {
+                    *dst = src * 2;
+                }
+            });
+            assert!(out.iter().zip(&input)
+                .all(|(&o, &i)| o == i * 2), "round {round}");
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        // Several threads sharing one pool (the in-process multi-rank
+        // shape): the submit mutex must keep their jobs isolated.
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut joins = Vec::new();
+        for t in 0..4usize {
+            let pool = Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let total = 100 + t;
+                    let sum = AtomicUsize::new(0);
+                    pool.run_blocks(total, 8, |r| {
+                        sum.fetch_add(r.len(), Ordering::Relaxed);
+                    });
+                    assert_eq!(sum.load(Ordering::Relaxed), total);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! End-to-end bitwise equivalence of the pooled compute engine: the
+//! same training run at `--threads` 1, 2, and 4 must end with the
+//! exact same weight bytes, under both the fp32 and fp16 wire codecs.
+//! The kernels, gate activations, optimizer steps, and codec loops
+//! only ever split index ranges across the pool — never a per-element
+//! operation order — so thread count can never change a result
+//! (DESIGN.md §Compute kernels).
+
+use mpi_learn::coordinator::{train, Algo, Data, Mode, ModelBuilder,
+                             TrainConfig, Transport};
+use mpi_learn::data::GeneratorConfig;
+use mpi_learn::mpi::Codec;
+use mpi_learn::runtime::Session;
+use mpi_learn::tensor::ParamSet;
+
+fn cfg(model: &str, batch: usize, threads: usize, codec: Codec)
+    -> TrainConfig {
+    TrainConfig {
+        builder: ModelBuilder::new(model, batch),
+        algo: Algo {
+            mode: Mode::AllReduce,
+            batch_size: batch,
+            epochs: 2,
+            validate_every: 0,
+            max_val_batches: 4,
+            compression: codec,
+            threads,
+            ..Algo::default()
+        },
+        n_workers: 3,
+        seed: 17,
+        transport: Transport::Inproc,
+        hierarchy: None,
+        callbacks: Vec::new(),
+    }
+}
+
+fn synthetic(samples_per_worker: usize) -> Data {
+    Data::Synthetic {
+        gen: GeneratorConfig { seed: 5, ..Default::default() },
+        samples_per_worker,
+        val_samples: 100,
+    }
+}
+
+/// Train the same configuration at each thread count, each on a fresh
+/// session (so no pool sizing leaks between runs), and return the
+/// final weights per count.
+fn weights_per_thread_count(model: &str, batch: usize, codec: Codec,
+                            counts: &[usize]) -> Vec<ParamSet> {
+    counts
+        .iter()
+        .map(|&t| {
+            let session = Session::native().unwrap();
+            let cfg = cfg(model, batch, t, codec);
+            train(&session, &cfg, &synthetic(5 * batch))
+                .unwrap()
+                .weights
+        })
+        .collect()
+}
+
+#[test]
+fn training_is_bitwise_identical_across_thread_counts_fp32() {
+    let all = weights_per_thread_count("mlp", 20, Codec::Fp32,
+                                       &[1, 2, 4]);
+    assert_eq!(all[0], all[1], "threads=2 diverged from threads=1");
+    assert_eq!(all[0], all[2], "threads=4 diverged from threads=1");
+}
+
+#[test]
+fn training_is_bitwise_identical_across_thread_counts_fp16() {
+    // fp16 runs the pooled pack/unpack + fused decode-reduce path on
+    // every all-reduce hop; the pool must not perturb a single bit.
+    let all = weights_per_thread_count("mlp", 20, Codec::Fp16,
+                                       &[1, 2, 4]);
+    assert_eq!(all[0], all[1], "threads=2 diverged from threads=1");
+    assert_eq!(all[0], all[2], "threads=4 diverged from threads=1");
+}
+
+#[test]
+fn lstm_training_is_bitwise_identical_across_thread_counts() {
+    // The LSTM path additionally exercises the pooled gate-activation
+    // loops (sigmoid/tanh over the 4-gate block).
+    let all = weights_per_thread_count("lstm", 10, Codec::Fp32,
+                                       &[1, 4]);
+    assert_eq!(all[0], all[1], "threads=4 diverged from threads=1");
+}
+
+#[test]
+fn auto_thread_count_matches_serial_training() {
+    // threads = 0 (the default) auto-sizes from available_parallelism;
+    // whatever it picks, the result must equal the serial run.
+    let all = weights_per_thread_count("mlp", 20, Codec::Fp32, &[1, 0]);
+    assert_eq!(all[0], all[1], "auto thread count diverged from serial");
+}

@@ -49,6 +49,7 @@ fn cfg(dir: &std::path::Path, replicas: usize) -> ServeConfig {
         base_port: 47900,
         poll_ms: 10,
         replica_timeout_ms: 5_000,
+        threads: 1,
     }
 }
 

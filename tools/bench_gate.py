@@ -10,6 +10,8 @@ step so a failure is attributed to the right step name:
     python3 tools/bench_gate.py hier-vs-flat BENCH_pr.json
     python3 tools/bench_gate.py overlap      BENCH_pr.json
     python3 tools/bench_gate.py planner      BENCH_pr.json
+    python3 tools/bench_gate.py compute      BENCH_pr.json
+    python3 tools/bench_gate.py compute      runtime_microbench.json
     python3 tools/bench_gate.py staleness    BENCH_pr.json
     python3 tools/bench_gate.py autotune-log quickstart_auto.log
     python3 tools/bench_gate.py sweep-summary allreduce_nightly.json
@@ -37,6 +39,10 @@ THRESHOLDS = {
     # has no valid grouping at all) and must pick one at scale.
     "planner_flat_below_n": 4,
     "planner_hier_from_n": 16,
+    # Pool speedup floor for the compute gate's measured path: the
+    # large-shape GEMM at 4 threads must beat 1 thread by this factor
+    # (closed-form BENCH_pr.json numbers just need t4 > t1).
+    "compute_t4_speedup_min": 1.2,
 }
 
 CANDIDATE_RE = re.compile(
@@ -145,6 +151,59 @@ def gate_planner(path):
         sys.exit("planner gate failed:\n  " + "\n  ".join(bad))
 
 
+def gate_compute(path):
+    """Compute-kernel gate, dispatched on file content:
+
+    - BENCH_pr.json (schema >= 5): the closed-form compute block's
+      MFLOP/s must strictly increase from t1 to t4, and the modeled
+      small-shape GEMM time must be thread-invariant (the engine's
+      inline serial cutoff is part of the contract).
+    - runtime_microbench --json output: measured GFLOP/s — the
+      large-shape "nn" GEMM at 4 threads must beat 1 thread by the
+      threshold factor (the tn/nt kernels are printed but not gated:
+      they share the pool, so the nn result is the signal).
+    """
+    doc = load(path)
+    if "compute" in doc:
+        if doc.get("schema", 0) < 5:
+            sys.exit(f"{path} is schema {doc.get('schema')} — the "
+                     f"compute gate needs schema >= 5 (regenerate)")
+        comp = doc["compute"]
+        t1, t4 = comp["mflops"]["t1"], comp["mflops"]["t4"]
+        print(f"modeled GEMM throughput: t1 {t1:.0f} MFLOP/s, "
+              f"t4 {t4:.0f} MFLOP/s")
+        if not t4 > t1:
+            sys.exit("compute gate failed: modeled t4 MFLOP/s does "
+                     "not beat t1")
+        small = comp["gemm_time_ns"]["small"]
+        if len(set(small.values())) != 1:
+            sys.exit(f"compute gate failed: the small shape must be "
+                     f"thread-invariant (inline cutoff), got {small}")
+        print(f"small-shape GEMM time is thread-invariant "
+              f"({next(iter(small.values())):.0f} ns) — the inline "
+              f"cutoff holds")
+        return
+    gflops = doc.get("compute_gflops")
+    if gflops is None:
+        sys.exit(f"{path} has neither a compute block nor a "
+                 f"compute_gflops table")
+    floor = THRESHOLDS["compute_t4_speedup_min"]
+    bad = []
+    for kernel in ("nn", "tn", "nt"):
+        t1 = gflops[f"{kernel}/large/t1"]
+        t4 = gflops[f"{kernel}/large/t4"]
+        speedup = t4 / t1
+        gated = kernel == "nn"
+        status = "ok" if speedup >= floor or not gated else "REGRESSION"
+        print(f"{kernel}: large-shape {t1:.2f} -> {t4:.2f} GFLOP/s "
+              f"({speedup:.2f}x{', gated' if gated else ''}) {status}")
+        if gated and speedup < floor:
+            bad.append(kernel)
+    if bad:
+        sys.exit(f"compute gate failed: pool speedup below {floor}x "
+                 f"for {bad}")
+
+
 def gate_staleness(path):
     """The committed file must be tracked AND match the regenerated
     one. `git diff` exits 0 for untracked paths, which would make the
@@ -226,6 +285,7 @@ GATES = {
     "hier-vs-flat": gate_hier_vs_flat,
     "overlap": gate_overlap,
     "planner": gate_planner,
+    "compute": gate_compute,
     "staleness": gate_staleness,
     "autotune-log": gate_autotune_log,
     "sweep-summary": sweep_summary,
